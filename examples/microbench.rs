@@ -1,0 +1,31 @@
+//! §4.3 migration-overhead microbenchmark, runnable standalone.
+//!
+//! Sweeps the loop length (→ task-type-change rate) and prints the Fig 7
+//! series: overhead % and cost per AVX↔scalar switch pair.
+//!
+//! ```sh
+//! cargo run --release --example microbench [-- --full]
+//! ```
+
+use avxfreq::util::args::Args;
+use avxfreq::workload::microbench::overhead_point;
+
+fn main() {
+    let args = Args::from_env();
+    let lengths: &[u64] = if args.flag("full") {
+        &[8_000_000, 4_000_000, 2_000_000, 1_000_000, 500_000, 250_000, 120_000, 60_000, 30_000]
+    } else {
+        &[2_000_000, 500_000, 120_000]
+    };
+    println!("26 threads on 12 cores, 5% of each loop marked as AVX (paper §4.3)\n");
+    println!("{:>12} {:>16} {:>11} {:>18}", "loop insns", "type changes/s", "overhead %", "ns / switch pair");
+    for &len in lengths {
+        let p = overhead_point(len);
+        println!(
+            "{:>12} {:>16.0} {:>11.2} {:>18.0}",
+            len, p.type_changes_per_sec, p.overhead_pct, p.ns_per_switch_pair
+        );
+    }
+    println!("\npaper: 400–500 ns per switch pair; <3% overhead at 100k changes/s.");
+    println!("the web-server scenario performs ~55-65k type changes/s — overhead well under 1%.");
+}

@@ -1,0 +1,38 @@
+//! Quickstart: simulate the paper's headline experiment in ~30 lines.
+//!
+//! Runs the nginx/OpenSSL web-server scenario twice — unmodified
+//! scheduler vs core specialization — with AVX-512 crypto, and prints
+//! the throughput and frequency recovery.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use avxfreq::sched::PolicyKind;
+use avxfreq::sim::{MS, SEC};
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::{run_webserver, WebCfg};
+
+fn main() {
+    let mut runs = Vec::new();
+    for (name, policy) in [
+        ("unmodified MuQSS", PolicyKind::Unmodified),
+        ("core specialization (2 AVX cores)", PolicyKind::CoreSpec { avx_cores: 2 }),
+    ] {
+        let mut cfg = WebCfg::paper_default(Isa::Avx512, policy);
+        cfg.warmup = 500 * MS;
+        cfg.measure = 2 * SEC;
+        println!("running {name}…");
+        let run = run_webserver(&cfg);
+        println!(
+            "  throughput {:>6.0} req/s | avg busy freq {:.3} GHz | p99 {:.0} µs | {} type changes/s",
+            run.throughput_rps, run.avg_ghz, run.p99_us, run.type_changes_per_sec as u64
+        );
+        runs.push(run);
+    }
+    let gain = (runs[1].throughput_rps / runs[0].throughput_rps - 1.0) * 100.0;
+    println!(
+        "\ncore specialization recovers {gain:+.1}% throughput by confining the \
+         AVX-512-induced frequency drop to 2 of 12 cores (paper §4: −11.2% → −3.2%)."
+    );
+}

@@ -1,0 +1,71 @@
+"""AOT lowering: JAX model → HLO text artifacts for the rust runtime.
+
+Emits one artifact per lane width (the paper's SIMD-width axis):
+
+    artifacts/chacha_w4.hlo.txt    # 4 lanes  ≈ SSE4 (128-bit)
+    artifacts/chacha_w8.hlo.txt    # 8 lanes  ≈ AVX2 (256-bit)
+    artifacts/chacha_w16.hlo.txt   # 16 lanes ≈ AVX-512 (512-bit)
+    artifacts/manifest.txt         # shapes + word counts for the loader
+
+HLO **text** is the interchange format, not ``.serialize()``: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # Poly1305 limb products need u64
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+WIDTHS = (4, 8, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_width(lanes: int) -> str:
+    key = jax.ShapeDtypeStruct((8,), jnp.uint32)
+    nonce = jax.ShapeDtypeStruct((3,), jnp.uint32)
+    msg = jax.ShapeDtypeStruct((model.RECORD_WORDS,), jnp.uint32)
+    lowered = jax.jit(model.seal_record_fn(lanes)).lower(key, nonce, msg)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--widths", default="4,8,16")
+    args = parser.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    widths = [int(w) for w in args.widths.split(",")]
+
+    manifest = [f"record_words={model.RECORD_WORDS}"]
+    for w in widths:
+        text = lower_width(w)
+        path = out_dir / f"chacha_w{w}.hlo.txt"
+        path.write_text(text)
+        manifest.append(f"chacha_w{w}.hlo.txt lanes={w}")
+        print(f"wrote {path} ({len(text)} chars)")
+    (out_dir / "manifest.txt").write_text("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir / 'manifest.txt'}")
+
+
+if __name__ == "__main__":
+    main()

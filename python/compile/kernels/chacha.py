@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernel: lane-parallel ChaCha20.
+
+The SIMD-width axis of the paper (SSE4 / AVX2 / AVX-512) maps to the
+kernel's **lane batch** ``W`` — how many 64-byte ChaCha blocks one grid
+step computes side by side (4 ≈ 128-bit, 8 ≈ 256-bit, 16 ≈ 512-bit),
+exactly how OpenSSL's vectorized ChaCha20 assigns blocks to SIMD lanes.
+
+BlockSpec expresses the HBM↔VMEM schedule: each grid step streams a
+``W·16``-word message tile into VMEM, generates the W keystream blocks
+entirely in registers/VMEM, XORs, and streams the tile out. VMEM
+footprint per step is 2 tiles + 16·W state words (see DESIGN.md §Perf).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are identical (checked against ref.py and RFC
+vectors in python/tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# "expa" "nd 3" "2-by" "te k"
+CONSTANTS = (0x61707865, 0x3320646E, 0x79622D32, 0x6B206574)
+
+
+def _rotl(x, n):
+    return (x << jnp.uint32(n)) | (x >> jnp.uint32(32 - n))
+
+
+def _quarter(s, a, b, c, d):
+    s[a] = s[a] + s[b]
+    s[d] = _rotl(s[d] ^ s[a], 16)
+    s[c] = s[c] + s[d]
+    s[b] = _rotl(s[b] ^ s[c], 12)
+    s[a] = s[a] + s[b]
+    s[d] = _rotl(s[d] ^ s[a], 8)
+    s[c] = s[c] + s[d]
+    s[b] = _rotl(s[b] ^ s[c], 7)
+
+
+def _keystream_lanes(key, nonce, counters):
+    """W keystream blocks for a (W,)-vector of counters → (W*16,) words.
+
+    The 16 state words live as separate (W,)-vectors so every ChaCha
+    operation is a full-width vector op over the lane axis — the MXU is
+    irrelevant (integer code); this targets the VPU lanes.
+    """
+    w = counters.shape[0]
+    s = [jnp.broadcast_to(jnp.uint32(c), (w,)) for c in CONSTANTS]
+    s += [jnp.broadcast_to(key[i], (w,)) for i in range(8)]
+    s.append(counters.astype(jnp.uint32))
+    s += [jnp.broadcast_to(nonce[i], (w,)) for i in range(3)]
+    init = list(s)
+    for _ in range(10):
+        _quarter(s, 0, 4, 8, 12)
+        _quarter(s, 1, 5, 9, 13)
+        _quarter(s, 2, 6, 10, 14)
+        _quarter(s, 3, 7, 11, 15)
+        _quarter(s, 0, 5, 10, 15)
+        _quarter(s, 1, 6, 11, 12)
+        _quarter(s, 2, 7, 8, 13)
+        _quarter(s, 3, 4, 9, 14)
+    out = [a + b for a, b in zip(s, init)]
+    # (16, W) → word-major serialization: block l's word j at l*16+j.
+    return jnp.stack(out, axis=0).T.reshape(w * 16)
+
+
+def _kernel(key_ref, nonce_ref, ctr_ref, msg_ref, out_ref, *, lanes: int):
+    i = pl.program_id(0)
+    lane = jax.lax.iota(jnp.uint32, lanes)
+    counters = ctr_ref[0] + jnp.uint32(i * lanes) + lane
+    ks = _keystream_lanes(key_ref[...], nonce_ref[...], counters)
+    out_ref[...] = msg_ref[...] ^ ks
+
+
+@functools.partial(jax.jit, static_argnames=("lanes",))
+def chacha20_xor(key, nonce, counter0, msg_words, *, lanes: int = 16):
+    """XOR ``msg_words`` (u32, multiple of 16·lanes) with the keystream.
+
+    ``counter0`` is the block counter of the first message block, shape
+    (1,) u32 (RFC 7539 encryption uses counter0 = 1).
+    """
+    n = msg_words.shape[0]
+    assert n % (16 * lanes) == 0, f"message words {n} not a multiple of {16 * lanes}"
+    grid = n // (16 * lanes)
+    tile = 16 * lanes
+    return pl.pallas_call(
+        functools.partial(_kernel, lanes=lanes),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((8,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(
+        key.astype(jnp.uint32),
+        nonce.astype(jnp.uint32),
+        counter0.astype(jnp.uint32),
+        msg_words.astype(jnp.uint32),
+    )
+
+
+def keystream_block0(key, nonce):
+    """Keystream block with counter 0 (Poly1305 one-time-key generation),
+    as (16,) u32 — computed with the same lane kernel at W=1 grid=1."""
+    zero_msg = jnp.zeros((16,), jnp.uint32)
+    ctr = jnp.zeros((1,), jnp.uint32)
+    return pl.pallas_call(
+        functools.partial(_kernel, lanes=1),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((8,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((16,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((16,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((16,), jnp.uint32),
+        interpret=True,
+    )(key.astype(jnp.uint32), nonce.astype(jnp.uint32), ctr, zero_msg)

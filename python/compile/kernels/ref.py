@@ -1,0 +1,134 @@
+"""Pure-numpy reference for ChaCha20-Poly1305 (RFC 7539).
+
+This is the correctness oracle: the Pallas kernels and the JAX model are
+checked against these functions (and these functions against the RFC test
+vectors) in ``python/tests/``.
+
+All APIs operate on little-endian u32 *words*; byte-level helpers convert
+at the edges (the rust runtime does the same conversion).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+CONSTANTS = np.array([0x61707865, 0x3320646E, 0x79622D32, 0x6B206574], dtype=np.uint32)
+
+
+def bytes_to_words(b: bytes) -> np.ndarray:
+    """Little-endian bytes → u32 words (length must be a multiple of 4)."""
+    assert len(b) % 4 == 0, "byte length must be a multiple of 4"
+    return np.frombuffer(b, dtype="<u4").astype(np.uint32)
+
+
+def words_to_bytes(w: np.ndarray) -> bytes:
+    return np.asarray(w).astype("<u4").tobytes()
+
+
+def _rotl(x: np.ndarray, n: int) -> np.ndarray:
+    x = x.astype(np.uint32)
+    return ((x << np.uint32(n)) | (x >> np.uint32(32 - n))).astype(np.uint32)
+
+
+def _quarter(state: np.ndarray, a: int, b: int, c: int, d: int) -> None:
+    # In-place quarter round on a (16, ...) state array.
+    state[a] = (state[a] + state[b]).astype(np.uint32)
+    state[d] = _rotl(state[d] ^ state[a], 16)
+    state[c] = (state[c] + state[d]).astype(np.uint32)
+    state[b] = _rotl(state[b] ^ state[c], 12)
+    state[a] = (state[a] + state[b]).astype(np.uint32)
+    state[d] = _rotl(state[d] ^ state[a], 8)
+    state[c] = (state[c] + state[d]).astype(np.uint32)
+    state[b] = _rotl(state[b] ^ state[c], 7)
+
+
+def chacha20_block(key: np.ndarray, counter: int, nonce: np.ndarray) -> np.ndarray:
+    """One 64-byte keystream block as 16 u32 words (RFC 7539 §2.3)."""
+    key = np.asarray(key, dtype=np.uint32)
+    nonce = np.asarray(nonce, dtype=np.uint32)
+    assert key.shape == (8,) and nonce.shape == (3,)
+    init = np.concatenate(
+        [CONSTANTS, key, np.array([counter], dtype=np.uint32), nonce]
+    ).astype(np.uint32)
+    state = init.copy()
+    with np.errstate(over="ignore"):  # u32 wrap-around is the algorithm
+        for _ in range(10):
+            _quarter(state, 0, 4, 8, 12)
+            _quarter(state, 1, 5, 9, 13)
+            _quarter(state, 2, 6, 10, 14)
+            _quarter(state, 3, 7, 11, 15)
+            _quarter(state, 0, 5, 10, 15)
+            _quarter(state, 1, 6, 11, 12)
+            _quarter(state, 2, 7, 8, 13)
+            _quarter(state, 3, 4, 9, 14)
+        return (state + init).astype(np.uint32)
+
+
+def chacha20_xor(key: np.ndarray, nonce: np.ndarray, counter0: int, msg_words: np.ndarray) -> np.ndarray:
+    """XOR a message (u32 words, multiple of 16) with the keystream."""
+    msg_words = np.asarray(msg_words, dtype=np.uint32)
+    assert msg_words.size % 16 == 0, "message must be whole 64-byte blocks"
+    n_blocks = msg_words.size // 16
+    ks = np.concatenate(
+        [chacha20_block(key, counter0 + i, nonce) for i in range(n_blocks)]
+    )
+    return (msg_words ^ ks).astype(np.uint32)
+
+
+# ---- Poly1305 (RFC 7539 §2.5) -------------------------------------------
+
+P1305 = (1 << 130) - 5
+
+
+def poly1305_mac(msg: bytes, key32: bytes) -> bytes:
+    """Poly1305 tag of ``msg`` under a 32-byte one-time key (bignum ref)."""
+    r = int.from_bytes(key32[:16], "little") & 0x0FFFFFFC0FFFFFFC0FFFFFFC0FFFFFFF
+    s = int.from_bytes(key32[16:32], "little")
+    acc = 0
+    for i in range(0, len(msg), 16):
+        chunk = msg[i : i + 16]
+        n = int.from_bytes(chunk, "little") + (1 << (8 * len(chunk)))
+        acc = ((acc + n) * r) % P1305
+    acc = (acc + s) % (1 << 128)
+    return acc.to_bytes(16, "little")
+
+
+def poly1305_key_gen(key: np.ndarray, nonce: np.ndarray) -> bytes:
+    """One-time MAC key: first 32 bytes of keystream block 0 (§2.6)."""
+    block = chacha20_block(key, 0, nonce)
+    return words_to_bytes(block[:8])
+
+
+def _pad16(b: bytes) -> bytes:
+    return b + bytes(-len(b) % 16)
+
+
+def seal(key: np.ndarray, nonce: np.ndarray, plaintext: bytes, aad: bytes = b"") -> tuple[bytes, bytes]:
+    """ChaCha20-Poly1305 AEAD seal (§2.8). Returns (ciphertext, tag)."""
+    padded = plaintext + bytes(-len(plaintext) % 64)
+    ct_words = chacha20_xor(key, nonce, 1, bytes_to_words(padded))
+    ct = words_to_bytes(ct_words)[: len(plaintext)]
+    otk = poly1305_key_gen(key, nonce)
+    mac_data = (
+        _pad16(aad)
+        + _pad16(ct)
+        + len(aad).to_bytes(8, "little")
+        + len(ct).to_bytes(8, "little")
+    )
+    return ct, poly1305_mac(mac_data, otk)
+
+
+def open_(key: np.ndarray, nonce: np.ndarray, ct: bytes, tag: bytes, aad: bytes = b"") -> "bytes | None":
+    """AEAD open; returns plaintext or None on tag mismatch."""
+    otk = poly1305_key_gen(key, nonce)
+    mac_data = (
+        _pad16(aad)
+        + _pad16(ct)
+        + len(aad).to_bytes(8, "little")
+        + len(ct).to_bytes(8, "little")
+    )
+    if poly1305_mac(mac_data, otk) != tag:
+        return None
+    padded = ct + bytes(-len(ct) % 64)
+    pt_words = chacha20_xor(key, nonce, 1, bytes_to_words(padded))
+    return words_to_bytes(pt_words)[: len(ct)]

@@ -1,0 +1,192 @@
+"""Layer-2 JAX model: the ChaCha20-Poly1305 AEAD record pipeline.
+
+``seal_record`` is the compute graph the rust request path executes: it
+calls the Layer-1 Pallas ChaCha kernel for the bulk cipher and keystream
+block 0, and computes the Poly1305 MAC with 26-bit-limb arithmetic
+(products fit u64; requires jax_enable_x64, set in aot.py / tests).
+
+Record framing matches RFC 7539 §2.8 with empty AAD and whole-block
+records: mac data = ct ‖ len(aad)=0 ‖ len(ct). The record length is fixed
+at AOT time (RECORD_WORDS); the rust runtime chunks/pads byte streams.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import chacha
+
+# 16 KiB records = 4096 u32 words = 256 ChaCha blocks.
+RECORD_WORDS = 4096
+
+_M26 = jnp.uint64(0x3FFFFFF)
+
+
+def _clamp_r(k0, k1, k2, k3):
+    """Poly1305 r-clamp on 4 u32 words."""
+    return (
+        k0 & jnp.uint32(0x0FFFFFFF),
+        k1 & jnp.uint32(0x0FFFFFFC),
+        k2 & jnp.uint32(0x0FFFFFFC),
+        k3 & jnp.uint32(0x0FFFFFFC),
+    )
+
+
+def _limbs_from_words(m0, m1, m2, m3, hibit):
+    """Split a 16-byte little-endian block (4 u32) into 5×26-bit limbs."""
+    m0 = m0.astype(jnp.uint64)
+    m1 = m1.astype(jnp.uint64)
+    m2 = m2.astype(jnp.uint64)
+    m3 = m3.astype(jnp.uint64)
+    t0 = m0 & _M26
+    t1 = ((m0 >> jnp.uint64(26)) | (m1 << jnp.uint64(6))) & _M26
+    t2 = ((m1 >> jnp.uint64(20)) | (m2 << jnp.uint64(12))) & _M26
+    t3 = ((m2 >> jnp.uint64(14)) | (m3 << jnp.uint64(18))) & _M26
+    t4 = (m3 >> jnp.uint64(8)) | (jnp.uint64(hibit) << jnp.uint64(24))
+    return jnp.stack([t0, t1, t2, t3, t4])
+
+
+def _poly_mul_mod(h, r, s):
+    """(h·r) mod 2^130−5 on 5×26-bit limbs. Max addend < 2^58, fits u64."""
+    d0 = h[0] * r[0] + h[1] * s[4] + h[2] * s[3] + h[3] * s[2] + h[4] * s[1]
+    d1 = h[0] * r[1] + h[1] * r[0] + h[2] * s[4] + h[3] * s[3] + h[4] * s[2]
+    d2 = h[0] * r[2] + h[1] * r[1] + h[2] * r[0] + h[3] * s[4] + h[4] * s[3]
+    d3 = h[0] * r[3] + h[1] * r[2] + h[2] * r[1] + h[3] * r[0] + h[4] * s[4]
+    d4 = h[0] * r[4] + h[1] * r[3] + h[2] * r[2] + h[3] * r[1] + h[4] * r[0]
+    # Carry chain.
+    c = d0 >> jnp.uint64(26)
+    d0 &= _M26
+    d1 += c
+    c = d1 >> jnp.uint64(26)
+    d1 &= _M26
+    d2 += c
+    c = d2 >> jnp.uint64(26)
+    d2 &= _M26
+    d3 += c
+    c = d3 >> jnp.uint64(26)
+    d3 &= _M26
+    d4 += c
+    c = d4 >> jnp.uint64(26)
+    d4 &= _M26
+    d0 += c * jnp.uint64(5)
+    c = d0 >> jnp.uint64(26)
+    d0 &= _M26
+    d1 += c
+    return jnp.stack([d0, d1, d2, d3, d4])
+
+
+def poly1305_tag(mac_words, otk_words):
+    """Poly1305 over ``mac_words`` (u32, multiple of 4 = whole 16-byte
+    blocks) under the 8-word one-time key. Returns the tag as 4 u32."""
+    r = _clamp_r(otk_words[0], otk_words[1], otk_words[2], otk_words[3])
+    r = [x.astype(jnp.uint64) for x in r]
+    # 26-bit limbs of r.
+    r_l = jnp.stack(
+        [
+            r[0] & _M26,
+            ((r[0] >> jnp.uint64(26)) | (r[1] << jnp.uint64(6))) & _M26,
+            ((r[1] >> jnp.uint64(20)) | (r[2] << jnp.uint64(12))) & _M26,
+            ((r[2] >> jnp.uint64(14)) | (r[3] << jnp.uint64(18))) & _M26,
+            r[3] >> jnp.uint64(8),
+        ]
+    )
+    s_l = r_l * jnp.uint64(5)
+
+    blocks = mac_words.reshape(-1, 4)
+
+    def step(h, blk):
+        t = _limbs_from_words(blk[0], blk[1], blk[2], blk[3], 1)
+        h = _poly_mul_mod(h + t, r_l, s_l)
+        return h, None
+
+    h0 = jnp.zeros((5,), jnp.uint64)
+    h, _ = jax.lax.scan(step, h0, blocks)
+
+    # Full carry, then freeze: g = h + 5 − p; select g when h ≥ p.
+    c = h[0] >> jnp.uint64(26)
+    h = h.at[0].set(h[0] & _M26)
+    h = h.at[1].add(c)
+    c = h[1] >> jnp.uint64(26)
+    h = h.at[1].set(h[1] & _M26)
+    h = h.at[2].add(c)
+    c = h[2] >> jnp.uint64(26)
+    h = h.at[2].set(h[2] & _M26)
+    h = h.at[3].add(c)
+    c = h[3] >> jnp.uint64(26)
+    h = h.at[3].set(h[3] & _M26)
+    h = h.at[4].add(c)
+    c = h[4] >> jnp.uint64(26)
+    h = h.at[4].set(h[4] & _M26)
+    h = h.at[0].add(c * jnp.uint64(5))
+    c = h[0] >> jnp.uint64(26)
+    h = h.at[0].set(h[0] & _M26)
+    h = h.at[1].add(c)
+
+    g0 = h[0] + jnp.uint64(5)
+    c = g0 >> jnp.uint64(26)
+    g0 &= _M26
+    g1 = h[1] + c
+    c = g1 >> jnp.uint64(26)
+    g1 &= _M26
+    g2 = h[2] + c
+    c = g2 >> jnp.uint64(26)
+    g2 &= _M26
+    g3 = h[3] + c
+    c = g3 >> jnp.uint64(26)
+    g3 &= _M26
+    g4 = h[4] + c
+    over = g4 >> jnp.uint64(26)  # 1 iff h + 5 ≥ 2^130, i.e. h ≥ p
+    g4 &= _M26
+    sel = (over * jnp.uint64(0xFFFFFFFFFFFFFFFF)).astype(jnp.uint64)
+    h0f = (g0 & sel) | (h[0] & ~sel)
+    h1f = (g1 & sel) | (h[1] & ~sel)
+    h2f = (g2 & sel) | (h[2] & ~sel)
+    h3f = (g3 & sel) | (h[3] & ~sel)
+    h4f = (g4 & sel) | (h[4] & ~sel)
+
+    # Re-pack limbs to 4 u32 words.
+    w0 = (h0f | (h1f << jnp.uint64(26))) & jnp.uint64(0xFFFFFFFF)
+    w1 = ((h1f >> jnp.uint64(6)) | (h2f << jnp.uint64(20))) & jnp.uint64(0xFFFFFFFF)
+    w2 = ((h2f >> jnp.uint64(12)) | (h3f << jnp.uint64(14))) & jnp.uint64(0xFFFFFFFF)
+    w3 = ((h3f >> jnp.uint64(18)) | (h4f << jnp.uint64(8))) & jnp.uint64(0xFFFFFFFF)
+
+    # tag = (h + s) mod 2^128, s = otk words 4..8.
+    s0 = otk_words[4].astype(jnp.uint64)
+    s1 = otk_words[5].astype(jnp.uint64)
+    s2 = otk_words[6].astype(jnp.uint64)
+    s3 = otk_words[7].astype(jnp.uint64)
+    t0 = w0 + s0
+    t1 = w1 + s1 + (t0 >> jnp.uint64(32))
+    t2 = w2 + s2 + (t1 >> jnp.uint64(32))
+    t3 = w3 + s3 + (t2 >> jnp.uint64(32))
+    mask = jnp.uint64(0xFFFFFFFF)
+    return jnp.stack([t0 & mask, t1 & mask, t2 & mask, t3 & mask]).astype(jnp.uint32)
+
+
+def seal_record(key, nonce, msg_words, *, lanes: int = 16):
+    """AEAD-seal one fixed-size record. Returns (ct_words, tag_words).
+
+    * ``key``: (8,) u32 — 256-bit key.
+    * ``nonce``: (3,) u32 — 96-bit nonce.
+    * ``msg_words``: (RECORD_WORDS,) u32 — 16 KiB plaintext.
+    """
+    ct = chacha.chacha20_xor(
+        key, nonce, jnp.ones((1,), jnp.uint32), msg_words, lanes=lanes
+    )
+    otk = chacha.keystream_block0(key, nonce)[:8]
+    # Whole-block record + empty AAD: mac data = ct ‖ [0,0,len,0].
+    ct_bytes = msg_words.shape[0] * 4
+    length_block = jnp.array([0, 0, ct_bytes & 0xFFFFFFFF, 0], dtype=jnp.uint32)
+    mac_words = jnp.concatenate([ct, length_block])
+    tag = poly1305_tag(mac_words, otk)
+    return ct, tag
+
+
+def seal_record_fn(lanes: int):
+    """The jit-able entry point lowered by aot.py for one lane width."""
+
+    def fn(key, nonce, msg_words):
+        return seal_record(key, nonce, msg_words, lanes=lanes)
+
+    return fn

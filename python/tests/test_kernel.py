@@ -1,0 +1,207 @@
+"""Layer-1 correctness: Pallas ChaCha kernel vs the numpy reference and
+the RFC 7539 test vectors; hypothesis sweeps over shapes and inputs."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import chacha, ref
+
+# ---- RFC 7539 test vectors ------------------------------------------------
+
+RFC_KEY = bytes(range(32))  # 00 01 02 … 1f
+RFC_NONCE = bytes.fromhex("000000090000004a00000000")
+
+
+def test_rfc_block_function():
+    """RFC 7539 §2.3.2: keystream block, key 00..1f, counter 1."""
+    key = ref.bytes_to_words(RFC_KEY)
+    nonce = ref.bytes_to_words(RFC_NONCE)
+    block = ref.chacha20_block(key, 1, nonce)
+    expected = np.array(
+        [
+            0xE4E7F110, 0x15593BD1, 0x1FDD0F50, 0xC47120A3,
+            0xC7F4D1C7, 0x0368C033, 0x9AAA2204, 0x4E6CD4C3,
+            0x466482D2, 0x09AA9F07, 0x05D7C214, 0xA2028BD9,
+            0xD19C12B5, 0xB94E16DE, 0xE883D0CB, 0x4E3C50A2,
+        ],
+        dtype=np.uint32,
+    )
+    np.testing.assert_array_equal(block, expected)
+
+
+def test_rfc_encryption():
+    """RFC 7539 §2.4.2: 'Ladies and Gentlemen…' under counter 1."""
+    key = ref.bytes_to_words(RFC_KEY)
+    nonce = ref.bytes_to_words(bytes.fromhex("000000000000004a00000000"))
+    plaintext = (
+        b"Ladies and Gentlemen of the class of '99: If I could offer you "
+        b"only one tip for the future, sunscreen would be it."
+    )
+    padded = plaintext + bytes(-len(plaintext) % 64)
+    ct = ref.words_to_bytes(ref.chacha20_xor(key, nonce, 1, ref.bytes_to_words(padded)))
+    expected_prefix = bytes.fromhex(
+        "6e2e359a2568f98041ba0728dd0d6981e97e7aec1d4360c20a27afccfd9fae0b"
+    )
+    assert ct[:32] == expected_prefix
+
+
+def test_rfc_poly1305():
+    """RFC 7539 §2.5.2: Poly1305 tag."""
+    key = bytes.fromhex(
+        "85d6be7857556d337f4452fe42d506a80103808afb0db2fd4abff6af4149f51b"
+    )
+    msg = b"Cryptographic Forum Research Group"
+    tag = ref.poly1305_mac(msg, key)
+    assert tag == bytes.fromhex("a8061dc1305136c6c22b8baf0c0127a9")
+
+
+def test_rfc_poly1305_key_gen():
+    """RFC 7539 §2.6.2: one-time key generation."""
+    key = ref.bytes_to_words(bytes(range(0x80, 0xA0)))
+    nonce = ref.bytes_to_words(bytes.fromhex("000000000001020304050607"))
+    otk = ref.poly1305_key_gen(key, nonce)
+    assert otk == bytes.fromhex(
+        "8ad5a08b905f81cc815040274ab29471a833b637e3fd0da508dbb8e2fdd1a646"
+    )
+
+
+def test_rfc_aead_seal():
+    """RFC 7539 §2.8.2: AEAD seal tag (with AAD)."""
+    key = ref.bytes_to_words(bytes(range(0x80, 0xA0)))
+    nonce = ref.bytes_to_words(bytes.fromhex("070000004041424344454647"))
+    aad = bytes.fromhex("50515253c0c1c2c3c4c5c6c7")
+    plaintext = (
+        b"Ladies and Gentlemen of the class of '99: If I could offer you "
+        b"only one tip for the future, sunscreen would be it."
+    )
+    ct, tag = ref.seal(key, nonce, plaintext, aad)
+    assert ct[:16] == bytes.fromhex("d31a8d34648e60db7b86afbc53ef7ec2")
+    assert tag == bytes.fromhex("1ae10b594f09e26a7e902ecbd0600691")
+    # Round trip.
+    assert ref.open_(key, nonce, ct, tag, aad) == plaintext
+
+
+# ---- Pallas kernel vs reference -------------------------------------------
+
+
+def rand_words(rng, n):
+    return rng.integers(0, 2**32, size=n, dtype=np.uint32)
+
+
+@pytest.mark.parametrize("lanes", [1, 4, 8, 16])
+def test_kernel_matches_ref(lanes):
+    rng = np.random.default_rng(7)
+    key = rand_words(rng, 8)
+    nonce = rand_words(rng, 3)
+    n_words = 16 * lanes * 3  # 3 grid steps
+    msg = rand_words(rng, n_words)
+    got = np.asarray(
+        chacha.chacha20_xor(
+            jnp.asarray(key), jnp.asarray(nonce), jnp.ones((1,), jnp.uint32),
+            jnp.asarray(msg), lanes=lanes,
+        )
+    )
+    want = ref.chacha20_xor(key, nonce, 1, msg)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_all_widths_agree():
+    """The three SIMD-width variants must be bit-identical."""
+    rng = np.random.default_rng(11)
+    key = jnp.asarray(rand_words(rng, 8))
+    nonce = jnp.asarray(rand_words(rng, 3))
+    msg = jnp.asarray(rand_words(rng, 16 * 16 * 2))
+    ctr = jnp.ones((1,), jnp.uint32)
+    w4 = chacha.chacha20_xor(key, nonce, ctr, msg, lanes=4)
+    w8 = chacha.chacha20_xor(key, nonce, ctr, msg, lanes=8)
+    w16 = chacha.chacha20_xor(key, nonce, ctr, msg, lanes=16)
+    np.testing.assert_array_equal(np.asarray(w4), np.asarray(w8))
+    np.testing.assert_array_equal(np.asarray(w8), np.asarray(w16))
+
+
+def test_keystream_block0_matches_ref():
+    rng = np.random.default_rng(13)
+    key = rand_words(rng, 8)
+    nonce = rand_words(rng, 3)
+    got = np.asarray(chacha.keystream_block0(jnp.asarray(key), jnp.asarray(nonce)))
+    want = ref.chacha20_block(key, 0, nonce)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_xor_roundtrip():
+    rng = np.random.default_rng(17)
+    key = jnp.asarray(rand_words(rng, 8))
+    nonce = jnp.asarray(rand_words(rng, 3))
+    msg = jnp.asarray(rand_words(rng, 16 * 16))
+    ctr = jnp.ones((1,), jnp.uint32)
+    ct = chacha.chacha20_xor(key, nonce, ctr, msg, lanes=16)
+    pt = chacha.chacha20_xor(key, nonce, ctr, ct, lanes=16)
+    np.testing.assert_array_equal(np.asarray(pt), np.asarray(msg))
+
+
+# ---- hypothesis sweeps -----------------------------------------------------
+
+word = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    key=st.lists(word, min_size=8, max_size=8),
+    nonce=st.lists(word, min_size=3, max_size=3),
+    counter=st.integers(min_value=0, max_value=2**31),
+    steps=st.integers(min_value=1, max_value=4),
+    lanes=st.sampled_from([4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kernel_vs_ref_hypothesis(key, nonce, counter, steps, lanes, seed):
+    rng = np.random.default_rng(seed)
+    key = np.array(key, dtype=np.uint32)
+    nonce = np.array(nonce, dtype=np.uint32)
+    msg = rand_words(rng, 16 * lanes * steps)
+    got = np.asarray(
+        chacha.chacha20_xor(
+            jnp.asarray(key),
+            jnp.asarray(nonce),
+            jnp.array([counter], dtype=jnp.uint32),
+            jnp.asarray(msg),
+            lanes=lanes,
+        )
+    )
+    want = ref.chacha20_xor(key, nonce, counter, msg)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=12),
+    key=st.binary(min_size=32, max_size=32),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_poly1305_bignum_vs_limb_hypothesis(n_blocks, key, seed):
+    """Cross-check two independent Poly1305 implementations: the python
+    bignum reference against the JAX 26-bit-limb arithmetic (whole-block
+    messages, which is what the AOT model MACs).
+
+    (Note: 'flipping a key bit changes the tag' is NOT a theorem — the
+    final mod 2^128 truncation admits collisions, and hypothesis finds
+    them — so equivalence against an independent algorithm is the honest
+    property.)"""
+    import jax.numpy as jnp
+
+    from compile import model
+
+    rng = np.random.default_rng(seed)
+    data = rng.bytes(16 * n_blocks)
+    want = ref.poly1305_mac(data, key)
+    got = model.poly1305_tag(
+        jnp.asarray(ref.bytes_to_words(data)),
+        jnp.asarray(ref.bytes_to_words(key)),
+    )
+    assert ref.words_to_bytes(np.asarray(got)) == want

@@ -1,0 +1,12 @@
+//! Bench harness for paper experiment `fig7` (see DESIGN.md §5).
+//! Full windows by default; set AVXFREQ_QUICK=1 for a fast pass.
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("AVXFREQ_QUICK").is_ok();
+    let seed = std::env::var("AVXFREQ_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5EED);
+    let t0 = std::time::Instant::now();
+    let r = avxfreq::repro::run("fig7", quick, seed)?;
+    print!("{}", r.render());
+    r.save_csvs()?;
+    println!("[bench fig7_overhead] wallclock {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

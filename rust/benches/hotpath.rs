@@ -1,0 +1,187 @@
+//! Hot-path microbenchmarks for the L3 performance pass (EXPERIMENTS.md
+//! §Perf): skiplist ops, scheduler pick/steal, license-machine observe,
+//! block execution, event queue, and whole-simulator throughput.
+//!
+//! Custom harness (criterion is not in the offline registry): median of
+//! `REPS` batches with warmup, reporting ns/op.
+
+use avxfreq::cpu::freq::{FreqParams, License, LicenseState};
+use avxfreq::cpu::ipc::IpcParams;
+use avxfreq::cpu::turbo::TurboTable;
+use avxfreq::cpu::Core;
+use avxfreq::isa::block::{Block, ClassMix, InsnClass};
+use avxfreq::sched::skiplist::SkipList;
+use avxfreq::sched::task::TaskId;
+use avxfreq::sched::{PolicyKind, SchedParams, Scheduler, TaskType};
+use avxfreq::sim::{EventQueue, SEC};
+use avxfreq::util::Rng;
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::{run_webserver_machine, WebCfg};
+use std::hint::black_box;
+use std::time::Instant;
+
+fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
+    // Warmup.
+    let mut ops = 0u64;
+    for _ in 0..3 {
+        ops = f();
+    }
+    let mut samples = Vec::new();
+    for _ in 0..9 {
+        let t0 = Instant::now();
+        let n = f();
+        let dt = t0.elapsed().as_nanos() as f64;
+        samples.push(dt / n as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    let min = samples[0];
+    println!("{name:<44} {med:>10.1} ns/op (min {min:.1}, {ops} ops/batch)");
+}
+
+fn bench_skiplist() {
+    let mut rng = Rng::new(1);
+    bench("skiplist insert+pop (256 live)", || {
+        let mut s = SkipList::new();
+        let mut keys = Vec::new();
+        for i in 0..256 {
+            keys.push(s.insert(rng.next_u64() % 100_000, TaskId(i)));
+        }
+        let n = 20_000;
+        for i in 0..n {
+            s.insert(rng.next_u64() % 100_000, TaskId(i));
+            black_box(s.pop());
+        }
+        2 * n as u64
+    });
+}
+
+fn bench_scheduler_pick() {
+    bench("scheduler pick+requeue (12 cores, 24 tasks)", || {
+        let mut s = Scheduler::new(
+            PolicyKind::CoreSpec { avx_cores: 2 },
+            SchedParams::default(),
+            12,
+        );
+        let tasks: Vec<TaskId> = (0..24)
+            .map(|i| {
+                s.add_task(if i % 3 == 0 { TaskType::Avx } else { TaskType::Scalar }, 0)
+            })
+            .collect();
+        for (i, t) in tasks.iter().enumerate() {
+            s.enqueue(0, *t, i % 12, &|_| false, None);
+        }
+        let n = 50_000u64;
+        let mut now = 1;
+        for i in 0..n {
+            let core = (i % 12) as usize;
+            if let Some(_t) = s.pick(now, core) {
+                now += 1000;
+                s.requeue_running(now, core, i % 4 == 0, &|_| false);
+            }
+        }
+        n
+    });
+}
+
+fn bench_license_observe() {
+    bench("license state machine observe", || {
+        let mut m = LicenseState::new(FreqParams::default());
+        let n = 1_000_000u64;
+        let mut now = 0;
+        for i in 0..n {
+            now += 2_000;
+            let d = match i % 97 {
+                0..=2 => License::L2,
+                3..=9 => License::L1,
+                _ => License::L0,
+            };
+            black_box(m.observe(now, d));
+        }
+        n
+    });
+}
+
+fn bench_run_block() {
+    let turbo = TurboTable::xeon_gold_6130();
+    bench("core run_block (scalar 10k insns)", || {
+        let mut c = Core::new(0, FreqParams::default(), IpcParams::default());
+        let b = Block {
+            mix: ClassMix::scalar(10_000),
+            mem_ops: 500,
+            branches: 1500,
+            license_exempt: false,
+        };
+        let n = 200_000u64;
+        let mut now = 0;
+        for i in 0..n {
+            let out = c.run_block(now, &b, i % 12, 12, &turbo);
+            now += out.ns;
+        }
+        n
+    });
+    bench("core run_block (avx512 10k insns)", || {
+        let mut c = Core::new(0, FreqParams::default(), IpcParams::default());
+        let b = Block {
+            mix: ClassMix::of(InsnClass::Avx512Heavy, 10_000),
+            mem_ops: 100,
+            branches: 200,
+            license_exempt: false,
+        };
+        let n = 200_000u64;
+        let mut now = 0;
+        for i in 0..n {
+            let out = c.run_block(now, &b, i % 3, 12, &turbo);
+            now += out.ns;
+        }
+        n
+    });
+}
+
+fn bench_event_queue() {
+    bench("event queue schedule+pop", || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..128 {
+            q.schedule_at(i, i);
+        }
+        let n = 500_000u64;
+        for i in 0..n {
+            let (t, _) = q.pop().unwrap();
+            q.schedule_at(t + 1 + i % 1000, i);
+        }
+        n
+    });
+}
+
+fn bench_full_sim() {
+    use avxfreq::sim::MS;
+    println!();
+    for (name, policy) in [
+        ("unmodified", PolicyKind::Unmodified),
+        ("core-spec", PolicyKind::CoreSpec { avx_cores: 2 }),
+    ] {
+        let mut cfg = WebCfg::paper_default(Isa::Avx512, policy);
+        cfg.warmup = 200 * MS;
+        cfg.measure = SEC;
+        let t0 = Instant::now();
+        let (run, m) = run_webserver_machine(&cfg);
+        let wall = t0.elapsed().as_secs_f64();
+        let total = m.total_perf();
+        println!(
+            "full web sim [{name:<10}] {:>6.2}s wall for 1.2s sim | {:>6.1} M simulated insns/s | {:>6.0} req/s",
+            wall,
+            total.instructions as f64 / wall / 1e6,
+            run.throughput_rps,
+        );
+    }
+}
+
+fn main() {
+    println!("== avxfreq hot-path microbenchmarks ==\n");
+    bench_skiplist();
+    bench_event_queue();
+    bench_license_observe();
+    bench_run_block();
+    bench_scheduler_pick();
+    bench_full_sim();
+}

@@ -1,0 +1,259 @@
+//! THROTTLE-cycle flame graphs (paper §3.3, second stage).
+//!
+//! "the user therefore generates a flame graph from this counter. […]
+//! Visualizing THROTTLE cycles instead of all CPU cycles shows
+//! approximately where in the call tree frequency changes are triggered."
+//!
+//! The machine records `(stack, cycles, throttle_cycles)` per executed
+//! block; this module interns stacks, folds samples Brendan-Gregg-style
+//! (`frame;frame;frame count`), and renders a minimal self-contained SVG.
+
+use crate::sched::machine::StackSample;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Interned call stacks. Id 0 is reserved for the empty/unknown stack.
+#[derive(Debug, Default)]
+pub struct StackTable {
+    stacks: Vec<Vec<String>>,
+    by_key: BTreeMap<String, u32>,
+}
+
+impl StackTable {
+    pub fn new() -> Self {
+        let mut t = StackTable::default();
+        t.stacks.push(vec!["<unknown>".to_string()]);
+        t.by_key.insert("<unknown>".to_string(), 0);
+        t
+    }
+
+    /// Intern a stack (outermost frame first). Returns its id.
+    pub fn intern(&mut self, frames: &[&str]) -> u32 {
+        let key = frames.join(";");
+        if let Some(&id) = self.by_key.get(&key) {
+            return id;
+        }
+        let id = self.stacks.len() as u32;
+        self.stacks.push(frames.iter().map(|s| s.to_string()).collect());
+        self.by_key.insert(key, id);
+        id
+    }
+
+    pub fn frames(&self, id: u32) -> &[String] {
+        &self.stacks[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.stacks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stacks.is_empty()
+    }
+}
+
+/// Which counter to fold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    Cycles,
+    Throttle,
+}
+
+/// Fold machine samples into `frame;frame;… value` lines (descending).
+pub fn fold(
+    samples: &BTreeMap<u32, StackSample>,
+    stacks: &StackTable,
+    counter: Counter,
+) -> Vec<(String, u64)> {
+    let mut agg: BTreeMap<String, u64> = BTreeMap::new();
+    for (&stack, s) in samples {
+        let v = match counter {
+            Counter::Cycles => s.cycles,
+            Counter::Throttle => s.throttle_cycles,
+        }
+        .round() as u64;
+        if v == 0 {
+            continue;
+        }
+        let key = stacks.frames(stack).join(";");
+        *agg.entry(key).or_default() += v;
+    }
+    let mut rows: Vec<(String, u64)> = agg.into_iter().collect();
+    rows.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    rows
+}
+
+/// Render folded stacks as standard folded-format text.
+pub fn folded_text(rows: &[(String, u64)]) -> String {
+    let mut out = String::new();
+    for (stack, v) in rows {
+        let _ = writeln!(out, "{stack} {v}");
+    }
+    out
+}
+
+// ---- minimal SVG flame graph -------------------------------------------
+
+#[derive(Debug, Default)]
+struct Node {
+    children: BTreeMap<String, Node>,
+    value: u64,
+    total: u64,
+}
+
+impl Node {
+    fn insert(&mut self, frames: &[&str], value: u64) {
+        self.total += value;
+        match frames.split_first() {
+            None => self.value += value,
+            Some((first, rest)) => {
+                self.children.entry(first.to_string()).or_default().insert(rest, value)
+            }
+        }
+    }
+}
+
+fn color(name: &str) -> String {
+    // Deterministic warm palette from the name hash.
+    let mut h = 2166136261u32;
+    for b in name.bytes() {
+        h = (h ^ b as u32).wrapping_mul(16777619);
+    }
+    let r = 205 + (h % 50) as u32;
+    let g = 60 + ((h >> 8) % 120) as u32;
+    let b = (h >> 16) % 50;
+    format!("rgb({r},{g},{b})")
+}
+
+fn render_node(
+    out: &mut String,
+    name: &str,
+    node: &Node,
+    x: f64,
+    width: f64,
+    depth: usize,
+    height_px: f64,
+) {
+    if width < 0.5 {
+        return;
+    }
+    let y = height_px - (depth as f64 + 1.0) * 18.0;
+    let _ = writeln!(
+        out,
+        r#"<rect x="{:.1}" y="{:.1}" width="{:.1}" height="17" fill="{}" rx="1"><title>{} ({} cycles)</title></rect>"#,
+        x,
+        y,
+        width,
+        color(name),
+        name,
+        node.total
+    );
+    if width > 60.0 {
+        let label: String = name.chars().take((width / 7.0) as usize).collect();
+        let _ = writeln!(
+            out,
+            r#"<text x="{:.1}" y="{:.1}" font-size="11" font-family="monospace">{}</text>"#,
+            x + 2.0,
+            y + 12.5,
+            label
+        );
+    }
+    let mut cx = x;
+    for (child_name, child) in &node.children {
+        let w = width * child.total as f64 / node.total.max(1) as f64;
+        render_node(out, child_name, child, cx, w, depth + 1, height_px);
+        cx += w;
+    }
+}
+
+/// Render folded rows to a self-contained SVG flame graph.
+pub fn render_svg(rows: &[(String, u64)], title: &str) -> String {
+    let mut root = Node::default();
+    let mut max_depth = 1usize;
+    for (stack, v) in rows {
+        let frames: Vec<&str> = stack.split(';').collect();
+        max_depth = max_depth.max(frames.len());
+        root.insert(&frames, *v);
+    }
+    let width = 1200.0;
+    let height = (max_depth as f64 + 2.0) * 18.0 + 30.0;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{width}" height="{height}" viewBox="0 0 {width} {height}">"#
+    );
+    let _ = writeln!(
+        out,
+        r#"<text x="8" y="18" font-size="14" font-family="sans-serif">{title}</text>"#
+    );
+    let mut cx = 0.0;
+    for (name, child) in &root.children {
+        let w = width * child.total as f64 / root.total.max(1) as f64;
+        render_node(&mut out, name, child, cx, w, 0, height - 8.0);
+        cx += w;
+    }
+    let _ = writeln!(out, "</svg>");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_data() -> (BTreeMap<u32, StackSample>, StackTable) {
+        let mut t = StackTable::new();
+        let a = t.intern(&["nginx", "SSL_write", "ChaCha20_ctr32_avx512"]);
+        let b = t.intern(&["nginx", "SSL_write", "poly1305_blocks_avx512"]);
+        let c = t.intern(&["nginx", "BrotliEncoderCompressStream"]);
+        let mut m = BTreeMap::new();
+        m.insert(a, StackSample { cycles: 1000.0, throttle_cycles: 300.0 });
+        m.insert(b, StackSample { cycles: 500.0, throttle_cycles: 450.0 });
+        m.insert(c, StackSample { cycles: 9000.0, throttle_cycles: 0.0 });
+        (m, t)
+    }
+
+    #[test]
+    fn intern_dedups() {
+        let mut t = StackTable::new();
+        let a = t.intern(&["x", "y"]);
+        let b = t.intern(&["x", "y"]);
+        let c = t.intern(&["x", "z"]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(t.frames(a), &["x".to_string(), "y".to_string()]);
+    }
+
+    #[test]
+    fn throttle_fold_isolates_crypto() {
+        let (m, t) = sample_data();
+        let rows = fold(&m, &t, Counter::Throttle);
+        // Brotli has zero throttle cycles → absent; poly tops the list.
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].0.contains("poly1305"));
+        assert!(!rows.iter().any(|(s, _)| s.contains("Brotli")));
+    }
+
+    #[test]
+    fn cycles_fold_dominated_by_brotli() {
+        let (m, t) = sample_data();
+        let rows = fold(&m, &t, Counter::Cycles);
+        assert!(rows[0].0.contains("Brotli"), "plain-cycles graph is the wrong tool: {rows:?}");
+    }
+
+    #[test]
+    fn folded_text_format() {
+        let (m, t) = sample_data();
+        let txt = folded_text(&fold(&m, &t, Counter::Throttle));
+        assert!(txt.contains("nginx;SSL_write;poly1305_blocks_avx512 450"));
+    }
+
+    #[test]
+    fn svg_renders_and_contains_frames() {
+        let (m, t) = sample_data();
+        let rows = fold(&m, &t, Counter::Cycles);
+        let svg = render_svg(&rows, "test graph");
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.contains("Brotli"));
+        assert!(svg.ends_with("</svg>\n"));
+    }
+}

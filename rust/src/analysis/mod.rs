@@ -1,0 +1,12 @@
+//! The paper's §3.3 identification workflow:
+//!
+//! 1. [`static_analysis`] — "disassemble" binaries and rank functions by
+//!    the ratio of 256/512-bit register accesses to total instructions.
+//! 2. [`flamegraph`] — visualize where in the call tree the
+//!    `CORE_POWER.THROTTLE` counter fires (frequency-change triggers).
+//! 3. [`lbr`] — last-branch-record inspection to catch AVX bursts too
+//!    short for the counter-based workflow (§3.3 end / §6.1).
+
+pub mod static_analysis;
+pub mod flamegraph;
+pub mod lbr;

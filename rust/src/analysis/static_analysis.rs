@@ -1,0 +1,146 @@
+//! Static AVX-usage analysis (paper §3.3, first stage).
+//!
+//! "A static analysis tool disassembles the target application as well as
+//! all its dynamically linked libraries and analyzes the usage of wide
+//! vector registers. For every function, the program calculates the ratio
+//! between the number of the instructions accessing 256-bit and 512-bit
+//! registers and the total instruction count. […] the program prints a
+//! list of functions sorted by this AVX instruction ratio."
+
+use crate::isa::block::{InsnClass, ALL_CLASSES};
+use crate::isa::Binary;
+use crate::util::table::Table;
+
+/// One row of the analysis report.
+#[derive(Clone, Debug)]
+pub struct FunctionReport {
+    pub binary: String,
+    pub function: String,
+    pub total_insns: u64,
+    pub wide_insns: u64,
+    pub avx_ratio: f64,
+    /// Dominant wide class (diagnostic: which license it would demand).
+    pub dominant_wide: Option<InsnClass>,
+}
+
+/// Analyze a set of binaries; returns rows sorted by descending AVX ratio.
+pub fn analyze(binaries: &[Binary]) -> Vec<FunctionReport> {
+    let mut rows = Vec::new();
+    for bin in binaries {
+        for (_, f) in bin.iter() {
+            let mix = f.static_mix();
+            let dominant = ALL_CLASSES
+                .iter()
+                .filter(|c| c.is_wide() && mix.get(**c) > 0)
+                .max_by_key(|c| mix.get(**c))
+                .copied();
+            rows.push(FunctionReport {
+                binary: bin.name.clone(),
+                function: f.name.clone(),
+                total_insns: mix.total(),
+                wide_insns: mix.wide(),
+                avx_ratio: mix.wide_ratio(),
+                dominant_wide: dominant,
+            });
+        }
+    }
+    rows.sort_by(|a, b| {
+        b.avx_ratio
+            .partial_cmp(&a.avx_ratio)
+            .unwrap()
+            .then_with(|| b.wide_insns.cmp(&a.wide_insns))
+            .then_with(|| a.function.cmp(&b.function))
+    });
+    rows
+}
+
+/// Candidates worth annotating: high ratio *and* non-trivial size. The
+/// paper's memcpy caveat: frequently-called functions with sparse wide
+/// moves "should not cause the thread to migrate" — the ratio threshold
+/// keeps them listed (for the developer to inspect) but the report marks
+/// the likely-dense ones.
+pub fn candidates(rows: &[FunctionReport], min_ratio: f64) -> Vec<&FunctionReport> {
+    rows.iter().filter(|r| r.avx_ratio >= min_ratio).collect()
+}
+
+/// Render the report as a table (what the CLI prints).
+pub fn report_table(rows: &[FunctionReport]) -> Table {
+    let mut t = Table::new(
+        "Static analysis: functions by AVX instruction ratio (§3.3)",
+        &["binary", "function", "insns", "wide", "ratio", "dominant class"],
+    );
+    for r in rows {
+        t.row(&[
+            r.binary.clone(),
+            r.function.clone(),
+            r.total_insns.to_string(),
+            r.wide_insns.to_string(),
+            format!("{:.2}", r.avx_ratio),
+            r.dominant_wide.map(|c| c.name().to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::crypto::Isa;
+    use crate::workload::webserver::build_binaries;
+
+    #[test]
+    fn crypto_functions_rank_first() {
+        let bins = build_binaries(Isa::Avx512);
+        let rows = analyze(&bins);
+        assert!(!rows.is_empty());
+        // The top entries must be the OpenSSL vector kernels.
+        let top: Vec<&str> = rows.iter().take(3).map(|r| r.function.as_str()).collect();
+        assert!(
+            top.iter().any(|f| f.contains("ChaCha20")),
+            "ChaCha20 must rank near the top: {top:?}"
+        );
+        assert!(
+            top.iter().any(|f| f.contains("poly1305")),
+            "poly1305 must rank near the top: {top:?}"
+        );
+    }
+
+    #[test]
+    fn memcpy_ranks_below_crypto() {
+        let bins = build_binaries(Isa::Avx512);
+        let rows = analyze(&bins);
+        let pos = |name: &str| rows.iter().position(|r| r.function.contains(name)).unwrap();
+        assert!(
+            pos("ChaCha20") < pos("__memmove_avx_unaligned"),
+            "dense crypto must outrank sparse memcpy"
+        );
+    }
+
+    #[test]
+    fn scalar_functions_ratio_zero() {
+        let bins = build_binaries(Isa::Sse4);
+        let rows = analyze(&bins);
+        let nginx_rows: Vec<_> = rows.iter().filter(|r| r.binary == "nginx").collect();
+        assert!(nginx_rows.iter().all(|r| r.avx_ratio == 0.0));
+    }
+
+    #[test]
+    fn candidate_threshold_filters() {
+        let bins = build_binaries(Isa::Avx512);
+        let rows = analyze(&bins);
+        let cands = candidates(&rows, 0.5);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|r| r.avx_ratio >= 0.5));
+        assert!(cands.iter().any(|r| r.function.contains("ChaCha20")));
+        assert!(!cands.iter().any(|r| r.function == "malloc"));
+    }
+
+    #[test]
+    fn sse4_build_has_no_crypto_candidates() {
+        let bins = build_binaries(Isa::Sse4);
+        let rows = analyze(&bins);
+        let cands = candidates(&rows, 0.3);
+        // Only the glibc AVX memcpy/memset remain.
+        assert!(cands.iter().all(|r| r.binary == "libc.so.6"), "{cands:?}");
+    }
+}

@@ -1,0 +1,264 @@
+//! The core execution model: runs instruction blocks at the frequency the
+//! license state machine allows, charging cycles from the IPC model and
+//! advancing the PMU counters.
+//!
+//! Execution is sliced at basic-block granularity; workload builders keep
+//! blocks at or below a few tens of microseconds so license transitions
+//! (100 µs–2 ms scale) are observed promptly. The `max_slice_cycles`
+//! guard splits oversized blocks defensively.
+
+use super::freq::{FreqParams, License, LicenseState};
+use super::ipc::{cost_block, license_demand, FootprintTracker, IpcParams};
+use super::perf::PerfCounters;
+use super::turbo::TurboTable;
+use crate::isa::block::Block;
+use crate::sim::Time;
+
+/// Outcome of executing one block on a core.
+#[derive(Clone, Copy, Debug)]
+pub struct SliceOutcome {
+    /// Wall-clock duration of the block (including any PLL stall).
+    pub ns: Time,
+    /// Core cycles consumed.
+    pub cycles: f64,
+    /// Cycles counted toward CORE_POWER.THROTTLE.
+    pub throttle_cycles: f64,
+    /// License level the block ran at.
+    pub license: License,
+    /// Frequency the block ran at (GHz).
+    pub ghz: f64,
+}
+
+/// One physical core.
+#[derive(Clone, Debug)]
+pub struct Core {
+    pub id: usize,
+    pub license: LicenseState,
+    pub perf: PerfCounters,
+    pub footprint: FootprintTracker,
+    ipc_params: IpcParams,
+}
+
+impl Core {
+    pub fn new(id: usize, freq_params: FreqParams, ipc_params: IpcParams) -> Self {
+        let cap = ipc_params.predictor_capacity;
+        Core {
+            id,
+            license: LicenseState::new(freq_params),
+            perf: PerfCounters::default(),
+            footprint: FootprintTracker::new(cap),
+            ipc_params,
+        }
+    }
+
+    pub fn ipc_params(&self) -> &IpcParams {
+        &self.ipc_params
+    }
+
+    /// Execute `block` belonging to function `func` starting at `now`,
+    /// with `active` cores awake package-wide. Returns the slice outcome;
+    /// the caller advances its clock by `outcome.ns`.
+    pub fn run_block(
+        &mut self,
+        now: Time,
+        block: &Block,
+        func: u64,
+        active: usize,
+        turbo: &TurboTable,
+    ) -> SliceOutcome {
+        // Pending PLL stall from a recent frequency switch.
+        let stall = self.license.stall_ns(now);
+        if stall > 0 {
+            self.perf.record_stall(stall);
+        }
+        let start = now + stall;
+
+        // Cost the block at the current footprint pressure.
+        self.footprint.touch(func);
+        let cost = cost_block(&self.ipc_params, block, self.footprint.pressure());
+
+        // License demand is a property of the block's densities.
+        let demand = license_demand(self.license.params(), block, cost.cycles);
+        let eff = self.license.observe(start, demand);
+
+        let cycles = cost.cycles / eff.ipc_factor;
+        let throttle_cycles = if eff.throttled { cycles } else { 0.0 };
+        let ghz = turbo.ghz(eff.license, active);
+        let exec_ns = (cycles / ghz).ceil() as Time;
+        let ns = stall + exec_ns.max(1);
+
+        self.perf.record_slice(
+            eff.license,
+            eff.throttled,
+            cycles,
+            exec_ns.max(1),
+            ghz,
+            block.insns(),
+            block.branches,
+            cost.mispredicts,
+            cost.mem_stall_cycles,
+        );
+        self.perf.license_requests = self.license.requests;
+        self.perf.freq_switches = self.license.switches;
+
+        SliceOutcome { ns, cycles, throttle_cycles, license: eff.license, ghz }
+    }
+
+    /// Let the license machine observe idle time (idle cores eventually
+    /// relax their license: the hold window keeps running while idle).
+    pub fn idle_until(&mut self, from: Time, to: Time) {
+        debug_assert!(to >= from);
+        self.perf.record_idle(to - from);
+        // Idle executes no heavy instructions: demand L0.
+        self.license.observe(to, License::L0);
+    }
+
+    /// Next time at which this core's license state can change on its own.
+    pub fn next_license_edge(&self) -> Option<Time> {
+        self.license.next_edge()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::block::{ClassMix, InsnClass};
+    use crate::sim::{MS, US};
+
+    fn core() -> Core {
+        Core::new(0, FreqParams::default(), IpcParams::default())
+    }
+
+    fn turbo() -> TurboTable {
+        TurboTable::xeon_gold_6130_no_cstates()
+    }
+
+    fn scalar(n: u64) -> Block {
+        Block { mix: ClassMix::scalar(n), mem_ops: 0, branches: 0, license_exempt: false }
+    }
+
+    fn avx512(n: u64) -> Block {
+        Block { mix: ClassMix::of(InsnClass::Avx512Heavy, n), mem_ops: 0, branches: 0, license_exempt: false }
+    }
+
+    #[test]
+    fn scalar_runs_at_l0_full_speed() {
+        let mut c = core();
+        let t = turbo();
+        let out = c.run_block(0, &scalar(28_000), 1, 16, &t);
+        assert_eq!(out.license, License::L0);
+        assert_eq!(out.ghz, 2.8);
+        // 28000 insns / 2.2 IPC ≈ 12727 cycles @2.8GHz ≈ 4545ns
+        assert!((out.ns as f64 - 4546.0).abs() < 20.0, "ns={}", out.ns);
+    }
+
+    #[test]
+    fn avx512_block_throttles_then_downclocks() {
+        let mut c = core();
+        let t = turbo();
+        let out = c.run_block(0, &avx512(10_000), 2, 16, &t);
+        assert!(out.throttle_cycles > 0.0, "first AVX block must throttle");
+        assert_eq!(out.license, License::L0, "frequency not yet dropped");
+
+        // Keep executing AVX past the grant latency.
+        let mut now = out.ns;
+        let mut granted_l2 = false;
+        for _ in 0..200 {
+            let o = c.run_block(now, &avx512(10_000), 2, 16, &t);
+            now += o.ns;
+            if o.license == License::L2 {
+                granted_l2 = true;
+                break;
+            }
+        }
+        assert!(granted_l2, "L2 must be granted after the request latency");
+        assert!(c.perf.throttle_cycles > 0);
+        assert!(c.perf.license_cycles[2] > 0);
+    }
+
+    #[test]
+    fn scalar_after_avx_suffers_for_two_ms() {
+        let mut c = core();
+        let t = turbo();
+        // Drive the core to a granted L2.
+        let mut now = 0;
+        for _ in 0..400 {
+            let o = c.run_block(now, &avx512(10_000), 2, 16, &t);
+            now += o.ns;
+            if o.license == License::L2 && o.throttle_cycles == 0.0 {
+                break;
+            }
+        }
+        // Scalar code now runs at 1.9 GHz until the hold expires.
+        let mut slow_ns = 0;
+        let mut saw_recovery = false;
+        for _ in 0..4000 {
+            let o = c.run_block(now, &scalar(5000), 2, 16, &t);
+            now += o.ns;
+            if o.license == License::L2 {
+                slow_ns += o.ns;
+            } else {
+                saw_recovery = true;
+                assert_eq!(o.ghz, 2.8);
+                break;
+            }
+        }
+        assert!(saw_recovery, "license must eventually relax");
+        let slow_ms = slow_ns as f64 / MS as f64;
+        assert!(
+            (1.8..=2.4).contains(&slow_ms),
+            "scalar code slowed for ~2ms, got {slow_ms}ms"
+        );
+    }
+
+    #[test]
+    fn idle_time_lets_license_relax() {
+        let mut c = core();
+        let t = turbo();
+        let mut now = 0;
+        for _ in 0..400 {
+            let o = c.run_block(now, &avx512(10_000), 1, 16, &t);
+            now += o.ns;
+            if o.license == License::L2 {
+                break;
+            }
+        }
+        // First idle observation opens the hold window...
+        c.idle_until(now, now + 10 * US);
+        // ...and a long idle expires it.
+        c.idle_until(now + 10 * US, now + 10 * US + 3 * MS);
+        let o = c.run_block(now + 10 * US + 3 * MS, &scalar(1000), 1, 16, &t);
+        assert_eq!(o.license, License::L0, "idle core must relax to L0");
+    }
+
+    #[test]
+    fn footprint_miss_penalty_visible_in_ipc() {
+        let t = turbo();
+        // Same blocks, one core cycles through many functions, other through 2.
+        let block = Block { mix: ClassMix::scalar(4000), mem_ops: 100, branches: 600, license_exempt: false };
+        let mut hot = core();
+        let mut cold = core();
+        let mut now_h = 0;
+        let mut now_c = 0;
+        for i in 0..3000u64 {
+            now_h += hot.run_block(now_h, &block, i % 2, 16, &t).ns;
+            now_c += cold.run_block(now_c, &block, i % 64, 16, &t).ns;
+        }
+        assert!(
+            hot.perf.ipc() > cold.perf.ipc() * 1.005,
+            "hot {} vs cold {}",
+            hot.perf.ipc(),
+            cold.perf.ipc()
+        );
+    }
+
+    #[test]
+    fn active_core_count_changes_turbo() {
+        let mut c = core();
+        let t = TurboTable::xeon_gold_6130();
+        let o1 = c.run_block(0, &scalar(1000), 0, 1, &t);
+        assert_eq!(o1.ghz, 3.7, "single active core gets max turbo");
+        let o2 = c.run_block(o1.ns, &scalar(1000), 0, 16, &t);
+        assert_eq!(o2.ghz, 2.8);
+    }
+}

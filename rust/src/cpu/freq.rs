@@ -1,0 +1,365 @@
+//! Per-core AVX power-license state machine (paper Fig 1, Intel SDM §15.26).
+//!
+//! A core holds a *granted* license (L0 = full turbo … L2 = heavy-AVX-512
+//! turbo). The instruction stream produces a *demand* level per execution
+//! slice. Transitions:
+//!
+//! * demand **above** granted → the core immediately enters a *throttled*
+//!   phase (reduced IPC at the old frequency) while it requests a higher
+//!   license from the package PCU; the grant arrives after up to 500 µs.
+//! * demand **below** granted → the core keeps the low-frequency license
+//!   for a ~2 ms *hold window* (hysteresis to bound the frequency-change
+//!   rate); only if demand stays low for the whole window does the core
+//!   revert, taking a short PLL stall.
+//!
+//! The `CORE_POWER.*` PMU events are defined by this machine: time spent
+//! at each level increments `LVLn_TURBO_LICENSE`, time in the throttled
+//! phase increments `THROTTLE`.
+
+use crate::sim::{Time, MS, US};
+
+/// Power license levels. Ordering: `L0 < L1 < L2` in *severity* (L2 is the
+/// slowest frequency).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum License {
+    /// Full turbo — scalar/SSE and light AVX2.
+    L0,
+    /// Heavy AVX2 or light AVX-512.
+    L1,
+    /// Heavy (FP multiply / FMA) AVX-512.
+    L2,
+}
+
+impl License {
+    pub fn index(self) -> usize {
+        match self {
+            License::L0 => 0,
+            License::L1 => 1,
+            License::L2 => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> License {
+        match i {
+            0 => License::L0,
+            1 => License::L1,
+            2 => License::L2,
+            _ => panic!("license index {i}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        ["L0", "L1", "L2"][self.index()]
+    }
+}
+
+/// Tunable hardware parameters, defaulting to the paper's numbers for the
+/// Xeon Gold 6130 / Skylake-SP.
+#[derive(Clone, Debug)]
+pub struct FreqParams {
+    /// Time from license request to PCU grant ("up to 500 µs", SDM §15.26).
+    pub grant_latency: Time,
+    /// IPC multiplier while the request is pending ("executes at reduced
+    /// performance", Fig 1). Measured dispatch throttling is ~4×.
+    pub throttle_ipc_factor: f64,
+    /// Hysteresis before reverting to a faster license (~2 ms, SDM §15.26).
+    pub hold: Time,
+    /// PLL relock stall on an actual frequency switch (Mazouz et al. [16]).
+    pub switch_stall: Time,
+    /// Detection latency from first heavy instruction to request, expressed
+    /// in instructions (~100, paper §3.3).
+    pub detect_insns: u64,
+    /// Density (insns/cycle) of heavy instructions that sustains a license
+    /// demand — "approximately one instruction of the corresponding type
+    /// executed per cycle" (paper §2, Lemire [14]). Dense vectorized loops
+    /// exceed this; sporadic wide moves and stall-bound streams do not.
+    pub dense_threshold: f64,
+}
+
+impl Default for FreqParams {
+    fn default() -> Self {
+        FreqParams {
+            // SDM bounds the request phase at 500 µs; measured transition
+            // latencies on Skylake-SP are tens of µs (Mazouz et al. [16],
+            // Schöne et al.) — default to a typical grant, not the bound.
+            grant_latency: 40 * US,
+            throttle_ipc_factor: 0.35,
+            hold: 2 * MS,
+            switch_stall: 8 * US,
+            detect_insns: 100,
+            dense_threshold: 1.0,
+        }
+    }
+}
+
+/// Transition phase of the state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// Running at the granted license.
+    Stable,
+    /// Requested a lower-frequency license; throttled until `grant_at`.
+    Throttled { target: License, grant_at: Time },
+}
+
+/// Per-core license state machine.
+#[derive(Clone, Debug)]
+pub struct LicenseState {
+    params: FreqParams,
+    granted: License,
+    phase: Phase,
+    /// Deadline at which the hold window expires (set while demand < granted).
+    relax_at: Option<Time>,
+    /// Highest demand observed during the current hold window.
+    window_demand: License,
+    /// Stall until this time after an actual frequency switch.
+    stall_until: Time,
+    /// Statistics.
+    pub requests: u64,
+    pub switches: u64,
+}
+
+/// What the core model needs to know to cost a slice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EffectiveState {
+    /// License whose frequency the core currently runs at.
+    pub license: License,
+    /// IPC multiplier (1.0 normally, `throttle_ipc_factor` mid-transition).
+    pub ipc_factor: f64,
+    /// True if the core is in the throttled request phase (THROTTLE event).
+    pub throttled: bool,
+}
+
+impl LicenseState {
+    pub fn new(params: FreqParams) -> Self {
+        LicenseState {
+            params,
+            granted: License::L0,
+            phase: Phase::Stable,
+            relax_at: None,
+            window_demand: License::L0,
+            stall_until: 0,
+            requests: 0,
+            switches: 0,
+        }
+    }
+
+    pub fn params(&self) -> &FreqParams {
+        &self.params
+    }
+
+    /// Currently granted license (the frequency the core runs at).
+    pub fn granted(&self) -> License {
+        self.granted
+    }
+
+    /// Is a down-transition (request) in flight?
+    pub fn in_transition(&self) -> bool {
+        matches!(self.phase, Phase::Throttled { .. })
+    }
+
+    /// PLL stall time remaining at `now`, to be added to the next slice.
+    pub fn stall_ns(&self, now: Time) -> Time {
+        self.stall_until.saturating_sub(now)
+    }
+
+    /// Advance the machine to `now` and report demand for the *next* slice.
+    ///
+    /// Returns the effective state to cost the slice with. Call order per
+    /// slice: `observe(now, demand)` → run slice of duration `dt` → next
+    /// call has `now' = now + dt`.
+    pub fn observe(&mut self, now: Time, demand: License) -> EffectiveState {
+        // 1. Complete an in-flight grant whose latency has elapsed.
+        if let Phase::Throttled { target, grant_at } = self.phase {
+            if now >= grant_at {
+                self.granted = target;
+                self.phase = Phase::Stable;
+                self.switches += 1;
+                self.stall_until = grant_at + self.params.switch_stall;
+                // A fresh grant starts a fresh observation window.
+                self.relax_at = None;
+                self.window_demand = License::L0;
+            }
+        }
+
+        // 2. Demand above granted (or above in-flight target): request.
+        let effective_target = match self.phase {
+            Phase::Throttled { target, .. } => target.max(self.granted),
+            Phase::Stable => self.granted,
+        };
+        if demand > effective_target {
+            self.requests += 1;
+            self.phase = Phase::Throttled { target: demand, grant_at: now + self.params.grant_latency };
+            self.relax_at = None;
+        }
+
+        // 3. Demand below granted: run (or continue) the hold window.
+        if demand < self.granted && matches!(self.phase, Phase::Stable) {
+            match self.relax_at {
+                None => {
+                    self.relax_at = Some(now + self.params.hold);
+                    self.window_demand = demand;
+                }
+                Some(deadline) => {
+                    self.window_demand = self.window_demand.max(demand);
+                    if now >= deadline {
+                        // Hold expired: revert to the highest demand seen in
+                        // the window (direct transition, per observed hardware
+                        // behaviour — no intermediate-step requirement).
+                        let to = self.window_demand.max(demand);
+                        if to < self.granted {
+                            self.granted = to;
+                            self.switches += 1;
+                            self.stall_until = now + self.params.switch_stall;
+                        }
+                        self.relax_at = None;
+                        self.window_demand = License::L0;
+                    }
+                }
+            }
+        } else if demand >= self.granted {
+            // Demand meets the license again: cancel any pending relax.
+            self.relax_at = None;
+            self.window_demand = License::L0;
+        }
+
+        match self.phase {
+            Phase::Throttled { .. } => EffectiveState {
+                license: self.granted,
+                ipc_factor: self.params.throttle_ipc_factor,
+                throttled: true,
+            },
+            Phase::Stable => {
+                EffectiveState { license: self.granted, ipc_factor: 1.0, throttled: false }
+            }
+        }
+    }
+
+    /// Earliest future time at which this machine's state can change
+    /// without new demand: the grant completion or the relax deadline.
+    /// The core model uses this to bound slice lengths so transitions are
+    /// observed promptly.
+    pub fn next_edge(&self) -> Option<Time> {
+        match self.phase {
+            Phase::Throttled { grant_at, .. } => Some(grant_at),
+            Phase::Stable => self.relax_at,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine() -> LicenseState {
+        LicenseState::new(FreqParams::default())
+    }
+
+    #[test]
+    fn starts_at_l0_stable() {
+        let mut m = machine();
+        let s = m.observe(0, License::L0);
+        assert_eq!(s.license, License::L0);
+        assert!(!s.throttled);
+        assert_eq!(s.ipc_factor, 1.0);
+    }
+
+    #[test]
+    fn downclock_goes_through_throttle_phase() {
+        let mut m = machine();
+        let s = m.observe(0, License::L2);
+        // Request issued; still at L0 frequency but throttled.
+        assert_eq!(s.license, License::L0);
+        assert!(s.throttled);
+        assert!(s.ipc_factor < 1.0);
+        assert_eq!(m.requests, 1);
+
+        // Before the grant latency: still throttled.
+        let grant = FreqParams::default().grant_latency;
+        let s = m.observe(grant / 2, License::L2);
+        assert!(s.throttled);
+
+        // After the grant: L2, not throttled.
+        let s = m.observe(grant + 160 * US, License::L2);
+        assert_eq!(s.license, License::L2);
+        assert!(!s.throttled);
+        assert_eq!(m.switches, 1);
+    }
+
+    #[test]
+    fn upclock_delayed_by_hold_window() {
+        let mut m = machine();
+        m.observe(0, License::L2);
+        m.observe(200 * US, License::L2); // granted L2
+        assert_eq!(m.granted(), License::L2);
+
+        // Scalar demand: hold window starts; license unchanged for 2 ms.
+        let t0 = 300 * US;
+        let s = m.observe(t0, License::L0);
+        assert_eq!(s.license, License::L2);
+        let s = m.observe(t0 + MS, License::L0);
+        assert_eq!(s.license, License::L2, "still within hold window");
+        // Window expires 2 ms after it started.
+        let s = m.observe(t0 + 2 * MS + 1, License::L0);
+        assert_eq!(s.license, License::L0);
+        assert!(!s.throttled);
+    }
+
+    #[test]
+    fn avx_burst_inside_hold_window_cancels_relax() {
+        let mut m = machine();
+        m.observe(0, License::L2);
+        m.observe(200 * US, License::L2);
+        m.observe(300 * US, License::L0); // window opens
+        m.observe(MS, License::L2); // burst: window cancelled
+        let s = m.observe(3 * MS, License::L0); // would have expired, but was reset at 1ms
+        assert_eq!(s.license, License::L2, "burst must restart hysteresis");
+        let s = m.observe(3 * MS + 2 * MS + 1, License::L0);
+        assert_eq!(s.license, License::L0);
+    }
+
+    #[test]
+    fn window_reverts_to_highest_demand_seen() {
+        let mut m = machine();
+        m.observe(0, License::L2);
+        m.observe(200 * US, License::L2);
+        // Mixed L1/L0 demand during the window → revert lands on L1.
+        m.observe(300 * US, License::L0);
+        m.observe(MS, License::L1);
+        let s = m.observe(300 * US + 2 * MS + 1, License::L1);
+        assert_eq!(s.license, License::L1);
+    }
+
+    #[test]
+    fn escalation_l1_to_l2_rerequests() {
+        let mut m = machine();
+        m.observe(0, License::L1);
+        m.observe(200 * US, License::L1);
+        assert_eq!(m.granted(), License::L1);
+        let s = m.observe(250 * US, License::L2);
+        assert!(s.throttled);
+        assert_eq!(m.requests, 2);
+        let s = m.observe(500 * US, License::L2);
+        assert_eq!(s.license, License::L2);
+    }
+
+    #[test]
+    fn stall_after_switch() {
+        let mut m = machine();
+        m.observe(0, License::L2);
+        let grant = FreqParams::default().grant_latency;
+        m.observe(grant, License::L2);
+        assert!(m.stall_ns(grant) > 0, "PLL stall right after a switch");
+        assert_eq!(m.stall_ns(300 * US), 0);
+    }
+
+    #[test]
+    fn next_edge_reports_grant_then_relax() {
+        let mut m = machine();
+        m.observe(0, License::L2);
+        assert_eq!(m.next_edge(), Some(FreqParams::default().grant_latency));
+        m.observe(200 * US, License::L2);
+        assert_eq!(m.next_edge(), None);
+        m.observe(300 * US, License::L0);
+        assert_eq!(m.next_edge(), Some(300 * US + 2 * MS));
+    }
+}

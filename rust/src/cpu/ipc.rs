@@ -1,0 +1,251 @@
+//! IPC model: converts an instruction mix into core cycles, and derives
+//! the power-license *demand* of a slice from instruction densities.
+//!
+//! Fidelity target: the relative effects the paper measures — per-class
+//! throughput differences, memory-stall sensitivity, and the §4.2
+//! branch-misprediction effect of code-footprint reduction — not absolute
+//! cycle accuracy.
+
+use super::freq::{FreqParams, License};
+use crate::isa::block::{Block, InsnClass};
+use std::collections::VecDeque;
+
+/// IPC model parameters.
+#[derive(Clone, Debug)]
+pub struct IpcParams {
+    /// Peak IPC per instruction class (per-instruction throughput; wider
+    /// instructions do more *work* per instruction, which the workload
+    /// models as lower instruction counts, not higher IPC).
+    pub base_ipc: [f64; 5],
+    /// Average stall cycles per memory operation (cache-aware workloads
+    /// fold their hit rates into this).
+    pub mem_stall_cpi: f64,
+    /// Branch misprediction penalty in cycles (Skylake ~16).
+    pub mispredict_penalty: f64,
+    /// Baseline misprediction rate for hot code.
+    pub mispredict_rate_hot: f64,
+    /// Additional misprediction rate for cold code (footprint miss).
+    pub mispredict_rate_cold: f64,
+    /// Number of distinct functions whose branch history fits the per-core
+    /// predictor tables (paper §4.2: smaller per-core footprint → fewer
+    /// mispredictions).
+    pub predictor_capacity: usize,
+}
+
+impl Default for IpcParams {
+    fn default() -> Self {
+        IpcParams {
+            base_ipc: [2.2, 1.9, 1.7, 1.5, 1.3],
+            mem_stall_cpi: 1.1,
+            mispredict_penalty: 16.0,
+            mispredict_rate_hot: 0.015,
+            mispredict_rate_cold: 0.10,
+            predictor_capacity: 7,
+        }
+    }
+}
+
+/// Tracks the per-core code footprint: an LRU over function identifiers
+/// standing in for the branch predictor's history tables. Executing many
+/// distinct functions on one core keeps the miss ratio high; core
+/// specialization shrinks the set and the miss ratio drops (§4.2).
+#[derive(Clone, Debug)]
+pub struct FootprintTracker {
+    lru: VecDeque<u64>,
+    cap: usize,
+    /// EWMA of the miss indicator, reported as pressure ∈ [0,1].
+    pressure: f64,
+}
+
+impl FootprintTracker {
+    pub fn new(cap: usize) -> Self {
+        FootprintTracker { lru: VecDeque::with_capacity(cap), cap, pressure: 0.0 }
+    }
+
+    /// Record execution of `func`; returns true on a footprint miss.
+    pub fn touch(&mut self, func: u64) -> bool {
+        const ALPHA: f64 = 0.02;
+        let hit = if let Some(pos) = self.lru.iter().position(|&f| f == func) {
+            let f = self.lru.remove(pos).unwrap();
+            self.lru.push_front(f);
+            true
+        } else {
+            if self.lru.len() == self.cap {
+                self.lru.pop_back();
+            }
+            self.lru.push_front(func);
+            false
+        };
+        self.pressure = (1.0 - ALPHA) * self.pressure + ALPHA * if hit { 0.0 } else { 1.0 };
+        !hit
+    }
+
+    /// Long-run footprint miss ratio estimate ∈ [0,1].
+    pub fn pressure(&self) -> f64 {
+        self.pressure
+    }
+
+    pub fn distinct(&self) -> usize {
+        self.lru.len()
+    }
+}
+
+/// Result of costing one block.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockCost {
+    /// Core cycles to retire the block (before frequency conversion).
+    pub cycles: f64,
+    /// Cycles lost to branch mispredictions (reported for §4.2).
+    pub mispredict_cycles: f64,
+    /// Cycles lost to memory stalls.
+    pub mem_stall_cycles: f64,
+    /// Expected number of mispredicted branches.
+    pub mispredicts: f64,
+}
+
+/// Pure function: cycles for a block given footprint pressure.
+pub fn cost_block(p: &IpcParams, block: &Block, footprint_pressure: f64) -> BlockCost {
+    let mut exec_cycles = 0.0;
+    for (i, &n) in block.mix.counts.iter().enumerate() {
+        if n > 0 {
+            exec_cycles += n as f64 / p.base_ipc[i];
+        }
+    }
+    let mem_stall_cycles = block.mem_ops as f64 * p.mem_stall_cpi;
+    let miss_rate = p.mispredict_rate_hot + p.mispredict_rate_cold * footprint_pressure;
+    let mispredicts = block.branches as f64 * miss_rate;
+    let mispredict_cycles = mispredicts * p.mispredict_penalty;
+    BlockCost {
+        cycles: exec_cycles + mem_stall_cycles + mispredict_cycles,
+        mispredict_cycles,
+        mem_stall_cycles,
+        mispredicts,
+    }
+}
+
+/// License demand of a slice: Intel reduces frequency only when heavy
+/// instructions are *dense* — roughly one per cycle sustained, or a
+/// sufficiently dense mix of the two categories (SDM §15.26, Lemire [14]).
+/// Density below `dense_threshold` leaves the license at L0.
+pub fn license_demand(fp: &FreqParams, block: &Block, cycles: f64) -> License {
+    if cycles <= 0.0 || block.license_exempt {
+        return License::L0;
+    }
+    let d2 = block.mix.get(InsnClass::Avx512Heavy) as f64 / cycles;
+    let d1 = (block.mix.get(InsnClass::Avx2Heavy) + block.mix.get(InsnClass::Avx512Light)) as f64
+        / cycles;
+    // A dense mix of level-1 and level-2 instructions also triggers L2
+    // (SDM: "sufficiently dense mixture of instructions from two
+    // different categories"), at half weight.
+    if d2 >= fp.dense_threshold || (d2 > 0.0 && d2 + 0.5 * d1 >= fp.dense_threshold) {
+        License::L2
+    } else if d1 + d2 >= fp.dense_threshold {
+        License::L1
+    } else {
+        License::L0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::block::ClassMix;
+
+    fn scalar_block(n: u64) -> Block {
+        Block::new(ClassMix::scalar(n))
+    }
+
+    #[test]
+    fn scalar_block_costs_expected_cycles() {
+        let p = IpcParams::default();
+        let b = Block { mix: ClassMix::scalar(2200), mem_ops: 0, branches: 0, license_exempt: false };
+        let c = cost_block(&p, &b, 0.0);
+        assert!((c.cycles - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn footprint_pressure_raises_cost() {
+        let p = IpcParams::default();
+        let b = scalar_block(6000);
+        let hot = cost_block(&p, &b, 0.0);
+        let cold = cost_block(&p, &b, 1.0);
+        assert!(cold.cycles > hot.cycles);
+        assert!(cold.mispredicts > hot.mispredicts);
+        // Effect size should be percent-scale, not 2x.
+        assert!(cold.cycles / hot.cycles < 1.5);
+    }
+
+    #[test]
+    fn lru_tracks_distinct_functions() {
+        let mut t = FootprintTracker::new(4);
+        for f in 0..4u64 {
+            assert!(t.touch(f), "first touch is a miss");
+        }
+        assert!(!t.touch(3), "recent function is a hit");
+        assert!(t.touch(99), "new function evicts");
+        assert!(t.touch(0), "evicted function misses");
+        assert_eq!(t.distinct(), 4);
+    }
+
+    #[test]
+    fn pressure_converges_under_thrash_and_hit() {
+        let mut t = FootprintTracker::new(2);
+        for i in 0..5000u64 {
+            t.touch(i % 16); // thrash
+        }
+        assert!(t.pressure() > 0.8, "thrash pressure {}", t.pressure());
+        let mut t2 = FootprintTracker::new(8);
+        for i in 0..5000u64 {
+            t2.touch(i % 3); // fits
+        }
+        assert!(t2.pressure() < 0.05, "hit pressure {}", t2.pressure());
+    }
+
+    #[test]
+    fn dense_avx512_demands_l2() {
+        let fp = FreqParams::default();
+        let b = Block { mix: ClassMix::of(InsnClass::Avx512Heavy, 1000), mem_ops: 0, branches: 0, license_exempt: false };
+        assert_eq!(license_demand(&fp, &b, 1000.0), License::L2);
+    }
+
+    #[test]
+    fn dense_avx2_heavy_demands_l1() {
+        let fp = FreqParams::default();
+        let b = Block { mix: ClassMix::of(InsnClass::Avx2Heavy, 1000), mem_ops: 0, branches: 0, license_exempt: false };
+        assert_eq!(license_demand(&fp, &b, 1000.0), License::L1);
+    }
+
+    #[test]
+    fn sparse_wide_ops_stay_l0() {
+        // memcpy-style: a few wide moves inside lots of scalar code must not
+        // drop the frequency (paper §3.3: memcpy should not trigger).
+        let fp = FreqParams::default();
+        let b = Block {
+            mix: ClassMix::scalar(10_000).with(InsnClass::Avx512Light, 50),
+            mem_ops: 0,
+            branches: 0, license_exempt: false,
+        };
+        let cycles = 5000.0;
+        assert_eq!(license_demand(&fp, &b, cycles), License::L0);
+    }
+
+    #[test]
+    fn mixed_dense_categories_escalate() {
+        let fp = FreqParams::default();
+        // Not enough L2 density alone, but a dense mixed stream → L2.
+        let b = Block {
+            mix: ClassMix::of(InsnClass::Avx512Heavy, 600).with(InsnClass::Avx512Light, 900),
+            mem_ops: 0,
+            branches: 0, license_exempt: false,
+        };
+        let cycles = 1000.0;
+        assert_eq!(license_demand(&fp, &b, cycles), License::L2);
+    }
+
+    #[test]
+    fn idle_demands_l0() {
+        let fp = FreqParams::default();
+        let b = scalar_block(0);
+        assert_eq!(license_demand(&fp, &b, 0.0), License::L0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Skylake-SP core model: power-license frequency state machine, turbo
+//! frequency tables, IPC model with code-footprint effects, and PMU
+//! counters.
+//!
+//! This is the hardware substrate the paper's evaluation runs on (an Intel
+//! Xeon Gold 6130). Every mechanism implemented here is taken from the
+//! paper's §2 analysis and the documents it cites (Intel SDM §15.26, the
+//! Xeon Scalable specification update):
+//!
+//! * three per-core frequency levels (licenses L0/L1/L2),
+//! * license *demand* determined by the density of heavy AVX2 / AVX-512
+//!   instructions per cycle,
+//! * a throttled transition phase of up to 500 µs while the PCU grants a
+//!   new license (Fig 1),
+//! * ~2 ms hysteresis before reverting to a higher-frequency level,
+//! * `CORE_POWER.LVL{0,1,2}_TURBO_LICENSE` / `CORE_POWER.THROTTLE` PMU
+//!   counter semantics defined directly by this state machine.
+
+pub mod turbo;
+pub mod freq;
+pub mod ipc;
+pub mod perf;
+pub mod core;
+pub mod topology;
+
+pub use core::{Core, SliceOutcome};
+pub use freq::{FreqParams, License, LicenseState};
+pub use perf::PerfCounters;
+pub use topology::Topology;
+pub use turbo::TurboTable;

@@ -1,0 +1,195 @@
+//! PMU counter model.
+//!
+//! The paper's identification workflow (§3.3) and frequency evaluation
+//! (§4.1) are built on four Skylake-SP core events plus the fixed
+//! counters; all of them fall directly out of the license state machine:
+//!
+//! * `CORE_POWER.LVL0_TURBO_LICENSE` — cycles at license L0,
+//! * `CORE_POWER.LVL1_TURBO_LICENSE` — cycles at L1,
+//! * `CORE_POWER.LVL2_TURBO_LICENSE` — cycles at L2,
+//! * `CORE_POWER.THROTTLE` — cycles with reduced performance while a
+//!   power-license request is pending.
+
+use super::freq::License;
+use crate::sim::Time;
+
+/// Per-core counter file. All cycle counts are in core cycles; `*_ns`
+/// integrals are wall-clock nanoseconds used for average-frequency
+/// reporting (paper Fig 6 measures average frequency, not cycles).
+#[derive(Clone, Debug, Default)]
+pub struct PerfCounters {
+    pub instructions: u64,
+    pub cycles: u64,
+    pub branches: u64,
+    pub mispredicts: u64,
+    pub mem_stall_cycles: u64,
+    /// CORE_POWER.LVLn_TURBO_LICENSE.
+    pub license_cycles: [u64; 3],
+    /// CORE_POWER.THROTTLE.
+    pub throttle_cycles: u64,
+    /// Busy wall-clock time at each license level.
+    pub license_ns: [Time; 3],
+    /// Busy wall-clock time total / idle time.
+    pub busy_ns: Time,
+    pub idle_ns: Time,
+    /// ∫ frequency·dt over busy time (GHz·ns) — for average frequency.
+    pub freq_integral: f64,
+    /// License requests and actual frequency switches.
+    pub license_requests: u64,
+    pub freq_switches: u64,
+    /// PLL stall time.
+    pub stall_ns: Time,
+}
+
+impl PerfCounters {
+    /// Record one executed slice.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_slice(
+        &mut self,
+        license: License,
+        throttled: bool,
+        cycles: f64,
+        ns: Time,
+        ghz: f64,
+        insns: u64,
+        branches: u64,
+        mispredicts: f64,
+        mem_stall_cycles: f64,
+    ) {
+        let cyc = cycles.round() as u64;
+        self.instructions += insns;
+        self.cycles += cyc;
+        self.branches += branches;
+        self.mispredicts += mispredicts.round() as u64;
+        self.mem_stall_cycles += mem_stall_cycles.round() as u64;
+        self.license_cycles[license.index()] += cyc;
+        if throttled {
+            self.throttle_cycles += cyc;
+        }
+        self.license_ns[license.index()] += ns;
+        self.busy_ns += ns;
+        self.freq_integral += ghz * ns as f64;
+    }
+
+    pub fn record_idle(&mut self, ns: Time) {
+        self.idle_ns += ns;
+    }
+
+    pub fn record_stall(&mut self, ns: Time) {
+        self.stall_ns += ns;
+        self.busy_ns += ns;
+    }
+
+    /// Average busy frequency in GHz (Fig 6 metric). Idle time excluded,
+    /// matching how the paper measures "average frequency of the cores
+    /// executing the web server".
+    pub fn avg_busy_ghz(&self) -> f64 {
+        if self.busy_ns == 0 {
+            return 0.0;
+        }
+        self.freq_integral / self.busy_ns as f64
+    }
+
+    /// Instructions per cycle (§4.2 metric).
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.instructions as f64 / self.cycles as f64
+        }
+    }
+
+    /// Fraction of cycles spent throttled.
+    pub fn throttle_ratio(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.throttle_cycles as f64 / self.cycles as f64
+        }
+    }
+
+    /// Fraction of busy time spent at each license level.
+    pub fn license_time_share(&self) -> [f64; 3] {
+        let total: Time = self.license_ns.iter().sum();
+        if total == 0 {
+            return [0.0; 3];
+        }
+        [
+            self.license_ns[0] as f64 / total as f64,
+            self.license_ns[1] as f64 / total as f64,
+            self.license_ns[2] as f64 / total as f64,
+        ]
+    }
+
+    pub fn merge(&mut self, o: &PerfCounters) {
+        self.instructions += o.instructions;
+        self.cycles += o.cycles;
+        self.branches += o.branches;
+        self.mispredicts += o.mispredicts;
+        self.mem_stall_cycles += o.mem_stall_cycles;
+        for i in 0..3 {
+            self.license_cycles[i] += o.license_cycles[i];
+            self.license_ns[i] += o.license_ns[i];
+        }
+        self.throttle_cycles += o.throttle_cycles;
+        self.busy_ns += o.busy_ns;
+        self.idle_ns += o.idle_ns;
+        self.freq_integral += o.freq_integral;
+        self.license_requests += o.license_requests;
+        self.freq_switches += o.freq_switches;
+        self.stall_ns += o.stall_ns;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_frequency_weighted_by_time() {
+        let mut c = PerfCounters::default();
+        // 1 ms at 2.8 GHz, 1 ms at 1.9 GHz → 2.35 GHz average.
+        c.record_slice(License::L0, false, 2.8e6, 1_000_000, 2.8, 1000, 0, 0.0, 0.0);
+        c.record_slice(License::L2, false, 1.9e6, 1_000_000, 1.9, 1000, 0, 0.0, 0.0);
+        assert!((c.avg_busy_ghz() - 2.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn license_counters_accumulate() {
+        let mut c = PerfCounters::default();
+        c.record_slice(License::L1, true, 100.0, 50, 2.4, 90, 10, 1.0, 5.0);
+        assert_eq!(c.license_cycles[1], 100);
+        assert_eq!(c.throttle_cycles, 100);
+        assert_eq!(c.mispredicts, 1);
+        assert_eq!(c.license_time_share()[1], 1.0);
+    }
+
+    #[test]
+    fn ipc_ratio() {
+        let mut c = PerfCounters::default();
+        c.record_slice(License::L0, false, 500.0, 100, 2.8, 1000, 0, 0.0, 0.0);
+        assert!((c.ipc() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds_everything() {
+        let mut a = PerfCounters::default();
+        let mut b = PerfCounters::default();
+        a.record_slice(License::L0, false, 10.0, 10, 2.8, 10, 2, 1.0, 0.0);
+        b.record_slice(License::L2, true, 20.0, 20, 1.9, 20, 4, 2.0, 3.0);
+        b.record_idle(7);
+        a.merge(&b);
+        assert_eq!(a.instructions, 30);
+        assert_eq!(a.cycles, 30);
+        assert_eq!(a.throttle_cycles, 20);
+        assert_eq!(a.idle_ns, 7);
+    }
+
+    #[test]
+    fn empty_counters_safe() {
+        let c = PerfCounters::default();
+        assert_eq!(c.avg_busy_ghz(), 0.0);
+        assert_eq!(c.ipc(), 0.0);
+        assert_eq!(c.license_time_share(), [0.0; 3]);
+    }
+}

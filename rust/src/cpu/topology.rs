@@ -1,0 +1,82 @@
+//! Machine topology: physical cores, SMT threads, and the partition into
+//! server cores and load-generator cores used by the paper's evaluation
+//! (12 of 16 physical cores run nginx, 4 run wrk2).
+
+/// Topology description for a simulated machine.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub physical_cores: usize,
+    pub smt: usize,
+    /// Physical cores available to the workload under test.
+    pub server_cores: Vec<usize>,
+    /// Cores reserved for the load generator (modeled implicitly — the
+    /// client process does not consume simulated server CPU).
+    pub client_cores: Vec<usize>,
+}
+
+impl Topology {
+    /// The paper's evaluation machine: Xeon Gold 6130, 16 physical cores,
+    /// web server on cores 0..12, client on 12..16.
+    pub fn paper_webserver() -> Self {
+        Topology {
+            physical_cores: 16,
+            smt: 2,
+            server_cores: (0..12).collect(),
+            client_cores: (12..16).collect(),
+        }
+    }
+
+    /// Microbenchmark topology (§4.3): 26 threads placed on 12 physical
+    /// cores / 24 hardware threads; 4 cores idle, C-states disabled.
+    pub fn paper_microbench() -> Self {
+        Topology {
+            physical_cores: 16,
+            smt: 2,
+            server_cores: (0..12).collect(),
+            client_cores: vec![],
+        }
+    }
+
+    /// Small topology for tests.
+    pub fn small(cores: usize) -> Self {
+        Topology {
+            physical_cores: cores,
+            smt: 1,
+            server_cores: (0..cores).collect(),
+            client_cores: vec![],
+        }
+    }
+
+    pub fn n_server_cores(&self) -> usize {
+        self.server_cores.len()
+    }
+
+    /// Hardware threads available to the workload (MuQSS run queues are
+    /// per *physical core* in the paper's configuration, so scheduling
+    /// operates on physical cores; SMT contributes capacity via the IPC
+    /// model instead).
+    pub fn server_hw_threads(&self) -> usize {
+        self.server_cores.len() * self.smt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_topology_matches_evaluation_setup() {
+        let t = Topology::paper_webserver();
+        assert_eq!(t.physical_cores, 16);
+        assert_eq!(t.n_server_cores(), 12);
+        assert_eq!(t.client_cores.len(), 4);
+        assert_eq!(t.server_hw_threads(), 24);
+    }
+
+    #[test]
+    fn small_topology() {
+        let t = Topology::small(4);
+        assert_eq!(t.n_server_cores(), 4);
+        assert!(t.client_cores.is_empty());
+    }
+}

@@ -1,0 +1,122 @@
+//! Turbo frequency tables per power license.
+//!
+//! The evaluation machine is an Intel Xeon Gold 6130: 16 physical cores,
+//! all-core turbo of 2.8 GHz (license 0, "non-AVX"), 2.4 GHz (license 1,
+//! heavy AVX2 / light AVX-512) and 1.9 GHz (license 2, heavy AVX-512) —
+//! the numbers in paper §2 and §4. Real parts also scale turbo with the
+//! number of active cores; the table supports that axis because it matters
+//! for the microbenchmark (paper §4.3 disables C-states precisely to
+//! avoid single-core turbo inflating the baseline).
+
+use super::freq::License;
+
+/// GHz per (license, active-core-count) pair.
+#[derive(Clone, Debug)]
+pub struct TurboTable {
+    pub name: String,
+    /// `ghz[license][active_cores - 1]`.
+    ghz: [Vec<f64>; 3],
+}
+
+impl TurboTable {
+    /// Xeon Gold 6130 (Skylake-SP, 16C): max single-core turbo 3.7 GHz,
+    /// stepping down to the documented all-core turbos 2.8 / 2.4 / 1.9 GHz.
+    /// Steps follow the published frequency-bin table for the part.
+    pub fn xeon_gold_6130() -> Self {
+        let cores = 16;
+        // (active-core breakpoints, GHz) per the specification update:
+        // L0: 3.7 (1-2), 3.5 (3-4), 3.4 (5-8), 2.8 (9-16)
+        // L1: 3.6 (1-2), 3.4 (3-4), 3.3 (5-8), 2.4 (9-16)
+        // L2: 3.5 (1-2), 3.3 (3-4), 2.7 (5-8), 1.9 (9-16)
+        fn expand(bins: &[(usize, f64)], cores: usize) -> Vec<f64> {
+            let mut v = Vec::with_capacity(cores);
+            for n in 1..=cores {
+                let ghz = bins.iter().find(|(upto, _)| n <= *upto).map(|(_, g)| *g).unwrap();
+                v.push(ghz);
+            }
+            v
+        }
+        TurboTable {
+            name: "Xeon Gold 6130".to_string(),
+            ghz: [
+                expand(&[(2, 3.7), (4, 3.5), (8, 3.4), (16, 2.8)], cores),
+                expand(&[(2, 3.6), (4, 3.4), (8, 3.3), (16, 2.4)], cores),
+                expand(&[(2, 3.5), (4, 3.3), (8, 2.7), (16, 1.9)], cores),
+            ],
+        }
+    }
+
+    /// A flat table (no active-core scaling) — used by unit tests and by
+    /// the microbenchmark scenario where C-states are disabled, pinning
+    /// all-core turbo regardless of idle cores (paper §4.3).
+    pub fn flat(l0: f64, l1: f64, l2: f64, cores: usize) -> Self {
+        TurboTable {
+            name: "flat".to_string(),
+            ghz: [vec![l0; cores], vec![l1; cores], vec![l2; cores]],
+        }
+    }
+
+    /// All-core-turbo-only variant of the 6130 used when C-states are off.
+    pub fn xeon_gold_6130_no_cstates() -> Self {
+        Self::flat(2.8, 2.4, 1.9, 16)
+    }
+
+    pub fn cores(&self) -> usize {
+        self.ghz[0].len()
+    }
+
+    /// Frequency in GHz for a core holding `license` while `active` cores
+    /// are awake package-wide.
+    pub fn ghz(&self, license: License, active: usize) -> f64 {
+        let idx = active.clamp(1, self.cores()) - 1;
+        self.ghz[license.index()][idx]
+    }
+
+    /// Frequency in cycles per nanosecond (== GHz), convenience alias.
+    pub fn cycles_per_ns(&self, license: License, active: usize) -> f64 {
+        self.ghz(license, active)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn documented_all_core_turbos() {
+        let t = TurboTable::xeon_gold_6130();
+        assert_eq!(t.cores(), 16);
+        assert_eq!(t.ghz(License::L0, 16), 2.8);
+        assert_eq!(t.ghz(License::L1, 16), 2.4);
+        assert_eq!(t.ghz(License::L2, 16), 1.9);
+    }
+
+    #[test]
+    fn single_core_turbo_higher() {
+        let t = TurboTable::xeon_gold_6130();
+        assert!(t.ghz(License::L0, 1) > t.ghz(License::L0, 16));
+        assert_eq!(t.ghz(License::L0, 1), 3.7);
+    }
+
+    #[test]
+    fn license_monotone_at_any_active_count() {
+        let t = TurboTable::xeon_gold_6130();
+        for active in 1..=16 {
+            assert!(t.ghz(License::L0, active) >= t.ghz(License::L1, active));
+            assert!(t.ghz(License::L1, active) >= t.ghz(License::L2, active));
+        }
+    }
+
+    #[test]
+    fn active_clamped() {
+        let t = TurboTable::xeon_gold_6130();
+        assert_eq!(t.ghz(License::L0, 0), t.ghz(License::L0, 1));
+        assert_eq!(t.ghz(License::L0, 99), t.ghz(License::L0, 16));
+    }
+
+    #[test]
+    fn flat_table_ignores_active() {
+        let t = TurboTable::xeon_gold_6130_no_cstates();
+        assert_eq!(t.ghz(License::L0, 1), t.ghz(License::L0, 16));
+    }
+}

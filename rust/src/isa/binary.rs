@@ -1,0 +1,80 @@
+//! Binaries: collections of functions, the unit the static analyzer
+//! "disassembles" (paper §3.3 disassembles the application plus all
+//! dynamically linked libraries — we model each as a `Binary`).
+
+use super::function::Function;
+use std::collections::BTreeMap;
+
+/// Index of a function within a [`Binary`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FunctionId(pub usize);
+
+/// A simulated executable or shared library.
+#[derive(Clone, Debug, Default)]
+pub struct Binary {
+    pub name: String,
+    pub functions: Vec<Function>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Binary {
+    pub fn new(name: &str) -> Self {
+        Binary { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn add(&mut self, f: Function) -> FunctionId {
+        assert!(
+            !self.by_name.contains_key(&f.name),
+            "duplicate function `{}` in binary `{}`",
+            f.name,
+            self.name
+        );
+        let id = self.functions.len();
+        self.by_name.insert(f.name.clone(), id);
+        self.functions.push(f);
+        FunctionId(id)
+    }
+
+    pub fn get(&self, id: FunctionId) -> &Function {
+        &self.functions[id.0]
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<FunctionId> {
+        self.by_name.get(name).copied().map(FunctionId)
+    }
+
+    pub fn len(&self) -> usize {
+        self.functions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.functions.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (FunctionId, &Function)> {
+        self.functions.iter().enumerate().map(|(i, f)| (FunctionId(i), f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::block::{Block, ClassMix};
+
+    #[test]
+    fn add_lookup_roundtrip() {
+        let mut b = Binary::new("libcrypto.so");
+        let id = b.add(Function::new("poly1305_blocks").push(Block::new(ClassMix::scalar(10))));
+        assert_eq!(b.lookup("poly1305_blocks"), Some(id));
+        assert_eq!(b.get(id).name, "poly1305_blocks");
+        assert!(b.lookup("missing").is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_name_rejected() {
+        let mut b = Binary::new("x");
+        b.add(Function::new("f"));
+        b.add(Function::new("f"));
+    }
+}

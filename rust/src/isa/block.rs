@@ -1,0 +1,204 @@
+//! Basic blocks and instruction classes.
+
+/// Instruction classes that matter for power licensing (Intel SDM §15.26,
+/// Xeon Scalable Specification Update).
+///
+/// * `Scalar` — everything ≤128-bit including SSE4: never affects licenses.
+/// * `Avx2Light` — 256-bit loads/stores/integer: license level 0.
+/// * `Avx2Heavy` — 256-bit FP multiply/FMA: license level 1.
+/// * `Avx512Light` — 512-bit non-multiply: license level 1.
+/// * `Avx512Heavy` — 512-bit FP multiply/FMA: license level 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum InsnClass {
+    Scalar,
+    Avx2Light,
+    Avx2Heavy,
+    Avx512Light,
+    Avx512Heavy,
+}
+
+pub const N_CLASSES: usize = 5;
+
+pub const ALL_CLASSES: [InsnClass; N_CLASSES] = [
+    InsnClass::Scalar,
+    InsnClass::Avx2Light,
+    InsnClass::Avx2Heavy,
+    InsnClass::Avx512Light,
+    InsnClass::Avx512Heavy,
+];
+
+impl InsnClass {
+    pub fn index(self) -> usize {
+        match self {
+            InsnClass::Scalar => 0,
+            InsnClass::Avx2Light => 1,
+            InsnClass::Avx2Heavy => 2,
+            InsnClass::Avx512Light => 3,
+            InsnClass::Avx512Heavy => 4,
+        }
+    }
+
+    /// Does this class touch a 256-bit or wider register? (What the static
+    /// analyzer counts for the paper's AVX-instruction ratio.)
+    pub fn is_wide(self) -> bool {
+        !matches!(self, InsnClass::Scalar)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            InsnClass::Scalar => "scalar",
+            InsnClass::Avx2Light => "avx2-light",
+            InsnClass::Avx2Heavy => "avx2-heavy",
+            InsnClass::Avx512Light => "avx512-light",
+            InsnClass::Avx512Heavy => "avx512-heavy",
+        }
+    }
+}
+
+/// Per-class instruction counts of one basic block execution.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClassMix {
+    pub counts: [u64; N_CLASSES],
+}
+
+impl ClassMix {
+    pub fn scalar(n: u64) -> Self {
+        let mut m = ClassMix::default();
+        m.counts[InsnClass::Scalar.index()] = n;
+        m
+    }
+
+    pub fn of(class: InsnClass, n: u64) -> Self {
+        let mut m = ClassMix::default();
+        m.counts[class.index()] = n;
+        m
+    }
+
+    pub fn with(mut self, class: InsnClass, n: u64) -> Self {
+        self.counts[class.index()] += n;
+        self
+    }
+
+    pub fn get(&self, class: InsnClass) -> u64 {
+        self.counts[class.index()]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Instructions touching 256-bit+ registers (numerator of the paper's
+    /// static-analysis ratio).
+    pub fn wide(&self) -> u64 {
+        ALL_CLASSES.iter().filter(|c| c.is_wide()).map(|c| self.get(*c)).sum()
+    }
+
+    /// Ratio of wide-register instructions to all instructions.
+    pub fn wide_ratio(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.wide() as f64 / t as f64
+        }
+    }
+
+    pub fn add(&mut self, other: &ClassMix) {
+        for i in 0..N_CLASSES {
+            self.counts[i] += other.counts[i];
+        }
+    }
+
+    /// Scale all counts by an integer factor (loop trip counts).
+    pub fn times(mut self, k: u64) -> Self {
+        for c in self.counts.iter_mut() {
+            *c *= k;
+        }
+        self
+    }
+}
+
+/// A basic block: an instruction mix plus memory/branch metadata that the
+/// IPC model consumes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Block {
+    pub mix: ClassMix,
+    /// Memory operations (drive the stall model).
+    pub mem_ops: u64,
+    /// Branches (drive the misprediction model).
+    pub branches: u64,
+    /// True if this block's wide-instruction stream does *not* sustain the
+    /// hardware's license-trigger condition: the burst retires before the
+    /// ~100-instruction detection window closes, or dependency stalls
+    /// lower the per-cycle density (paper §2 / §3.3 — "pipeline stalls …
+    /// can cause the vector instruction frequency to be decreased enough
+    /// to prevent frequency changes"). Exempt blocks still *execute* wide
+    /// instructions (the static analyzer sees them) but never demand a
+    /// license.
+    pub license_exempt: bool,
+}
+
+impl Block {
+    pub fn new(mix: ClassMix) -> Self {
+        // Default metadata: typical integer code is ~1 branch / 6 insns and
+        // ~1 memory op / 3.5 insns; workload builders override as needed.
+        let total = mix.total();
+        Block { mix, mem_ops: total / 4, branches: total / 6, license_exempt: false }
+    }
+
+    pub fn with_mem(mut self, mem_ops: u64) -> Self {
+        self.mem_ops = mem_ops;
+        self
+    }
+
+    pub fn with_branches(mut self, branches: u64) -> Self {
+        self.branches = branches;
+        self
+    }
+
+    pub fn insns(&self) -> u64 {
+        self.mix.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_indices_unique() {
+        let mut seen = [false; N_CLASSES];
+        for c in ALL_CLASSES {
+            assert!(!seen[c.index()]);
+            seen[c.index()] = true;
+        }
+    }
+
+    #[test]
+    fn wide_ratio() {
+        let m = ClassMix::scalar(900).with(InsnClass::Avx512Heavy, 100);
+        assert_eq!(m.total(), 1000);
+        assert_eq!(m.wide(), 100);
+        assert!((m.wide_ratio() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_mix_ratio_zero() {
+        assert_eq!(ClassMix::default().wide_ratio(), 0.0);
+    }
+
+    #[test]
+    fn times_scales() {
+        let m = ClassMix::scalar(10).with(InsnClass::Avx2Heavy, 5).times(3);
+        assert_eq!(m.get(InsnClass::Scalar), 30);
+        assert_eq!(m.get(InsnClass::Avx2Heavy), 15);
+    }
+
+    #[test]
+    fn block_defaults() {
+        let b = Block::new(ClassMix::scalar(600));
+        assert_eq!(b.branches, 100);
+        assert_eq!(b.mem_ops, 150);
+        assert_eq!(b.insns(), 600);
+    }
+}

@@ -1,0 +1,69 @@
+//! Functions: named sequences of basic blocks with static call edges.
+//!
+//! Function granularity is what the paper's tooling operates on: the
+//! static analyzer ranks *functions* by AVX ratio, and the flame graph
+//! attributes THROTTLE cycles to *call stacks* of functions.
+
+use super::block::{Block, ClassMix};
+
+/// A named function in a simulated binary.
+#[derive(Clone, Debug, Default)]
+pub struct Function {
+    pub name: String,
+    pub blocks: Vec<Block>,
+    /// Static call sites (indices into the owning binary), used by the
+    /// analyzer to print call-graph context.
+    pub callees: Vec<usize>,
+}
+
+impl Function {
+    pub fn new(name: &str) -> Self {
+        Function { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn push(mut self, block: Block) -> Self {
+        self.blocks.push(block);
+        self
+    }
+
+    /// Aggregate instruction mix over all blocks (static view: each block
+    /// counted once — trip counts are a dynamic property).
+    pub fn static_mix(&self) -> ClassMix {
+        let mut m = ClassMix::default();
+        for b in &self.blocks {
+            m.add(&b.mix);
+        }
+        m
+    }
+
+    /// The paper's §3.3 metric: instructions accessing 256/512-bit
+    /// registers over total instructions.
+    pub fn avx_ratio(&self) -> f64 {
+        self.static_mix().wide_ratio()
+    }
+
+    pub fn insns(&self) -> u64 {
+        self.static_mix().total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::block::InsnClass;
+
+    #[test]
+    fn static_mix_aggregates() {
+        let f = Function::new("chacha20_avx512")
+            .push(Block::new(ClassMix::scalar(50)))
+            .push(Block::new(ClassMix::of(InsnClass::Avx512Heavy, 200).with(InsnClass::Scalar, 50)));
+        assert_eq!(f.insns(), 300);
+        assert!((f.avx_ratio() - 200.0 / 300.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar_function_zero_ratio() {
+        let f = Function::new("ngx_http_process_request").push(Block::new(ClassMix::scalar(1000)));
+        assert_eq!(f.avx_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Instruction-block IR — the "machine code" of the simulated CPU.
+//!
+//! The paper's effect is driven entirely by the *instruction class mix* a
+//! core executes (density of heavy AVX2 / AVX-512 operations per cycle),
+//! not by the semantics of individual instructions. The IR therefore
+//! models code as basic blocks annotated with per-class instruction
+//! counts, grouped into named functions and binaries. The same IR feeds
+//! three consumers:
+//!
+//! * the core model executes blocks (cycles from the IPC model, license
+//!   demand from the class densities),
+//! * the static analyzer ([`crate::analysis::static_analysis`]) computes
+//!   the paper's AVX-ratio report over functions,
+//! * the flame-graph sampler attributes PMU counter cycles to call stacks.
+
+pub mod block;
+pub mod function;
+pub mod binary;
+
+pub use binary::{Binary, FunctionId};
+pub use block::{Block, ClassMix, InsnClass};
+pub use function::Function;

@@ -1,0 +1,32 @@
+//! `avxfreq` — reproduction of *Mechanism to Mitigate AVX-Induced Frequency
+//! Reduction* (Gottschlag & Bellosa, 2018).
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`util`] — deterministic RNG, statistics, histograms, CLI/config parsing.
+//! * [`sim`] — discrete-event simulation engine (nanosecond clock).
+//! * [`isa`] — instruction-block IR: the "machine code" the simulated CPU runs.
+//! * [`cpu`] — Skylake-SP core model: AVX power-license state machine, turbo
+//!   tables, IPC model, PMU counters.
+//! * [`sched`] — MuQSS baseline scheduler + the paper's core-specialization
+//!   extension, plus baselines and the fault-and-migrate future-work feature.
+//! * [`workload`] — nginx-like web server, wrk2-like client, crypto cost
+//!   profiles, Fig-7 microbenchmark.
+//! * [`analysis`] — static AVX-ratio analysis, THROTTLE flame graphs, LBR.
+//! * [`runtime`] — PJRT client executing the AOT ChaCha20-Poly1305 kernels.
+//! * [`metrics`] — run-level reporting.
+//! * [`repro`] — one runner per paper figure/table.
+//! * [`testkit`] — in-repo property-testing support (offline substitute for
+//!   proptest).
+
+pub mod util;
+pub mod sim;
+pub mod isa;
+pub mod cpu;
+pub mod sched;
+pub mod workload;
+pub mod analysis;
+pub mod runtime;
+pub mod metrics;
+pub mod repro;
+pub mod testkit;

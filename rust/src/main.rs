@@ -1,0 +1,201 @@
+//! `avxfreq` CLI — leader entrypoint for the reproduction.
+//!
+//! Subcommands:
+//!
+//! * `repro [<fig>|all] [--quick] [--seed N]` — regenerate a paper
+//!   figure/table (fig1, fig2, fig3, fig5, fig6, ipc, fig7, cryptobench,
+//!   ablations); writes CSVs under `results/`.
+//! * `analyze [--isa <sse4|avx2|avx512>] [--min-ratio R]` — §3.3 static
+//!   analysis report over the simulated nginx/OpenSSL binaries.
+//! * `flamegraph [--isa ...] [--counter throttle|cycles] [--out f.svg]` —
+//!   §3.3 THROTTLE flame graph from a web-server run.
+//! * `sim [--isa ...] [--policy ...] [--avx-cores K] ...` — one
+//!   web-server simulation with full reports.
+//! * `serve [--artifacts DIR] [--port P]` — real TLS-record server using
+//!   the AOT PJRT ChaCha20-Poly1305 kernels (see `runtime`).
+//! * `calibrate [--artifacts DIR]` — execute the AOT kernels and compare
+//!   measured width-scaling against the simulator's crypto profiles.
+
+use avxfreq::analysis::{flamegraph, static_analysis};
+use avxfreq::metrics;
+use avxfreq::repro;
+use avxfreq::sched::PolicyKind;
+use avxfreq::sim::{MS, SEC};
+use avxfreq::util::args::Args;
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::{build_binaries, run_webserver_machine, WebCfg};
+
+fn parse_isa(s: &str) -> Isa {
+    match s {
+        "sse4" => Isa::Sse4,
+        "avx2" => Isa::Avx2,
+        "avx512" => Isa::Avx512,
+        other => panic!("unknown --isa {other} (sse4|avx2|avx512)"),
+    }
+}
+
+fn parse_policy(args: &Args) -> PolicyKind {
+    let avx_cores = args.get_parse::<usize>("avx-cores", 2);
+    match args.get_or("policy", "corespec") {
+        "unmodified" => PolicyKind::Unmodified,
+        "corespec" => PolicyKind::CoreSpec { avx_cores },
+        "strict" => PolicyKind::StrictPartition { avx_cores },
+        other => panic!("unknown --policy {other} (unmodified|corespec|strict)"),
+    }
+}
+
+const USAGE: &str = "\
+avxfreq — reproduction of 'Mechanism to Mitigate AVX-Induced Frequency Reduction'
+usage:
+  avxfreq repro [<experiment>|all] [--quick] [--seed N]
+  avxfreq analyze [--isa sse4|avx2|avx512] [--min-ratio R]
+  avxfreq flamegraph [--isa ...] [--counter throttle|cycles] [--out file.svg]
+  avxfreq sim [--config file.toml] [--isa ...] [--adaptive]
+              [--policy unmodified|corespec|strict] [--avx-cores K]
+              [--rate R] [--no-compress] [--fault-migrate] [--seconds S] [--seed N]
+  avxfreq serve [--artifacts DIR] [--port 8443]
+  avxfreq calibrate [--artifacts DIR]
+experiments: fig1 fig2 fig3 fig5 fig6 ipc fig7 cryptobench ablations";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("repro") => cmd_repro(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("flamegraph") => cmd_flamegraph(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("serve") => avxfreq::runtime::server::cmd_serve(&args),
+        Some("calibrate") => avxfreq::runtime::calibrate::cmd_calibrate(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+    let quick = args.flag("quick");
+    let seed = args.get_parse::<u64>("seed", 0x5EED);
+    let which = args.rest().first().map(|s| s.as_str()).unwrap_or("all");
+    // Multi-seed statistics for the headline figure.
+    if which == "fig5" {
+        let n_seeds = args.get_parse::<usize>("seeds", 1);
+        if n_seeds > 1 {
+            let r = avxfreq::repro::fig5_throughput::run_multi(quick, seed, n_seeds);
+            print!("{}", r.render());
+            r.save_csvs()?;
+            return Ok(());
+        }
+    }
+    let ids: Vec<&str> = if which == "all" { repro::ALL.to_vec() } else { vec![which] };
+    for id in ids {
+        eprintln!("[avxfreq] running {id}{}…", if quick { " (quick)" } else { "" });
+        let r = repro::run(id, quick, seed)?;
+        print!("{}", r.render());
+        r.save_csvs()?;
+        println!();
+    }
+    println!("CSV output written to results/");
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let isa = parse_isa(args.get_or("isa", "avx512"));
+    let min_ratio = args.get_parse::<f64>("min-ratio", 0.3);
+    let bins = build_binaries(isa);
+    let rows = static_analysis::analyze(&bins);
+    print!("{}", static_analysis::report_table(&rows).render());
+    println!("\ncandidates for annotation (ratio ≥ {min_ratio}):");
+    for c in static_analysis::candidates(&rows, min_ratio) {
+        println!("  {} ({}) — ratio {:.2}", c.function, c.binary, c.avx_ratio);
+    }
+    Ok(())
+}
+
+fn cmd_flamegraph(args: &Args) -> anyhow::Result<()> {
+    let isa = parse_isa(args.get_or("isa", "avx512"));
+    let counter = match args.get_or("counter", "throttle") {
+        "throttle" => flamegraph::Counter::Throttle,
+        "cycles" => flamegraph::Counter::Cycles,
+        other => panic!("unknown --counter {other}"),
+    };
+    let out_path = args.get_or("out", "results/flamegraph.svg").to_string();
+
+    let mut cfg = WebCfg::paper_default(isa, PolicyKind::Unmodified);
+    cfg.track_flame = true;
+    cfg.warmup = 300 * MS;
+    cfg.measure = SEC;
+    eprintln!("[avxfreq] running instrumented web-server simulation…");
+    let (_run, m) = run_webserver_machine(&cfg);
+
+    // The planner interns stacks deterministically; rebuild the same table.
+    let stacks = avxfreq::workload::webserver::stack_table_for(isa);
+    let rows = flamegraph::fold(&m.flame, &stacks, counter);
+    println!("{}", flamegraph::folded_text(&rows));
+    if let Some(dir) = std::path::Path::new(&out_path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let title = format!(
+        "CORE_POWER.{} flame graph — nginx/{}",
+        if counter == flamegraph::Counter::Throttle { "THROTTLE" } else { "cycles" },
+        isa.name()
+    );
+    std::fs::write(&out_path, flamegraph::render_svg(&rows, &title))?;
+    eprintln!("[avxfreq] wrote {out_path}");
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        let conf = avxfreq::util::config::Config::load(path)?;
+        WebCfg::from_config(&conf)?
+    } else {
+        let isa = parse_isa(args.get_or("isa", "avx512"));
+        let policy = parse_policy(args);
+        WebCfg::paper_default(isa, policy)
+    };
+    if args.get("seed").is_some() || args.get("config").is_none() {
+        cfg.seed = args.get_parse::<u64>("seed", 0x5EED);
+    }
+    if args.flag("no-compress") {
+        cfg.compress = false;
+    }
+    if args.flag("fault-migrate") {
+        cfg.fault_migrate = true;
+        cfg.annotate = false;
+    }
+    if args.flag("adaptive") {
+        cfg.adaptive = Some(Default::default());
+    }
+    if let Some(rate) = args.get("rate") {
+        cfg.mode = avxfreq::workload::client::LoadMode::Open { rate: rate.parse()? };
+    }
+    if args.get("seconds").is_some() {
+        cfg.measure = args.get_parse::<u64>("seconds", 4) * SEC;
+    }
+    let secs = cfg.measure / SEC;
+
+    eprintln!("[avxfreq] simulating {}…", cfg.isa.name());
+    let (run, m) = run_webserver_machine(&cfg);
+    println!("== Run summary ==");
+    println!("config:            {}", run.cfg_name);
+    println!("throughput:        {:.0} req/s", run.throughput_rps);
+    println!("latency p50/p99:   {:.0} µs / {:.0} µs", run.p50_us, run.p99_us);
+    println!("avg busy freq:     {:.3} GHz", run.avg_ghz);
+    println!("IPC:               {:.3}", run.ipc);
+    println!("type changes:      {:.0}/s", run.type_changes_per_sec);
+    println!("migrations:        {:.0}/s", run.migrations_per_sec);
+    if run.adaptive_changes > 0 || cfg.adaptive.is_some() {
+        println!(
+            "adaptive:          final {} AVX cores after {} resizes",
+            run.final_avx_cores, run.adaptive_changes
+        );
+    }
+    println!();
+    print!("{}", metrics::core_report(&m).render());
+    println!();
+    print!("{}", metrics::sched_report(&m, secs as f64).render());
+    println!();
+    print!("{}", metrics::perf_report(&m.total_perf()).render());
+    Ok(())
+}

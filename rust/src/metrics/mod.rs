@@ -1,0 +1,94 @@
+//! Run-level reporting: turn machine counters and workload results into
+//! the tables the repro harness prints and saves.
+
+use crate::cpu::PerfCounters;
+use crate::sched::machine::Machine;
+use crate::util::table::{fmt_f, Table};
+
+/// Per-core frequency/licensing breakdown of a finished run (Fig 6's
+/// underlying data).
+pub fn core_report(m: &Machine) -> Table {
+    let mut t = Table::new(
+        "Per-core frequency & license residency",
+        &["core", "avg GHz", "busy %", "L0 %", "L1 %", "L2 %", "throttle %", "requests"],
+    );
+    for c in &m.cores {
+        let p = &c.perf;
+        let total_ns = (p.busy_ns + p.idle_ns).max(1);
+        let share = p.license_time_share();
+        t.row(&[
+            c.id.to_string(),
+            fmt_f(p.avg_busy_ghz(), 3),
+            fmt_f(p.busy_ns as f64 / total_ns as f64 * 100.0, 1),
+            fmt_f(share[0] * 100.0, 1),
+            fmt_f(share[1] * 100.0, 1),
+            fmt_f(share[2] * 100.0, 1),
+            fmt_f(p.throttle_ratio() * 100.0, 2),
+            p.license_requests.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Scheduler activity summary.
+pub fn sched_report(m: &Machine, secs: f64) -> Table {
+    let s = &m.sched.stats;
+    let mut t = Table::new("Scheduler activity", &["metric", "total", "per second"]);
+    for (name, v) in [
+        ("picks", s.picks),
+        ("steals", s.steals),
+        ("migrations", s.migrations),
+        ("type changes", s.type_changes),
+        ("forced suspends", s.forced_suspends),
+        ("IPIs", s.ipis),
+        ("preemptions", s.preemptions),
+    ] {
+        t.row(&[name.to_string(), v.to_string(), fmt_f(v as f64 / secs, 1)]);
+    }
+    t
+}
+
+/// Machine-wide PMU summary.
+pub fn perf_report(total: &PerfCounters) -> Table {
+    let mut t = Table::new("Aggregate PMU counters", &["counter", "value"]);
+    let rows: Vec<(&str, String)> = vec![
+        ("instructions", total.instructions.to_string()),
+        ("cycles", total.cycles.to_string()),
+        ("IPC", fmt_f(total.ipc(), 3)),
+        ("branches", total.branches.to_string()),
+        ("mispredicts", total.mispredicts.to_string()),
+        (
+            "mispredict rate",
+            fmt_f(total.mispredicts as f64 / total.branches.max(1) as f64 * 100.0, 2),
+        ),
+        ("CORE_POWER.LVL0_TURBO_LICENSE", total.license_cycles[0].to_string()),
+        ("CORE_POWER.LVL1_TURBO_LICENSE", total.license_cycles[1].to_string()),
+        ("CORE_POWER.LVL2_TURBO_LICENSE", total.license_cycles[2].to_string()),
+        ("CORE_POWER.THROTTLE", total.throttle_cycles.to_string()),
+        ("avg busy GHz", fmt_f(total.avg_busy_ghz(), 3)),
+        ("license requests", total.license_requests.to_string()),
+        ("frequency switches", total.freq_switches.to_string()),
+    ];
+    for (k, v) in rows {
+        t.row(&[k.to_string(), v]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::machine::MachineParams;
+    use crate::sched::PolicyKind;
+
+    #[test]
+    fn reports_render_for_fresh_machine() {
+        let m = Machine::new(MachineParams::new(2, PolicyKind::Unmodified));
+        let t = core_report(&m);
+        assert_eq!(t.rows.len(), 2);
+        let s = sched_report(&m, 1.0);
+        assert!(s.render().contains("migrations"));
+        let p = perf_report(&m.total_perf());
+        assert!(p.render().contains("CORE_POWER.THROTTLE"));
+    }
+}

@@ -1,0 +1,106 @@
+//! Crypto microbenchmark (the "microbenchmark" group of Fig 2, and the
+//! Cloudflare-style isolated throughput numbers from §1): all cores
+//! continuously seal 16 KiB records; throughput in GB/s per ISA.
+
+use super::Repro;
+use crate::cpu::turbo::TurboTable;
+use crate::sched::machine::{Action, Machine, MachineParams, NullDriver, TaskBody};
+use crate::sched::{PolicyKind, TaskType};
+use crate::sim::{Time, MS, SEC};
+use crate::util::table::{fmt_f, Table};
+use crate::util::Rng;
+use crate::workload::crypto::{CryptoProfile, Isa};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+struct SealLoop {
+    profile: CryptoProfile,
+    rng: Rng,
+    queue: Vec<Action>,
+    bytes_done: Rc<RefCell<u64>>,
+}
+
+impl TaskBody for SealLoop {
+    fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+        if let Some(a) = self.queue.pop() {
+            return a;
+        }
+        const RECORD: usize = 16 * 1024;
+        *self.bytes_done.borrow_mut() += RECORD as u64;
+        let mut blocks = self.profile.record_blocks(RECORD, &mut self.rng);
+        blocks.reverse(); // popped back-to-front
+        self.queue = blocks
+            .into_iter()
+            .map(|(sym, block)| Action::Run {
+                block,
+                func: sym.as_ptr() as u64,
+                stack: 0,
+            })
+            .collect();
+        self.queue.pop().unwrap()
+    }
+}
+
+/// Measured throughput for one ISA.
+pub fn throughput_gbps(isa: Isa, quick: bool, seed: u64) -> f64 {
+    let cores = 12;
+    let mut mp = MachineParams::new(cores, PolicyKind::Unmodified);
+    mp.turbo = TurboTable::xeon_gold_6130_no_cstates();
+    mp.seed = seed;
+    let mut m = Machine::new(mp);
+    let bytes = Rc::new(RefCell::new(0u64));
+    let mut rng = Rng::new(seed);
+    for _ in 0..cores {
+        m.spawn(
+            TaskType::Untyped,
+            0,
+            Box::new(SealLoop {
+                profile: CryptoProfile::for_isa(isa),
+                rng: rng.fork(),
+                queue: Vec::new(),
+                bytes_done: bytes.clone(),
+            }),
+        );
+    }
+    let window = if quick { 300 * MS } else { SEC };
+    m.run_until(window / 5, &mut NullDriver);
+    let before = *bytes.borrow();
+    m.run_until(window / 5 + window, &mut NullDriver);
+    let done = *bytes.borrow() - before;
+    done as f64 / (window as f64 / SEC as f64) / 1e9
+}
+
+pub fn run(quick: bool, seed: u64) -> Repro {
+    let mut t = Table::new(
+        "Crypto microbenchmark — ChaCha20-Poly1305 sealing, 12 cores (GB/s)",
+        &["isa", "GB/s", "vs SSE4"],
+    );
+    let sse = throughput_gbps(Isa::Sse4, quick, seed);
+    let mut notes = Vec::new();
+    for isa in Isa::all() {
+        let g = if isa == Isa::Sse4 { sse } else { throughput_gbps(isa, quick, seed) };
+        t.row(&[isa.name().to_string(), fmt_f(g, 2), format!("{:.2}x", g / sse)]);
+    }
+    notes.push(
+        "paper/Cloudflare reference: AVX-512 ≈ 2.9 GB/s vs AVX2 ≈ 1.6 GB/s in isolation; \
+         shape target is AVX-512 > AVX2 > SSE4 despite the frequency drop"
+            .to_string(),
+    );
+    Repro { id: "cryptobench", tables: vec![t], notes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avx512_fastest_in_isolation() {
+        let sse = throughput_gbps(Isa::Sse4, true, 1);
+        let avx2 = throughput_gbps(Isa::Avx2, true, 1);
+        let avx512 = throughput_gbps(Isa::Avx512, true, 1);
+        assert!(
+            avx512 > avx2 && avx2 > sse,
+            "microbench ordering: sse={sse:.2} avx2={avx2:.2} avx512={avx512:.2}"
+        );
+    }
+}

@@ -1,0 +1,142 @@
+//! Fig 1: frequency-level timeline of a core that temporarily executes
+//! 512-bit FMA instructions — detection, throttled request phase, grant,
+//! and the ~2 ms delayed return to full frequency.
+
+use super::Repro;
+use crate::cpu::freq::FreqParams;
+use crate::cpu::ipc::IpcParams;
+use crate::cpu::turbo::TurboTable;
+use crate::cpu::Core;
+use crate::isa::block::{Block, ClassMix, InsnClass};
+use crate::sim::{Time, MS, US};
+use crate::util::table::{fmt_f, Table};
+
+/// Phase labels matching the figure.
+fn phase(throttled: bool, lic: crate::cpu::License) -> &'static str {
+    if throttled {
+        "throttled (license request pending)"
+    } else {
+        match lic {
+            crate::cpu::License::L0 => "full turbo (L0)",
+            crate::cpu::License::L1 => "AVX2/512-light turbo (L1)",
+            crate::cpu::License::L2 => "AVX-512-heavy turbo (L2)",
+        }
+    }
+}
+
+pub fn run() -> Repro {
+    let turbo = TurboTable::xeon_gold_6130_no_cstates();
+    let mut core = Core::new(0, FreqParams::default(), IpcParams::default());
+
+    // 1 ms scalar, 0.8 ms of 512-bit FMA, then scalar until recovery.
+    let scalar = Block { mix: ClassMix::scalar(20_000), mem_ops: 0, branches: 300, license_exempt: false };
+    let fma = Block { mix: ClassMix::of(InsnClass::Avx512Heavy, 20_000), mem_ops: 0, branches: 100, license_exempt: false };
+
+    let mut t: Time = 0;
+    let mut series: Vec<(Time, f64, &'static str)> = Vec::new();
+    let segment =
+        |core: &mut Core, block: &Block, until: Time, t: &mut Time, series: &mut Vec<_>| {
+            while *t < until {
+                let out = core.run_block(*t, block, 1, 16, &turbo);
+                let throttled = out.throttle_cycles > 0.0;
+                // "Effective GHz" folds the reduced-dispatch phase into an
+                // equivalent frequency for the plot (Fig 1's dip).
+                let eff_ghz = if throttled {
+                    out.ghz * core.license.params().throttle_ipc_factor
+                } else {
+                    out.ghz
+                };
+                series.push((*t, eff_ghz, phase(throttled, out.license)));
+                *t += out.ns;
+            }
+        };
+    segment(&mut core, &scalar, MS, &mut t, &mut series);
+    let avx_until = t + 800 * US;
+    segment(&mut core, &fma, avx_until, &mut t, &mut series);
+    segment(&mut core, &scalar, t + 6 * MS, &mut t, &mut series);
+
+    // Compress the series into phase segments.
+    let mut table = Table::new(
+        "Fig 1 — license transition timeline (Skylake-SP core, 512-bit FMA burst)",
+        &["t_start", "t_end", "effective GHz", "phase"],
+    );
+    let mut notes = Vec::new();
+    let mut seg_start = series[0].0;
+    let mut cur = series[0].2;
+    let mut cur_ghz = series[0].1;
+    let mut throttle_ns: Time = 0;
+    let mut l2_scalar_ns: Time = 0;
+    let mut in_scalar_tail = false;
+    for w in series.windows(2) {
+        let (t0, _ghz, ph) = w[0];
+        let (t1, _, ph1) = w[1];
+        if ph == "throttled (license request pending)" {
+            throttle_ns += t1 - t0;
+        }
+        if t0 >= avx_until {
+            in_scalar_tail = true;
+        }
+        if in_scalar_tail && ph == "AVX-512-heavy turbo (L2)" {
+            l2_scalar_ns += t1 - t0;
+        }
+        if ph1 != cur {
+            table.row(&[
+                crate::sim::fmt_time(seg_start),
+                crate::sim::fmt_time(t1),
+                fmt_f(cur_ghz, 2),
+                cur.to_string(),
+            ]);
+            seg_start = t1;
+            cur = ph1;
+            cur_ghz = w[1].1;
+        }
+    }
+    table.row(&[
+        crate::sim::fmt_time(seg_start),
+        crate::sim::fmt_time(t),
+        fmt_f(cur_ghz, 2),
+        cur.to_string(),
+    ]);
+
+    notes.push(format!(
+        "throttled request phase lasted {} (paper/SDM: up to 500 µs)",
+        crate::sim::fmt_time(throttle_ns)
+    ));
+    notes.push(format!(
+        "scalar code after the AVX burst ran at the L2 frequency for {} (paper: ~2 ms hold)",
+        crate::sim::fmt_time(l2_scalar_ns)
+    ));
+
+    Repro { id: "fig1", tables: vec![table], notes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_has_all_phases() {
+        let r = run();
+        let text = r.render();
+        assert!(text.contains("full turbo (L0)"));
+        assert!(text.contains("throttled"));
+        assert!(text.contains("AVX-512-heavy turbo (L2)"));
+    }
+
+    #[test]
+    fn scalar_tail_holds_l2_about_two_ms() {
+        let r = run();
+        let note = r.notes.iter().find(|n| n.contains("hold")).unwrap();
+        // The note embeds the measured duration; parse the ms value.
+        let ms: f64 = note
+            .split("ran at the L2 frequency for ")
+            .nth(1)
+            .unwrap()
+            .split("ms")
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!((1.6..2.6).contains(&ms), "L2 tail {ms}ms");
+    }
+}

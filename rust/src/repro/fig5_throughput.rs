@@ -1,0 +1,168 @@
+//! Fig 5: nginx throughput with OpenSSL compiled for SSE4/AVX2/AVX-512,
+//! unmodified scheduler vs core specialization (2 of 12 cores AVX).
+//!
+//! Paper numbers: unmodified −4.2% (AVX2) and −11.2% (AVX-512) vs SSE4;
+//! with core specialization −1.1% and −3.2% — reductions of 74% / 71%.
+
+use super::Repro;
+use crate::sched::PolicyKind;
+use crate::sim::{MS, SEC};
+use crate::util::stats::pct_change;
+use crate::util::table::{fmt_f, Table};
+use crate::workload::crypto::Isa;
+use crate::workload::webserver::{run_webserver, WebCfg, WebRun};
+
+pub const PAPER_DROP_UNMOD: [f64; 3] = [0.0, -4.2, -11.2];
+pub const PAPER_DROP_SPEC: [f64; 3] = [0.0, -1.1, -3.2];
+
+/// The six runs of the figure. Exposed for fig6/ipc reuse.
+pub fn run_grid(quick: bool, seed: u64) -> Vec<(Isa, &'static str, WebRun)> {
+    let mut out = Vec::new();
+    for isa in Isa::all() {
+        for (label, policy) in [
+            ("unmodified", PolicyKind::Unmodified),
+            ("core-spec", PolicyKind::CoreSpec { avx_cores: 2 }),
+        ] {
+            let mut cfg = WebCfg::paper_default(isa, policy);
+            cfg.seed = seed;
+            if quick {
+                cfg.warmup = 300 * MS;
+                cfg.measure = SEC;
+            }
+            out.push((isa, label, run_webserver(&cfg)));
+        }
+    }
+    out
+}
+
+pub fn run(quick: bool, seed: u64) -> Repro {
+    let grid = run_grid(quick, seed);
+    let base = grid
+        .iter()
+        .find(|(isa, label, _)| *isa == Isa::Sse4 && *label == "unmodified")
+        .map(|(_, _, r)| r.throughput_rps)
+        .unwrap();
+
+    let mut t = Table::new(
+        "Fig 5 — nginx HTTPS throughput (compressed page), 12 cores, 2 AVX cores",
+        &["isa", "scheduler", "req/s", "vs SSE4 unmod", "paper", "type-chg/s"],
+    );
+    let mut notes = Vec::new();
+    for (isa, label, r) in &grid {
+        let drop = pct_change(base, r.throughput_rps);
+        let paper = match (isa, *label) {
+            (Isa::Sse4, "unmodified") => 0.0,
+            (Isa::Avx2, "unmodified") => PAPER_DROP_UNMOD[1],
+            (Isa::Avx512, "unmodified") => PAPER_DROP_UNMOD[2],
+            (Isa::Sse4, _) => 0.0,
+            (Isa::Avx2, _) => PAPER_DROP_SPEC[1],
+            (Isa::Avx512, _) => PAPER_DROP_SPEC[2],
+        };
+        t.row(&[
+            isa.name().to_string(),
+            label.to_string(),
+            fmt_f(r.throughput_rps, 0),
+            format!("{drop:+.1}%"),
+            format!("{paper:+.1}%"),
+            fmt_f(r.type_changes_per_sec, 0),
+        ]);
+    }
+
+    // Headline: variability reduction.
+    let get = |isa: Isa, label: &str| {
+        grid.iter()
+            .find(|(i, l, _)| *i == isa && *l == label)
+            .map(|(_, _, r)| r.throughput_rps)
+            .unwrap()
+    };
+    for isa in [Isa::Avx2, Isa::Avx512] {
+        let d_unmod = pct_change(base, get(isa, "unmodified"));
+        let d_spec = pct_change(get(Isa::Sse4, "core-spec"), get(isa, "core-spec"));
+        let reduction = if d_unmod < 0.0 { (1.0 - d_spec / d_unmod) * 100.0 } else { 0.0 };
+        notes.push(format!(
+            "{}: drop {:.1}% → {:.1}% with core specialization ({:.0}% reduction; paper: 74%/71%)",
+            isa.name(),
+            d_unmod,
+            d_spec,
+            reduction
+        ));
+    }
+    notes.push(format!(
+        "webserver type-change reference rate in the paper: 55 000/s; ours: {:.0}/s",
+        grid.iter()
+            .find(|(i, l, _)| *i == Isa::Avx512 && *l == "core-spec")
+            .map(|(_, _, r)| r.type_changes_per_sec)
+            .unwrap()
+    ));
+    Repro { id: "fig5", tables: vec![t], notes }
+}
+
+/// Multi-seed variant: repeats the grid over `n_seeds` seeds and reports
+/// mean ± 95% CI of the throughput drops (`avxfreq repro fig5 --seeds N`).
+pub fn run_multi(quick: bool, base_seed: u64, n_seeds: usize) -> Repro {
+    use crate::util::Summary;
+    let mut drops: std::collections::BTreeMap<(&str, &str), Summary> = Default::default();
+    for i in 0..n_seeds {
+        let grid = run_grid(quick, base_seed.wrapping_add(i as u64 * 0x9E37));
+        let base = grid
+            .iter()
+            .find(|(isa, label, _)| *isa == Isa::Sse4 && *label == "unmodified")
+            .map(|(_, _, r)| r.throughput_rps)
+            .unwrap();
+        for (isa, label, r) in &grid {
+            drops
+                .entry((isa.name(), label))
+                .or_insert_with(Summary::new)
+                .add(pct_change(base, r.throughput_rps));
+        }
+    }
+    let mut t = Table::new(
+        &format!("Fig 5 — throughput drop vs SSE4/unmodified, {n_seeds} seeds (mean ± 95% CI)"),
+        &["isa", "scheduler", "drop %", "95% CI", "paper"],
+    );
+    for ((isa, label), s) in &drops {
+        let paper = match (*isa, *label) {
+            ("avx2", "unmodified") => PAPER_DROP_UNMOD[1],
+            ("avx512", "unmodified") => PAPER_DROP_UNMOD[2],
+            ("avx2", "core-spec") => PAPER_DROP_SPEC[1],
+            ("avx512", "core-spec") => PAPER_DROP_SPEC[2],
+            _ => 0.0,
+        };
+        t.row(&[
+            isa.to_string(),
+            label.to_string(),
+            format!("{:+.2}", s.mean()),
+            format!("±{:.2}", s.ci95()),
+            format!("{paper:+.1}"),
+        ]);
+    }
+    let notes = vec![format!(
+        "seeds {base_seed:#x}+k·0x9E37, k<{n_seeds}; CI from the normal approximation"
+    )];
+    Repro { id: "fig5_seeds", tables: vec![t], notes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[ignore = "multi-second simulation; run with --ignored or via `avxfreq repro fig5`"]
+    fn shape_matches_paper() {
+        let grid = run_grid(true, 11);
+        let get = |isa: Isa, label: &str| {
+            grid.iter()
+                .find(|(i, l, _)| *i == isa && *l == label)
+                .map(|(_, _, r)| r.throughput_rps)
+                .unwrap()
+        };
+        let base = get(Isa::Sse4, "unmodified");
+        let avx512_unmod = pct_change(base, get(Isa::Avx512, "unmodified"));
+        let avx512_spec = pct_change(get(Isa::Sse4, "core-spec"), get(Isa::Avx512, "core-spec"));
+        assert!(avx512_unmod < -5.0, "AVX-512 must hurt unmodified: {avx512_unmod:.1}%");
+        assert!(
+            avx512_spec > avx512_unmod * 0.6,
+            "core-spec must recover most of the drop: {avx512_spec:.1}% vs {avx512_unmod:.1}%"
+        );
+    }
+}

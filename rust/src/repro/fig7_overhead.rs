@@ -1,0 +1,49 @@
+//! Fig 7: thread-migration overhead microbenchmark — overhead (%) vs
+//! task-type changes per second, and the derived cost per switch pair.
+//!
+//! Paper: overhead scales with the change rate, 400–500 ns per
+//! AVX↔scalar pair, <3% at 100 000 changes/s; the web server performs
+//! ~55 000 changes/s.
+
+use super::Repro;
+use crate::util::table::{fmt_f, Table};
+use crate::workload::microbench::overhead_point;
+
+/// Loop lengths swept (instructions per iteration). An iteration is one
+/// switch pair, so shorter loops → higher change rates.
+pub fn sweep_lengths(quick: bool) -> Vec<u64> {
+    if quick {
+        vec![4_000_000, 1_000_000, 250_000, 60_000]
+    } else {
+        vec![8_000_000, 4_000_000, 2_000_000, 1_000_000, 500_000, 250_000, 120_000, 60_000, 30_000]
+    }
+}
+
+pub fn run(quick: bool) -> Repro {
+    let mut t = Table::new(
+        "Fig 7 — core-specialization overhead vs task-type-change rate (26 threads / 12 cores)",
+        &["loop insns", "type changes/s", "overhead %", "ns per switch pair"],
+    );
+    let mut notes = Vec::new();
+    let mut pair_costs = Vec::new();
+    for len in sweep_lengths(quick) {
+        let p = overhead_point(len);
+        if p.type_changes_per_sec > 0.0 && p.overhead_pct > 0.0 {
+            pair_costs.push(p.ns_per_switch_pair);
+        }
+        t.row(&[
+            len.to_string(),
+            fmt_f(p.type_changes_per_sec, 0),
+            fmt_f(p.overhead_pct, 2),
+            fmt_f(p.ns_per_switch_pair, 0),
+        ]);
+    }
+    if !pair_costs.is_empty() {
+        let mean = pair_costs.iter().sum::<f64>() / pair_costs.len() as f64;
+        notes.push(format!(
+            "mean cost per AVX↔scalar switch pair: {mean:.0} ns (paper: 400–500 ns)"
+        ));
+    }
+    notes.push("paper reference: <3% overhead at 100 000 type changes/s".to_string());
+    Repro { id: "fig7", tables: vec![t], notes }
+}

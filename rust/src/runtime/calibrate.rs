@@ -1,0 +1,97 @@
+//! `avxfreq calibrate` — execute the AOT kernels and compare the measured
+//! width-scaling against the simulator's per-ISA crypto cost profiles.
+//!
+//! Interpret-mode Pallas on a CPU PJRT backend gives no meaningful
+//! absolute throughput, but the *relative* cost of the lane widths is
+//! structural (fewer grid steps, wider vector ops per step) and is what
+//! the simulator's `CryptoProfile` encodes. The command reports both and
+//! their ratio so drift between the cost model and the real kernels is
+//! visible.
+
+use super::executor::{CryptoExecutor, Width};
+use crate::cpu::ipc::{cost_block, IpcParams};
+use crate::util::args::Args;
+use crate::util::table::{fmt_f, Table};
+use crate::util::Rng;
+use crate::workload::crypto::{CryptoProfile, Isa};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Measured + modeled cost for one width.
+#[derive(Clone, Debug)]
+pub struct CalPoint {
+    pub width: Width,
+    pub measured_us_per_record: f64,
+    pub model_cycles_per_byte: f64,
+}
+
+pub fn measure(ex: &CryptoExecutor, width: Width, records: usize) -> Result<f64> {
+    let key: [u32; 8] = [0xAB; 8];
+    let nonce = [1u32, 2, 3];
+    let msg: Vec<u32> = (0..ex.record_words as u32).collect();
+    // Warmup (compilation already done at load; touch caches).
+    ex.seal(width, &key, &nonce, &msg)?;
+    let start = Instant::now();
+    for i in 0..records {
+        let n = [nonce[0] + i as u32, nonce[1], nonce[2]];
+        ex.seal(width, &key, &n, &msg)?;
+    }
+    Ok(start.elapsed().as_micros() as f64 / records as f64)
+}
+
+pub fn model_cpb(isa: Isa) -> f64 {
+    let p = CryptoProfile::for_isa(isa);
+    let ipc = IpcParams::default();
+    let mut rng = Rng::new(1);
+    let bytes = 16384;
+    let records = 32;
+    let mut cycles = 0.0;
+    for _ in 0..records {
+        for (_, b) in p.record_blocks(bytes, &mut rng) {
+            cycles += cost_block(&ipc, &b, 0.0).cycles;
+        }
+    }
+    cycles / (bytes * records) as f64
+}
+
+pub fn calibrate(artifacts: &str, records: usize) -> Result<Vec<CalPoint>> {
+    let ex = CryptoExecutor::load(artifacts)?;
+    let mut out = Vec::new();
+    for (w, isa) in [(Width::W4, Isa::Sse4), (Width::W8, Isa::Avx2), (Width::W16, Isa::Avx512)] {
+        out.push(CalPoint {
+            width: w,
+            measured_us_per_record: measure(&ex, w, records)?,
+            model_cycles_per_byte: model_cpb(isa),
+        });
+    }
+    Ok(out)
+}
+
+pub fn cmd_calibrate(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let records = args.get_parse::<usize>("records", 16);
+    eprintln!("[calibrate] loading + compiling artifacts from {artifacts}…");
+    let points = calibrate(artifacts, records)?;
+    let base = &points[0];
+    let mut t = Table::new(
+        "AOT kernel calibration — measured (PJRT, interpret-lowered) vs simulator cost model",
+        &["width", "stands for", "µs/record (measured)", "speedup vs w4", "model cpb", "model speedup"],
+    );
+    for p in &points {
+        t.row(&[
+            format!("w{}", p.width.lanes()),
+            p.width.isa_name().to_string(),
+            fmt_f(p.measured_us_per_record, 1),
+            format!("{:.2}x", base.measured_us_per_record / p.measured_us_per_record),
+            fmt_f(p.model_cycles_per_byte, 3),
+            format!("{:.2}x", base.model_cycles_per_byte / p.model_cycles_per_byte),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nnote: absolute µs are CPU-interpret numbers, not TPU/x86 crypto speed; the\n\
+         comparison target is the *shape* — wider lanes amortize per-step overhead the\n\
+         way wider SIMD amortizes per-instruction work (DESIGN.md §Hardware-Adaptation)."
+    );
+    Ok(())
+}

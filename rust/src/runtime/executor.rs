@@ -1,0 +1,194 @@
+//! PJRT executor: loads `artifacts/chacha_w{4,8,16}.hlo.txt` and executes
+//! the AOT ChaCha20-Poly1305 seal on the request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. One compiled executable per SIMD
+//! width variant; the loader reads `manifest.txt` for the record size.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// SIMD-width variant (the paper's ISA axis, as lane batch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Width {
+    W4,
+    W8,
+    W16,
+}
+
+impl Width {
+    pub fn lanes(self) -> usize {
+        match self {
+            Width::W4 => 4,
+            Width::W8 => 8,
+            Width::W16 => 16,
+        }
+    }
+
+    pub fn all() -> [Width; 3] {
+        [Width::W4, Width::W8, Width::W16]
+    }
+
+    /// The ISA each lane width stands in for.
+    pub fn isa_name(self) -> &'static str {
+        match self {
+            Width::W4 => "sse4",
+            Width::W8 => "avx2",
+            Width::W16 => "avx512",
+        }
+    }
+}
+
+/// A sealed record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sealed {
+    pub ct_words: Vec<u32>,
+    pub tag: [u32; 4],
+}
+
+/// PJRT client + one compiled executable per width.
+pub struct CryptoExecutor {
+    client: xla::PjRtClient,
+    exes: BTreeMap<Width, xla::PjRtLoadedExecutable>,
+    pub record_words: usize,
+}
+
+impl CryptoExecutor {
+    /// Load all width variants from an artifacts directory.
+    pub fn load(dir: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let manifest = std::fs::read_to_string(Path::new(dir).join("manifest.txt"))
+            .with_context(|| format!("read {dir}/manifest.txt — run `make artifacts` first"))?;
+        let record_words = manifest
+            .lines()
+            .find_map(|l| l.strip_prefix("record_words="))
+            .context("manifest missing record_words")?
+            .parse::<usize>()?;
+        let mut exes = BTreeMap::new();
+        for w in Width::all() {
+            let path = Path::new(dir).join(format!("chacha_w{}.hlo.txt", w.lanes()));
+            let path_str = path.to_str().unwrap();
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .with_context(|| format!("parse HLO text {path_str}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {path_str}"))?;
+            exes.insert(w, exe);
+        }
+        Ok(CryptoExecutor { client, exes, record_words })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Seal one record (`msg_words.len() == record_words`) with the given
+    /// width variant. Executes the AOT HLO on the PJRT CPU device.
+    pub fn seal(&self, width: Width, key: &[u32; 8], nonce: &[u32; 3], msg_words: &[u32]) -> Result<Sealed> {
+        anyhow::ensure!(
+            msg_words.len() == self.record_words,
+            "record must be exactly {} words, got {}",
+            self.record_words,
+            msg_words.len()
+        );
+        let key_l = xla::Literal::vec1(key.as_slice());
+        let nonce_l = xla::Literal::vec1(nonce.as_slice());
+        let msg_l = xla::Literal::vec1(msg_words);
+        let exe = &self.exes[&width];
+        let result = exe.execute::<xla::Literal>(&[key_l, nonce_l, msg_l])?[0][0]
+            .to_literal_sync()?;
+        let (ct_l, tag_l) = result.to_tuple2()?;
+        let ct_words = ct_l.to_vec::<u32>()?;
+        let tag_vec = tag_l.to_vec::<u32>()?;
+        anyhow::ensure!(tag_vec.len() == 4, "tag must be 4 words");
+        Ok(Sealed { ct_words, tag: [tag_vec[0], tag_vec[1], tag_vec[2], tag_vec[3]] })
+    }
+
+    /// Seal an arbitrary byte payload: chunk into records (zero-padded
+    /// final record), one nonce per record derived from `nonce_base` by
+    /// incrementing word 0. Returns per-record seals plus original length.
+    pub fn seal_bytes(
+        &self,
+        width: Width,
+        key: &[u32; 8],
+        nonce_base: &[u32; 3],
+        payload: &[u8],
+    ) -> Result<(Vec<Sealed>, usize)> {
+        let record_bytes = self.record_words * 4;
+        let mut out = Vec::new();
+        let mut i = 0usize;
+        let mut rec = 0u32;
+        while i < payload.len() || (payload.is_empty() && rec == 0) {
+            let end = (i + record_bytes).min(payload.len());
+            let mut words = vec![0u32; self.record_words];
+            for (wi, chunk) in payload[i..end].chunks(4).enumerate() {
+                let mut b = [0u8; 4];
+                b[..chunk.len()].copy_from_slice(chunk);
+                words[wi] = u32::from_le_bytes(b);
+            }
+            let nonce = [nonce_base[0].wrapping_add(rec), nonce_base[1], nonce_base[2]];
+            out.push(self.seal(width, key, &nonce, &words)?);
+            i = end;
+            rec += 1;
+            if payload.is_empty() {
+                break;
+            }
+        }
+        Ok((out, payload.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::aead;
+
+    fn artifacts_dir() -> Option<String> {
+        let dir = std::env::var("AVXFREQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        std::path::Path::new(&dir).join("manifest.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    #[ignore = "compiles the HLO modules (~minutes); covered by tests/runtime_roundtrip.rs"]
+    fn pjrt_seal_matches_rust_reference() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let ex = CryptoExecutor::load(&dir).expect("load artifacts");
+        let key: [u32; 8] = core::array::from_fn(|i| (i as u32 + 1) * 0x01010101);
+        let nonce = [7u32, 0xABCD, 42];
+        let msg: Vec<u32> = (0..ex.record_words as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let (want_ct, want_tag) = aead::seal_record(&key, &nonce, &msg);
+        for w in Width::all() {
+            let sealed = ex.seal(w, &key, &nonce, &msg).expect("seal");
+            assert_eq!(sealed.ct_words, want_ct, "{w:?} ciphertext mismatch");
+            assert_eq!(sealed.tag, want_tag, "{w:?} tag mismatch");
+        }
+    }
+
+    #[test]
+    #[ignore = "compiles the HLO modules (~minutes); covered by tests/runtime_roundtrip.rs"]
+    fn seal_bytes_chunks_and_roundtrips() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let ex = CryptoExecutor::load(&dir).expect("load");
+        let key: [u32; 8] = [9; 8];
+        let nonce = [1u32, 2, 3];
+        let payload: Vec<u8> = (0..20_000u32).map(|i| (i % 251) as u8).collect();
+        let (records, len) = ex.seal_bytes(Width::W16, &key, &nonce, &payload).unwrap();
+        assert_eq!(len, payload.len());
+        assert_eq!(records.len(), 2, "20 kB → two 16 KiB records");
+        // Decrypt with the rust reference and compare.
+        let mut plain = Vec::new();
+        for (i, r) in records.iter().enumerate() {
+            let n = [nonce[0] + i as u32, nonce[1], nonce[2]];
+            let pt = aead::open_record(&key, &n, &r.ct_words, &r.tag).expect("verify");
+            plain.extend_from_slice(&aead::words_to_bytes(&pt));
+        }
+        assert_eq!(&plain[..len], &payload[..]);
+    }
+}

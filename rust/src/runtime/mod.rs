@@ -1,0 +1,21 @@
+//! Runtime: loads the AOT-compiled ChaCha20-Poly1305 HLO artifacts and
+//! executes them via the PJRT C API (`xla` crate) — Python never runs on
+//! the request path.
+//!
+//! * [`aead`] — pure-Rust ChaCha20-Poly1305 used to *verify* every PJRT
+//!   result in tests and as the client-side of the example server.
+//! * [`executor`] — PJRT client wrapper: one compiled executable per
+//!   SIMD-width variant (`chacha_w{4,8,16}.hlo.txt`).
+//! * [`server`] — `avxfreq serve`: a threaded TLS-record-style server
+//!   whose crypto path runs the PJRT executables, with the paper's
+//!   core-specialization pattern applied at user level (crypto confined
+//!   to a dedicated worker pool pinned to the last cores).
+//! * [`calibrate`] — measures per-width sealing cost and compares the
+//!   width-scaling shape against the simulator's crypto profiles.
+
+pub mod aead;
+pub mod executor;
+pub mod server;
+pub mod calibrate;
+
+pub use executor::{CryptoExecutor, Width};

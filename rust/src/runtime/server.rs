@@ -1,0 +1,272 @@
+//! `avxfreq serve` — a real record-encrypting server on the PJRT crypto
+//! path, demonstrating the paper's pattern at user level.
+//!
+//! Architecture (the "rearchitected application" §1/§5 contrasts with the
+//! scheduler approach): scalar work (accept, framing, compression via
+//! flate2) runs on the *scalar* worker pool; all AEAD sealing is confined
+//! to a dedicated *crypto* pool pinned (via `sched_setaffinity`) to the
+//! last cores — the user-space analog of AVX cores. `--no-specialize`
+//! runs crypto inline on the scalar workers for comparison.
+//!
+//! Protocol (length-prefixed, little-endian):
+//!   request:  u32 page_bytes (the "file" size to serve)
+//!   response: u32 n_records · u64 payload_len · per record:
+//!             record_words·4 bytes ciphertext · 16 bytes tag
+//! The payload is a deterministic pseudo-HTML page, deflate-compressed
+//! on the fly, then sealed record-by-record (16 KiB records).
+
+use super::executor::{CryptoExecutor, Width};
+use crate::util::args::Args;
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Pin the calling thread to one core (best-effort; ignored on failure).
+pub fn pin_to_core(core: usize) {
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(core % num_cpus(), &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+    }
+}
+
+pub fn num_cpus() -> usize {
+    unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN).max(1) as usize }
+}
+
+/// Deterministic pseudo-HTML page of the requested size.
+pub fn synth_page(bytes: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(bytes);
+    let para = b"<p>The quick brown fox jumps over the lazy dog; AVX-512 drops the clock.</p>\n";
+    while out.len() < bytes {
+        let take = para.len().min(bytes - out.len());
+        out.extend_from_slice(&para[..take]);
+    }
+    out
+}
+
+/// Deflate-compress (the brotli stand-in available offline).
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    use flate2::write::DeflateEncoder;
+    use flate2::Compression;
+    let mut enc = DeflateEncoder::new(Vec::new(), Compression::new(4));
+    enc.write_all(data).unwrap();
+    enc.finish().unwrap()
+}
+
+struct SealJob {
+    payload: Vec<u8>,
+    reply: mpsc::Sender<Result<(Vec<super::executor::Sealed>, usize)>>,
+}
+
+/// Stats shared across connections.
+#[derive(Default)]
+pub struct ServeStats {
+    pub requests: AtomicU64,
+    pub records: AtomicU64,
+    pub bytes_sealed: AtomicU64,
+}
+
+/// Run the server until `max_requests` (0 = forever). Returns the bound port.
+#[allow(clippy::too_many_arguments)]
+pub fn serve(
+    artifacts: &str,
+    port: u16,
+    width: Width,
+    crypto_threads: usize,
+    specialize: bool,
+    max_requests: u64,
+    stats: Arc<ServeStats>,
+) -> Result<u16> {
+    serve_with_port_callback(
+        artifacts,
+        port,
+        width,
+        crypto_threads,
+        specialize,
+        max_requests,
+        stats,
+        |_| {},
+    )
+}
+
+/// Like [`serve`] but reports the bound port through `on_bound` before
+/// accepting — lets callers bind port 0 and connect from another thread.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_with_port_callback(
+    artifacts: &str,
+    port: u16,
+    width: Width,
+    crypto_threads: usize,
+    specialize: bool,
+    max_requests: u64,
+    stats: Arc<ServeStats>,
+    on_bound: impl FnOnce(u16),
+) -> Result<u16> {
+    let listener = TcpListener::bind(("127.0.0.1", port)).context("bind")?;
+    let bound = listener.local_addr()?.port();
+    on_bound(bound);
+
+    // Crypto pool: the user-space AVX cores. The `xla` crate's PJRT
+    // handles are not Send, so every crypto worker owns its *own* client
+    // and compiled executables (loaded from the same artifacts).
+    let (tx, rx) = mpsc::channel::<SealJob>();
+    let rx = Arc::new(std::sync::Mutex::new(rx));
+    let inline_ex = if specialize {
+        for i in 0..crypto_threads {
+            let rx = rx.clone();
+            let ncpu = num_cpus();
+            let artifacts = artifacts.to_string();
+            std::thread::spawn(move || {
+                // Last cores = AVX cores, mirroring the paper's §4 setup.
+                pin_to_core(ncpu - 1 - (i % crypto_threads.max(1)));
+                let ex = match CryptoExecutor::load(&artifacts) {
+                    Ok(ex) => ex,
+                    Err(e) => {
+                        eprintln!("[serve] crypto worker {i}: {e:#}");
+                        return;
+                    }
+                };
+                let key: [u32; 8] =
+                    core::array::from_fn(|k| 0x2400_0001u32.wrapping_mul(k as u32 + 1));
+                loop {
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(j) => j,
+                        Err(_) => return,
+                    };
+                    let nonce = [0u32, 0xC0DE, 0xF00D];
+                    let res = ex.seal_bytes(width, &key, &nonce, &job.payload);
+                    let _ = job.reply.send(res);
+                }
+            });
+        }
+        None
+    } else {
+        Some(CryptoExecutor::load(artifacts)?)
+    };
+    eprintln!(
+        "[serve] width {:?} ({}) | crypto: {} | 127.0.0.1:{bound}",
+        width,
+        width.isa_name(),
+        if specialize {
+            format!("{crypto_threads} pinned workers")
+        } else {
+            "inline (no specialization)".to_string()
+        },
+    );
+
+    let mut served = 0u64;
+    for stream in listener.incoming() {
+        let mut stream = stream?;
+        handle_conn(&mut stream, &tx, inline_ex.as_ref(), width, &stats)?;
+        served += 1;
+        if max_requests > 0 && served >= max_requests {
+            break;
+        }
+    }
+    Ok(bound)
+}
+
+fn handle_conn(
+    stream: &mut TcpStream,
+    tx: &mpsc::Sender<SealJob>,
+    inline_ex: Option<&CryptoExecutor>,
+    width: Width,
+    stats: &ServeStats,
+) -> Result<()> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let page_bytes = u32::from_le_bytes(len_buf) as usize;
+    anyhow::ensure!(page_bytes <= 16 << 20, "page too large");
+
+    // Scalar phase: build + compress the page.
+    let page = synth_page(page_bytes);
+    let compressed = compress(&page);
+
+    // Crypto phase: sealed on the crypto pool (specialized) or inline.
+    let (records, payload_len) = match inline_ex {
+        None => {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            tx.send(SealJob { payload: compressed, reply: reply_tx })
+                .map_err(|_| anyhow::anyhow!("crypto pool gone"))?;
+            reply_rx.recv()??
+        }
+        Some(ex) => {
+            let key: [u32; 8] =
+                core::array::from_fn(|k| 0x2400_0001u32.wrapping_mul(k as u32 + 1));
+            let nonce = [0u32, 0xC0DE, 0xF00D];
+            ex.seal_bytes(width, &key, &nonce, &compressed)?
+        }
+    };
+
+    stats.requests.fetch_add(1, Ordering::Relaxed);
+    stats.records.fetch_add(records.len() as u64, Ordering::Relaxed);
+    stats.bytes_sealed.fetch_add(payload_len as u64, Ordering::Relaxed);
+
+    stream.write_all(&(records.len() as u32).to_le_bytes())?;
+    stream.write_all(&(payload_len as u64).to_le_bytes())?;
+    for r in &records {
+        stream.write_all(&super::aead::words_to_bytes(&r.ct_words))?;
+        for t in r.tag {
+            stream.write_all(&t.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// CLI entry point.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let port = args.get_parse::<u16>("port", 8443);
+    let width = match args.get_or("width", "16") {
+        "4" => Width::W4,
+        "8" => Width::W8,
+        _ => Width::W16,
+    };
+    let crypto_threads = args.get_parse::<usize>("crypto-threads", 2);
+    let specialize = !args.flag("no-specialize");
+    let max_requests = args.get_parse::<u64>("max-requests", 0);
+    let stats = Arc::new(ServeStats::default());
+    serve(artifacts, port, width, crypto_threads, specialize, max_requests, stats.clone())?;
+    eprintln!(
+        "[serve] done: {} requests, {} records, {} bytes sealed",
+        stats.requests.load(Ordering::Relaxed),
+        stats.records.load(Ordering::Relaxed),
+        stats.bytes_sealed.load(Ordering::Relaxed)
+    );
+    Ok(())
+}
+
+/// Simple client for tests/examples: request a page, verify every record
+/// with the rust reference AEAD, return the decrypted payload.
+pub fn fetch(addr: &str, page_bytes: u32) -> Result<Vec<u8>> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(&page_bytes.to_le_bytes())?;
+    let mut hdr = [0u8; 4];
+    stream.read_exact(&mut hdr)?;
+    let n_records = u32::from_le_bytes(hdr) as usize;
+    let mut len8 = [0u8; 8];
+    stream.read_exact(&mut len8)?;
+    let payload_len = u64::from_le_bytes(len8) as usize;
+
+    let key: [u32; 8] = core::array::from_fn(|k| 0x2400_0001u32.wrapping_mul(k as u32 + 1));
+    let mut plain = Vec::new();
+    let record_words = 4096; // RECORD_WORDS (manifest-checked server side)
+    for i in 0..n_records {
+        let mut ct = vec![0u8; record_words * 4];
+        stream.read_exact(&mut ct)?;
+        let mut tag = [0u8; 16];
+        stream.read_exact(&mut tag)?;
+        let ct_words = super::aead::bytes_to_words(&ct);
+        let tag_words: [u32; 4] =
+            super::aead::bytes_to_words(&tag).try_into().expect("tag size");
+        let nonce = [i as u32, 0xC0DE, 0xF00D];
+        let pt = super::aead::open_record(&key, &nonce, &ct_words, &tag_words)
+            .context("record failed authentication")?;
+        plain.extend_from_slice(&super::aead::words_to_bytes(&pt));
+    }
+    plain.truncate(payload_len);
+    Ok(plain)
+}

@@ -1,0 +1,245 @@
+//! Dynamic AVX-core allocation (§3.1) and adaptive enablement (§4.3).
+//!
+//! §3.1: *"The system therefore allocates as many AVX cores as required
+//! for the AVX tasks in the system or more."* The prototype in the paper
+//! fixes the count; this controller sizes it online from the measured
+//! utilization of the current AVX cores, with hysteresis so the set is
+//! stable on the 100 ms scale (re-partitioning is cheap — eligibility is
+//! evaluated at pick time — but each change perturbs task placement).
+//!
+//! §4.3: *"policies have to be adaptive to be viable for widespread use.
+//! We expect that a good policy has to estimate the impact of core
+//! specialization on performance and, depending on the outcome, has to
+//! choose whether to use core specialization or not."* The controller
+//! implements the first-order estimate: if the AVX work share is too
+//! small to justify even one dedicated core (mechanism overhead exceeds
+//! the frequency tax it prevents), it returns the allocation to the
+//! minimum and the penalty scheme makes the AVX core behave almost like
+//! a normal core.
+
+use super::machine::Machine;
+use super::policy::PolicyKind;
+use crate::sim::Time;
+
+/// Controller parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveParams {
+    /// Re-evaluation period.
+    pub interval: Time,
+    /// Bounds on the AVX-core count.
+    pub min_avx: usize,
+    pub max_avx: usize,
+    /// Target utilization of the AVX-core set by *AVX-typed work*: the
+    /// set is sized so AVX demand fills this fraction of it (headroom
+    /// keeps queueing delay low; backfilled scalar time does not count).
+    pub target_util: f64,
+}
+
+impl Default for AdaptiveParams {
+    fn default() -> Self {
+        AdaptiveParams {
+            interval: 50 * crate::sim::MS,
+            min_avx: 1,
+            max_avx: 4,
+            target_util: 0.55,
+        }
+    }
+}
+
+/// Online controller; owns the AVX-time baseline between ticks.
+#[derive(Debug)]
+pub struct Controller {
+    pub params: AdaptiveParams,
+    last_avx_ns: Vec<Time>,
+    last_tick: Time,
+    /// Pending resize proposal (must repeat once before applying —
+    /// debounces measurement noise at window boundaries).
+    proposal: Option<usize>,
+    /// Decisions made (for reporting).
+    pub grows: u64,
+    pub shrinks: u64,
+}
+
+impl Controller {
+    pub fn new(params: AdaptiveParams, n_cores: usize) -> Self {
+        Controller {
+            params,
+            last_avx_ns: vec![0; n_cores],
+            last_tick: 0,
+            proposal: None,
+            grows: 0,
+            shrinks: 0,
+        }
+    }
+
+    /// Current AVX-core count of the machine's policy (0 when the policy
+    /// has no specialization).
+    pub fn current_k(m: &Machine) -> usize {
+        m.sched.policy.avx_core_count()
+    }
+
+    /// Evaluate and, if warranted, resize the AVX-core set. Returns the
+    /// (possibly unchanged) count. Call from a periodic driver event.
+    ///
+    /// Sizing rule (§3.1 "as many AVX cores as required … or more"): the
+    /// measured AVX demand over the last window, divided by the target
+    /// per-core utilization, rounded up. A proposal must hold for two
+    /// consecutive windows before it is applied.
+    pub fn tick(&mut self, m: &mut Machine) -> usize {
+        let n = m.n_cores();
+        let k = match m.sched.policy {
+            PolicyKind::CoreSpec { avx_cores } => avx_cores,
+            // Controller only manages the paper's policy.
+            _ => return 0,
+        };
+        let now = m.now();
+        let window = now.saturating_sub(self.last_tick).max(1);
+        self.last_tick = now;
+
+        // Total AVX-typed execution time over the last window (counters
+        // may have been reset at the measurement-window start).
+        let mut avx_ns: Time = 0;
+        for c in 0..n {
+            let cur = m.avx_task_ns[c];
+            let delta = if cur >= self.last_avx_ns[c] { cur - self.last_avx_ns[c] } else { cur };
+            avx_ns += delta;
+            self.last_avx_ns[c] = cur;
+        }
+        let demand_cores = avx_ns as f64 / window as f64 / self.params.target_util;
+        let want = (demand_cores.ceil() as usize)
+            .clamp(self.params.min_avx, self.params.max_avx.min(n - 1));
+
+        let new_k = if want != k {
+            if self.proposal == Some(want) {
+                // Confirmed over two windows: apply.
+                self.proposal = None;
+                if want > k {
+                    self.grows += 1;
+                } else {
+                    self.shrinks += 1;
+                }
+                m.sched.policy = PolicyKind::CoreSpec { avx_cores: want };
+                want
+            } else {
+                self.proposal = Some(want);
+                k
+            }
+        } else {
+            self.proposal = None;
+            k
+        };
+        new_k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::block::{Block, ClassMix, InsnClass};
+    use crate::sched::machine::{Action, MachineParams, NullDriver, TaskBody};
+    use crate::sched::TaskType;
+    use crate::sim::SEC;
+    use crate::util::Rng;
+
+    /// Body with a configurable AVX duty cycle.
+    struct Duty {
+        avx_pct: u64,
+        i: u64,
+        phase: u8,
+    }
+    impl TaskBody for Duty {
+        fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+            self.i += 1;
+            let avx_turn = self.i % 100 < self.avx_pct;
+            match (self.phase, avx_turn) {
+                (0, true) => {
+                    self.phase = 1;
+                    Action::SetType(TaskType::Avx)
+                }
+                (1, _) => {
+                    self.phase = 2;
+                    Action::Run {
+                        block: Block {
+                            mix: ClassMix::of(InsnClass::Avx512Heavy, 50_000),
+                            mem_ops: 0,
+                            branches: 100,
+                            license_exempt: false,
+                        },
+                        func: 1,
+                        stack: 0,
+                    }
+                }
+                (2, _) => {
+                    self.phase = 0;
+                    Action::SetType(TaskType::Scalar)
+                }
+                _ => Action::Run {
+                    block: Block {
+                        mix: ClassMix::scalar(50_000),
+                        mem_ops: 0,
+                        branches: 100,
+                        license_exempt: false,
+                    },
+                    func: 2,
+                    stack: 0,
+                },
+            }
+        }
+    }
+
+    fn run_with_duty(avx_pct: u64, start_k: usize) -> (usize, Controller) {
+        let mut p = MachineParams::new(8, PolicyKind::CoreSpec { avx_cores: start_k });
+        p.seed = 1;
+        let mut m = crate::sched::machine::Machine::new(p);
+        for _ in 0..12 {
+            m.spawn(TaskType::Scalar, 0, Box::new(Duty { avx_pct, i: 0, phase: 0 }));
+        }
+        let mut ctl = Controller::new(AdaptiveParams::default(), 8);
+        let mut t = 0;
+        let mut k = start_k;
+        while t < 2 * SEC {
+            t += ctl.params.interval;
+            m.run_until(t, &mut NullDriver);
+            k = ctl.tick(&mut m);
+        }
+        (k, ctl)
+    }
+
+    #[test]
+    fn grows_under_avx_heavy_load() {
+        let (k, ctl) = run_with_duty(60, 1);
+        assert!(k >= 2, "controller should grow the AVX set, got {k}");
+        assert!(ctl.grows > 0);
+    }
+
+    #[test]
+    fn shrinks_when_avx_share_is_tiny() {
+        let (k, ctl) = run_with_duty(1, 4);
+        assert_eq!(k, 1, "controller should shrink to the minimum");
+        assert!(ctl.shrinks > 0);
+    }
+
+    #[test]
+    fn stable_in_the_hysteresis_band() {
+        // A moderate duty cycle should settle, not oscillate forever.
+        let (_k, ctl) = run_with_duty(18, 2);
+        let changes = ctl.grows + ctl.shrinks;
+        assert!(changes < 12, "controller oscillating: {changes} changes in 2s");
+    }
+
+    #[test]
+    fn ignores_non_corespec_policies() {
+        let p = MachineParams::new(4, PolicyKind::Unmodified);
+        let mut m = crate::sched::machine::Machine::new(p);
+        let mut ctl = Controller::new(AdaptiveParams::default(), 4);
+        assert_eq!(ctl.tick(&mut m), 0);
+    }
+
+    #[test]
+    fn never_exceeds_bounds() {
+        let (k, _) = run_with_duty(95, 1);
+        assert!(k <= AdaptiveParams::default().max_avx);
+        let (k2, _) = run_with_duty(0, 3);
+        assert!(k2 >= AdaptiveParams::default().min_avx);
+    }
+}

@@ -1,0 +1,66 @@
+//! Fault-and-migrate (§6.1 future work): automatic task classification
+//! without source annotations.
+//!
+//! The paper proposes restricting the memory region used by `FXSTOR`
+//! during context switches so that the first wide (AVX-512) instruction a
+//! task executes raises an exception; the handler reclassifies the task
+//! as an AVX task and migrates it *before* any frequency reduction is
+//! triggered (cf. Li et al. [15], who emulate ISA asymmetry by disabling
+//! the FPU).
+//!
+//! In the simulation, a task whose next instruction block contains wide
+//! instructions while its type is not `Avx` "traps": the machine charges
+//! the exception cost, switches the task type, and — if it sits on a
+//! scalar core — suspends it so the AVX-core path picks it up, exactly as
+//! the annotated `with_avx()` path would. Reverting is the part the paper
+//! leaves open; we implement the natural decay heuristic: after a
+//! sufficiently long streak of scalar-only execution, the task reverts to
+//! `Scalar`.
+
+use crate::sim::{Time, US};
+
+/// Parameters for the automatic classification mechanism.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultMigrateParams {
+    /// Cost of the #UD/#NM-style trap plus kernel handling (µs scale:
+    /// exception entry, state inspection, runqueue operations).
+    pub fault_cost: Time,
+    /// Scalar-only streak after which an `Avx` task reverts to `Scalar`.
+    ///
+    /// Tradeoff: the revert must be *short* relative to the workload's
+    /// AVX-burst cadence, or every thread that ever faulted stays pinned
+    /// to the (few) AVX cores and the machine collapses onto them — the
+    /// scalar phases between SSL calls are ~1 ms, so the default reverts
+    /// well within that. Reverting early is safe for the *core* (its
+    /// license is held regardless for 2 ms); the cost of reverting too
+    /// eagerly is just an extra fault on the next burst (~µs).
+    pub decay: Time,
+}
+
+impl Default for FaultMigrateParams {
+    fn default() -> Self {
+        FaultMigrateParams { fault_cost: 3 * US, decay: 30 * US }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MS;
+
+    #[test]
+    fn decay_reverts_between_request_scale_bursts() {
+        let p = FaultMigrateParams::default();
+        assert!(
+            p.decay < MS,
+            "decay must be shorter than inter-burst scalar phases (~1 ms) \
+             or faulted threads pin to the AVX cores permanently"
+        );
+    }
+
+    #[test]
+    fn fault_cost_is_microseconds() {
+        let p = FaultMigrateParams::default();
+        assert!(p.fault_cost >= US && p.fault_cost <= 100 * US);
+    }
+}

@@ -1,0 +1,781 @@
+//! The simulated machine: event loop gluing the core models, the
+//! scheduler, and workload task bodies.
+//!
+//! Tasks are coroutines: the machine asks a task's [`TaskBody`] for its
+//! next [`Action`] whenever the task holds a core. `Run` actions execute
+//! an instruction block on the core model (advancing frequency licenses
+//! and PMU counters); `SetType` is the paper's `with_avx()` /
+//! `without_avx()` syscall; `Sleep`/`WaitChannel` block the task. All
+//! scheduler operations charge simulated overhead so the Fig-7 migration
+//! cost measurements are meaningful.
+
+use super::fault_migrate::FaultMigrateParams;
+use super::muqss::{SchedParams, Scheduler, TypeChangeOutcome, WakeTarget};
+use super::policy::PolicyKind;
+use super::task::{TaskId, TaskType};
+use crate::cpu::freq::FreqParams;
+use crate::cpu::ipc::IpcParams;
+use crate::cpu::turbo::TurboTable;
+use crate::cpu::Core;
+use crate::isa::block::Block;
+use crate::sim::{EventQueue, Time};
+use crate::util::Rng;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+/// What a task does next.
+#[derive(Debug, Clone)]
+pub enum Action {
+    /// Execute an instruction block attributed to `func`, with `stack`
+    /// identifying the interned call stack for flame-graph sampling.
+    Run { block: Block, func: u64, stack: u32 },
+    /// `with_avx()` / `without_avx()` syscall.
+    SetType(TaskType),
+    /// Block for a fixed duration (timer/disk).
+    Sleep(Time),
+    /// Block until a credit is posted on the channel (work queues).
+    WaitChannel(u32),
+    /// Terminate the task.
+    Exit,
+}
+
+/// A task's behaviour. Bodies capture shared workload state via
+/// `Rc<RefCell<…>>` (the simulator is single-threaded by design).
+pub trait TaskBody {
+    fn next(&mut self, now: Time, rng: &mut Rng) -> Action;
+}
+
+/// External event source driving the simulation (request arrivals, etc.).
+pub trait Driver {
+    fn on_external(&mut self, tag: u64, m: &mut Machine);
+}
+
+/// A no-op driver for workloads that need no external events.
+pub struct NullDriver;
+impl Driver for NullDriver {
+    fn on_external(&mut self, _tag: u64, _m: &mut Machine) {}
+}
+
+/// Machine construction parameters.
+#[derive(Clone, Debug)]
+pub struct MachineParams {
+    pub n_cores: usize,
+    pub turbo: TurboTable,
+    pub freq: FreqParams,
+    pub ipc: IpcParams,
+    pub sched: SchedParams,
+    pub policy: PolicyKind,
+    pub seed: u64,
+    /// Cores outside the simulated set that are nevertheless awake (the
+    /// paper's 4 client cores) — raises the package active-core count.
+    pub extra_active_cores: usize,
+    /// Collect flame-graph samples (costs memory; off for big sweeps).
+    pub track_flame: bool,
+    /// §6.1 fault-and-migrate automatic classification, if enabled.
+    pub fault_migrate: Option<FaultMigrateParams>,
+}
+
+impl MachineParams {
+    pub fn new(n_cores: usize, policy: PolicyKind) -> Self {
+        MachineParams {
+            n_cores,
+            turbo: TurboTable::xeon_gold_6130(),
+            freq: FreqParams::default(),
+            ipc: IpcParams::default(),
+            sched: SchedParams::default(),
+            policy,
+            seed: 0xA5A5_5A5A,
+            extra_active_cores: 0,
+            track_flame: false,
+            fault_migrate: None,
+        }
+    }
+}
+
+/// Events on the machine's queue.
+#[derive(Debug, Clone, Copy)]
+pub enum Event {
+    /// `core` is at a scheduling boundary (block finished / dispatched).
+    Step(usize),
+    /// A blocked task becomes runnable.
+    Wake(TaskId),
+    /// Inter-processor interrupt delivery.
+    Ipi(usize),
+    /// Workload-defined external event.
+    External(u64),
+}
+
+#[derive(Debug, Clone, Copy)]
+enum CoreRun {
+    Idle { since: Time },
+    Busy { task: TaskId },
+}
+
+#[derive(Default)]
+struct Channel {
+    credits: u64,
+    waiters: VecDeque<TaskId>,
+}
+
+/// Aggregated flame-graph sample data per interned stack.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StackSample {
+    pub cycles: f64,
+    pub throttle_cycles: f64,
+}
+
+/// The machine.
+pub struct Machine {
+    pub cores: Vec<Core>,
+    pub sched: Scheduler,
+    pub rng: Rng,
+    turbo: TurboTable,
+    bodies: Vec<Option<Box<dyn TaskBody>>>,
+    pending_action: Vec<Option<Action>>,
+    fm_scalar_streak: Vec<Time>,
+    run: Vec<CoreRun>,
+    step_pending: Vec<bool>,
+    quantum_end: Vec<Time>,
+    need_resched: Vec<Time>, // 0 = none, else extra cost to charge (ipi)
+    q: EventQueue<Event>,
+    channels: Vec<Channel>,
+    n_busy: usize,
+    extra_active: usize,
+    track_flame: bool,
+    fault_migrate: Option<FaultMigrateParams>,
+    /// Flame samples keyed by interned stack id.
+    pub flame: BTreeMap<u32, StackSample>,
+    /// Fault-and-migrate trap count (§6.1).
+    pub fm_faults: u64,
+    /// Per-core time spent running AVX-typed tasks (adaptive controller
+    /// input: total AVX demand, regardless of which core carried it).
+    pub avx_task_ns: Vec<Time>,
+}
+
+impl Machine {
+    pub fn new(p: MachineParams) -> Self {
+        let cores = (0..p.n_cores)
+            .map(|i| Core::new(i, p.freq.clone(), p.ipc.clone()))
+            .collect();
+        Machine {
+            cores,
+            sched: Scheduler::new(p.policy.clone(), p.sched.clone(), p.n_cores),
+            rng: Rng::new(p.seed),
+            turbo: p.turbo.clone(),
+            bodies: Vec::new(),
+            pending_action: Vec::new(),
+            fm_scalar_streak: Vec::new(),
+            run: vec![CoreRun::Idle { since: 0 }; p.n_cores],
+            step_pending: vec![false; p.n_cores],
+            quantum_end: vec![0; p.n_cores],
+            need_resched: vec![0; p.n_cores],
+            q: EventQueue::new(),
+            channels: Vec::new(),
+            n_busy: 0,
+            extra_active: p.extra_active_cores,
+            track_flame: p.track_flame,
+            fault_migrate: p.fault_migrate,
+            flame: BTreeMap::new(),
+            fm_faults: 0,
+            avx_task_ns: vec![0; p.n_cores],
+        }
+    }
+
+    pub fn now(&self) -> Time {
+        self.q.now()
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Create a channel (work queue) and return its id.
+    pub fn channel(&mut self) -> u32 {
+        self.channels.push(Channel::default());
+        (self.channels.len() - 1) as u32
+    }
+
+    /// Post one credit to a channel, waking a waiter if any.
+    pub fn notify(&mut self, ch: u32) {
+        if let Some(waiter) = self.channels[ch as usize].waiters.pop_front() {
+            let now = self.q.now();
+            self.wake_now(now, waiter);
+        } else {
+            self.channels[ch as usize].credits += 1;
+        }
+    }
+
+    /// Number of queued credits + waiters (diagnostics/backpressure).
+    pub fn channel_depth(&self, ch: u32) -> (u64, usize) {
+        let c = &self.channels[ch as usize];
+        (c.credits, c.waiters.len())
+    }
+
+    /// Spawn a task; it becomes runnable immediately.
+    pub fn spawn(&mut self, ttype: TaskType, nice: i32, body: Box<dyn TaskBody>) -> TaskId {
+        let id = self.sched.add_task(ttype, nice);
+        self.bodies.push(Some(body));
+        self.pending_action.push(None);
+        self.fm_scalar_streak.push(0);
+        let now = self.q.now();
+        self.wake_now(now, id);
+        id
+    }
+
+    /// Schedule a workload external event.
+    pub fn schedule_external(&mut self, at: Time, tag: u64) {
+        self.q.schedule_at(at, Event::External(tag));
+    }
+
+    fn wake_now(&mut self, now: Time, task: TaskId) {
+        let fallback = task.0 % self.cores.len();
+        // Split borrow: the scheduler consults step_pending without cloning.
+        let Machine { sched, step_pending, .. } = self;
+        match sched.enqueue(now, task, fallback, &|c| step_pending[c], None) {
+            WakeTarget::DispatchIdle(core) => self.kick(core),
+            WakeTarget::Preempt(core) => {
+                let lat = self.sched.params.ipi_latency;
+                self.q.schedule_in(lat, Event::Ipi(core));
+            }
+            WakeTarget::Queued => {}
+        }
+    }
+
+    /// Ensure an idle-or-boundary Step event is queued for `core`.
+    fn kick(&mut self, core: usize) {
+        if !self.step_pending[core] {
+            self.step_pending[core] = true;
+            self.q.schedule_in(0, Event::Step(core));
+        }
+    }
+
+    /// Run the machine until simulated time `until`.
+    pub fn run_until(&mut self, until: Time, driver: &mut dyn Driver) {
+        while let Some(t) = self.q.peek_time() {
+            if t > until {
+                break;
+            }
+            let (now, ev) = self.q.pop().unwrap();
+            match ev {
+                Event::Step(core) => {
+                    self.step_pending[core] = false;
+                    self.on_step(now, core);
+                }
+                Event::Wake(task) => self.wake_now(now, task),
+                Event::Ipi(core) => {
+                    match self.run[core] {
+                        CoreRun::Busy { .. } => {
+                            // Flag checked at the next block boundary; the
+                            // receiver charges the interrupt cost there.
+                            self.need_resched[core] = self.sched.params.ipi_cost.max(1);
+                        }
+                        CoreRun::Idle { .. } => self.kick(core),
+                    }
+                }
+                Event::External(tag) => driver.on_external(tag, self),
+            }
+        }
+    }
+
+    /// Core is at a scheduling boundary: preemption/quantum checks, then
+    /// either continue the current task or reschedule.
+    fn on_step(&mut self, now: Time, core: usize) {
+        match self.run[core] {
+            CoreRun::Idle { since } => {
+                // `since` may sit a reschedule-cost past `now` when a kick
+                // lands at the same instant the core went idle.
+                self.cores[core].idle_until(since.min(now), now.max(since));
+                self.reschedule(now, core, 0);
+            }
+            CoreRun::Busy { task } => {
+                // IPI-requested preemption (charged the interrupt cost).
+                let ipi_cost = std::mem::take(&mut self.need_resched[core]);
+                if ipi_cost > 0 {
+                    self.requeue_current(now, core, false);
+                    self.reschedule(now, core, ipi_cost);
+                    return;
+                }
+                // Quantum expiry — only yields if someone else wants the CPU.
+                if now >= self.quantum_end[core] {
+                    if self.sched.queued_count() > 0 {
+                        self.requeue_current(now, core, true);
+                        self.reschedule(now, core, 0);
+                        return;
+                    }
+                    self.quantum_end[core] = now + self.sched.params.rr_interval;
+                }
+                self.drive_task(now, core, task, 0);
+            }
+        }
+    }
+
+    fn handle_wake_target(&mut self, target: WakeTarget) {
+        match target {
+            WakeTarget::DispatchIdle(core) => self.kick(core),
+            WakeTarget::Preempt(core) => {
+                let lat = self.sched.params.ipi_latency;
+                self.q.schedule_in(lat, Event::Ipi(core));
+            }
+            WakeTarget::Queued => {}
+        }
+    }
+
+    /// Account scheduler/syscall overhead on a core's PMU counters the way
+    /// real hardware would: kernel code retiring at ~1.4 IPC at the core's
+    /// current licensed frequency. Keeps §4.2's instructions-per-request
+    /// and IPC comparisons faithful (the paper's counters include kernel
+    /// code executed by annotations and extra scheduler invocations).
+    fn charge_overhead(&mut self, core: usize, ns: Time) {
+        if ns == 0 {
+            return;
+        }
+        const KERNEL_IPC: f64 = 1.4;
+        let lic = self.cores[core].license.granted();
+        let active = (self.n_busy + self.extra_active).max(1);
+        let ghz = self.turbo.ghz(lic, active);
+        let cycles = ns as f64 * ghz;
+        let insns = (cycles * KERNEL_IPC) as u64;
+        let branches = insns / 6;
+        self.cores[core].perf.record_slice(
+            lic,
+            false,
+            cycles,
+            ns,
+            ghz,
+            insns,
+            branches,
+            branches as f64 * 0.02, // kernel branches mispredict a bit more
+            0.0,
+        );
+    }
+
+    /// Ask `task`'s body for actions until one consumes time or blocks.
+    fn drive_task(&mut self, now: Time, core: usize, task: TaskId, mut pending_ns: Time) {
+        loop {
+            let action = match self.pending_action[task.0].take() {
+                Some(a) => a,
+                None => {
+                    let mut body = self.bodies[task.0].take().expect("task body missing");
+                    let a = body.next(now + pending_ns, &mut self.rng);
+                    self.bodies[task.0] = Some(body);
+                    a
+                }
+            };
+            match action {
+                Action::Run { block, func, stack } => {
+                    // §6.1 fault-and-migrate: an unannotated/scalar task about
+                    // to execute wide instructions traps, is reclassified AVX,
+                    // and (if on a scalar core) suspended before the block runs.
+                    if let Some(fm) = self.fault_migrate {
+                        let ttype = self.sched.entity(task).ttype;
+                        if ttype != TaskType::Avx && block.mix.wide() > 0 {
+                            self.fm_faults += 1;
+                            pending_ns += fm.fault_cost;
+                            match self.sched.set_task_type(now + pending_ns, core, TaskType::Avx) {
+                                TypeChangeOutcome::Continue => {}
+                                TypeChangeOutcome::SuspendSelf => {
+                                    self.pending_action[task.0] =
+                                        Some(Action::Run { block, func, stack });
+                                    self.suspend_and_resched(now, core, pending_ns);
+                                    return;
+                                }
+                            }
+                        } else if ttype == TaskType::Avx && block.mix.wide() == 0 {
+                            // Scalar streak bookkeeping; revert after decay.
+                            // (Streak length updated after the block runs.)
+                        }
+                    }
+                    // Syscall/fault overhead preceding this block retires
+                    // as kernel instructions on this core.
+                    self.charge_overhead(core, pending_ns);
+                    let active = (self.n_busy + self.extra_active).max(1);
+                    let out =
+                        self.cores[core].run_block(now + pending_ns, &block, func, active, &self.turbo);
+                    if self.track_flame {
+                        let s = self.flame.entry(stack).or_default();
+                        s.cycles += out.cycles;
+                        s.throttle_cycles += out.throttle_cycles;
+                    }
+                    // Fault-and-migrate decay: long scalar streaks revert the
+                    // task so it can leave the AVX cores.
+                    if let Some(fm) = self.fault_migrate {
+                        if self.sched.entity(task).ttype == TaskType::Avx {
+                            if block.mix.wide() == 0 {
+                                self.fm_scalar_streak[task.0] += out.ns;
+                                if self.fm_scalar_streak[task.0] >= fm.decay {
+                                    self.fm_scalar_streak[task.0] = 0;
+                                    let outcome = self.sched.set_task_type(
+                                        now + pending_ns + out.ns,
+                                        core,
+                                        TaskType::Scalar,
+                                    );
+                                    if outcome == TypeChangeOutcome::SuspendSelf {
+                                        // Migrate the reverted task off the
+                                        // AVX core at the upcoming block
+                                        // boundary so queued AVX work gets
+                                        // the core (same path as an IPI).
+                                        self.need_resched[core] = 1;
+                                    }
+                                }
+                            } else {
+                                self.fm_scalar_streak[task.0] = 0;
+                            }
+                        }
+                    }
+                    self.sched.entity_mut(task).cpu_ns += out.ns;
+                    if self.sched.entity(task).ttype == TaskType::Avx {
+                        self.avx_task_ns[core] += out.ns;
+                    }
+                    self.step_pending[core] = true;
+                    self.q.schedule_in(pending_ns + out.ns, Event::Step(core));
+                    return;
+                }
+                Action::SetType(t) => {
+                    pending_ns += self.sched.params.syscall_cost;
+                    match self.sched.set_task_type(now + pending_ns, core, t) {
+                        TypeChangeOutcome::Continue => continue,
+                        TypeChangeOutcome::SuspendSelf => {
+                            self.suspend_and_resched(now, core, pending_ns);
+                            return;
+                        }
+                    }
+                }
+                Action::Sleep(dt) => {
+                    self.sched.block_running(core);
+                    self.q.schedule_in(pending_ns + dt, Event::Wake(task));
+                    self.reschedule(now, core, pending_ns);
+                    return;
+                }
+                Action::WaitChannel(ch) => {
+                    let c = &mut self.channels[ch as usize];
+                    if c.credits > 0 {
+                        c.credits -= 1;
+                        continue;
+                    }
+                    c.waiters.push_back(task);
+                    self.sched.block_running(core);
+                    self.reschedule(now, core, pending_ns);
+                    return;
+                }
+                Action::Exit => {
+                    self.sched.exit_running(core);
+                    self.bodies[task.0] = None;
+                    self.reschedule(now, core, pending_ns);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Requeue the core's current task and fan out its wake target.
+    fn requeue_current(&mut self, now: Time, core: usize, refresh: bool) {
+        let Machine { sched, step_pending, .. } = self;
+        let target = sched.requeue_running(now, core, refresh, &|c| step_pending[c]);
+        if let Some(target) = target {
+            self.handle_wake_target(target);
+        }
+    }
+
+    /// Requeue the running task (type-change suspension) and reschedule.
+    fn suspend_and_resched(&mut self, now: Time, core: usize, pending_ns: Time) {
+        self.requeue_current(now, core, false);
+        self.reschedule(now, core, pending_ns);
+    }
+
+    /// Pick the next task for `core` (or go idle).
+    fn reschedule(&mut self, now: Time, core: usize, extra_ns: Time) {
+        let was_busy = matches!(self.run[core], CoreRun::Busy { .. });
+        let mut cost = extra_ns + self.sched.params.resched_cost;
+        let migrations_before = self.sched.stats.migrations;
+        match self.sched.pick(now, core) {
+            Some(task) => {
+                if self.sched.stats.migrations > migrations_before {
+                    cost += self.sched.params.migration_cost;
+                }
+                self.charge_overhead(core, cost);
+                if !was_busy {
+                    self.n_busy += 1;
+                }
+                self.run[core] = CoreRun::Busy { task };
+                self.quantum_end[core] = now + cost + self.sched.params.rr_interval;
+                self.step_pending[core] = true;
+                self.q.schedule_in(cost, Event::Step(core));
+            }
+            None => {
+                if was_busy {
+                    self.n_busy -= 1;
+                }
+                self.run[core] = CoreRun::Idle { since: now + cost };
+            }
+        }
+    }
+
+    /// Zero all measurement state (called after warmup).
+    pub fn reset_metrics(&mut self) {
+        for c in &mut self.cores {
+            c.perf = Default::default();
+        }
+        self.sched.stats = Default::default();
+        self.flame.clear();
+        self.fm_faults = 0;
+    }
+
+    /// Merge all cores' counters (for run-level reporting).
+    pub fn total_perf(&self) -> crate::cpu::PerfCounters {
+        let mut total = crate::cpu::PerfCounters::default();
+        for c in &self.cores {
+            total.merge(&c.perf);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::block::{ClassMix, InsnClass};
+    use crate::sim::{MS, SEC};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    /// Body that runs `n` scalar blocks then exits.
+    struct ScalarLoop {
+        remaining: u64,
+        done: Rc<RefCell<u64>>,
+    }
+    impl TaskBody for ScalarLoop {
+        fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+            if self.remaining == 0 {
+                *self.done.borrow_mut() += 1;
+                return Action::Exit;
+            }
+            self.remaining -= 1;
+            Action::Run {
+                block: Block { mix: ClassMix::scalar(10_000), mem_ops: 100, branches: 200, license_exempt: false },
+                func: 1,
+                stack: 0,
+            }
+        }
+    }
+
+    fn small_machine(policy: PolicyKind, cores: usize) -> Machine {
+        let mut p = MachineParams::new(cores, policy);
+        p.turbo = TurboTable::flat(2.8, 2.4, 1.9, cores);
+        Machine::new(p)
+    }
+
+    #[test]
+    fn tasks_run_to_completion() {
+        let mut m = small_machine(PolicyKind::Unmodified, 2);
+        let done = Rc::new(RefCell::new(0u64));
+        for _ in 0..4 {
+            m.spawn(
+                TaskType::Untyped,
+                0,
+                Box::new(ScalarLoop { remaining: 50, done: done.clone() }),
+            );
+        }
+        m.run_until(SEC, &mut NullDriver);
+        assert_eq!(*done.borrow(), 4);
+        let perf = m.total_perf();
+        // Workload instructions plus a little accounted kernel overhead.
+        let submitted = 4 * 50 * 10_000;
+        assert!(perf.instructions >= submitted);
+        assert!(perf.instructions < submitted + submitted / 50, "{}", perf.instructions);
+    }
+
+    #[test]
+    fn oversubscription_time_shares() {
+        // 4 tasks, 1 core: all must finish; busy time ≈ serial sum.
+        let mut m = small_machine(PolicyKind::Unmodified, 1);
+        let done = Rc::new(RefCell::new(0u64));
+        for _ in 0..4 {
+            m.spawn(
+                TaskType::Untyped,
+                0,
+                Box::new(ScalarLoop { remaining: 100, done: done.clone() }),
+            );
+        }
+        m.run_until(10 * SEC, &mut NullDriver);
+        assert_eq!(*done.borrow(), 4);
+    }
+
+    /// Body alternating scalar work and AVX work wrapped in SetType.
+    struct AnnotatedAvx {
+        iters: u64,
+        done: Rc<RefCell<u64>>,
+    }
+    impl TaskBody for AnnotatedAvx {
+        fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+            if self.iters == 0 {
+                *self.done.borrow_mut() += 1;
+                return Action::Exit;
+            }
+            self.iters -= 1;
+            match self.iters % 4 {
+                3 => Action::SetType(TaskType::Avx),
+                2 => Action::Run {
+                    block: Block {
+                        mix: ClassMix::of(InsnClass::Avx512Heavy, 20_000),
+                        mem_ops: 100,
+                        branches: 50, license_exempt: false,
+                    },
+                    func: 7,
+                    stack: 1,
+                },
+                1 => Action::SetType(TaskType::Scalar),
+                _ => Action::Run {
+                    block: Block { mix: ClassMix::scalar(20_000), mem_ops: 100, branches: 300, license_exempt: false },
+                    func: 3,
+                    stack: 2,
+                },
+            }
+        }
+    }
+
+    #[test]
+    fn corespec_confines_avx_to_avx_cores() {
+        let mut m = small_machine(PolicyKind::CoreSpec { avx_cores: 1 }, 4);
+        let done = Rc::new(RefCell::new(0u64));
+        for _ in 0..6 {
+            m.spawn(
+                TaskType::Scalar,
+                0,
+                Box::new(AnnotatedAvx { iters: 400, done: done.clone() }),
+            );
+        }
+        m.run_until(20 * SEC, &mut NullDriver);
+        assert_eq!(*done.borrow(), 6, "all tasks finish");
+        // Scalar cores (0..3) must never see AVX-license cycles.
+        for c in 0..3 {
+            assert_eq!(
+                m.cores[c].perf.license_cycles[2], 0,
+                "scalar core {c} executed AVX-512 license cycles"
+            );
+            assert_eq!(m.cores[c].perf.license_requests, 0);
+        }
+        // The AVX core must have done the AVX work.
+        assert!(m.cores[3].perf.license_cycles[2] > 0, "AVX core ran the AVX work");
+        assert!(m.sched.stats.type_changes > 0);
+        assert!(m.sched.stats.migrations > 0, "threads must migrate");
+    }
+
+    #[test]
+    fn unmodified_spreads_avx_everywhere() {
+        let mut m = small_machine(PolicyKind::Unmodified, 4);
+        let done = Rc::new(RefCell::new(0u64));
+        for _ in 0..6 {
+            m.spawn(
+                TaskType::Scalar,
+                0,
+                Box::new(AnnotatedAvx { iters: 400, done: done.clone() }),
+            );
+        }
+        m.run_until(20 * SEC, &mut NullDriver);
+        assert_eq!(*done.borrow(), 6);
+        let polluted =
+            (0..4).filter(|&c| m.cores[c].perf.license_cycles[2] > 0).count();
+        assert!(polluted >= 3, "unmodified scheduler lets AVX hit most cores, got {polluted}");
+    }
+
+    #[test]
+    fn channels_deliver_work() {
+        struct Worker {
+            ch: u32,
+            served: Rc<RefCell<u64>>,
+        }
+        impl TaskBody for Worker {
+            fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+                if *self.served.borrow() >= 10 {
+                    return Action::Exit;
+                }
+                *self.served.borrow_mut() += 1;
+                Action::WaitChannel(self.ch)
+            }
+        }
+        struct Arrivals {
+            ch: u32,
+        }
+        impl Driver for Arrivals {
+            fn on_external(&mut self, _tag: u64, m: &mut Machine) {
+                m.notify(self.ch);
+            }
+        }
+        let mut m = small_machine(PolicyKind::Unmodified, 1);
+        let ch = m.channel();
+        let served = Rc::new(RefCell::new(0u64));
+        m.spawn(TaskType::Untyped, 0, Box::new(Worker { ch, served: served.clone() }));
+        for i in 0..12 {
+            m.schedule_external(i * MS, 1);
+        }
+        let mut d = Arrivals { ch };
+        m.run_until(SEC, &mut d);
+        assert_eq!(*served.borrow(), 10);
+    }
+
+    #[test]
+    fn determinism_same_seed_same_result() {
+        let run = || {
+            let mut m = small_machine(PolicyKind::CoreSpec { avx_cores: 1 }, 4);
+            let done = Rc::new(RefCell::new(0u64));
+            for _ in 0..5 {
+                m.spawn(
+                    TaskType::Scalar,
+                    0,
+                    Box::new(AnnotatedAvx { iters: 100, done: done.clone() }),
+                );
+            }
+            m.run_until(5 * SEC, &mut NullDriver);
+            let p = m.total_perf();
+            (p.instructions, p.cycles, p.busy_ns, m.sched.stats.migrations)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn fault_migrate_reclassifies_unannotated_tasks() {
+        struct Unannotated {
+            iters: u64,
+        }
+        impl TaskBody for Unannotated {
+            fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+                if self.iters == 0 {
+                    return Action::Exit;
+                }
+                self.iters -= 1;
+                if self.iters % 8 == 0 {
+                    Action::Run {
+                        block: Block {
+                            mix: ClassMix::of(InsnClass::Avx512Heavy, 20_000),
+                            mem_ops: 0,
+                            branches: 50, license_exempt: false,
+                        },
+                        func: 7,
+                        stack: 0,
+                    }
+                } else {
+                    Action::Run {
+                        block: Block { mix: ClassMix::scalar(20_000), mem_ops: 0, branches: 300, license_exempt: false },
+                        func: 3,
+                        stack: 0,
+                    }
+                }
+            }
+        }
+        let mut p = MachineParams::new(4, PolicyKind::CoreSpec { avx_cores: 1 });
+        p.turbo = TurboTable::flat(2.8, 2.4, 1.9, 4);
+        p.fault_migrate = Some(FaultMigrateParams::default());
+        let mut m = Machine::new(p);
+        for _ in 0..4 {
+            m.spawn(TaskType::Scalar, 0, Box::new(Unannotated { iters: 200 }));
+        }
+        m.run_until(20 * SEC, &mut NullDriver);
+        assert!(m.fm_faults > 0, "wide blocks must fault");
+        for c in 0..3 {
+            assert_eq!(
+                m.cores[c].perf.license_cycles[2], 0,
+                "fault-and-migrate must keep AVX off scalar core {c}"
+            );
+        }
+    }
+}

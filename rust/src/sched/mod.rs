@@ -1,0 +1,33 @@
+//! The paper's contribution: a MuQSS-style deadline scheduler extended
+//! with *core specialization* for AVX tasks, plus the baselines it is
+//! evaluated against.
+//!
+//! Structure mirrors the paper's §3:
+//!
+//! * [`task`] — task types (`Scalar` / `Avx` / `Untyped`), virtual
+//!   deadlines, nice weights.
+//! * [`skiplist`] — the sorted runqueue structure MuQSS uses.
+//! * [`policy`] — which cores may run which task types, and the deadline
+//!   penalty that makes AVX cores prefer AVX/untyped work (§3.1).
+//! * [`muqss`] — the scheduler proper: per-core triple runqueues, pick,
+//!   cross-core stealing, preemption via IPI, the `with_avx()` /
+//!   `without_avx()` type-change path (§3.2).
+//! * [`machine`] — the event loop gluing scheduler, cores, and workloads.
+//! * [`fault_migrate`] — the paper's §6.1 future-work mechanism: make the
+//!   first wide instruction of an unannotated task fault and reclassify
+//!   it automatically.
+//! * [`adaptive`] — §3.1's "as many AVX cores as required" as an online
+//!   controller, plus the §4.3 adaptive-policy future work.
+
+pub mod task;
+pub mod skiplist;
+pub mod policy;
+pub mod muqss;
+pub mod machine;
+pub mod fault_migrate;
+pub mod adaptive;
+
+pub use machine::{Action, Event, Machine, MachineParams, TaskBody};
+pub use muqss::{SchedParams, SchedStats, Scheduler};
+pub use policy::PolicyKind;
+pub use task::{TaskId, TaskType};

@@ -1,0 +1,145 @@
+//! Core-specialization policies (§2.1, §3.1) and the baselines.
+//!
+//! The central asymmetry (Fig 3): letting an AVX core run scalar code
+//! briefly wastes only that scalar section's speed, but letting a scalar
+//! core run AVX code taxes *at least two milliseconds* of subsequent
+//! scalar work. Policies therefore:
+//!
+//! * restrict AVX tasks to the AVX-core set — a scalar core never picks
+//!   from an AVX queue,
+//! * let AVX cores pick scalar tasks only at a large deadline penalty, so
+//!   any runnable AVX/untyped task wins (the paper's idle-priority-like
+//!   scheme),
+//! * never restrict untyped tasks (they would otherwise be starved on
+//!   AVX cores — §3.2).
+
+use super::task::TaskType;
+use crate::sim::{Time, MS};
+
+/// Which scheduling policy a simulation runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicyKind {
+    /// Unmodified MuQSS: task types are ignored; `with_avx()` syscalls do
+    /// not exist (zero overhead). The paper's "unmodified" blue bars.
+    Unmodified,
+    /// The paper's design: the last `avx_cores` cores of the server set
+    /// are AVX cores; AVX tasks restricted to them; scalar tasks allowed
+    /// there at deprioritized deadlines.
+    CoreSpec { avx_cores: usize },
+    /// §2.1 strawman: strict partitioning — scalar tasks may *not* run on
+    /// AVX cores. Underutilizes whenever the core ratio mismatches the
+    /// workload mix (evaluated in the ablation benches).
+    StrictPartition { avx_cores: usize },
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Unmodified => "unmodified",
+            PolicyKind::CoreSpec { .. } => "core-spec",
+            PolicyKind::StrictPartition { .. } => "strict-partition",
+        }
+    }
+
+    /// Number of AVX cores for a server-core count.
+    pub fn avx_core_count(&self) -> usize {
+        match self {
+            PolicyKind::Unmodified => 0,
+            PolicyKind::CoreSpec { avx_cores } | PolicyKind::StrictPartition { avx_cores } => {
+                *avx_cores
+            }
+        }
+    }
+
+    /// Is `core` (an index into the server-core list, 0-based) an AVX core?
+    /// Following the paper's evaluation, the *last* cores are AVX cores
+    /// ("restrict execution of these functions to the last two physical
+    /// cores", §4).
+    pub fn is_avx_core(&self, core: usize, n_cores: usize) -> bool {
+        let k = self.avx_core_count().min(n_cores);
+        core >= n_cores - k
+    }
+
+    /// May `core` pick tasks from the queue of `ttype` at all?
+    pub fn eligible(&self, core: usize, n_cores: usize, ttype: TaskType) -> bool {
+        match self {
+            PolicyKind::Unmodified => true,
+            PolicyKind::CoreSpec { .. } => match ttype {
+                TaskType::Avx => self.is_avx_core(core, n_cores),
+                TaskType::Scalar | TaskType::Untyped => true,
+            },
+            PolicyKind::StrictPartition { .. } => match ttype {
+                TaskType::Avx => self.is_avx_core(core, n_cores),
+                TaskType::Scalar => !self.is_avx_core(core, n_cores),
+                TaskType::Untyped => true,
+            },
+        }
+    }
+
+    /// Deadline penalty applied when `core` considers a task of `ttype`
+    /// (§3.2: "adding a large value to the deadline of scalar tasks so
+    /// that the deadline of all other tasks is guaranteed to be lower").
+    pub fn deadline_penalty(&self, core: usize, n_cores: usize, ttype: TaskType) -> Time {
+        match self {
+            PolicyKind::CoreSpec { .. }
+                if ttype == TaskType::Scalar && self.is_avx_core(core, n_cores) =>
+            {
+                SCALAR_ON_AVX_PENALTY
+            }
+            _ => 0,
+        }
+    }
+}
+
+/// "A large value": beyond any virtual deadline reachable by nice levels
+/// within a scheduling epoch, mirroring MuQSS's idle-priority offset.
+pub const SCALAR_ON_AVX_PENALTY: Time = 1_000_000 * MS;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unmodified_allows_everything() {
+        let p = PolicyKind::Unmodified;
+        for core in 0..12 {
+            for t in [TaskType::Scalar, TaskType::Avx, TaskType::Untyped] {
+                assert!(p.eligible(core, 12, t));
+                assert_eq!(p.deadline_penalty(core, 12, t), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn corespec_restricts_avx_to_last_cores() {
+        let p = PolicyKind::CoreSpec { avx_cores: 2 };
+        assert!(!p.eligible(0, 12, TaskType::Avx));
+        assert!(!p.eligible(9, 12, TaskType::Avx));
+        assert!(p.eligible(10, 12, TaskType::Avx));
+        assert!(p.eligible(11, 12, TaskType::Avx));
+        // Scalar allowed everywhere under CoreSpec…
+        assert!(p.eligible(11, 12, TaskType::Scalar));
+        // …but deprioritized on AVX cores.
+        assert!(p.deadline_penalty(11, 12, TaskType::Scalar) > 0);
+        assert_eq!(p.deadline_penalty(0, 12, TaskType::Scalar), 0);
+        // Untyped never penalized (kernel threads pinned to AVX cores
+        // must not be starved).
+        assert_eq!(p.deadline_penalty(11, 12, TaskType::Untyped), 0);
+    }
+
+    #[test]
+    fn strict_partition_excludes_scalar_from_avx_cores() {
+        let p = PolicyKind::StrictPartition { avx_cores: 3 };
+        assert!(!p.eligible(9, 12, TaskType::Scalar));
+        assert!(p.eligible(8, 12, TaskType::Scalar));
+        assert!(p.eligible(9, 12, TaskType::Untyped));
+        assert!(p.eligible(9, 12, TaskType::Avx));
+        assert!(!p.eligible(8, 12, TaskType::Avx));
+    }
+
+    #[test]
+    fn avx_core_count_clamped() {
+        let p = PolicyKind::CoreSpec { avx_cores: 99 };
+        assert!(p.is_avx_core(0, 4));
+    }
+}

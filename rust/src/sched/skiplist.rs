@@ -1,0 +1,309 @@
+//! Skiplist runqueue — the central data structure of MuQSS ("Multiple
+//! Queue Skiplist Scheduler"). Keys are `(virtual deadline, sequence)`;
+//! the scheduler needs `O(log n)` insert, `O(1)` peek/pop of the earliest
+//! deadline, and keyed removal (for dequeues on migration/type change).
+//!
+//! The level generator is a deterministic xorshift so simulations are
+//! reproducible.
+
+use crate::sched::task::TaskId;
+use crate::sim::Time;
+
+const MAX_LEVEL: usize = 12; // plenty for thousands of runnable tasks
+
+/// Sort key: earliest virtual deadline first, FIFO within a deadline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Key {
+    pub vdeadline: Time,
+    pub seq: u64,
+}
+
+#[derive(Debug)]
+struct Node {
+    key: Key,
+    task: TaskId,
+    /// Number of levels this node participates in.
+    levels: u8,
+    /// next[i] = index of next node at level i (usize::MAX = nil).
+    /// Fixed-size array: no per-insert allocation on the pick hot path.
+    next: [usize; MAX_LEVEL],
+}
+
+const NIL: usize = usize::MAX;
+
+/// Skiplist keyed by [`Key`], storing task ids.
+#[derive(Debug)]
+pub struct SkipList {
+    // Node arena; freed slots are reused via a free list.
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    /// head.next[i] per level.
+    head: [usize; MAX_LEVEL],
+    level: usize,
+    len: usize,
+    rng_state: u64,
+    seq: u64,
+}
+
+impl Default for SkipList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SkipList {
+    pub fn new() -> Self {
+        SkipList {
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: [NIL; MAX_LEVEL],
+            level: 1,
+            len: 0,
+            rng_state: 0x9E3779B97F4A7C15,
+            seq: 0,
+        }
+    }
+
+    fn random_level(&mut self) -> usize {
+        // xorshift64*; one level promotion per set bit pair (p = 1/4).
+        let mut x = self.rng_state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng_state = x;
+        let bits = x.wrapping_mul(0x2545F4914F6CDD1D);
+        let mut level = 1;
+        let mut b = bits;
+        while level < MAX_LEVEL && (b & 3) == 3 {
+            level += 1;
+            b >>= 2;
+        }
+        level
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert a task with the given deadline; returns the full key
+    /// (including the tie-breaking sequence number).
+    pub fn insert(&mut self, vdeadline: Time, task: TaskId) -> Key {
+        let key = Key { vdeadline, seq: self.seq };
+        self.seq += 1;
+        let level = self.random_level();
+
+        // Find predecessors at every level.
+        let mut update = [NIL; MAX_LEVEL]; // NIL here means "head"
+        let mut cur = NIL; // NIL = head sentinel
+        for i in (0..self.level.max(level)).rev() {
+            loop {
+                let next = if cur == NIL { self.head[i] } else { self.nodes[cur].next[i] };
+                if next != NIL && self.nodes[next].key < key {
+                    cur = next;
+                } else {
+                    break;
+                }
+            }
+            update[i] = cur;
+        }
+        if level > self.level {
+            self.level = level;
+        }
+
+        let node = Node { key, task, levels: level as u8, next: [NIL; MAX_LEVEL] };
+        let idx = if let Some(i) = self.free.pop() {
+            self.nodes[i] = node;
+            i
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        };
+
+        for (i, slot) in update.iter().enumerate().take(level) {
+            if *slot == NIL {
+                self.nodes[idx].next[i] = self.head[i];
+                self.head[i] = idx;
+            } else {
+                self.nodes[idx].next[i] = self.nodes[*slot].next[i];
+                self.nodes[*slot].next[i] = idx;
+            }
+        }
+        self.len += 1;
+        key
+    }
+
+    /// Earliest (key, task) without removing it.
+    pub fn peek(&self) -> Option<(Key, TaskId)> {
+        let first = self.head[0];
+        if first == NIL {
+            None
+        } else {
+            Some((self.nodes[first].key, self.nodes[first].task))
+        }
+    }
+
+    /// Remove and return the earliest entry.
+    pub fn pop(&mut self) -> Option<(Key, TaskId)> {
+        let first = self.head[0];
+        if first == NIL {
+            return None;
+        }
+        let key = self.nodes[first].key;
+        let task = self.nodes[first].task;
+        let levels = self.nodes[first].levels as usize;
+        for i in 0..levels {
+            if self.head[i] == first {
+                self.head[i] = self.nodes[first].next[i];
+            }
+        }
+        self.free.push(first);
+        self.len -= 1;
+        Some((key, task))
+    }
+
+    /// Remove a specific entry by its key (returned from `insert`).
+    /// Returns true if found.
+    pub fn remove(&mut self, key: Key) -> bool {
+        let mut found = false;
+        let mut cur = NIL;
+        let mut target = NIL;
+        for i in (0..self.level).rev() {
+            loop {
+                let next = if cur == NIL { self.head[i] } else { self.nodes[cur].next[i] };
+                if next != NIL && self.nodes[next].key < key {
+                    cur = next;
+                } else {
+                    if next != NIL && self.nodes[next].key == key {
+                        // unlink at this level
+                        target = next;
+                        let after = self.nodes[next].next[i];
+                        if cur == NIL {
+                            self.head[i] = after;
+                        } else {
+                            self.nodes[cur].next[i] = after;
+                        }
+                        found = true;
+                    }
+                    break;
+                }
+            }
+        }
+        if found {
+            self.free.push(target);
+            self.len -= 1;
+        }
+        found
+    }
+
+    /// Iterate entries in deadline order (test/diagnostic use).
+    pub fn iter(&self) -> impl Iterator<Item = (Key, TaskId)> + '_ {
+        let mut cur = self.head[0];
+        std::iter::from_fn(move || {
+            if cur == NIL {
+                None
+            } else {
+                let n = &self.nodes[cur];
+                cur = n.next[0];
+                Some((n.key, n.task))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_deadline_order() {
+        let mut s = SkipList::new();
+        let deadlines = [50u64, 10, 30, 10, 90, 20];
+        for (i, d) in deadlines.iter().enumerate() {
+            s.insert(*d, TaskId(i));
+        }
+        let order: Vec<Time> = std::iter::from_fn(|| s.pop()).map(|(k, _)| k.vdeadline).collect();
+        assert_eq!(order, vec![10, 10, 20, 30, 50, 90]);
+    }
+
+    #[test]
+    fn fifo_within_equal_deadline() {
+        let mut s = SkipList::new();
+        for i in 0..10 {
+            s.insert(5, TaskId(i));
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| s.pop()).map(|(_, t)| t.0).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn remove_by_key() {
+        let mut s = SkipList::new();
+        let k1 = s.insert(10, TaskId(1));
+        let _k2 = s.insert(20, TaskId(2));
+        let k3 = s.insert(5, TaskId(3));
+        assert!(s.remove(k1));
+        assert!(!s.remove(k1), "double remove fails");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.peek().unwrap().1, TaskId(3));
+        assert!(s.remove(k3));
+        assert_eq!(s.pop().unwrap().1, TaskId(2));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn stress_against_btreemap() {
+        use std::collections::BTreeMap;
+        let mut s = SkipList::new();
+        let mut reference: BTreeMap<Key, TaskId> = BTreeMap::new();
+        let mut state = 12345u64;
+        let mut rand = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let mut keys = Vec::new();
+        for i in 0..5000usize {
+            let op = rand() % 3;
+            if op < 2 || keys.is_empty() {
+                let d = rand() % 1000;
+                let k = s.insert(d, TaskId(i));
+                reference.insert(k, TaskId(i));
+                keys.push(k);
+            } else {
+                let k = keys.swap_remove((rand() % keys.len() as u64) as usize);
+                let in_ref = reference.remove(&k).is_some();
+                assert_eq!(s.remove(k), in_ref);
+            }
+            assert_eq!(s.len(), reference.len());
+            assert_eq!(
+                s.peek().map(|(k, t)| (k, t)),
+                reference.iter().next().map(|(k, t)| (*k, *t))
+            );
+        }
+        // Drain and compare full order.
+        let drained: Vec<_> = std::iter::from_fn(|| s.pop()).collect();
+        let expect: Vec<_> = std::mem::take(&mut reference).into_iter().collect();
+        assert_eq!(drained, expect);
+    }
+
+    #[test]
+    fn arena_reuse_after_pop() {
+        let mut s = SkipList::new();
+        for round in 0..50 {
+            for i in 0..20 {
+                s.insert(i, TaskId(i as usize));
+            }
+            for _ in 0..20 {
+                s.pop();
+            }
+            assert!(s.is_empty(), "round {round}");
+        }
+        // The arena should not have grown unboundedly.
+        assert!(s.nodes.len() <= 64, "arena grew to {}", s.nodes.len());
+    }
+}

@@ -1,0 +1,130 @@
+//! Task model: type classification, nice weights, virtual deadlines.
+
+use crate::sim::Time;
+
+/// Scheduler-visible task identifier (index into the machine's task slab).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub usize);
+
+/// The paper's task classification (§3.2):
+///
+/// * `Scalar` — declared (via `without_avx()`) not to execute wide vector
+///   instructions; may run anywhere but *must not* run AVX code.
+/// * `Avx` — declared (via `with_avx()`) to execute wide vector
+///   instructions soon; restricted to AVX cores.
+/// * `Untyped` — never declared anything (all tasks outside the
+///   instrumented application, including per-CPU kernel threads); may run
+///   anywhere and must not be starved by AVX tasks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskType {
+    Scalar,
+    Avx,
+    Untyped,
+}
+
+impl TaskType {
+    pub fn queue_index(self) -> usize {
+        match self {
+            TaskType::Scalar => 0,
+            TaskType::Avx => 1,
+            TaskType::Untyped => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskType::Scalar => "scalar",
+            TaskType::Avx => "avx",
+            TaskType::Untyped => "untyped",
+        }
+    }
+}
+
+/// Run state of a task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunState {
+    /// Executing on the given core.
+    Running(usize),
+    /// Enqueued on the given core's runqueue.
+    Queued(usize),
+    /// Blocked (sleeping or waiting on a channel).
+    Blocked,
+    /// Finished.
+    Exited,
+}
+
+/// MuQSS-style nice-to-weight mapping: deadline offsets scale by
+/// `prio_ratio^nice_level` steps; we keep the standard CFS-ish weights
+/// for the narrow nice range the workloads use.
+pub fn nice_weight(nice: i32) -> f64 {
+    // 10% per nice step, like prio_ratios in MuQSS/BFS.
+    1.1f64.powi(nice)
+}
+
+/// Scheduler bookkeeping per task.
+#[derive(Clone, Debug)]
+pub struct SchedEntity {
+    pub id: TaskId,
+    pub ttype: TaskType,
+    pub nice: i32,
+    /// Virtual deadline: earlier = runs sooner.
+    pub vdeadline: Time,
+    pub state: RunState,
+    /// Core the task last ran on (for migration accounting).
+    pub last_core: Option<usize>,
+    /// Total CPU time consumed.
+    pub cpu_ns: Time,
+    /// Number of cross-core migrations.
+    pub migrations: u64,
+    /// Number of type changes (`with_avx`/`without_avx` calls).
+    pub type_changes: u64,
+}
+
+impl SchedEntity {
+    pub fn new(id: TaskId, ttype: TaskType, nice: i32) -> Self {
+        SchedEntity {
+            id,
+            ttype,
+            nice,
+            vdeadline: 0,
+            state: RunState::Blocked,
+            last_core: None,
+            cpu_ns: 0,
+            migrations: 0,
+            type_changes: 0,
+        }
+    }
+
+    /// Refresh the virtual deadline after the task consumed its quantum
+    /// (MuQSS: `deadline = niffies + prio_ratio * rr_interval`).
+    pub fn refresh_deadline(&mut self, now: Time, rr_interval: Time) {
+        self.vdeadline = now + (rr_interval as f64 * nice_weight(self.nice)) as Time;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_indices_distinct() {
+        assert_ne!(TaskType::Scalar.queue_index(), TaskType::Avx.queue_index());
+        assert_ne!(TaskType::Avx.queue_index(), TaskType::Untyped.queue_index());
+    }
+
+    #[test]
+    fn nice_weight_ordering() {
+        assert!(nice_weight(-5) < nice_weight(0));
+        assert!(nice_weight(0) < nice_weight(10));
+        assert_eq!(nice_weight(0), 1.0);
+    }
+
+    #[test]
+    fn deadline_refresh_uses_weight() {
+        let mut a = SchedEntity::new(TaskId(0), TaskType::Scalar, 0);
+        let mut b = SchedEntity::new(TaskId(1), TaskType::Scalar, 5);
+        a.refresh_deadline(1000, 6_000_000);
+        b.refresh_deadline(1000, 6_000_000);
+        assert!(a.vdeadline < b.vdeadline, "higher nice → later deadline");
+    }
+}

@@ -1,0 +1,45 @@
+//! Discrete-event simulation engine.
+//!
+//! The machine model ([`crate::cpu`]) and scheduler ([`crate::sched`]) are
+//! driven by a single event queue with a nanosecond clock. The engine is
+//! deliberately generic and small: events are an enum supplied by the
+//! machine, ordering is `(time, sequence)` so simulation is deterministic
+//! for a given seed (property-tested in `testkit`).
+
+pub mod queue;
+
+pub use queue::EventQueue;
+
+/// Simulation time in nanoseconds since simulation start.
+pub type Time = u64;
+
+/// Nanoseconds per microsecond/millisecond/second — avoids magic numbers.
+pub const US: Time = 1_000;
+pub const MS: Time = 1_000_000;
+pub const SEC: Time = 1_000_000_000;
+
+/// Format a time as a human-readable string (for traces and logs).
+pub fn fmt_time(t: Time) -> String {
+    if t >= SEC {
+        format!("{:.3}s", t as f64 / SEC as f64)
+    } else if t >= MS {
+        format!("{:.3}ms", t as f64 / MS as f64)
+    } else if t >= US {
+        format!("{:.3}µs", t as f64 / US as f64)
+    } else {
+        format!("{t}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(500), "500ns");
+        assert_eq!(fmt_time(1_500), "1.500µs");
+        assert_eq!(fmt_time(2 * MS), "2.000ms");
+        assert_eq!(fmt_time(3 * SEC), "3.000s");
+    }
+}

@@ -1,0 +1,198 @@
+//! In-repo property-testing kit (offline substitute for `proptest`).
+//!
+//! Provides seeded generators and a runner that, on failure, reports the
+//! failing case number and seed so the case can be replayed exactly.
+//! Shrinking is implemented for the common "vector of cases" shape:
+//! the runner retries the failing predicate on progressively simpler
+//! inputs produced by the strategy's `simplify`.
+
+use crate::util::Rng;
+
+/// A strategy produces values of `T` from an RNG, and can optionally
+/// simplify a failing value toward a minimal counterexample.
+pub trait Strategy {
+    type Value;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate simplifications, most aggressive first. Default: none.
+    fn simplify(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform integer in a range.
+pub struct IntRange {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Strategy for IntRange {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.range(self.lo, self.hi)
+    }
+    fn simplify(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            // Aggressive-first geometric grid toward `lo`, then a unit step.
+            out.push(self.lo);
+            for k in 1..16u64 {
+                out.push(self.lo + (v - self.lo) * k / 16);
+            }
+            out.push(v - 1);
+            out.dedup();
+            out.retain(|c| c != v);
+        }
+        out
+    }
+}
+
+/// Vector of values from an element strategy with length in `[0, max_len]`.
+pub struct VecOf<S> {
+    pub elem: S,
+    pub max_len: usize,
+}
+
+impl<S: Strategy> Strategy for VecOf<S>
+where
+    S::Value: Clone,
+{
+    type Value = Vec<S::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<S::Value> {
+        let len = rng.below(self.max_len as u64 + 1) as usize;
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn simplify(&self, v: &Vec<S::Value>) -> Vec<Vec<S::Value>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[1..].to_vec());
+            let mut shorter = v.clone();
+            shorter.pop();
+            out.push(shorter);
+        }
+        out
+    }
+}
+
+/// Result of a property check run.
+#[derive(Debug)]
+pub struct Failure<T> {
+    pub case: usize,
+    pub seed: u64,
+    pub value: T,
+    pub message: String,
+}
+
+/// Run `predicate` on `cases` generated values. Returns the (shrunk)
+/// failure if any. `predicate` returns `Err(msg)` to fail.
+pub fn check<S, F>(seed: u64, cases: usize, strategy: &S, predicate: F) -> Result<(), Failure<S::Value>>
+where
+    S: Strategy,
+    S::Value: Clone,
+    F: Fn(&S::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let value = strategy.generate(&mut case_rng);
+        if let Err(message) = predicate(&value) {
+            // Shrink: greedily accept any simplification that still fails.
+            let mut best = value;
+            let mut best_msg = message;
+            let mut progress = true;
+            let mut budget = 200;
+            while progress && budget > 0 {
+                progress = false;
+                for cand in strategy.simplify(&best) {
+                    budget -= 1;
+                    if let Err(m) = predicate(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        progress = true;
+                        break;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+            return Err(Failure { case, seed: case_seed, value: best, message: best_msg });
+        }
+    }
+    Ok(())
+}
+
+/// Assert a property holds; panics with replay info otherwise.
+pub fn assert_prop<S, F>(name: &str, seed: u64, cases: usize, strategy: &S, predicate: F)
+where
+    S: Strategy,
+    S::Value: Clone + std::fmt::Debug,
+    F: Fn(&S::Value) -> Result<(), String>,
+{
+    if let Err(f) = check(seed, cases, strategy, predicate) {
+        panic!(
+            "property `{name}` failed at case {} (replay seed {:#x}):\n  value: {:?}\n  {}",
+            f.case, f.seed, f.value, f.message
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        assert_prop("reflexive", 1, 200, &IntRange { lo: 0, hi: 100 }, |v| {
+            if *v < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        let res = check(2, 500, &IntRange { lo: 0, hi: 1000 }, |v| {
+            if *v < 500 {
+                Ok(())
+            } else {
+                Err(format!("{v} too big"))
+            }
+        });
+        let f = res.unwrap_err();
+        assert!(f.value >= 500);
+        // Shrinker should walk down toward the boundary.
+        assert!(f.value <= 600, "shrunk to {}", f.value);
+    }
+
+    #[test]
+    fn vec_strategy_shrinks_length() {
+        let strat = VecOf { elem: IntRange { lo: 0, hi: 10 }, max_len: 64 };
+        let res = check(3, 200, &strat, |v| {
+            if v.len() < 4 {
+                Ok(())
+            } else {
+                Err("long".into())
+            }
+        });
+        let f = res.unwrap_err();
+        assert!(f.value.len() >= 4 && f.value.len() <= 8, "shrunk len {}", f.value.len());
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let strat = IntRange { lo: 0, hi: 1_000_000 };
+        let f1 = check(7, 100, &strat, |v| if v % 17 != 0 { Ok(()) } else { Err("x".into()) });
+        let f2 = check(7, 100, &strat, |v| if v % 17 != 0 { Ok(()) } else { Err("x".into()) });
+        match (f1, f2) {
+            (Err(a), Err(b)) => {
+                assert_eq!(a.case, b.case);
+                assert_eq!(a.seed, b.seed);
+            }
+            _ => panic!("expected both to fail identically"),
+        }
+    }
+}

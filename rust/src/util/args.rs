@@ -1,0 +1,128 @@
+//! Minimal CLI argument parser (offline substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and generates usage text. Used by `main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: flags, key/value options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: Vec<String>,
+    opts: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process argv (skipping the binary name).
+    pub fn from_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed lookup with default; panics with a clear message on parse failure.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default,
+            Some(s) => match s.parse() {
+                Ok(v) => v,
+                Err(e) => panic!("--{name}={s}: {e}"),
+            },
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Positionals after the subcommand.
+    pub fn rest(&self) -> &[String] {
+        if self.positional.is_empty() {
+            &[]
+        } else {
+            &self.positional[1..]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_opts_positionals() {
+        let a = parse("repro fig5 --seed 7 --isa=avx512 --verbose");
+        assert_eq!(a.subcommand(), Some("repro"));
+        assert_eq!(a.rest(), &["fig5".to_string()]);
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get("isa"), Some("avx512"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("--cores 12");
+        assert_eq!(a.get_parse::<usize>("cores", 4), 12);
+        assert_eq!(a.get_parse::<usize>("threads", 26), 26);
+        assert_eq!(a.get_parse::<f64>("rate", 1.5), 1.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_value_panics() {
+        let a = parse("--cores twelve");
+        a.get_parse::<usize>("cores", 4);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_value() {
+        let a = parse("--verbose --seed 3");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("seed"), Some("3"));
+    }
+}

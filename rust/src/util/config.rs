@@ -1,0 +1,249 @@
+//! TOML-subset config parser (offline substitute for `serde` + `toml`).
+//!
+//! Supports the subset the project's config files use: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! boolean / homogeneous array values, `#` comments. Values land in a flat
+//! `section.key -> Value` map with typed accessors, which is all the
+//! launcher needs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Flat dotted-key configuration map.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+fn parse_scalar(tok: &str, line: usize) -> Result<Value, ParseError> {
+    let t = tok.trim();
+    if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+        return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = t.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    Err(ParseError { line, msg: format!("cannot parse value `{t}`") })
+}
+
+/// Split a `[a, b, c]` body on commas (no nested arrays needed).
+fn parse_value(tok: &str, line: usize) -> Result<Value, ParseError> {
+    let t = tok.trim();
+    if t.starts_with('[') {
+        if !t.ends_with(']') {
+            return Err(ParseError { line, msg: "unterminated array".into() });
+        }
+        let inner = &t[1..t.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_scalar(part, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    parse_scalar(t, line)
+}
+
+/// Strip a trailing `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            let n = lineno + 1;
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ParseError { line: n, msg: "unterminated section header".into() });
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(ParseError { line: n, msg: "empty section name".into() });
+                }
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(ParseError { line: n, msg: format!("expected `key = value`, got `{line}`") });
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, parse_value(v, n)?);
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        match self.map.get(key) {
+            Some(Value::Str(s)) => s,
+            _ => default,
+        }
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        match self.map.get(key) {
+            Some(Value::Int(i)) => *i,
+            _ => default,
+        }
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        match self.map.get(key) {
+            Some(Value::Float(x)) => *x,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.map.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# simulator config
+seed = 42
+[machine]
+cores = 16            # Xeon Gold 6130
+smt = true
+turbo_ghz = [2.8, 2.4, 1.9]
+name = "xeon-gold-6130"
+[sched.corespec]
+avx_cores = 2
+penalty_ns = 1000000
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.int_or("seed", 0), 42);
+        assert_eq!(c.int_or("machine.cores", 0), 16);
+        assert!(c.bool_or("machine.smt", false));
+        assert_eq!(c.str_or("machine.name", ""), "xeon-gold-6130");
+        assert_eq!(c.int_or("sched.corespec.avx_cores", 0), 2);
+        match c.get("machine.turbo_ghz").unwrap() {
+            Value::Array(xs) => {
+                assert_eq!(xs.len(), 3);
+                assert_eq!(xs[0], Value::Float(2.8));
+            }
+            v => panic!("wrong type {v:?}"),
+        }
+    }
+
+    #[test]
+    fn float_from_int_coercion() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.float_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Config::parse("s = \"a#b\"").unwrap();
+        assert_eq!(c.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Config::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("nope", 7), 7);
+        assert_eq!(c.str_or("nope", "d"), "d");
+    }
+}

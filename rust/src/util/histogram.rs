@@ -1,0 +1,204 @@
+//! Log-bucketed latency histogram, HDR-histogram style.
+//!
+//! wrk2 (the paper's load generator) reports latency percentiles from an
+//! HDR histogram; this is the same idea at fixed precision: buckets are
+//! `(exponent, 1/32 sub-bucket)` so relative error is bounded by ~3%.
+
+const SUB_BITS: u32 = 5; // 32 sub-buckets per power of two
+const SUB: u64 = 1 << SUB_BITS;
+
+/// Histogram over `u64` values (we use nanoseconds) with bounded relative
+/// error, supporting percentile queries and merging.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    max: u64,
+    min: u64,
+}
+
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as u64;
+    let shift = msb - SUB_BITS as u64;
+    let sub = (v >> shift) - SUB; // top SUB_BITS+1 bits, minus implied leading 1
+    ((msb - SUB_BITS as u64 + 1) * SUB + sub) as usize
+}
+
+#[inline]
+fn bucket_low(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < SUB {
+        return idx;
+    }
+    let exp = (idx / SUB) - 1 + SUB_BITS as u64;
+    let sub = idx % SUB;
+    (SUB + sub) << (exp - SUB_BITS as u64)
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        // Enough buckets for values up to 2^63.
+        let n = bucket_index(u64::MAX / 2) + 2;
+        LogHistogram { buckets: vec![0; n], count: 0, sum: 0, max: 0, min: u64::MAX }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let i = bucket_index(v);
+        self.buckets[i] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+        self.min = self.min.min(v);
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Value at percentile `p` (0..=100). Returns the lower bound of the
+    /// bucket containing the target rank — a ≤3% underestimate at worst.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bucket_low(i).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Standard latency report row: p50/p90/p99/p999/max in the value's units.
+    pub fn report(&self) -> [u64; 5] {
+        [
+            self.percentile(50.0),
+            self.percentile(90.0),
+            self.percentile(99.0),
+            self.percentile(99.9),
+            self.max,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_monotone_and_invertible() {
+        let mut values: Vec<u64> = Vec::new();
+        for shift in 0..50u64 {
+            for off in [0u64, 1, 3] {
+                values.push((1u64 << shift) + off * (1 << shift.saturating_sub(4)));
+            }
+        }
+        values.sort_unstable();
+        let mut prev = 0;
+        for v in values {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index not monotone at {v}");
+            prev = i;
+            let lo = bucket_low(i);
+            assert!(lo <= v, "bucket_low {lo} > {v}");
+            // relative error bound
+            if v >= SUB {
+                assert!((v - lo) as f64 / v as f64 <= 1.0 / 16.0, "v={v} lo={lo}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let mut h = LogHistogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(100.0), 31);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn percentiles_close() {
+        let mut h = LogHistogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v * 1000); // 1µs .. 10ms in ns
+        }
+        let p50 = h.percentile(50.0) as f64;
+        assert!((p50 - 5_000_000.0).abs() / 5_000_000.0 < 0.05, "p50={p50}");
+        let p99 = h.percentile(99.0) as f64;
+        assert!((p99 - 9_900_000.0).abs() / 9_900_000.0 < 0.05, "p99={p99}");
+    }
+
+    #[test]
+    fn merge_matches_union() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut u = LogHistogram::new();
+        for v in 0..1000u64 {
+            if v % 2 == 0 {
+                a.record(v * 17)
+            } else {
+                b.record(v * 17)
+            }
+            u.record(v * 17);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), u.count());
+        assert_eq!(a.percentile(90.0), u.percentile(90.0));
+        assert_eq!(a.max(), u.max());
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = LogHistogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert!((h.mean() - 20.0).abs() < 1e-12);
+    }
+}

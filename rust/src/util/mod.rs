@@ -1,0 +1,18 @@
+//! Shared utilities: deterministic RNG, statistics, histograms, CLI and
+//! config parsing, and table formatting.
+//!
+//! Everything here is dependency-free by design: the offline build
+//! environment only vendors the `xla` crate's closure, so the usual
+//! ecosystem crates (`rand`, `serde`, `clap`, `hdrhistogram`) are
+//! re-implemented at the scale this project needs.
+
+pub mod rng;
+pub mod stats;
+pub mod histogram;
+pub mod args;
+pub mod config;
+pub mod table;
+
+pub use histogram::LogHistogram;
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,146 @@
+//! wrk2-style load generation and measurement.
+//!
+//! The paper drives nginx with wrk2 on 4 dedicated cores. wrk2 is an
+//! *open-loop, fixed-rate* generator (it corrects for coordinated
+//! omission); throughput differences between variants appear when the
+//! offered rate exceeds a variant's capacity. A closed-loop mode
+//! (fixed number of in-flight connections) is also provided — it drives
+//! every variant exactly at its own capacity.
+
+use crate::sched::machine::{Driver, Machine};
+use crate::sim::Time;
+use crate::util::{LogHistogram, Rng};
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// Load-generation mode.
+#[derive(Clone, Copy, Debug)]
+pub enum LoadMode {
+    /// Poisson arrivals at a fixed rate (requests/second).
+    Open { rate: f64 },
+    /// Fixed number of always-pending connections; a completed request
+    /// immediately enqueues the connection's next request.
+    Closed { connections: usize },
+}
+
+/// State shared between the arrival driver and the worker task bodies.
+#[derive(Debug)]
+pub struct ServerShared {
+    /// Pending requests (arrival timestamps).
+    pub queue: VecDeque<Time>,
+    /// Completions only count once measuring is on (post-warmup).
+    pub measuring: bool,
+    pub completed: u64,
+    pub latency: LogHistogram,
+    /// Closed-loop: completed requests respawn themselves.
+    pub closed_loop: bool,
+    /// Drops (queue overflow guard for pathological overload).
+    pub max_queue: usize,
+    pub dropped: u64,
+}
+
+pub type Shared = Rc<RefCell<ServerShared>>;
+
+impl ServerShared {
+    pub fn new(closed_loop: bool) -> Shared {
+        Rc::new(RefCell::new(ServerShared {
+            queue: VecDeque::new(),
+            measuring: false,
+            completed: 0,
+            latency: LogHistogram::new(),
+            closed_loop,
+            max_queue: 100_000,
+            dropped: 0,
+        }))
+    }
+
+    /// Record a completed request; in closed-loop mode the connection
+    /// immediately issues its next request.
+    pub fn complete(&mut self, now: Time, arrived: Time) {
+        if self.measuring {
+            self.completed += 1;
+            self.latency.record(now.saturating_sub(arrived));
+        }
+        if self.closed_loop {
+            self.queue.push_back(now);
+        }
+    }
+
+    pub fn push_arrival(&mut self, now: Time) -> bool {
+        if self.queue.len() >= self.max_queue {
+            self.dropped += 1;
+            return false;
+        }
+        self.queue.push_back(now);
+        true
+    }
+
+    /// Begin the measurement window (after warmup) — zero the counters.
+    pub fn start_measuring(&mut self) {
+        self.measuring = true;
+        self.completed = 0;
+        self.latency = LogHistogram::new();
+        self.dropped = 0;
+    }
+}
+
+/// Poisson arrival driver (external tag 0 = next arrival).
+pub struct OpenLoopDriver {
+    pub shared: Shared,
+    pub ch: u32,
+    pub rate: f64,
+    pub rng: Rng,
+}
+
+impl Driver for OpenLoopDriver {
+    fn on_external(&mut self, _tag: u64, m: &mut Machine) {
+        let now = m.now();
+        if self.shared.borrow_mut().push_arrival(now) {
+            m.notify(self.ch);
+        }
+        let mean_gap_ns = 1e9 / self.rate;
+        let gap = self.rng.exponential(mean_gap_ns).max(1.0) as Time;
+        m.schedule_external(now + gap, 0);
+    }
+}
+
+impl OpenLoopDriver {
+    /// Install the driver's first arrival event.
+    pub fn start(&self, m: &mut Machine) {
+        m.schedule_external(m.now() + 1, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_counts_only_while_measuring() {
+        let s = ServerShared::new(false);
+        s.borrow_mut().complete(100, 50);
+        assert_eq!(s.borrow().completed, 0);
+        s.borrow_mut().start_measuring();
+        s.borrow_mut().complete(200, 60);
+        assert_eq!(s.borrow().completed, 1);
+        assert_eq!(s.borrow().latency.max(), 140);
+    }
+
+    #[test]
+    fn closed_loop_respawns() {
+        let s = ServerShared::new(true);
+        s.borrow_mut().complete(100, 50);
+        assert_eq!(s.borrow().queue.len(), 1);
+    }
+
+    #[test]
+    fn queue_overflow_drops() {
+        let s = ServerShared::new(false);
+        s.borrow_mut().max_queue = 2;
+        assert!(s.borrow_mut().push_arrival(1));
+        assert!(s.borrow_mut().push_arrival(2));
+        assert!(!s.borrow_mut().push_arrival(3));
+        assert_eq!(s.borrow().dropped, 1);
+    }
+}

@@ -1,0 +1,226 @@
+//! §4.3 thread-migration overhead microbenchmark.
+//!
+//! "Our microbenchmark executes a simple loop consisting solely of scalar
+//! instructions without any memory accesses. For core specialization, 5%
+//! of the loop is marked **as if** it was AVX code." — the marked section
+//! stays scalar, so any runtime difference is pure mechanism overhead
+//! (syscalls, requeues, IPIs, migrations), which is what Fig 7 plots
+//! against the task-type-change rate.
+//!
+//! Setup mirrors the paper: 26 threads on 12 physical cores (4 cores
+//! idle, C-states disabled so turbo does not inflate the baseline), loop
+//! length swept to vary the change rate.
+
+use crate::cpu::turbo::TurboTable;
+use crate::isa::block::{Block, ClassMix};
+use crate::sched::machine::{Action, Machine, MachineParams, NullDriver, TaskBody};
+use crate::sched::{PolicyKind, TaskType};
+use crate::sim::{Time, SEC};
+use crate::util::Rng;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Configuration for one microbenchmark run.
+#[derive(Clone, Debug)]
+pub struct MicrobenchCfg {
+    /// Instructions per loop iteration (the swept parameter).
+    pub loop_insns: u64,
+    /// Fraction of the loop marked as AVX (paper: 5%).
+    pub avx_fraction: f64,
+    /// Whether the marked section is annotated (core-spec run) or the
+    /// loop runs unannotated (baseline run).
+    pub annotate: bool,
+    pub policy: PolicyKind,
+    pub threads: usize,
+    pub cores: usize,
+    pub duration: Time,
+    pub seed: u64,
+}
+
+impl MicrobenchCfg {
+    pub fn paper_default(loop_insns: u64, annotate: bool) -> Self {
+        MicrobenchCfg {
+            loop_insns,
+            avx_fraction: 0.05,
+            annotate,
+            policy: if annotate {
+                PolicyKind::CoreSpec { avx_cores: 2 }
+            } else {
+                PolicyKind::Unmodified
+            },
+            threads: 26,
+            cores: 12,
+            duration: 2 * SEC,
+            seed: 42,
+        }
+    }
+}
+
+/// Loop body: `avx_fraction` of each iteration is wrapped in
+/// `with_avx()`/`without_avx()` when annotated. All work is scalar and
+/// memory-free, per the paper.
+struct LoopBody {
+    cfg: MicrobenchCfg,
+    iters_done: Rc<RefCell<u64>>,
+    phase: u8,
+}
+
+impl TaskBody for LoopBody {
+    fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+        let marked = (self.cfg.loop_insns as f64 * self.cfg.avx_fraction) as u64;
+        let unmarked = self.cfg.loop_insns - marked;
+        let block = |n: u64| Block { mix: ClassMix::scalar(n), mem_ops: 0, branches: n / 40, license_exempt: false };
+        if self.cfg.annotate {
+            match self.phase {
+                0 => {
+                    self.phase = 1;
+                    Action::SetType(TaskType::Avx)
+                }
+                1 => {
+                    self.phase = 2;
+                    Action::Run { block: block(marked.max(1)), func: 0xAAA, stack: 0 }
+                }
+                2 => {
+                    self.phase = 3;
+                    Action::SetType(TaskType::Scalar)
+                }
+                _ => {
+                    self.phase = 0;
+                    *self.iters_done.borrow_mut() += 1;
+                    Action::Run { block: block(unmarked.max(1)), func: 0xBBB, stack: 0 }
+                }
+            }
+        } else {
+            // Baseline: same instruction stream, no annotations.
+            match self.phase {
+                0 => {
+                    self.phase = 1;
+                    Action::Run { block: block(marked.max(1)), func: 0xAAA, stack: 0 }
+                }
+                _ => {
+                    self.phase = 0;
+                    *self.iters_done.borrow_mut() += 1;
+                    Action::Run { block: block(unmarked.max(1)), func: 0xBBB, stack: 0 }
+                }
+            }
+        }
+    }
+}
+
+/// Result of one run.
+#[derive(Clone, Debug)]
+pub struct MicrobenchRun {
+    pub loop_insns: u64,
+    pub iterations: u64,
+    /// Aggregate iteration throughput (iters/s across all threads).
+    pub iters_per_sec: f64,
+    /// Task-type changes per second (2 per iteration when annotated).
+    pub type_changes_per_sec: f64,
+    pub migrations_per_sec: f64,
+}
+
+/// Execute one microbenchmark configuration.
+pub fn run_microbench(cfg: &MicrobenchCfg) -> MicrobenchRun {
+    let mut mp = MachineParams::new(cfg.cores, cfg.policy.clone());
+    // C-states disabled: all-core turbo regardless of idle cores (§4.3).
+    mp.turbo = TurboTable::xeon_gold_6130_no_cstates();
+    mp.seed = cfg.seed;
+    let mut m = Machine::new(mp);
+    let iters = Rc::new(RefCell::new(0u64));
+    for _ in 0..cfg.threads {
+        m.spawn(
+            if cfg.annotate { TaskType::Scalar } else { TaskType::Untyped },
+            0,
+            Box::new(LoopBody { cfg: cfg.clone(), iters_done: iters.clone(), phase: 0 }),
+        );
+    }
+    // Warmup 10% then measure.
+    let warmup = cfg.duration / 10;
+    m.run_until(warmup, &mut NullDriver);
+    m.reset_metrics();
+    let base_iters = *iters.borrow();
+    m.run_until(warmup + cfg.duration, &mut NullDriver);
+    let done = *iters.borrow() - base_iters;
+    let secs = cfg.duration as f64 / SEC as f64;
+    MicrobenchRun {
+        loop_insns: cfg.loop_insns,
+        iterations: done,
+        iters_per_sec: done as f64 / secs,
+        type_changes_per_sec: m.sched.stats.type_changes as f64 / secs,
+        migrations_per_sec: m.sched.stats.migrations as f64 / secs,
+    }
+}
+
+/// Fig 7's derived metrics for one loop length: overhead vs baseline and
+/// cost per switch pair.
+#[derive(Clone, Debug)]
+pub struct OverheadPoint {
+    pub type_changes_per_sec: f64,
+    pub overhead_pct: f64,
+    pub ns_per_switch_pair: f64,
+}
+
+/// Run annotated + baseline at one loop length and derive the Fig 7 point.
+pub fn overhead_point(loop_insns: u64) -> OverheadPoint {
+    let ann = run_microbench(&MicrobenchCfg::paper_default(loop_insns, true));
+    let base = run_microbench(&MicrobenchCfg::paper_default(loop_insns, false));
+    let overhead = (base.iters_per_sec - ann.iters_per_sec) / base.iters_per_sec;
+    // Each iteration performs one with_avx + one without_avx = 1 pair.
+    // Lost time per pair = overhead fraction × total cpu time / pairs.
+    let total_cpu_ns = 12.0 * 1e9; // 12 cores × 1 s, normalized basis
+    let pairs_per_sec_all_cores = ann.type_changes_per_sec / 2.0;
+    let ns_per_pair = if pairs_per_sec_all_cores > 0.0 {
+        overhead * total_cpu_ns / pairs_per_sec_all_cores
+    } else {
+        0.0
+    };
+    OverheadPoint {
+        type_changes_per_sec: ann.type_changes_per_sec,
+        overhead_pct: overhead * 100.0,
+        ns_per_switch_pair: ns_per_pair,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MS;
+
+    fn quick(loop_insns: u64, annotate: bool) -> MicrobenchCfg {
+        let mut c = MicrobenchCfg::paper_default(loop_insns, annotate);
+        c.duration = 300 * MS;
+        c.threads = 8;
+        c.cores = 4;
+        c
+    }
+
+    #[test]
+    fn annotated_run_counts_type_changes() {
+        let r = run_microbench(&quick(200_000, true));
+        assert!(r.iterations > 100);
+        assert!(r.type_changes_per_sec > 1_000.0, "rate={}", r.type_changes_per_sec);
+    }
+
+    #[test]
+    fn baseline_has_no_type_changes() {
+        let r = run_microbench(&quick(200_000, false));
+        assert_eq!(r.type_changes_per_sec, 0.0);
+        assert!(r.iterations > 100);
+    }
+
+    #[test]
+    fn overhead_grows_with_change_rate() {
+        // Shorter loops → more type changes/s → more overhead. Uses small
+        // configs (debug builds run this); the full-size sweep is Fig 7.
+        let point = |loop_insns: u64| {
+            let ann = run_microbench(&quick(loop_insns, true));
+            let base = run_microbench(&quick(loop_insns, false));
+            let overhead = (base.iters_per_sec - ann.iters_per_sec) / base.iters_per_sec;
+            (ann.type_changes_per_sec, overhead)
+        };
+        let (slow_rate, slow_ovh) = point(2_000_000);
+        let (fast_rate, fast_ovh) = point(100_000);
+        assert!(fast_rate > slow_rate * 5.0);
+        assert!(fast_ovh >= slow_ovh, "fast={fast_ovh} slow={slow_ovh}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Workload models: the paper's evaluation scenarios.
+//!
+//! * [`crypto`] — ChaCha20-Poly1305 record processing per SIMD instruction
+//!   set (the OpenSSL code the paper compiles for SSE4/AVX2/AVX-512).
+//! * [`compress`] — brotli-style on-the-fly compression (scalar work).
+//! * [`webserver`] — the nginx HTTPS scenario of §4: worker tasks serving
+//!   requests whose SSL functions are (optionally) annotated.
+//! * [`client`] — wrk2-style load generation (open-loop fixed rate and
+//!   closed-loop) plus latency/throughput accounting.
+//! * [`microbench`] — the §4.3 thread-migration overhead microbenchmark.
+
+pub mod crypto;
+pub mod compress;
+pub mod client;
+pub mod webserver;
+pub mod microbench;
+
+pub use crypto::Isa;

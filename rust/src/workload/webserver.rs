@@ -1,0 +1,669 @@
+//! The paper's §4 evaluation workload: nginx serving a (optionally
+//! brotli-compressed) static page over HTTPS with OpenSSL
+//! ChaCha20-Poly1305, compiled for SSE4 / AVX2 / AVX-512.
+//!
+//! Worker tasks execute the per-request pipeline as instruction blocks;
+//! with `annotate = true`, the SSL entry points are wrapped in
+//! `with_avx()` / `without_avx()` exactly like the paper's 9-line nginx
+//! patch (SSL_read, SSL_write, SSL_do_handshake, SSL_shutdown).
+
+use super::client::{LoadMode, OpenLoopDriver, ServerShared, Shared};
+use super::compress::CompressProfile;
+use super::crypto::{CryptoProfile, Isa};
+use crate::analysis::flamegraph::StackTable;
+use crate::isa::block::{Block, ClassMix};
+use crate::isa::{Binary, Function};
+use crate::sched::machine::{Action, Machine, MachineParams, TaskBody};
+use crate::sched::{PolicyKind, TaskType};
+use crate::sim::{Time, MS, SEC};
+use crate::util::Rng;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// Scenario configuration.
+#[derive(Clone, Debug)]
+pub struct WebCfg {
+    pub isa: Isa,
+    /// Compress the page on the fly (the paper's main scenario).
+    pub compress: bool,
+    /// Uncompressed page size in bytes.
+    pub page_bytes: usize,
+    /// Emit `with_avx()`/`without_avx()` around SSL calls.
+    pub annotate: bool,
+    pub policy: PolicyKind,
+    /// Worker tasks (nginx: 2 per physical core ≈ one per hw thread).
+    pub workers: usize,
+    /// Physical server cores (paper: 12 of 16).
+    pub cores: usize,
+    pub mode: LoadMode,
+    /// Full TLS handshake every N requests per connection (keepalive).
+    pub handshake_every: u64,
+    pub seed: u64,
+    /// Simulated warmup before measurement.
+    pub warmup: Time,
+    /// Measurement window.
+    pub measure: Time,
+    /// Collect flame-graph samples.
+    pub track_flame: bool,
+    /// Enable §6.1 fault-and-migrate instead of annotations.
+    pub fault_migrate: bool,
+    /// §3.1/§4.3 adaptive AVX-core allocation (CoreSpec policies only).
+    pub adaptive: Option<crate::sched::adaptive::AdaptiveParams>,
+}
+
+impl WebCfg {
+    /// The paper's compressed-page scenario at a load slightly above the
+    /// fastest variant's capacity, so throughput reflects capacity.
+    pub fn paper_default(isa: Isa, policy: PolicyKind) -> Self {
+        WebCfg {
+            isa,
+            compress: true,
+            page_bytes: 72 * 1024,
+            annotate: !matches!(policy, PolicyKind::Unmodified),
+            policy,
+            workers: 24,
+            cores: 12,
+            mode: LoadMode::Open { rate: 60_000.0 },
+            handshake_every: 20,
+            seed: 0x5EED,
+            warmup: SEC,
+            measure: 4 * SEC,
+            track_flame: false,
+            fault_migrate: false,
+            adaptive: None,
+        }
+    }
+
+    /// Uncompressed variant (Fig 2 middle group).
+    pub fn uncompressed(isa: Isa, policy: PolicyKind) -> Self {
+        let mut c = Self::paper_default(isa, policy);
+        c.compress = false;
+        c.mode = LoadMode::Open { rate: 400_000.0 };
+        c
+    }
+
+    /// Build a scenario from a TOML config (see `configs/*.toml`).
+    /// Unspecified keys keep the paper defaults.
+    pub fn from_config(conf: &crate::util::config::Config) -> anyhow::Result<Self> {
+        let isa = match conf.str_or("server.isa", "avx512") {
+            "sse4" => Isa::Sse4,
+            "avx2" => Isa::Avx2,
+            "avx512" => Isa::Avx512,
+            other => anyhow::bail!("server.isa = {other:?} (sse4|avx2|avx512)"),
+        };
+        let avx_cores = conf.int_or("sched.avx_cores", 2) as usize;
+        let policy = match conf.str_or("sched.policy", "corespec") {
+            "unmodified" => PolicyKind::Unmodified,
+            "corespec" => PolicyKind::CoreSpec { avx_cores },
+            "strict" => PolicyKind::StrictPartition { avx_cores },
+            other => anyhow::bail!("sched.policy = {other:?} (unmodified|corespec|strict)"),
+        };
+        let mut cfg = WebCfg::paper_default(isa, policy);
+        cfg.compress = conf.bool_or("server.compress", cfg.compress);
+        cfg.page_bytes = conf.int_or("server.page_kib", (cfg.page_bytes / 1024) as i64) as usize * 1024;
+        cfg.workers = conf.int_or("server.workers", cfg.workers as i64) as usize;
+        cfg.cores = conf.int_or("machine.cores", cfg.cores as i64) as usize;
+        cfg.handshake_every = conf.int_or("server.handshake_every", cfg.handshake_every as i64) as u64;
+        cfg.annotate = conf.bool_or("sched.annotate", cfg.annotate);
+        cfg.fault_migrate = conf.bool_or("sched.fault_migrate", false);
+        if conf.bool_or("sched.adaptive", false) {
+            cfg.adaptive = Some(Default::default());
+        }
+        cfg.seed = conf.int_or("seed", cfg.seed as i64) as u64;
+        let rate = conf.float_or("load.rate", -1.0);
+        let conns = conf.int_or("load.connections", -1);
+        match (rate > 0.0, conns > 0) {
+            (true, true) => anyhow::bail!("set load.rate or load.connections, not both"),
+            (true, false) => cfg.mode = LoadMode::Open { rate },
+            (false, true) => cfg.mode = LoadMode::Closed { connections: conns as usize },
+            (false, false) => {}
+        }
+        cfg.warmup = (conf.float_or("load.warmup_s", cfg.warmup as f64 / SEC as f64) * SEC as f64) as Time;
+        cfg.measure = (conf.float_or("load.measure_s", cfg.measure as f64 / SEC as f64) * SEC as f64) as Time;
+        Ok(cfg)
+    }
+}
+
+/// One step of a request plan.
+#[derive(Clone, Debug)]
+enum Step {
+    Set(TaskType),
+    Exec { func: u64, stack: u32, block: Block },
+}
+
+/// Interned symbols + precomputed stacks for the request pipeline.
+struct Symbols {
+    stacks: Rc<RefCell<StackTable>>,
+}
+
+fn fnv(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Symbols {
+    fn stack(&self, frames: &[&str]) -> u32 {
+        self.stacks.borrow_mut().intern(frames)
+    }
+}
+
+/// Builds per-request step plans.
+struct Planner {
+    cfg: WebCfg,
+    crypto: CryptoProfile,
+    compress: CompressProfile,
+    syms: Symbols,
+    // Precomputed stack ids.
+    st_process: u32,
+    st_ssl_read: u32,
+    st_chacha_r: u32,
+    st_poly_r: u32,
+    st_static: u32,
+    st_brotli: u32,
+    st_chacha_w: u32,
+    st_poly_w: u32,
+    st_finalize: u32,
+    st_handshake: u32,
+}
+
+impl Planner {
+    fn new(cfg: WebCfg, stacks: Rc<RefCell<StackTable>>) -> Self {
+        let crypto = CryptoProfile::for_isa(cfg.isa);
+        let syms = Symbols { stacks };
+        let chacha = crypto.chacha_symbol();
+        let poly = crypto.poly_symbol();
+        let st_process = syms.stack(&["nginx", "ngx_http_process_request"]);
+        let st_ssl_read = syms.stack(&["nginx", "ngx_ssl_recv", "SSL_read"]);
+        let st_chacha_r = syms.stack(&["nginx", "ngx_ssl_recv", "SSL_read", chacha]);
+        let st_poly_r = syms.stack(&["nginx", "ngx_ssl_recv", "SSL_read", poly]);
+        let st_static = syms.stack(&["nginx", "ngx_http_static_handler"]);
+        let st_brotli =
+            syms.stack(&["nginx", "ngx_http_brotli_filter", "BrotliEncoderCompressStream"]);
+        let st_chacha_w = syms.stack(&["nginx", "ngx_ssl_send_chain", "SSL_write", chacha]);
+        let st_poly_w = syms.stack(&["nginx", "ngx_ssl_send_chain", "SSL_write", poly]);
+        let st_finalize = syms.stack(&["nginx", "ngx_http_finalize_request"]);
+        let st_handshake = syms.stack(&["nginx", "ngx_ssl_handshake", "SSL_do_handshake"]);
+        Planner {
+            cfg,
+            crypto,
+            compress: CompressProfile::default(),
+            syms,
+            st_process,
+            st_ssl_read,
+            st_chacha_r,
+            st_poly_r,
+            st_static,
+            st_brotli,
+            st_chacha_w,
+            st_poly_w,
+            st_finalize,
+            st_handshake,
+        }
+    }
+
+    fn scalar_step(&self, name: &str, stack: u32, insns: u64) -> Step {
+        Step::Exec {
+            func: fnv(name),
+            stack,
+            block: Block::new(ClassMix::scalar(insns)),
+        }
+    }
+
+    fn crypto_steps(&self, bytes: usize, read: bool, rng: &mut Rng, out: &mut VecDeque<Step>) {
+        for (sym, block) in self.crypto.record_blocks(bytes, rng) {
+            let stack = if sym.contains("ChaCha") {
+                if read {
+                    self.st_chacha_r
+                } else {
+                    self.st_chacha_w
+                }
+            } else if read {
+                self.st_poly_r
+            } else {
+                self.st_poly_w
+            };
+            out.push_back(Step::Exec { func: fnv(sym), stack, block });
+        }
+    }
+
+    /// Build the step plan for one request. `reqno` drives the keepalive
+    /// handshake cadence.
+    fn plan(&self, reqno: u64, rng: &mut Rng) -> VecDeque<Step> {
+        let mut steps = VecDeque::with_capacity(24);
+        let annotate = self.cfg.annotate;
+        let _ = &self.syms;
+
+        // Accept/parse (scalar).
+        steps.push_back(self.scalar_step("ngx_http_process_request", self.st_process, 45_000));
+
+        // Occasional full TLS handshake (keepalive connections).
+        if self.cfg.handshake_every > 0 && reqno % self.cfg.handshake_every == 0 {
+            if annotate {
+                steps.push_back(Step::Set(TaskType::Avx));
+            }
+            // ECDHE/bignum: predominantly scalar with a small AEAD finish.
+            steps.push_back(self.scalar_step("SSL_do_handshake", self.st_handshake, 280_000));
+            self.crypto_steps(512, false, rng, &mut steps);
+            if annotate {
+                steps.push_back(Step::Set(TaskType::Scalar));
+            }
+        }
+
+        // SSL_read: decrypt the (small) request.
+        if annotate {
+            steps.push_back(Step::Set(TaskType::Avx));
+        }
+        steps.push_back(self.scalar_step("SSL_read", self.st_ssl_read, 6_000));
+        self.crypto_steps(512, true, rng, &mut steps);
+        if annotate {
+            steps.push_back(Step::Set(TaskType::Scalar));
+        }
+
+        // Static file handling (scalar).
+        steps.push_back(self.scalar_step("ngx_http_static_handler", self.st_static, 35_000));
+
+        // Optional on-the-fly compression (scalar, the big chunk).
+        let body_bytes = if self.cfg.compress {
+            for (sym, block) in self.compress.blocks(self.cfg.page_bytes) {
+                steps.push_back(Step::Exec { func: fnv(sym), stack: self.st_brotli, block });
+            }
+            self.compress.output_bytes(self.cfg.page_bytes)
+        } else {
+            self.cfg.page_bytes
+        };
+
+        // SSL_write: encrypt the response in 16 KiB TLS records.
+        if annotate {
+            steps.push_back(Step::Set(TaskType::Avx));
+        }
+        let mut left = body_bytes;
+        while left > 0 {
+            let rec = left.min(16 * 1024);
+            self.crypto_steps(rec, false, rng, &mut steps);
+            left -= rec;
+        }
+        if annotate {
+            steps.push_back(Step::Set(TaskType::Scalar));
+        }
+
+        // Finalize/log (scalar).
+        steps.push_back(self.scalar_step("ngx_http_finalize_request", self.st_finalize, 18_000));
+        steps
+    }
+}
+
+/// Worker task body: pulls requests from the shared queue, executes the
+/// plan step by step.
+struct Worker {
+    planner: Rc<Planner>,
+    shared: Shared,
+    ch: u32,
+    rng: Rng,
+    reqno: u64,
+    current: Option<(Time, VecDeque<Step>)>,
+}
+
+impl TaskBody for Worker {
+    fn next(&mut self, now: Time, _rng: &mut Rng) -> Action {
+        loop {
+            if let Some((arrived, steps)) = &mut self.current {
+                match steps.pop_front() {
+                    Some(Step::Set(t)) => return Action::SetType(t),
+                    Some(Step::Exec { func, stack, block }) => {
+                        return Action::Run { block, func, stack }
+                    }
+                    None => {
+                        let arrived = *arrived;
+                        self.current = None;
+                        self.shared.borrow_mut().complete(now, arrived);
+                    }
+                }
+            } else {
+                let work = self.shared.borrow_mut().queue.pop_front();
+                match work {
+                    Some(arrived) => {
+                        self.reqno += 1;
+                        let plan = self.planner.plan(self.reqno, &mut self.rng);
+                        self.current = Some((arrived, plan));
+                    }
+                    None => return Action::WaitChannel(self.ch),
+                }
+            }
+        }
+    }
+}
+
+/// Periodic untyped housekeeping task (kernel threads / softirq): keeps
+/// the untyped queue non-empty so the §3.2 starvation rule is exercised.
+struct Housekeeper {
+    period: Time,
+}
+
+impl TaskBody for Housekeeper {
+    fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+        let work = Action::Run {
+            block: Block::new(ClassMix::scalar(4_000)),
+            func: fnv("kworker"),
+            stack: 0,
+        };
+        // Alternate run/sleep via a 2-phase toggle on the period sign.
+        if self.period & 1 == 0 {
+            self.period |= 1;
+            work
+        } else {
+            self.period &= !1;
+            Action::Sleep(self.period)
+        }
+    }
+}
+
+/// Results of one web-server run.
+#[derive(Clone, Debug)]
+pub struct WebRun {
+    pub cfg_name: String,
+    pub throughput_rps: f64,
+    pub avg_ghz: f64,
+    pub ipc: f64,
+    pub insns_per_req: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub type_changes_per_sec: f64,
+    pub migrations_per_sec: f64,
+    pub throttle_ratio: f64,
+    pub license_share: [f64; 3],
+    pub completed: u64,
+    /// AVX-core count at the end of the run (≠ initial when adaptive).
+    pub final_avx_cores: usize,
+    /// Number of adaptive grow/shrink decisions taken.
+    pub adaptive_changes: u64,
+}
+
+/// Run the web-server scenario and report run-level metrics.
+pub fn run_webserver(cfg: &WebCfg) -> WebRun {
+    let (run, _m) = run_webserver_machine(cfg);
+    run
+}
+
+/// Like [`run_webserver`] but also returns the machine (for flame graphs
+/// and counter inspection).
+pub fn run_webserver_machine(cfg: &WebCfg) -> (WebRun, Machine) {
+    run_webserver_impl(cfg, crate::sched::SchedParams::default())
+}
+
+/// Run with explicit scheduler parameters (ablation hook).
+pub fn run_webserver_with_params(cfg: &WebCfg, sched: crate::sched::SchedParams) -> WebRun {
+    run_webserver_impl(cfg, sched).0
+}
+
+fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun, Machine) {
+    let stacks = Rc::new(RefCell::new(StackTable::new()));
+    let planner = Rc::new(Planner::new(cfg.clone(), stacks.clone()));
+
+    let mut mp = MachineParams::new(cfg.cores, cfg.policy.clone());
+    mp.sched = sched;
+    mp.seed = cfg.seed;
+    mp.extra_active_cores = 4; // wrk2 client cores keep the package awake
+    mp.track_flame = cfg.track_flame;
+    if cfg.fault_migrate {
+        mp.fault_migrate = Some(Default::default());
+    }
+    let mut m = Machine::new(mp);
+    let ch = m.channel();
+
+    let closed = matches!(cfg.mode, LoadMode::Closed { .. });
+    let shared = ServerShared::new(closed);
+
+    let mut seed_rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+    for _ in 0..cfg.workers {
+        let body = Worker {
+            planner: planner.clone(),
+            shared: shared.clone(),
+            ch,
+            rng: seed_rng.fork(),
+            reqno: seed_rng.below(1_000) as u64, // desync handshake phases
+            current: None,
+        };
+        // nginx workers start untyped-equivalent: the paper's patch types
+        // them scalar on first classification; we spawn them scalar.
+        let ttype = if cfg.annotate { TaskType::Scalar } else { TaskType::Untyped };
+        m.spawn(ttype, 0, Box::new(body));
+    }
+    // A couple of untyped housekeeping tasks.
+    for _ in 0..2 {
+        m.spawn(TaskType::Untyped, 0, Box::new(Housekeeper { period: 2 * MS }));
+    }
+
+    // Composite driver: arrivals (tag 0) + adaptive controller (tag 1).
+    let open = match cfg.mode {
+        LoadMode::Open { rate } => Some(OpenLoopDriver {
+            shared: shared.clone(),
+            ch,
+            rate,
+            rng: Rng::new(cfg.seed ^ 0xDEAD),
+        }),
+        LoadMode::Closed { connections } => {
+            {
+                let mut s = shared.borrow_mut();
+                for _ in 0..connections {
+                    s.queue.push_back(0);
+                }
+            }
+            for _ in 0..connections.min(cfg.workers) {
+                m.notify(ch);
+            }
+            None
+        }
+    };
+    let ctl = cfg
+        .adaptive
+        .map(|params| crate::sched::adaptive::Controller::new(params, cfg.cores));
+    let mut driver = WebDriver { open, ctl };
+    if driver.open.is_some() {
+        m.schedule_external(m.now() + 1, 0);
+    }
+    if let Some(c) = &driver.ctl {
+        m.schedule_external(m.now() + c.params.interval, 1);
+    }
+    m.run_until(cfg.warmup, &mut driver);
+    m.reset_metrics();
+    shared.borrow_mut().start_measuring();
+    m.run_until(cfg.warmup + cfg.measure, &mut driver);
+    let final_avx_cores = m.sched.policy.avx_core_count();
+    let adaptive_changes = driver.ctl.as_ref().map(|c| c.grows + c.shrinks).unwrap_or(0);
+
+    let total = m.total_perf();
+    let s = shared.borrow();
+    let secs = cfg.measure as f64 / SEC as f64;
+    let completed = s.completed;
+    let run = WebRun {
+        cfg_name: format!(
+            "{}/{}/{}",
+            cfg.isa.name(),
+            if cfg.compress { "compressed" } else { "plain" },
+            cfg.policy.name()
+        ),
+        throughput_rps: completed as f64 / secs,
+        avg_ghz: total.avg_busy_ghz(),
+        ipc: total.ipc(),
+        insns_per_req: if completed > 0 { total.instructions as f64 / completed as f64 } else { 0.0 },
+        p50_us: s.latency.percentile(50.0) as f64 / 1_000.0,
+        p99_us: s.latency.percentile(99.0) as f64 / 1_000.0,
+        type_changes_per_sec: m.sched.stats.type_changes as f64 / secs,
+        migrations_per_sec: m.sched.stats.migrations as f64 / secs,
+        throttle_ratio: total.throttle_ratio(),
+        license_share: total.license_time_share(),
+        completed,
+        final_avx_cores,
+        adaptive_changes,
+    };
+    (run, m)
+}
+
+/// Composite web driver: open-loop arrivals + the adaptive controller.
+struct WebDriver {
+    open: Option<OpenLoopDriver>,
+    ctl: Option<crate::sched::adaptive::Controller>,
+}
+
+impl crate::sched::machine::Driver for WebDriver {
+    fn on_external(&mut self, tag: u64, m: &mut Machine) {
+        match tag {
+            0 => {
+                if let Some(o) = &mut self.open {
+                    o.on_external(0, m);
+                }
+            }
+            1 => {
+                if let Some(c) = &mut self.ctl {
+                    c.tick(m);
+                    let next = m.now() + c.params.interval;
+                    m.schedule_external(next, 1);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Rebuild the stack table a run's planner used (interning is
+/// deterministic per ISA), for decoding `Machine::flame` samples.
+pub fn stack_table_for(isa: Isa) -> StackTable {
+    let stacks = Rc::new(RefCell::new(StackTable::new()));
+    let cfg = WebCfg::paper_default(isa, PolicyKind::Unmodified);
+    let _planner = Planner::new(cfg, stacks.clone());
+    drop(_planner);
+    Rc::try_unwrap(stacks).expect("sole owner").into_inner()
+}
+
+/// The simulated `nginx` + `libcrypto.so` binaries for the static
+/// analyzer (paper §3.3 disassembles the server and its libraries).
+pub fn build_binaries(isa: Isa) -> Vec<Binary> {
+    let crypto = CryptoProfile::for_isa(isa);
+    let mut rng = Rng::new(7);
+
+    let mut nginx = Binary::new("nginx");
+    for (name, insns) in [
+        ("ngx_http_process_request", 45_000u64),
+        ("ngx_http_static_handler", 35_000),
+        ("ngx_http_finalize_request", 18_000),
+        ("ngx_event_accept", 9_000),
+        ("ngx_http_log_handler", 6_000),
+    ] {
+        nginx.add(Function::new(name).push(Block::new(ClassMix::scalar(insns))));
+    }
+
+    let mut libbrotli = Binary::new("libbrotli.so");
+    {
+        let mut f = Function::new("BrotliEncoderCompressStream");
+        for (_, b) in CompressProfile::default().blocks(8192) {
+            f.blocks.push(b);
+        }
+        libbrotli.add(f);
+    }
+
+    let mut libcrypto = Binary::new("libcrypto.so");
+    {
+        let mut chacha = Function::new(crypto.chacha_symbol());
+        chacha.blocks.push(crypto.chacha_block(4096, &mut rng));
+        libcrypto.add(chacha);
+        let mut poly = Function::new(crypto.poly_symbol());
+        poly.blocks.push(crypto.poly_block(16384, &mut rng));
+        libcrypto.add(poly);
+        libcrypto.add(
+            Function::new("EVP_EncryptUpdate").push(Block::new(ClassMix::scalar(2_000))),
+        );
+        libcrypto.add(Function::new("bn_mul_mont").push(Block::new(ClassMix::scalar(40_000))));
+    }
+
+    let mut libc = Binary::new("libc.so.6");
+    // memcpy uses wide registers *sparsely* — the §3.3 false positive.
+    libc.add(Function::new("__memmove_avx_unaligned").push(Block {
+        mix: ClassMix::scalar(60).with(crate::isa::block::InsnClass::Avx2Light, 40),
+        mem_ops: 48,
+        branches: 6, license_exempt: false,
+    }));
+    libc.add(Function::new("__memset_avx2_unaligned").push(Block {
+        mix: ClassMix::scalar(40).with(crate::isa::block::InsnClass::Avx2Light, 24),
+        mem_ops: 30,
+        branches: 4, license_exempt: false,
+    }));
+    libc.add(Function::new("malloc").push(Block::new(ClassMix::scalar(900))));
+    // glibc profiling code with AVX-512 (the paper's static-analysis hit).
+    libc.add(Function::new("__memcpy_avx512_no_vzeroupper").push(Block {
+        mix: ClassMix::scalar(50).with(crate::isa::block::InsnClass::Avx512Light, 44),
+        mem_ops: 50,
+        branches: 5, license_exempt: false,
+    }));
+
+    vec![nginx, libcrypto, libbrotli, libc]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(isa: Isa, policy: PolicyKind) -> WebCfg {
+        let mut c = WebCfg::paper_default(isa, policy);
+        c.cores = 4;
+        c.workers = 8;
+        c.page_bytes = 8 * 1024; // small pages: fast under debug builds
+        c.warmup = 150 * MS;
+        c.measure = 300 * MS;
+        c.mode = LoadMode::Open { rate: 30_000.0 };
+        c
+    }
+
+    #[test]
+    fn serves_requests_and_reports() {
+        let run = run_webserver(&quick_cfg(Isa::Sse4, PolicyKind::Unmodified));
+        assert!(run.completed > 100, "completed={}", run.completed);
+        assert!(run.throughput_rps > 0.0);
+        assert!(run.avg_ghz > 1.8 && run.avg_ghz < 3.8, "ghz={}", run.avg_ghz);
+        assert!(run.p50_us > 0.0);
+    }
+
+    #[test]
+    fn sse4_faster_than_avx512_when_unmodified() {
+        let sse = run_webserver(&quick_cfg(Isa::Sse4, PolicyKind::Unmodified));
+        let avx = run_webserver(&quick_cfg(Isa::Avx512, PolicyKind::Unmodified));
+        assert!(
+            avx.avg_ghz < sse.avg_ghz * 0.97,
+            "AVX-512 must drag frequency: {} vs {}",
+            avx.avg_ghz,
+            sse.avg_ghz
+        );
+    }
+
+    #[test]
+    fn corespec_keeps_scalar_cores_clean() {
+        let cfg = quick_cfg(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 });
+        let (_run, m) = run_webserver_machine(&cfg);
+        for c in 0..3 {
+            assert_eq!(
+                m.cores[c].perf.license_cycles[2],
+                0,
+                "scalar core {c} saw L2 cycles"
+            );
+        }
+    }
+
+    #[test]
+    fn annotations_produce_type_changes() {
+        let run = run_webserver(&quick_cfg(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 }));
+        assert!(run.type_changes_per_sec > 1000.0, "rate={}", run.type_changes_per_sec);
+    }
+
+    #[test]
+    fn binaries_contain_expected_symbols() {
+        let bins = build_binaries(Isa::Avx512);
+        let names: Vec<&str> = bins.iter().map(|b| b.name.as_str()).collect();
+        assert!(names.contains(&"nginx") && names.contains(&"libcrypto.so"));
+        let crypto = &bins[1];
+        assert!(crypto.lookup("ChaCha20_ctr32_avx512").is_some());
+    }
+}

@@ -1,0 +1,214 @@
+//! Integration tests: whole-system simulations, the identification
+//! workflow, and the repro runners (shortened configurations — the full
+//! windows run via `avxfreq repro`).
+
+use avxfreq::analysis::flamegraph::{self, Counter};
+use avxfreq::analysis::static_analysis;
+use avxfreq::sched::PolicyKind;
+use avxfreq::sim::MS;
+use avxfreq::util::stats::pct_change;
+use avxfreq::workload::client::LoadMode;
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::microbench::overhead_point;
+use avxfreq::workload::webserver::{
+    build_binaries, run_webserver, run_webserver_machine, stack_table_for, WebCfg,
+};
+
+/// Short-window version of the paper scenario (16 KiB pages so debug-mode
+/// CI stays fast; the shapes are identical to the 72 KiB default).
+fn quick(isa: Isa, policy: PolicyKind) -> WebCfg {
+    let mut cfg = WebCfg::paper_default(isa, policy);
+    cfg.cores = 6;
+    cfg.workers = 12;
+    cfg.page_bytes = 16 * 1024;
+    cfg.warmup = 150 * MS;
+    cfg.measure = 500 * MS;
+    cfg.mode = LoadMode::Open { rate: 40_000.0 };
+    cfg
+}
+
+#[test]
+fn webserver_fig5_shape() {
+    let base = run_webserver(&quick(Isa::Sse4, PolicyKind::Unmodified));
+    let avx512 = run_webserver(&quick(Isa::Avx512, PolicyKind::Unmodified));
+    let spec = run_webserver(&quick(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 }));
+    let spec_base = run_webserver(&quick(Isa::Sse4, PolicyKind::CoreSpec { avx_cores: 1 }));
+
+    let drop_unmod = pct_change(base.throughput_rps, avx512.throughput_rps);
+    let drop_spec = pct_change(spec_base.throughput_rps, spec.throughput_rps);
+    assert!(drop_unmod < -4.0, "AVX-512 must hurt the unmodified scheduler: {drop_unmod:.1}%");
+    assert!(
+        drop_spec > drop_unmod * 0.65,
+        "core specialization must recover most of the drop: {drop_spec:.1}% vs {drop_unmod:.1}%"
+    );
+    assert!(
+        spec.avg_ghz > avx512.avg_ghz,
+        "frequency must improve: {} vs {}",
+        spec.avg_ghz,
+        avx512.avg_ghz
+    );
+}
+
+#[test]
+fn webserver_sse4_corespec_overhead_is_small() {
+    let base = run_webserver(&quick(Isa::Sse4, PolicyKind::Unmodified));
+    let spec = run_webserver(&quick(Isa::Sse4, PolicyKind::CoreSpec { avx_cores: 1 }));
+    let delta = pct_change(base.throughput_rps, spec.throughput_rps);
+    assert!(delta.abs() < 3.0, "SSE4 must be ~unaffected by the mechanism, got {delta:.1}%");
+    assert!(spec.type_changes_per_sec > 1000.0, "annotations must fire");
+}
+
+#[test]
+fn corespec_confines_licenses_to_avx_cores() {
+    let (run, m) = run_webserver_machine(&quick(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 2 }));
+    assert!(run.completed > 500);
+    for c in 0..4 {
+        assert_eq!(m.cores[c].perf.license_cycles[2], 0, "core {c} saw L2");
+        assert_eq!(m.cores[c].perf.license_requests, 0, "core {c} requested a license");
+    }
+    let avx_requests: u64 = (4..6).map(|c| m.cores[c].perf.license_requests).sum();
+    assert!(avx_requests > 0, "AVX cores must be carrying the licensed work");
+}
+
+#[test]
+fn closed_loop_mode_works() {
+    let mut cfg = quick(Isa::Avx2, PolicyKind::CoreSpec { avx_cores: 1 });
+    cfg.mode = LoadMode::Closed { connections: 32 };
+    let run = run_webserver(&cfg);
+    assert!(run.completed > 500, "closed loop must sustain itself, got {}", run.completed);
+    assert!(run.p50_us > 0.0);
+}
+
+#[test]
+fn identification_workflow_end_to_end() {
+    // Static analysis finds the crypto kernels…
+    let bins = build_binaries(Isa::Avx512);
+    let rows = static_analysis::analyze(&bins);
+    let cands = static_analysis::candidates(&rows, 0.3);
+    assert!(cands.iter().any(|c| c.function.contains("ChaCha20")));
+    // …the THROTTLE flame graph isolates them from memcpy-style noise…
+    let mut cfg = quick(Isa::Avx512, PolicyKind::Unmodified);
+    cfg.track_flame = true;
+    let (_run, m) = run_webserver_machine(&cfg);
+    let stacks = stack_table_for(Isa::Avx512);
+    let folded = flamegraph::fold(&m.flame, &stacks, Counter::Throttle);
+    assert!(!folded.is_empty(), "throttle samples must exist");
+    let crypto_hit = folded.iter().any(|(s, _)| s.contains("ChaCha20") || s.contains("poly1305"));
+    assert!(crypto_hit, "crypto must appear in the throttle graph: {folded:?}");
+    // …and memcpy (static-analysis false positive) never throttles.
+    assert!(!folded.iter().any(|(s, _)| s.contains("memcpy")));
+}
+
+#[test]
+fn microbench_overhead_sane() {
+    let p = overhead_point(250_000);
+    assert!(p.type_changes_per_sec > 100_000.0);
+    assert!(p.overhead_pct > 0.0 && p.overhead_pct < 10.0, "overhead {}%", p.overhead_pct);
+    assert!(
+        (150.0..1500.0).contains(&p.ns_per_switch_pair),
+        "per-pair cost {} ns",
+        p.ns_per_switch_pair
+    );
+}
+
+#[test]
+fn repro_fast_runners_produce_tables() {
+    for id in ["fig1", "fig3"] {
+        let r = avxfreq::repro::run(id, true, 1).expect(id);
+        assert!(!r.tables.is_empty());
+        assert!(!r.tables[0].rows.is_empty(), "{id} produced no rows");
+    }
+}
+
+#[test]
+fn fault_migrate_webserver_confines_avx() {
+    let mut cfg = quick(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 2 });
+    cfg.annotate = false;
+    cfg.fault_migrate = true;
+    let (run, m) = run_webserver_machine(&cfg);
+    assert!(run.completed > 200, "FM server must still serve: {}", run.completed);
+    for c in 0..4 {
+        assert_eq!(m.cores[c].perf.license_cycles[2], 0, "core {c} saw L2 under FM");
+    }
+    assert!(m.fm_faults > 0);
+}
+
+#[test]
+fn adaptive_allocation_converges() {
+    // Over-provisioned start (3 of 6 cores AVX): the §4.3 controller must
+    // shrink to the demand-derived size and not oscillate.
+    let mut cfg = quick(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 3 });
+    cfg.adaptive = Some(avxfreq::sched::adaptive::AdaptiveParams {
+        interval: 30 * MS,
+        ..Default::default()
+    });
+    cfg.measure = 800 * MS;
+    let run = run_webserver(&cfg);
+    assert!(run.final_avx_cores < 3, "should shrink, final={}", run.final_avx_cores);
+    assert!(run.adaptive_changes >= 1 && run.adaptive_changes <= 6, "{}", run.adaptive_changes);
+    assert!(run.completed > 500);
+}
+
+#[test]
+fn config_file_roundtrip() {
+    let toml = r#"
+seed = 7
+[machine]
+cores = 6
+[server]
+isa = "avx2"
+compress = false
+page_kib = 16
+workers = 10
+[sched]
+policy = "corespec"
+avx_cores = 1
+adaptive = true
+[load]
+rate = 25000.0
+warmup_s = 0.15
+measure_s = 0.3
+"#;
+    let conf = avxfreq::util::config::Config::parse(toml).unwrap();
+    let cfg = WebCfg::from_config(&conf).unwrap();
+    assert_eq!(cfg.cores, 6);
+    assert_eq!(cfg.isa, Isa::Avx2);
+    assert!(!cfg.compress);
+    assert_eq!(cfg.page_bytes, 16 * 1024);
+    assert_eq!(cfg.workers, 10);
+    assert!(cfg.adaptive.is_some());
+    assert_eq!(cfg.seed, 7);
+    matches!(cfg.mode, LoadMode::Open { rate } if (rate - 25000.0).abs() < 1e-9);
+    // And it runs.
+    let run = run_webserver(&cfg);
+    assert!(run.completed > 100);
+}
+
+#[test]
+fn shipped_configs_parse() {
+    for path in ["configs/paper_webserver.toml", "configs/adaptive_demo.toml"] {
+        let conf = avxfreq::util::config::Config::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
+        let cfg = WebCfg::from_config(&conf).unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert!(cfg.cores >= 1 && cfg.workers >= 1);
+    }
+}
+
+#[test]
+fn uncompressed_variant_prefers_avx2() {
+    // Fig 2 middle group: with crypto-heavy requests AVX2 wins. Needs the
+    // full-size page (crypto must dominate the per-request cost).
+    let mut sse = quick(Isa::Sse4, PolicyKind::Unmodified);
+    sse.compress = false;
+    sse.page_bytes = 72 * 1024;
+    sse.mode = LoadMode::Open { rate: 120_000.0 };
+    let mut avx2 = sse.clone();
+    avx2.isa = Isa::Avx2;
+    let r_sse = run_webserver(&sse);
+    let r_avx2 = run_webserver(&avx2);
+    assert!(
+        r_avx2.throughput_rps > r_sse.throughput_rps,
+        "uncompressed: AVX2 {} must beat SSE4 {}",
+        r_avx2.throughput_rps,
+        r_sse.throughput_rps
+    );
+}

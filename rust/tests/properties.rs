@@ -1,0 +1,358 @@
+//! Property-based tests over the scheduler, frequency model, and
+//! simulator invariants (using the in-repo `testkit`).
+
+use avxfreq::cpu::freq::{FreqParams, License, LicenseState};
+use avxfreq::isa::block::{Block, ClassMix, InsnClass};
+use avxfreq::sched::machine::{Action, Machine, MachineParams, NullDriver, TaskBody};
+use avxfreq::sched::{PolicyKind, TaskType};
+use avxfreq::sim::{Time, SEC, US};
+use avxfreq::testkit::{assert_prop, IntRange, Strategy, VecOf};
+use avxfreq::util::Rng;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Randomized task body: a program of phases. Odd-encoded phases are AVX
+/// regions wrapped in with_avx()/without_avx(); the rest are scalar.
+struct RandomBody {
+    /// (set_type_before, class, insns) triples flattened to steps.
+    steps: Vec<Action>,
+    idx: usize,
+    completed: Rc<RefCell<u64>>,
+}
+
+fn build_steps(encoded: &[u64], task_salt: usize) -> Vec<Action> {
+    let mut steps = Vec::new();
+    for (i, &x) in encoded.iter().enumerate() {
+        let insns = (x >> 1).max(1);
+        let is_avx = (i + task_salt) % 3 == 0 && x & 1 == 1;
+        if is_avx {
+            steps.push(Action::SetType(TaskType::Avx));
+            steps.push(Action::Run {
+                block: Block {
+                    mix: ClassMix::of(InsnClass::Avx512Heavy, insns),
+                    mem_ops: 0,
+                    branches: insns / 50,
+                    license_exempt: false,
+                },
+                func: i as u64,
+                stack: 0,
+            });
+            steps.push(Action::SetType(TaskType::Scalar));
+        } else {
+            steps.push(Action::Run {
+                block: Block {
+                    mix: ClassMix::scalar(insns),
+                    mem_ops: 0,
+                    branches: insns / 50,
+                    license_exempt: false,
+                },
+                func: 100 + i as u64,
+                stack: 0,
+            });
+        }
+    }
+    steps
+}
+
+impl TaskBody for RandomBody {
+    fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+        if self.idx >= self.steps.len() {
+            *self.completed.borrow_mut() += 1;
+            return Action::Exit;
+        }
+        let a = self.steps[self.idx].clone();
+        self.idx += 1;
+        a
+    }
+}
+
+/// Strategy: a list of phase encodings (bit 0 = avx candidate, rest = insns).
+struct PhaseList;
+impl Strategy for PhaseList {
+    type Value = Vec<u64>;
+    fn generate(&self, rng: &mut Rng) -> Vec<u64> {
+        VecOf { elem: IntRange { lo: 1000, hi: 200_000 }, max_len: 24 }.generate(rng)
+    }
+    fn simplify(&self, v: &Vec<u64>) -> Vec<Vec<u64>> {
+        VecOf { elem: IntRange { lo: 1000, hi: 200_000 }, max_len: 24 }.simplify(v)
+    }
+}
+
+fn run_machine(phases: &[u64], policy: PolicyKind, seed: u64) -> (Machine, u64) {
+    let mut p = MachineParams::new(4, policy);
+    p.seed = seed;
+    let mut m = Machine::new(p);
+    let completed = Rc::new(RefCell::new(0u64));
+    for t in 0..6 {
+        m.spawn(
+            TaskType::Scalar,
+            0,
+            Box::new(RandomBody {
+                steps: build_steps(phases, t),
+                idx: 0,
+                completed: completed.clone(),
+            }),
+        );
+    }
+    m.run_until(30 * SEC, &mut NullDriver);
+    let done = *completed.borrow();
+    (m, done)
+}
+
+#[test]
+fn prop_scalar_cores_never_execute_avx() {
+    assert_prop("scalar cores stay clean", 0xA11CE, 20, &PhaseList, |phases| {
+        let (m, done) = run_machine(phases, PolicyKind::CoreSpec { avx_cores: 1 }, 7);
+        if done != 6 {
+            return Err(format!("only {done}/6 tasks completed"));
+        }
+        for c in 0..3 {
+            let perf = &m.cores[c].perf;
+            if perf.license_cycles[1] + perf.license_cycles[2] > 0 {
+                return Err(format!(
+                    "scalar core {c} accumulated licensed cycles {:?}",
+                    perf.license_cycles
+                ));
+            }
+            if perf.license_requests > 0 {
+                return Err(format!("scalar core {c} requested a license"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_tasks_complete_under_every_policy() {
+    for policy in [
+        PolicyKind::Unmodified,
+        PolicyKind::CoreSpec { avx_cores: 1 },
+        PolicyKind::CoreSpec { avx_cores: 3 },
+        PolicyKind::StrictPartition { avx_cores: 1 },
+    ] {
+        assert_prop("no starvation", 0xBEEF, 10, &PhaseList, |phases| {
+            let (_m, done) = run_machine(phases, policy.clone(), 11);
+            if done == 6 {
+                Ok(())
+            } else {
+                Err(format!("{done}/6 under {policy:?}"))
+            }
+        });
+    }
+}
+
+#[test]
+fn prop_simulation_deterministic() {
+    assert_prop("determinism", 0xD00D, 8, &PhaseList, |phases| {
+        let (m1, d1) = run_machine(phases, PolicyKind::CoreSpec { avx_cores: 2 }, 99);
+        let (m2, d2) = run_machine(phases, PolicyKind::CoreSpec { avx_cores: 2 }, 99);
+        let p1 = m1.total_perf();
+        let p2 = m2.total_perf();
+        if d1 != d2
+            || p1.instructions != p2.instructions
+            || p1.cycles != p2.cycles
+            || p1.busy_ns != p2.busy_ns
+            || m1.sched.stats.migrations != m2.sched.stats.migrations
+        {
+            return Err("same seed, different outcome".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_work_conservation() {
+    // Executed workload instructions equal what the bodies submitted —
+    // nothing lost or duplicated across migrations, suspensions, and
+    // preemptions. Kernel overhead (syscalls, picks) is accounted on top,
+    // bounded by a few percent.
+    assert_prop("work conservation", 0xC0DE, 12, &PhaseList, |phases| {
+        let (m, done) = run_machine(phases, PolicyKind::CoreSpec { avx_cores: 1 }, 3);
+        if done != 6 {
+            return Err(format!("{done}/6 completed"));
+        }
+        let per_task: u64 = phases.iter().map(|&x| (x >> 1).max(1)).sum();
+        let expected = 6 * per_task;
+        let got = m.total_perf().instructions;
+        if got < expected {
+            return Err(format!("instructions {got} < submitted {expected} — work lost"));
+        }
+        if got > expected + expected / 10 + 200_000 {
+            return Err(format!("instructions {got} ≫ submitted {expected} — double counting"));
+        }
+        Ok(())
+    });
+}
+
+// ---- frequency state machine properties -----------------------------------
+
+#[test]
+fn prop_license_hysteresis() {
+    // Licenses may only relax after a full hold window of lower demand.
+    let steps = VecOf { elem: IntRange { lo: 0, hi: 3 * 400 }, max_len: 200 };
+    assert_prop("license hysteresis", 0xF00D, 50, &steps, |seq| {
+        let params = FreqParams::default();
+        let hold = params.hold;
+        let mut m = LicenseState::new(params);
+        let mut now: Time = 0;
+        let mut last_at_or_above: [Time; 3] = [0; 3];
+        let mut prev_granted = License::L0;
+        for &enc in seq {
+            let demand = License::from_index((enc % 3) as usize);
+            now += 20 * US + (enc / 3) as Time * 10;
+            let _ = m.observe(now, demand);
+            for lvl in 0..=demand.index() {
+                last_at_or_above[lvl] = now;
+            }
+            let granted = m.granted();
+            if granted < prev_granted {
+                let since = now.saturating_sub(last_at_or_above[prev_granted.index()]);
+                if since < hold && last_at_or_above[prev_granted.index()] != now {
+                    return Err(format!(
+                        "relaxed {prev_granted:?}→{granted:?} only {since}ns after matching \
+                         demand (hold {hold}ns)"
+                    ));
+                }
+            }
+            prev_granted = granted;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_license_state_machine_total() {
+    // Long random walks never produce invalid effective states.
+    let steps = VecOf { elem: IntRange { lo: 0, hi: 3 * 1000 }, max_len: 400 };
+    assert_prop("license machine total", 0x50DA, 30, &steps, |seq| {
+        let mut m = LicenseState::new(FreqParams::default());
+        let mut now = 0;
+        for &enc in seq {
+            now += (enc / 3) as Time;
+            let s = m.observe(now, License::from_index((enc % 3) as usize));
+            if s.ipc_factor <= 0.0 || s.ipc_factor > 1.0 {
+                return Err(format!("bad ipc factor {}", s.ipc_factor));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- histogram property ----------------------------------------------------
+
+#[test]
+fn prop_histogram_percentile_error_bounded() {
+    use avxfreq::util::LogHistogram;
+    let strat = VecOf { elem: IntRange { lo: 1, hi: 50_000_000 }, max_len: 400 };
+    assert_prop("histogram error bound", 0x9151, 30, &strat, |values| {
+        if values.is_empty() {
+            return Ok(());
+        }
+        let mut h = LogHistogram::new();
+        for &v in values {
+            h.record(v);
+        }
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        for p in [50.0, 90.0, 99.0] {
+            let approx = h.percentile(p) as f64;
+            let rank = ((p / 100.0) * values.len() as f64).ceil().max(1.0) as usize - 1;
+            let exact = sorted[rank.min(sorted.len() - 1)] as f64;
+            if approx > exact + 1.0 {
+                return Err(format!("p{p}: approx {approx} > exact {exact}"));
+            }
+            if exact > 32.0 && approx < exact * 0.90 {
+                return Err(format!("p{p}: approx {approx} too far below exact {exact}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- fault-and-migrate invariant -------------------------------------------
+
+#[test]
+fn prop_fault_migrate_keeps_scalar_cores_clean() {
+    struct Unannotated {
+        n: u64,
+    }
+    impl TaskBody for Unannotated {
+        fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+            if self.n == 0 {
+                return Action::Exit;
+            }
+            self.n -= 1;
+            let wide = self.n % 7 == 0;
+            Action::Run {
+                block: Block {
+                    mix: ClassMix::of(
+                        if wide { InsnClass::Avx512Heavy } else { InsnClass::Scalar },
+                        30_000,
+                    ),
+                    mem_ops: 0,
+                    branches: 100,
+                    license_exempt: false,
+                },
+                func: self.n % 5,
+                stack: 0,
+            }
+        }
+    }
+    let seeds = IntRange { lo: 1, hi: 100_000 };
+    assert_prop("fault-migrate clean scalar cores", 0xFA17, 8, &seeds, |&seed| {
+        let mut p = MachineParams::new(4, PolicyKind::CoreSpec { avx_cores: 1 });
+        p.seed = seed;
+        p.fault_migrate = Some(Default::default());
+        let mut m = Machine::new(p);
+        for _ in 0..5 {
+            m.spawn(TaskType::Scalar, 0, Box::new(Unannotated { n: 150 }));
+        }
+        m.run_until(20 * SEC, &mut NullDriver);
+        if m.fm_faults == 0 {
+            return Err("no faults recorded".into());
+        }
+        for c in 0..3 {
+            if m.cores[c].perf.license_cycles[2] > 0 {
+                return Err(format!("scalar core {c} ran AVX-512 cycles"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- fairness ---------------------------------------------------------------
+
+#[test]
+fn prop_quantum_fairness_on_oversubscribed_core() {
+    struct Spin;
+    impl TaskBody for Spin {
+        fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+            Action::Run {
+                block: Block {
+                    mix: ClassMix::scalar(50_000),
+                    mem_ops: 0,
+                    branches: 100,
+                    license_exempt: false,
+                },
+                func: 1,
+                stack: 0,
+            }
+        }
+    }
+    let seeds = IntRange { lo: 1, hi: 1 << 30 };
+    assert_prop("quantum fairness", 0xFA13, 5, &seeds, |&seed| {
+        let mut p = MachineParams::new(1, PolicyKind::Unmodified);
+        p.seed = seed;
+        let mut m = Machine::new(p);
+        let ids: Vec<_> =
+            (0..2).map(|_| m.spawn(TaskType::Untyped, 0, Box::new(Spin))).collect();
+        m.run_until(2 * SEC, &mut NullDriver);
+        let a = m.sched.entity(ids[0]).cpu_ns as f64;
+        let b = m.sched.entity(ids[1]).cpu_ns as f64;
+        let ratio = a.max(b) / a.min(b).max(1.0);
+        if ratio > 1.25 {
+            return Err(format!("unfair split {a} vs {b}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,98 @@
+//! Three-layer integration: the AOT artifacts (Pallas kernel + JAX model,
+//! lowered to HLO text) executed through the PJRT runtime must agree with
+//! the independent Rust AEAD implementation, and the example server must
+//! serve authenticated records over TCP.
+//!
+//! These tests skip (with a notice) when `artifacts/` has not been built;
+//! run `make artifacts` first for full coverage.
+
+use avxfreq::runtime::aead;
+use avxfreq::runtime::executor::{CryptoExecutor, Width};
+use avxfreq::runtime::server::{self, ServeStats};
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("AVXFREQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&dir).join("manifest.txt").exists().then_some(dir)
+}
+
+/// One executor (compiling the three HLO modules takes ~30 s each on the
+/// CPU backend), shared across the checks below.
+#[test]
+fn pjrt_matches_rust_reference_and_authenticates() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return;
+    };
+    let ex = CryptoExecutor::load(&dir).expect("load+compile artifacts");
+
+    // (a) all widths agree with the independent Rust implementation.
+    let mut key = [0u32; 8];
+    for (i, k) in key.iter_mut().enumerate() {
+        *k = 0x9E3779B9u32.wrapping_mul(i as u32 + 1);
+    }
+    for trial in 0..2u32 {
+        let nonce = [trial, 0xFACE, 0x1234];
+        let msg: Vec<u32> =
+            (0..ex.record_words as u32).map(|i| i.wrapping_mul(2654435761).rotate_left(trial)).collect();
+        let (want_ct, want_tag) = aead::seal_record(&key, &nonce, &msg);
+        for w in Width::all() {
+            let got = ex.seal(w, &key, &nonce, &msg).expect("seal");
+            assert_eq!(got.ct_words, want_ct, "{w:?} trial {trial}: ciphertext");
+            assert_eq!(got.tag, want_tag, "{w:?} trial {trial}: tag");
+        }
+    }
+
+    // (b) PJRT output opens under the Rust AEAD and rejects tampering.
+    let key2 = [7u32; 8];
+    let nonce2 = [1u32, 2, 3];
+    let msg2: Vec<u32> = (0..ex.record_words as u32).collect();
+    let sealed = ex.seal(Width::W8, &key2, &nonce2, &msg2).unwrap();
+    let opened = aead::open_record(&key2, &nonce2, &sealed.ct_words, &sealed.tag)
+        .expect("authentic record must open");
+    assert_eq!(opened, msg2);
+    let mut bad_tag = sealed.tag;
+    bad_tag[0] ^= 1;
+    assert!(aead::open_record(&key2, &nonce2, &sealed.ct_words, &bad_tag).is_none());
+
+    // (c) byte-stream chunking round-trips.
+    let payload: Vec<u8> = (0..20_000u32).map(|i| (i % 251) as u8).collect();
+    let (records, len) = ex.seal_bytes(Width::W16, &key2, &nonce2, &payload).unwrap();
+    assert_eq!(len, payload.len());
+    assert_eq!(records.len(), 2);
+    let mut plain = Vec::new();
+    for (i, r) in records.iter().enumerate() {
+        let n = [nonce2[0] + i as u32, nonce2[1], nonce2[2]];
+        let pt = aead::open_record(&key2, &n, &r.ct_words, &r.tag).expect("verify");
+        plain.extend_from_slice(&aead::words_to_bytes(&pt));
+    }
+    assert_eq!(&plain[..len], &payload[..]);
+}
+
+#[test]
+fn server_roundtrip_over_tcp() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let n = 3u64;
+    let stats = Arc::new(ServeStats::default());
+    let (tx, rx) = std::sync::mpsc::channel();
+    let stats2 = stats.clone();
+    let handle = std::thread::spawn(move || {
+        server::serve_with_port_callback(&dir, 0, Width::W16, 1, true, n, stats2, move |p| {
+            let _ = tx.send(p);
+        })
+    });
+    let port = rx.recv_timeout(std::time::Duration::from_secs(120)).expect("server bind");
+    let addr = format!("127.0.0.1:{port}");
+    let page_bytes = 40_000u32;
+    let expected = server::compress(&server::synth_page(page_bytes as usize));
+    for _ in 0..n {
+        let body = server::fetch(&addr, page_bytes).expect("fetch+verify");
+        assert_eq!(body, expected, "decrypted payload must match the compressed page");
+    }
+    handle.join().unwrap().unwrap();
+    assert_eq!(stats.requests.load(std::sync::atomic::Ordering::Relaxed), n);
+    assert!(stats.records.load(std::sync::atomic::Ordering::Relaxed) >= n);
+}
