@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Tier-1 CI: release build, tests, docs with warnings denied, and a link
+# check over the markdown docs. Run from the repo root.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo build --release --benches --examples =="
+cargo build --release --benches --examples
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo doc --no-deps (-D warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== markdown link check (local links in README.md, docs/, rust/tests/) =="
+fail=0
+for f in README.md docs/*.md rust/tests/README.md; do
+  # Extract local markdown link targets (anchors stripped) and resolve
+  # them the way a renderer would: relative to the file's directory only.
+  while IFS= read -r target; do
+    [ -z "$target" ] && continue
+    dir=$(dirname "$f")
+    if [ ! -e "$dir/$target" ]; then
+      echo "BROKEN LINK in $f: $target"
+      fail=1
+    fi
+  done < <(grep -oE '\]\(([^)]+)\)' "$f" 2>/dev/null \
+             | sed -E 's/^\]\(//; s/\)$//; s/#.*$//' \
+             | grep -vE '^[a-z]+://' | grep -v '^$' || true)
+done
+# Files referenced by backtick path convention in README/ARCHITECTURE.
+for p in docs/ARCHITECTURE.md rust/tests/README.md configs/dual_socket.toml \
+         rust/src/scenario/mod.rs rust/tests/scenario_matrix.rs ci.sh; do
+  if [ ! -e "$p" ]; then
+    echo "MISSING referenced file: $p"
+    fail=1
+  fi
+done
+if [ "$fail" -ne 0 ]; then
+  echo "link check FAILED"
+  exit 1
+fi
+echo "link check OK"
+
+echo "ci.sh: all green"

@@ -1,17 +1,96 @@
-//! Machine topology: physical cores, SMT threads, and the partition into
-//! server cores and load-generator cores used by the paper's evaluation
-//! (12 of 16 physical cores run nginx, 4 run wrk2).
+//! Machine topology: sockets (NUMA nodes / frequency domains), physical
+//! cores, SMT threads, and the partition into server cores and
+//! load-generator cores used by the paper's evaluation (12 of 16
+//! physical cores run nginx, 4 run wrk2).
+//!
+//! The paper evaluates a single-socket Skylake-SP, but the follow-up
+//! work (Dim Silicon, Schuchart et al.) shows frequency variation is a
+//! *scale* problem, so the model supports multi-socket machines:
+//!
+//! * each socket is its own **frequency domain** — the turbo table's
+//!   active-core axis counts only cores awake on the same socket;
+//! * each socket is a **NUMA node** — the scheduler prefers same-node
+//!   work stealing and charges extra for cross-socket migrations.
+//!
+//! Core ids are global and contiguous; socket membership is a balanced
+//! contiguous partition computed by [`socket_of_core`] / [`socket_span`]
+//! so every layer (machine, scheduler, policy) derives the same map from
+//! `(n_cores, sockets)` alone.
 
 /// Topology description for a simulated machine.
+///
+/// # Examples
+///
+/// Build the 2-socket evaluation machine and query the NUMA layout:
+///
+/// ```
+/// use avxfreq::cpu::Topology;
+///
+/// let t = Topology::dual_socket_webserver();
+/// assert_eq!(t.sockets, 2);
+/// assert_eq!(t.n_server_cores(), 24);
+/// assert_eq!(t.socket_of(0), 0);
+/// assert_eq!(t.socket_of(23), 1);
+/// assert!(t.same_socket(0, 11));
+/// assert!(!t.same_socket(11, 12));
+/// ```
 #[derive(Clone, Debug)]
 pub struct Topology {
     pub physical_cores: usize,
     pub smt: usize,
+    /// Number of sockets (NUMA nodes / package frequency domains). The
+    /// server cores are split over the sockets in contiguous balanced
+    /// chunks; 1 = the paper's single-socket machine.
+    pub sockets: usize,
     /// Physical cores available to the workload under test.
     pub server_cores: Vec<usize>,
     /// Cores reserved for the load generator (modeled implicitly — the
     /// client process does not consume simulated server CPU).
     pub client_cores: Vec<usize>,
+}
+
+/// Socket owning global core `core` when `n_cores` are split over
+/// `sockets` contiguous balanced chunks (first `n_cores % sockets`
+/// sockets take one extra core).
+///
+/// # Examples
+///
+/// ```
+/// use avxfreq::cpu::topology::socket_of_core;
+///
+/// // 12 cores over 2 sockets: 0..6 on socket 0, 6..12 on socket 1.
+/// assert_eq!(socket_of_core(5, 12, 2), 0);
+/// assert_eq!(socket_of_core(6, 12, 2), 1);
+/// // Uneven split: 7 cores over 2 sockets → 4 + 3.
+/// assert_eq!(socket_of_core(3, 7, 2), 0);
+/// assert_eq!(socket_of_core(4, 7, 2), 1);
+/// ```
+pub fn socket_of_core(core: usize, n_cores: usize, sockets: usize) -> usize {
+    let s = sockets.max(1).min(n_cores.max(1));
+    for socket in 0..s {
+        let (start, end) = socket_span(socket, n_cores, s);
+        if core >= start && core < end {
+            return socket;
+        }
+    }
+    s - 1
+}
+
+/// Half-open global-core range `[start, end)` of `socket` under the same
+/// balanced contiguous partition as [`socket_of_core`].
+pub fn socket_span(socket: usize, n_cores: usize, sockets: usize) -> (usize, usize) {
+    let s = sockets.max(1).min(n_cores.max(1));
+    let base = n_cores / s;
+    let rem = n_cores % s;
+    let start = socket * base + socket.min(rem);
+    let len = base + usize::from(socket < rem);
+    (start, start + len)
+}
+
+/// Per-core socket ids for an `(n_cores, sockets)` machine — the map the
+/// machine and scheduler share.
+pub fn socket_map(n_cores: usize, sockets: usize) -> Vec<usize> {
+    (0..n_cores).map(|c| socket_of_core(c, n_cores, sockets)).collect()
 }
 
 impl Topology {
@@ -21,6 +100,7 @@ impl Topology {
         Topology {
             physical_cores: 16,
             smt: 2,
+            sockets: 1,
             server_cores: (0..12).collect(),
             client_cores: (12..16).collect(),
         }
@@ -32,16 +112,55 @@ impl Topology {
         Topology {
             physical_cores: 16,
             smt: 2,
+            sockets: 1,
             server_cores: (0..12).collect(),
             client_cores: vec![],
         }
     }
 
-    /// Small topology for tests.
+    /// A dual-socket server built from two of the paper's machines:
+    /// 2 × 16 physical cores, 12 server cores per socket (24 total),
+    /// load generator on the last 4 cores of each socket (modeled
+    /// implicitly, like the single-socket evaluation).
+    pub fn dual_socket_webserver() -> Self {
+        Topology {
+            physical_cores: 32,
+            smt: 2,
+            sockets: 2,
+            server_cores: (0..24).collect(),
+            client_cores: (24..32).collect(),
+        }
+    }
+
+    /// A uniform multi-socket machine: `sockets` × `cores_per_socket`
+    /// physical cores, all available to the workload.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use avxfreq::cpu::Topology;
+    ///
+    /// let t = Topology::multi_socket(4, 8);
+    /// assert_eq!(t.n_server_cores(), 32);
+    /// assert_eq!(t.socket_of(31), 3);
+    /// ```
+    pub fn multi_socket(sockets: usize, cores_per_socket: usize) -> Self {
+        let n = sockets * cores_per_socket;
+        Topology {
+            physical_cores: n,
+            smt: 1,
+            sockets,
+            server_cores: (0..n).collect(),
+            client_cores: vec![],
+        }
+    }
+
+    /// Small single-socket topology for tests.
     pub fn small(cores: usize) -> Self {
         Topology {
             physical_cores: cores,
             smt: 1,
+            sockets: 1,
             server_cores: (0..cores).collect(),
             client_cores: vec![],
         }
@@ -49,6 +168,23 @@ impl Topology {
 
     pub fn n_server_cores(&self) -> usize {
         self.server_cores.len()
+    }
+
+    /// Number of sockets (NUMA nodes).
+    pub fn n_sockets(&self) -> usize {
+        self.sockets.max(1)
+    }
+
+    /// Socket owning *server core index* `core` (0-based index into the
+    /// server-core list, the id space the simulated machine uses).
+    pub fn socket_of(&self, core: usize) -> usize {
+        socket_of_core(core, self.n_server_cores(), self.n_sockets())
+    }
+
+    /// Do two server cores share a socket (and thus a NUMA node and a
+    /// frequency domain)?
+    pub fn same_socket(&self, a: usize, b: usize) -> bool {
+        self.socket_of(a) == self.socket_of(b)
     }
 
     /// Hardware threads available to the workload (MuQSS run queues are
@@ -71,6 +207,8 @@ mod tests {
         assert_eq!(t.n_server_cores(), 12);
         assert_eq!(t.client_cores.len(), 4);
         assert_eq!(t.server_hw_threads(), 24);
+        assert_eq!(t.n_sockets(), 1);
+        assert!(t.same_socket(0, 11));
     }
 
     #[test]
@@ -78,5 +216,55 @@ mod tests {
         let t = Topology::small(4);
         assert_eq!(t.n_server_cores(), 4);
         assert!(t.client_cores.is_empty());
+        assert_eq!(t.n_sockets(), 1);
+    }
+
+    #[test]
+    fn dual_socket_layout() {
+        let t = Topology::dual_socket_webserver();
+        assert_eq!(t.n_sockets(), 2);
+        assert_eq!(t.n_server_cores(), 24);
+        for c in 0..12 {
+            assert_eq!(t.socket_of(c), 0, "core {c}");
+        }
+        for c in 12..24 {
+            assert_eq!(t.socket_of(c), 1, "core {c}");
+        }
+    }
+
+    #[test]
+    fn socket_spans_partition_all_cores() {
+        for (n, s) in [(12, 1), (12, 2), (7, 2), (24, 3), (5, 8), (16, 4)] {
+            let mut seen = vec![false; n];
+            let eff = s.min(n).max(1);
+            for socket in 0..eff {
+                let (start, end) = socket_span(socket, n, s);
+                assert!(start <= end && end <= n, "({n},{s}) socket {socket}");
+                for c in start..end {
+                    assert!(!seen[c], "core {c} in two sockets");
+                    seen[c] = true;
+                    assert_eq!(socket_of_core(c, n, s), socket);
+                }
+            }
+            assert!(seen.iter().all(|&x| x), "({n},{s}) left cores unassigned");
+        }
+    }
+
+    #[test]
+    fn socket_map_matches_pointwise() {
+        let map = socket_map(12, 3);
+        assert_eq!(map.len(), 12);
+        assert_eq!(map[0], 0);
+        assert_eq!(map[4], 1);
+        assert_eq!(map[11], 2);
+    }
+
+    #[test]
+    fn more_sockets_than_cores_clamps() {
+        // 2 cores, 8 sockets: clamps to one core per socket.
+        assert_eq!(socket_of_core(0, 2, 8), 0);
+        assert_eq!(socket_of_core(1, 2, 8), 1);
+        let map = socket_map(2, 8);
+        assert_eq!(map, vec![0, 1]);
     }
 }

@@ -12,12 +12,17 @@
 //!   extension, plus baselines and the fault-and-migrate future-work feature.
 //! * [`workload`] — nginx-like web server, wrk2-like client, crypto cost
 //!   profiles, Fig-7 microbenchmark.
+//! * [`scenario`] — declarative scenario matrices (topology × policy ×
+//!   workload × ISA) executed across OS threads, deterministically.
 //! * [`analysis`] — static AVX-ratio analysis, THROTTLE flame graphs, LBR.
 //! * [`runtime`] — PJRT client executing the AOT ChaCha20-Poly1305 kernels.
-//! * [`metrics`] — run-level reporting.
+//! * [`metrics`] — run-level reporting and the matrix comparison table.
 //! * [`repro`] — one runner per paper figure/table.
 //! * [`testkit`] — in-repo property-testing support (offline substitute for
 //!   proptest).
+//!
+//! See `README.md` for the quickstart and `docs/ARCHITECTURE.md` for the
+//! event-loop / scheduler control flow and the socket/NUMA hierarchy.
 
 pub mod util;
 pub mod sim;
@@ -25,6 +30,7 @@ pub mod isa;
 pub mod cpu;
 pub mod sched;
 pub mod workload;
+pub mod scenario;
 pub mod analysis;
 pub mod runtime;
 pub mod metrics;

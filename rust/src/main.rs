@@ -11,6 +11,10 @@
 //!   §3.3 THROTTLE flame graph from a web-server run.
 //! * `sim [--isa ...] [--policy ...] [--avx-cores K] ...` — one
 //!   web-server simulation with full reports.
+//! * `matrix [--quick] [--seed N] [--threads T] [--full-isa]` — parallel
+//!   scenario-matrix sweep: {single-socket, dual-socket NUMA} ×
+//!   {unmodified, per-socket core specialization} × ISA, one unified
+//!   comparison table (deterministic for a given seed regardless of T).
 //! * `serve [--artifacts DIR] [--port P]` — real TLS-record server using
 //!   the AOT PJRT ChaCha20-Poly1305 kernels (see `runtime`).
 //! * `calibrate [--artifacts DIR]` — execute the AOT kernels and compare
@@ -36,11 +40,13 @@ fn parse_isa(s: &str) -> Isa {
 
 fn parse_policy(args: &Args) -> PolicyKind {
     let avx_cores = args.get_parse::<usize>("avx-cores", 2);
+    let sockets = args.get_parse::<usize>("sockets", 1).max(1);
     match args.get_or("policy", "corespec") {
         "unmodified" => PolicyKind::Unmodified,
         "corespec" => PolicyKind::CoreSpec { avx_cores },
+        "corespec-numa" => PolicyKind::CoreSpecNuma { avx_cores_per_socket: avx_cores, sockets },
         "strict" => PolicyKind::StrictPartition { avx_cores },
-        other => panic!("unknown --policy {other} (unmodified|corespec|strict)"),
+        other => panic!("unknown --policy {other} (unmodified|corespec|corespec-numa|strict)"),
     }
 }
 
@@ -51,11 +57,13 @@ usage:
   avxfreq analyze [--isa sse4|avx2|avx512] [--min-ratio R]
   avxfreq flamegraph [--isa ...] [--counter throttle|cycles] [--out file.svg]
   avxfreq sim [--config file.toml] [--isa ...] [--adaptive]
-              [--policy unmodified|corespec|strict] [--avx-cores K]
+              [--policy unmodified|corespec|corespec-numa|strict] [--avx-cores K]
+              [--sockets S] [--cores N] [--workers W]
               [--rate R] [--no-compress] [--fault-migrate] [--seconds S] [--seed N]
+  avxfreq matrix [--quick] [--seed N] [--threads T] [--full-isa]
   avxfreq serve [--artifacts DIR] [--port 8443]
   avxfreq calibrate [--artifacts DIR]
-experiments: fig1 fig2 fig3 fig5 fig6 ipc fig7 cryptobench ablations";
+experiments: fig1 fig2 fig3 fig5 fig5ms fig6 ipc fig7 cryptobench ablations";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -64,8 +72,11 @@ fn main() -> anyhow::Result<()> {
         Some("analyze") => cmd_analyze(&args),
         Some("flamegraph") => cmd_flamegraph(&args),
         Some("sim") => cmd_sim(&args),
+        Some("matrix") => cmd_matrix(&args),
         Some("serve") => avxfreq::runtime::server::cmd_serve(&args),
         Some("calibrate") => avxfreq::runtime::calibrate::cmd_calibrate(&args),
+        // Bare experiment id (`avxfreq fig5`) = `avxfreq repro fig5`.
+        Some(id) if repro::ALL.contains(&id) => cmd_repro_direct(&args, id),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -73,10 +84,21 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
+/// `avxfreq <experiment>` — the `repro` subcommand without the noun.
+/// Shares `run_repro` with `cmd_repro` so flags like `--seeds` behave
+/// identically in both spellings.
+fn cmd_repro_direct(args: &Args, id: &str) -> anyhow::Result<()> {
+    run_repro(args, id)
+}
+
 fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+    let which = args.rest().first().map(|s| s.as_str()).unwrap_or("all");
+    run_repro(args, which)
+}
+
+fn run_repro(args: &Args, which: &str) -> anyhow::Result<()> {
     let quick = args.flag("quick");
     let seed = args.get_parse::<u64>("seed", 0x5EED);
-    let which = args.rest().first().map(|s| s.as_str()).unwrap_or("all");
     // Multi-seed statistics for the headline figure.
     if which == "fig5" {
         let n_seeds = args.get_parse::<usize>("seeds", 1);
@@ -157,6 +179,20 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     if args.get("seed").is_some() || args.get("config").is_none() {
         cfg.seed = args.get_parse::<u64>("seed", 0x5EED);
     }
+    if args.get("cores").is_some() {
+        cfg.cores = args.get_parse::<usize>("cores", cfg.cores);
+        // Re-derive the worker pool (2/core, like nginx) only when no
+        // config file pinned an explicit worker count.
+        if args.get("config").is_none() {
+            cfg.workers = cfg.cores * 2;
+        }
+    }
+    if args.get("workers").is_some() {
+        cfg.workers = args.get_parse::<usize>("workers", cfg.workers);
+    }
+    if args.get("sockets").is_some() {
+        cfg.sockets = args.get_parse::<usize>("sockets", 1).max(1);
+    }
     if args.flag("no-compress") {
         cfg.compress = false;
     }
@@ -165,6 +201,11 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         cfg.annotate = false;
     }
     if args.flag("adaptive") {
+        anyhow::ensure!(
+            matches!(cfg.policy, PolicyKind::CoreSpec { .. }),
+            "--adaptive requires --policy corespec (the controller does not manage {} yet)",
+            cfg.policy.name()
+        );
         cfg.adaptive = Some(Default::default());
     }
     if let Some(rate) = args.get("rate") {
@@ -185,6 +226,9 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     println!("IPC:               {:.3}", run.ipc);
     println!("type changes:      {:.0}/s", run.type_changes_per_sec);
     println!("migrations:        {:.0}/s", run.migrations_per_sec);
+    if cfg.sockets > 1 {
+        println!("xsock migrations:  {:.0}/s", run.cross_socket_migrations_per_sec);
+    }
     if run.adaptive_changes > 0 || cfg.adaptive.is_some() {
         println!(
             "adaptive:          final {} AVX cores after {} resizes",
@@ -197,5 +241,32 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     print!("{}", metrics::sched_report(&m, secs as f64).render());
     println!();
     print!("{}", metrics::perf_report(&m.total_perf()).render());
+    Ok(())
+}
+
+fn cmd_matrix(args: &Args) -> anyhow::Result<()> {
+    let quick = args.flag("quick");
+    let seed = args.get_parse::<u64>("seed", 0x5EED);
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = args.get_parse::<usize>("threads", default_threads).max(1);
+    let mut m = avxfreq::scenario::ScenarioMatrix::default_sweep(quick, seed);
+    if args.flag("full-isa") {
+        m.isas = avxfreq::workload::crypto::Isa::all().to_vec();
+    }
+    eprintln!(
+        "[avxfreq] matrix: {} cells across up to {} threads (seed {seed:#x})…",
+        m.len(),
+        threads.min(m.len().max(1))
+    );
+    let t0 = std::time::Instant::now();
+    let result = m.run(threads);
+    print!("{}", result.render());
+    let path = result.save_csv()?;
+    eprintln!(
+        "[avxfreq] wrote {} ({} cells in {:.1}s wallclock)",
+        path.display(),
+        result.cells.len(),
+        t0.elapsed().as_secs_f64()
+    );
     Ok(())
 }

@@ -1,7 +1,9 @@
 //! Run-level reporting: turn machine counters and workload results into
-//! the tables the repro harness prints and saves.
+//! the tables the repro harness prints and saves, including the unified
+//! scenario-matrix comparison table ([`matrix_report`]).
 
 use crate::cpu::PerfCounters;
+use crate::scenario::CellResult;
 use crate::sched::machine::Machine;
 use crate::util::table::{fmt_f, Table};
 
@@ -38,6 +40,7 @@ pub fn sched_report(m: &Machine, secs: f64) -> Table {
         ("picks", s.picks),
         ("steals", s.steals),
         ("migrations", s.migrations),
+        ("cross-socket migrations", s.cross_socket_migrations),
         ("type changes", s.type_changes),
         ("forced suspends", s.forced_suspends),
         ("IPIs", s.ipis),
@@ -71,6 +74,41 @@ pub fn perf_report(total: &PerfCounters) -> Table {
     ];
     for (k, v) in rows {
         t.row(&[k.to_string(), v]);
+    }
+    t
+}
+
+/// Unified comparison table for an executed scenario matrix: one row per
+/// cell in expansion order, with fixed-precision formatting so the same
+/// results always render to the same bytes (the determinism property the
+/// matrix runner is tested against).
+pub fn matrix_report(cells: &[CellResult]) -> Table {
+    let mut t = Table::new(
+        "Scenario matrix — topology × policy × workload × ISA",
+        &[
+            "cell", "topology", "skts", "isa", "policy", "workload", "req/s", "p50 µs",
+            "p99 µs", "GHz", "IPC", "migr/s", "xsock/s", "typechg/s",
+        ],
+    );
+    for c in cells {
+        let s = &c.scenario;
+        let r = &c.run;
+        t.row(&[
+            s.index.to_string(),
+            s.topology.clone(),
+            s.sockets.to_string(),
+            s.isa.name().to_string(),
+            s.policy.clone(),
+            s.workload.clone(),
+            fmt_f(r.throughput_rps, 0),
+            fmt_f(r.p50_us, 0),
+            fmt_f(r.p99_us, 0),
+            fmt_f(r.avg_ghz, 3),
+            fmt_f(r.ipc, 3),
+            fmt_f(r.migrations_per_sec, 0),
+            fmt_f(r.cross_socket_migrations_per_sec, 0),
+            fmt_f(r.type_changes_per_sec, 0),
+        ]);
     }
     t
 }

@@ -6,6 +6,7 @@ pub mod fig1_timeline;
 pub mod fig2_sensitivity;
 pub mod fig3_asymmetry;
 pub mod fig5_throughput;
+pub mod fig5_multisocket;
 pub mod fig6_frequency;
 pub mod fig7_overhead;
 pub mod ipc_table;
@@ -50,9 +51,10 @@ impl Repro {
     }
 }
 
-/// All experiment ids, in paper order.
+/// All experiment ids, in paper order (`fig5ms` is the multi-socket
+/// extension of fig5, run as a scenario matrix).
 pub const ALL: &[&str] =
-    &["fig1", "fig2", "fig3", "fig5", "fig6", "ipc", "fig7", "cryptobench", "ablations"];
+    &["fig1", "fig2", "fig3", "fig5", "fig5ms", "fig6", "ipc", "fig7", "cryptobench", "ablations"];
 
 /// Dispatch by id. `quick` trades precision for speed (shorter windows).
 pub fn run(id: &str, quick: bool, seed: u64) -> anyhow::Result<Repro> {
@@ -61,6 +63,7 @@ pub fn run(id: &str, quick: bool, seed: u64) -> anyhow::Result<Repro> {
         "fig2" => Ok(fig2_sensitivity::run(quick, seed)),
         "fig3" => Ok(fig3_asymmetry::run()),
         "fig5" => Ok(fig5_throughput::run(quick, seed)),
+        "fig5ms" => Ok(fig5_multisocket::run(quick, seed)),
         "fig6" => Ok(fig6_frequency::run(quick, seed)),
         "ipc" => Ok(ipc_table::run(quick, seed)),
         "fig7" => Ok(fig7_overhead::run(quick)),

@@ -1,0 +1,465 @@
+//! Declarative scenario matrices: sweep topology × policy × workload ×
+//! ISA (the AVX-ratio axis) in one parallel, deterministic run.
+//!
+//! The paper evaluates one configuration at a time on one machine; the
+//! ROADMAP's production north-star needs *families* of configurations —
+//! multi-socket NUMA topologies, every policy, several workloads —
+//! compared under identical load. A [`ScenarioMatrix`] declares the axes,
+//! [`ScenarioMatrix::cells`] expands the cartesian product into
+//! self-contained [`Scenario`]s with per-cell seeds derived from the base
+//! seed and the cell index, and [`ScenarioMatrix::run`] executes the
+//! cells across OS threads (each cell's simulator is single-threaded and
+//! self-contained, so cells parallelize perfectly) and funnels the
+//! results into one [`crate::metrics::matrix_report`] comparison table.
+//!
+//! Determinism: a cell's outcome depends only on its own [`WebCfg`],
+//! whose seed is a pure function of `(base_seed, cell index)` — never of
+//! thread scheduling — and results are collected by cell index. Running
+//! the same matrix with 1 thread or 16 produces a byte-identical table
+//! (property-tested in `rust/tests/scenario_matrix.rs`).
+//!
+//! # Examples
+//!
+//! Declare a 2 × 2 matrix (two topologies × two policies) and inspect
+//! its expansion without running it:
+//!
+//! ```
+//! use avxfreq::scenario::{PolicySpec, ScenarioMatrix, TopologySpec, WorkloadSpec};
+//! use avxfreq::workload::crypto::Isa;
+//!
+//! let mut m = ScenarioMatrix::new(0x5EED);
+//! m.topologies = vec![TopologySpec::single_socket_paper(), TopologySpec::dual_socket_paper()];
+//! m.policies = vec![PolicySpec::Unmodified, PolicySpec::CoreSpecNuma { avx_cores_per_socket: 2 }];
+//! m.workloads = vec![WorkloadSpec::compressed_page()];
+//! m.isas = vec![Isa::Avx512];
+//!
+//! let cells = m.cells();
+//! assert_eq!(cells.len(), 4);
+//! assert_eq!(cells[0].topology, "1x12");
+//! assert_eq!(cells[3].topology, "2x12");
+//! assert_eq!(cells[3].cfg.sockets, 2);
+//! // Per-cell seeds are distinct but fully determined by the base seed.
+//! assert_ne!(cells[0].seed, cells[1].seed);
+//! assert_eq!(m.cells()[1].seed, cells[1].seed);
+//! ```
+
+use crate::cpu::Topology;
+use crate::sched::PolicyKind;
+use crate::sim::{Time, MS, SEC};
+use crate::util::table::Table;
+use crate::workload::client::LoadMode;
+use crate::workload::crypto::Isa;
+use crate::workload::webserver::{run_webserver, WebCfg, WebRun};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One point on the topology axis: a machine shape.
+#[derive(Clone, Debug)]
+pub struct TopologySpec {
+    /// Short label used in tables (e.g. `2x12`).
+    pub name: String,
+    /// Server cores, split over `sockets` contiguous balanced chunks.
+    pub cores: usize,
+    /// Sockets (NUMA nodes / frequency domains).
+    pub sockets: usize,
+}
+
+impl TopologySpec {
+    /// The paper's evaluation machine: 12 server cores on one socket.
+    pub fn single_socket_paper() -> Self {
+        TopologySpec { name: "1x12".to_string(), cores: 12, sockets: 1 }
+    }
+
+    /// Two of the paper's machines in one chassis: 2 sockets × 12 server
+    /// cores.
+    pub fn dual_socket_paper() -> Self {
+        TopologySpec { name: "2x12".to_string(), cores: 24, sockets: 2 }
+    }
+
+    /// Arbitrary `sockets` × `cores_per_socket` shape.
+    pub fn multi(sockets: usize, cores_per_socket: usize) -> Self {
+        TopologySpec {
+            name: format!("{sockets}x{cores_per_socket}"),
+            cores: sockets * cores_per_socket,
+            sockets,
+        }
+    }
+
+    /// The [`Topology`] this spec describes.
+    pub fn topology(&self) -> Topology {
+        let s = self.sockets.max(1);
+        if self.cores % s == 0 {
+            Topology::multi_socket(s, self.cores / s)
+        } else {
+            Topology {
+                physical_cores: self.cores,
+                smt: 1,
+                sockets: s,
+                server_cores: (0..self.cores).collect(),
+                client_cores: vec![],
+            }
+        }
+    }
+}
+
+/// One point on the policy axis; instantiated against a topology (the
+/// NUMA variant needs the socket count).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicySpec {
+    /// Stock MuQSS.
+    Unmodified,
+    /// The paper's machine-global AVX-core set.
+    CoreSpec { avx_cores: usize },
+    /// Per-socket AVX-core sets ([`PolicyKind::CoreSpecNuma`]).
+    CoreSpecNuma { avx_cores_per_socket: usize },
+    /// §2.1 strict partitioning.
+    StrictPartition { avx_cores: usize },
+}
+
+impl PolicySpec {
+    /// Table label, including the AVX-core parameter.
+    pub fn label(&self) -> String {
+        match self {
+            PolicySpec::Unmodified => "unmodified".to_string(),
+            PolicySpec::CoreSpec { avx_cores } => format!("core-spec({avx_cores})"),
+            PolicySpec::CoreSpecNuma { avx_cores_per_socket } => {
+                format!("core-spec-numa({avx_cores_per_socket}/skt)")
+            }
+            PolicySpec::StrictPartition { avx_cores } => format!("strict({avx_cores})"),
+        }
+    }
+
+    /// Concrete [`PolicyKind`] for a machine of the given shape.
+    pub fn instantiate(&self, topo: &TopologySpec) -> PolicyKind {
+        match *self {
+            PolicySpec::Unmodified => PolicyKind::Unmodified,
+            PolicySpec::CoreSpec { avx_cores } => PolicyKind::CoreSpec { avx_cores },
+            PolicySpec::CoreSpecNuma { avx_cores_per_socket } => PolicyKind::CoreSpecNuma {
+                avx_cores_per_socket,
+                sockets: topo.sockets.max(1),
+            },
+            PolicySpec::StrictPartition { avx_cores } => {
+                PolicyKind::StrictPartition { avx_cores }
+            }
+        }
+    }
+}
+
+/// One point on the workload axis.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Short label used in tables.
+    pub name: String,
+    /// Compress the page on the fly (the paper's main scenario).
+    pub compress: bool,
+    /// Page size in KiB.
+    pub page_kib: usize,
+    /// Offered open-loop load per server core (req/s); multiplied by the
+    /// topology's core count so every machine shape sees equal pressure
+    /// per core.
+    pub rate_per_core: f64,
+}
+
+impl WorkloadSpec {
+    /// The paper's compressed-page scenario (72 KiB, 5 000 req/s/core —
+    /// the paper's 60 000 req/s over its 12 cores).
+    pub fn compressed_page() -> Self {
+        WorkloadSpec {
+            name: "compressed".to_string(),
+            compress: true,
+            page_kib: 72,
+            rate_per_core: 5_000.0,
+        }
+    }
+
+    /// The uncompressed variant (crypto-dominated requests).
+    pub fn plain_page() -> Self {
+        WorkloadSpec {
+            name: "plain".to_string(),
+            compress: false,
+            page_kib: 72,
+            rate_per_core: 33_000.0,
+        }
+    }
+}
+
+/// A fully expanded cell of the matrix: labels, a derived seed, and the
+/// self-contained web-server configuration to simulate.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Position in the expansion order (stable across runs).
+    pub index: usize,
+    pub topology: String,
+    pub sockets: usize,
+    pub policy: String,
+    pub workload: String,
+    pub isa: Isa,
+    /// Per-cell seed: a pure function of the base seed and `index`.
+    pub seed: u64,
+    pub cfg: WebCfg,
+}
+
+impl Scenario {
+    /// One-line identifier for notes and logs.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/{}",
+            self.topology,
+            self.isa.name(),
+            self.policy,
+            self.workload
+        )
+    }
+}
+
+/// Result of one executed cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub scenario: Scenario,
+    pub run: WebRun,
+}
+
+/// All cells of an executed matrix, in expansion order.
+#[derive(Clone, Debug)]
+pub struct MatrixResult {
+    pub cells: Vec<CellResult>,
+}
+
+impl MatrixResult {
+    /// The unified comparison table (see [`crate::metrics::matrix_report`]).
+    pub fn table(&self) -> Table {
+        crate::metrics::matrix_report(&self.cells)
+    }
+
+    /// Render the comparison table as aligned text.
+    pub fn render(&self) -> String {
+        self.table().render()
+    }
+
+    /// Write the table to `results/matrix.csv`.
+    pub fn save_csv(&self) -> anyhow::Result<std::path::PathBuf> {
+        self.table().save_csv("matrix")
+    }
+
+    /// Look up a cell's throughput by labels (for repro runners).
+    pub fn throughput(&self, topology: &str, isa: Isa, policy: &str) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| {
+                c.scenario.topology == topology
+                    && c.scenario.isa == isa
+                    && c.scenario.policy == policy
+            })
+            .map(|c| c.run.throughput_rps)
+    }
+}
+
+/// SplitMix64 finalizer: decorrelates per-cell seeds derived from
+/// `(base_seed, index)`.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Declarative cartesian sweep over topology × policy × workload × ISA.
+///
+/// The ISA axis is the AVX-ratio axis: `sse4` requests execute no wide
+/// instructions, `avx2` a moderate share, `avx512` the paper's heavy
+/// share (see [`crate::workload::crypto::CryptoProfile`]).
+#[derive(Clone, Debug)]
+pub struct ScenarioMatrix {
+    pub topologies: Vec<TopologySpec>,
+    pub policies: Vec<PolicySpec>,
+    pub workloads: Vec<WorkloadSpec>,
+    pub isas: Vec<Isa>,
+    /// Base seed; each cell derives `mix64(base_seed ^ f(index))`.
+    pub base_seed: u64,
+    /// Simulated warmup before measurement, per cell.
+    pub warmup: Time,
+    /// Simulated measurement window, per cell.
+    pub measure: Time,
+}
+
+impl ScenarioMatrix {
+    /// Empty matrix (fill the axes before calling [`ScenarioMatrix::run`]).
+    pub fn new(base_seed: u64) -> Self {
+        ScenarioMatrix {
+            topologies: Vec::new(),
+            policies: Vec::new(),
+            workloads: Vec::new(),
+            isas: Vec::new(),
+            base_seed,
+            warmup: 300 * MS,
+            measure: SEC,
+        }
+    }
+
+    /// The default 8-cell sweep behind `avxfreq matrix`: {single-socket,
+    /// dual-socket NUMA} × {unmodified, per-socket core specialization}
+    /// × {sse4, avx512} on the compressed-page workload.
+    pub fn default_sweep(quick: bool, base_seed: u64) -> Self {
+        let mut m = ScenarioMatrix::new(base_seed);
+        m.topologies = vec![
+            TopologySpec::single_socket_paper(),
+            TopologySpec::dual_socket_paper(),
+        ];
+        m.policies = vec![
+            PolicySpec::Unmodified,
+            PolicySpec::CoreSpecNuma { avx_cores_per_socket: 2 },
+        ];
+        m.workloads = vec![WorkloadSpec::compressed_page()];
+        m.isas = vec![Isa::Sse4, Isa::Avx512];
+        if quick {
+            m.warmup = 150 * MS;
+            m.measure = 300 * MS;
+        }
+        m
+    }
+
+    /// Number of cells the matrix expands to.
+    pub fn len(&self) -> usize {
+        self.topologies.len() * self.policies.len() * self.workloads.len() * self.isas.len()
+    }
+
+    /// True when any axis is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the cartesian product, topology-major, into runnable cells.
+    pub fn cells(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        for topo in &self.topologies {
+            for policy in &self.policies {
+                for workload in &self.workloads {
+                    for &isa in &self.isas {
+                        let index = out.len();
+                        let seed =
+                            mix64(self.base_seed ^ (index as u64).wrapping_mul(0x9E37_79B9));
+                        // Derive the machine shape through the Topology
+                        // model so the matrix and the cpu layer agree on
+                        // one socket partition.
+                        let t = topo.topology();
+                        let mut cfg = WebCfg::paper_default(isa, policy.instantiate(topo));
+                        cfg.cores = t.n_server_cores();
+                        cfg.sockets = t.n_sockets();
+                        cfg.workers = t.n_server_cores() * 2;
+                        cfg.compress = workload.compress;
+                        cfg.page_bytes = workload.page_kib * 1024;
+                        cfg.mode = LoadMode::Open {
+                            rate: workload.rate_per_core * topo.cores as f64,
+                        };
+                        cfg.seed = seed;
+                        cfg.warmup = self.warmup;
+                        cfg.measure = self.measure;
+                        out.push(Scenario {
+                            index,
+                            topology: topo.name.clone(),
+                            sockets: topo.sockets,
+                            policy: policy.label(),
+                            workload: workload.name.clone(),
+                            isa,
+                            seed,
+                            cfg,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Execute every cell across `threads` OS threads and collect the
+    /// results in cell order. Each worker repeatedly claims the next
+    /// unclaimed cell (work stealing over an atomic cursor), so uneven
+    /// cell durations cannot skew the result: outputs are keyed by cell
+    /// index and each cell is seeded independently of scheduling.
+    pub fn run(&self, threads: usize) -> MatrixResult {
+        let cells = self.cells();
+        let n_threads = threads.max(1).min(cells.len().max(1));
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<WebRun>>> =
+            cells.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..n_threads {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let run = run_webserver(&cells[i].cfg);
+                    *slots[i].lock().expect("slot poisoned") = Some(run);
+                });
+            }
+        });
+        let cells = cells
+            .into_iter()
+            .zip(slots)
+            .map(|(scenario, slot)| CellResult {
+                run: slot
+                    .into_inner()
+                    .expect("slot poisoned")
+                    .expect("every cell claimed and executed"),
+                scenario,
+            })
+            .collect();
+        MatrixResult { cells }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_is_topology_major_and_seeded() {
+        let m = ScenarioMatrix::default_sweep(true, 7);
+        let cells = m.cells();
+        assert_eq!(cells.len(), 8);
+        assert_eq!(cells[0].topology, "1x12");
+        assert_eq!(cells[4].topology, "2x12");
+        assert_eq!(cells[4].cfg.sockets, 2);
+        assert_eq!(cells[4].cfg.cores, 24);
+        // Seeds distinct and reproducible.
+        let again = m.cells();
+        for (a, b) in cells.iter().zip(&again) {
+            assert_eq!(a.seed, b.seed);
+        }
+        let mut seeds: Vec<u64> = cells.iter().map(|c| c.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 8, "per-cell seeds must be distinct");
+    }
+
+    #[test]
+    fn rate_scales_with_core_count() {
+        let m = ScenarioMatrix::default_sweep(true, 7);
+        let cells = m.cells();
+        let rate = |c: &Scenario| match c.cfg.mode {
+            LoadMode::Open { rate } => rate,
+            _ => panic!("open-loop expected"),
+        };
+        assert!((rate(&cells[0]) - 60_000.0).abs() < 1e-6);
+        assert!((rate(&cells[4]) - 120_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn numa_policy_instantiates_with_topology_sockets() {
+        let spec = PolicySpec::CoreSpecNuma { avx_cores_per_socket: 2 };
+        let dual = spec.instantiate(&TopologySpec::dual_socket_paper());
+        assert_eq!(dual, PolicyKind::CoreSpecNuma { avx_cores_per_socket: 2, sockets: 2 });
+        assert_eq!(dual.avx_core_count(), 4);
+        let single = spec.instantiate(&TopologySpec::single_socket_paper());
+        assert_eq!(single.avx_core_count(), 2);
+    }
+
+    #[test]
+    fn topology_spec_builds_topology() {
+        let t = TopologySpec::multi(4, 6).topology();
+        assert_eq!(t.n_server_cores(), 24);
+        assert_eq!(t.n_sockets(), 4);
+        assert_eq!(t.socket_of(23), 3);
+    }
+}

@@ -60,6 +60,12 @@ impl Driver for NullDriver {
 #[derive(Clone, Debug)]
 pub struct MachineParams {
     pub n_cores: usize,
+    /// Sockets (NUMA nodes / frequency domains) the cores are split over
+    /// in contiguous balanced chunks; 1 = the paper's machine. Each
+    /// socket has its own active-core turbo count, and the scheduler
+    /// becomes NUMA-aware (same-node stealing preferred, cross-socket
+    /// migrations charged extra).
+    pub sockets: usize,
     pub turbo: TurboTable,
     pub freq: FreqParams,
     pub ipc: IpcParams,
@@ -67,7 +73,9 @@ pub struct MachineParams {
     pub policy: PolicyKind,
     pub seed: u64,
     /// Cores outside the simulated set that are nevertheless awake (the
-    /// paper's 4 client cores) — raises the package active-core count.
+    /// paper's 4 client cores) — raises the active-core count. Spread
+    /// over the sockets, remainder charged to the last sockets (where
+    /// the paper's client cores sit).
     pub extra_active_cores: usize,
     /// Collect flame-graph samples (costs memory; off for big sweeps).
     pub track_flame: bool,
@@ -79,6 +87,7 @@ impl MachineParams {
     pub fn new(n_cores: usize, policy: PolicyKind) -> Self {
         MachineParams {
             n_cores,
+            sockets: 1,
             turbo: TurboTable::xeon_gold_6130(),
             freq: FreqParams::default(),
             ipc: IpcParams::default(),
@@ -139,8 +148,13 @@ pub struct Machine {
     need_resched: Vec<Time>, // 0 = none, else extra cost to charge (ipi)
     q: EventQueue<Event>,
     channels: Vec<Channel>,
-    n_busy: usize,
-    extra_active: usize,
+    /// Socket (NUMA node / frequency domain) of each core.
+    socket_of: Vec<usize>,
+    /// Busy cores per socket — each socket is its own frequency domain,
+    /// so the turbo table's active-core axis is evaluated per socket.
+    busy_per_socket: Vec<usize>,
+    /// Always-awake external cores (load generator) per socket.
+    extra_per_socket: Vec<usize>,
     track_flame: bool,
     fault_migrate: Option<FaultMigrateParams>,
     /// Flame samples keyed by interned stack id.
@@ -154,12 +168,29 @@ pub struct Machine {
 
 impl Machine {
     pub fn new(p: MachineParams) -> Self {
-        let cores = (0..p.n_cores)
+        let cores: Vec<Core> = (0..p.n_cores)
             .map(|i| Core::new(i, p.freq.clone(), p.ipc.clone()))
             .collect();
+        let socket_of = crate::cpu::topology::socket_map(p.n_cores, p.sockets);
+        let n_sockets = socket_of.iter().copied().max().map_or(1, |m| m + 1);
+        // The socket count appears both in the machine shape and inside
+        // the NUMA policy; normalize the policy on the machine's actual
+        // domain count so no caller can desynchronize the AVX-core
+        // layout from the frequency/NUMA domains.
+        let mut policy = p.policy.clone();
+        if let PolicyKind::CoreSpecNuma { sockets, .. } = &mut policy {
+            *sockets = n_sockets;
+        }
+        // Spread the always-awake external cores over the sockets; the
+        // remainder lands on the last sockets, where the paper's client
+        // cores sit (single-socket machines keep the historical count).
+        let mut extra_per_socket = vec![p.extra_active_cores / n_sockets; n_sockets];
+        for i in 0..p.extra_active_cores % n_sockets {
+            extra_per_socket[n_sockets - 1 - i] += 1;
+        }
         Machine {
             cores,
-            sched: Scheduler::new(p.policy.clone(), p.sched.clone(), p.n_cores),
+            sched: Scheduler::new_numa(policy, p.sched.clone(), socket_of.clone()),
             rng: Rng::new(p.seed),
             turbo: p.turbo.clone(),
             bodies: Vec::new(),
@@ -171,8 +202,9 @@ impl Machine {
             need_resched: vec![0; p.n_cores],
             q: EventQueue::new(),
             channels: Vec::new(),
-            n_busy: 0,
-            extra_active: p.extra_active_cores,
+            socket_of,
+            busy_per_socket: vec![0; n_sockets],
+            extra_per_socket,
             track_flame: p.track_flame,
             fault_migrate: p.fault_migrate,
             flame: BTreeMap::new(),
@@ -187,6 +219,23 @@ impl Machine {
 
     pub fn n_cores(&self) -> usize {
         self.cores.len()
+    }
+
+    /// Number of sockets (frequency domains / NUMA nodes).
+    pub fn n_sockets(&self) -> usize {
+        self.busy_per_socket.len()
+    }
+
+    /// Socket of `core`.
+    pub fn socket_of(&self, core: usize) -> usize {
+        self.socket_of[core]
+    }
+
+    /// Active (busy + external) cores in `core`'s frequency domain — the
+    /// value fed to the turbo table's active-core axis.
+    fn active_cores(&self, core: usize) -> usize {
+        let s = self.socket_of[core];
+        (self.busy_per_socket[s] + self.extra_per_socket[s]).max(1)
     }
 
     /// Create a channel (work queue) and return its id.
@@ -331,7 +380,7 @@ impl Machine {
         }
         const KERNEL_IPC: f64 = 1.4;
         let lic = self.cores[core].license.granted();
-        let active = (self.n_busy + self.extra_active).max(1);
+        let active = self.active_cores(core);
         let ghz = self.turbo.ghz(lic, active);
         let cycles = ns as f64 * ghz;
         let insns = (cycles * KERNEL_IPC) as u64;
@@ -388,7 +437,7 @@ impl Machine {
                     // Syscall/fault overhead preceding this block retires
                     // as kernel instructions on this core.
                     self.charge_overhead(core, pending_ns);
-                    let active = (self.n_busy + self.extra_active).max(1);
+                    let active = self.active_cores(core);
                     let out =
                         self.cores[core].run_block(now + pending_ns, &block, func, active, &self.turbo);
                     if self.track_flame {
@@ -482,19 +531,25 @@ impl Machine {
         self.reschedule(now, core, pending_ns);
     }
 
-    /// Pick the next task for `core` (or go idle).
+    /// Pick the next task for `core` (or go idle). A migrating dispatch
+    /// charges `migration_cost`, plus `cross_socket_migration_cost` when
+    /// the task came from another NUMA node.
     fn reschedule(&mut self, now: Time, core: usize, extra_ns: Time) {
         let was_busy = matches!(self.run[core], CoreRun::Busy { .. });
         let mut cost = extra_ns + self.sched.params.resched_cost;
         let migrations_before = self.sched.stats.migrations;
+        let xsocket_before = self.sched.stats.cross_socket_migrations;
         match self.sched.pick(now, core) {
             Some(task) => {
                 if self.sched.stats.migrations > migrations_before {
                     cost += self.sched.params.migration_cost;
                 }
+                if self.sched.stats.cross_socket_migrations > xsocket_before {
+                    cost += self.sched.params.cross_socket_migration_cost;
+                }
                 self.charge_overhead(core, cost);
                 if !was_busy {
-                    self.n_busy += 1;
+                    self.busy_per_socket[self.socket_of[core]] += 1;
                 }
                 self.run[core] = CoreRun::Busy { task };
                 self.quantum_end[core] = now + cost + self.sched.params.rr_interval;
@@ -503,7 +558,7 @@ impl Machine {
             }
             None => {
                 if was_busy {
-                    self.n_busy -= 1;
+                    self.busy_per_socket[self.socket_of[core]] -= 1;
                 }
                 self.run[core] = CoreRun::Idle { since: now + cost };
             }
@@ -711,6 +766,83 @@ mod tests {
         let mut d = Arrivals { ch };
         m.run_until(SEC, &mut d);
         assert_eq!(*served.borrow(), 10);
+    }
+
+    #[test]
+    fn per_socket_frequency_domains() {
+        // 8 cores over 2 sockets with an active-core-sensitive turbo
+        // table. Six equal tasks land on cores 0..5 (4 on socket 0, 2 on
+        // socket 1), so socket 1's cores run at a higher turbo bin than
+        // socket 0's — on a single package they would all share one bin.
+        let mut p = MachineParams::new(8, PolicyKind::Unmodified);
+        p.sockets = 2;
+        let mut m = Machine::new(p);
+        assert_eq!(m.n_sockets(), 2);
+        assert_eq!(m.socket_of(3), 0);
+        assert_eq!(m.socket_of(4), 1);
+        let done = Rc::new(RefCell::new(0u64));
+        for _ in 0..6 {
+            m.spawn(
+                TaskType::Untyped,
+                0,
+                Box::new(ScalarLoop { remaining: 200, done: done.clone() }),
+            );
+        }
+        m.run_until(SEC, &mut NullDriver);
+        assert_eq!(*done.borrow(), 6);
+        // Xeon 6130 L0 bins: 4 active → 3.5 GHz, 2 active → 3.7 GHz.
+        let s0 = m.cores[0].perf.avg_busy_ghz();
+        let s1 = m.cores[4].perf.avg_busy_ghz();
+        assert!(
+            s1 > s0 + 0.1,
+            "socket 1 (2 active) must turbo above socket 0 (4 active): {s1} vs {s0}"
+        );
+    }
+
+    #[test]
+    fn cross_socket_migration_charged_and_counted() {
+        // One core per socket, so any migration is cross-socket. Core 0
+        // is oversubscribed (two long tasks cycling on the 6 ms quantum);
+        // core 1 runs one shorter task and, once it exits, steals a task
+        // that already ran on core 0 — a cross-socket migration.
+        let mut p = MachineParams::new(2, PolicyKind::Unmodified);
+        p.sockets = 2;
+        p.turbo = TurboTable::flat(2.8, 2.4, 1.9, 2);
+        let mut m = Machine::new(p);
+        let done = Rc::new(RefCell::new(0u64));
+        for remaining in [20_000u64, 6_000, 20_000] {
+            // Tasks 0 and 2 wake onto core 0, task 1 onto core 1.
+            m.spawn(
+                TaskType::Untyped,
+                0,
+                Box::new(ScalarLoop { remaining, done: done.clone() }),
+            );
+        }
+        m.run_until(10 * SEC, &mut NullDriver);
+        assert_eq!(*done.borrow(), 3);
+        let s = &m.sched.stats;
+        assert!(s.migrations > 0, "core 1 must steal from the oversubscribed socket");
+        assert_eq!(
+            s.cross_socket_migrations, s.migrations,
+            "with one core per socket every migration crosses sockets"
+        );
+    }
+
+    #[test]
+    fn single_socket_has_no_cross_socket_migrations() {
+        let mut m = small_machine(PolicyKind::CoreSpec { avx_cores: 1 }, 4);
+        let done = Rc::new(RefCell::new(0u64));
+        for _ in 0..6 {
+            m.spawn(
+                TaskType::Scalar,
+                0,
+                Box::new(AnnotatedAvx { iters: 200, done: done.clone() }),
+            );
+        }
+        m.run_until(20 * SEC, &mut NullDriver);
+        assert_eq!(*done.borrow(), 6);
+        assert!(m.sched.stats.migrations > 0);
+        assert_eq!(m.sched.stats.cross_socket_migrations, 0);
     }
 
     #[test]

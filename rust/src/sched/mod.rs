@@ -10,14 +10,22 @@
 //! * [`policy`] — which cores may run which task types, and the deadline
 //!   penalty that makes AVX cores prefer AVX/untyped work (§3.1).
 //! * [`muqss`] — the scheduler proper: per-core triple runqueues, pick,
-//!   cross-core stealing, preemption via IPI, the `with_avx()` /
-//!   `without_avx()` type-change path (§3.2).
-//! * [`machine`] — the event loop gluing scheduler, cores, and workloads.
+//!   cross-core stealing (NUMA-aware: same-socket queues are scanned
+//!   first and remote-socket steals carry a deadline penalty), preemption
+//!   via IPI, the `with_avx()` / `without_avx()` type-change path (§3.2).
+//! * [`machine`] — the event loop gluing scheduler, cores, and workloads;
+//!   on multi-socket machines each socket is its own frequency domain
+//!   and cross-socket migrations charge extra dispatch cost.
 //! * [`fault_migrate`] — the paper's §6.1 future-work mechanism: make the
 //!   first wide instruction of an unannotated task fault and reclassify
 //!   it automatically.
 //! * [`adaptive`] — §3.1's "as many AVX cores as required" as an online
 //!   controller, plus the §4.3 adaptive-policy future work.
+//!
+//! `docs/ARCHITECTURE.md` (repo root) walks through the event-queue /
+//! machine / scheduler control flow end to end, including the sequence
+//! diagram of a task's `with_avx()` migration path and the socket/NUMA
+//! hierarchy introduced for multi-socket machines.
 
 pub mod task;
 pub mod skiplist;

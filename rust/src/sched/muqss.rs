@@ -41,6 +41,17 @@ pub struct SchedParams {
     /// (cold register/TLB state; cache effects come from the footprint
     /// model instead).
     pub migration_cost: Time,
+    /// Additional cost when that migration crosses a socket boundary:
+    /// the working set must be re-fetched over the interconnect
+    /// (QPI/UPI) and first-touch pages stay remote. Charged on top of
+    /// `migration_cost`; never charged on single-socket machines.
+    pub cross_socket_migration_cost: Time,
+    /// Effective-deadline penalty a core applies to tasks queued on a
+    /// *remote socket's* runqueues, biasing the steal scan toward
+    /// NUMA-local work. Remote tasks still win once their deadline is
+    /// this much earlier, so nothing starves; zero on single-socket
+    /// machines by construction (every queue is local).
+    pub numa_steal_penalty: Time,
     /// Whether cross-core stealing is enabled (ablation switch).
     pub steal: bool,
 }
@@ -54,6 +65,8 @@ impl Default for SchedParams {
             ipi_latency: 900,
             ipi_cost: 220,
             migration_cost: 110,
+            cross_socket_migration_cost: 650,
+            numa_steal_penalty: 3_000_000, // half an rr_interval
             steal: true,
         }
     }
@@ -66,6 +79,8 @@ pub struct SchedStats {
     pub steals: u64,
     pub ipis: u64,
     pub migrations: u64,
+    /// Subset of `migrations` that crossed a socket (NUMA) boundary.
+    pub cross_socket_migrations: u64,
     pub type_changes: u64,
     pub forced_suspends: u64,
     pub preemptions: u64,
@@ -112,11 +127,81 @@ pub struct Scheduler {
     queued_at: Vec<Option<(usize, usize, Key)>>,
     /// What each core is running.
     running: Vec<Option<TaskId>>,
+    /// Socket (NUMA node) of each core; all zeros on single-socket.
+    socket_of: Vec<usize>,
+    /// Per-core core-scan order: own core, same-socket cores (wrapping),
+    /// then remote sockets by distance. Drives the steal scan in
+    /// [`Scheduler::pick`].
+    scan_order: Vec<Vec<usize>>,
+    /// Per-core idle-core search order for wakeups: same-socket cores
+    /// ascending, then remote sockets by distance. For a single socket
+    /// this is exactly the historical `0..n_cores` scan, so the paper's
+    /// single-socket placement is unchanged.
+    wake_order: Vec<Vec<usize>>,
     pub stats: SchedStats,
 }
 
+/// Per-core scan order over `socket_of`: same-socket cores ascending and
+/// rotated to start at the owning core (for one socket this reproduces
+/// the historical `(core + i) % n_cores` scan exactly), then remote
+/// sockets by ascending socket distance, members ascending.
+fn build_scan_order(socket_of: &[usize]) -> Vec<Vec<usize>> {
+    let n = socket_of.len();
+    (0..n)
+        .map(|core| {
+            let s = socket_of[core];
+            let mut order = Vec::with_capacity(n);
+            let locals: Vec<usize> = (0..n).filter(|&c| socket_of[c] == s).collect();
+            let pos = locals.iter().position(|&c| c == core).expect("core in own socket");
+            order.extend(locals[pos..].iter().copied());
+            order.extend(locals[..pos].iter().copied());
+            append_remote_sockets(&mut order, socket_of, s);
+            order
+        })
+        .collect()
+}
+
+/// Per-core wakeup order: same-socket cores in ascending id order, then
+/// remote sockets by distance. Unlike the pick order this is *not*
+/// rotated to the owning core, so a single socket yields the historical
+/// `0..n_cores` idle scan bit-for-bit.
+fn build_wake_order(socket_of: &[usize]) -> Vec<Vec<usize>> {
+    let n = socket_of.len();
+    (0..n)
+        .map(|core| {
+            let s = socket_of[core];
+            let mut order: Vec<usize> = (0..n).filter(|&c| socket_of[c] == s).collect();
+            append_remote_sockets(&mut order, socket_of, s);
+            order
+        })
+        .collect()
+}
+
+/// Append every core outside socket `s`, sockets ordered by distance
+/// (ties to the lower id), members ascending.
+fn append_remote_sockets(order: &mut Vec<usize>, socket_of: &[usize], s: usize) {
+    let n = socket_of.len();
+    let n_sockets = socket_of.iter().copied().max().map_or(1, |m| m + 1);
+    let mut remote: Vec<usize> = (0..n_sockets).filter(|&x| x != s).collect();
+    remote.sort_by_key(|&x| (x.abs_diff(s), x));
+    for rs in remote {
+        order.extend((0..n).filter(|&c| socket_of[c] == rs));
+    }
+}
+
 impl Scheduler {
+    /// Single-socket scheduler (the paper's machine).
     pub fn new(policy: PolicyKind, params: SchedParams, n_cores: usize) -> Self {
+        Self::new_numa(policy, params, vec![0; n_cores])
+    }
+
+    /// NUMA-aware scheduler: `socket_of[c]` is core `c`'s socket id.
+    /// Socket ids must be contiguous from 0 (see
+    /// [`crate::cpu::topology::socket_map`]).
+    pub fn new_numa(policy: PolicyKind, params: SchedParams, socket_of: Vec<usize>) -> Self {
+        let n_cores = socket_of.len();
+        let scan_order = build_scan_order(&socket_of);
+        let wake_order = build_wake_order(&socket_of);
         Scheduler {
             policy,
             params,
@@ -125,12 +210,20 @@ impl Scheduler {
             entities: Vec::new(),
             queued_at: Vec::new(),
             running: vec![None; n_cores],
+            socket_of,
+            scan_order,
+            wake_order,
             stats: SchedStats::default(),
         }
     }
 
     pub fn n_cores(&self) -> usize {
         self.n_cores
+    }
+
+    /// Socket (NUMA node) of `core`.
+    pub fn socket_of(&self, core: usize) -> usize {
+        self.socket_of[core]
     }
 
     pub fn entity(&self, t: TaskId) -> &SchedEntity {
@@ -222,15 +315,18 @@ impl Scheduler {
         let key = self.rq[home].queues[qi].insert(self.entities[task.0].vdeadline, task);
         self.queued_at[task.0] = Some((home, qi, key));
         self.entities[task.0].state = RunState::Queued(home);
-        self.wake_target(task, ttype, reserved, exclude)
+        self.wake_target(task, ttype, home, reserved, exclude)
     }
 
     /// Decide whether the newly queued `task` should trigger a dispatch or
-    /// an IPI (§3.2's preemption path).
+    /// an IPI (§3.2's preemption path). Idle cores are searched in
+    /// `home`'s NUMA scan order, so a waking task prefers an idle core on
+    /// its own socket before waking a remote one.
     fn wake_target(
         &mut self,
         task: TaskId,
         ttype: TaskType,
+        home: usize,
         reserved: &dyn Fn(usize) -> bool,
         exclude: Option<usize>,
     ) -> WakeTarget {
@@ -240,7 +336,8 @@ impl Scheduler {
             PolicyKind::Unmodified => TaskType::Untyped,
             _ => ttype,
         };
-        for core in 0..self.n_cores {
+        for i in 0..self.n_cores {
+            let core = self.wake_order[home][i];
             if Some(core) != exclude
                 && self.running[core].is_none()
                 && !reserved(core)
@@ -251,7 +348,10 @@ impl Scheduler {
         }
         // Busy core running something with a later effective deadline?
         // From the viewpoint of an eligible core, the new task's effective
-        // deadline carries its own penalty too.
+        // deadline carries its own penalty too — including the NUMA steal
+        // penalty a remote-socket core would apply at pick time, so we
+        // never IPI a core that would then refuse to take the task.
+        let home_socket = self.socket_of[home];
         let mut best: Option<(u128, usize)> = None;
         for core in 0..self.n_cores {
             if Some(core) == exclude || !self.policy.eligible(core, self.n_cores, effective_type) {
@@ -265,8 +365,11 @@ impl Scheduler {
             };
             let cur_eff = cur_e.vdeadline as u128
                 + self.policy.deadline_penalty(core, self.n_cores, cur_type) as u128;
-            let new_eff = deadline as u128
+            let mut new_eff = deadline as u128
                 + self.policy.deadline_penalty(core, self.n_cores, effective_type) as u128;
+            if self.socket_of[core] != home_socket {
+                new_eff += self.params.numa_steal_penalty as u128;
+            }
             if new_eff < cur_eff {
                 let margin = cur_eff - new_eff;
                 if best.map(|(m, _)| margin > m).unwrap_or(true) {
@@ -293,7 +396,12 @@ impl Scheduler {
     }
 
     /// Core `core` picks its next task: the earliest effective deadline
-    /// over all queues it may use, across all cores (stealing).
+    /// over all queues it may use, across all cores (stealing). The scan
+    /// walks the core's NUMA order — own queues, same-socket cores, then
+    /// remote sockets — and queues on a remote socket carry the
+    /// `numa_steal_penalty` on top of any policy penalty, so same-node
+    /// work (in particular same-node AVX work for an AVX core) wins
+    /// unless the remote task's deadline is substantially earlier.
     pub fn pick(&mut self, now: Time, core: usize) -> Option<TaskId> {
         self.stats.picks += 1;
         let mut best: Option<(u128, usize, usize, Key, TaskId)> = None;
@@ -310,19 +418,22 @@ impl Scheduler {
             };
             *p = self.policy.deadline_penalty(core, self.n_cores, ttype) as u128;
         }
+        let my_socket = self.socket_of[core];
         // Local queues first (ties go to local because of strict `<`).
         let n = if self.params.steal { self.n_cores } else { 1 };
         for i in 0..n {
-            let c = if i == 0 { core } else { (core + i) % self.n_cores };
-            if i > 0 && c == core {
-                continue;
-            }
+            let c = self.scan_order[core][i];
+            let numa = if self.socket_of[c] == my_socket {
+                0u128
+            } else {
+                self.params.numa_steal_penalty as u128
+            };
             for qi in 0..3 {
                 if !eligible[qi] {
                     continue;
                 }
                 if let Some((key, task)) = self.rq[c].queues[qi].peek() {
-                    let eff = key.vdeadline as u128 + penalty[qi];
+                    let eff = key.vdeadline as u128 + penalty[qi] + numa;
                     if best.map(|(b, ..)| eff < b).unwrap_or(true) {
                         best = Some((eff, c, qi, key, task));
                     }
@@ -341,6 +452,9 @@ impl Scheduler {
             if last != core {
                 e.migrations += 1;
                 self.stats.migrations += 1;
+                if self.socket_of[last] != my_socket {
+                    self.stats.cross_socket_migrations += 1;
+                }
             }
         }
         e.last_core = Some(core);
@@ -606,5 +720,149 @@ mod tests {
         s.enqueue(0, t, 1, &|_| false, None);
         assert!(s.pick(0, 1).is_none(), "AVX core must not pick scalar under strict");
         assert_eq!(s.pick(0, 0), Some(t));
+    }
+
+    /// 4 cores over 2 sockets: cores 0,1 on socket 0; cores 2,3 on socket 1.
+    fn numa_sched(policy: PolicyKind) -> Scheduler {
+        Scheduler::new_numa(policy, SchedParams::default(), vec![0, 0, 1, 1])
+    }
+
+    #[test]
+    fn scan_order_visits_own_socket_first() {
+        let s = numa_sched(PolicyKind::Unmodified);
+        assert_eq!(s.scan_order[0], vec![0, 1, 2, 3]);
+        assert_eq!(s.scan_order[1], vec![1, 0, 2, 3]);
+        assert_eq!(s.scan_order[2], vec![2, 3, 0, 1]);
+        assert_eq!(s.scan_order[3], vec![3, 2, 0, 1]);
+        // Wake order: same-socket ascending (no rotation), then remote.
+        assert_eq!(s.wake_order[2], vec![2, 3, 0, 1]);
+        assert_eq!(s.wake_order[3], vec![2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn single_socket_scan_order_matches_historical_rotation() {
+        let s = sched(PolicyKind::Unmodified, 4);
+        for core in 0..4 {
+            let want: Vec<usize> = (0..4).map(|i| (core + i) % 4).collect();
+            assert_eq!(s.scan_order[core], want, "core {core}");
+            // Historical wakeup scan was `0..n_cores` for every waker.
+            assert_eq!(s.wake_order[core], vec![0, 1, 2, 3], "core {core}");
+        }
+    }
+
+    #[test]
+    fn numa_steal_prefers_local_socket_despite_earlier_remote_deadline() {
+        let mut s = numa_sched(PolicyKind::Unmodified);
+        let remote = s.add_task(TaskType::Untyped, 0);
+        let local = s.add_task(TaskType::Untyped, 0);
+        // Force deadlines: remote slightly earlier than local, but by
+        // less than the NUMA steal penalty.
+        s.entity_mut(remote).vdeadline = 1_000_000;
+        s.entity_mut(local).vdeadline = 1_000_500;
+        s.enqueue(0, remote, 0, &|_| false, None); // queued on socket 0
+        s.enqueue(0, local, 2, &|_| false, None); // queued on socket 1
+        assert_eq!(s.pick(0, 3), Some(local), "core 3 must keep work on its node");
+        assert_eq!(s.stats.cross_socket_migrations, 0);
+    }
+
+    #[test]
+    fn numa_steal_crosses_sockets_when_remote_deadline_much_earlier() {
+        let mut s = numa_sched(PolicyKind::Unmodified);
+        let remote = s.add_task(TaskType::Untyped, 0);
+        let local = s.add_task(TaskType::Untyped, 0);
+        let penalty = s.params.numa_steal_penalty;
+        s.entity_mut(remote).vdeadline = 1_000_000;
+        s.entity_mut(local).vdeadline = 1_000_000 + penalty + 1_000_000;
+        s.enqueue(0, remote, 0, &|_| false, None);
+        s.enqueue(0, local, 2, &|_| false, None);
+        assert_eq!(s.pick(0, 3), Some(remote), "far-earlier remote work must still be stolen");
+        assert_eq!(s.stats.steals, 1);
+    }
+
+    #[test]
+    fn cross_socket_migration_counted() {
+        let mut s = numa_sched(PolicyKind::Unmodified);
+        let t = s.add_task(TaskType::Untyped, 0);
+        s.enqueue(0, t, 0, &|_| false, None);
+        assert_eq!(s.pick(0, 0), Some(t)); // first dispatch: no migration
+        s.requeue_running(10, 0, true, &|_| false);
+        // Same-socket migration: counted, but not cross-socket.
+        assert_eq!(s.pick(20, 1), Some(t));
+        assert_eq!(s.stats.migrations, 1);
+        assert_eq!(s.stats.cross_socket_migrations, 0);
+        s.requeue_running(30, 1, true, &|_| false);
+        // Cross-socket migration: both counters move.
+        assert_eq!(s.pick(40, 3), Some(t));
+        assert_eq!(s.stats.migrations, 2);
+        assert_eq!(s.stats.cross_socket_migrations, 1);
+    }
+
+    #[test]
+    fn wake_prefers_idle_core_on_home_socket() {
+        let mut s = numa_sched(PolicyKind::Unmodified);
+        let t = s.add_task(TaskType::Untyped, 0);
+        // Home = fallback core 3 (socket 1); all cores idle, so the wake
+        // scan must offer a socket-1 core (lowest id first).
+        match s.enqueue(0, t, 3, &|_| false, None) {
+            WakeTarget::DispatchIdle(c) => assert_eq!(c, 2),
+            other => panic!("{other:?}"),
+        }
+        // With socket 1 reserved, the wake falls over to socket 0.
+        let u = s.add_task(TaskType::Untyped, 0);
+        match s.enqueue(0, u, 2, &|c| c >= 2, None) {
+            WakeTarget::DispatchIdle(c) => assert!(c < 2, "got {c}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wake_does_not_ipi_remote_core_that_would_refuse_the_task() {
+        // One core per socket, both busy; the remote core's task has a
+        // later deadline, but by less than the NUMA steal penalty — an
+        // IPI would make it reschedule and then pick its own task right
+        // back. The wake must stay Queued instead.
+        let mut s =
+            Scheduler::new_numa(PolicyKind::Unmodified, SchedParams::default(), vec![0, 1]);
+        let local_run = s.add_task(TaskType::Untyped, 0);
+        let remote_run = s.add_task(TaskType::Untyped, 0);
+        s.enqueue(0, local_run, 0, &|_| false, None);
+        s.enqueue(0, remote_run, 1, &|_| false, None);
+        assert_eq!(s.pick(0, 0), Some(local_run));
+        assert_eq!(s.pick(0, 1), Some(remote_run));
+        // Local runner is earlier than the new task (no preemption on
+        // socket 0); remote runner is later, but within the penalty.
+        s.entity_mut(local_run).vdeadline = 1_000_000;
+        s.entity_mut(remote_run).vdeadline = 2_000_000;
+        let new = s.add_task(TaskType::Untyped, 0);
+        s.entity_mut(new).vdeadline = 1_500_000;
+        match s.enqueue(0, new, 0, &|_| false, None) {
+            WakeTarget::Queued => {}
+            other => panic!("expected Queued, got {other:?}"),
+        }
+        assert_eq!(s.stats.ipis, 0);
+        // A far-later remote deadline (beyond the penalty) is preempted.
+        s.entity_mut(remote_run).vdeadline =
+            1_500_000 + s.params.numa_steal_penalty + 1_000_000;
+        let new2 = s.add_task(TaskType::Untyped, 0);
+        s.entity_mut(new2).vdeadline = 1_500_000;
+        match s.enqueue(0, new2, 0, &|_| false, None) {
+            WakeTarget::Preempt(c) => assert_eq!(c, 1),
+            other => panic!("expected Preempt(1), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn numa_corespec_keeps_avx_on_socket_avx_cores() {
+        // 2 sockets × 2 cores, one AVX core per socket (cores 1 and 3).
+        let mut s = Scheduler::new_numa(
+            PolicyKind::CoreSpecNuma { avx_cores_per_socket: 1, sockets: 2 },
+            SchedParams::default(),
+            vec![0, 0, 1, 1],
+        );
+        let avx = s.add_task(TaskType::Avx, 0);
+        s.enqueue(0, avx, 0, &|_| false, None);
+        assert!(s.pick(0, 0).is_none(), "scalar core 0 must not pick AVX");
+        assert!(s.pick(0, 2).is_none(), "scalar core 2 must not pick AVX");
+        assert_eq!(s.pick(0, 1), Some(avx), "socket-0 AVX core takes it");
     }
 }

@@ -12,11 +12,44 @@
 //!   scheme),
 //! * never restrict untyped tasks (they would otherwise be starved on
 //!   AVX cores — §3.2).
+//!
+//! On multi-socket machines ([`PolicyKind::CoreSpecNuma`]) the AVX-core
+//! set is distributed so every socket keeps its own AVX cores: an AVX
+//! task can stay on its NUMA node instead of crossing the interconnect
+//! to reach the machine-global AVX cores, and a socket whose AVX cores
+//! hold the low-frequency license never drags the other sockets down
+//! (each socket is its own frequency domain).
 
 use super::task::TaskType;
+use crate::cpu::topology::{socket_of_core, socket_span};
 use crate::sim::{Time, MS};
 
 /// Which scheduling policy a simulation runs.
+///
+/// # Examples
+///
+/// Per-socket core specialization on a 2-socket, 12-core machine — the
+/// last two cores of *each* socket are AVX cores:
+///
+/// ```
+/// use avxfreq::sched::PolicyKind;
+/// use avxfreq::sched::TaskType;
+///
+/// let p = PolicyKind::CoreSpecNuma { avx_cores_per_socket: 2, sockets: 2 };
+/// assert_eq!(p.avx_core_count(), 4);
+/// // Socket 0 spans cores 0..6: cores 4 and 5 are its AVX cores.
+/// assert!(!p.is_avx_core(3, 12));
+/// assert!(p.is_avx_core(4, 12) && p.is_avx_core(5, 12));
+/// // Socket 1 spans cores 6..12: cores 10 and 11 are its AVX cores.
+/// assert!(!p.is_avx_core(9, 12));
+/// assert!(p.is_avx_core(10, 12) && p.is_avx_core(11, 12));
+/// // AVX tasks are restricted to AVX cores; scalar tasks run anywhere
+/// // (deprioritized on AVX cores).
+/// assert!(!p.eligible(3, 12, TaskType::Avx));
+/// assert!(p.eligible(4, 12, TaskType::Avx));
+/// assert!(p.eligible(4, 12, TaskType::Scalar));
+/// assert!(p.deadline_penalty(4, 12, TaskType::Scalar) > 0);
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub enum PolicyKind {
     /// Unmodified MuQSS: task types are ignored; `with_avx()` syscalls do
@@ -26,6 +59,12 @@ pub enum PolicyKind {
     /// are AVX cores; AVX tasks restricted to them; scalar tasks allowed
     /// there at deprioritized deadlines.
     CoreSpec { avx_cores: usize },
+    /// NUMA-aware core specialization: the last `avx_cores_per_socket`
+    /// cores of **each socket** are AVX cores (the machine's cores are
+    /// split over `sockets` contiguous balanced chunks, matching
+    /// [`crate::cpu::topology::socket_of_core`]). With `sockets: 1` this
+    /// is exactly [`PolicyKind::CoreSpec`].
+    CoreSpecNuma { avx_cores_per_socket: usize, sockets: usize },
     /// §2.1 strawman: strict partitioning — scalar tasks may *not* run on
     /// AVX cores. Underutilizes whenever the core ratio mismatches the
     /// workload mix (evaluated in the ablation benches).
@@ -33,20 +72,25 @@ pub enum PolicyKind {
 }
 
 impl PolicyKind {
+    /// Short stable name used in tables and CSV output.
     pub fn name(&self) -> &'static str {
         match self {
             PolicyKind::Unmodified => "unmodified",
             PolicyKind::CoreSpec { .. } => "core-spec",
+            PolicyKind::CoreSpecNuma { .. } => "core-spec-numa",
             PolicyKind::StrictPartition { .. } => "strict-partition",
         }
     }
 
-    /// Number of AVX cores for a server-core count.
+    /// Number of AVX cores this policy dedicates machine-wide.
     pub fn avx_core_count(&self) -> usize {
         match self {
             PolicyKind::Unmodified => 0,
             PolicyKind::CoreSpec { avx_cores } | PolicyKind::StrictPartition { avx_cores } => {
                 *avx_cores
+            }
+            PolicyKind::CoreSpecNuma { avx_cores_per_socket, sockets } => {
+                *avx_cores_per_socket * (*sockets).max(1)
             }
         }
     }
@@ -54,17 +98,31 @@ impl PolicyKind {
     /// Is `core` (an index into the server-core list, 0-based) an AVX core?
     /// Following the paper's evaluation, the *last* cores are AVX cores
     /// ("restrict execution of these functions to the last two physical
-    /// cores", §4).
+    /// cores", §4) — of the machine for [`PolicyKind::CoreSpec`] /
+    /// [`PolicyKind::StrictPartition`], of each socket for
+    /// [`PolicyKind::CoreSpecNuma`].
     pub fn is_avx_core(&self, core: usize, n_cores: usize) -> bool {
-        let k = self.avx_core_count().min(n_cores);
-        core >= n_cores - k
+        match self {
+            PolicyKind::Unmodified => false,
+            PolicyKind::CoreSpec { .. } | PolicyKind::StrictPartition { .. } => {
+                let k = self.avx_core_count().min(n_cores);
+                core >= n_cores - k
+            }
+            PolicyKind::CoreSpecNuma { avx_cores_per_socket, sockets } => {
+                let s = (*sockets).max(1);
+                let socket = socket_of_core(core, n_cores, s);
+                let (start, end) = socket_span(socket, n_cores, s);
+                let k = (*avx_cores_per_socket).min(end - start);
+                core >= end - k
+            }
+        }
     }
 
     /// May `core` pick tasks from the queue of `ttype` at all?
     pub fn eligible(&self, core: usize, n_cores: usize, ttype: TaskType) -> bool {
         match self {
             PolicyKind::Unmodified => true,
-            PolicyKind::CoreSpec { .. } => match ttype {
+            PolicyKind::CoreSpec { .. } | PolicyKind::CoreSpecNuma { .. } => match ttype {
                 TaskType::Avx => self.is_avx_core(core, n_cores),
                 TaskType::Scalar | TaskType::Untyped => true,
             },
@@ -81,7 +139,7 @@ impl PolicyKind {
     /// that the deadline of all other tasks is guaranteed to be lower").
     pub fn deadline_penalty(&self, core: usize, n_cores: usize, ttype: TaskType) -> Time {
         match self {
-            PolicyKind::CoreSpec { .. }
+            PolicyKind::CoreSpec { .. } | PolicyKind::CoreSpecNuma { .. }
                 if ttype == TaskType::Scalar && self.is_avx_core(core, n_cores) =>
             {
                 SCALAR_ON_AVX_PENALTY
@@ -141,5 +199,48 @@ mod tests {
     fn avx_core_count_clamped() {
         let p = PolicyKind::CoreSpec { avx_cores: 99 };
         assert!(p.is_avx_core(0, 4));
+    }
+
+    #[test]
+    fn numa_variant_reserves_avx_cores_per_socket() {
+        // 12 cores / 2 sockets: sockets span 0..6 and 6..12.
+        let p = PolicyKind::CoreSpecNuma { avx_cores_per_socket: 2, sockets: 2 };
+        let avx: Vec<usize> = (0..12).filter(|&c| p.is_avx_core(c, 12)).collect();
+        assert_eq!(avx, vec![4, 5, 10, 11]);
+        assert_eq!(p.avx_core_count(), 4);
+        // AVX tasks may use either socket's AVX cores.
+        assert!(p.eligible(4, 12, TaskType::Avx));
+        assert!(p.eligible(10, 12, TaskType::Avx));
+        assert!(!p.eligible(6, 12, TaskType::Avx));
+        // Scalar deprioritized on both sockets' AVX cores.
+        assert!(p.deadline_penalty(5, 12, TaskType::Scalar) > 0);
+        assert!(p.deadline_penalty(11, 12, TaskType::Scalar) > 0);
+        assert_eq!(p.deadline_penalty(6, 12, TaskType::Scalar), 0);
+    }
+
+    #[test]
+    fn numa_variant_with_one_socket_matches_corespec() {
+        let numa = PolicyKind::CoreSpecNuma { avx_cores_per_socket: 2, sockets: 1 };
+        let flat = PolicyKind::CoreSpec { avx_cores: 2 };
+        for core in 0..12 {
+            assert_eq!(numa.is_avx_core(core, 12), flat.is_avx_core(core, 12), "core {core}");
+            for t in [TaskType::Scalar, TaskType::Avx, TaskType::Untyped] {
+                assert_eq!(numa.eligible(core, 12, t), flat.eligible(core, 12, t));
+                assert_eq!(
+                    numa.deadline_penalty(core, 12, t),
+                    flat.deadline_penalty(core, 12, t)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn numa_variant_clamps_to_socket_size() {
+        // 4 cores / 2 sockets, 9 AVX cores per socket requested: every
+        // core becomes an AVX core, nothing panics.
+        let p = PolicyKind::CoreSpecNuma { avx_cores_per_socket: 9, sockets: 2 };
+        for core in 0..4 {
+            assert!(p.is_avx_core(core, 4));
+        }
     }
 }

@@ -36,6 +36,9 @@ pub struct WebCfg {
     pub workers: usize,
     /// Physical server cores (paper: 12 of 16).
     pub cores: usize,
+    /// Sockets (NUMA nodes / frequency domains) the server cores span;
+    /// 1 = the paper's single-socket machine.
+    pub sockets: usize,
     pub mode: LoadMode,
     /// Full TLS handshake every N requests per connection (keepalive).
     pub handshake_every: u64,
@@ -64,6 +67,7 @@ impl WebCfg {
             policy,
             workers: 24,
             cores: 12,
+            sockets: 1,
             mode: LoadMode::Open { rate: 60_000.0 },
             handshake_every: 20,
             seed: 0x5EED,
@@ -93,21 +97,37 @@ impl WebCfg {
             other => anyhow::bail!("server.isa = {other:?} (sse4|avx2|avx512)"),
         };
         let avx_cores = conf.int_or("sched.avx_cores", 2) as usize;
+        let sockets = conf.int_or("machine.sockets", 1).max(1) as usize;
         let policy = match conf.str_or("sched.policy", "corespec") {
             "unmodified" => PolicyKind::Unmodified,
             "corespec" => PolicyKind::CoreSpec { avx_cores },
+            "corespec-numa" => {
+                PolicyKind::CoreSpecNuma { avx_cores_per_socket: avx_cores, sockets }
+            }
             "strict" => PolicyKind::StrictPartition { avx_cores },
-            other => anyhow::bail!("sched.policy = {other:?} (unmodified|corespec|strict)"),
+            other => {
+                anyhow::bail!("sched.policy = {other:?} (unmodified|corespec|corespec-numa|strict)")
+            }
         };
         let mut cfg = WebCfg::paper_default(isa, policy);
         cfg.compress = conf.bool_or("server.compress", cfg.compress);
         cfg.page_bytes = conf.int_or("server.page_kib", (cfg.page_bytes / 1024) as i64) as usize * 1024;
         cfg.workers = conf.int_or("server.workers", cfg.workers as i64) as usize;
         cfg.cores = conf.int_or("machine.cores", cfg.cores as i64) as usize;
+        cfg.sockets = sockets;
         cfg.handshake_every = conf.int_or("server.handshake_every", cfg.handshake_every as i64) as u64;
         cfg.annotate = conf.bool_or("sched.annotate", cfg.annotate);
         cfg.fault_migrate = conf.bool_or("sched.fault_migrate", false);
         if conf.bool_or("sched.adaptive", false) {
+            // The adaptive controller manages only the machine-global
+            // CoreSpec set; rejecting other policies here beats a
+            // silent no-op run reporting "0 resizes".
+            anyhow::ensure!(
+                matches!(cfg.policy, PolicyKind::CoreSpec { .. }),
+                "sched.adaptive = true requires sched.policy = \"corespec\" \
+                 (the controller does not manage {} yet)",
+                cfg.policy.name()
+            );
             cfg.adaptive = Some(Default::default());
         }
         cfg.seed = conf.int_or("seed", cfg.seed as i64) as u64;
@@ -374,6 +394,9 @@ pub struct WebRun {
     pub p99_us: f64,
     pub type_changes_per_sec: f64,
     pub migrations_per_sec: f64,
+    /// Migrations that crossed a socket (NUMA) boundary; 0 on
+    /// single-socket machines.
+    pub cross_socket_migrations_per_sec: f64,
     pub throttle_ratio: f64,
     pub license_share: [f64; 3],
     pub completed: u64,
@@ -404,10 +427,16 @@ fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun
     let stacks = Rc::new(RefCell::new(StackTable::new()));
     let planner = Rc::new(Planner::new(cfg.clone(), stacks.clone()));
 
+    // `Machine::new` normalizes a CoreSpecNuma policy's socket count on
+    // the machine's actual domain count, so a caller overriding only
+    // `cfg.sockets` cannot desynchronize the AVX-core layout.
     let mut mp = MachineParams::new(cfg.cores, cfg.policy.clone());
+    mp.sockets = cfg.sockets;
     mp.sched = sched;
     mp.seed = cfg.seed;
-    mp.extra_active_cores = 4; // wrk2 client cores keep the package awake
+    // wrk2 client cores keep the package(s) awake: 4 per socket, like
+    // the paper's single-socket evaluation.
+    mp.extra_active_cores = 4 * cfg.sockets.max(1);
     mp.track_flame = cfg.track_flame;
     if cfg.fault_migrate {
         mp.fault_migrate = Some(Default::default());
@@ -495,6 +524,7 @@ fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun
         p99_us: s.latency.percentile(99.0) as f64 / 1_000.0,
         type_changes_per_sec: m.sched.stats.type_changes as f64 / secs,
         migrations_per_sec: m.sched.stats.migrations as f64 / secs,
+        cross_socket_migrations_per_sec: m.sched.stats.cross_socket_migrations as f64 / secs,
         throttle_ratio: total.throttle_ratio(),
         license_share: total.license_time_share(),
         completed,

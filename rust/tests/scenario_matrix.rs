@@ -1,0 +1,135 @@
+//! Integration tests for the scenario-matrix subsystem and the NUMA
+//! machine model: cross-thread determinism (the matrix acceptance
+//! property), per-socket AVX confinement, and the multi-socket Fig-5
+//! sweep's shape.
+
+use avxfreq::scenario::{PolicySpec, ScenarioMatrix, TopologySpec, WorkloadSpec};
+use avxfreq::sched::PolicyKind;
+use avxfreq::sim::MS;
+use avxfreq::testkit::{assert_prop, IntRange};
+use avxfreq::workload::client::LoadMode;
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::{run_webserver_machine, WebCfg};
+
+/// A tiny matrix that still exercises both topology kinds and both
+/// policy kinds: 2 × 2 × 1 × 1 = 4 cells, short windows, small machines.
+fn tiny_matrix(seed: u64) -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new(seed);
+    m.topologies = vec![TopologySpec::multi(1, 4), TopologySpec::multi(2, 2)];
+    m.policies = vec![
+        PolicySpec::Unmodified,
+        PolicySpec::CoreSpecNuma { avx_cores_per_socket: 1 },
+    ];
+    m.workloads = vec![WorkloadSpec {
+        name: "small".to_string(),
+        compress: true,
+        page_kib: 8,
+        rate_per_core: 4_000.0,
+    }];
+    m.isas = vec![Isa::Avx512];
+    m.warmup = 100 * MS;
+    m.measure = 200 * MS;
+    m
+}
+
+/// The matrix acceptance property: the same seeds produce a
+/// byte-identical metrics table regardless of how many OS threads
+/// execute the cells (testkit property over random base seeds).
+#[test]
+fn prop_matrix_deterministic_across_threads() {
+    let seeds = IntRange { lo: 1, hi: 1 << 40 };
+    assert_prop("matrix thread determinism", 0x3A7B1C, 3, &seeds, |&seed| {
+        let serial = tiny_matrix(seed).run(1).render();
+        let parallel = tiny_matrix(seed).run(4).render();
+        if serial != parallel {
+            return Err(format!(
+                "tables differ between 1 and 4 threads:\n--- serial ---\n{serial}\n--- parallel ---\n{parallel}"
+            ));
+        }
+        let again = tiny_matrix(seed).run(4).render();
+        if parallel != again {
+            return Err("same seed, two 4-thread runs differ".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn matrix_cells_complete_and_serve() {
+    let result = tiny_matrix(11).run(4);
+    assert_eq!(result.cells.len(), 4);
+    for cell in &result.cells {
+        assert!(
+            cell.run.completed > 50,
+            "{} only completed {}",
+            cell.scenario.label(),
+            cell.run.completed
+        );
+    }
+    // The rendered table carries one row per cell plus header lines.
+    let table = result.table();
+    assert_eq!(table.rows.len(), 4);
+}
+
+#[test]
+fn dual_socket_corespec_numa_confines_avx_per_socket() {
+    // 2 sockets × 4 cores, one AVX core per socket (cores 3 and 7).
+    let mut cfg = WebCfg::paper_default(
+        Isa::Avx512,
+        PolicyKind::CoreSpecNuma { avx_cores_per_socket: 1, sockets: 2 },
+    );
+    cfg.cores = 8;
+    cfg.sockets = 2;
+    cfg.workers = 16;
+    cfg.page_bytes = 16 * 1024;
+    cfg.warmup = 150 * MS;
+    cfg.measure = 500 * MS;
+    cfg.mode = LoadMode::Open { rate: 50_000.0 };
+    let (run, m) = run_webserver_machine(&cfg);
+    assert!(run.completed > 500, "completed={}", run.completed);
+    for c in [0, 1, 2, 4, 5, 6] {
+        assert_eq!(
+            m.cores[c].perf.license_cycles[2],
+            0,
+            "scalar core {c} saw AVX-512 license cycles"
+        );
+        assert_eq!(m.cores[c].perf.license_requests, 0, "scalar core {c} requested");
+    }
+    let avx_requests: u64 = [3usize, 7].iter().map(|&c| m.cores[c].perf.license_requests).sum();
+    assert!(avx_requests > 0, "per-socket AVX cores must carry the licensed work");
+}
+
+#[test]
+fn dual_socket_throughput_scales() {
+    // Equal per-core pressure: the 2×12 machine must complete roughly
+    // twice the requests of the 1×12 machine (NUMA costs shave a few
+    // percent, they must not halve it).
+    let mut m = ScenarioMatrix::new(5);
+    m.topologies = vec![TopologySpec::single_socket_paper(), TopologySpec::dual_socket_paper()];
+    m.policies = vec![PolicySpec::Unmodified];
+    m.workloads = vec![WorkloadSpec {
+        name: "small".to_string(),
+        compress: true,
+        page_kib: 16,
+        rate_per_core: 3_000.0,
+    }];
+    m.isas = vec![Isa::Sse4];
+    m.warmup = 150 * MS;
+    m.measure = 400 * MS;
+    let result = m.run(2);
+    let single = result.throughput("1x12", Isa::Sse4, "unmodified").unwrap();
+    let dual = result.throughput("2x12", Isa::Sse4, "unmodified").unwrap();
+    assert!(
+        dual > single * 1.6,
+        "dual socket must scale throughput: {dual:.0} vs {single:.0} req/s"
+    );
+}
+
+#[test]
+fn fig5_multisocket_matrix_shape() {
+    let m = avxfreq::repro::fig5_multisocket::matrix(true, 3);
+    let cells = m.cells();
+    assert_eq!(cells.len(), 12, "2 topologies × 2 policies × 3 ISAs");
+    assert!(cells.iter().any(|c| c.sockets == 2));
+    assert!(cells.iter().any(|c| c.policy.contains("numa")));
+}

@@ -1,0 +1,123 @@
+//! Offline minimal `flate2` surface.
+//!
+//! Provides [`write::DeflateEncoder`] emitting a *valid raw-deflate
+//! stream* built from stored (BTYPE=00, uncompressed) blocks — any
+//! inflate implementation decodes it, but no compression is performed.
+//! That is sufficient here: the example server uses deflate only as a
+//! scalar-work stand-in for brotli, and nothing in the repo inflates the
+//! result. The compression level is accepted and ignored.
+
+/// Compression level (accepted for API compatibility, ignored).
+#[derive(Clone, Copy, Debug)]
+pub struct Compression(pub u32);
+
+impl Compression {
+    /// Create a compression level (0–9 in the real crate).
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+}
+
+pub mod write {
+    //! Writer-based encoders.
+
+    use std::io::{self, Write};
+
+    /// Raw-deflate encoder writing stored blocks to the inner writer on
+    /// [`DeflateEncoder::finish`].
+    pub struct DeflateEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> DeflateEncoder<W> {
+        /// Wrap `inner`; the level is ignored (stored blocks only).
+        pub fn new(inner: W, _level: super::Compression) -> Self {
+            DeflateEncoder { inner, buf: Vec::new() }
+        }
+
+        /// Emit the deflate stream and return the inner writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            // Stored blocks: 1-byte header (BFINAL | BTYPE=00), LEN,
+            // NLEN (ones' complement), then the raw bytes. Max LEN is
+            // 65535 per block; an empty input still needs one final
+            // empty block to form a valid stream.
+            let chunks: Vec<&[u8]> = if self.buf.is_empty() {
+                vec![&[][..]]
+            } else {
+                self.buf.chunks(65535).collect()
+            };
+            let last = chunks.len() - 1;
+            for (i, chunk) in chunks.iter().enumerate() {
+                let bfinal = u8::from(i == last);
+                let len = chunk.len() as u16;
+                self.inner.write_all(&[bfinal])?;
+                self.inner.write_all(&len.to_le_bytes())?;
+                self.inner.write_all(&(!len).to_le_bytes())?;
+                self.inner.write_all(chunk)?;
+            }
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for DeflateEncoder<W> {
+        fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        fn inflate_stored(stream: &[u8]) -> Vec<u8> {
+            // Minimal decoder for stored-block-only streams.
+            let mut out = Vec::new();
+            let mut i = 0;
+            loop {
+                let hdr = stream[i];
+                assert_eq!(hdr & 0b110, 0, "stored blocks only");
+                let len = u16::from_le_bytes([stream[i + 1], stream[i + 2]]) as usize;
+                let nlen = u16::from_le_bytes([stream[i + 3], stream[i + 4]]);
+                assert_eq!(!(len as u16), nlen, "LEN/NLEN mismatch");
+                out.extend_from_slice(&stream[i + 5..i + 5 + len]);
+                i += 5 + len;
+                if hdr & 1 == 1 {
+                    break;
+                }
+            }
+            assert_eq!(i, stream.len());
+            out
+        }
+
+        #[test]
+        fn roundtrip_small() {
+            let mut enc = DeflateEncoder::new(Vec::new(), crate::Compression::new(4));
+            enc.write_all(b"hello deflate").unwrap();
+            let stream = enc.finish().unwrap();
+            assert_eq!(inflate_stored(&stream), b"hello deflate");
+        }
+
+        #[test]
+        fn roundtrip_multi_block() {
+            let data: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+            let mut enc = DeflateEncoder::new(Vec::new(), crate::Compression::new(1));
+            enc.write_all(&data).unwrap();
+            let stream = enc.finish().unwrap();
+            assert_eq!(inflate_stored(&stream), data);
+        }
+
+        #[test]
+        fn empty_input_valid_stream() {
+            let enc = DeflateEncoder::new(Vec::new(), crate::Compression::new(4));
+            let stream = enc.finish().unwrap();
+            assert_eq!(inflate_stored(&stream), Vec::<u8>::new());
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Offline minimal `libc` surface.
+//!
+//! The runtime server only needs CPU-affinity pinning and the online-CPU
+//! count, so this vendored crate declares exactly those two glibc entry
+//! points plus the `cpu_set_t` plumbing. Layout matches glibc on Linux
+//! (`cpu_set_t` is a 1024-bit mask, 128 bytes).
+
+#![allow(non_camel_case_types, non_snake_case)]
+
+pub type c_int = i32;
+pub type c_long = i64;
+
+/// glibc `cpu_set_t`: 1024 CPU bits as 16 × u64.
+pub type cpu_set_t = [u64; 16];
+
+/// `sysconf` selector for the number of online processors (Linux).
+pub const _SC_NPROCESSORS_ONLN: c_int = 84;
+
+/// Set `cpu`'s bit in the mask (out-of-range bits are ignored, matching
+/// the glibc macro's defined behaviour for CPU_SETSIZE overflow).
+pub unsafe fn CPU_SET(cpu: usize, set: &mut cpu_set_t) {
+    if cpu < 1024 {
+        set[cpu / 64] |= 1u64 << (cpu % 64);
+    }
+}
+
+extern "C" {
+    /// Bind thread/process `pid` (0 = calling thread) to the mask.
+    pub fn sched_setaffinity(pid: c_int, cpusetsize: usize, mask: *const cpu_set_t) -> c_int;
+    /// Query a system configuration value.
+    pub fn sysconf(name: c_int) -> c_long;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_set_bit_layout() {
+        let mut set: cpu_set_t = [0; 16];
+        unsafe {
+            CPU_SET(0, &mut set);
+            CPU_SET(65, &mut set);
+            CPU_SET(4096, &mut set); // ignored, no panic
+        }
+        assert_eq!(set[0], 1);
+        assert_eq!(set[1], 2);
+    }
+
+    #[test]
+    fn sysconf_reports_cpus() {
+        let n = unsafe { sysconf(_SC_NPROCESSORS_ONLN) };
+        assert!(n >= 1, "got {n}");
+    }
+}

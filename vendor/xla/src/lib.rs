@@ -1,0 +1,115 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links the PJRT C API and is only present in
+//! environments with the XLA toolchain installed. This stub keeps the
+//! `runtime` module compiling everywhere: every entry point that would
+//! touch the backend returns an [`Error`] explaining that the stub is in
+//! use, starting with [`PjRtClient::cpu`], so `avxfreq serve` /
+//! `avxfreq calibrate` fail with a clear message instead of a link
+//! error. Tests that need artifacts already skip when `artifacts/` is
+//! absent, which is always the case without the real toolchain.
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' failure reporting.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias used by all stub entry points.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT backend unavailable: built against the offline `xla` stub (vendor/xla); \
+         install the real xla bindings to execute AOT artifacts"
+            .to_string(),
+    )
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The real binding constructs a CPU PJRT client; the stub always fails.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    /// Platform name of the backing device.
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    /// Compile a computation for this client's device.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs; returns per-device output buffers.
+    pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// A device buffer holding one execution output (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// A host-side literal value (stub).
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Destructure a 2-tuple literal.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
