@@ -1,20 +1,60 @@
 #!/usr/bin/env bash
-# Tier-1 CI: release build, tests, docs with warnings denied, and a link
-# check over the markdown docs. Run from the repo root.
+# Tier-1 CI: release build, the test suites as separate named + timed
+# steps, docs with warnings denied, and a link check over the markdown
+# docs. Run from the repo root.
 set -euo pipefail
 cd "$(dirname "$0")"
 
-echo "== cargo build --release =="
-cargo build --release
+# Run a named step and report its wall-clock duration.
+step() {
+  local name="$1"; shift
+  echo "== ${name} =="
+  local t0 t1
+  t0=$(date +%s)
+  "$@"
+  t1=$(date +%s)
+  echo "-- ${name}: $((t1 - t0))s"
+}
 
-echo "== cargo build --release --benches --examples =="
-cargo build --release --benches --examples
+step "cargo build --release" cargo build --release
+step "cargo build --release --benches --examples" \
+  cargo build --release --benches --examples
 
-echo "== cargo test -q =="
-cargo test -q
+# Unit tests (lib + bin) and doctests.
+step "unit tests" cargo test -q --lib --bins
+step "doctests" cargo test -q --doc
 
-echo "== cargo doc --no-deps (-D warnings) =="
-RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+# Integration suites, one named step each (see rust/tests/README.md).
+# The list is derived from Cargo.toml's [[test]] entries so a new suite
+# cannot be registered there yet silently skipped here;
+# runtime_roundtrip runs separately below with its SKIP guard.
+suites=$(grep -A1 '^\[\[test\]\]' Cargo.toml | sed -n 's/^name = "\(.*\)"$/\1/p')
+for suite in $suites; do
+  [ "$suite" = "runtime_roundtrip" ] && continue
+  step "suite: ${suite}" cargo test -q --test "${suite}"
+done
+
+# runtime_roundtrip skips by design without the AOT artifacts, but a
+# SKIP that does not name the missing artifacts directory means the
+# guard regressed (wrong env var, silent mis-skip) — fail on it.
+run_runtime_roundtrip() {
+  local out
+  out=$(cargo test -q --test runtime_roundtrip -- --nocapture 2>&1) || {
+    echo "$out"
+    return 1
+  }
+  echo "$out"
+  # Per-line check: ANY SKIP line that does not name the artifacts
+  # directory fails, even when another test's notice is well-formed.
+  if echo "$out" | grep "SKIP" | grep -qv "SKIP: artifacts directory"; then
+    echo "runtime_roundtrip printed SKIP without naming the artifacts directory"
+    return 1
+  fi
+}
+step "suite: runtime_roundtrip (SKIP must name artifacts dir)" run_runtime_roundtrip
+
+step "cargo doc --no-deps (-D warnings)" \
+  env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== markdown link check (local links in README.md, docs/, rust/tests/) =="
 fail=0
@@ -34,7 +74,12 @@ for f in README.md docs/*.md rust/tests/README.md; do
 done
 # Files referenced by backtick path convention in README/ARCHITECTURE.
 for p in docs/ARCHITECTURE.md rust/tests/README.md configs/dual_socket.toml \
-         rust/src/scenario/mod.rs rust/tests/scenario_matrix.rs ci.sh; do
+         configs/bursty_slo.toml rust/src/scenario/mod.rs \
+         rust/src/traffic/mod.rs rust/src/traffic/arrival.rs \
+         rust/src/traffic/lifecycle.rs rust/tests/scenario_matrix.rs \
+         rust/tests/traffic.rs rust/tests/golden_report.rs \
+         rust/tests/golden/matrix_report.txt rust/tests/golden/tail_report.txt \
+         ci.sh; do
   if [ ! -e "$p" ]; then
     echo "MISSING referenced file: $p"
     fail=1

@@ -26,7 +26,7 @@ fn main() {
         let run = run_webserver(&cfg);
         println!(
             "  throughput {:>6.0} req/s | avg busy freq {:.3} GHz | p99 {:.0} µs | {} type changes/s",
-            run.throughput_rps, run.avg_ghz, run.p99_us, run.type_changes_per_sec as u64
+            run.throughput_rps, run.avg_ghz, run.tail.p99_us, run.type_changes_per_sec as u64
         );
         runs.push(run);
     }

@@ -10,6 +10,9 @@
 //!   tables, IPC model, PMU counters.
 //! * [`sched`] — MuQSS baseline scheduler + the paper's core-specialization
 //!   extension, plus baselines and the fault-and-migrate future-work feature.
+//! * [`traffic`] — arrival processes (Poisson, bursty, diurnal,
+//!   multi-tenant) and per-request tail-latency accounting (p50…p999,
+//!   SLO-violation fraction).
 //! * [`workload`] — nginx-like web server, wrk2-like client, crypto cost
 //!   profiles, Fig-7 microbenchmark.
 //! * [`scenario`] — declarative scenario matrices (topology × policy ×
@@ -29,6 +32,7 @@ pub mod sim;
 pub mod isa;
 pub mod cpu;
 pub mod sched;
+pub mod traffic;
 pub mod workload;
 pub mod scenario;
 pub mod analysis;

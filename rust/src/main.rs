@@ -15,6 +15,11 @@
 //!   scenario-matrix sweep: {single-socket, dual-socket NUMA} ×
 //!   {unmodified, per-socket core specialization} × ISA, one unified
 //!   comparison table (deterministic for a given seed regardless of T).
+//! * `traffic [--quick] [--seed N] [--threads T] [--loads L1,L2,…]
+//!   [--arrivals poisson,bursty,diurnal,mix] [--slo-ms X]` — the traffic
+//!   engine: load level × arrival process sweep on the paper machine,
+//!   reporting p50/p95/p99/p999, max, and the SLO-violation fraction
+//!   (also deterministic at any thread count).
 //! * `serve [--artifacts DIR] [--port P]` — real TLS-record server using
 //!   the AOT PJRT ChaCha20-Poly1305 kernels (see `runtime`).
 //! * `calibrate [--artifacts DIR]` — execute the AOT kernels and compare
@@ -61,9 +66,11 @@ usage:
               [--sockets S] [--cores N] [--workers W]
               [--rate R] [--no-compress] [--fault-migrate] [--seconds S] [--seed N]
   avxfreq matrix [--quick] [--seed N] [--threads T] [--full-isa]
+  avxfreq traffic [--quick] [--seed N] [--threads T] [--loads 0.6,0.85,1.1]
+                  [--arrivals poisson,bursty,diurnal,mix] [--slo-ms 5]
   avxfreq serve [--artifacts DIR] [--port 8443]
   avxfreq calibrate [--artifacts DIR]
-experiments: fig1 fig2 fig3 fig5 fig5ms fig6 ipc fig7 cryptobench ablations";
+experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fig6 ipc fig7 cryptobench ablations";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -73,6 +80,7 @@ fn main() -> anyhow::Result<()> {
         Some("flamegraph") => cmd_flamegraph(&args),
         Some("sim") => cmd_sim(&args),
         Some("matrix") => cmd_matrix(&args),
+        Some("traffic") => cmd_traffic(&args),
         Some("serve") => avxfreq::runtime::server::cmd_serve(&args),
         Some("calibrate") => avxfreq::runtime::calibrate::cmd_calibrate(&args),
         // Bare experiment id (`avxfreq fig5`) = `avxfreq repro fig5`.
@@ -209,7 +217,14 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         cfg.adaptive = Some(Default::default());
     }
     if let Some(rate) = args.get("rate") {
-        cfg.mode = avxfreq::workload::client::LoadMode::Open { rate: rate.parse()? };
+        let rate: f64 = rate.parse()?;
+        // A zero/NaN rate would trip ArrivalGen's assert mid-run; fail
+        // at the CLI surface like every other bad flag.
+        anyhow::ensure!(
+            rate.is_finite() && rate > 0.0,
+            "--rate must be a finite positive req/s, got {rate}"
+        );
+        cfg.mode = avxfreq::workload::client::LoadMode::Open { rate };
     }
     if args.get("seconds").is_some() {
         cfg.measure = args.get_parse::<u64>("seconds", 4) * SEC;
@@ -221,7 +236,28 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     println!("== Run summary ==");
     println!("config:            {}", run.cfg_name);
     println!("throughput:        {:.0} req/s", run.throughput_rps);
-    println!("latency p50/p99:   {:.0} µs / {:.0} µs", run.p50_us, run.p99_us);
+    println!(
+        "latency p50/p95/p99/p999: {:.0} / {:.0} / {:.0} / {:.0} µs (max {:.0})",
+        run.tail.p50_us, run.tail.p95_us, run.tail.p99_us, run.tail.p999_us, run.tail.max_us
+    );
+    println!(
+        "SLO ≤ {:.1} ms:       {:.2}% violations, {} drops",
+        run.tail.slo_us / 1_000.0,
+        run.tail.slo_violation_frac * 100.0,
+        run.dropped
+    );
+    if run.tenant_tails.len() > 1 {
+        for (tenant, tail) in &run.tenant_tails {
+            println!(
+                "  tenant {tenant:<8} p50 {:.0} µs  p99 {:.0} µs  p999 {:.0} µs  slo {:.2}%  ({} done)",
+                tail.p50_us,
+                tail.p99_us,
+                tail.p999_us,
+                tail.slo_violation_frac * 100.0,
+                tail.completed
+            );
+        }
+    }
     println!("avg busy freq:     {:.3} GHz", run.avg_ghz);
     println!("IPC:               {:.3}", run.ipc);
     println!("type changes:      {:.0}/s", run.type_changes_per_sec);
@@ -241,6 +277,66 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     print!("{}", metrics::sched_report(&m, secs as f64).render());
     println!();
     print!("{}", metrics::perf_report(&m.total_perf()).render());
+    Ok(())
+}
+
+fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
+    use avxfreq::scenario::ArrivalSpec;
+    let quick = args.flag("quick");
+    let seed = args.get_parse::<u64>("seed", 0x5EED);
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = args.get_parse::<usize>("threads", default_threads).max(1);
+    let mut m = avxfreq::scenario::ScenarioMatrix::traffic_sweep(quick, seed);
+    let slo_ms = args.get_parse::<f64>("slo-ms", 5.0);
+    anyhow::ensure!(
+        slo_ms.is_finite() && slo_ms > 0.0,
+        "--slo-ms must be a finite positive threshold, got {slo_ms}"
+    );
+    m.slo = (slo_ms * MS as f64) as avxfreq::sim::Time;
+    if let Some(spec) = args.get("loads") {
+        let loads: Result<Vec<f64>, _> = spec.split(',').map(|s| s.trim().parse()).collect();
+        m.loads = loads.map_err(|e| anyhow::anyhow!("--loads {spec}: {e}"))?;
+        // Reject here with a CLI error; a zero/NaN rate would otherwise
+        // abort inside a matrix worker thread (ArrivalGen's rate assert).
+        anyhow::ensure!(
+            m.loads.iter().all(|l| l.is_finite() && *l > 0.0),
+            "--loads {spec}: every load level must be a finite positive multiplier"
+        );
+    }
+    if let Some(spec) = args.get("arrivals") {
+        let mut arrivals = Vec::new();
+        for name in spec.split(',') {
+            arrivals.push(match name.trim() {
+                "poisson" => ArrivalSpec::Poisson,
+                "bursty" => ArrivalSpec::bursty_default(),
+                "diurnal" => ArrivalSpec::diurnal_default(),
+                "mix" => ArrivalSpec::TenantMix { avx_share: 0.3 },
+                other => anyhow::bail!("--arrivals {other}: poisson|bursty|diurnal|mix"),
+            });
+        }
+        m.arrivals = arrivals;
+    }
+    eprintln!(
+        "[avxfreq] traffic: {} cells ({} loads × {} arrivals) across up to {} threads (seed {seed:#x})…",
+        m.len(),
+        m.loads.len(),
+        m.arrivals.len(),
+        threads.min(m.len().max(1))
+    );
+    let t0 = std::time::Instant::now();
+    let result = m.run(threads);
+    print!("{}", result.render());
+    println!();
+    print!("{}", result.render_tail());
+    let path = result.table().save_csv("traffic")?;
+    let tail_path = result.tail_table().save_csv("traffic_tail")?;
+    eprintln!(
+        "[avxfreq] wrote {} and {} ({} cells in {:.1}s wallclock)",
+        path.display(),
+        tail_path.display(),
+        result.cells.len(),
+        t0.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 

@@ -84,10 +84,11 @@ pub fn perf_report(total: &PerfCounters) -> Table {
 /// matrix runner is tested against).
 pub fn matrix_report(cells: &[CellResult]) -> Table {
     let mut t = Table::new(
-        "Scenario matrix — topology × policy × workload × ISA",
+        "Scenario matrix — topology × policy × workload × ISA × load × arrival",
         &[
-            "cell", "topology", "skts", "isa", "policy", "workload", "req/s", "p50 µs",
-            "p99 µs", "GHz", "IPC", "migr/s", "xsock/s", "typechg/s",
+            "cell", "topology", "skts", "isa", "policy", "workload", "arrival", "load",
+            "req/s", "p50 µs", "p99 µs", "p999 µs", "slo %", "drops", "GHz", "IPC",
+            "migr/s", "xsock/s", "typechg/s",
         ],
     );
     for c in cells {
@@ -100,15 +101,56 @@ pub fn matrix_report(cells: &[CellResult]) -> Table {
             s.isa.name().to_string(),
             s.policy.clone(),
             s.workload.clone(),
+            s.arrival.clone(),
+            fmt_f(s.load, 2),
             fmt_f(r.throughput_rps, 0),
-            fmt_f(r.p50_us, 0),
-            fmt_f(r.p99_us, 0),
+            fmt_f(r.tail.p50_us, 0),
+            fmt_f(r.tail.p99_us, 0),
+            fmt_f(r.tail.p999_us, 0),
+            fmt_f(r.tail.slo_violation_frac * 100.0, 1),
+            r.dropped.to_string(),
             fmt_f(r.avg_ghz, 3),
             fmt_f(r.ipc, 3),
             fmt_f(r.migrations_per_sec, 0),
             fmt_f(r.cross_socket_migrations_per_sec, 0),
             fmt_f(r.type_changes_per_sec, 0),
         ]);
+    }
+    t
+}
+
+/// Tail-latency table: one row per cell *and tenant* (single-stream
+/// processes contribute one `all` row), percentiles in µs plus the exact
+/// SLO-violation fraction. Fixed-precision formatting keeps the bytes
+/// stable for the golden-file tests and the cross-thread determinism
+/// property.
+pub fn tail_report(cells: &[CellResult]) -> Table {
+    let mut t = Table::new(
+        "Tail latency — per cell / tenant",
+        &[
+            "cell", "arrival", "load", "isa", "policy", "tenant", "done", "p50 µs",
+            "p95 µs", "p99 µs", "p999 µs", "max µs", "slo %",
+        ],
+    );
+    for c in cells {
+        let s = &c.scenario;
+        for (tenant, tail) in &c.run.tenant_tails {
+            t.row(&[
+                s.index.to_string(),
+                s.arrival.clone(),
+                fmt_f(s.load, 2),
+                s.isa.name().to_string(),
+                s.policy.clone(),
+                tenant.clone(),
+                tail.completed.to_string(),
+                fmt_f(tail.p50_us, 0),
+                fmt_f(tail.p95_us, 0),
+                fmt_f(tail.p99_us, 0),
+                fmt_f(tail.p999_us, 0),
+                fmt_f(tail.max_us, 0),
+                fmt_f(tail.slo_violation_frac * 100.0, 1),
+            ]);
+        }
     }
     t
 }

@@ -1,0 +1,107 @@
+//! Fig 5 restated as tail damage: the nginx experiment's headline is a
+//! mean-throughput drop (−11.2% for AVX-512), but the harm that
+//! motivates core specialization is tail-side — the scalar majority of
+//! requests queues behind a frequency-reduced machine long before the
+//! mean moves. This runner sweeps the paper's single-socket machine over
+//! {unmodified, core specialization} × {sse4, avx512} × ≥3 load levels ×
+//! ≥2 arrival processes (Poisson and mean-preserving bursts) and reports
+//! each cell's **p99 degradation vs the same-scheduler, same-load,
+//! same-arrival SSE4 cell**, plus p999 and the SLO-violation fraction.
+//!
+//! Being a scenario matrix, the run is deterministic for a given seed at
+//! any OS-thread count (byte-identical tables).
+
+use super::Repro;
+use crate::scenario::{ArrivalSpec, PolicySpec, ScenarioMatrix, TopologySpec, WorkloadSpec};
+use crate::sim::{MS, SEC};
+use crate::util::stats::pct_change;
+use crate::util::table::{fmt_f, Table};
+use crate::workload::crypto::Isa;
+
+/// Build the sweep this figure runs (exposed for tests).
+pub fn matrix(quick: bool, seed: u64) -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new(seed);
+    m.topologies = vec![TopologySpec::single_socket_paper()];
+    m.policies = vec![PolicySpec::Unmodified, PolicySpec::CoreSpec { avx_cores: 2 }];
+    m.workloads = vec![WorkloadSpec::compressed_page()];
+    m.isas = vec![Isa::Sse4, Isa::Avx512];
+    m.loads = vec![0.6, 0.85, 1.1];
+    m.arrivals = vec![ArrivalSpec::Poisson, ArrivalSpec::bursty_default()];
+    if quick {
+        m.warmup = 200 * MS;
+        m.measure = 600 * MS;
+    } else {
+        m.warmup = 500 * MS;
+        m.measure = 2 * SEC;
+    }
+    m
+}
+
+pub fn run(quick: bool, seed: u64) -> Repro {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let m = matrix(quick, seed);
+    eprintln!("[avxfreq] fig5tail: {} cells across up to {threads} threads…", m.len());
+    let loads = m.loads.clone();
+    let arrivals: Vec<String> = m.arrivals.iter().map(|a| a.label()).collect();
+    let policies: Vec<String> = m.policies.iter().map(|p| p.label()).collect();
+    let result = m.run(threads);
+
+    let mut t = Table::new(
+        "Fig 5 (tail) — avx512 p99/p999/SLO damage vs same-scheduler sse4",
+        &[
+            "arrival", "load", "scheduler", "sse4 p99 µs", "avx512 p99 µs", "Δp99",
+            "avx512 p999 µs", "avx512 slo %",
+        ],
+    );
+    for arrival in &arrivals {
+        for &load in &loads {
+            for policy in &policies {
+                let sse = result
+                    .find_cell("1x12", Isa::Sse4, policy, arrival, load)
+                    .expect("sse4 baseline cell present");
+                let avx = result
+                    .find_cell("1x12", Isa::Avx512, policy, arrival, load)
+                    .expect("avx512 cell present");
+                t.row(&[
+                    arrival.clone(),
+                    fmt_f(load, 2),
+                    policy.clone(),
+                    fmt_f(sse.run.tail.p99_us, 0),
+                    fmt_f(avx.run.tail.p99_us, 0),
+                    format!("{:+.1}%", pct_change(sse.run.tail.p99_us, avx.run.tail.p99_us)),
+                    fmt_f(avx.run.tail.p999_us, 0),
+                    fmt_f(avx.run.tail.slo_violation_frac * 100.0, 1),
+                ]);
+            }
+        }
+    }
+
+    let mut notes = Vec::new();
+    let top_load = loads.iter().copied().fold(f64::MIN, f64::max);
+    for arrival in &arrivals {
+        let p99 = |policy: &str, isa: Isa| {
+            result
+                .find_cell("1x12", isa, policy, arrival, top_load)
+                .map(|c| c.run.tail.p99_us)
+                .unwrap_or(0.0)
+        };
+        let d_unmod = pct_change(p99(&policies[0], Isa::Sse4), p99(&policies[0], Isa::Avx512));
+        let d_spec = pct_change(p99(&policies[1], Isa::Sse4), p99(&policies[1], Isa::Avx512));
+        notes.push(format!(
+            "{arrival} @ load {top_load:.2}: avx512 inflates p99 by {d_unmod:+.1}% under the \
+             unmodified scheduler vs {d_spec:+.1}% with core specialization (paper §5: the \
+             mitigation recovers most of the AVX-induced loss)"
+        ));
+    }
+    notes.push(
+        "each Δp99 is vs the same scheduler/arrival/load sse4 cell; SLO fraction is \
+         exact (counted at completion), percentiles carry the histogram's ~3% bucket \
+         error"
+            .to_string(),
+    );
+    Repro {
+        id: "fig5tail",
+        tables: vec![t, result.tail_table(), result.table()],
+        notes,
+    }
+}

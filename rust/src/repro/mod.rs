@@ -7,6 +7,7 @@ pub mod fig2_sensitivity;
 pub mod fig3_asymmetry;
 pub mod fig5_throughput;
 pub mod fig5_multisocket;
+pub mod fig5tail;
 pub mod fig6_frequency;
 pub mod fig7_overhead;
 pub mod ipc_table;
@@ -52,9 +53,12 @@ impl Repro {
 }
 
 /// All experiment ids, in paper order (`fig5ms` is the multi-socket
-/// extension of fig5, run as a scenario matrix).
-pub const ALL: &[&str] =
-    &["fig1", "fig2", "fig3", "fig5", "fig5ms", "fig6", "ipc", "fig7", "cryptobench", "ablations"];
+/// extension of fig5 and `fig5tail` its tail-latency restatement, both
+/// run as scenario matrices).
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig5", "fig5ms", "fig5tail", "fig6", "ipc", "fig7", "cryptobench",
+    "ablations",
+];
 
 /// Dispatch by id. `quick` trades precision for speed (shorter windows).
 pub fn run(id: &str, quick: bool, seed: u64) -> anyhow::Result<Repro> {
@@ -64,6 +68,7 @@ pub fn run(id: &str, quick: bool, seed: u64) -> anyhow::Result<Repro> {
         "fig3" => Ok(fig3_asymmetry::run()),
         "fig5" => Ok(fig5_throughput::run(quick, seed)),
         "fig5ms" => Ok(fig5_multisocket::run(quick, seed)),
+        "fig5tail" => Ok(fig5tail::run(quick, seed)),
         "fig6" => Ok(fig6_frequency::run(quick, seed)),
         "ipc" => Ok(ipc_table::run(quick, seed)),
         "fig7" => Ok(fig7_overhead::run(quick)),

@@ -1,5 +1,6 @@
 //! Declarative scenario matrices: sweep topology × policy × workload ×
-//! ISA (the AVX-ratio axis) in one parallel, deterministic run.
+//! ISA (the AVX-ratio axis) × load level × arrival process in one
+//! parallel, deterministic run.
 //!
 //! The paper evaluates one configuration at a time on one machine; the
 //! ROADMAP's production north-star needs *families* of configurations —
@@ -46,8 +47,9 @@
 use crate::cpu::Topology;
 use crate::sched::PolicyKind;
 use crate::sim::{Time, MS, SEC};
+use crate::traffic::ArrivalProcess;
 use crate::util::table::Table;
-use crate::workload::client::LoadMode;
+use crate::workload::client::{LoadMode, DEFAULT_SLO};
 use crate::workload::crypto::Isa;
 use crate::workload::webserver::{run_webserver, WebCfg, WebRun};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -183,6 +185,62 @@ impl WorkloadSpec {
     }
 }
 
+/// One point on the arrival-process axis; instantiated against the
+/// cell's total offered rate (so a spec stays meaningful across
+/// topologies and load levels).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalSpec {
+    /// Homogeneous Poisson (wrk2's model).
+    Poisson,
+    /// Mean-preserving on/off bursts: `burst_factor ×` the mean rate for
+    /// a `duty` fraction of each `period` (see
+    /// [`ArrivalProcess::bursty_mean`]).
+    Bursty { burst_factor: f64, duty: f64, period: Time },
+    /// Sinusoidal ramp (compressed diurnal pattern).
+    Diurnal { swing: f64, period: Time },
+    /// Two-tenant mix: an AVX tenant carrying `avx_share` of the
+    /// traffic, a scalar (SSE4, unannotated) tenant with the rest.
+    TenantMix { avx_share: f64 },
+}
+
+impl ArrivalSpec {
+    /// Default burst shape: 2× bursts, 30% duty, 200 ms period.
+    pub fn bursty_default() -> Self {
+        ArrivalSpec::Bursty { burst_factor: 2.0, duty: 0.3, period: 200 * MS }
+    }
+
+    /// Default diurnal shape: ±60% swing over a 400 ms (compressed) day.
+    pub fn diurnal_default() -> Self {
+        ArrivalSpec::Diurnal { swing: 0.6, period: 400 * MS }
+    }
+
+    /// Table label.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalSpec::Poisson => "poisson".to_string(),
+            ArrivalSpec::Bursty { .. } => "bursty".to_string(),
+            ArrivalSpec::Diurnal { .. } => "diurnal".to_string(),
+            ArrivalSpec::TenantMix { .. } => "mix".to_string(),
+        }
+    }
+
+    /// Concrete process offering `rate` requests/second on average.
+    pub fn instantiate(&self, rate: f64) -> ArrivalProcess {
+        match *self {
+            ArrivalSpec::Poisson => ArrivalProcess::Poisson { rate },
+            ArrivalSpec::Bursty { burst_factor, duty, period } => {
+                ArrivalProcess::bursty_mean(rate, burst_factor, duty, period)
+            }
+            ArrivalSpec::Diurnal { swing, period } => {
+                ArrivalProcess::Diurnal { mean_rate: rate, swing, period }
+            }
+            ArrivalSpec::TenantMix { avx_share } => {
+                ArrivalProcess::two_tenant(rate, avx_share)
+            }
+        }
+    }
+}
+
 /// A fully expanded cell of the matrix: labels, a derived seed, and the
 /// self-contained web-server configuration to simulate.
 #[derive(Clone, Debug)]
@@ -194,6 +252,10 @@ pub struct Scenario {
     pub policy: String,
     pub workload: String,
     pub isa: Isa,
+    /// Load-level multiplier applied to the workload's per-core rate.
+    pub load: f64,
+    /// Arrival-process label (see [`ArrivalSpec::label`]).
+    pub arrival: String,
     /// Per-cell seed: a pure function of the base seed and `index`.
     pub seed: u64,
     pub cfg: WebCfg,
@@ -203,11 +265,13 @@ impl Scenario {
     /// One-line identifier for notes and logs.
     pub fn label(&self) -> String {
         format!(
-            "{}/{}/{}/{}",
+            "{}/{}/{}/{}/{}@{:.2}",
             self.topology,
             self.isa.name(),
             self.policy,
-            self.workload
+            self.workload,
+            self.arrival,
+            self.load,
         )
     }
 }
@@ -231,9 +295,20 @@ impl MatrixResult {
         crate::metrics::matrix_report(&self.cells)
     }
 
+    /// The per-cell / per-tenant tail-latency table (see
+    /// [`crate::metrics::tail_report`]).
+    pub fn tail_table(&self) -> Table {
+        crate::metrics::tail_report(&self.cells)
+    }
+
     /// Render the comparison table as aligned text.
     pub fn render(&self) -> String {
         self.table().render()
+    }
+
+    /// Render the tail-latency table as aligned text.
+    pub fn render_tail(&self) -> String {
+        self.tail_table().render()
     }
 
     /// Write the table to `results/matrix.csv`.
@@ -251,6 +326,26 @@ impl MatrixResult {
                     && c.scenario.policy == policy
             })
             .map(|c| c.run.throughput_rps)
+    }
+
+    /// Look up one cell by the full label set, including the traffic
+    /// axes. `load` values come from the matrix declaration, so exact
+    /// float comparison is the right equality here.
+    pub fn find_cell(
+        &self,
+        topology: &str,
+        isa: Isa,
+        policy: &str,
+        arrival: &str,
+        load: f64,
+    ) -> Option<&CellResult> {
+        self.cells.iter().find(|c| {
+            c.scenario.topology == topology
+                && c.scenario.isa == isa
+                && c.scenario.policy == policy
+                && c.scenario.arrival == arrival
+                && c.scenario.load == load
+        })
     }
 }
 
@@ -274,6 +369,13 @@ pub struct ScenarioMatrix {
     pub policies: Vec<PolicySpec>,
     pub workloads: Vec<WorkloadSpec>,
     pub isas: Vec<Isa>,
+    /// Load-level multipliers on each workload's per-core rate
+    /// (default `[1.0]`, so single-load sweeps look exactly as before).
+    pub loads: Vec<f64>,
+    /// Arrival processes to sweep (default `[Poisson]`).
+    pub arrivals: Vec<ArrivalSpec>,
+    /// Latency SLO threshold applied to every cell.
+    pub slo: Time,
     /// Base seed; each cell derives `mix64(base_seed ^ f(index))`.
     pub base_seed: u64,
     /// Simulated warmup before measurement, per cell.
@@ -290,6 +392,9 @@ impl ScenarioMatrix {
             policies: Vec::new(),
             workloads: Vec::new(),
             isas: Vec::new(),
+            loads: vec![1.0],
+            arrivals: vec![ArrivalSpec::Poisson],
+            slo: DEFAULT_SLO,
             base_seed,
             warmup: 300 * MS,
             measure: SEC,
@@ -318,9 +423,36 @@ impl ScenarioMatrix {
         m
     }
 
+    /// The traffic-engine sweep behind `avxfreq traffic`: the paper's
+    /// single-socket machine under {unmodified, core specialization} ×
+    /// ≥3 load levels × ≥2 arrival processes, AVX-512 build, reporting
+    /// the tail tables.
+    pub fn traffic_sweep(quick: bool, base_seed: u64) -> Self {
+        let mut m = ScenarioMatrix::new(base_seed);
+        m.topologies = vec![TopologySpec::single_socket_paper()];
+        m.policies = vec![PolicySpec::Unmodified, PolicySpec::CoreSpec { avx_cores: 2 }];
+        m.workloads = vec![WorkloadSpec::compressed_page()];
+        m.isas = vec![Isa::Avx512];
+        m.loads = vec![0.6, 0.85, 1.1];
+        m.arrivals = vec![ArrivalSpec::Poisson, ArrivalSpec::bursty_default()];
+        if quick {
+            m.warmup = 150 * MS;
+            m.measure = 400 * MS;
+        } else {
+            m.warmup = 500 * MS;
+            m.measure = 2 * SEC;
+        }
+        m
+    }
+
     /// Number of cells the matrix expands to.
     pub fn len(&self) -> usize {
-        self.topologies.len() * self.policies.len() * self.workloads.len() * self.isas.len()
+        self.topologies.len()
+            * self.policies.len()
+            * self.workloads.len()
+            * self.isas.len()
+            * self.loads.len()
+            * self.arrivals.len()
     }
 
     /// True when any axis is empty.
@@ -328,42 +460,61 @@ impl ScenarioMatrix {
         self.len() == 0
     }
 
-    /// Expand the cartesian product, topology-major, into runnable cells.
+    /// Expand the cartesian product, topology-major (load level and
+    /// arrival process are the innermost axes), into runnable cells.
     pub fn cells(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         for topo in &self.topologies {
             for policy in &self.policies {
                 for workload in &self.workloads {
                     for &isa in &self.isas {
-                        let index = out.len();
-                        let seed =
-                            mix64(self.base_seed ^ (index as u64).wrapping_mul(0x9E37_79B9));
-                        // Derive the machine shape through the Topology
-                        // model so the matrix and the cpu layer agree on
-                        // one socket partition.
-                        let t = topo.topology();
-                        let mut cfg = WebCfg::paper_default(isa, policy.instantiate(topo));
-                        cfg.cores = t.n_server_cores();
-                        cfg.sockets = t.n_sockets();
-                        cfg.workers = t.n_server_cores() * 2;
-                        cfg.compress = workload.compress;
-                        cfg.page_bytes = workload.page_kib * 1024;
-                        cfg.mode = LoadMode::Open {
-                            rate: workload.rate_per_core * topo.cores as f64,
-                        };
-                        cfg.seed = seed;
-                        cfg.warmup = self.warmup;
-                        cfg.measure = self.measure;
-                        out.push(Scenario {
-                            index,
-                            topology: topo.name.clone(),
-                            sockets: topo.sockets,
-                            policy: policy.label(),
-                            workload: workload.name.clone(),
-                            isa,
-                            seed,
-                            cfg,
-                        });
+                        for &load in &self.loads {
+                            for arrival in &self.arrivals {
+                                let index = out.len();
+                                let seed = mix64(
+                                    self.base_seed ^ (index as u64).wrapping_mul(0x9E37_79B9),
+                                );
+                                // Derive the machine shape through the
+                                // Topology model so the matrix and the
+                                // cpu layer agree on one socket
+                                // partition.
+                                let t = topo.topology();
+                                let mut cfg =
+                                    WebCfg::paper_default(isa, policy.instantiate(topo));
+                                cfg.cores = t.n_server_cores();
+                                cfg.sockets = t.n_sockets();
+                                cfg.workers = t.n_server_cores() * 2;
+                                cfg.compress = workload.compress;
+                                cfg.page_bytes = workload.page_kib * 1024;
+                                let rate =
+                                    workload.rate_per_core * topo.cores as f64 * load;
+                                cfg.mode = match arrival {
+                                    // Poisson keeps the sugared form so a
+                                    // single-arrival matrix is exactly the
+                                    // pre-traffic configuration.
+                                    ArrivalSpec::Poisson => LoadMode::Open { rate },
+                                    spec => LoadMode::OpenProcess {
+                                        process: spec.instantiate(rate),
+                                    },
+                                };
+                                cfg.slo = self.slo;
+                                cfg.seed = seed;
+                                cfg.warmup = self.warmup;
+                                cfg.measure = self.measure;
+                                out.push(Scenario {
+                                    index,
+                                    topology: topo.name.clone(),
+                                    sockets: topo.sockets,
+                                    policy: policy.label(),
+                                    workload: workload.name.clone(),
+                                    isa,
+                                    load,
+                                    arrival: arrival.label(),
+                                    seed,
+                                    cfg,
+                                });
+                            }
+                        }
                     }
                 }
             }
@@ -437,12 +588,48 @@ mod tests {
     fn rate_scales_with_core_count() {
         let m = ScenarioMatrix::default_sweep(true, 7);
         let cells = m.cells();
-        let rate = |c: &Scenario| match c.cfg.mode {
-            LoadMode::Open { rate } => rate,
+        let rate = |c: &Scenario| match &c.cfg.mode {
+            LoadMode::Open { rate } => *rate,
             _ => panic!("open-loop expected"),
         };
         assert!((rate(&cells[0]) - 60_000.0).abs() < 1e-6);
         assert!((rate(&cells[4]) - 120_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn traffic_axes_expand_innermost() {
+        let mut m = ScenarioMatrix::default_sweep(true, 7);
+        m.topologies.truncate(1);
+        m.policies.truncate(1);
+        m.isas.truncate(1);
+        m.loads = vec![0.5, 1.0];
+        m.arrivals = vec![ArrivalSpec::Poisson, ArrivalSpec::bursty_default()];
+        let cells = m.cells();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].arrival, "poisson");
+        assert_eq!(cells[1].arrival, "bursty");
+        assert_eq!(cells[0].load, 0.5);
+        assert_eq!(cells[2].load, 1.0);
+        // The bursty cell's process preserves the scaled mean rate.
+        match &cells[3].cfg.mode {
+            LoadMode::OpenProcess { process } => {
+                assert!((process.mean_rate() - 60_000.0).abs() < 1.0);
+            }
+            other => panic!("bursty cell must carry a process, got {other:?}"),
+        }
+        // Every cell inherits the matrix SLO.
+        assert!(cells.iter().all(|c| c.cfg.slo == m.slo));
+    }
+
+    #[test]
+    fn traffic_sweep_covers_required_grid() {
+        let m = ScenarioMatrix::traffic_sweep(true, 9);
+        assert!(m.loads.len() >= 3, "≥3 load levels required");
+        assert!(m.arrivals.len() >= 2, "≥2 arrival processes required");
+        let cells = m.cells();
+        assert_eq!(cells.len(), m.len());
+        assert!(cells.iter().any(|c| c.policy.contains("core-spec")));
+        assert!(cells.iter().any(|c| c.arrival == "bursty"));
     }
 
     #[test]

@@ -16,6 +16,12 @@
 //! the frequency tax it prevents), it returns the allocation to the
 //! minimum and the penalty scheme makes the AVX core behave almost like
 //! a normal core.
+//!
+//! Invariants (property-tested over random load traces in
+//! `rust/tests/properties.rs::prop_adaptive_bounds_and_hysteresis`):
+//! after every tick the count stays within `[min_avx, min(max_avx,
+//! n_cores − 1)]`, and the two-window debounce means the count never
+//! changes at two consecutive ticks.
 
 use super::machine::Machine;
 use super::policy::PolicyKind;

@@ -34,11 +34,20 @@ impl Strategy for IntRange {
         let mut out = Vec::new();
         if *v > self.lo {
             // Aggressive-first geometric grid toward `lo`, then a unit step.
+            // The grid arithmetic widens to u128: at `v - lo` near
+            // `u64::MAX` the old `(v - lo) * k` wrapped, producing an
+            // unsorted list whose duplicates survived the (adjacent-only)
+            // dedup. And when `v - lo < 16` the grid collapses onto `lo`
+            // outright — every candidate equal, each one burning a shrink
+            // retry on a predicate we already know the answer to.
+            let span = (v - self.lo) as u128;
             out.push(self.lo);
             for k in 1..16u64 {
-                out.push(self.lo + (v - self.lo) * k / 16);
+                out.push(self.lo + (span * k as u128 / 16) as u64);
             }
             out.push(v - 1);
+            // Candidates are nondecreasing now, so one adjacent pass
+            // removes every duplicate while keeping aggressive-first order.
             out.dedup();
             out.retain(|c| c != v);
         }
@@ -180,6 +189,35 @@ mod tests {
         });
         let f = res.unwrap_err();
         assert!(f.value.len() >= 4 && f.value.len() <= 8, "shrunk len {}", f.value.len());
+    }
+
+    #[test]
+    fn small_range_simplify_has_no_duplicates() {
+        // v - lo < 16: the geometric grid collapses onto `lo`; the
+        // candidate list must still be duplicate-free and aggressive-first.
+        for (lo, hi, v) in [(10u64, 20u64, 14u64), (0, 4, 3), (100, 102, 101), (0, 1000, 7)] {
+            let strat = IntRange { lo, hi };
+            let cands = strat.simplify(&v);
+            let mut seen = cands.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), cands.len(), "duplicates in {cands:?} for v={v}");
+            assert!(cands.iter().all(|c| *c >= lo && *c < v), "bad candidate in {cands:?}");
+            assert_eq!(cands.first(), Some(&lo), "most aggressive candidate first");
+        }
+        assert!(IntRange { lo: 5, hi: 9 }.simplify(&5).is_empty(), "lo itself cannot shrink");
+    }
+
+    #[test]
+    fn huge_range_simplify_does_not_overflow() {
+        let strat = IntRange { lo: 0, hi: u64::MAX };
+        let v = u64::MAX - 1;
+        let cands = strat.simplify(&v);
+        // Monotone nondecreasing (sorted) implies the wrap-around bug is
+        // gone and the adjacent dedup was sufficient.
+        assert!(cands.windows(2).all(|w| w[0] < w[1]), "unsorted or duplicated: {cands:?}");
+        assert!(cands.iter().all(|c| *c < v));
+        assert!(cands.contains(&(v - 1)), "unit step must survive");
     }
 
     #[test]

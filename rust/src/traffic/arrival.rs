@@ -1,0 +1,332 @@
+//! Arrival processes: deterministic request-stream generators.
+//!
+//! wrk2 (the paper's load generator) offers a fixed-rate Poisson stream;
+//! real web traffic is burstier, periodic, and multi-tenant. Every
+//! process here is generated from a seeded [`Rng`] only, so a traffic
+//! run is bit-for-bit reproducible and safe to execute on any OS thread
+//! of a scenario-matrix sweep.
+//!
+//! Time-varying processes (bursty, diurnal) are sampled by Lewis–Shedler
+//! thinning: candidate arrivals are drawn from a homogeneous Poisson
+//! process at the peak rate and accepted with probability
+//! `rate(t) / peak`, which is exact for any bounded rate function.
+
+use crate::sim::Time;
+use crate::util::Rng;
+
+/// One tenant of a multi-tenant mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tenant {
+    /// Short label used in tables (e.g. `avx`, `scalar`).
+    pub name: String,
+    /// This tenant's mean arrival rate (requests/second).
+    pub rate: f64,
+    /// Whether this tenant's requests execute wide (AVX) instructions;
+    /// the web server gives non-AVX tenants an SSE4 request pipeline
+    /// with no `with_avx()` annotations.
+    pub avx: bool,
+}
+
+/// An open-loop arrival process (requests/second over simulated time).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals at a fixed mean rate (wrk2's model).
+    Poisson { rate: f64 },
+    /// On/off burst cycle: `burst_rate` for `on` nanoseconds, then
+    /// `base_rate` for `off` nanoseconds, repeating.
+    Bursty { base_rate: f64, burst_rate: f64, on: Time, off: Time },
+    /// Sinusoidal ramp around a mean: `rate(t) = mean_rate * (1 + swing
+    /// * sin(2πt/period))`. A compressed stand-in for diurnal load
+    /// (`swing < 1` keeps the rate strictly positive).
+    Diurnal { mean_rate: f64, swing: f64, period: Time },
+    /// Independent Poisson streams, one per tenant; requests carry the
+    /// tenant index so per-tenant tails can be separated.
+    MultiTenant { tenants: Vec<Tenant> },
+}
+
+impl ArrivalProcess {
+    /// Short label used in tables.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson".to_string(),
+            ArrivalProcess::Bursty { .. } => "bursty".to_string(),
+            ArrivalProcess::Diurnal { .. } => "diurnal".to_string(),
+            // One vocabulary across CLI (`--arrivals mix`), config
+            // (`load.process = "mix"`), and both label functions.
+            ArrivalProcess::MultiTenant { .. } => "mix".to_string(),
+        }
+    }
+
+    /// Long-run mean offered rate (requests/second).
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => *rate,
+            ArrivalProcess::Bursty { base_rate, burst_rate, on, off } => {
+                let cycle = (*on + *off).max(1) as f64;
+                (burst_rate * *on as f64 + base_rate * *off as f64) / cycle
+            }
+            ArrivalProcess::Diurnal { mean_rate, .. } => *mean_rate,
+            ArrivalProcess::MultiTenant { tenants } => tenants.iter().map(|t| t.rate).sum(),
+        }
+    }
+
+    /// Peak instantaneous rate (the thinning envelope).
+    pub fn peak_rate(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => *rate,
+            ArrivalProcess::Bursty { base_rate, burst_rate, .. } => base_rate.max(*burst_rate),
+            ArrivalProcess::Diurnal { mean_rate, swing, .. } => mean_rate * (1.0 + swing),
+            ArrivalProcess::MultiTenant { tenants } => tenants.iter().map(|t| t.rate).sum(),
+        }
+    }
+
+    /// Instantaneous rate at simulated time `t`.
+    pub fn rate_at(&self, t: Time) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => *rate,
+            ArrivalProcess::Bursty { base_rate, burst_rate, on, off } => {
+                let cycle = (*on + *off).max(1);
+                if t % cycle < *on {
+                    *burst_rate
+                } else {
+                    *base_rate
+                }
+            }
+            ArrivalProcess::Diurnal { mean_rate, swing, period } => {
+                let period = (*period).max(1);
+                let phase = (t % period) as f64 / period as f64;
+                mean_rate * (1.0 + swing * (2.0 * std::f64::consts::PI * phase).sin())
+            }
+            ArrivalProcess::MultiTenant { tenants } => tenants.iter().map(|t| t.rate).sum(),
+        }
+    }
+
+    /// Number of tenants (1 for single-stream processes).
+    pub fn n_tenants(&self) -> usize {
+        match self {
+            ArrivalProcess::MultiTenant { tenants } => tenants.len().max(1),
+            _ => 1,
+        }
+    }
+
+    /// Tenant labels, in tenant-index order (`all` for single-stream).
+    pub fn tenant_names(&self) -> Vec<String> {
+        match self {
+            ArrivalProcess::MultiTenant { tenants } => {
+                tenants.iter().map(|t| t.name.clone()).collect()
+            }
+            _ => vec!["all".to_string()],
+        }
+    }
+
+    /// Whether tenant `i` carries AVX work (single-stream processes
+    /// always do: their pipeline follows the configured ISA).
+    pub fn tenant_carries_avx(&self, i: usize) -> bool {
+        match self {
+            ArrivalProcess::MultiTenant { tenants } => {
+                tenants.get(i).map(|t| t.avx).unwrap_or(true)
+            }
+            _ => true,
+        }
+    }
+
+    /// Mean-preserving bursty process: bursts at `burst_factor × rate`
+    /// for a `duty` fraction of each `period`, with the base rate chosen
+    /// so the long-run mean stays `rate` (clamped at 0 when the bursts
+    /// alone exceed the mean, i.e. `burst_factor × duty > 1`).
+    pub fn bursty_mean(rate: f64, burst_factor: f64, duty: f64, period: Time) -> ArrivalProcess {
+        let duty = duty.clamp(0.01, 0.99);
+        let on = ((period as f64 * duty) as Time).max(1);
+        let off = period.saturating_sub(on).max(1);
+        let burst_rate = rate * burst_factor.max(0.0);
+        let base_rate = ((rate - duty * burst_rate) / (1.0 - duty)).max(0.0);
+        ArrivalProcess::Bursty { base_rate, burst_rate, on, off }
+    }
+
+    /// A two-tenant mix at total rate `rate`: an `avx` tenant carrying
+    /// `avx_share` of the traffic and a `scalar` tenant with the rest.
+    pub fn two_tenant(rate: f64, avx_share: f64) -> ArrivalProcess {
+        let share = avx_share.clamp(0.0, 1.0);
+        ArrivalProcess::MultiTenant {
+            tenants: vec![
+                Tenant { name: "scalar".to_string(), rate: rate * (1.0 - share), avx: false },
+                Tenant { name: "avx".to_string(), rate: rate * share, avx: true },
+            ],
+        }
+    }
+}
+
+/// Deterministic arrival-stream generator for one [`ArrivalProcess`].
+///
+/// [`ArrivalGen::next_after`] returns strictly increasing times, so the
+/// driver loop (one pending arrival event, regenerated on delivery)
+/// always makes progress.
+#[derive(Clone, Debug)]
+pub struct ArrivalGen {
+    process: ArrivalProcess,
+    rng: Rng,
+    /// Multi-tenant: next pending arrival per tenant (lazily seeded on
+    /// the first call so the stream starts at the caller's clock).
+    tenant_next: Vec<Time>,
+}
+
+impl ArrivalGen {
+    /// Build a generator. Panics if the process can never produce an
+    /// arrival (peak rate ≤ 0) — a zero-rate run would hang the driver.
+    pub fn new(process: ArrivalProcess, seed: u64) -> Self {
+        assert!(
+            process.peak_rate() > 0.0,
+            "arrival process {:?} has no positive rate",
+            process.label()
+        );
+        ArrivalGen { process, rng: Rng::new(seed), tenant_next: Vec::new() }
+    }
+
+    /// The process this generator samples.
+    pub fn process(&self) -> &ArrivalProcess {
+        &self.process
+    }
+
+    /// Next arrival strictly after `now`: `(time, tenant index)`.
+    pub fn next_after(&mut self, now: Time) -> (Time, u32) {
+        // Disjoint field borrows: the process is read-only while the RNG
+        // and the per-tenant state mutate.
+        let ArrivalGen { process, rng, tenant_next } = self;
+        match &*process {
+            ArrivalProcess::Poisson { rate } => {
+                let gap = rng.exponential(1e9 / *rate).max(1.0) as Time;
+                (now + gap.max(1), 0)
+            }
+            ArrivalProcess::Bursty { .. } | ArrivalProcess::Diurnal { .. } => {
+                // Lewis–Shedler thinning at the peak rate.
+                let peak = process.peak_rate();
+                let mut t = now as f64;
+                loop {
+                    t += rng.exponential(1e9 / peak).max(1e-3);
+                    let r = process.rate_at(t as Time);
+                    if r > 0.0 && rng.chance(r / peak) {
+                        return ((t as Time).max(now + 1), 0);
+                    }
+                }
+            }
+            ArrivalProcess::MultiTenant { tenants } => {
+                if tenant_next.len() != tenants.len() {
+                    // First call: seed every tenant's stream at `now`.
+                    *tenant_next = tenants
+                        .iter()
+                        .map(|t| {
+                            if t.rate > 0.0 {
+                                now + (rng.exponential(1e9 / t.rate).max(1.0) as Time).max(1)
+                            } else {
+                                Time::MAX
+                            }
+                        })
+                        .collect();
+                }
+                let (i, t) = tenant_next
+                    .iter()
+                    .copied()
+                    .enumerate()
+                    .min_by_key(|&(_, t)| t)
+                    .expect("at least one tenant");
+                let gap = (rng.exponential(1e9 / tenants[i].rate).max(1.0) as Time).max(1);
+                tenant_next[i] = t.saturating_add(gap);
+                (t.max(now + 1), i as u32)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{MS, SEC};
+
+    fn drain(gen: &mut ArrivalGen, until: Time) -> Vec<(Time, u32)> {
+        let mut out = Vec::new();
+        let mut now = 0;
+        loop {
+            let (t, tenant) = gen.next_after(now);
+            if t > until {
+                return out;
+            }
+            out.push((t, tenant));
+            now = t;
+        }
+    }
+
+    #[test]
+    fn poisson_rate_and_determinism() {
+        let p = ArrivalProcess::Poisson { rate: 10_000.0 };
+        let a = drain(&mut ArrivalGen::new(p.clone(), 7), SEC);
+        let b = drain(&mut ArrivalGen::new(p, 7), SEC);
+        assert_eq!(a, b, "same seed must give the same stream");
+        let n = a.len() as f64;
+        assert!((n - 10_000.0).abs() / 10_000.0 < 0.05, "got {n} arrivals/s");
+        assert!(a.windows(2).all(|w| w[0].0 < w[1].0), "strictly increasing");
+    }
+
+    #[test]
+    fn bursty_respects_phases() {
+        let p = ArrivalProcess::Bursty {
+            base_rate: 0.0,
+            burst_rate: 50_000.0,
+            on: 10 * MS,
+            off: 40 * MS,
+        };
+        assert!((p.mean_rate() - 10_000.0).abs() < 1.0);
+        let arrivals = drain(&mut ArrivalGen::new(p, 3), SEC);
+        assert!(!arrivals.is_empty());
+        for (t, _) in &arrivals {
+            assert!(t % (50 * MS) < 10 * MS, "arrival at {t} outside the on-phase");
+        }
+        // Thinning preserves the mean: ~10 000 arrivals over 1 s.
+        let n = arrivals.len() as f64;
+        assert!((n - 10_000.0).abs() / 10_000.0 < 0.10, "got {n} arrivals/s");
+    }
+
+    #[test]
+    fn diurnal_mean_preserved_and_bounded() {
+        let p = ArrivalProcess::Diurnal { mean_rate: 20_000.0, swing: 0.6, period: 100 * MS };
+        assert!((p.peak_rate() - 32_000.0).abs() < 1.0);
+        // Whole periods only, so the sine integrates to zero.
+        let arrivals = drain(&mut ArrivalGen::new(p, 11), SEC);
+        let n = arrivals.len() as f64;
+        assert!((n - 20_000.0).abs() / 20_000.0 < 0.05, "got {n} arrivals/s");
+    }
+
+    #[test]
+    fn multi_tenant_interleaves_and_labels() {
+        let p = ArrivalProcess::two_tenant(20_000.0, 0.25);
+        assert_eq!(p.n_tenants(), 2);
+        assert_eq!(p.tenant_names(), vec!["scalar".to_string(), "avx".to_string()]);
+        assert!(!p.tenant_carries_avx(0));
+        assert!(p.tenant_carries_avx(1));
+        let arrivals = drain(&mut ArrivalGen::new(p, 5), SEC);
+        let avx = arrivals.iter().filter(|(_, t)| *t == 1).count() as f64;
+        let scalar = arrivals.iter().filter(|(_, t)| *t == 0).count() as f64;
+        assert!((avx - 5_000.0).abs() / 5_000.0 < 0.10, "avx tenant got {avx}");
+        assert!((scalar - 15_000.0).abs() / 15_000.0 < 0.10, "scalar tenant got {scalar}");
+        assert!(arrivals.windows(2).all(|w| w[0].0 < w[1].0), "merged stream ordered");
+    }
+
+    #[test]
+    fn bursty_mean_preserves_rate() {
+        let p = ArrivalProcess::bursty_mean(10_000.0, 2.0, 0.3, 200 * MS);
+        assert!((p.mean_rate() - 10_000.0).abs() < 1.0, "mean={}", p.mean_rate());
+        assert!((p.peak_rate() - 20_000.0).abs() < 1.0);
+        // Overdriven bursts clamp the base at zero (mean then exceeds
+        // nothing — it just equals duty × burst).
+        let q = ArrivalProcess::bursty_mean(10_000.0, 4.0, 0.5, 200 * MS);
+        match q {
+            ArrivalProcess::Bursty { base_rate, .. } => assert_eq!(base_rate, 0.0),
+            _ => panic!("bursty expected"),
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_rate_process_rejected() {
+        let _ = ArrivalGen::new(ArrivalProcess::Poisson { rate: 0.0 }, 1);
+    }
+}

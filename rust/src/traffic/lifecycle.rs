@@ -1,0 +1,145 @@
+//! Per-request lifecycle records and tail-latency accounting.
+//!
+//! A request is tracked from its arrival timestamp to its completion;
+//! the recorder keeps an HDR-style [`LogHistogram`] plus an exact
+//! SLO-violation count (counted at record time, so the fraction is not
+//! subject to the histogram's ~3% bucket error).
+
+use crate::sim::Time;
+use crate::util::LogHistogram;
+
+/// One in-flight request: when it arrived and which tenant issued it.
+///
+/// Tenant 0 is the only tenant for single-stream arrival processes;
+/// multi-tenant mixes use the index into
+/// [`crate::traffic::ArrivalProcess::tenant_names`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub arrived: Time,
+    pub tenant: u32,
+}
+
+impl Request {
+    /// A tenant-0 request arriving at `t`.
+    pub fn at(t: Time) -> Self {
+        Request { arrived: t, tenant: 0 }
+    }
+}
+
+/// Latency recorder: histogram + exact SLO-violation counting.
+#[derive(Clone, Debug)]
+pub struct LatencyStats {
+    pub hist: LogHistogram,
+    /// SLO threshold (ns); completions above it count as violations.
+    pub slo: Time,
+    violations: u64,
+}
+
+impl LatencyStats {
+    pub fn new(slo: Time) -> Self {
+        LatencyStats { hist: LogHistogram::new(), slo, violations: 0 }
+    }
+
+    /// Record one completed request's latency (ns).
+    pub fn record(&mut self, latency: Time) {
+        self.hist.record(latency);
+        if latency > self.slo {
+            self.violations += 1;
+        }
+    }
+
+    /// Completed requests recorded so far.
+    pub fn completed(&self) -> u64 {
+        self.hist.count()
+    }
+
+    /// Exact fraction of completions above the SLO threshold.
+    pub fn violation_frac(&self) -> f64 {
+        if self.hist.count() == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.hist.count() as f64
+        }
+    }
+
+    /// Freeze the recorder into a report row.
+    pub fn summary(&self) -> TailSummary {
+        // The bucketed query undercounts by at most the one bucket
+        // containing the threshold, so it must never exceed the exact
+        // counter — catches recorder/histogram drift in debug builds.
+        debug_assert!(
+            self.hist.fraction_above(self.slo) <= self.violation_frac() + 1e-12,
+            "histogram SLO query exceeds the exact violation counter"
+        );
+        let us = |v: u64| v as f64 / 1_000.0;
+        TailSummary {
+            completed: self.hist.count(),
+            mean_us: self.hist.mean() / 1_000.0,
+            p50_us: us(self.hist.percentile(50.0)),
+            p95_us: us(self.hist.percentile(95.0)),
+            p99_us: us(self.hist.percentile(99.0)),
+            p999_us: us(self.hist.percentile(99.9)),
+            max_us: us(self.hist.max()),
+            slo_us: us(self.slo),
+            slo_violation_frac: self.violation_frac(),
+        }
+    }
+}
+
+/// Tail-latency report row: percentiles in microseconds plus the SLO
+/// damage, the unit every table in [`crate::metrics`] renders.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TailSummary {
+    pub completed: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub max_us: f64,
+    /// The threshold the violation fraction was measured against (µs).
+    pub slo_us: f64,
+    /// Exact fraction of completions slower than the SLO.
+    pub slo_violation_frac: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MS;
+
+    #[test]
+    fn records_and_counts_violations_exactly() {
+        let mut s = LatencyStats::new(2 * MS);
+        for v in [MS, MS, 3 * MS, 5 * MS] {
+            s.record(v);
+        }
+        assert_eq!(s.completed(), 4);
+        assert!((s.violation_frac() - 0.5).abs() < 1e-12);
+        let t = s.summary();
+        assert_eq!(t.completed, 4);
+        assert!((t.slo_us - 2_000.0).abs() < 1e-9);
+        assert!(t.p50_us >= 900.0 && t.p50_us <= 1_000.0, "p50={}", t.p50_us);
+        assert!(t.max_us >= 4_900.0, "max={}", t.max_us);
+        assert!(t.p999_us <= t.max_us + 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder_is_all_zero() {
+        let s = LatencyStats::new(MS);
+        assert_eq!(s.completed(), 0);
+        assert_eq!(s.violation_frac(), 0.0);
+        let t = s.summary();
+        assert_eq!(t.completed, 0);
+        assert_eq!(t.p99_us, 0.0);
+    }
+
+    #[test]
+    fn exactly_at_slo_is_not_a_violation() {
+        let mut s = LatencyStats::new(MS);
+        s.record(MS);
+        assert_eq!(s.violation_frac(), 0.0);
+        s.record(MS + 1);
+        assert!((s.violation_frac() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,33 @@
+//! Open-/closed-loop traffic generation and per-request tail-latency
+//! accounting.
+//!
+//! The paper's headline harm is tail-side: intermittent AVX code slows
+//! *the rest of the system*, and at scale such performance variations
+//! dominate (Schuchart et al.). Mean throughput cannot express that —
+//! a 10% capacity loss shows up as a 10% throughput drop only past
+//! saturation, but as a 2–10× p99 blow-up well before it. This module
+//! provides the two pieces the reproduction needs to state SLO damage:
+//!
+//! * [`arrival`] — deterministic arrival processes ([`ArrivalProcess`]):
+//!   Poisson (the wrk2 baseline), bursty on/off, a compressed diurnal
+//!   ramp, and multi-tenant mixes where only some tenants carry AVX
+//!   work. [`ArrivalGen`] turns a process into a reproducible event
+//!   stream for the [`crate::sched::machine::Driver`] loop.
+//! * [`lifecycle`] — the per-request record ([`Request`]) carried from
+//!   arrival to completion, and [`LatencyStats`]: a
+//!   [`crate::util::LogHistogram`]-backed recorder producing
+//!   p50/p95/p99/p999/max and the SLO-violation fraction
+//!   ([`TailSummary`]).
+//!
+//! The web-server workload ([`crate::workload::client`] /
+//! [`crate::workload::webserver`]) consumes both; the scenario matrix
+//! ([`crate::scenario`]) sweeps load level × arrival process as first-
+//! class axes and [`crate::metrics::tail_report`] renders the table.
+//! Everything is seeded and thread-free, so matrix runs stay
+//! byte-identical across OS thread counts.
+
+pub mod arrival;
+pub mod lifecycle;
+
+pub use arrival::{ArrivalGen, ArrivalProcess, Tenant};
+pub use lifecycle::{LatencyStats, Request, TailSummary};

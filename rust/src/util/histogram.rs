@@ -123,6 +123,23 @@ impl LogHistogram {
             self.max,
         ]
     }
+
+    /// Approximate fraction of recorded values strictly above `v`: the
+    /// share of counts in buckets whose range lies entirely above `v`.
+    /// Under-counts by at most the one bucket containing `v` (~3%
+    /// relative value error), so exact threshold accounting (e.g. SLO
+    /// violations in [`crate::traffic::LatencyStats`]) is done at record
+    /// time instead; the recorder cross-checks this query against its
+    /// exact counter in debug builds, and it serves post-hoc thresholds
+    /// on merged histograms.
+    pub fn fraction_above(&self, v: u64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let boundary = bucket_index(v);
+        let above: u64 = self.buckets.iter().skip(boundary + 1).sum();
+        above as f64 / self.count as f64
+    }
 }
 
 #[cfg(test)]
@@ -191,6 +208,21 @@ mod tests {
         assert_eq!(a.count(), u.count());
         assert_eq!(a.percentile(90.0), u.percentile(90.0));
         assert_eq!(a.max(), u.max());
+    }
+
+    #[test]
+    fn fraction_above_tracks_threshold() {
+        let mut h = LogHistogram::new();
+        for v in 1..=1000u64 {
+            h.record(v * 1024); // spread across many buckets
+        }
+        // Exact fraction above 500*1024 is 0.5; the bucket boundary can
+        // only shave up to one bucket's worth (~3%) off.
+        let f = h.fraction_above(500 * 1024);
+        assert!((0.40..=0.50).contains(&f), "f={f}");
+        assert_eq!(h.fraction_above(u64::MAX / 4), 0.0);
+        assert!(h.fraction_above(0) > 0.99, "everything is above 0");
+        assert_eq!(LogHistogram::new().fraction_above(5), 0.0);
     }
 
     #[test]

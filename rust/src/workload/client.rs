@@ -3,36 +3,65 @@
 //! The paper drives nginx with wrk2 on 4 dedicated cores. wrk2 is an
 //! *open-loop, fixed-rate* generator (it corrects for coordinated
 //! omission); throughput differences between variants appear when the
-//! offered rate exceeds a variant's capacity. A closed-loop mode
-//! (fixed number of in-flight connections) is also provided — it drives
-//! every variant exactly at its own capacity.
+//! offered rate exceeds a variant's capacity. The open-loop side is now
+//! generalized over [`ArrivalProcess`] (Poisson, bursty on/off, diurnal
+//! ramp, multi-tenant mixes — see [`crate::traffic`]); a closed-loop
+//! mode (fixed number of in-flight connections) is also provided — it
+//! drives every variant exactly at its own capacity.
+//!
+//! Per-request lifecycle: the driver pushes a [`Request`] (arrival
+//! timestamp + tenant) onto the shared queue, a worker pops and serves
+//! it, and [`ServerShared::complete`] feeds the latency into
+//! [`LatencyStats`] — aggregate and per tenant — from which the
+//! p50/p95/p99/p999/SLO tables are produced.
 
 use crate::sched::machine::{Driver, Machine};
-use crate::sim::Time;
-use crate::util::{LogHistogram, Rng};
+use crate::sim::{Time, MS};
+use crate::traffic::{ArrivalGen, ArrivalProcess, LatencyStats, Request};
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
 
 /// Load-generation mode.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub enum LoadMode {
-    /// Poisson arrivals at a fixed rate (requests/second).
+    /// Poisson arrivals at a fixed rate (requests/second) — wrk2's
+    /// model, kept as sugar for `OpenProcess { Poisson }`.
     Open { rate: f64 },
+    /// Open-loop arrivals from an arbitrary [`ArrivalProcess`].
+    OpenProcess { process: ArrivalProcess },
     /// Fixed number of always-pending connections; a completed request
     /// immediately enqueues the connection's next request.
     Closed { connections: usize },
 }
 
+impl LoadMode {
+    /// The open-loop arrival process this mode denotes (`None` for
+    /// closed-loop).
+    pub fn process(&self) -> Option<ArrivalProcess> {
+        match self {
+            LoadMode::Open { rate } => Some(ArrivalProcess::Poisson { rate: *rate }),
+            LoadMode::OpenProcess { process } => Some(process.clone()),
+            LoadMode::Closed { .. } => None,
+        }
+    }
+}
+
+/// Default SLO threshold: 5 ms, a common interactive-page budget at the
+/// paper's request sizes.
+pub const DEFAULT_SLO: Time = 5 * MS;
+
 /// State shared between the arrival driver and the worker task bodies.
 #[derive(Debug)]
 pub struct ServerShared {
-    /// Pending requests (arrival timestamps).
-    pub queue: VecDeque<Time>,
+    /// Pending requests, oldest first.
+    pub queue: VecDeque<Request>,
     /// Completions only count once measuring is on (post-warmup).
     pub measuring: bool,
-    pub completed: u64,
-    pub latency: LogHistogram,
+    /// Aggregate latency/SLO recorder.
+    pub stats: LatencyStats,
+    /// Per-tenant recorders (single entry for single-stream processes).
+    pub tenant_stats: Vec<LatencyStats>,
     /// Closed-loop: completed requests respawn themselves.
     pub closed_loop: bool,
     /// Drops (queue overflow guard for pathological overload).
@@ -43,72 +72,95 @@ pub struct ServerShared {
 pub type Shared = Rc<RefCell<ServerShared>>;
 
 impl ServerShared {
-    pub fn new(closed_loop: bool) -> Shared {
+    /// Shared state for `n_tenants` request streams (≥ 1) measured
+    /// against the given SLO threshold (ns).
+    pub fn new(closed_loop: bool, slo: Time, n_tenants: usize) -> Shared {
+        let n = n_tenants.max(1);
         Rc::new(RefCell::new(ServerShared {
             queue: VecDeque::new(),
             measuring: false,
-            completed: 0,
-            latency: LogHistogram::new(),
+            stats: LatencyStats::new(slo),
+            tenant_stats: (0..n).map(|_| LatencyStats::new(slo)).collect(),
             closed_loop,
             max_queue: 100_000,
             dropped: 0,
         }))
     }
 
+    /// Completed requests recorded in the measurement window.
+    pub fn completed(&self) -> u64 {
+        self.stats.completed()
+    }
+
     /// Record a completed request; in closed-loop mode the connection
     /// immediately issues its next request.
-    pub fn complete(&mut self, now: Time, arrived: Time) {
+    pub fn complete(&mut self, now: Time, req: Request) {
         if self.measuring {
-            self.completed += 1;
-            self.latency.record(now.saturating_sub(arrived));
+            let latency = now.saturating_sub(req.arrived);
+            self.stats.record(latency);
+            if let Some(t) = self.tenant_stats.get_mut(req.tenant as usize) {
+                t.record(latency);
+            }
         }
         if self.closed_loop {
-            self.queue.push_back(now);
+            self.queue.push_back(Request { arrived: now, tenant: req.tenant });
         }
     }
 
-    pub fn push_arrival(&mut self, now: Time) -> bool {
+    pub fn push_arrival(&mut self, req: Request) -> bool {
         if self.queue.len() >= self.max_queue {
             self.dropped += 1;
             return false;
         }
-        self.queue.push_back(now);
+        self.queue.push_back(req);
         true
     }
 
-    /// Begin the measurement window (after warmup) — zero the counters.
+    /// Begin the measurement window (after warmup) — zero the recorders.
     pub fn start_measuring(&mut self) {
         self.measuring = true;
-        self.completed = 0;
-        self.latency = LogHistogram::new();
+        self.stats = LatencyStats::new(self.stats.slo);
+        for t in &mut self.tenant_stats {
+            *t = LatencyStats::new(t.slo);
+        }
         self.dropped = 0;
     }
 }
 
-/// Poisson arrival driver (external tag 0 = next arrival).
-pub struct OpenLoopDriver {
+/// Open-loop arrival driver (external tag 0 = next arrival): samples an
+/// [`ArrivalGen`] stream, pushes [`Request`]s, and wakes a worker.
+pub struct TrafficDriver {
     pub shared: Shared,
     pub ch: u32,
-    pub rate: f64,
-    pub rng: Rng,
+    gen: ArrivalGen,
+    /// Tenant of the already-scheduled next arrival.
+    next_tenant: u32,
 }
 
-impl Driver for OpenLoopDriver {
-    fn on_external(&mut self, _tag: u64, m: &mut Machine) {
+impl TrafficDriver {
+    pub fn new(shared: Shared, ch: u32, process: ArrivalProcess, seed: u64) -> Self {
+        TrafficDriver { shared, ch, gen: ArrivalGen::new(process, seed), next_tenant: 0 }
+    }
+
+    /// Install the driver's first arrival event.
+    pub fn start(&mut self, m: &mut Machine) {
         let now = m.now();
-        if self.shared.borrow_mut().push_arrival(now) {
-            m.notify(self.ch);
-        }
-        let mean_gap_ns = 1e9 / self.rate;
-        let gap = self.rng.exponential(mean_gap_ns).max(1.0) as Time;
-        m.schedule_external(now + gap, 0);
+        let (t, tenant) = self.gen.next_after(now);
+        self.next_tenant = tenant;
+        m.schedule_external(t, 0);
     }
 }
 
-impl OpenLoopDriver {
-    /// Install the driver's first arrival event.
-    pub fn start(&self, m: &mut Machine) {
-        m.schedule_external(m.now() + 1, 0);
+impl Driver for TrafficDriver {
+    fn on_external(&mut self, _tag: u64, m: &mut Machine) {
+        let now = m.now();
+        let req = Request { arrived: now, tenant: self.next_tenant };
+        if self.shared.borrow_mut().push_arrival(req) {
+            m.notify(self.ch);
+        }
+        let (t, tenant) = self.gen.next_after(now);
+        self.next_tenant = tenant;
+        m.schedule_external(t, 0);
     }
 }
 
@@ -118,29 +170,50 @@ mod tests {
 
     #[test]
     fn complete_counts_only_while_measuring() {
-        let s = ServerShared::new(false);
-        s.borrow_mut().complete(100, 50);
-        assert_eq!(s.borrow().completed, 0);
+        let s = ServerShared::new(false, DEFAULT_SLO, 1);
+        s.borrow_mut().complete(100, Request::at(50));
+        assert_eq!(s.borrow().completed(), 0);
         s.borrow_mut().start_measuring();
-        s.borrow_mut().complete(200, 60);
-        assert_eq!(s.borrow().completed, 1);
-        assert_eq!(s.borrow().latency.max(), 140);
+        s.borrow_mut().complete(200, Request::at(60));
+        assert_eq!(s.borrow().completed(), 1);
+        assert_eq!(s.borrow().stats.hist.max(), 140);
     }
 
     #[test]
-    fn closed_loop_respawns() {
-        let s = ServerShared::new(true);
-        s.borrow_mut().complete(100, 50);
+    fn closed_loop_respawns_with_tenant() {
+        let s = ServerShared::new(true, DEFAULT_SLO, 2);
+        s.borrow_mut().complete(100, Request { arrived: 50, tenant: 1 });
         assert_eq!(s.borrow().queue.len(), 1);
+        assert_eq!(s.borrow().queue[0], Request { arrived: 100, tenant: 1 });
     }
 
     #[test]
     fn queue_overflow_drops() {
-        let s = ServerShared::new(false);
+        let s = ServerShared::new(false, DEFAULT_SLO, 1);
         s.borrow_mut().max_queue = 2;
-        assert!(s.borrow_mut().push_arrival(1));
-        assert!(s.borrow_mut().push_arrival(2));
-        assert!(!s.borrow_mut().push_arrival(3));
+        assert!(s.borrow_mut().push_arrival(Request::at(1)));
+        assert!(s.borrow_mut().push_arrival(Request::at(2)));
+        assert!(!s.borrow_mut().push_arrival(Request::at(3)));
         assert_eq!(s.borrow().dropped, 1);
+    }
+
+    #[test]
+    fn per_tenant_stats_separate() {
+        let s = ServerShared::new(false, DEFAULT_SLO, 2);
+        s.borrow_mut().start_measuring();
+        s.borrow_mut().complete(1_000, Request { arrived: 0, tenant: 0 });
+        s.borrow_mut().complete(9_000, Request { arrived: 0, tenant: 1 });
+        let sh = s.borrow();
+        assert_eq!(sh.completed(), 2);
+        assert_eq!(sh.tenant_stats[0].completed(), 1);
+        assert_eq!(sh.tenant_stats[1].completed(), 1);
+        assert!(sh.tenant_stats[1].hist.max() > sh.tenant_stats[0].hist.max());
+    }
+
+    #[test]
+    fn open_mode_desugars_to_poisson() {
+        let m = LoadMode::Open { rate: 1_000.0 };
+        assert_eq!(m.process(), Some(ArrivalProcess::Poisson { rate: 1_000.0 }));
+        assert!(LoadMode::Closed { connections: 4 }.process().is_none());
     }
 }

@@ -7,15 +7,16 @@
 //! `with_avx()` / `without_avx()` exactly like the paper's 9-line nginx
 //! patch (SSL_read, SSL_write, SSL_do_handshake, SSL_shutdown).
 
-use super::client::{LoadMode, OpenLoopDriver, ServerShared, Shared};
+use super::client::{LoadMode, ServerShared, Shared, TrafficDriver, DEFAULT_SLO};
 use super::compress::CompressProfile;
 use super::crypto::{CryptoProfile, Isa};
 use crate::analysis::flamegraph::StackTable;
 use crate::isa::block::{Block, ClassMix};
 use crate::isa::{Binary, Function};
-use crate::sched::machine::{Action, Machine, MachineParams, TaskBody};
+use crate::sched::machine::{Action, Driver, Machine, MachineParams, TaskBody};
 use crate::sched::{PolicyKind, TaskType};
 use crate::sim::{Time, MS, SEC};
+use crate::traffic::{ArrivalProcess, Request, TailSummary};
 use crate::util::Rng;
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -40,6 +41,8 @@ pub struct WebCfg {
     /// 1 = the paper's single-socket machine.
     pub sockets: usize,
     pub mode: LoadMode,
+    /// Latency SLO threshold (ns) for the violation-fraction metric.
+    pub slo: Time,
     /// Full TLS handshake every N requests per connection (keepalive).
     pub handshake_every: u64,
     pub seed: u64,
@@ -69,6 +72,7 @@ impl WebCfg {
             cores: 12,
             sockets: 1,
             mode: LoadMode::Open { rate: 60_000.0 },
+            slo: DEFAULT_SLO,
             handshake_every: 20,
             seed: 0x5EED,
             warmup: SEC,
@@ -141,6 +145,47 @@ impl WebCfg {
         }
         cfg.warmup = (conf.float_or("load.warmup_s", cfg.warmup as f64 / SEC as f64) * SEC as f64) as Time;
         cfg.measure = (conf.float_or("load.measure_s", cfg.measure as f64 / SEC as f64) * SEC as f64) as Time;
+        cfg.slo = (conf.float_or("load.slo_ms", cfg.slo as f64 / MS as f64) * MS as f64) as Time;
+        // Non-Poisson arrival processes reshape the open-loop rate.
+        let process = conf.str_or("load.process", "poisson");
+        if process != "poisson" {
+            let rate = match &cfg.mode {
+                LoadMode::Open { rate } => *rate,
+                _ => anyhow::bail!("load.process = {process:?} requires load.rate (open loop)"),
+            };
+            let period = (conf.float_or("load.period_ms", 200.0) * MS as f64) as Time;
+            cfg.mode = LoadMode::OpenProcess {
+                process: match process {
+                    "bursty" => {
+                        let burst_factor = conf.float_or("load.burst_factor", 2.0);
+                        let duty = conf.float_or("load.duty", 0.3);
+                        // Past this bound the base rate clamps to 0 and
+                        // the long-run mean silently exceeds load.rate —
+                        // cross-process comparisons at "the same load"
+                        // would compare different offered loads.
+                        anyhow::ensure!(
+                            burst_factor * duty <= 1.0,
+                            "load.burst_factor × load.duty = {:.2} > 1: bursts alone exceed \
+                             load.rate, so the declared mean cannot be preserved",
+                            burst_factor * duty
+                        );
+                        ArrivalProcess::bursty_mean(rate, burst_factor, duty, period)
+                    }
+                    "diurnal" => ArrivalProcess::Diurnal {
+                        mean_rate: rate,
+                        swing: conf.float_or("load.swing", 0.6).clamp(0.0, 0.95),
+                        period,
+                    },
+                    "mix" => ArrivalProcess::two_tenant(
+                        rate,
+                        conf.float_or("load.avx_share", 0.3),
+                    ),
+                    other => anyhow::bail!(
+                        "load.process = {other:?} (poisson|bursty|diurnal|mix)"
+                    ),
+                },
+            };
+        }
         Ok(cfg)
     }
 }
@@ -318,38 +363,41 @@ impl Planner {
 }
 
 /// Worker task body: pulls requests from the shared queue, executes the
-/// plan step by step.
+/// plan step by step. One planner per tenant: tenants that carry no AVX
+/// work get an SSE4 pipeline without `with_avx()` annotations.
 struct Worker {
-    planner: Rc<Planner>,
+    planners: Rc<Vec<Rc<Planner>>>,
     shared: Shared,
     ch: u32,
     rng: Rng,
     reqno: u64,
-    current: Option<(Time, VecDeque<Step>)>,
+    current: Option<(Request, VecDeque<Step>)>,
 }
 
 impl TaskBody for Worker {
     fn next(&mut self, now: Time, _rng: &mut Rng) -> Action {
         loop {
-            if let Some((arrived, steps)) = &mut self.current {
+            if let Some((req, steps)) = &mut self.current {
                 match steps.pop_front() {
                     Some(Step::Set(t)) => return Action::SetType(t),
                     Some(Step::Exec { func, stack, block }) => {
                         return Action::Run { block, func, stack }
                     }
                     None => {
-                        let arrived = *arrived;
+                        let req = *req;
                         self.current = None;
-                        self.shared.borrow_mut().complete(now, arrived);
+                        self.shared.borrow_mut().complete(now, req);
                     }
                 }
             } else {
                 let work = self.shared.borrow_mut().queue.pop_front();
                 match work {
-                    Some(arrived) => {
+                    Some(req) => {
                         self.reqno += 1;
-                        let plan = self.planner.plan(self.reqno, &mut self.rng);
-                        self.current = Some((arrived, plan));
+                        let planner =
+                            &self.planners[req.tenant as usize % self.planners.len()];
+                        let plan = planner.plan(self.reqno, &mut self.rng);
+                        self.current = Some((req, plan));
                     }
                     None => return Action::WaitChannel(self.ch),
                 }
@@ -390,8 +438,13 @@ pub struct WebRun {
     pub avg_ghz: f64,
     pub ipc: f64,
     pub insns_per_req: f64,
-    pub p50_us: f64,
-    pub p99_us: f64,
+    /// Full tail-latency summary (p50/p95/p99/p999/max, SLO fraction).
+    pub tail: TailSummary,
+    /// Per-tenant tails, in tenant-index order (`("all", …)` for
+    /// single-stream arrival processes).
+    pub tenant_tails: Vec<(String, TailSummary)>,
+    /// Arrivals rejected by the overflow guard during measurement.
+    pub dropped: u64,
     pub type_changes_per_sec: f64,
     pub migrations_per_sec: f64,
     /// Migrations that crossed a socket (NUMA) boundary; 0 on
@@ -425,7 +478,24 @@ pub fn run_webserver_with_params(cfg: &WebCfg, sched: crate::sched::SchedParams)
 
 fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun, Machine) {
     let stacks = Rc::new(RefCell::new(StackTable::new()));
-    let planner = Rc::new(Planner::new(cfg.clone(), stacks.clone()));
+    // Open-loop arrival process (None = closed loop) and one planner per
+    // tenant: non-AVX tenants serve an SSE4 pipeline, unannotated.
+    let process = cfg.mode.process();
+    let n_tenants = process.as_ref().map(|p| p.n_tenants()).unwrap_or(1);
+    let planners: Rc<Vec<Rc<Planner>>> = Rc::new(
+        (0..n_tenants)
+            .map(|t| {
+                let carries_avx =
+                    process.as_ref().map(|p| p.tenant_carries_avx(t)).unwrap_or(true);
+                let mut pcfg = cfg.clone();
+                if !carries_avx {
+                    pcfg.isa = Isa::Sse4;
+                    pcfg.annotate = false;
+                }
+                Rc::new(Planner::new(pcfg, stacks.clone()))
+            })
+            .collect(),
+    );
 
     // `Machine::new` normalizes a CoreSpecNuma policy's socket count on
     // the machine's actual domain count, so a caller overriding only
@@ -445,12 +515,12 @@ fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun
     let ch = m.channel();
 
     let closed = matches!(cfg.mode, LoadMode::Closed { .. });
-    let shared = ServerShared::new(closed);
+    let shared = ServerShared::new(closed, cfg.slo, n_tenants);
 
     let mut seed_rng = Rng::new(cfg.seed ^ 0xC0FFEE);
     for _ in 0..cfg.workers {
         let body = Worker {
-            planner: planner.clone(),
+            planners: planners.clone(),
             shared: shared.clone(),
             ch,
             rng: seed_rng.fork(),
@@ -468,18 +538,17 @@ fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun
     }
 
     // Composite driver: arrivals (tag 0) + adaptive controller (tag 1).
-    let open = match cfg.mode {
-        LoadMode::Open { rate } => Some(OpenLoopDriver {
-            shared: shared.clone(),
-            ch,
-            rate,
-            rng: Rng::new(cfg.seed ^ 0xDEAD),
-        }),
-        LoadMode::Closed { connections } => {
+    let open = match &process {
+        Some(p) => Some(TrafficDriver::new(shared.clone(), ch, p.clone(), cfg.seed ^ 0xDEAD)),
+        None => {
+            let connections = match cfg.mode {
+                LoadMode::Closed { connections } => connections,
+                _ => unreachable!("process() is None only for closed loop"),
+            };
             {
                 let mut s = shared.borrow_mut();
                 for _ in 0..connections {
-                    s.queue.push_back(0);
+                    s.queue.push_back(Request::at(0));
                 }
             }
             for _ in 0..connections.min(cfg.workers) {
@@ -492,8 +561,8 @@ fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun
         .adaptive
         .map(|params| crate::sched::adaptive::Controller::new(params, cfg.cores));
     let mut driver = WebDriver { open, ctl };
-    if driver.open.is_some() {
-        m.schedule_external(m.now() + 1, 0);
+    if let Some(o) = &mut driver.open {
+        o.start(&mut m);
     }
     if let Some(c) = &driver.ctl {
         m.schedule_external(m.now() + c.params.interval, 1);
@@ -508,7 +577,16 @@ fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun
     let total = m.total_perf();
     let s = shared.borrow();
     let secs = cfg.measure as f64 / SEC as f64;
-    let completed = s.completed;
+    let completed = s.completed();
+    let tail = s.stats.summary();
+    let tenant_names = process
+        .as_ref()
+        .map(|p| p.tenant_names())
+        .unwrap_or_else(|| vec!["all".to_string()]);
+    let tenant_tails = tenant_names
+        .into_iter()
+        .zip(s.tenant_stats.iter().map(|t| t.summary()))
+        .collect();
     let run = WebRun {
         cfg_name: format!(
             "{}/{}/{}",
@@ -520,8 +598,9 @@ fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun
         avg_ghz: total.avg_busy_ghz(),
         ipc: total.ipc(),
         insns_per_req: if completed > 0 { total.instructions as f64 / completed as f64 } else { 0.0 },
-        p50_us: s.latency.percentile(50.0) as f64 / 1_000.0,
-        p99_us: s.latency.percentile(99.0) as f64 / 1_000.0,
+        tail,
+        tenant_tails,
+        dropped: s.dropped,
         type_changes_per_sec: m.sched.stats.type_changes as f64 / secs,
         migrations_per_sec: m.sched.stats.migrations as f64 / secs,
         cross_socket_migrations_per_sec: m.sched.stats.cross_socket_migrations as f64 / secs,
@@ -536,11 +615,11 @@ fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun
 
 /// Composite web driver: open-loop arrivals + the adaptive controller.
 struct WebDriver {
-    open: Option<OpenLoopDriver>,
+    open: Option<TrafficDriver>,
     ctl: Option<crate::sched::adaptive::Controller>,
 }
 
-impl crate::sched::machine::Driver for WebDriver {
+impl Driver for WebDriver {
     fn on_external(&mut self, tag: u64, m: &mut Machine) {
         match tag {
             0 => {
@@ -654,7 +733,7 @@ mod tests {
         assert!(run.completed > 100, "completed={}", run.completed);
         assert!(run.throughput_rps > 0.0);
         assert!(run.avg_ghz > 1.8 && run.avg_ghz < 3.8, "ghz={}", run.avg_ghz);
-        assert!(run.p50_us > 0.0);
+        assert!(run.tail.p50_us > 0.0);
     }
 
     #[test]
@@ -686,6 +765,38 @@ mod tests {
     fn annotations_produce_type_changes() {
         let run = run_webserver(&quick_cfg(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 }));
         assert!(run.type_changes_per_sec > 1000.0, "rate={}", run.type_changes_per_sec);
+    }
+
+    #[test]
+    fn tail_summary_is_consistent() {
+        let run = run_webserver(&quick_cfg(Isa::Sse4, PolicyKind::Unmodified));
+        assert_eq!(run.tail.completed, run.completed);
+        assert!(run.tail.p50_us <= run.tail.p95_us + 1e-9);
+        assert!(run.tail.p95_us <= run.tail.p99_us + 1e-9);
+        assert!(run.tail.p99_us <= run.tail.p999_us + 1e-9);
+        assert!(run.tail.p999_us <= run.tail.max_us + 1e-9);
+        assert!((0.0..=1.0).contains(&run.tail.slo_violation_frac));
+        assert_eq!(run.tenant_tails.len(), 1);
+        assert_eq!(run.tenant_tails[0].0, "all");
+    }
+
+    #[test]
+    fn multi_tenant_mix_separates_tails() {
+        let mut c = quick_cfg(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 });
+        c.mode = LoadMode::OpenProcess {
+            process: ArrivalProcess::two_tenant(30_000.0, 0.3),
+        };
+        let (run, m) = run_webserver_machine(&c);
+        assert_eq!(run.tenant_tails.len(), 2);
+        assert_eq!(run.tenant_tails[0].0, "scalar");
+        assert_eq!(run.tenant_tails[1].0, "avx");
+        assert!(run.tenant_tails[0].1.completed > 500, "{:?}", run.tenant_tails[0].1);
+        assert!(run.tenant_tails[1].1.completed > 100, "{:?}", run.tenant_tails[1].1);
+        // Only the AVX tenant's pipeline is annotated, and the scalar
+        // cores stay clean even under the mix.
+        for core in 0..3 {
+            assert_eq!(m.cores[core].perf.license_cycles[2], 0, "core {core} saw L2");
+        }
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Golden-file tests for the report renderers: `metrics::matrix_report`
+//! and the new tail-latency table must render byte-identically to the
+//! checked-in snapshots, and a real (small) matrix must render the same
+//! bytes at 1 and 4 OS threads.
+//!
+//! The snapshots are driven by *synthetic* cell results with fixed
+//! values, so they pin the formatting contract (column set, ordering,
+//! fixed precision, alignment) independently of the simulator. To
+//! regenerate after an intentional format change:
+//! `UPDATE_GOLDEN=1 cargo test --test golden_report`.
+
+use avxfreq::metrics::{matrix_report, tail_report};
+use avxfreq::scenario::{
+    ArrivalSpec, CellResult, PolicySpec, Scenario, ScenarioMatrix, TopologySpec, WorkloadSpec,
+};
+use avxfreq::sched::PolicyKind;
+use avxfreq::sim::MS;
+use avxfreq::traffic::TailSummary;
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::{WebCfg, WebRun};
+
+fn tail(completed: u64, p50: f64, p95: f64, p99: f64, p999: f64, max: f64, frac: f64) -> TailSummary {
+    TailSummary {
+        completed,
+        mean_us: p50, // unused by the tables; any value works
+        p50_us: p50,
+        p95_us: p95,
+        p99_us: p99,
+        p999_us: p999,
+        max_us: max,
+        slo_us: 5_000.0,
+        slo_violation_frac: frac,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn cell(
+    index: usize,
+    isa: Isa,
+    policy: &str,
+    arrival: &str,
+    load: f64,
+    rps: f64,
+    t: TailSummary,
+    tenants: Vec<(String, TailSummary)>,
+) -> CellResult {
+    let scenario = Scenario {
+        index,
+        topology: "1x12".to_string(),
+        sockets: 1,
+        policy: policy.to_string(),
+        workload: "compressed".to_string(),
+        isa,
+        load,
+        arrival: arrival.to_string(),
+        seed: 7,
+        cfg: WebCfg::paper_default(isa, PolicyKind::Unmodified),
+    };
+    let run = WebRun {
+        cfg_name: "synthetic".to_string(),
+        throughput_rps: rps,
+        avg_ghz: 2.75,
+        ipc: 1.5,
+        insns_per_req: 1_000_000.0,
+        tail: t,
+        tenant_tails: tenants,
+        dropped: if index == 1 { 25 } else { 0 },
+        type_changes_per_sec: 9_000.0,
+        migrations_per_sec: 1_200.0,
+        cross_socket_migrations_per_sec: 0.0,
+        throttle_ratio: 0.0625,
+        license_share: [0.75, 0.125, 0.125],
+        completed: t.completed,
+        final_avx_cores: 2,
+        adaptive_changes: 0,
+    };
+    CellResult { scenario, run }
+}
+
+/// Two fixed cells: a single-tenant Poisson cell and a two-tenant bursty
+/// cell, covering both table shapes (one row vs two rows per cell).
+fn synthetic_cells() -> Vec<CellResult> {
+    let t0 = tail(48_000, 250.0, 1_500.0, 2_000.0, 3_500.0, 8_000.0, 0.125);
+    let ta = tail(45_000, 200.0, 1_000.0, 1_250.0, 2_500.0, 6_000.0, 0.0625);
+    let tb = tail(15_000, 400.0, 2_000.0, 3_000.0, 5_500.0, 12_000.0, 0.25);
+    let agg = tail(60_000, 250.0, 1_250.0, 2_000.0, 4_500.0, 12_000.0, 0.109375);
+    vec![
+        cell(
+            0,
+            Isa::Avx512,
+            "unmodified",
+            "poisson",
+            1.0,
+            48_000.0,
+            t0,
+            vec![("all".to_string(), t0)],
+        ),
+        cell(
+            1,
+            Isa::Avx512,
+            "core-spec(2)",
+            "bursty",
+            1.25,
+            60_000.0,
+            agg,
+            vec![("scalar".to_string(), ta), ("avx".to_string(), tb)],
+        ),
+    ]
+}
+
+fn check_golden(name: &str, actual: &str) {
+    let path = format!("{}/rust/tests/golden/{name}.txt", env!("CARGO_MANIFEST_DIR"));
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(&path, actual).expect("write golden");
+        eprintln!("updated {path}");
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    assert!(
+        actual == expected,
+        "{name} drifted from its snapshot ({path}).\n--- expected ---\n{expected}\n--- actual ---\n{actual}\n\
+         Run with UPDATE_GOLDEN=1 if the change is intentional."
+    );
+}
+
+#[test]
+fn matrix_report_matches_snapshot() {
+    check_golden("matrix_report", &matrix_report(&synthetic_cells()).render());
+}
+
+#[test]
+fn tail_report_matches_snapshot() {
+    check_golden("tail_report", &tail_report(&synthetic_cells()).render());
+}
+
+/// The renderer side of the determinism acceptance criterion: a real
+/// (small) traffic matrix renders byte-identical matrix AND tail tables
+/// at 1 and 4 OS threads.
+#[test]
+fn real_matrix_renders_identically_at_1_and_4_threads() {
+    let mut m = ScenarioMatrix::new(0x7A11);
+    m.topologies = vec![TopologySpec::multi(1, 4)];
+    m.policies = vec![PolicySpec::CoreSpec { avx_cores: 1 }];
+    m.workloads = vec![WorkloadSpec {
+        name: "small".to_string(),
+        compress: true,
+        page_kib: 8,
+        rate_per_core: 4_000.0,
+    }];
+    m.isas = vec![Isa::Avx512];
+    m.loads = vec![0.8, 1.2];
+    m.arrivals = vec![ArrivalSpec::Poisson, ArrivalSpec::bursty_default()];
+    m.warmup = 100 * MS;
+    m.measure = 200 * MS;
+
+    let serial = m.run(1);
+    let parallel = m.run(4);
+    assert_eq!(serial.render(), parallel.render(), "matrix table differs across threads");
+    assert_eq!(
+        serial.render_tail(),
+        parallel.render_tail(),
+        "tail table differs across threads"
+    );
+}

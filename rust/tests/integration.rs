@@ -76,7 +76,7 @@ fn closed_loop_mode_works() {
     cfg.mode = LoadMode::Closed { connections: 32 };
     let run = run_webserver(&cfg);
     assert!(run.completed > 500, "closed loop must sustain itself, got {}", run.completed);
-    assert!(run.p50_us > 0.0);
+    assert!(run.tail.p50_us > 0.0);
 }
 
 #[test]
@@ -186,10 +186,29 @@ measure_s = 0.3
 
 #[test]
 fn shipped_configs_parse() {
-    for path in ["configs/paper_webserver.toml", "configs/adaptive_demo.toml"] {
+    for path in [
+        "configs/paper_webserver.toml",
+        "configs/adaptive_demo.toml",
+        "configs/dual_socket.toml",
+        "configs/bursty_slo.toml",
+    ] {
         let conf = avxfreq::util::config::Config::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
         let cfg = WebCfg::from_config(&conf).unwrap_or_else(|e| panic!("{path}: {e}"));
         assert!(cfg.cores >= 1 && cfg.workers >= 1);
+    }
+}
+
+#[test]
+fn bursty_config_builds_bursty_process() {
+    let conf = avxfreq::util::config::Config::load("configs/bursty_slo.toml").unwrap();
+    let cfg = WebCfg::from_config(&conf).unwrap();
+    assert_eq!(cfg.slo, 5 * avxfreq::sim::MS);
+    match &cfg.mode {
+        LoadMode::OpenProcess { process } => {
+            assert_eq!(process.label(), "bursty");
+            assert!((process.mean_rate() - 55_000.0).abs() < 1.0, "{}", process.mean_rate());
+        }
+        other => panic!("expected a bursty open-loop process, got {other:?}"),
     }
 }
 

@@ -184,6 +184,127 @@ fn prop_work_conservation() {
     });
 }
 
+// ---- adaptive AVX-core controller ------------------------------------------
+
+/// Task whose AVX duty cycle follows a generated load trace: the trace
+/// holds one duty percentage per 100 ms window, so random traces exercise
+/// ramps, spikes, and dead periods against the §3.1 controller.
+struct TraceDuty {
+    trace: Rc<Vec<u64>>,
+    window: Time,
+    i: u64,
+    phase: u8,
+}
+
+impl TaskBody for TraceDuty {
+    fn next(&mut self, now: Time, _rng: &mut Rng) -> Action {
+        let duty = if self.trace.is_empty() {
+            0
+        } else {
+            let w = (now / self.window) as usize;
+            self.trace[w.min(self.trace.len() - 1)]
+        };
+        self.i += 1;
+        let avx_turn = self.i % 100 < duty;
+        match (self.phase, avx_turn) {
+            (0, true) => {
+                self.phase = 1;
+                Action::SetType(TaskType::Avx)
+            }
+            (1, _) => {
+                self.phase = 2;
+                Action::Run {
+                    block: Block {
+                        mix: ClassMix::of(InsnClass::Avx512Heavy, 40_000),
+                        mem_ops: 0,
+                        branches: 80,
+                        license_exempt: false,
+                    },
+                    func: 1,
+                    stack: 0,
+                }
+            }
+            (2, _) => {
+                self.phase = 0;
+                Action::SetType(TaskType::Scalar)
+            }
+            _ => Action::Run {
+                block: Block {
+                    mix: ClassMix::scalar(40_000),
+                    mem_ops: 0,
+                    branches: 80,
+                    license_exempt: false,
+                },
+                func: 2,
+                stack: 0,
+            },
+        }
+    }
+}
+
+/// Satellite invariant for `sched/adaptive.rs`: under ANY load trace the
+/// AVX-core count stays within `[min_avx, min(max_avx, n-1)]` after every
+/// tick, and the two-window debounce means the count never changes at two
+/// consecutive ticks (hysteresis stability). Failing traces shrink to a
+/// minimal counterexample via the testkit's `VecOf` strategy.
+#[test]
+fn prop_adaptive_bounds_and_hysteresis() {
+    use avxfreq::sched::adaptive::{AdaptiveParams, Controller};
+    let strat = VecOf { elem: IntRange { lo: 0, hi: 101 }, max_len: 10 };
+    assert_prop("adaptive bounds + hysteresis", 0xADA9, 8, &strat, |trace| {
+        let n_cores = 8;
+        let params = AdaptiveParams::default();
+        let mut p = MachineParams::new(n_cores, PolicyKind::CoreSpec { avx_cores: 2 });
+        p.seed = 0xBEE5;
+        let mut m = Machine::new(p);
+        let shared = Rc::new(trace.clone());
+        for _ in 0..12 {
+            m.spawn(
+                TaskType::Scalar,
+                0,
+                Box::new(TraceDuty {
+                    trace: shared.clone(),
+                    window: SEC / 10,
+                    i: 0,
+                    phase: 0,
+                }),
+            );
+        }
+        let mut ctl = Controller::new(params, n_cores);
+        let mut t = 0;
+        let mut ks = Vec::new();
+        while t < SEC {
+            t += params.interval;
+            m.run_until(t, &mut avxfreq::sched::machine::NullDriver);
+            ks.push(ctl.tick(&mut m));
+        }
+        let hi = params.max_avx.min(n_cores - 1);
+        for (i, &k) in ks.iter().enumerate() {
+            if k < params.min_avx || k > hi {
+                return Err(format!(
+                    "tick {i}: k={k} outside [{}, {hi}] (trace {trace:?})",
+                    params.min_avx
+                ));
+            }
+        }
+        for w in ks.windows(3) {
+            if w[0] != w[1] && w[1] != w[2] {
+                return Err(format!(
+                    "count changed at two consecutive ticks: {w:?} — debounce broken"
+                ));
+            }
+        }
+        let changes = ks.windows(2).filter(|w| w[0] != w[1]).count() as u64;
+        if changes != ctl.grows + ctl.shrinks {
+            return Err(format!(
+                "reported {} resizes but observed {changes}",
+                ctl.grows + ctl.shrinks
+            ));
+        }
+        Ok(())
+    });
+}
+
 // ---- frequency state machine properties -----------------------------------
 
 #[test]

@@ -11,18 +11,33 @@ use avxfreq::runtime::executor::{CryptoExecutor, Width};
 use avxfreq::runtime::server::{self, ServeStats};
 use std::sync::Arc;
 
-fn artifacts_dir() -> Option<String> {
+/// `Ok(dir)` when the AOT artifacts are present, `Err(dir)` with the
+/// checked location otherwise. SKIP notices must name the directory —
+/// `ci.sh` greps for it so a silent mis-skip (wrong env var, moved
+/// artifacts) fails the build instead of shrinking coverage.
+fn artifacts_dir() -> Result<String, String> {
     let dir = std::env::var("AVXFREQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    std::path::Path::new(&dir).join("manifest.txt").exists().then_some(dir)
+    if std::path::Path::new(&dir).join("manifest.txt").exists() {
+        Ok(dir)
+    } else {
+        Err(dir)
+    }
+}
+
+fn skip_notice(dir: &str) {
+    eprintln!(
+        "SKIP: artifacts directory `{dir}` missing or without manifest.txt — \
+         run `make artifacts` (or set AVXFREQ_ARTIFACTS)"
+    );
 }
 
 /// One executor (compiling the three HLO modules takes ~30 s each on the
 /// CPU backend), shared across the checks below.
 #[test]
 fn pjrt_matches_rust_reference_and_authenticates() {
-    let Some(dir) = artifacts_dir() else {
-        eprintln!("SKIP: no artifacts — run `make artifacts`");
-        return;
+    let dir = match artifacts_dir() {
+        Ok(dir) => dir,
+        Err(dir) => return skip_notice(&dir),
     };
     let ex = CryptoExecutor::load(&dir).expect("load+compile artifacts");
 
@@ -71,9 +86,9 @@ fn pjrt_matches_rust_reference_and_authenticates() {
 
 #[test]
 fn server_roundtrip_over_tcp() {
-    let Some(dir) = artifacts_dir() else {
-        eprintln!("SKIP: no artifacts");
-        return;
+    let dir = match artifacts_dir() {
+        Ok(dir) => dir,
+        Err(dir) => return skip_notice(&dir),
     };
     let n = 3u64;
     let stats = Arc::new(ServeStats::default());
