@@ -24,6 +24,21 @@ step "cargo build --release --benches --examples" \
 step "unit tests" cargo test -q --lib --bins
 step "doctests" cargo test -q --doc
 
+# Golden snapshots must exist before the suites run: a fresh checkout
+# missing one would otherwise "pass" only via UPDATE_GOLDEN, and the
+# fleet tables' formatting contract would be unpinned.
+check_goldens() {
+  local missing=0
+  for g in matrix_report tail_report fleet_report fleetvar_report; do
+    if [ ! -f "rust/tests/golden/${g}.txt" ]; then
+      echo "MISSING golden snapshot: rust/tests/golden/${g}.txt"
+      missing=1
+    fi
+  done
+  [ "$missing" -eq 0 ]
+}
+step "golden snapshots present" check_goldens
+
 # Integration suites, one named step each (see rust/tests/README.md).
 # The list is derived from Cargo.toml's [[test]] entries so a new suite
 # cannot be registered there yet silently skipped here;
@@ -74,11 +89,14 @@ for f in README.md docs/*.md rust/tests/README.md; do
 done
 # Files referenced by backtick path convention in README/ARCHITECTURE.
 for p in docs/ARCHITECTURE.md rust/tests/README.md configs/dual_socket.toml \
-         configs/bursty_slo.toml rust/src/scenario/mod.rs \
+         configs/bursty_slo.toml configs/fleet_slo.toml rust/src/scenario/mod.rs \
          rust/src/traffic/mod.rs rust/src/traffic/arrival.rs \
          rust/src/traffic/lifecycle.rs rust/tests/scenario_matrix.rs \
          rust/tests/traffic.rs rust/tests/golden_report.rs \
          rust/tests/golden/matrix_report.txt rust/tests/golden/tail_report.txt \
+         rust/src/fleet/mod.rs rust/src/fleet/router.rs rust/src/fleet/cluster.rs \
+         rust/src/repro/fleetvar.rs rust/tests/fleet.rs \
+         rust/tests/golden/fleet_report.txt rust/tests/golden/fleetvar_report.txt \
          ci.sh; do
   if [ ! -e "$p" ]; then
     echo "MISSING referenced file: $p"

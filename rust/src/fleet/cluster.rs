@@ -1,0 +1,402 @@
+//! Fleet simulation: N independent [`Machine`]s behind one routed
+//! arrival stream, with cross-machine latency aggregation.
+//!
+//! [`run_fleet`] proceeds in three phases:
+//!
+//! 1. **Demultiplex** — the cluster's arrival stream is generated once
+//!    from the fleet seed (`seed ^ 0xDEAD`, the same derivation a
+//!    standalone [`run_webserver`] uses) and split into per-machine
+//!    `(time, tenant)` traces by the [`Router`]. Routing sees only the
+//!    stream and the router's own bookkeeping, so the split is a pure
+//!    function of the fleet configuration.
+//! 2. **Simulate** — each machine replays its trace through
+//!    [`crate::workload::webserver::run_webserver_trace`] on whatever OS
+//!    thread claims it (atomic-cursor work stealing, results keyed by
+//!    machine index). Machine 0 keeps the fleet seed — which is why a
+//!    fleet of size 1 is *byte-identical* to the standalone run — and
+//!    further machines fork decorrelated seeds.
+//! 3. **Aggregate** — per-machine [`LatencyStats`] recorders are
+//!    [`LatencyStats::merge`]d (histogram buckets and exact SLO counters
+//!    add) into cluster-wide tails. Percentiles are merged at the
+//!    histogram level, never averaged: a p99 of p99s is not the fleet
+//!    p99.
+//!
+//! [`Machine`]: crate::sched::machine::Machine
+//! [`run_webserver`]: crate::workload::webserver::run_webserver
+
+use super::router::{Router, RouterSpec};
+use crate::sim::{Time, SEC};
+use crate::traffic::{ArrivalGen, LatencyStats, TailSummary};
+use crate::util::{mix64, Summary};
+use crate::workload::webserver::{run_webserver_trace, WebCfg, WebRun};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Fleet configuration: N machines stamped from one [`WebCfg`] template
+/// behind a [`RouterSpec`] front-end.
+#[derive(Clone, Debug)]
+pub struct FleetCfg {
+    /// Number of machines behind the front-end.
+    pub machines: usize,
+    /// Routing policy demultiplexing the shared arrival stream.
+    pub router: RouterSpec,
+    /// Per-machine template. `cfg.mode` carries the *fleet-total*
+    /// open-loop arrival process (per-machine load emerges from
+    /// routing), and `cfg.seed` doubles as the fleet seed.
+    pub cfg: WebCfg,
+}
+
+impl FleetCfg {
+    pub fn new(machines: usize, router: RouterSpec, cfg: WebCfg) -> Self {
+        FleetCfg { machines: machines.max(1), router, cfg }
+    }
+
+    /// Build a fleet from a TOML config: the `[machine]`/`[server]`/
+    /// `[sched]`/`[load]` sections describe the per-machine template
+    /// exactly as for `avxfreq sim` (with `load.rate` as the
+    /// fleet-total offered rate), plus:
+    ///
+    /// ```toml
+    /// [fleet]
+    /// machines = 6
+    /// router = "avx-partition"   # round-robin | least-outstanding | avx-partition
+    /// avx_machines = 1           # size of the AVX subset (partition router)
+    /// ```
+    pub fn from_config(conf: &crate::util::config::Config) -> anyhow::Result<FleetCfg> {
+        let cfg = WebCfg::from_config(conf)?;
+        let machines = conf.usize_or("fleet.machines", 4).max(1);
+        let avx_machines = conf.usize_or("fleet.avx_machines", 1);
+        let router = RouterSpec::parse(conf.str_or("fleet.router", "round-robin"), avx_machines)?;
+        let fleet = FleetCfg { machines, router, cfg };
+        fleet.validate()?;
+        Ok(fleet)
+    }
+
+    /// Reject configurations the fleet cannot demultiplex — or would
+    /// demultiplex into silently nonsensical output.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let process = self.cfg.mode.process();
+        anyhow::ensure!(
+            process.is_some(),
+            "a fleet needs an open-loop arrival stream to route (closed-loop \
+             connections live inside one machine)"
+        );
+        // A fleet of 1 is the single-machine differential anchor and
+        // routes everything to machine 0 under any router; only real
+        // partitions need the shape checks.
+        if self.machines > 1 {
+            if let RouterSpec::AvxPartition { avx_machines } = self.router {
+                anyhow::ensure!(
+                    (1..self.machines).contains(&avx_machines),
+                    "fleet.avx_machines = {avx_machines} must leave both subsets non-empty \
+                     (1..={} for {} machines) — a silent clamp would make the reported \
+                     router label lie about the routing that ran",
+                    self.machines - 1,
+                    self.machines
+                );
+                let p = process.expect("checked above");
+                anyhow::ensure!(
+                    (0..p.n_tenants()).any(|i| !p.tenant_carries_avx(i)),
+                    "avx-partition needs a multi-tenant mix with a non-AVX tenant \
+                     (load.process = \"mix\" or \"bursty-mix\"): a single-stream process \
+                     counts as AVX-carrying, so 100% of traffic would land on the AVX \
+                     subset and the idle machines would fake the dispersion metrics"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Seed for machine `i`: machine 0 keeps the fleet seed (a fleet of
+    /// size 1 *is* the standalone run), further machines fork via a
+    /// SplitMix64 finalizer so their worker RNG streams decorrelate.
+    pub fn machine_seed(&self, i: usize) -> u64 {
+        if i == 0 {
+            self.cfg.seed
+        } else {
+            mix64(self.cfg.seed ^ (i as u64).wrapping_mul(0xA24B_AED4_963E_E407))
+        }
+    }
+}
+
+/// Results of one fleet run: per-machine [`WebRun`]s plus cluster-wide
+/// merged aggregates.
+#[derive(Clone, Debug)]
+pub struct FleetRun {
+    /// Router label (see [`RouterSpec::label`]).
+    pub router: String,
+    /// Per-machine results, in machine-index order.
+    pub machines: Vec<WebRun>,
+    /// Arrivals the router sent to each machine (whole run, including
+    /// warmup — routing does not know about measurement windows).
+    pub arrivals_routed: Vec<u64>,
+    /// Cluster-wide recorder: every machine's aggregate
+    /// [`LatencyStats`] merged.
+    pub stats: LatencyStats,
+    /// Cluster-wide tail summary frozen from [`FleetRun::stats`].
+    pub tail: TailSummary,
+    /// Cluster-wide per-tenant recorders (merged across machines), in
+    /// tenant-index order with their labels.
+    pub tenant_stats: Vec<(String, LatencyStats)>,
+    /// Total completions in the measurement window.
+    pub completed: u64,
+    /// Total arrivals dropped by machine overflow guards.
+    pub dropped: u64,
+    /// Exact cluster-wide SLO-violation count.
+    pub violations: u64,
+    /// Measurement window in seconds (for rate metrics).
+    pub measure_secs: f64,
+}
+
+impl FleetRun {
+    /// Per-machine p99 latencies (µs), machine-index order. Machines the
+    /// router never picked report 0.
+    pub fn p99s_us(&self) -> Vec<f64> {
+        self.machines.iter().map(|m| m.tail.p99_us).collect()
+    }
+
+    /// Cross-machine summary statistics of the per-machine p99 — the
+    /// fleet restatement of the paper's variability claim.
+    pub fn p99_summary(&self) -> Summary {
+        Summary::from_iter(self.p99s_us())
+    }
+
+    /// Max − min of the per-machine p99 (µs): the straggler gap.
+    pub fn p99_spread_us(&self) -> f64 {
+        let s = self.p99_summary();
+        if s.count() == 0 { 0.0 } else { s.max() - s.min() }
+    }
+
+    /// Synthesize a cluster-level [`WebRun`] so fleet cells slot into
+    /// the same tables as single-machine cells: tails come from the
+    /// *merged* recorders, counters sum, and machine-quality metrics
+    /// (GHz, IPC, shares) average over machines.
+    pub fn cluster_run(&self) -> WebRun {
+        let n = self.machines.len().max(1) as f64;
+        let secs = self.measure_secs.max(1e-9);
+        let mean = |f: &dyn Fn(&WebRun) -> f64| self.machines.iter().map(f).sum::<f64>() / n;
+        let sum = |f: &dyn Fn(&WebRun) -> f64| self.machines.iter().map(f).sum::<f64>();
+        let mut license_share = [0.0f64; 3];
+        for m in &self.machines {
+            for (acc, v) in license_share.iter_mut().zip(m.license_share) {
+                *acc += v / n;
+            }
+        }
+        let insns: f64 = self
+            .machines
+            .iter()
+            .map(|m| m.insns_per_req * m.completed as f64)
+            .sum();
+        WebRun {
+            cfg_name: format!(
+                "fleet({})/{}/{}",
+                self.machines.len(),
+                self.router,
+                self.machines.first().map(|m| m.cfg_name.as_str()).unwrap_or("?")
+            ),
+            throughput_rps: self.completed as f64 / secs,
+            avg_ghz: mean(&|m| m.avg_ghz),
+            ipc: mean(&|m| m.ipc),
+            insns_per_req: if self.completed > 0 { insns / self.completed as f64 } else { 0.0 },
+            tail: self.tail,
+            tenant_tails: self
+                .tenant_stats
+                .iter()
+                .map(|(name, s)| (name.clone(), s.summary()))
+                .collect(),
+            stats: self.stats.clone(),
+            tenant_stats: self.tenant_stats.iter().map(|(_, s)| s.clone()).collect(),
+            dropped: self.dropped,
+            type_changes_per_sec: sum(&|m| m.type_changes_per_sec),
+            migrations_per_sec: sum(&|m| m.migrations_per_sec),
+            cross_socket_migrations_per_sec: sum(&|m| m.cross_socket_migrations_per_sec),
+            throttle_ratio: mean(&|m| m.throttle_ratio),
+            license_share,
+            completed: self.completed,
+            final_avx_cores: self.machines.iter().map(|m| m.final_avx_cores).sum(),
+            adaptive_changes: self.machines.iter().map(|m| m.adaptive_changes).sum(),
+        }
+    }
+}
+
+/// Demultiplex the fleet arrival stream into per-machine traces.
+/// Exposed for tests; [`run_fleet`] is the normal entry point.
+pub fn route_stream(cfg: &FleetCfg) -> Vec<Vec<(Time, u32)>> {
+    let process = cfg
+        .cfg
+        .mode
+        .process()
+        .expect("validate() rejects closed-loop fleets");
+    let mut gen = ArrivalGen::new(process.clone(), cfg.cfg.seed ^ 0xDEAD);
+    let mut router: Router = cfg.router.build(cfg.machines);
+    let horizon = cfg.cfg.warmup + cfg.cfg.measure;
+    let mut traces: Vec<Vec<(Time, u32)>> = vec![Vec::new(); cfg.machines.max(1)];
+    let mut now = 0;
+    loop {
+        let (t, tenant) = gen.next_after(now);
+        if t > horizon {
+            break;
+        }
+        let avx = process.tenant_carries_avx(tenant as usize);
+        traces[router.route(t, avx)].push((t, tenant));
+        now = t;
+    }
+    traces
+}
+
+/// Run the fleet: demultiplex, simulate every machine across up to
+/// `threads` OS threads (byte-identical at any thread count — machines
+/// are seeded and traced independently of scheduling and collected by
+/// index), and merge the per-machine recorders into cluster aggregates.
+pub fn run_fleet(cfg: &FleetCfg, threads: usize) -> FleetRun {
+    cfg.validate().expect("invalid fleet configuration");
+    let traces = route_stream(cfg);
+    let arrivals_routed: Vec<u64> = traces.iter().map(|t| t.len() as u64).collect();
+
+    // Each trace is consumed exactly once, so hand ownership to the
+    // claiming worker through a take-once slot instead of cloning what
+    // can be millions of arrival entries per machine.
+    let jobs: Vec<(WebCfg, Mutex<Option<Vec<(Time, u32)>>>)> = traces
+        .into_iter()
+        .enumerate()
+        .map(|(i, trace)| {
+            let mut mcfg = cfg.cfg.clone();
+            mcfg.seed = cfg.machine_seed(i);
+            (mcfg, Mutex::new(Some(trace)))
+        })
+        .collect();
+
+    let n_threads = threads.max(1).min(jobs.len());
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<WebRun>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (mcfg, trace_slot) = &jobs[i];
+                let trace = trace_slot
+                    .lock()
+                    .expect("trace poisoned")
+                    .take()
+                    .expect("each machine's trace is claimed exactly once");
+                let run = run_webserver_trace(mcfg, trace);
+                *slots[i].lock().expect("slot poisoned") = Some(run);
+            });
+        }
+    });
+    let machines: Vec<WebRun> = slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .expect("slot poisoned")
+                .expect("every machine claimed and executed")
+        })
+        .collect();
+
+    // Cluster-wide aggregation: merge recorders, sum exact counters.
+    let mut stats = LatencyStats::new(cfg.cfg.slo);
+    let names: Vec<String> = machines
+        .first()
+        .map(|m| m.tenant_tails.iter().map(|(n, _)| n.clone()).collect())
+        .unwrap_or_default();
+    let mut tenant_stats: Vec<(String, LatencyStats)> = names
+        .into_iter()
+        .map(|n| (n, LatencyStats::new(cfg.cfg.slo)))
+        .collect();
+    let mut dropped = 0;
+    for m in &machines {
+        stats.merge(&m.stats);
+        for ((_, acc), ts) in tenant_stats.iter_mut().zip(&m.tenant_stats) {
+            acc.merge(ts);
+        }
+        dropped += m.dropped;
+    }
+    FleetRun {
+        router: cfg.router.label(),
+        arrivals_routed,
+        tail: stats.summary(),
+        completed: stats.completed(),
+        violations: stats.violations(),
+        stats,
+        tenant_stats,
+        machines,
+        dropped,
+        measure_secs: cfg.cfg.measure as f64 / SEC as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::PolicyKind;
+    use crate::sim::MS;
+    use crate::traffic::ArrivalProcess;
+    use crate::workload::client::LoadMode;
+    use crate::workload::crypto::Isa;
+
+    fn tiny_cfg() -> WebCfg {
+        let mut c = WebCfg::paper_default(Isa::Avx512, PolicyKind::Unmodified);
+        c.cores = 2;
+        c.workers = 4;
+        c.page_bytes = 8 * 1024;
+        c.warmup = 50 * MS;
+        c.measure = 150 * MS;
+        c.mode = LoadMode::OpenProcess {
+            process: ArrivalProcess::two_tenant(30_000.0, 0.25),
+        };
+        c
+    }
+
+    #[test]
+    fn route_stream_partitions_by_tenant() {
+        let fleet = FleetCfg::new(4, RouterSpec::AvxPartition { avx_machines: 1 }, tiny_cfg());
+        let traces = route_stream(&fleet);
+        assert_eq!(traces.len(), 4);
+        // The AVX tenant (index 1) lands only on the last machine.
+        for t in &traces[..3] {
+            assert!(t.iter().all(|&(_, tenant)| tenant == 0), "avx on a scalar machine");
+        }
+        assert!(traces[3].iter().all(|&(_, tenant)| tenant == 1));
+        assert!(!traces[3].is_empty(), "avx subset must receive work");
+        // Each trace is strictly increasing in time.
+        for t in &traces {
+            assert!(t.windows(2).all(|w| w[0].0 < w[1].0));
+        }
+    }
+
+    #[test]
+    fn round_robin_splits_evenly() {
+        let fleet = FleetCfg::new(3, RouterSpec::RoundRobin, tiny_cfg());
+        let traces = route_stream(&fleet);
+        let lens: Vec<usize> = traces.iter().map(|t| t.len()).collect();
+        let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+        assert!(max - min <= 1, "round robin must split evenly: {lens:?}");
+    }
+
+    #[test]
+    fn machine_zero_keeps_the_fleet_seed() {
+        let fleet = FleetCfg::new(3, RouterSpec::RoundRobin, tiny_cfg());
+        assert_eq!(fleet.machine_seed(0), fleet.cfg.seed);
+        assert_ne!(fleet.machine_seed(1), fleet.machine_seed(2));
+        assert_ne!(fleet.machine_seed(1), fleet.cfg.seed);
+    }
+
+    #[test]
+    fn fleet_aggregates_sum_machine_counters() {
+        let fleet = FleetCfg::new(2, RouterSpec::RoundRobin, tiny_cfg());
+        let run = run_fleet(&fleet, 2);
+        assert_eq!(run.machines.len(), 2);
+        let sum: u64 = run.machines.iter().map(|m| m.completed).sum();
+        assert_eq!(run.completed, sum);
+        assert_eq!(run.tail.completed, sum);
+        let viol: u64 = run.machines.iter().map(|m| m.stats.violations()).sum();
+        assert_eq!(run.violations, viol);
+        assert!(run.completed > 100, "fleet served {}", run.completed);
+        let cluster = run.cluster_run();
+        assert_eq!(cluster.completed, sum);
+        assert_eq!(cluster.tail.p99_us, run.tail.p99_us);
+    }
+}

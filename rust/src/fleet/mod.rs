@@ -1,0 +1,36 @@
+//! Fleet-scale cluster simulation: the paper's core specialization
+//! lifted one level up, from cores to machines.
+//!
+//! The paper confines AVX code to a subset of *cores* so only those
+//! cores' frequency drops. At datacenter scale the same variability
+//! becomes a fleet-wide straggler problem (Schuchart et al.: performance
+//! *variation* dominates once you aggregate over many nodes), and the
+//! policy question generalizes: route AVX-heavy request streams to a
+//! subset of *machines*, and the scalar majority of the fleet never
+//! sees a wide instruction — the router analogue of `with_avx()` plus
+//! `PolicyKind::CoreSpec`.
+//!
+//! * [`router`] — the pluggable front-end policies ([`RouterSpec`] /
+//!   [`Router`]): round-robin, least-outstanding (estimated-backlog
+//!   JSQ), and the headline AVX partition.
+//! * [`cluster`] — [`FleetCfg`] + [`run_fleet`]: demultiplex one seeded
+//!   arrival stream into per-machine traces, simulate every machine
+//!   independently (parallel across OS threads, byte-identical at any
+//!   thread count), and merge per-machine [`LatencyStats`] into
+//!   cluster-wide tails. A fleet of size 1 reproduces the standalone
+//!   web-server run bit for bit (`rust/tests/fleet.rs` pins both
+//!   properties).
+//!
+//! Consumers: the scenario matrix sweeps fleet-size × router as
+//! first-class axes, `metrics::fleet_report` renders per-machine and
+//! cluster rows, `avxfreq fleet` runs one fleet from flags or
+//! `configs/fleet_slo.toml`, and `repro fleetvar` restates Fig 5 as
+//! cross-machine p99 variance under round-robin vs AVX-aware routing.
+//!
+//! [`LatencyStats`]: crate::traffic::LatencyStats
+
+pub mod cluster;
+pub mod router;
+
+pub use cluster::{route_stream, run_fleet, FleetCfg, FleetRun};
+pub use router::{Router, RouterSpec};

@@ -1,0 +1,218 @@
+//! Cluster front-end request routers.
+//!
+//! A [`Router`] demultiplexes the fleet's shared arrival stream over N
+//! machines *before* any machine simulates — routing is a pure function
+//! of the arrival stream and the router's own bookkeeping, never of
+//! simulated machine state. That is what lets the fleet run every
+//! machine as an independent, embarrassingly-parallel simulation while
+//! staying byte-identical at any thread count (the same property the
+//! scenario matrix has). Real cluster front-ends are in the same boat:
+//! they act on arrival-side and stale/estimated signals, not on the
+//! ground-truth queue depth inside every server.
+
+use crate::sim::Time;
+
+/// Declarative router selection (the matrix/config-facing side of the
+/// fleet's routing axis); [`RouterSpec::build`] instantiates the
+/// stateful [`Router`] for a concrete fleet size.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RouterSpec {
+    /// Cycle through the machines in index order.
+    RoundRobin,
+    /// Send each arrival to the machine with the smallest estimated
+    /// backlog, modelled as a single server working off routed requests
+    /// at a nominal `service_est` nanoseconds each (join-the-shortest-
+    /// estimated-queue; ties go to the lowest index).
+    LeastOutstanding { service_est: Time },
+    /// The paper's `CoreSpec` lifted to datacenter scale: requests from
+    /// AVX-carrying tenants are pinned to the *last* `avx_machines`
+    /// machines (mirroring how `PolicyKind::CoreSpec` reserves the last
+    /// cores of a socket), round-robin within each subset. The scalar
+    /// majority of the fleet never receives a single wide instruction,
+    /// so — exactly like the paper's scalar cores — those machines keep
+    /// their full clock.
+    AvxPartition { avx_machines: usize },
+}
+
+impl RouterSpec {
+    /// Least-outstanding with the default 300 µs per-request service
+    /// estimate (the order of one paper-sized request).
+    pub fn least_outstanding() -> RouterSpec {
+        RouterSpec::LeastOutstanding { service_est: 300_000 }
+    }
+
+    /// Short label used in tables and cell identifiers.
+    pub fn label(&self) -> String {
+        match self {
+            RouterSpec::RoundRobin => "round-robin".to_string(),
+            RouterSpec::LeastOutstanding { .. } => "least-out".to_string(),
+            RouterSpec::AvxPartition { avx_machines } => format!("avx-part({avx_machines})"),
+        }
+    }
+
+    /// Parse a CLI/config router name; `avx_machines` parameterizes the
+    /// partition router.
+    pub fn parse(name: &str, avx_machines: usize) -> anyhow::Result<RouterSpec> {
+        Ok(match name {
+            "round-robin" | "rr" => RouterSpec::RoundRobin,
+            "least-outstanding" | "least-out" => RouterSpec::least_outstanding(),
+            "avx-partition" | "avx-part" => RouterSpec::AvxPartition { avx_machines },
+            other => anyhow::bail!(
+                "unknown router {other:?} (round-robin|least-outstanding|avx-partition)"
+            ),
+        })
+    }
+
+    /// Instantiate the stateful router for a fleet of `machines`.
+    pub fn build(&self, machines: usize) -> Router {
+        let n = machines.max(1);
+        let state = match *self {
+            RouterSpec::RoundRobin => RouterState::RoundRobin { next: 0 },
+            RouterSpec::LeastOutstanding { service_est } => RouterState::LeastOutstanding {
+                service_est: service_est.max(1),
+                next_free: vec![0; n],
+            },
+            RouterSpec::AvxPartition { avx_machines } => {
+                // Defensive clamp into [1, n-1] so both subsets exist on
+                // any fleet that can be partitioned at all; a fleet of 1
+                // routes everything to machine 0 regardless.
+                // `FleetCfg::validate` rejects out-of-range subsets
+                // before a fleet run ever gets here, so the clamp can
+                // only fire for hand-built routers (e.g. unit tests) —
+                // never silently behind a reported label.
+                let k = if n == 1 { 0 } else { avx_machines.clamp(1, n - 1) };
+                RouterState::AvxPartition { avx_machines: k, scalar_next: 0, avx_next: 0 }
+            }
+        };
+        Router { n, state }
+    }
+}
+
+/// Stateful per-run router: see [`RouterSpec`] for the policies.
+///
+/// The AVX-partition policy is the router analogue of the paper's core
+/// specialization — `with_avx()` tags a *thread* so the scheduler keeps
+/// wide instructions on dedicated cores; the AVX tenant flag tags a
+/// *request stream* so the front-end keeps wide instructions on
+/// dedicated machines. Both confine the frequency reduction to a known
+/// subset instead of letting it roam the whole resource pool.
+#[derive(Clone, Debug)]
+pub struct Router {
+    n: usize,
+    state: RouterState,
+}
+
+#[derive(Clone, Debug)]
+enum RouterState {
+    RoundRobin { next: usize },
+    LeastOutstanding { service_est: Time, next_free: Vec<Time> },
+    AvxPartition { avx_machines: usize, scalar_next: usize, avx_next: usize },
+}
+
+impl Router {
+    /// Fleet size this router was built for.
+    pub fn machines(&self) -> usize {
+        self.n
+    }
+
+    /// Route one arrival at time `at` (ns); `avx` is whether the
+    /// arrival's tenant carries AVX work. Returns a machine index in
+    /// `[0, machines)`.
+    pub fn route(&mut self, at: Time, avx: bool) -> usize {
+        let n = self.n;
+        match &mut self.state {
+            RouterState::RoundRobin { next } => {
+                let pick = *next;
+                *next = (*next + 1) % n;
+                pick
+            }
+            RouterState::LeastOutstanding { service_est, next_free } => {
+                let (pick, _) = next_free
+                    .iter()
+                    .copied()
+                    .enumerate()
+                    .min_by_key(|&(i, free)| (free.saturating_sub(at), i))
+                    .expect("fleet has at least one machine");
+                next_free[pick] = next_free[pick].max(at).saturating_add(*service_est);
+                pick
+            }
+            RouterState::AvxPartition { avx_machines, scalar_next, avx_next } => {
+                let k = *avx_machines;
+                if k == 0 {
+                    // Fleet of 1: no partition to apply.
+                    return 0;
+                }
+                if avx {
+                    let pick = n - k + *avx_next;
+                    *avx_next = (*avx_next + 1) % k;
+                    pick
+                } else {
+                    let pick = *scalar_next;
+                    *scalar_next = (*scalar_next + 1) % (n - k);
+                    pick
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = RouterSpec::RoundRobin.build(3);
+        let picks: Vec<usize> = (0..7).map(|i| r.route(i as Time, i % 2 == 0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn avx_partition_pins_avx_to_last_machines() {
+        let mut r = RouterSpec::AvxPartition { avx_machines: 2 }.build(5);
+        for i in 0..20 {
+            let m = r.route(i as Time, true);
+            assert!(m >= 3, "avx arrival routed to scalar machine {m}");
+        }
+        for i in 0..20 {
+            let m = r.route(i as Time, false);
+            assert!(m < 3, "scalar arrival routed to avx machine {m}");
+        }
+    }
+
+    #[test]
+    fn avx_partition_clamps_subset() {
+        // Oversized subset clamps so a scalar subset always exists.
+        let mut r = RouterSpec::AvxPartition { avx_machines: 9 }.build(3);
+        assert_eq!(r.route(0, false), 0);
+        assert!(r.route(1, true) >= 1);
+        // A fleet of 1 routes everything to machine 0.
+        let mut one = RouterSpec::AvxPartition { avx_machines: 2 }.build(1);
+        assert_eq!(one.route(0, true), 0);
+        assert_eq!(one.route(1, false), 0);
+    }
+
+    #[test]
+    fn least_outstanding_prefers_idle_machines() {
+        let mut r = RouterSpec::least_outstanding().build(2);
+        // Both idle at t=0: lowest index wins, then the other.
+        assert_eq!(r.route(0, false), 0);
+        assert_eq!(r.route(0, false), 1);
+        // Far in the future both backlogs have drained: index 0 again.
+        assert_eq!(r.route(10_000_000, false), 0);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(RouterSpec::parse("rr", 1).unwrap(), RouterSpec::RoundRobin);
+        assert_eq!(
+            RouterSpec::parse("avx-partition", 2).unwrap(),
+            RouterSpec::AvxPartition { avx_machines: 2 }
+        );
+        assert!(matches!(
+            RouterSpec::parse("least-outstanding", 1).unwrap(),
+            RouterSpec::LeastOutstanding { .. }
+        ));
+        assert!(RouterSpec::parse("random", 1).is_err());
+    }
+}

@@ -15,8 +15,13 @@
 //!   SLO-violation fraction).
 //! * [`workload`] — nginx-like web server, wrk2-like client, crypto cost
 //!   profiles, Fig-7 microbenchmark.
+//! * [`fleet`] — cluster simulation: N machines behind a pluggable
+//!   request router (round-robin, least-outstanding, AVX partition) with
+//!   cross-machine latency aggregation — core specialization at
+//!   datacenter scale.
 //! * [`scenario`] — declarative scenario matrices (topology × policy ×
-//!   workload × ISA) executed across OS threads, deterministically.
+//!   workload × ISA × load × arrival × fleet-size × router) executed
+//!   across OS threads, deterministically.
 //! * [`analysis`] — static AVX-ratio analysis, THROTTLE flame graphs, LBR.
 //! * [`runtime`] — PJRT client executing the AOT ChaCha20-Poly1305 kernels.
 //! * [`metrics`] — run-level reporting and the matrix comparison table.
@@ -34,6 +39,7 @@ pub mod cpu;
 pub mod sched;
 pub mod traffic;
 pub mod workload;
+pub mod fleet;
 pub mod scenario;
 pub mod analysis;
 pub mod runtime;

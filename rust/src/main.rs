@@ -67,10 +67,13 @@ usage:
               [--rate R] [--no-compress] [--fault-migrate] [--seconds S] [--seed N]
   avxfreq matrix [--quick] [--seed N] [--threads T] [--full-isa]
   avxfreq traffic [--quick] [--seed N] [--threads T] [--loads 0.6,0.85,1.1]
-                  [--arrivals poisson,bursty,diurnal,mix] [--slo-ms 5]
+                  [--arrivals poisson,bursty,diurnal,mix,bursty-mix] [--slo-ms 5]
+  avxfreq fleet [--config configs/fleet_slo.toml] [--machines N]
+                [--router round-robin|least-outstanding|avx-partition]
+                [--avx-machines K] [--rate R] [--quick] [--seed N] [--threads T]
   avxfreq serve [--artifacts DIR] [--port 8443]
   avxfreq calibrate [--artifacts DIR]
-experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fig6 ipc fig7 cryptobench ablations";
+experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar fig6 ipc fig7 cryptobench ablations";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -81,6 +84,7 @@ fn main() -> anyhow::Result<()> {
         Some("sim") => cmd_sim(&args),
         Some("matrix") => cmd_matrix(&args),
         Some("traffic") => cmd_traffic(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("serve") => avxfreq::runtime::server::cmd_serve(&args),
         Some("calibrate") => avxfreq::runtime::calibrate::cmd_calibrate(&args),
         // Bare experiment id (`avxfreq fig5`) = `avxfreq repro fig5`.
@@ -311,7 +315,10 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
                 "bursty" => ArrivalSpec::bursty_default(),
                 "diurnal" => ArrivalSpec::diurnal_default(),
                 "mix" => ArrivalSpec::TenantMix { avx_share: 0.3 },
-                other => anyhow::bail!("--arrivals {other}: poisson|bursty|diurnal|mix"),
+                "bursty-mix" => ArrivalSpec::bursty_mix_default(),
+                other => {
+                    anyhow::bail!("--arrivals {other}: poisson|bursty|diurnal|mix|bursty-mix")
+                }
             });
         }
         m.arrivals = arrivals;
@@ -335,6 +342,128 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
         path.display(),
         tail_path.display(),
         result.cells.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// `avxfreq fleet` — one cluster simulation: N machines behind a
+/// request router, per-machine + cluster tail tables. Defaults to the
+/// fleetvar scenario (bursty multi-tenant mix on uncompressed pages);
+/// `--config` (e.g. `configs/fleet_slo.toml`) replaces the whole
+/// template, flags override on top.
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    use avxfreq::fleet::{run_fleet, FleetCfg, FleetRun, RouterSpec};
+    let quick = args.flag("quick");
+    let seed = args.get_parse::<u64>("seed", 0x5EED);
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = args.get_parse::<usize>("threads", default_threads).max(1);
+
+    let mut fleet = if let Some(path) = args.get("config") {
+        let conf = avxfreq::util::config::Config::load(path)?;
+        let mut f = FleetCfg::from_config(&conf)?;
+        if args.get("seed").is_some() {
+            f.cfg.seed = seed;
+        }
+        if quick {
+            // --quick shortens a config-loaded scenario too.
+            avxfreq::repro::fleetvar::apply_quick(&mut f.cfg);
+        }
+        f
+    } else {
+        avxfreq::repro::fleetvar::fleet_cfg(RouterSpec::RoundRobin, quick, seed)
+    };
+    if let Some(n) = args.get("machines") {
+        fleet.machines = n.parse::<usize>()?.max(1);
+    }
+    // --avx-machines composes with whichever router is in effect: it
+    // defaults to the config's subset size, parameterizes a --router
+    // override, and resizes an already-selected partition router on its
+    // own (anything else would silently clobber the config value).
+    let avx_default = match fleet.router {
+        RouterSpec::AvxPartition { avx_machines } => avx_machines,
+        _ => 1,
+    };
+    let avx_machines = args.get_parse::<usize>("avx-machines", avx_default);
+    if let Some(name) = args.get("router") {
+        fleet.router = RouterSpec::parse(name, avx_machines)?;
+    } else if let RouterSpec::AvxPartition { .. } = fleet.router {
+        // Resize an already-selected partition router in place.
+        fleet.router = RouterSpec::AvxPartition { avx_machines };
+    }
+    // An explicit subset size must land on a partition router, whatever
+    // combination of config and flags produced the final selection —
+    // never a silent drop, never a silent router swap.
+    anyhow::ensure!(
+        args.get("avx-machines").is_none()
+            || matches!(fleet.router, RouterSpec::AvxPartition { .. }),
+        "--avx-machines only parameterizes the avx-partition router (selected: {})",
+        fleet.router.label()
+    );
+    if let Some(rate) = args.get("rate") {
+        let rate: f64 = rate.parse()?;
+        anyhow::ensure!(
+            rate.is_finite() && rate > 0.0,
+            "--rate must be a finite positive fleet-total req/s, got {rate}"
+        );
+        // Rescale the scenario's arrival process instead of replacing
+        // it: a structured mix must keep its tenants and burst shape,
+        // or the avx-partition router would suddenly see a single
+        // all-AVX stream.
+        let process = fleet
+            .cfg
+            .mode
+            .process()
+            .ok_or_else(|| anyhow::anyhow!("--rate requires an open-loop fleet scenario"))?;
+        fleet.cfg.mode = avxfreq::workload::client::LoadMode::OpenProcess {
+            process: process.with_mean_rate(rate),
+        };
+    }
+    fleet.validate()?;
+
+    eprintln!(
+        "[avxfreq] fleet: {} machines × {} cores behind {} across up to {} threads (seed {:#x})…",
+        fleet.machines,
+        fleet.cfg.cores,
+        fleet.router.label(),
+        threads.min(fleet.machines),
+        // The effective seed (possibly from the config file), not the
+        // CLI default — this line is what users copy to reproduce runs.
+        fleet.cfg.seed
+    );
+    let t0 = std::time::Instant::now();
+    let run = run_fleet(&fleet, threads);
+    let pairs: Vec<(&str, &FleetRun)> = vec![("fleet", &run)];
+    let table = metrics::fleet_report(&pairs);
+    print!("{}", table.render());
+    let s = run.p99_summary();
+    println!(
+        "\ncluster: {} done, {} dropped, p99 {:.0} µs, SLO ≤ {:.1} ms violated {:.2}% \
+         ({} exact); cross-machine p99 σ {:.1} µs, spread {:.1} µs",
+        run.completed,
+        run.dropped,
+        run.tail.p99_us,
+        run.tail.slo_us / 1_000.0,
+        run.tail.slo_violation_frac * 100.0,
+        run.violations,
+        s.stddev(),
+        run.p99_spread_us(),
+    );
+    for (tenant, stats) in &run.tenant_stats {
+        let t = stats.summary();
+        println!(
+            "  tenant {tenant:<8} p50 {:.0} µs  p99 {:.0} µs  slo {:.2}%  ({} done)",
+            t.p50_us,
+            t.p99_us,
+            t.slo_violation_frac * 100.0,
+            t.completed
+        );
+    }
+    let path = table.save_csv("fleet")?;
+    eprintln!(
+        "[avxfreq] wrote {} ({} machines in {:.1}s wallclock)",
+        path.display(),
+        run.machines.len(),
         t0.elapsed().as_secs_f64()
     );
     Ok(())

@@ -3,6 +3,7 @@
 //! scenario-matrix comparison table ([`matrix_report`]).
 
 use crate::cpu::PerfCounters;
+use crate::fleet::FleetRun;
 use crate::scenario::CellResult;
 use crate::sched::machine::Machine;
 use crate::util::table::{fmt_f, Table};
@@ -151,6 +152,60 @@ pub fn tail_report(cells: &[CellResult]) -> Table {
                 fmt_f(tail.slo_violation_frac * 100.0, 1),
             ]);
         }
+    }
+    t
+}
+
+/// Fleet table: one row per machine of every fleet, then a `cluster`
+/// row with the merged tail and the cross-machine p99 dispersion (σ and
+/// max−min spread — the fleet restatement of the paper's variability
+/// claim). `fleets` pairs a label (e.g. the matrix cell index or a
+/// router name) with each run. Fixed-precision formatting keeps the
+/// bytes stable for the golden-file tests and the cross-thread
+/// determinism property.
+pub fn fleet_report(fleets: &[(&str, &FleetRun)]) -> Table {
+    let mut t = Table::new(
+        "Fleet — per-machine and cluster tails",
+        &[
+            "fleet", "router", "n", "machine", "arrivals", "done", "p50 µs", "p99 µs",
+            "p999 µs", "slo %", "drops", "p99 σ µs", "p99 spread µs",
+        ],
+    );
+    for (label, f) in fleets {
+        let n = f.machines.len();
+        for (i, m) in f.machines.iter().enumerate() {
+            t.row(&[
+                label.to_string(),
+                f.router.clone(),
+                n.to_string(),
+                format!("m{i}"),
+                f.arrivals_routed.get(i).copied().unwrap_or(0).to_string(),
+                m.tail.completed.to_string(),
+                fmt_f(m.tail.p50_us, 0),
+                fmt_f(m.tail.p99_us, 0),
+                fmt_f(m.tail.p999_us, 0),
+                fmt_f(m.tail.slo_violation_frac * 100.0, 1),
+                m.dropped.to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ]);
+        }
+        let s = f.p99_summary();
+        t.row(&[
+            label.to_string(),
+            f.router.clone(),
+            n.to_string(),
+            "cluster".to_string(),
+            f.arrivals_routed.iter().sum::<u64>().to_string(),
+            f.completed.to_string(),
+            fmt_f(f.tail.p50_us, 0),
+            fmt_f(f.tail.p99_us, 0),
+            fmt_f(f.tail.p999_us, 0),
+            fmt_f(f.tail.slo_violation_frac * 100.0, 1),
+            f.dropped.to_string(),
+            fmt_f(s.stddev(), 1),
+            fmt_f(f.p99_spread_us(), 1),
+        ]);
     }
     t
 }

@@ -45,9 +45,11 @@
 //! ```
 
 use crate::cpu::Topology;
+use crate::fleet::{run_fleet, FleetCfg, FleetRun, RouterSpec};
 use crate::sched::PolicyKind;
 use crate::sim::{Time, MS, SEC};
 use crate::traffic::ArrivalProcess;
+use crate::util::mix64;
 use crate::util::table::Table;
 use crate::workload::client::{LoadMode, DEFAULT_SLO};
 use crate::workload::crypto::Isa;
@@ -201,6 +203,11 @@ pub enum ArrivalSpec {
     /// Two-tenant mix: an AVX tenant carrying `avx_share` of the
     /// traffic, a scalar (SSE4, unannotated) tenant with the rest.
     TenantMix { avx_share: f64 },
+    /// The bursty multi-tenant mix: both tenants of a
+    /// [`ArrivalSpec::TenantMix`] burst *in phase* (a flash crowd with a
+    /// fixed AVX/scalar composition; see
+    /// [`ArrivalProcess::bursty_two_tenant`]).
+    BurstyMix { avx_share: f64, burst_factor: f64, duty: f64, period: Time },
 }
 
 impl ArrivalSpec {
@@ -214,6 +221,13 @@ impl ArrivalSpec {
         ArrivalSpec::Diurnal { swing: 0.6, period: 400 * MS }
     }
 
+    /// Default bursty multi-tenant mix: 30% AVX share, both tenants
+    /// bursting in phase at 1.5× for 30% of a 90 ms period (the fleet
+    /// layer's flash-crowd scenario).
+    pub fn bursty_mix_default() -> Self {
+        ArrivalSpec::BurstyMix { avx_share: 0.3, burst_factor: 1.5, duty: 0.3, period: 90 * MS }
+    }
+
     /// Table label.
     pub fn label(&self) -> String {
         match self {
@@ -221,6 +235,7 @@ impl ArrivalSpec {
             ArrivalSpec::Bursty { .. } => "bursty".to_string(),
             ArrivalSpec::Diurnal { .. } => "diurnal".to_string(),
             ArrivalSpec::TenantMix { .. } => "mix".to_string(),
+            ArrivalSpec::BurstyMix { .. } => "bursty-mix".to_string(),
         }
     }
 
@@ -236,6 +251,9 @@ impl ArrivalSpec {
             }
             ArrivalSpec::TenantMix { avx_share } => {
                 ArrivalProcess::two_tenant(rate, avx_share)
+            }
+            ArrivalSpec::BurstyMix { avx_share, burst_factor, duty, period } => {
+                ArrivalProcess::bursty_two_tenant(rate, avx_share, burst_factor, duty, period)
             }
         }
     }
@@ -256,15 +274,29 @@ pub struct Scenario {
     pub load: f64,
     /// Arrival-process label (see [`ArrivalSpec::label`]).
     pub arrival: String,
+    /// Fleet size: number of machines behind the front-end (1 = the
+    /// classic single-machine cell, run without the fleet layer).
+    pub fleet: usize,
+    /// Router demultiplexing the cell's arrival stream over the fleet.
+    pub router: RouterSpec,
     /// Per-cell seed: a pure function of the base seed and `index`.
     pub seed: u64,
     pub cfg: WebCfg,
 }
 
 impl Scenario {
+    /// Whether this cell runs through the fleet layer ([`run_fleet`])
+    /// rather than the classic single-machine simulator. The single
+    /// source of truth for both [`ScenarioMatrix::run`]'s dispatch and
+    /// the [`Scenario::label`] suffix, so cells on different code paths
+    /// can never share a label.
+    pub fn uses_fleet_layer(&self) -> bool {
+        self.fleet > 1 || self.router != RouterSpec::RoundRobin
+    }
+
     /// One-line identifier for notes and logs.
     pub fn label(&self) -> String {
-        format!(
+        let mut s = format!(
             "{}/{}/{}/{}/{}@{:.2}",
             self.topology,
             self.isa.name(),
@@ -272,15 +304,23 @@ impl Scenario {
             self.workload,
             self.arrival,
             self.load,
-        )
+        );
+        if self.uses_fleet_layer() {
+            s.push_str(&format!("/x{}/{}", self.fleet, self.router.label()));
+        }
+        s
     }
 }
 
-/// Result of one executed cell.
+/// Result of one executed cell. Fleet cells (`scenario.fleet > 1` or a
+/// non-default router) carry the full [`FleetRun`]; `run` is then the
+/// synthesized cluster-level [`WebRun`] so every report renders
+/// uniformly.
 #[derive(Clone, Debug)]
 pub struct CellResult {
     pub scenario: Scenario,
     pub run: WebRun,
+    pub fleet: Option<FleetRun>,
 }
 
 /// All cells of an executed matrix, in expansion order.
@@ -299,6 +339,25 @@ impl MatrixResult {
     /// [`crate::metrics::tail_report`]).
     pub fn tail_table(&self) -> Table {
         crate::metrics::tail_report(&self.cells)
+    }
+
+    /// Per-machine + cluster rows for every fleet cell (see
+    /// [`crate::metrics::fleet_report`]); empty-bodied table when the
+    /// matrix has no fleet cells.
+    pub fn fleet_table(&self) -> Table {
+        let labeled: Vec<(String, &FleetRun)> = self
+            .cells
+            .iter()
+            .filter_map(|c| c.fleet.as_ref().map(|f| (c.scenario.index.to_string(), f)))
+            .collect();
+        let pairs: Vec<(&str, &FleetRun)> =
+            labeled.iter().map(|(s, f)| (s.as_str(), *f)).collect();
+        crate::metrics::fleet_report(&pairs)
+    }
+
+    /// Render the fleet table as aligned text.
+    pub fn render_fleet(&self) -> String {
+        self.fleet_table().render()
     }
 
     /// Render the comparison table as aligned text.
@@ -349,15 +408,6 @@ impl MatrixResult {
     }
 }
 
-/// SplitMix64 finalizer: decorrelates per-cell seeds derived from
-/// `(base_seed, index)`.
-fn mix64(mut z: u64) -> u64 {
-    z = z.wrapping_add(0x9E3779B97F4A7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-    z ^ (z >> 31)
-}
-
 /// Declarative cartesian sweep over topology × policy × workload × ISA.
 ///
 /// The ISA axis is the AVX-ratio axis: `sse4` requests execute no wide
@@ -374,6 +424,13 @@ pub struct ScenarioMatrix {
     pub loads: Vec<f64>,
     /// Arrival processes to sweep (default `[Poisson]`).
     pub arrivals: Vec<ArrivalSpec>,
+    /// Fleet sizes to sweep (default `[1]`: classic single-machine
+    /// cells). A cell's offered rate scales with its fleet size so
+    /// per-machine pressure stays comparable across the axis.
+    pub fleet_sizes: Vec<usize>,
+    /// Routers to sweep (default `[RoundRobin]`). Size-1 round-robin
+    /// cells bypass the fleet layer entirely and run exactly as before.
+    pub routers: Vec<RouterSpec>,
     /// Latency SLO threshold applied to every cell.
     pub slo: Time,
     /// Base seed; each cell derives `mix64(base_seed ^ f(index))`.
@@ -394,6 +451,8 @@ impl ScenarioMatrix {
             isas: Vec::new(),
             loads: vec![1.0],
             arrivals: vec![ArrivalSpec::Poisson],
+            fleet_sizes: vec![1],
+            routers: vec![RouterSpec::RoundRobin],
             slo: DEFAULT_SLO,
             base_seed,
             warmup: 300 * MS,
@@ -453,6 +512,8 @@ impl ScenarioMatrix {
             * self.isas.len()
             * self.loads.len()
             * self.arrivals.len()
+            * self.fleet_sizes.len()
+            * self.routers.len()
     }
 
     /// True when any axis is empty.
@@ -460,8 +521,11 @@ impl ScenarioMatrix {
         self.len() == 0
     }
 
-    /// Expand the cartesian product, topology-major (load level and
-    /// arrival process are the innermost axes), into runnable cells.
+    /// Expand the cartesian product, topology-major (load level, arrival
+    /// process, fleet size, and router are the innermost axes, in that
+    /// order — with the default `[1] × [RoundRobin]` fleet axes the
+    /// expansion is exactly the pre-fleet cell order), into runnable
+    /// cells.
     pub fn cells(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         for topo in &self.topologies {
@@ -470,49 +534,64 @@ impl ScenarioMatrix {
                     for &isa in &self.isas {
                         for &load in &self.loads {
                             for arrival in &self.arrivals {
-                                let index = out.len();
-                                let seed = mix64(
-                                    self.base_seed ^ (index as u64).wrapping_mul(0x9E37_79B9),
-                                );
-                                // Derive the machine shape through the
-                                // Topology model so the matrix and the
-                                // cpu layer agree on one socket
-                                // partition.
-                                let t = topo.topology();
-                                let mut cfg =
-                                    WebCfg::paper_default(isa, policy.instantiate(topo));
-                                cfg.cores = t.n_server_cores();
-                                cfg.sockets = t.n_sockets();
-                                cfg.workers = t.n_server_cores() * 2;
-                                cfg.compress = workload.compress;
-                                cfg.page_bytes = workload.page_kib * 1024;
-                                let rate =
-                                    workload.rate_per_core * topo.cores as f64 * load;
-                                cfg.mode = match arrival {
-                                    // Poisson keeps the sugared form so a
-                                    // single-arrival matrix is exactly the
-                                    // pre-traffic configuration.
-                                    ArrivalSpec::Poisson => LoadMode::Open { rate },
-                                    spec => LoadMode::OpenProcess {
-                                        process: spec.instantiate(rate),
-                                    },
-                                };
-                                cfg.slo = self.slo;
-                                cfg.seed = seed;
-                                cfg.warmup = self.warmup;
-                                cfg.measure = self.measure;
-                                out.push(Scenario {
-                                    index,
-                                    topology: topo.name.clone(),
-                                    sockets: topo.sockets,
-                                    policy: policy.label(),
-                                    workload: workload.name.clone(),
-                                    isa,
-                                    load,
-                                    arrival: arrival.label(),
-                                    seed,
-                                    cfg,
-                                });
+                                for &fleet in &self.fleet_sizes {
+                                    for &router in &self.routers {
+                                        let index = out.len();
+                                        let seed = mix64(
+                                            self.base_seed
+                                                ^ (index as u64).wrapping_mul(0x9E37_79B9),
+                                        );
+                                        // Derive the machine shape through
+                                        // the Topology model so the matrix
+                                        // and the cpu layer agree on one
+                                        // socket partition.
+                                        let t = topo.topology();
+                                        let mut cfg = WebCfg::paper_default(
+                                            isa,
+                                            policy.instantiate(topo),
+                                        );
+                                        cfg.cores = t.n_server_cores();
+                                        cfg.sockets = t.n_sockets();
+                                        cfg.workers = t.n_server_cores() * 2;
+                                        cfg.compress = workload.compress;
+                                        cfg.page_bytes = workload.page_kib * 1024;
+                                        // Fleet-total offered rate: equal
+                                        // per-machine pressure across the
+                                        // fleet-size axis.
+                                        let rate = workload.rate_per_core
+                                            * topo.cores as f64
+                                            * load
+                                            * fleet.max(1) as f64;
+                                        cfg.mode = match arrival {
+                                            // Poisson keeps the sugared form
+                                            // so a single-arrival matrix is
+                                            // exactly the pre-traffic
+                                            // configuration.
+                                            ArrivalSpec::Poisson => LoadMode::Open { rate },
+                                            spec => LoadMode::OpenProcess {
+                                                process: spec.instantiate(rate),
+                                            },
+                                        };
+                                        cfg.slo = self.slo;
+                                        cfg.seed = seed;
+                                        cfg.warmup = self.warmup;
+                                        cfg.measure = self.measure;
+                                        out.push(Scenario {
+                                            index,
+                                            topology: topo.name.clone(),
+                                            sockets: topo.sockets,
+                                            policy: policy.label(),
+                                            workload: workload.name.clone(),
+                                            isa,
+                                            load,
+                                            arrival: arrival.label(),
+                                            fleet: fleet.max(1),
+                                            router,
+                                            seed,
+                                            cfg,
+                                        });
+                                    }
+                                }
                             }
                         }
                     }
@@ -527,11 +606,18 @@ impl ScenarioMatrix {
     /// unclaimed cell (work stealing over an atomic cursor), so uneven
     /// cell durations cannot skew the result: outputs are keyed by cell
     /// index and each cell is seeded independently of scheduling.
+    ///
+    /// Size-1 round-robin cells run the single-machine simulator
+    /// directly (bit-identical to the pre-fleet matrix); any other
+    /// fleet/router combination runs [`run_fleet`] — serially within the
+    /// cell, since the cells themselves already saturate the thread
+    /// pool — and reports the cluster-level [`WebRun`] plus the full
+    /// [`FleetRun`].
     pub fn run(&self, threads: usize) -> MatrixResult {
         let cells = self.cells();
         let n_threads = threads.max(1).min(cells.len().max(1));
         let cursor = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<WebRun>>> =
+        let slots: Vec<Mutex<Option<(WebRun, Option<FleetRun>)>>> =
             cells.iter().map(|_| Mutex::new(None)).collect();
         std::thread::scope(|scope| {
             for _ in 0..n_threads {
@@ -540,20 +626,27 @@ impl ScenarioMatrix {
                     if i >= cells.len() {
                         break;
                     }
-                    let run = run_webserver(&cells[i].cfg);
-                    *slots[i].lock().expect("slot poisoned") = Some(run);
+                    let s = &cells[i];
+                    let result = if !s.uses_fleet_layer() {
+                        (run_webserver(&s.cfg), None)
+                    } else {
+                        let fcfg = FleetCfg::new(s.fleet, s.router, s.cfg.clone());
+                        let f = run_fleet(&fcfg, 1);
+                        (f.cluster_run(), Some(f))
+                    };
+                    *slots[i].lock().expect("slot poisoned") = Some(result);
                 });
             }
         });
         let cells = cells
             .into_iter()
             .zip(slots)
-            .map(|(scenario, slot)| CellResult {
-                run: slot
+            .map(|(scenario, slot)| {
+                let (run, fleet) = slot
                     .into_inner()
                     .expect("slot poisoned")
-                    .expect("every cell claimed and executed"),
-                scenario,
+                    .expect("every cell claimed and executed");
+                CellResult { scenario, run, fleet }
             })
             .collect();
         MatrixResult { cells }
@@ -630,6 +723,32 @@ mod tests {
         assert_eq!(cells.len(), m.len());
         assert!(cells.iter().any(|c| c.policy.contains("core-spec")));
         assert!(cells.iter().any(|c| c.arrival == "bursty"));
+    }
+
+    #[test]
+    fn fleet_axes_expand_innermost_and_scale_rate() {
+        let mut m = ScenarioMatrix::default_sweep(true, 7);
+        m.topologies.truncate(1);
+        m.policies.truncate(1);
+        m.isas.truncate(1);
+        m.fleet_sizes = vec![1, 4];
+        m.routers = vec![RouterSpec::RoundRobin, RouterSpec::AvxPartition { avx_machines: 1 }];
+        let cells = m.cells();
+        assert_eq!(cells.len(), 4, "1 base cell × 2 fleet sizes × 2 routers");
+        assert_eq!(cells[0].fleet, 1);
+        assert_eq!(cells[1].router, RouterSpec::AvxPartition { avx_machines: 1 });
+        assert_eq!(cells[2].fleet, 4);
+        assert!(cells[3].label().contains("x4/avx-part(1)"));
+        // Offered rate scales with fleet size: equal per-machine pressure.
+        let rate = |c: &Scenario| match &c.cfg.mode {
+            LoadMode::Open { rate } => *rate,
+            _ => panic!("open-loop expected"),
+        };
+        assert!((rate(&cells[2]) - 4.0 * rate(&cells[0])).abs() < 1e-6);
+        // Default axes leave the classic expansion untouched.
+        let classic = ScenarioMatrix::default_sweep(true, 7);
+        assert!(classic.cells().iter().all(|c| c.fleet == 1));
+        assert_eq!(classic.cells().len(), 8);
     }
 
     #[test]

@@ -14,6 +14,19 @@
 use crate::sim::Time;
 use crate::util::Rng;
 
+/// Mean-preserving on/off burst modulation of one tenant's stream:
+/// `burst_rate` for `on` nanoseconds, then `base_rate` for `off`
+/// nanoseconds, repeating from simulated time 0. Tenants sharing the
+/// same phase (`on`/`off`) burst *together* — a flash crowd with a
+/// fixed traffic composition, the fleet layer's straggler generator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantBurst {
+    pub base_rate: f64,
+    pub burst_rate: f64,
+    pub on: Time,
+    pub off: Time,
+}
+
 /// One tenant of a multi-tenant mix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tenant {
@@ -25,6 +38,41 @@ pub struct Tenant {
     /// the web server gives non-AVX tenants an SSE4 request pipeline
     /// with no `with_avx()` annotations.
     pub avx: bool,
+    /// Optional burst modulation of this tenant's stream (`None` = a
+    /// homogeneous Poisson stream at `rate`). When set, the burst shape
+    /// is expected to preserve `rate` as the long-run mean (see
+    /// [`ArrivalProcess::bursty_two_tenant`]).
+    pub burst: Option<TenantBurst>,
+}
+
+impl Tenant {
+    /// A homogeneous Poisson tenant.
+    pub fn steady(name: &str, rate: f64, avx: bool) -> Tenant {
+        Tenant { name: name.to_string(), rate, avx, burst: None }
+    }
+
+    /// Peak instantaneous rate (the per-tenant thinning envelope).
+    pub fn peak_rate(&self) -> f64 {
+        match &self.burst {
+            Some(b) => b.base_rate.max(b.burst_rate),
+            None => self.rate,
+        }
+    }
+
+    /// Instantaneous rate at simulated time `t`.
+    pub fn rate_at(&self, t: Time) -> f64 {
+        match &self.burst {
+            Some(b) => {
+                let cycle = (b.on + b.off).max(1);
+                if t % cycle < b.on {
+                    b.burst_rate
+                } else {
+                    b.base_rate
+                }
+            }
+            None => self.rate,
+        }
+    }
 }
 
 /// An open-loop arrival process (requests/second over simulated time).
@@ -53,7 +101,13 @@ impl ArrivalProcess {
             ArrivalProcess::Diurnal { .. } => "diurnal".to_string(),
             // One vocabulary across CLI (`--arrivals mix`), config
             // (`load.process = "mix"`), and both label functions.
-            ArrivalProcess::MultiTenant { .. } => "mix".to_string(),
+            ArrivalProcess::MultiTenant { tenants } => {
+                if tenants.iter().any(|t| t.burst.is_some()) {
+                    "bursty-mix".to_string()
+                } else {
+                    "mix".to_string()
+                }
+            }
         }
     }
 
@@ -76,7 +130,9 @@ impl ArrivalProcess {
             ArrivalProcess::Poisson { rate } => *rate,
             ArrivalProcess::Bursty { base_rate, burst_rate, .. } => base_rate.max(*burst_rate),
             ArrivalProcess::Diurnal { mean_rate, swing, .. } => mean_rate * (1.0 + swing),
-            ArrivalProcess::MultiTenant { tenants } => tenants.iter().map(|t| t.rate).sum(),
+            ArrivalProcess::MultiTenant { tenants } => {
+                tenants.iter().map(|t| t.peak_rate()).sum()
+            }
         }
     }
 
@@ -97,7 +153,9 @@ impl ArrivalProcess {
                 let phase = (t % period) as f64 / period as f64;
                 mean_rate * (1.0 + swing * (2.0 * std::f64::consts::PI * phase).sin())
             }
-            ArrivalProcess::MultiTenant { tenants } => tenants.iter().map(|t| t.rate).sum(),
+            ArrivalProcess::MultiTenant { tenants } => {
+                tenants.iter().map(|s| s.rate_at(t)).sum()
+            }
         }
     }
 
@@ -130,6 +188,51 @@ impl ArrivalProcess {
         }
     }
 
+    /// The same process shape rescaled to a new long-run mean rate:
+    /// every constituent rate (tenant means, burst/base levels, the
+    /// diurnal mean) is multiplied by `rate / mean_rate()`, preserving
+    /// burst factors, duty cycles, phases, and tenant shares. Lets a
+    /// CLI `--rate` override change the offered load without silently
+    /// replacing a structured process with plain Poisson. Returns the
+    /// process unchanged if its current mean is not positive.
+    pub fn with_mean_rate(&self, rate: f64) -> ArrivalProcess {
+        let mean = self.mean_rate();
+        if mean <= 0.0 {
+            return self.clone();
+        }
+        let k = rate / mean;
+        match self {
+            ArrivalProcess::Poisson { .. } => ArrivalProcess::Poisson { rate },
+            ArrivalProcess::Bursty { base_rate, burst_rate, on, off } => {
+                ArrivalProcess::Bursty {
+                    base_rate: base_rate * k,
+                    burst_rate: burst_rate * k,
+                    on: *on,
+                    off: *off,
+                }
+            }
+            ArrivalProcess::Diurnal { swing, period, .. } => {
+                ArrivalProcess::Diurnal { mean_rate: rate, swing: *swing, period: *period }
+            }
+            ArrivalProcess::MultiTenant { tenants } => ArrivalProcess::MultiTenant {
+                tenants: tenants
+                    .iter()
+                    .map(|t| Tenant {
+                        name: t.name.clone(),
+                        rate: t.rate * k,
+                        avx: t.avx,
+                        burst: t.burst.map(|b| TenantBurst {
+                            base_rate: b.base_rate * k,
+                            burst_rate: b.burst_rate * k,
+                            on: b.on,
+                            off: b.off,
+                        }),
+                    })
+                    .collect(),
+            },
+        }
+    }
+
     /// Mean-preserving bursty process: bursts at `burst_factor × rate`
     /// for a `duty` fraction of each `period`, with the base rate chosen
     /// so the long-run mean stays `rate` (clamped at 0 when the bursts
@@ -149,8 +252,47 @@ impl ArrivalProcess {
         let share = avx_share.clamp(0.0, 1.0);
         ArrivalProcess::MultiTenant {
             tenants: vec![
-                Tenant { name: "scalar".to_string(), rate: rate * (1.0 - share), avx: false },
-                Tenant { name: "avx".to_string(), rate: rate * share, avx: true },
+                Tenant::steady("scalar", rate * (1.0 - share), false),
+                Tenant::steady("avx", rate * share, true),
+            ],
+        }
+    }
+
+    /// The bursty multi-tenant mix: [`ArrivalProcess::two_tenant`] where
+    /// *both* tenants burst **in phase** — `burst_factor ×` their mean
+    /// rate for a `duty` fraction of each `period`, base rate chosen so
+    /// each tenant's long-run mean is preserved (a flash crowd whose
+    /// AVX/scalar composition stays fixed). This is the fleet layer's
+    /// headline scenario: correlated surges hit every machine under
+    /// round-robin routing, while an AVX-aware router keeps the scalar
+    /// machines' surges free of the frequency drag.
+    ///
+    /// Panics (like [`ArrivalProcess::bursty_mean`] clamps) are avoided:
+    /// `burst_factor × duty > 1` clamps the base rate at 0, so callers
+    /// that care about mean preservation must validate the product ≤ 1
+    /// (the config layer does).
+    pub fn bursty_two_tenant(
+        rate: f64,
+        avx_share: f64,
+        burst_factor: f64,
+        duty: f64,
+        period: Time,
+    ) -> ArrivalProcess {
+        let share = avx_share.clamp(0.0, 1.0);
+        let duty = duty.clamp(0.01, 0.99);
+        let on = ((period as f64 * duty) as Time).max(1);
+        let off = period.saturating_sub(on).max(1);
+        let burst = |mean: f64| {
+            let burst_rate = mean * burst_factor.max(0.0);
+            let base_rate = ((mean - duty * burst_rate) / (1.0 - duty)).max(0.0);
+            Some(TenantBurst { base_rate, burst_rate, on, off })
+        };
+        let scalar_rate = rate * (1.0 - share);
+        let avx_rate = rate * share;
+        ArrivalProcess::MultiTenant {
+            tenants: vec![
+                Tenant { name: "scalar".to_string(), rate: scalar_rate, avx: false, burst: burst(scalar_rate) },
+                Tenant { name: "avx".to_string(), rate: avx_rate, avx: true, burst: burst(avx_rate) },
             ],
         }
     }
@@ -212,16 +354,8 @@ impl ArrivalGen {
             ArrivalProcess::MultiTenant { tenants } => {
                 if tenant_next.len() != tenants.len() {
                     // First call: seed every tenant's stream at `now`.
-                    *tenant_next = tenants
-                        .iter()
-                        .map(|t| {
-                            if t.rate > 0.0 {
-                                now + (rng.exponential(1e9 / t.rate).max(1.0) as Time).max(1)
-                            } else {
-                                Time::MAX
-                            }
-                        })
-                        .collect();
+                    *tenant_next =
+                        tenants.iter().map(|t| tenant_arrival_after(t, now, rng)).collect();
                 }
                 let (i, t) = tenant_next
                     .iter()
@@ -229,9 +363,32 @@ impl ArrivalGen {
                     .enumerate()
                     .min_by_key(|&(_, t)| t)
                     .expect("at least one tenant");
-                let gap = (rng.exponential(1e9 / tenants[i].rate).max(1.0) as Time).max(1);
-                tenant_next[i] = t.saturating_add(gap);
+                tenant_next[i] = tenant_arrival_after(&tenants[i], t, rng);
                 (t.max(now + 1), i as u32)
+            }
+        }
+    }
+}
+
+/// Next arrival of one tenant's stream, strictly after `after`:
+/// a plain exponential gap for steady tenants, Lewis–Shedler thinning at
+/// the tenant's peak rate when a burst shape is set. Zero-rate tenants
+/// never arrive (`Time::MAX`).
+fn tenant_arrival_after(t: &Tenant, after: Time, rng: &mut Rng) -> Time {
+    if t.rate <= 0.0 || t.peak_rate() <= 0.0 || after == Time::MAX {
+        return Time::MAX;
+    }
+    match &t.burst {
+        None => after.saturating_add((rng.exponential(1e9 / t.rate).max(1.0) as Time).max(1)),
+        Some(_) => {
+            let peak = t.peak_rate();
+            let mut x = after as f64;
+            loop {
+                x += rng.exponential(1e9 / peak).max(1e-3);
+                let r = t.rate_at(x as Time);
+                if r > 0.0 && rng.chance(r / peak) {
+                    return (x as Time).max(after.saturating_add(1));
+                }
             }
         }
     }
@@ -328,5 +485,46 @@ mod tests {
     #[should_panic]
     fn zero_rate_process_rejected() {
         let _ = ArrivalGen::new(ArrivalProcess::Poisson { rate: 0.0 }, 1);
+    }
+
+    #[test]
+    fn with_mean_rate_rescales_preserving_shape() {
+        let p = ArrivalProcess::bursty_two_tenant(20_000.0, 0.25, 2.0, 0.3, 100 * MS);
+        let q = p.with_mean_rate(40_000.0);
+        assert!((q.mean_rate() - 40_000.0).abs() < 1e-6);
+        assert!((q.peak_rate() - 80_000.0).abs() < 1e-6, "burst factor preserved");
+        assert_eq!(q.label(), "bursty-mix");
+        assert_eq!(q.tenant_names(), p.tenant_names());
+        assert!(q.tenant_carries_avx(1) && !q.tenant_carries_avx(0));
+        // Shares preserved: avx tenant still carries 25%.
+        match &q {
+            ArrivalProcess::MultiTenant { tenants } => {
+                assert!((tenants[1].rate - 10_000.0).abs() < 1e-6);
+            }
+            other => panic!("mix expected, got {other:?}"),
+        }
+        let b = ArrivalProcess::bursty_mean(10_000.0, 2.0, 0.3, 200 * MS).with_mean_rate(5_000.0);
+        assert!((b.mean_rate() - 5_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bursty_mix_preserves_means_and_phases() {
+        let p = ArrivalProcess::bursty_two_tenant(20_000.0, 0.25, 2.0, 0.3, 100 * MS);
+        assert_eq!(p.label(), "bursty-mix");
+        assert_eq!(ArrivalProcess::two_tenant(20_000.0, 0.25).label(), "mix");
+        assert!((p.mean_rate() - 20_000.0).abs() < 1.0);
+        assert!((p.peak_rate() - 40_000.0).abs() < 1.0);
+        let arrivals = drain(&mut ArrivalGen::new(p.clone(), 9), SEC);
+        let again = drain(&mut ArrivalGen::new(p, 9), SEC);
+        assert_eq!(arrivals, again, "same seed must give the same stream");
+        let n = arrivals.len() as f64;
+        assert!((n - 20_000.0).abs() / 20_000.0 < 0.06, "got {n} arrivals/s");
+        let avx = arrivals.iter().filter(|(_, t)| *t == 1).count() as f64;
+        assert!((avx - 5_000.0).abs() / 5_000.0 < 0.12, "avx tenant got {avx}");
+        // Both tenants burst in phase: 2× bursts at 30% duty put 60% of
+        // all arrivals inside the shared on-phase.
+        let on = arrivals.iter().filter(|(t, _)| t % (100 * MS) < 30 * MS).count() as f64;
+        assert!((on / n - 0.6).abs() < 0.05, "on-phase share {}", on / n);
+        assert!(arrivals.windows(2).all(|w| w[0].0 < w[1].0), "merged stream ordered");
     }
 }

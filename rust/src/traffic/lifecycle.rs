@@ -53,6 +53,29 @@ impl LatencyStats {
         self.hist.count()
     }
 
+    /// Exact number of completions above the SLO threshold.
+    pub fn violations(&self) -> u64 {
+        self.violations
+    }
+
+    /// Fold another recorder's samples into this one, as if every sample
+    /// had been recorded here: the histogram buckets add and the exact
+    /// violation counters add, so `merge` obeys the same laws as the
+    /// sample union — commutative, associative, and equal to recording
+    /// the concatenated sample stream (property-tested in
+    /// `rust/tests/fleet.rs`; the fleet layer's cross-machine
+    /// aggregation depends on them). Panics if the recorders measure
+    /// different SLO thresholds — merging those would silently blend two
+    /// incomparable violation definitions.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        assert_eq!(
+            self.slo, other.slo,
+            "merging latency recorders with different SLO thresholds"
+        );
+        self.hist.merge(&other.hist);
+        self.violations += other.violations;
+    }
+
     /// Exact fraction of completions above the SLO threshold.
     pub fn violation_frac(&self) -> f64 {
         if self.hist.count() == 0 {
@@ -141,5 +164,29 @@ mod tests {
         assert_eq!(s.violation_frac(), 0.0);
         s.record(MS + 1);
         assert!((s.violation_frac() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_recording_union() {
+        let mut a = LatencyStats::new(2 * MS);
+        let mut b = LatencyStats::new(2 * MS);
+        let mut u = LatencyStats::new(2 * MS);
+        for (i, v) in [MS / 2, MS, 3 * MS, 5 * MS, MS, 7 * MS].iter().enumerate() {
+            if i % 2 == 0 { a.record(*v) } else { b.record(*v) }
+            u.record(*v);
+        }
+        a.merge(&b);
+        assert_eq!(a.completed(), u.completed());
+        assert_eq!(a.violations(), u.violations());
+        assert_eq!(a.hist.percentile(99.0), u.hist.percentile(99.0));
+        assert_eq!(a.hist.max(), u.hist.max());
+        assert!((a.violation_frac() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_mismatched_slo() {
+        let mut a = LatencyStats::new(MS);
+        a.merge(&LatencyStats::new(2 * MS));
     }
 }

@@ -29,5 +29,5 @@
 pub mod arrival;
 pub mod lifecycle;
 
-pub use arrival::{ArrivalGen, ArrivalProcess, Tenant};
+pub use arrival::{ArrivalGen, ArrivalProcess, Tenant, TenantBurst};
 pub use lifecycle::{LatencyStats, Request, TailSummary};

@@ -168,6 +168,15 @@ impl Config {
         }
     }
 
+    /// Integer read as a count: negative config values clamp to 0 rather
+    /// than wrapping through an `as usize` cast at the call site.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        match self.map.get(key) {
+            Some(Value::Int(i)) => (*i).max(0) as usize,
+            _ => default,
+        }
+    }
+
     pub fn float_or(&self, key: &str, default: f64) -> f64 {
         match self.map.get(key) {
             Some(Value::Float(x)) => *x,
@@ -226,6 +235,14 @@ penalty_ns = 1000000
     fn float_from_int_coercion() {
         let c = Config::parse("x = 3").unwrap();
         assert_eq!(c.float_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn usize_clamps_negative() {
+        let c = Config::parse("n = -3\nm = 5").unwrap();
+        assert_eq!(c.usize_or("n", 7), 0);
+        assert_eq!(c.usize_or("m", 7), 5);
+        assert_eq!(c.usize_or("missing", 7), 7);
     }
 
     #[test]

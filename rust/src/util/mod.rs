@@ -14,5 +14,5 @@ pub mod config;
 pub mod table;
 
 pub use histogram::LogHistogram;
-pub use rng::Rng;
+pub use rng::{mix64, Rng};
 pub use stats::Summary;

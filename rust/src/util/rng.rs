@@ -19,6 +19,15 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// One SplitMix64 step as a pure function: decorrelates seeds derived
+/// from `(base, index)`-style mixes — the scenario matrix's per-cell
+/// seeds and the fleet's per-machine seeds both use this, so the
+/// derivation lives in exactly one place.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    splitmix64(&mut z)
+}
+
 impl Rng {
     /// Create a generator from a 64-bit seed. Any seed (including 0) is fine;
     /// splitmix64 expands it to the full 256-bit state.

@@ -164,6 +164,62 @@ impl Driver for TrafficDriver {
     }
 }
 
+/// Open-loop arrival driver fed from a *precomputed* `(time, tenant)`
+/// stream instead of a live generator — the fleet layer demultiplexes
+/// one shared [`ArrivalGen`] stream across machines and replays each
+/// machine's share through this driver.
+///
+/// The event choreography deliberately mirrors [`TrafficDriver`]
+/// (push → notify → schedule next, all inside one external event), so a
+/// machine replaying the *full* stream of its own generator is
+/// event-for-event identical to the live driver: the only difference is
+/// that no arrival is scheduled past the end of the trace, and an event
+/// scheduled beyond the run horizon never fires anyway. This is the
+/// invariant behind the size-1-fleet ≡ single-machine differential test
+/// in `rust/tests/fleet.rs`.
+pub struct TraceDriver {
+    pub shared: Shared,
+    pub ch: u32,
+    trace: Vec<(Time, u32)>,
+    pos: usize,
+    /// Tenant of the already-scheduled next arrival.
+    next_tenant: u32,
+}
+
+impl TraceDriver {
+    /// `trace` must be strictly increasing in time (as produced by
+    /// [`ArrivalGen::next_after`] chaining).
+    pub fn new(shared: Shared, ch: u32, trace: Vec<(Time, u32)>) -> Self {
+        debug_assert!(trace.windows(2).all(|w| w[0].0 < w[1].0), "trace must be ordered");
+        TraceDriver { shared, ch, trace, pos: 0, next_tenant: 0 }
+    }
+
+    /// Install the first arrival event (no-op for an empty trace — a
+    /// machine the router never picks simply idles).
+    pub fn start(&mut self, m: &mut Machine) {
+        if let Some(&(t, tenant)) = self.trace.first() {
+            self.pos = 1;
+            self.next_tenant = tenant;
+            m.schedule_external(t, 0);
+        }
+    }
+}
+
+impl Driver for TraceDriver {
+    fn on_external(&mut self, _tag: u64, m: &mut Machine) {
+        let now = m.now();
+        let req = Request { arrived: now, tenant: self.next_tenant };
+        if self.shared.borrow_mut().push_arrival(req) {
+            m.notify(self.ch);
+        }
+        if let Some(&(t, tenant)) = self.trace.get(self.pos) {
+            self.pos += 1;
+            self.next_tenant = tenant;
+            m.schedule_external(t, 0);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -7,7 +7,7 @@
 //! `with_avx()` / `without_avx()` exactly like the paper's 9-line nginx
 //! patch (SSL_read, SSL_write, SSL_do_handshake, SSL_shutdown).
 
-use super::client::{LoadMode, ServerShared, Shared, TrafficDriver, DEFAULT_SLO};
+use super::client::{LoadMode, ServerShared, Shared, TraceDriver, TrafficDriver, DEFAULT_SLO};
 use super::compress::CompressProfile;
 use super::crypto::{CryptoProfile, Isa};
 use crate::analysis::flamegraph::StackTable;
@@ -16,7 +16,7 @@ use crate::isa::{Binary, Function};
 use crate::sched::machine::{Action, Driver, Machine, MachineParams, TaskBody};
 use crate::sched::{PolicyKind, TaskType};
 use crate::sim::{Time, MS, SEC};
-use crate::traffic::{ArrivalProcess, Request, TailSummary};
+use crate::traffic::{ArrivalProcess, LatencyStats, Request, TailSummary};
 use crate::util::Rng;
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -154,21 +154,26 @@ impl WebCfg {
                 _ => anyhow::bail!("load.process = {process:?} requires load.rate (open loop)"),
             };
             let period = (conf.float_or("load.period_ms", 200.0) * MS as f64) as Time;
+            // Shared burst-shape read for the bursty arms. Past the
+            // `factor × duty ≤ 1` bound the base rate clamps to 0 and
+            // the long-run mean silently exceeds load.rate —
+            // cross-process comparisons at "the same load" would
+            // compare different offered loads.
+            let burst_shape = |default_factor: f64| -> anyhow::Result<(f64, f64)> {
+                let burst_factor = conf.float_or("load.burst_factor", default_factor);
+                let duty = conf.float_or("load.duty", 0.3);
+                anyhow::ensure!(
+                    burst_factor * duty <= 1.0,
+                    "load.burst_factor × load.duty = {:.2} > 1: bursts alone exceed \
+                     load.rate, so the declared mean cannot be preserved",
+                    burst_factor * duty
+                );
+                Ok((burst_factor, duty))
+            };
             cfg.mode = LoadMode::OpenProcess {
                 process: match process {
                     "bursty" => {
-                        let burst_factor = conf.float_or("load.burst_factor", 2.0);
-                        let duty = conf.float_or("load.duty", 0.3);
-                        // Past this bound the base rate clamps to 0 and
-                        // the long-run mean silently exceeds load.rate —
-                        // cross-process comparisons at "the same load"
-                        // would compare different offered loads.
-                        anyhow::ensure!(
-                            burst_factor * duty <= 1.0,
-                            "load.burst_factor × load.duty = {:.2} > 1: bursts alone exceed \
-                             load.rate, so the declared mean cannot be preserved",
-                            burst_factor * duty
-                        );
+                        let (burst_factor, duty) = burst_shape(2.0)?;
                         ArrivalProcess::bursty_mean(rate, burst_factor, duty, period)
                     }
                     "diurnal" => ArrivalProcess::Diurnal {
@@ -180,8 +185,18 @@ impl WebCfg {
                         rate,
                         conf.float_or("load.avx_share", 0.3),
                     ),
+                    "bursty-mix" => {
+                        let (burst_factor, duty) = burst_shape(1.5)?;
+                        ArrivalProcess::bursty_two_tenant(
+                            rate,
+                            conf.float_or("load.avx_share", 0.3),
+                            burst_factor,
+                            duty,
+                            period,
+                        )
+                    }
                     other => anyhow::bail!(
-                        "load.process = {other:?} (poisson|bursty|diurnal|mix)"
+                        "load.process = {other:?} (poisson|bursty|diurnal|mix|bursty-mix)"
                     ),
                 },
             };
@@ -443,6 +458,14 @@ pub struct WebRun {
     /// Per-tenant tails, in tenant-index order (`("all", …)` for
     /// single-stream arrival processes).
     pub tenant_tails: Vec<(String, TailSummary)>,
+    /// The aggregate latency recorder behind [`WebRun::tail`] — carried
+    /// whole (histogram + exact violation counter) so fleet-level
+    /// aggregation can [`LatencyStats::merge`] runs across machines
+    /// instead of averaging frozen percentiles (which is wrong: p99s do
+    /// not average).
+    pub stats: LatencyStats,
+    /// Per-tenant recorders, index-aligned with [`WebRun::tenant_tails`].
+    pub tenant_stats: Vec<LatencyStats>,
     /// Arrivals rejected by the overflow guard during measurement.
     pub dropped: u64,
     pub type_changes_per_sec: f64,
@@ -468,15 +491,31 @@ pub fn run_webserver(cfg: &WebCfg) -> WebRun {
 /// Like [`run_webserver`] but also returns the machine (for flame graphs
 /// and counter inspection).
 pub fn run_webserver_machine(cfg: &WebCfg) -> (WebRun, Machine) {
-    run_webserver_impl(cfg, crate::sched::SchedParams::default())
+    run_webserver_impl(cfg, crate::sched::SchedParams::default(), None)
 }
 
 /// Run with explicit scheduler parameters (ablation hook).
 pub fn run_webserver_with_params(cfg: &WebCfg, sched: crate::sched::SchedParams) -> WebRun {
-    run_webserver_impl(cfg, sched).0
+    run_webserver_impl(cfg, sched, None).0
 }
 
-fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun, Machine) {
+/// Run one machine of a fleet: arrivals come from the precomputed
+/// `(time, tenant)` trace (this machine's share of the cluster stream)
+/// instead of a live generator, via [`TraceDriver`]. `cfg.mode` must
+/// still carry the fleet's arrival process — it supplies the tenant
+/// metadata (names, per-tenant AVX pipelines) the planners need; only
+/// the arrival *times* are replaced. Replaying a machine's own full
+/// stream reproduces [`run_webserver`] exactly (the fleet differential
+/// test pins this).
+pub fn run_webserver_trace(cfg: &WebCfg, trace: Vec<(Time, u32)>) -> WebRun {
+    run_webserver_impl(cfg, crate::sched::SchedParams::default(), Some(trace)).0
+}
+
+fn run_webserver_impl(
+    cfg: &WebCfg,
+    sched: crate::sched::SchedParams,
+    trace: Option<Vec<(Time, u32)>>,
+) -> (WebRun, Machine) {
     let stacks = Rc::new(RefCell::new(StackTable::new()));
     // Open-loop arrival process (None = closed loop) and one planner per
     // tenant: non-AVX tenants serve an SSE4 pipeline, unannotated.
@@ -538,9 +577,22 @@ fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun
     }
 
     // Composite driver: arrivals (tag 0) + adaptive controller (tag 1).
+    // Fleet machines replay their routed share of the cluster stream;
+    // standalone runs sample a live generator.
     let open = match &process {
-        Some(p) => Some(TrafficDriver::new(shared.clone(), ch, p.clone(), cfg.seed ^ 0xDEAD)),
+        Some(_) if trace.is_some() => Some(ArrivalDriver::Trace(TraceDriver::new(
+            shared.clone(),
+            ch,
+            trace.expect("checked is_some"),
+        ))),
+        Some(p) => Some(ArrivalDriver::Live(TrafficDriver::new(
+            shared.clone(),
+            ch,
+            p.clone(),
+            cfg.seed ^ 0xDEAD,
+        ))),
         None => {
+            assert!(trace.is_none(), "a closed-loop run cannot replay an arrival trace");
             let connections = match cfg.mode {
                 LoadMode::Closed { connections } => connections,
                 _ => unreachable!("process() is None only for closed loop"),
@@ -600,6 +652,8 @@ fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun
         insns_per_req: if completed > 0 { total.instructions as f64 / completed as f64 } else { 0.0 },
         tail,
         tenant_tails,
+        stats: s.stats.clone(),
+        tenant_stats: s.tenant_stats.clone(),
         dropped: s.dropped,
         type_changes_per_sec: m.sched.stats.type_changes as f64 / secs,
         migrations_per_sec: m.sched.stats.migrations as f64 / secs,
@@ -613,9 +667,34 @@ fn run_webserver_impl(cfg: &WebCfg, sched: crate::sched::SchedParams) -> (WebRun
     (run, m)
 }
 
+/// Arrival source for the composite driver: a live seeded generator
+/// (standalone runs) or a replayed fleet trace (one machine of a
+/// cluster). Both produce identical event choreography for the same
+/// arrival stream.
+enum ArrivalDriver {
+    Live(TrafficDriver),
+    Trace(TraceDriver),
+}
+
+impl ArrivalDriver {
+    fn start(&mut self, m: &mut Machine) {
+        match self {
+            ArrivalDriver::Live(d) => d.start(m),
+            ArrivalDriver::Trace(d) => d.start(m),
+        }
+    }
+
+    fn on_external(&mut self, tag: u64, m: &mut Machine) {
+        match self {
+            ArrivalDriver::Live(d) => d.on_external(tag, m),
+            ArrivalDriver::Trace(d) => d.on_external(tag, m),
+        }
+    }
+}
+
 /// Composite web driver: open-loop arrivals + the adaptive controller.
 struct WebDriver {
-    open: Option<TrafficDriver>,
+    open: Option<ArrivalDriver>,
     ctl: Option<crate::sched::adaptive::Controller>,
 }
 
@@ -797,6 +876,40 @@ mod tests {
         for core in 0..3 {
             assert_eq!(m.cores[core].perf.license_cycles[2], 0, "core {core} saw L2");
         }
+    }
+
+    #[test]
+    fn trace_replay_reproduces_live_run() {
+        // Replaying the full stream of a run's own generator through
+        // TraceDriver must be event-for-event identical to the live
+        // TrafficDriver — the invariant the fleet layer builds on.
+        let mut cfg = quick_cfg(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 });
+        cfg.mode = LoadMode::OpenProcess {
+            process: ArrivalProcess::two_tenant(30_000.0, 0.3),
+        };
+        let live = run_webserver(&cfg);
+        let process = cfg.mode.process().expect("open loop");
+        let mut gen = crate::traffic::ArrivalGen::new(process, cfg.seed ^ 0xDEAD);
+        let horizon = cfg.warmup + cfg.measure;
+        let mut trace = Vec::new();
+        let mut now = 0;
+        loop {
+            let (t, tenant) = gen.next_after(now);
+            if t > horizon {
+                break;
+            }
+            trace.push((t, tenant));
+            now = t;
+        }
+        let replay = run_webserver_trace(&cfg, trace);
+        assert_eq!(live.completed, replay.completed);
+        assert_eq!(live.dropped, replay.dropped);
+        assert_eq!(live.stats.violations(), replay.stats.violations());
+        assert_eq!(live.tail.p50_us, replay.tail.p50_us);
+        assert_eq!(live.tail.p99_us, replay.tail.p99_us);
+        assert_eq!(live.tail.max_us, replay.tail.max_us);
+        assert_eq!(live.throughput_rps, replay.throughput_rps);
+        assert_eq!(live.avg_ghz, replay.avg_ghz);
     }
 
     #[test]

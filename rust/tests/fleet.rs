@@ -1,0 +1,533 @@
+//! Integration tests for the fleet layer: the histogram/latency-recorder
+//! merge laws the cross-machine aggregation depends on, the
+//! size-1-fleet ≡ single-machine differential property, cross-thread /
+//! cross-ordering determinism of fleet runs and fleet matrix sweeps,
+//! golden-file snapshots for the fleet tables, and the headline
+//! behavioral claim: AVX-aware routing reduces cross-machine p99 spread
+//! vs round-robin on the bursty multi-tenant mix.
+
+use avxfreq::fleet::{route_stream, run_fleet, FleetCfg, FleetRun, RouterSpec};
+use avxfreq::metrics::fleet_report;
+use avxfreq::repro::fleetvar::{table as fleetvar_table, RouterVar};
+use avxfreq::scenario::{ArrivalSpec, PolicySpec, ScenarioMatrix, TopologySpec, WorkloadSpec};
+use avxfreq::sched::PolicyKind;
+use avxfreq::sim::MS;
+use avxfreq::testkit::{assert_prop, IntRange, VecOf};
+use avxfreq::traffic::{ArrivalProcess, LatencyStats, TailSummary};
+use avxfreq::util::LogHistogram;
+use avxfreq::workload::client::LoadMode;
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::{run_webserver, WebCfg, WebRun};
+
+// ---------------------------------------------------------------------
+// Merge laws (the fleet aggregation path depends on these)
+// ---------------------------------------------------------------------
+
+/// Structural equality of two histograms through their whole query
+/// surface: counts, extrema, mean, a grid of percentiles, and
+/// threshold queries.
+fn hist_eq(a: &LogHistogram, b: &LogHistogram) -> Result<(), String> {
+    if a.count() != b.count() {
+        return Err(format!("count {} != {}", a.count(), b.count()));
+    }
+    if a.min() != b.min() || a.max() != b.max() {
+        return Err(format!("extrema ({},{}) != ({},{})", a.min(), a.max(), b.min(), b.max()));
+    }
+    if a.mean() != b.mean() {
+        return Err(format!("mean {} != {}", a.mean(), b.mean()));
+    }
+    for p in [1.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+        if a.percentile(p) != b.percentile(p) {
+            return Err(format!("p{p}: {} != {}", a.percentile(p), b.percentile(p)));
+        }
+    }
+    for v in [0, 100, 10_000, 1_000_000, u64::MAX / 2] {
+        if a.fraction_above(v) != b.fraction_above(v) {
+            return Err(format!("fraction_above({v}) differs"));
+        }
+    }
+    Ok(())
+}
+
+fn hist_of(samples: &[u64]) -> LogHistogram {
+    let mut h = LogHistogram::new();
+    for &s in samples {
+        h.record(s);
+    }
+    h
+}
+
+/// LogHistogram::merge is commutative, associative, and equal to
+/// recording the concatenated samples — on arbitrary sample vectors.
+#[test]
+fn prop_histogram_merge_laws() {
+    let strat = VecOf { elem: IntRange { lo: 0, hi: 50_000_000 }, max_len: 200 };
+    assert_prop("histogram merge laws", 0xF1EE7, 60, &strat, |samples| {
+        // Deterministic 3-way split of the sample stream.
+        let parts: Vec<Vec<u64>> = (0..3usize)
+            .map(|k| samples.iter().copied().skip(k).step_by(3).collect())
+            .collect();
+        let (h0, h1, h2) = (hist_of(&parts[0]), hist_of(&parts[1]), hist_of(&parts[2]));
+        // Commutative.
+        let mut ab = h0.clone();
+        ab.merge(&h1);
+        let mut ba = h1.clone();
+        ba.merge(&h0);
+        hist_eq(&ab, &ba).map_err(|e| format!("commutativity: {e}"))?;
+        // Associative.
+        let mut left = ab.clone();
+        left.merge(&h2);
+        let mut bc = h1.clone();
+        bc.merge(&h2);
+        let mut right = h0.clone();
+        right.merge(&bc);
+        hist_eq(&left, &right).map_err(|e| format!("associativity: {e}"))?;
+        // Merge-equals-concat: merging the parts equals recording the
+        // union of samples.
+        let union: Vec<u64> = parts.iter().flatten().copied().collect();
+        hist_eq(&left, &hist_of(&union)).map_err(|e| format!("merge-vs-union: {e}"))?;
+        Ok(())
+    });
+}
+
+fn stats_of(samples: &[u64], slo: u64) -> LatencyStats {
+    let mut s = LatencyStats::new(slo);
+    for &v in samples {
+        s.record(v);
+    }
+    s
+}
+
+fn summary_eq(a: &TailSummary, b: &TailSummary) -> Result<(), String> {
+    let pairs = [
+        (a.mean_us, b.mean_us),
+        (a.p50_us, b.p50_us),
+        (a.p95_us, b.p95_us),
+        (a.p99_us, b.p99_us),
+        (a.p999_us, b.p999_us),
+        (a.max_us, b.max_us),
+        (a.slo_us, b.slo_us),
+        (a.slo_violation_frac, b.slo_violation_frac),
+    ];
+    if a.completed != b.completed {
+        return Err(format!("completed {} != {}", a.completed, b.completed));
+    }
+    for (x, y) in pairs {
+        if x != y {
+            return Err(format!("summary field {x} != {y}"));
+        }
+    }
+    Ok(())
+}
+
+/// LatencyStats::merge preserves the same laws *including the exact
+/// violation counter* — merging two recorders equals recording the
+/// union of their samples.
+#[test]
+fn prop_latency_stats_merge_laws() {
+    let slo = 5 * MS;
+    let strat = VecOf { elem: IntRange { lo: 1, hi: 40_000_000 }, max_len: 150 };
+    assert_prop("latency-stats merge laws", 0x51075, 60, &strat, |samples| {
+        let (a, b): (Vec<u64>, Vec<u64>) =
+            samples.iter().partition(|&&v| v % 2 == 0);
+        let (sa, sb) = (stats_of(&a, slo), stats_of(&b, slo));
+        let mut ab = sa.clone();
+        ab.merge(&sb);
+        let mut ba = sb.clone();
+        ba.merge(&sa);
+        if ab.violations() != ba.violations() || ab.completed() != ba.completed() {
+            return Err("merge not commutative on exact counters".to_string());
+        }
+        let union = stats_of(samples, slo);
+        if ab.violations() != union.violations() {
+            return Err(format!(
+                "violations {} != union {}",
+                ab.violations(),
+                union.violations()
+            ));
+        }
+        if ab.violation_frac() != union.violation_frac() {
+            return Err("violation fraction differs from union".to_string());
+        }
+        summary_eq(&ab.summary(), &union.summary())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Differential: a fleet of size 1 IS the single-machine run
+// ---------------------------------------------------------------------
+
+fn small_cfg(seed: u64) -> WebCfg {
+    let mut c = WebCfg::paper_default(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 });
+    c.cores = 4;
+    c.workers = 8;
+    c.page_bytes = 8 * 1024;
+    c.warmup = 120 * MS;
+    c.measure = 300 * MS;
+    c.seed = seed;
+    c.mode = LoadMode::OpenProcess {
+        process: ArrivalProcess::two_tenant(30_000.0, 0.3),
+    };
+    c
+}
+
+fn assert_runs_identical(a: &WebRun, b: &WebRun, what: &str) {
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(a.dropped, b.dropped, "{what}: dropped");
+    assert_eq!(a.stats.violations(), b.stats.violations(), "{what}: violations");
+    assert_eq!(a.throughput_rps, b.throughput_rps, "{what}: throughput");
+    assert_eq!(a.avg_ghz, b.avg_ghz, "{what}: GHz");
+    assert_eq!(a.ipc, b.ipc, "{what}: IPC");
+    summary_eq(&a.tail, &b.tail).unwrap_or_else(|e| panic!("{what}: tail {e}"));
+    assert_eq!(a.tenant_tails.len(), b.tenant_tails.len(), "{what}: tenants");
+    for ((na, ta), (nb, tb)) in a.tenant_tails.iter().zip(&b.tenant_tails) {
+        assert_eq!(na, nb, "{what}: tenant name");
+        summary_eq(ta, tb).unwrap_or_else(|e| panic!("{what}: tenant {na} {e}"));
+    }
+}
+
+/// A fleet of size 1 — under *any* router — is byte-identical to the
+/// standalone web-server run for the same seed and config: the same
+/// TailSummary, the same exact SLO-violation count, the same counters.
+#[test]
+fn fleet_of_one_is_identical_to_single_machine() {
+    let cfg = small_cfg(0xD1FF);
+    let single = run_webserver(&cfg);
+    assert!(single.completed > 500, "baseline served {}", single.completed);
+    for router in [
+        RouterSpec::RoundRobin,
+        RouterSpec::least_outstanding(),
+        RouterSpec::AvxPartition { avx_machines: 1 },
+    ] {
+        let fleet = run_fleet(&FleetCfg::new(1, router, cfg.clone()), 2);
+        assert_eq!(fleet.machines.len(), 1);
+        assert_runs_identical(&single, &fleet.machines[0], &router.label());
+        // The cluster aggregate of one machine is that machine.
+        assert_eq!(fleet.completed, single.completed, "{}", router.label());
+        assert_eq!(fleet.violations, single.stats.violations());
+        summary_eq(&fleet.tail, &single.tail)
+            .unwrap_or_else(|e| panic!("{}: cluster tail {e}", router.label()));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Determinism across threads and machine-simulation orderings
+// ---------------------------------------------------------------------
+
+/// Fleet runs are byte-identical at any worker-thread count (and hence
+/// across machine-simulation orderings — the atomic-cursor claim order
+/// differs run to run at 4 threads).
+#[test]
+fn fleet_deterministic_across_threads_and_orderings() {
+    let mut cfg = small_cfg(0x0D37);
+    cfg.mode = LoadMode::OpenProcess {
+        process: ArrivalProcess::bursty_two_tenant(45_000.0, 0.3, 1.5, 0.3, 80 * MS),
+    };
+    let fleet = FleetCfg::new(3, RouterSpec::AvxPartition { avx_machines: 1 }, cfg);
+    let serial = run_fleet(&fleet, 1);
+    let parallel = run_fleet(&fleet, 4);
+    let again = run_fleet(&fleet, 4);
+    let render = |f: &FleetRun| fleet_report(&[("fleet", f)]).render();
+    assert_eq!(render(&serial), render(&parallel), "1 vs 4 threads differ");
+    assert_eq!(render(&parallel), render(&again), "two 4-thread runs differ");
+    let completed = |f: &FleetRun| -> Vec<u64> { f.machines.iter().map(|m| m.completed).collect() };
+    assert_eq!(completed(&serial), completed(&parallel));
+    assert_eq!(serial.violations, parallel.violations);
+}
+
+/// The fleet axes ride through the scenario matrix deterministically:
+/// a sweep over fleet sizes × routers renders byte-identical matrix,
+/// tail, and fleet tables at 1 and 4 OS threads.
+#[test]
+fn fleet_matrix_deterministic_across_threads() {
+    let mut m = ScenarioMatrix::new(0xF13E7);
+    m.topologies = vec![TopologySpec::multi(1, 4)];
+    m.policies = vec![PolicySpec::Unmodified];
+    m.workloads = vec![WorkloadSpec {
+        name: "small".to_string(),
+        compress: true,
+        page_kib: 8,
+        rate_per_core: 4_000.0,
+    }];
+    m.isas = vec![Isa::Avx512];
+    m.arrivals = vec![ArrivalSpec::BurstyMix {
+        avx_share: 0.3,
+        burst_factor: 1.5,
+        duty: 0.3,
+        period: 80 * MS,
+    }];
+    m.fleet_sizes = vec![1, 2];
+    m.routers = vec![RouterSpec::RoundRobin, RouterSpec::AvxPartition { avx_machines: 1 }];
+    m.warmup = 100 * MS;
+    m.measure = 200 * MS;
+    assert_eq!(m.len(), 4);
+
+    let serial = m.run(1);
+    let parallel = m.run(4);
+    assert_eq!(serial.render(), parallel.render(), "matrix table differs");
+    assert_eq!(serial.render_tail(), parallel.render_tail(), "tail table differs");
+    assert_eq!(serial.render_fleet(), parallel.render_fleet(), "fleet table differs");
+    // Cells with non-default fleet axes carry the full FleetRun; the
+    // size-1 round-robin cell bypasses the fleet layer.
+    assert!(serial.cells[0].fleet.is_none(), "size-1 round-robin is the classic cell");
+    assert!(serial.cells[1].fleet.is_some(), "size-1 avx-partition runs as a fleet");
+    assert_eq!(serial.cells[3].fleet.as_ref().unwrap().machines.len(), 2);
+    for cell in &serial.cells {
+        assert!(
+            cell.run.completed > 50,
+            "{} only completed {}",
+            cell.scenario.label(),
+            cell.run.completed
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden snapshots for the fleet tables (synthetic, formatting only)
+// ---------------------------------------------------------------------
+
+fn check_golden(name: &str, actual: &str) {
+    let path = format!("{}/rust/tests/golden/{name}.txt", env!("CARGO_MANIFEST_DIR"));
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(&path, actual).expect("write golden");
+        eprintln!("updated {path}");
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    assert!(
+        actual == expected,
+        "{name} drifted from its snapshot ({path}).\n--- expected ---\n{expected}\n--- actual ---\n{actual}\n\
+         Run with UPDATE_GOLDEN=1 if the change is intentional."
+    );
+}
+
+fn synthetic_webrun(done: u64, p50: f64, p99: f64, p999: f64, frac: f64, drops: u64) -> WebRun {
+    let tail = TailSummary {
+        completed: done,
+        mean_us: p50,
+        p50_us: p50,
+        p95_us: p99,
+        p99_us: p99,
+        p999_us: p999,
+        max_us: p999,
+        slo_us: 10_000.0,
+        slo_violation_frac: frac,
+    };
+    WebRun {
+        cfg_name: "synthetic".to_string(),
+        throughput_rps: done as f64,
+        avg_ghz: 2.75,
+        ipc: 1.5,
+        insns_per_req: 1_000_000.0,
+        tail,
+        tenant_tails: vec![("all".to_string(), tail)],
+        stats: LatencyStats::new(10 * MS),
+        tenant_stats: vec![LatencyStats::new(10 * MS)],
+        dropped: drops,
+        type_changes_per_sec: 0.0,
+        migrations_per_sec: 0.0,
+        cross_socket_migrations_per_sec: 0.0,
+        throttle_ratio: 0.0,
+        license_share: [1.0, 0.0, 0.0],
+        completed: done,
+        final_avx_cores: 0,
+        adaptive_changes: 0,
+    }
+}
+
+/// Fixed synthetic fleet covering both row shapes (machine rows and the
+/// cluster row with the dispersion columns).
+fn synthetic_fleet() -> FleetRun {
+    let m0 = synthetic_webrun(3600, 250.0, 1000.0, 2000.0, 0.025, 0);
+    let m1 = synthetic_webrun(900, 400.0, 3000.0, 5000.0, 0.1, 3);
+    let cluster_tail = TailSummary {
+        completed: 4500,
+        mean_us: 275.0,
+        p50_us: 275.0,
+        p95_us: 1500.0,
+        p99_us: 1500.0,
+        p999_us: 4000.0,
+        max_us: 5000.0,
+        slo_us: 10_000.0,
+        slo_violation_frac: 0.04,
+    };
+    FleetRun {
+        router: "avx-part(1)".to_string(),
+        machines: vec![m0, m1],
+        arrivals_routed: vec![4000, 1000],
+        stats: LatencyStats::new(10 * MS),
+        tail: cluster_tail,
+        tenant_stats: Vec::new(),
+        completed: 4500,
+        dropped: 3,
+        violations: 180,
+        measure_secs: 1.0,
+    }
+}
+
+#[test]
+fn fleet_report_matches_snapshot() {
+    let f = synthetic_fleet();
+    check_golden("fleet_report", &fleet_report(&[("f0", &f)]).render());
+}
+
+#[test]
+fn fleetvar_report_matches_snapshot() {
+    let rows = vec![
+        RouterVar {
+            router: "round-robin".to_string(),
+            machines: 6,
+            fleet_p99_us: 9000.0,
+            mean_p99_us: 8500.0,
+            sigma_us: 2400.0,
+            spread_us: 6800.0,
+            slo_pct: 18.0,
+        },
+        RouterVar {
+            router: "avx-part(1)".to_string(),
+            machines: 6,
+            fleet_p99_us: 2600.0,
+            mean_p99_us: 2500.0,
+            sigma_us: 300.0,
+            spread_us: 800.0,
+            slo_pct: 2.0,
+        },
+    ];
+    check_golden("fleetvar_report", &fleetvar_table(&rows).render());
+}
+
+// ---------------------------------------------------------------------
+// The headline behavioral claim
+// ---------------------------------------------------------------------
+
+/// The fleetvar scenario scaled down to test size: uncompressed
+/// (crypto-dominated) pages on small machines, a 30% AVX-512 tenant with
+/// in-phase bursts, and the AVX subset sized to the AVX share of *work*
+/// (AVX-512 requests are instruction-cheap), so every partitioned
+/// machine runs at lower utilization than any round-robin machine.
+fn bursty_mix_fleet(router: RouterSpec) -> FleetCfg {
+    let mut cfg = WebCfg::paper_default(Isa::Avx512, PolicyKind::Unmodified);
+    cfg.cores = 3;
+    cfg.workers = 6;
+    cfg.compress = false;
+    cfg.page_bytes = 384 * 1024;
+    cfg.annotate = false;
+    cfg.seed = 0xF1EE;
+    cfg.slo = 25 * MS;
+    cfg.warmup = 150 * MS;
+    cfg.measure = 500 * MS;
+    // Mean fleet rate at the round-robin knee: every mixed machine
+    // rides the drain-or-ratchet edge (maximum cross-machine variance)
+    // while both partitioned groups sit ~8–17% below it and drain every
+    // burst.
+    cfg.mode = LoadMode::OpenProcess {
+        process: ArrivalProcess::bursty_two_tenant(90_000.0, 0.3, 1.5, 0.3, 90 * MS),
+    };
+    FleetCfg::new(6, router, cfg)
+}
+
+/// Satellite acceptance: `AvxPartition` reduces cross-machine p99
+/// spread (and σ) vs round-robin on the bursty multi-tenant mix, and —
+/// structurally — the scalar majority of the fleet never executes a
+/// single licensed wide instruction, exactly like the paper's scalar
+/// cores.
+#[test]
+fn avx_partition_reduces_cross_machine_p99_spread_on_bursty_mix() {
+    let rr = run_fleet(&bursty_mix_fleet(RouterSpec::RoundRobin), 4);
+    let part = run_fleet(&bursty_mix_fleet(RouterSpec::AvxPartition { avx_machines: 1 }), 4);
+    for (name, f) in [("round-robin", &rr), ("avx-partition", &part)] {
+        for (i, m) in f.machines.iter().enumerate() {
+            assert!(m.completed > 500, "{name} m{i} served only {}", m.completed);
+        }
+    }
+
+    // Structural: scalar machines under the partition never see AVX
+    // license levels; the AVX machine carries all of them.
+    for (i, m) in part.machines.iter().enumerate().take(5) {
+        assert_eq!(
+            m.license_share[1], 0.0,
+            "scalar machine {i} spent time at L1"
+        );
+        assert_eq!(
+            m.license_share[2], 0.0,
+            "scalar machine {i} spent time at L2"
+        );
+    }
+    // Under round-robin every machine pays the license tax.
+    for (i, m) in rr.machines.iter().enumerate() {
+        assert!(
+            m.license_share[1] + m.license_share[2] > 0.0,
+            "round-robin machine {i} unexpectedly license-clean"
+        );
+    }
+
+    // Headline: the straggler gap and the cross-machine dispersion
+    // shrink under AVX-aware routing.
+    let (rr_s, part_s) = (rr.p99_summary(), part.p99_summary());
+    assert!(
+        part.p99_spread_us() < rr.p99_spread_us(),
+        "avx-partition must reduce cross-machine p99 spread: {:.0} vs {:.0} µs \
+         (rr p99s {:?}, part p99s {:?})",
+        part.p99_spread_us(),
+        rr.p99_spread_us(),
+        rr.p99s_us(),
+        part.p99s_us()
+    );
+    assert!(
+        part_s.stddev() < rr_s.stddev(),
+        "avx-partition must reduce cross-machine p99 σ: {:.1} vs {:.1} µs",
+        part_s.stddev(),
+        rr_s.stddev()
+    );
+    // And the fleet-wide tail improves outright (merged histograms).
+    assert!(
+        part.tail.p99_us < rr.tail.p99_us,
+        "fleet p99 must improve: {:.0} vs {:.0} µs",
+        part.tail.p99_us,
+        rr.tail.p99_us
+    );
+    assert!(part.tail.slo_violation_frac <= rr.tail.slo_violation_frac);
+}
+
+/// Router/tenant plumbing on the real stream: the partition router
+/// sends every AVX-tenant arrival to the last machine and splits the
+/// scalar majority round-robin; total arrivals are conserved.
+#[test]
+fn route_stream_conserves_and_partitions_arrivals() {
+    let fleet = bursty_mix_fleet(RouterSpec::AvxPartition { avx_machines: 1 });
+    let traces = route_stream(&fleet);
+    assert_eq!(traces.len(), 6);
+    assert!(traces[5].iter().all(|&(_, tenant)| tenant == 1), "last machine is the AVX subset");
+    for (i, t) in traces.iter().enumerate().take(5) {
+        assert!(t.iter().all(|&(_, tenant)| tenant == 0), "machine {i} got AVX work");
+        assert!(!t.is_empty(), "scalar machine {i} got nothing");
+    }
+    let routed: usize = traces.iter().map(|t| t.len()).sum();
+    let rr: usize = route_stream(&bursty_mix_fleet(RouterSpec::RoundRobin))
+        .iter()
+        .map(|t| t.len())
+        .sum();
+    assert_eq!(routed, rr, "routing must conserve the arrival stream");
+}
+
+/// The fleetvar repro declares the acceptance scenario (6 machines,
+/// bursty multi-tenant mix, unmodified schedulers, 1-machine AVX
+/// subset) without running it.
+#[test]
+fn fleetvar_scenario_shape() {
+    let cfg = avxfreq::repro::fleetvar::fleet_cfg(
+        RouterSpec::AvxPartition { avx_machines: 1 },
+        true,
+        7,
+    );
+    assert_eq!(cfg.machines, 6);
+    assert_eq!(cfg.router, RouterSpec::AvxPartition { avx_machines: 1 });
+    assert!(!cfg.cfg.compress, "fleetvar runs the crypto-dominated page");
+    assert!(matches!(cfg.cfg.policy, PolicyKind::Unmodified));
+    let process = cfg.cfg.mode.process().expect("open loop");
+    assert_eq!(process.label(), "bursty-mix");
+    assert_eq!(process.n_tenants(), 2);
+    assert!(process.tenant_carries_avx(1) && !process.tenant_carries_avx(0));
+    // Mean-preserving bursts: the declared fleet rate survives.
+    assert!((process.mean_rate() - 500_000.0).abs() < 1.0);
+}

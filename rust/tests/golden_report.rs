@@ -9,13 +9,14 @@
 //! regenerate after an intentional format change:
 //! `UPDATE_GOLDEN=1 cargo test --test golden_report`.
 
+use avxfreq::fleet::RouterSpec;
 use avxfreq::metrics::{matrix_report, tail_report};
 use avxfreq::scenario::{
     ArrivalSpec, CellResult, PolicySpec, Scenario, ScenarioMatrix, TopologySpec, WorkloadSpec,
 };
 use avxfreq::sched::PolicyKind;
 use avxfreq::sim::MS;
-use avxfreq::traffic::TailSummary;
+use avxfreq::traffic::{LatencyStats, TailSummary};
 use avxfreq::workload::crypto::Isa;
 use avxfreq::workload::webserver::{WebCfg, WebRun};
 
@@ -53,9 +54,12 @@ fn cell(
         isa,
         load,
         arrival: arrival.to_string(),
+        fleet: 1,
+        router: RouterSpec::RoundRobin,
         seed: 7,
         cfg: WebCfg::paper_default(isa, PolicyKind::Unmodified),
     };
+    let n_tenants = tenants.len();
     let run = WebRun {
         cfg_name: "synthetic".to_string(),
         throughput_rps: rps,
@@ -64,6 +68,8 @@ fn cell(
         insns_per_req: 1_000_000.0,
         tail: t,
         tenant_tails: tenants,
+        stats: LatencyStats::new(5 * MS),
+        tenant_stats: (0..n_tenants).map(|_| LatencyStats::new(5 * MS)).collect(),
         dropped: if index == 1 { 25 } else { 0 },
         type_changes_per_sec: 9_000.0,
         migrations_per_sec: 1_200.0,
@@ -74,7 +80,7 @@ fn cell(
         final_avx_cores: 2,
         adaptive_changes: 0,
     };
-    CellResult { scenario, run }
+    CellResult { scenario, run, fleet: None }
 }
 
 /// Two fixed cells: a single-tenant Poisson cell and a two-tenant bursty
