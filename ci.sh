@@ -29,7 +29,8 @@ step "doctests" cargo test -q --doc
 # fleet tables' formatting contract would be unpinned.
 check_goldens() {
   local missing=0
-  for g in matrix_report tail_report fleet_report fleetvar_report; do
+  for g in matrix_report tail_report fleet_report fleetvar_report \
+           energy_report energydelay_report; do
     if [ ! -f "rust/tests/golden/${g}.txt" ]; then
       echo "MISSING golden snapshot: rust/tests/golden/${g}.txt"
       missing=1
@@ -97,6 +98,9 @@ for p in docs/ARCHITECTURE.md rust/tests/README.md configs/dual_socket.toml \
          rust/src/fleet/mod.rs rust/src/fleet/router.rs rust/src/fleet/cluster.rs \
          rust/src/repro/fleetvar.rs rust/tests/fleet.rs \
          rust/tests/golden/fleet_report.txt rust/tests/golden/fleetvar_report.txt \
+         configs/energy.toml rust/src/cpu/governor.rs rust/src/cpu/power.rs \
+         rust/src/repro/energydelay.rs rust/tests/power.rs \
+         rust/tests/golden/energy_report.txt rust/tests/golden/energydelay_report.txt \
          ci.sh; do
   if [ ! -e "$p" ]; then
     echo "MISSING referenced file: $p"

@@ -10,6 +10,7 @@
 use super::freq::{FreqParams, License, LicenseState};
 use super::ipc::{cost_block, license_demand, FootprintTracker, IpcParams};
 use super::perf::PerfCounters;
+use super::power::PowerParams;
 use super::turbo::TurboTable;
 use crate::isa::block::Block;
 use crate::sim::Time;
@@ -36,6 +37,9 @@ pub struct Core {
     pub license: LicenseState,
     pub perf: PerfCounters,
     pub footprint: FootprintTracker,
+    /// Power model charged as the core runs (defaults are Skylake-SP
+    /// shaped; the machine overrides them from its own parameters).
+    pub power: PowerParams,
     ipc_params: IpcParams,
 }
 
@@ -47,6 +51,7 @@ impl Core {
             license: LicenseState::new(freq_params),
             perf: PerfCounters::default(),
             footprint: FootprintTracker::new(cap),
+            power: PowerParams::default(),
             ipc_params,
         }
     }
@@ -101,6 +106,13 @@ impl Core {
         self.perf.license_requests = self.license.requests;
         self.perf.freq_switches = self.license.switches;
 
+        // Energy: the whole slice (PLL stall included — the core is
+        // powered, just not retiring) draws active power at the slice's
+        // license level and frequency. Constant within the slice, so
+        // P × dt is the exact integral.
+        let w = self.power.active_w(eff.license, ghz);
+        self.perf.record_active_energy(PowerParams::energy_j(w, ns));
+
         SliceOutcome { ns, cycles, throttle_cycles, license: eff.license, ghz }
     }
 
@@ -109,6 +121,8 @@ impl Core {
     pub fn idle_until(&mut self, from: Time, to: Time) {
         debug_assert!(to >= from);
         self.perf.record_idle(to - from);
+        self.perf
+            .record_idle_energy(PowerParams::energy_j(self.power.idle_w, to - from));
         // Idle executes no heavy instructions: demand L0.
         self.license.observe(to, License::L0);
     }
@@ -249,6 +263,44 @@ mod tests {
             "hot {} vs cold {}",
             hot.perf.ipc(),
             cold.perf.ipc()
+        );
+    }
+
+    #[test]
+    fn energy_charged_for_busy_and_idle_time() {
+        let mut c = core();
+        let t = turbo();
+        let out = c.run_block(0, &scalar(28_000), 1, 16, &t);
+        let expected = c.power.active_w(out.license, out.ghz) * out.ns as f64 * 1e-9;
+        assert!((c.perf.active_energy_j - expected).abs() < 1e-15);
+        assert_eq!(c.perf.idle_energy_j, 0.0);
+        c.idle_until(out.ns, out.ns + MS);
+        let idle = c.power.idle_w * MS as f64 * 1e-9;
+        assert!((c.perf.idle_energy_j - idle).abs() < 1e-15);
+        assert!(c.perf.energy_j() > 0.0);
+    }
+
+    #[test]
+    fn avx_slice_draws_more_power_than_scalar() {
+        // Same wall-clock time at L2 costs more Joules than at L0 even
+        // though the L2 clock is slower — the power story behind the
+        // license mechanism.
+        let t = turbo();
+        let mut s = core();
+        let mut a = core();
+        let mut now_s = 0;
+        let mut now_a = 0;
+        while now_s < 20 * MS {
+            now_s += s.run_block(now_s, &scalar(10_000), 2, 16, &t).ns;
+        }
+        while now_a < 20 * MS {
+            now_a += a.run_block(now_a, &avx512(10_000), 2, 16, &t).ns;
+        }
+        let per_ns_s = s.perf.active_energy_j / s.perf.busy_ns as f64;
+        let per_ns_a = a.perf.active_energy_j / a.perf.busy_ns as f64;
+        assert!(
+            per_ns_a > per_ns_s * 1.2,
+            "AVX-512 watts must exceed scalar watts: {per_ns_a} vs {per_ns_s}"
         );
     }
 

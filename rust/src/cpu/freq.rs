@@ -15,7 +15,15 @@
 //! The `CORE_POWER.*` PMU events are defined by this machine: time spent
 //! at each level increments `LVLn_TURBO_LICENSE`, time in the throttled
 //! phase increments `THROTTLE`.
+//!
+//! The *policy* knobs of the machine — grant latency, the stall an
+//! actual switch pays (voltage ramp), and the hold-window width — are
+//! delegated to a pluggable [`Governor`](super::governor::Governor)
+//! selected by [`FreqParams::governor`]. The default
+//! ([`GovernorSpec::IntelLegacy`]) uses the base values verbatim, so the
+//! machine behaves bit-for-bit as it did before governors existed.
 
+use super::governor::{Governor, GovernorSpec};
 use crate::sim::{Time, MS, US};
 
 /// Power license levels. Ordering: `L0 < L1 < L2` in *severity* (L2 is the
@@ -74,6 +82,10 @@ pub struct FreqParams {
     /// executed per cycle" (paper §2, Lemire [14]). Dense vectorized loops
     /// exceed this; sporadic wide moves and stall-bound streams do not.
     pub dense_threshold: f64,
+    /// DVFS governor policy applied on top of these base values. The
+    /// default, [`GovernorSpec::IntelLegacy`], uses every base value
+    /// verbatim — bit-for-bit the pre-governor behaviour.
+    pub governor: GovernorSpec,
 }
 
 impl Default for FreqParams {
@@ -88,6 +100,7 @@ impl Default for FreqParams {
             switch_stall: 8 * US,
             detect_insns: 100,
             dense_threshold: 1.0,
+            governor: GovernorSpec::IntelLegacy,
         }
     }
 }
@@ -105,6 +118,9 @@ enum Phase {
 #[derive(Clone, Debug)]
 pub struct LicenseState {
     params: FreqParams,
+    /// Governor consulted for grant latency, switch stalls, and hold
+    /// windows (built from `params.governor`; may carry its own state).
+    gov: Box<dyn Governor>,
     granted: License,
     phase: Phase,
     /// Deadline at which the hold window expires (set while demand < granted).
@@ -131,8 +147,10 @@ pub struct EffectiveState {
 
 impl LicenseState {
     pub fn new(params: FreqParams) -> Self {
+        let gov = params.governor.build();
         LicenseState {
             params,
+            gov,
             granted: License::L0,
             phase: Phase::Stable,
             relax_at: None,
@@ -145,6 +163,11 @@ impl LicenseState {
 
     pub fn params(&self) -> &FreqParams {
         &self.params
+    }
+
+    /// The governor this state machine runs under.
+    pub fn governor(&self) -> GovernorSpec {
+        self.gov.spec()
     }
 
     /// Currently granted license (the frequency the core runs at).
@@ -171,10 +194,12 @@ impl LicenseState {
         // 1. Complete an in-flight grant whose latency has elapsed.
         if let Phase::Throttled { target, grant_at } = self.phase {
             if now >= grant_at {
+                let from = self.granted;
                 self.granted = target;
                 self.phase = Phase::Stable;
                 self.switches += 1;
-                self.stall_until = grant_at + self.params.switch_stall;
+                self.stall_until =
+                    grant_at + self.gov.switch_stall(&self.params, grant_at, from, target);
                 // A fresh grant starts a fresh observation window.
                 self.relax_at = None;
                 self.window_demand = License::L0;
@@ -188,7 +213,8 @@ impl LicenseState {
         };
         if demand > effective_target {
             self.requests += 1;
-            self.phase = Phase::Throttled { target: demand, grant_at: now + self.params.grant_latency };
+            let grant_at = now + self.gov.grant_latency(&self.params);
+            self.phase = Phase::Throttled { target: demand, grant_at };
             self.relax_at = None;
         }
 
@@ -196,7 +222,8 @@ impl LicenseState {
         if demand < self.granted && matches!(self.phase, Phase::Stable) {
             match self.relax_at {
                 None => {
-                    self.relax_at = Some(now + self.params.hold);
+                    let hold = self.gov.hold(&self.params, now);
+                    self.relax_at = Some(now + hold);
                     self.window_demand = demand;
                 }
                 Some(deadline) => {
@@ -207,9 +234,11 @@ impl LicenseState {
                         // behaviour — no intermediate-step requirement).
                         let to = self.window_demand.max(demand);
                         if to < self.granted {
+                            let from = self.granted;
                             self.granted = to;
                             self.switches += 1;
-                            self.stall_until = now + self.params.switch_stall;
+                            self.stall_until =
+                                now + self.gov.switch_stall(&self.params, now, from, to);
                         }
                         self.relax_at = None;
                         self.window_demand = License::L0;
@@ -350,6 +379,27 @@ mod tests {
         m.observe(grant, License::L2);
         assert!(m.stall_ns(grant) > 0, "PLL stall right after a switch");
         assert_eq!(m.stall_ns(300 * US), 0);
+    }
+
+    #[test]
+    fn governors_are_selectable_per_state_machine() {
+        let mut p = FreqParams::default();
+        p.governor = GovernorSpec::SlowRamp;
+        let mut slow = LicenseState::new(p);
+        assert_eq!(slow.governor(), GovernorSpec::SlowRamp);
+        let mut legacy = machine();
+        assert_eq!(legacy.governor(), GovernorSpec::IntelLegacy);
+        let grant = FreqParams::default().grant_latency;
+        for m in [&mut slow, &mut legacy] {
+            m.observe(0, License::L2);
+            m.observe(grant, License::L2); // grant completes: switch + stall
+        }
+        assert!(
+            slow.stall_ns(grant) > legacy.stall_ns(grant),
+            "slow-ramp must pay a voltage-ramp stall on top of the PLL relock: {} vs {}",
+            slow.stall_ns(grant),
+            legacy.stall_ns(grant)
+        );
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Pluggable DVFS governors: the policy layer above the license state
+//! machine.
+//!
+//! The hardware state machine in [`freq`](super::freq) fixes *what*
+//! transitions exist (request → throttled phase → grant; hold window →
+//! relax). The governor decides *how expensive and how eager* they are:
+//! how long a grant takes, how long an actual frequency switch stalls
+//! the core (the voltage ramp), and how wide the AVX hysteresis timer
+//! is. "Dim Silicon and the Case for Improved DVFS Policies"
+//! (Gottschlag et al.) and "Energy Efficiency Features of the Intel
+//! Skylake-SP Processor" (Schöne et al.) both show these policy knobs
+//! materially change the cost of AVX-induced transitions, so they are a
+//! scenario axis here, selectable per machine:
+//!
+//! * [`IntelLegacy`] — the shipped Skylake-SP behaviour and the
+//!   differential anchor: fixed ~2 ms AVX timer, effectively instant
+//!   voltage ramps. Returns every base [`FreqParams`] value verbatim,
+//!   so a machine running this governor is **bit-for-bit identical** to
+//!   the pre-governor simulator (pinned by `rust/tests/power.rs`).
+//! * [`SlowRamp`] — Skylake-SP with the *measured* transition costs:
+//!   every actual frequency switch additionally pays a voltage-ramp
+//!   stall proportional to the number of license levels crossed
+//!   (Mazouz et al. / Schöne et al. report tens of µs per transition).
+//! * [`DimSilicon`] — an improved-DVFS policy: under transition *churn*
+//!   (switches arriving back-to-back) it widens the AVX timer, trading
+//!   a longer stay at the low frequency for fewer PLL stalls and fewer
+//!   oscillations — the "don't thrash the PLL" policy the Dim Silicon
+//!   paper argues for.
+//!
+//! [`GovernorSpec`] is the serializable handle (config keys, CLI flags,
+//! the scenario-matrix axis); [`GovernorSpec::build`] instantiates the
+//! boxed state. Governors may keep internal state (e.g. churn
+//! tracking), which is why the switch/hold hooks take `&mut self`.
+
+use super::freq::{FreqParams, License};
+use crate::sim::{Time, MS, US};
+
+/// Which governor to run — the config/CLI/matrix-axis handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GovernorSpec {
+    /// Shipped Skylake-SP policy (the pre-governor differential anchor).
+    IntelLegacy,
+    /// Measured voltage-ramp transition stalls on every switch.
+    SlowRamp,
+    /// Widens the AVX hysteresis timer under transition churn.
+    DimSilicon,
+}
+
+impl Default for GovernorSpec {
+    fn default() -> Self {
+        GovernorSpec::IntelLegacy
+    }
+}
+
+impl GovernorSpec {
+    /// Stable name used in tables, configs, and CLI flags.
+    pub fn name(self) -> &'static str {
+        match self {
+            GovernorSpec::IntelLegacy => "intel-legacy",
+            GovernorSpec::SlowRamp => "slow-ramp",
+            GovernorSpec::DimSilicon => "dim-silicon",
+        }
+    }
+
+    /// Parse a config/CLI name; unknown names are an error, never a
+    /// silent default (a typo would otherwise run the wrong policy and
+    /// label the tables with it).
+    pub fn parse(s: &str) -> anyhow::Result<GovernorSpec> {
+        match s {
+            "intel-legacy" => Ok(GovernorSpec::IntelLegacy),
+            "slow-ramp" => Ok(GovernorSpec::SlowRamp),
+            "dim-silicon" => Ok(GovernorSpec::DimSilicon),
+            other => anyhow::bail!(
+                "unknown governor {other:?} (intel-legacy|slow-ramp|dim-silicon)"
+            ),
+        }
+    }
+
+    /// Every governor, in sweep order.
+    pub fn all() -> [GovernorSpec; 3] {
+        [GovernorSpec::IntelLegacy, GovernorSpec::SlowRamp, GovernorSpec::DimSilicon]
+    }
+
+    /// Instantiate the governor with its default tuning.
+    pub fn build(self) -> Box<dyn Governor> {
+        match self {
+            GovernorSpec::IntelLegacy => Box::new(IntelLegacy),
+            GovernorSpec::SlowRamp => Box::new(SlowRamp::default()),
+            GovernorSpec::DimSilicon => Box::new(DimSilicon::default()),
+        }
+    }
+}
+
+/// The policy hooks the license state machine consults. Implementations
+/// must be deterministic functions of their own state and the arguments
+/// (no wall clock, no RNG) — machine determinism depends on it.
+pub trait Governor: std::fmt::Debug {
+    /// Which spec built this governor (for labels and cloning checks).
+    fn spec(&self) -> GovernorSpec;
+
+    /// Latency from license request to PCU grant.
+    fn grant_latency(&self, base: &FreqParams) -> Time;
+
+    /// Stall charged on an *actual* frequency switch from `from` to
+    /// `to` completing at `now` (the voltage-ramp / PLL-relock cost).
+    /// Called exactly once per switch, so stateful governors may use it
+    /// to observe transition churn.
+    fn switch_stall(&mut self, base: &FreqParams, now: Time, from: License, to: License)
+        -> Time;
+
+    /// Length of the hold (AVX hysteresis) window opened at `now`
+    /// before the core may relax to a faster license.
+    fn hold(&mut self, base: &FreqParams, now: Time) -> Time;
+
+    /// Clone into a fresh box ([`LicenseState`](super::freq::LicenseState)
+    /// derives `Clone`).
+    fn clone_box(&self) -> Box<dyn Governor>;
+}
+
+impl Clone for Box<dyn Governor> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// The shipped Skylake-SP policy: every hook returns the base
+/// [`FreqParams`] value verbatim. This is the load-bearing differential
+/// property — with this governor the state machine's arithmetic is
+/// exactly the pre-governor code path.
+#[derive(Clone, Debug)]
+pub struct IntelLegacy;
+
+impl Governor for IntelLegacy {
+    fn spec(&self) -> GovernorSpec {
+        GovernorSpec::IntelLegacy
+    }
+
+    fn grant_latency(&self, base: &FreqParams) -> Time {
+        base.grant_latency
+    }
+
+    fn switch_stall(&mut self, base: &FreqParams, _now: Time, _from: License, _to: License) -> Time {
+        base.switch_stall
+    }
+
+    fn hold(&mut self, base: &FreqParams, _now: Time) -> Time {
+        base.hold
+    }
+
+    fn clone_box(&self) -> Box<dyn Governor> {
+        Box::new(self.clone())
+    }
+}
+
+/// Skylake-SP with measured voltage-ramp costs: each actual switch
+/// stalls for the base PLL relock *plus* `ramp_per_level` per license
+/// level crossed (L0→L2 crosses two). Schöne et al. measure per-
+/// transition latencies in the tens of microseconds on Skylake-SP.
+#[derive(Clone, Debug)]
+pub struct SlowRamp {
+    pub ramp_per_level: Time,
+}
+
+impl Default for SlowRamp {
+    fn default() -> Self {
+        SlowRamp { ramp_per_level: 25 * US }
+    }
+}
+
+impl Governor for SlowRamp {
+    fn spec(&self) -> GovernorSpec {
+        GovernorSpec::SlowRamp
+    }
+
+    fn grant_latency(&self, base: &FreqParams) -> Time {
+        base.grant_latency
+    }
+
+    fn switch_stall(&mut self, base: &FreqParams, _now: Time, from: License, to: License) -> Time {
+        let levels = from.index().abs_diff(to.index()).max(1) as Time;
+        base.switch_stall + self.ramp_per_level * levels
+    }
+
+    fn hold(&mut self, base: &FreqParams, _now: Time) -> Time {
+        base.hold
+    }
+
+    fn clone_box(&self) -> Box<dyn Governor> {
+        Box::new(self.clone())
+    }
+}
+
+/// Improved-DVFS policy ("Dim Silicon"): when frequency switches arrive
+/// back-to-back (within `churn_window` of each other), each one raises
+/// a churn level (capped at `max_widen`), and the AVX hysteresis timer
+/// widens to `base.hold × (1 + churn)`. A quiet `churn_window` resets
+/// the level, restoring the stock 2 ms timer. The effect: oscillating
+/// AVX/scalar phases stop thrashing the PLL — the core simply stays at
+/// the low license through short scalar gaps — at the cost of more time
+/// spent slow (the energy/latency trade `repro energydelay` measures).
+#[derive(Clone, Debug)]
+pub struct DimSilicon {
+    /// Two switches closer than this count as churn.
+    pub churn_window: Time,
+    /// Cap on the widening level (timer grows to at most
+    /// `hold × (1 + max_widen)`).
+    pub max_widen: u32,
+    churn: u32,
+    last_switch: Option<Time>,
+}
+
+impl Default for DimSilicon {
+    fn default() -> Self {
+        DimSilicon { churn_window: 10 * MS, max_widen: 3, churn: 0, last_switch: None }
+    }
+}
+
+impl DimSilicon {
+    /// Current widening level (diagnostics/tests).
+    pub fn churn(&self) -> u32 {
+        self.churn
+    }
+
+    fn decay_if_quiet(&mut self, now: Time) {
+        if let Some(t) = self.last_switch {
+            if now.saturating_sub(t) > self.churn_window {
+                self.churn = 0;
+            }
+        }
+    }
+}
+
+impl Governor for DimSilicon {
+    fn spec(&self) -> GovernorSpec {
+        GovernorSpec::DimSilicon
+    }
+
+    fn grant_latency(&self, base: &FreqParams) -> Time {
+        base.grant_latency
+    }
+
+    fn switch_stall(&mut self, base: &FreqParams, now: Time, _from: License, _to: License) -> Time {
+        match self.last_switch {
+            Some(t) if now.saturating_sub(t) <= self.churn_window => {
+                self.churn = (self.churn + 1).min(self.max_widen);
+            }
+            Some(_) => self.churn = 0,
+            None => {}
+        }
+        self.last_switch = Some(now);
+        base.switch_stall
+    }
+
+    fn hold(&mut self, base: &FreqParams, now: Time) -> Time {
+        self.decay_if_quiet(now);
+        base.hold * (1 + self.churn as Time)
+    }
+
+    fn clone_box(&self) -> Box<dyn Governor> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for spec in GovernorSpec::all() {
+            assert_eq!(GovernorSpec::parse(spec.name()).unwrap(), spec);
+            assert_eq!(spec.build().spec(), spec);
+        }
+        assert!(GovernorSpec::parse("ondemand").is_err());
+    }
+
+    #[test]
+    fn intel_legacy_returns_base_params_verbatim() {
+        let base = FreqParams::default();
+        let mut g = IntelLegacy;
+        assert_eq!(g.grant_latency(&base), base.grant_latency);
+        assert_eq!(g.hold(&base, 123), base.hold);
+        assert_eq!(
+            g.switch_stall(&base, 456, License::L0, License::L2),
+            base.switch_stall
+        );
+    }
+
+    #[test]
+    fn slow_ramp_scales_with_levels_crossed() {
+        let base = FreqParams::default();
+        let mut g = SlowRamp::default();
+        let one = g.switch_stall(&base, 0, License::L0, License::L1);
+        let two = g.switch_stall(&base, 0, License::L0, License::L2);
+        assert!(one > base.switch_stall);
+        assert_eq!(two - base.switch_stall, 2 * (one - base.switch_stall));
+        assert_eq!(g.hold(&base, 0), base.hold, "slow-ramp keeps the stock timer");
+    }
+
+    #[test]
+    fn dim_silicon_widens_under_churn_and_resets_when_quiet() {
+        let base = FreqParams::default();
+        let mut g = DimSilicon::default();
+        assert_eq!(g.hold(&base, 0), base.hold);
+        // Back-to-back switches raise the churn level…
+        g.switch_stall(&base, 0, License::L0, License::L2);
+        g.switch_stall(&base, 2 * MS, License::L2, License::L0);
+        g.switch_stall(&base, 4 * MS, License::L0, License::L2);
+        assert_eq!(g.churn(), 2);
+        assert_eq!(g.hold(&base, 5 * MS), 3 * base.hold);
+        // …and the cap binds…
+        g.switch_stall(&base, 5 * MS, License::L2, License::L0);
+        g.switch_stall(&base, 6 * MS, License::L0, License::L2);
+        assert_eq!(g.churn(), g.max_widen);
+        // …while a quiet window resets to the stock timer.
+        assert_eq!(g.hold(&base, 6 * MS + g.churn_window + 1), base.hold);
+    }
+}

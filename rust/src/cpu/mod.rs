@@ -14,17 +14,24 @@
 //!   new license (Fig 1),
 //! * ~2 ms hysteresis before reverting to a higher-frequency level,
 //! * `CORE_POWER.LVL{0,1,2}_TURBO_LICENSE` / `CORE_POWER.THROTTLE` PMU
-//!   counter semantics defined directly by this state machine.
+//!   counter semantics defined directly by this state machine,
+//! * a per-core power model with exact per-slice energy integration
+//!   ([`power`]) and pluggable DVFS governors ([`governor`]) deciding
+//!   grant latency, voltage-ramp stalls, and the AVX-timer width.
 
 pub mod turbo;
 pub mod freq;
+pub mod governor;
 pub mod ipc;
 pub mod perf;
+pub mod power;
 pub mod core;
 pub mod topology;
 
 pub use core::{Core, SliceOutcome};
 pub use freq::{FreqParams, License, LicenseState};
+pub use governor::{Governor, GovernorSpec};
 pub use perf::PerfCounters;
+pub use power::PowerParams;
 pub use topology::Topology;
 pub use turbo::TurboTable;

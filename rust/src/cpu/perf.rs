@@ -39,6 +39,11 @@ pub struct PerfCounters {
     pub freq_switches: u64,
     /// PLL stall time.
     pub stall_ns: Time,
+    /// Energy consumed while executing (J), integrated exactly per
+    /// slice by the charging sites (see [`crate::cpu::power`]).
+    pub active_energy_j: f64,
+    /// Energy consumed while idle (J).
+    pub idle_energy_j: f64,
 }
 
 impl PerfCounters {
@@ -78,6 +83,24 @@ impl PerfCounters {
     pub fn record_stall(&mut self, ns: Time) {
         self.stall_ns += ns;
         self.busy_ns += ns;
+    }
+
+    /// Charge energy drawn while executing (J).
+    pub fn record_active_energy(&mut self, joules: f64) {
+        self.active_energy_j += joules;
+    }
+
+    /// Charge energy drawn while idle (J).
+    pub fn record_idle_energy(&mut self, joules: f64) {
+        self.idle_energy_j += joules;
+    }
+
+    /// Total energy consumed (J), active + idle. (Average watts are a
+    /// reporting concern — [`crate::metrics::EnergyRow::avg_w`] divides
+    /// by the measurement window, the one denominator every table
+    /// uses.)
+    pub fn energy_j(&self) -> f64 {
+        self.active_energy_j + self.idle_energy_j
     }
 
     /// Average busy frequency in GHz (Fig 6 metric). Idle time excluded,
@@ -138,6 +161,8 @@ impl PerfCounters {
         self.license_requests += o.license_requests;
         self.freq_switches += o.freq_switches;
         self.stall_ns += o.stall_ns;
+        self.active_energy_j += o.active_energy_j;
+        self.idle_energy_j += o.idle_energy_j;
     }
 }
 
@@ -191,5 +216,21 @@ mod tests {
         assert_eq!(c.avg_busy_ghz(), 0.0);
         assert_eq!(c.ipc(), 0.0);
         assert_eq!(c.license_time_share(), [0.0; 3]);
+        assert_eq!(c.energy_j(), 0.0);
+    }
+
+    #[test]
+    fn energy_accumulates_and_merges() {
+        let mut a = PerfCounters::default();
+        a.record_slice(License::L0, false, 2.8e6, 1_000_000, 2.8, 1000, 0, 0.0, 0.0);
+        a.record_active_energy(2.0);
+        a.record_idle(1_000_000);
+        a.record_idle_energy(0.5);
+        assert_eq!(a.energy_j(), 2.5);
+        let mut b = PerfCounters::default();
+        b.record_active_energy(1.0);
+        a.merge(&b);
+        assert_eq!(a.active_energy_j, 3.0);
+        assert_eq!(a.idle_energy_j, 0.5);
     }
 }

@@ -1,0 +1,115 @@
+//! Per-core power model and exact energy integration.
+//!
+//! The license mechanism exists because wide instructions *draw more
+//! power*: the PCU lowers frequency precisely so the package stays
+//! inside its electrical limits (paper §2; Schöne et al. measure the
+//! Skylake-SP power/frequency trade directly). Modeling power closes
+//! the loop: the simulator can now report what the mitigation *costs*
+//! and *saves* in Joules, not just microseconds.
+//!
+//! The model is deliberately simple and exactly integrable: a core
+//! draws `idle_w` while idle and `active_w_per_ghz[license] × f` while
+//! executing at frequency `f`. Dynamic power is linear in frequency at
+//! a fixed voltage, and the license level is the voltage proxy — wide
+//! execution units switching at the higher AVX voltage cost more per
+//! GHz, which is why `active_w_per_ghz` *rises* with license severity
+//! even as the frequency falls. Within one execution slice the license
+//! and frequency are constant, so the slice's energy is exactly
+//! `P × dt` — no quadrature error, and per-core energies merge by
+//! addition (the same law the latency recorders obey, property-tested
+//! in `rust/tests/power.rs`).
+//!
+//! Charging points: [`Core::run_block`](super::Core::run_block) and
+//! [`Core::idle_until`](super::Core::idle_until) for workload
+//! execution and idle time, and the machine's scheduler-overhead path
+//! (`sched/machine.rs::charge_overhead`) for kernel time — every
+//! nanosecond the frequency model accounts for is also
+//! energy-accounted.
+
+use super::freq::License;
+use crate::sim::Time;
+
+/// Per-core power-model parameters. Defaults are Skylake-SP-shaped:
+/// ~4.5 W/core active at the 2.8 GHz scalar all-core turbo, ~6.5 W at
+/// the 2.4 GHz AVX2 license, ~8 W at the 1.9 GHz AVX-512 license
+/// (per-core shares of the package numbers Schöne et al. report),
+/// 1.5 W idle.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PowerParams {
+    /// Power drawn by an idle core (W).
+    pub idle_w: f64,
+    /// Active power per GHz at each license level (W/GHz). Rises with
+    /// license severity: the AVX voltage/capacitance costs more per
+    /// cycle even though the cycles come slower.
+    pub active_w_per_ghz: [f64; 3],
+}
+
+impl Default for PowerParams {
+    fn default() -> Self {
+        PowerParams { idle_w: 1.5, active_w_per_ghz: [1.6, 2.7, 4.2] }
+    }
+}
+
+impl PowerParams {
+    /// Active power (W) for a core holding `license` at `ghz`.
+    pub fn active_w(&self, license: License, ghz: f64) -> f64 {
+        self.active_w_per_ghz[license.index()] * ghz
+    }
+
+    /// Exact energy (J) of drawing `w` watts for `ns` nanoseconds.
+    pub fn energy_j(w: f64, ns: Time) -> f64 {
+        w * ns as f64 * 1e-9
+    }
+
+    /// Reject parameter sets that would silently corrupt the energy
+    /// accounting (negative power would make energy non-monotone).
+    pub fn validate(&self) -> Result<(), String> {
+        let ok = |x: f64| x.is_finite() && x >= 0.0;
+        if !ok(self.idle_w) {
+            return Err(format!("power.idle_w = {} must be finite and ≥ 0", self.idle_w));
+        }
+        for (i, w) in self.active_w_per_ghz.iter().enumerate() {
+            if !ok(*w) {
+                return Err(format!(
+                    "power.active_w_per_ghz[{i}] = {w} must be finite and ≥ 0"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_tell_the_avx_power_story() {
+        let p = PowerParams::default();
+        // Watts at the documented all-core turbos: AVX licenses draw
+        // more power despite running slower.
+        let l0 = p.active_w(License::L0, 2.8);
+        let l1 = p.active_w(License::L1, 2.4);
+        let l2 = p.active_w(License::L2, 1.9);
+        assert!(l0 < l1 && l1 < l2, "{l0} {l1} {l2}");
+        assert!(p.idle_w < l0);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn energy_is_exact_power_times_time() {
+        // 4 W for 250 ms = 1 J, exactly representable.
+        assert_eq!(PowerParams::energy_j(4.0, 250_000_000), 1.0);
+        assert_eq!(PowerParams::energy_j(0.0, 1_000_000), 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_nonsense() {
+        let mut p = PowerParams::default();
+        p.idle_w = -1.0;
+        assert!(p.validate().is_err());
+        p.idle_w = 1.0;
+        p.active_w_per_ghz[2] = f64::NAN;
+        assert!(p.validate().is_err());
+    }
+}

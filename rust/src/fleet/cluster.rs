@@ -210,6 +210,9 @@ impl FleetRun {
             type_changes_per_sec: sum(&|m| m.type_changes_per_sec),
             migrations_per_sec: sum(&|m| m.migrations_per_sec),
             cross_socket_migrations_per_sec: sum(&|m| m.cross_socket_migrations_per_sec),
+            // Joules add across machines (same law as the recorders).
+            active_energy_j: sum(&|m| m.active_energy_j),
+            idle_energy_j: sum(&|m| m.idle_energy_j),
             throttle_ratio: mean(&|m| m.throttle_ratio),
             license_share,
             completed: self.completed,

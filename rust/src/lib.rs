@@ -6,7 +6,8 @@
 //! * [`util`] — deterministic RNG, statistics, histograms, CLI/config parsing.
 //! * [`sim`] — discrete-event simulation engine (nanosecond clock).
 //! * [`isa`] — instruction-block IR: the "machine code" the simulated CPU runs.
-//! * [`cpu`] — Skylake-SP core model: AVX power-license state machine, turbo
+//! * [`cpu`] — Skylake-SP core model: AVX power-license state machine,
+//!   pluggable DVFS governors, per-core power/energy model, turbo
 //!   tables, IPC model, PMU counters.
 //! * [`sched`] — MuQSS baseline scheduler + the paper's core-specialization
 //!   extension, plus baselines and the fault-and-migrate future-work feature.

@@ -71,9 +71,12 @@ usage:
   avxfreq fleet [--config configs/fleet_slo.toml] [--machines N]
                 [--router round-robin|least-outstanding|avx-partition]
                 [--avx-machines K] [--rate R] [--quick] [--seed N] [--threads T]
+  avxfreq energy [--config configs/energy.toml] [--quick] [--seed N] [--threads T]
+                 [--governors intel-legacy,slow-ramp,dim-silicon]
   avxfreq serve [--artifacts DIR] [--port 8443]
   avxfreq calibrate [--artifacts DIR]
-experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar fig6 ipc fig7 cryptobench ablations";
+experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar energydelay fig6 ipc fig7
+             cryptobench ablations";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -85,6 +88,7 @@ fn main() -> anyhow::Result<()> {
         Some("matrix") => cmd_matrix(&args),
         Some("traffic") => cmd_traffic(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("energy") => cmd_energy(&args),
         Some("serve") => avxfreq::runtime::server::cmd_serve(&args),
         Some("calibrate") => avxfreq::runtime::calibrate::cmd_calibrate(&args),
         // Bare experiment id (`avxfreq fig5`) = `avxfreq repro fig5`.
@@ -464,6 +468,116 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         "[avxfreq] wrote {} ({} machines in {:.1}s wallclock)",
         path.display(),
         run.machines.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// `avxfreq energy` — the power/energy view. With `--config` (e.g.
+/// `configs/energy.toml`): one simulation, reported per core (energy
+/// split active/idle, watts, perf-per-watt) plus the run summary.
+/// Without: the governor sweep (`ScenarioMatrix::energy_sweep`) —
+/// {unmodified, core-spec} × every governor — with the matrix table and
+/// a per-cell energy table.
+fn cmd_energy(args: &Args) -> anyhow::Result<()> {
+    use avxfreq::cpu::GovernorSpec;
+    use avxfreq::metrics::{energy_report, machine_energy_rows, EnergyRow};
+    let quick = args.flag("quick");
+    let seed = args.get_parse::<u64>("seed", 0x5EED);
+
+    if let Some(path) = args.get("config") {
+        // The config branch runs exactly one simulation under the
+        // config's own governor; silently ignoring --governors here
+        // would misattribute every table (same rationale as rejecting
+        // unknown governor names in the parser).
+        anyhow::ensure!(
+            args.get("governors").is_none(),
+            "--governors selects cells of the sweep; with --config, set power.governor \
+             in the file instead"
+        );
+        let conf = avxfreq::util::config::Config::load(path)?;
+        let mut cfg = WebCfg::from_config(&conf)?;
+        if args.get("seed").is_some() {
+            cfg.seed = seed;
+        }
+        if quick {
+            cfg.warmup = cfg.warmup.min(150 * MS);
+            cfg.measure = cfg.measure.min(300 * MS);
+        }
+        let secs = cfg.measure as f64 / SEC as f64;
+        eprintln!(
+            "[avxfreq] energy: {} under the {} governor…",
+            cfg.isa.name(),
+            cfg.governor.name()
+        );
+        let (run, m) = run_webserver_machine(&cfg);
+        println!("== Run summary ==");
+        println!("config:            {}", run.cfg_name);
+        println!("governor:          {}", cfg.governor.name());
+        println!("throughput:        {:.0} req/s", run.throughput_rps);
+        println!("p99 latency:       {:.0} µs", run.tail.p99_us);
+        println!(
+            "energy:            {:.2} J active + {:.2} J idle = {:.2} J ({:.1} W avg)",
+            run.active_energy_j,
+            run.idle_energy_j,
+            run.energy_j(),
+            run.energy_j() / secs
+        );
+        println!(
+            "efficiency:        {:.3} mJ/req, {:.1} req/J (perf-per-watt)",
+            run.j_per_req() * 1e3,
+            run.req_per_j()
+        );
+        println!();
+        let rows = machine_energy_rows(&m, cfg.governor.name(), run.completed, secs);
+        let table = energy_report(&rows);
+        print!("{}", table.render());
+        let p = table.save_csv("energy")?;
+        eprintln!("[avxfreq] wrote {}", p.display());
+        return Ok(());
+    }
+
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = args.get_parse::<usize>("threads", default_threads).max(1);
+    let mut m = avxfreq::scenario::ScenarioMatrix::energy_sweep(quick, seed);
+    if let Some(spec) = args.get("governors") {
+        let governors: anyhow::Result<Vec<GovernorSpec>> =
+            spec.split(',').map(|s| GovernorSpec::parse(s.trim())).collect();
+        m.governors = governors?;
+        anyhow::ensure!(!m.governors.is_empty(), "--governors must name at least one governor");
+    }
+    eprintln!(
+        "[avxfreq] energy: {} cells ({} policies × {} governors) across up to {} threads \
+         (seed {seed:#x})…",
+        m.len(),
+        m.policies.len(),
+        m.governors.len(),
+        threads.min(m.len().max(1))
+    );
+    let t0 = std::time::Instant::now();
+    let secs = m.measure as f64 / SEC as f64;
+    let result = m.run(threads);
+    print!("{}", result.render());
+    println!();
+    let rows: Vec<EnergyRow> = result
+        .cells
+        .iter()
+        .map(|c| EnergyRow {
+            scope: format!("{}|{}", c.scenario.index, c.scenario.policy),
+            governor: c.scenario.governor.name().to_string(),
+            active_j: c.run.active_energy_j,
+            idle_j: c.run.idle_energy_j,
+            completed: c.run.completed,
+            secs,
+        })
+        .collect();
+    let table = energy_report(&rows);
+    print!("{}", table.render());
+    let path = table.save_csv("energy")?;
+    eprintln!(
+        "[avxfreq] wrote {} ({} cells in {:.1}s wallclock)",
+        path.display(),
+        result.cells.len(),
         t0.elapsed().as_secs_f64()
     );
     Ok(())

@@ -8,6 +8,63 @@ use crate::scenario::CellResult;
 use crate::sched::machine::Machine;
 use crate::util::table::{fmt_f, Table};
 
+/// One row of the [`energy_report`] table: the energy accounting of one
+/// scope (a core, a machine, a fleet machine, or a whole cluster).
+/// Separated from the simulator so the golden-file test can pin the
+/// formatting on synthetic values (same pattern as
+/// [`crate::repro::fleetvar::RouterVar`]).
+#[derive(Clone, Debug)]
+pub struct EnergyRow {
+    /// What this row accounts: `core3`, `machine`, `m0`, `cluster`, or
+    /// a scenario label.
+    pub scope: String,
+    /// Governor the scope ran under.
+    pub governor: String,
+    /// Energy consumed while executing (J).
+    pub active_j: f64,
+    /// Energy consumed while idle (J).
+    pub idle_j: f64,
+    /// Completed requests attributed to this scope; 0 when requests are
+    /// not attributable (per-core rows), rendering the per-request
+    /// columns as `-`.
+    pub completed: u64,
+    /// Measurement window (s).
+    pub secs: f64,
+}
+
+impl EnergyRow {
+    pub fn total_j(&self) -> f64 {
+        self.active_j + self.idle_j
+    }
+
+    /// Average power over the window (W).
+    pub fn avg_w(&self) -> f64 {
+        if self.secs <= 0.0 {
+            0.0
+        } else {
+            self.total_j() / self.secs
+        }
+    }
+
+    /// Energy per completed request (mJ).
+    pub fn mj_per_req(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.total_j() / self.completed as f64 * 1e3
+        }
+    }
+
+    /// Perf-per-watt: completed requests per Joule (== req/s per W).
+    pub fn req_per_j(&self) -> f64 {
+        if self.total_j() <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.total_j()
+        }
+    }
+}
+
 /// Per-core frequency/licensing breakdown of a finished run (Fig 6's
 /// underlying data).
 pub fn core_report(m: &Machine) -> Table {
@@ -77,6 +134,64 @@ pub fn perf_report(total: &PerfCounters) -> Table {
         t.row(&[k.to_string(), v]);
     }
     t
+}
+
+/// Per-scope energy table: Joules split active/idle, average watts, and
+/// the per-request efficiency metrics. Fixed-precision formatting keeps
+/// the bytes stable for the golden-file test
+/// (`rust/tests/golden/energy_report.txt`) and the cross-thread
+/// determinism property. Rows with `completed == 0` render `-` for the
+/// per-request columns instead of a misleading 0.
+pub fn energy_report(rows: &[EnergyRow]) -> Table {
+    let mut t = Table::new(
+        "Energy — per-scope Joules, watts, and perf-per-watt",
+        &["scope", "governor", "active J", "idle J", "total J", "avg W", "mJ/req", "req/J"],
+    );
+    for r in rows {
+        let per_req = |v: f64, d: usize| {
+            if r.completed == 0 { "-".to_string() } else { fmt_f(v, d) }
+        };
+        t.row(&[
+            r.scope.clone(),
+            r.governor.clone(),
+            fmt_f(r.active_j, 3),
+            fmt_f(r.idle_j, 3),
+            fmt_f(r.total_j(), 3),
+            fmt_f(r.avg_w(), 2),
+            per_req(r.mj_per_req(), 3),
+            per_req(r.req_per_j(), 1),
+        ]);
+    }
+    t
+}
+
+/// Per-core + machine-total [`EnergyRow`]s for a finished machine —
+/// the `avxfreq energy --config` view. Per-core completions are not
+/// attributable, so only the `machine` row carries the per-request
+/// metrics.
+pub fn machine_energy_rows(m: &Machine, governor: &str, completed: u64, secs: f64) -> Vec<EnergyRow> {
+    let mut rows: Vec<EnergyRow> = m
+        .cores
+        .iter()
+        .map(|c| EnergyRow {
+            scope: format!("core{}", c.id),
+            governor: governor.to_string(),
+            active_j: c.perf.active_energy_j,
+            idle_j: c.perf.idle_energy_j,
+            completed: 0,
+            secs,
+        })
+        .collect();
+    let total = m.total_perf();
+    rows.push(EnergyRow {
+        scope: "machine".to_string(),
+        governor: governor.to_string(),
+        active_j: total.active_energy_j,
+        idle_j: total.idle_energy_j,
+        completed,
+        secs,
+    });
+    rows
 }
 
 /// Unified comparison table for an executed scenario matrix: one row per
@@ -225,5 +340,27 @@ mod tests {
         assert!(s.render().contains("migrations"));
         let p = perf_report(&m.total_perf());
         assert!(p.render().contains("CORE_POWER.THROTTLE"));
+        let rows = machine_energy_rows(&m, "intel-legacy", 0, 1.0);
+        assert_eq!(rows.len(), 3, "2 core rows + machine total");
+        assert!(energy_report(&rows).render().contains("avg W"));
+    }
+
+    #[test]
+    fn energy_row_metrics() {
+        let r = EnergyRow {
+            scope: "machine".to_string(),
+            governor: "intel-legacy".to_string(),
+            active_j: 100.0,
+            idle_j: 25.0,
+            completed: 50_000,
+            secs: 2.0,
+        };
+        assert_eq!(r.total_j(), 125.0);
+        assert_eq!(r.avg_w(), 62.5);
+        assert!((r.mj_per_req() - 2.5).abs() < 1e-12);
+        assert!((r.req_per_j() - 400.0).abs() < 1e-12);
+        let empty = EnergyRow { completed: 0, active_j: 0.0, idle_j: 0.0, ..r };
+        assert_eq!(empty.mj_per_req(), 0.0);
+        assert_eq!(empty.req_per_j(), 0.0);
     }
 }

@@ -1,6 +1,6 @@
 //! Declarative scenario matrices: sweep topology × policy × workload ×
-//! ISA (the AVX-ratio axis) × load level × arrival process in one
-//! parallel, deterministic run.
+//! ISA (the AVX-ratio axis) × load level × arrival process × fleet size
+//! × router × DVFS governor in one parallel, deterministic run.
 //!
 //! The paper evaluates one configuration at a time on one machine; the
 //! ROADMAP's production north-star needs *families* of configurations —
@@ -44,7 +44,7 @@
 //! assert_eq!(m.cells()[1].seed, cells[1].seed);
 //! ```
 
-use crate::cpu::Topology;
+use crate::cpu::{GovernorSpec, Topology};
 use crate::fleet::{run_fleet, FleetCfg, FleetRun, RouterSpec};
 use crate::sched::PolicyKind;
 use crate::sim::{Time, MS, SEC};
@@ -279,6 +279,8 @@ pub struct Scenario {
     pub fleet: usize,
     /// Router demultiplexing the cell's arrival stream over the fleet.
     pub router: RouterSpec,
+    /// DVFS governor every machine of the cell runs under.
+    pub governor: GovernorSpec,
     /// Per-cell seed: a pure function of the base seed and `index`.
     pub seed: u64,
     pub cfg: WebCfg,
@@ -307,6 +309,9 @@ impl Scenario {
         );
         if self.uses_fleet_layer() {
             s.push_str(&format!("/x{}/{}", self.fleet, self.router.label()));
+        }
+        if self.governor != GovernorSpec::IntelLegacy {
+            s.push_str(&format!("/{}", self.governor.name()));
         }
         s
     }
@@ -431,6 +436,10 @@ pub struct ScenarioMatrix {
     /// Routers to sweep (default `[RoundRobin]`). Size-1 round-robin
     /// cells bypass the fleet layer entirely and run exactly as before.
     pub routers: Vec<RouterSpec>,
+    /// DVFS governors to sweep (default `[IntelLegacy]`, which is
+    /// bit-for-bit the pre-governor simulator — so default matrices are
+    /// byte-identical to their pre-power-model output).
+    pub governors: Vec<GovernorSpec>,
     /// Latency SLO threshold applied to every cell.
     pub slo: Time,
     /// Base seed; each cell derives `mix64(base_seed ^ f(index))`.
@@ -453,6 +462,7 @@ impl ScenarioMatrix {
             arrivals: vec![ArrivalSpec::Poisson],
             fleet_sizes: vec![1],
             routers: vec![RouterSpec::RoundRobin],
+            governors: vec![GovernorSpec::IntelLegacy],
             slo: DEFAULT_SLO,
             base_seed,
             warmup: 300 * MS,
@@ -504,6 +514,27 @@ impl ScenarioMatrix {
         m
     }
 
+    /// The governor sweep behind `avxfreq energy`: the paper's
+    /// single-socket machine under {unmodified, core specialization} ×
+    /// every DVFS governor, AVX-512 build, reporting the matrix table
+    /// plus the per-cell energy table.
+    pub fn energy_sweep(quick: bool, base_seed: u64) -> Self {
+        let mut m = ScenarioMatrix::new(base_seed);
+        m.topologies = vec![TopologySpec::single_socket_paper()];
+        m.policies = vec![PolicySpec::Unmodified, PolicySpec::CoreSpec { avx_cores: 2 }];
+        m.workloads = vec![WorkloadSpec::compressed_page()];
+        m.isas = vec![Isa::Avx512];
+        m.governors = GovernorSpec::all().to_vec();
+        if quick {
+            m.warmup = 150 * MS;
+            m.measure = 300 * MS;
+        } else {
+            m.warmup = 500 * MS;
+            m.measure = 2 * SEC;
+        }
+        m
+    }
+
     /// Number of cells the matrix expands to.
     pub fn len(&self) -> usize {
         self.topologies.len()
@@ -514,6 +545,7 @@ impl ScenarioMatrix {
             * self.arrivals.len()
             * self.fleet_sizes.len()
             * self.routers.len()
+            * self.governors.len()
     }
 
     /// True when any axis is empty.
@@ -522,10 +554,10 @@ impl ScenarioMatrix {
     }
 
     /// Expand the cartesian product, topology-major (load level, arrival
-    /// process, fleet size, and router are the innermost axes, in that
-    /// order — with the default `[1] × [RoundRobin]` fleet axes the
-    /// expansion is exactly the pre-fleet cell order), into runnable
-    /// cells.
+    /// process, fleet size, router, and governor are the innermost axes,
+    /// in that order — with the default `[1] × [RoundRobin]` fleet axes
+    /// and `[IntelLegacy]` governor axis the expansion is exactly the
+    /// pre-fleet cell order), into runnable cells.
     pub fn cells(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         for topo in &self.topologies {
@@ -536,60 +568,64 @@ impl ScenarioMatrix {
                             for arrival in &self.arrivals {
                                 for &fleet in &self.fleet_sizes {
                                     for &router in &self.routers {
-                                        let index = out.len();
-                                        let seed = mix64(
-                                            self.base_seed
-                                                ^ (index as u64).wrapping_mul(0x9E37_79B9),
-                                        );
-                                        // Derive the machine shape through
-                                        // the Topology model so the matrix
-                                        // and the cpu layer agree on one
-                                        // socket partition.
-                                        let t = topo.topology();
-                                        let mut cfg = WebCfg::paper_default(
-                                            isa,
-                                            policy.instantiate(topo),
-                                        );
-                                        cfg.cores = t.n_server_cores();
-                                        cfg.sockets = t.n_sockets();
-                                        cfg.workers = t.n_server_cores() * 2;
-                                        cfg.compress = workload.compress;
-                                        cfg.page_bytes = workload.page_kib * 1024;
-                                        // Fleet-total offered rate: equal
-                                        // per-machine pressure across the
-                                        // fleet-size axis.
-                                        let rate = workload.rate_per_core
-                                            * topo.cores as f64
-                                            * load
-                                            * fleet.max(1) as f64;
-                                        cfg.mode = match arrival {
-                                            // Poisson keeps the sugared form
-                                            // so a single-arrival matrix is
-                                            // exactly the pre-traffic
-                                            // configuration.
-                                            ArrivalSpec::Poisson => LoadMode::Open { rate },
-                                            spec => LoadMode::OpenProcess {
-                                                process: spec.instantiate(rate),
-                                            },
-                                        };
-                                        cfg.slo = self.slo;
-                                        cfg.seed = seed;
-                                        cfg.warmup = self.warmup;
-                                        cfg.measure = self.measure;
-                                        out.push(Scenario {
-                                            index,
-                                            topology: topo.name.clone(),
-                                            sockets: topo.sockets,
-                                            policy: policy.label(),
-                                            workload: workload.name.clone(),
-                                            isa,
-                                            load,
-                                            arrival: arrival.label(),
-                                            fleet: fleet.max(1),
-                                            router,
-                                            seed,
-                                            cfg,
-                                        });
+                                        for &governor in &self.governors {
+                                            let index = out.len();
+                                            let seed = mix64(
+                                                self.base_seed
+                                                    ^ (index as u64).wrapping_mul(0x9E37_79B9),
+                                            );
+                                            // Derive the machine shape through
+                                            // the Topology model so the matrix
+                                            // and the cpu layer agree on one
+                                            // socket partition.
+                                            let t = topo.topology();
+                                            let mut cfg = WebCfg::paper_default(
+                                                isa,
+                                                policy.instantiate(topo),
+                                            );
+                                            cfg.cores = t.n_server_cores();
+                                            cfg.sockets = t.n_sockets();
+                                            cfg.workers = t.n_server_cores() * 2;
+                                            cfg.compress = workload.compress;
+                                            cfg.page_bytes = workload.page_kib * 1024;
+                                            // Fleet-total offered rate: equal
+                                            // per-machine pressure across the
+                                            // fleet-size axis.
+                                            let rate = workload.rate_per_core
+                                                * topo.cores as f64
+                                                * load
+                                                * fleet.max(1) as f64;
+                                            cfg.mode = match arrival {
+                                                // Poisson keeps the sugared form
+                                                // so a single-arrival matrix is
+                                                // exactly the pre-traffic
+                                                // configuration.
+                                                ArrivalSpec::Poisson => LoadMode::Open { rate },
+                                                spec => LoadMode::OpenProcess {
+                                                    process: spec.instantiate(rate),
+                                                },
+                                            };
+                                            cfg.slo = self.slo;
+                                            cfg.seed = seed;
+                                            cfg.warmup = self.warmup;
+                                            cfg.measure = self.measure;
+                                            cfg.governor = governor;
+                                            out.push(Scenario {
+                                                index,
+                                                topology: topo.name.clone(),
+                                                sockets: topo.sockets,
+                                                policy: policy.label(),
+                                                workload: workload.name.clone(),
+                                                isa,
+                                                load,
+                                                arrival: arrival.label(),
+                                                fleet: fleet.max(1),
+                                                router,
+                                                governor,
+                                                seed,
+                                                cfg,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -749,6 +785,36 @@ mod tests {
         let classic = ScenarioMatrix::default_sweep(true, 7);
         assert!(classic.cells().iter().all(|c| c.fleet == 1));
         assert_eq!(classic.cells().len(), 8);
+    }
+
+    #[test]
+    fn governor_axis_expands_innermost_and_defaults_to_legacy() {
+        // Default axes: every cell runs intel-legacy and the expansion
+        // is exactly the pre-governor cell order (same count, same
+        // seeds — the matrix-level differential anchor).
+        let classic = ScenarioMatrix::default_sweep(true, 7);
+        assert!(classic.cells().iter().all(|c| c.governor == GovernorSpec::IntelLegacy));
+        assert_eq!(classic.cells().len(), 8);
+
+        let mut m = ScenarioMatrix::default_sweep(true, 7);
+        m.topologies.truncate(1);
+        m.policies.truncate(1);
+        m.isas.truncate(1);
+        m.governors = GovernorSpec::all().to_vec();
+        let cells = m.cells();
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[0].governor, GovernorSpec::IntelLegacy);
+        assert_eq!(cells[1].governor, GovernorSpec::SlowRamp);
+        assert_eq!(cells[2].cfg.governor, GovernorSpec::DimSilicon);
+        // Non-default governors show up in the cell label; the default
+        // keeps the historical label.
+        assert!(!cells[0].label().contains("intel-legacy"));
+        assert!(cells[1].label().ends_with("/slow-ramp"));
+        // The energy sweep covers both policies under every governor.
+        let e = ScenarioMatrix::energy_sweep(true, 9);
+        assert_eq!(e.len(), 6);
+        assert!(e.cells().iter().any(|c| c.policy.contains("core-spec")
+            && c.governor == GovernorSpec::DimSilicon));
     }
 
     #[test]

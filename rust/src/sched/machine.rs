@@ -15,6 +15,7 @@ use super::policy::PolicyKind;
 use super::task::{TaskId, TaskType};
 use crate::cpu::freq::FreqParams;
 use crate::cpu::ipc::IpcParams;
+use crate::cpu::power::PowerParams;
 use crate::cpu::turbo::TurboTable;
 use crate::cpu::Core;
 use crate::isa::block::Block;
@@ -69,6 +70,8 @@ pub struct MachineParams {
     pub turbo: TurboTable,
     pub freq: FreqParams,
     pub ipc: IpcParams,
+    /// Per-core power model (energy accounting; never affects timing).
+    pub power: PowerParams,
     pub sched: SchedParams,
     pub policy: PolicyKind,
     pub seed: u64,
@@ -91,6 +94,7 @@ impl MachineParams {
             turbo: TurboTable::xeon_gold_6130(),
             freq: FreqParams::default(),
             ipc: IpcParams::default(),
+            power: PowerParams::default(),
             sched: SchedParams::default(),
             policy,
             seed: 0xA5A5_5A5A,
@@ -169,7 +173,11 @@ pub struct Machine {
 impl Machine {
     pub fn new(p: MachineParams) -> Self {
         let cores: Vec<Core> = (0..p.n_cores)
-            .map(|i| Core::new(i, p.freq.clone(), p.ipc.clone()))
+            .map(|i| {
+                let mut c = Core::new(i, p.freq.clone(), p.ipc.clone());
+                c.power = p.power;
+                c
+            })
             .collect();
         let socket_of = crate::cpu::topology::socket_map(p.n_cores, p.sockets);
         let n_sockets = socket_of.iter().copied().max().map_or(1, |m| m + 1);
@@ -396,6 +404,11 @@ impl Machine {
             branches as f64 * 0.02, // kernel branches mispredict a bit more
             0.0,
         );
+        // Kernel time draws active power like any other execution —
+        // every nanosecond the frequency model accounts for is also
+        // energy-accounted.
+        let w = self.cores[core].power.active_w(lic, ghz);
+        self.cores[core].perf.record_active_energy(PowerParams::energy_j(w, ns));
     }
 
     /// Ask `task`'s body for actions until one consumes time or blocks.
@@ -843,6 +856,132 @@ mod tests {
         assert_eq!(*done.borrow(), 6);
         assert!(m.sched.stats.migrations > 0);
         assert_eq!(m.sched.stats.cross_socket_migrations, 0);
+    }
+
+    /// Body alternating compute and sleep — the sleeps create idle
+    /// periods that end in a wake, so the core's idle time is observed
+    /// (idle accounting happens at the Step event that ends the gap).
+    struct SleepyLoop {
+        remaining: u64,
+        sleeping: bool,
+        done: Rc<RefCell<u64>>,
+    }
+    impl TaskBody for SleepyLoop {
+        fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+            if self.remaining == 0 {
+                *self.done.borrow_mut() += 1;
+                return Action::Exit;
+            }
+            self.sleeping = !self.sleeping;
+            if self.sleeping {
+                Action::Sleep(MS)
+            } else {
+                self.remaining -= 1;
+                Action::Run {
+                    block: Block { mix: ClassMix::scalar(10_000), mem_ops: 100, branches: 200, license_exempt: false },
+                    func: 1,
+                    stack: 0,
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn energy_accounted_for_busy_and_idle_time() {
+        let mut m = small_machine(PolicyKind::Unmodified, 1);
+        let done = Rc::new(RefCell::new(0u64));
+        m.spawn(
+            TaskType::Untyped,
+            0,
+            Box::new(SleepyLoop { remaining: 50, sleeping: true, done: done.clone() }),
+        );
+        m.run_until(SEC, &mut NullDriver);
+        assert_eq!(*done.borrow(), 1);
+        let total = m.total_perf();
+        assert!(total.active_energy_j > 0.0, "busy time must draw active power");
+        assert!(total.idle_energy_j > 0.0, "sleep gaps must draw idle power");
+        // The split matches the accounted time × the model's rates:
+        // active power ≥ idle power over busy time, idle energy exactly
+        // idle_w × accounted idle time.
+        let p = PowerParams::default();
+        let idle_expected = p.idle_w * total.idle_ns as f64 * 1e-9;
+        assert!((total.idle_energy_j - idle_expected).abs() < 1e-9);
+        let floor = p.idle_w * total.busy_ns as f64 * 1e-9;
+        assert!(total.active_energy_j > floor, "{} vs {}", total.active_energy_j, floor);
+    }
+
+    /// Body oscillating across the hold window: one AVX burst, then
+    /// ~2.7 ms of scalar blocks (long enough for the stock 2 ms timer
+    /// to relax, short enough that a widened timer does not).
+    struct OscillatingAvx {
+        cycles: u64,
+        step: u64,
+        done: Rc<RefCell<u64>>,
+    }
+    impl TaskBody for OscillatingAvx {
+        fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+            const SCALAR_STEPS: u64 = 170; // ≈2.7 ms of 100k-insn blocks
+            if self.cycles == 0 {
+                *self.done.borrow_mut() += 1;
+                return Action::Exit;
+            }
+            let step = self.step;
+            self.step += 1;
+            if self.step > SCALAR_STEPS {
+                self.step = 0;
+                self.cycles -= 1;
+            }
+            if step == 0 {
+                Action::Run {
+                    block: Block {
+                        mix: ClassMix::of(InsnClass::Avx512Heavy, 30_000),
+                        mem_ops: 0,
+                        branches: 100,
+                        license_exempt: false,
+                    },
+                    func: 7,
+                    stack: 0,
+                }
+            } else {
+                Action::Run {
+                    block: Block {
+                        mix: ClassMix::scalar(100_000),
+                        mem_ops: 0,
+                        branches: 500,
+                        license_exempt: false,
+                    },
+                    func: 3,
+                    stack: 0,
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn governor_selectable_per_machine() {
+        let run = |gov: crate::cpu::GovernorSpec| {
+            let mut p = MachineParams::new(1, PolicyKind::Unmodified);
+            p.turbo = TurboTable::flat(2.8, 2.4, 1.9, 1);
+            p.freq.governor = gov;
+            let mut m = Machine::new(p);
+            let done = Rc::new(RefCell::new(0u64));
+            m.spawn(
+                TaskType::Untyped,
+                0,
+                Box::new(OscillatingAvx { cycles: 30, step: 0, done: done.clone() }),
+            );
+            m.run_until(20 * SEC, &mut NullDriver);
+            assert_eq!(*done.borrow(), 1);
+            m.total_perf().freq_switches
+        };
+        let legacy = run(crate::cpu::GovernorSpec::IntelLegacy);
+        let dim = run(crate::cpu::GovernorSpec::DimSilicon);
+        assert!(legacy >= 30, "legacy must oscillate every cycle, got {legacy}");
+        assert!(
+            dim * 2 < legacy,
+            "dim-silicon widens the AVX timer under churn, so it must switch far less: \
+             {dim} vs {legacy}"
+        );
     }
 
     #[test]

@@ -226,6 +226,56 @@ mod tests {
     }
 
     #[test]
+    fn fraction_above_at_exact_bucket_edges() {
+        // Small values (< 32) get one bucket each, so the arithmetic is
+        // exact at every bucket edge: strictly-above k is (31-k)/32.
+        let mut h = LogHistogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        for k in 0..32u64 {
+            let expect = (31 - k) as f64 / 32.0;
+            assert_eq!(h.fraction_above(k), expect, "edge k={k}");
+        }
+        // First bucketed edge: 32 is the lower bound of its own bucket
+        // (bucket_index(32) starts the exponent range), so a value
+        // recorded exactly at an edge is *not* counted above that edge —
+        // the documented one-bucket undercount, never an overcount.
+        let mut g = LogHistogram::new();
+        g.record(32);
+        assert_eq!(bucket_low(bucket_index(32)), 32, "32 must start its bucket");
+        assert_eq!(g.fraction_above(32), 0.0);
+        assert_eq!(g.fraction_above(31), 1.0, "the whole bucket lies above 31's bucket");
+        // An edge mid-way up a larger exponent: bucket_low round-trips
+        // and fraction_above at that edge excludes the edge bucket.
+        let edge = bucket_low(bucket_index(1_000_000));
+        let mut m = LogHistogram::new();
+        m.record(edge);
+        m.record(edge * 4); // several buckets higher
+        assert_eq!(m.fraction_above(edge), 0.5, "only the strictly-higher bucket counts");
+    }
+
+    #[test]
+    fn empty_histogram_queries_are_safe_zeroes() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.percentile(99.9), 0);
+        assert_eq!(h.report(), [0; 5]);
+        assert_eq!(h.fraction_above(0), 0.0);
+        assert_eq!(h.fraction_above(u64::MAX / 2), 0.0);
+        // Merging an empty histogram is the identity.
+        let mut a = LogHistogram::new();
+        a.record(42);
+        let before = (a.count(), a.min(), a.max(), a.percentile(50.0));
+        a.merge(&h);
+        assert_eq!(before, (a.count(), a.min(), a.max(), a.percentile(50.0)));
+    }
+
+    #[test]
     fn mean_exact() {
         let mut h = LogHistogram::new();
         for v in [10u64, 20, 30] {

@@ -11,6 +11,7 @@ use super::client::{LoadMode, ServerShared, Shared, TraceDriver, TrafficDriver, 
 use super::compress::CompressProfile;
 use super::crypto::{CryptoProfile, Isa};
 use crate::analysis::flamegraph::StackTable;
+use crate::cpu::{GovernorSpec, PowerParams};
 use crate::isa::block::{Block, ClassMix};
 use crate::isa::{Binary, Function};
 use crate::sched::machine::{Action, Driver, Machine, MachineParams, TaskBody};
@@ -56,6 +57,11 @@ pub struct WebCfg {
     pub fault_migrate: bool,
     /// §3.1/§4.3 adaptive AVX-core allocation (CoreSpec policies only).
     pub adaptive: Option<crate::sched::adaptive::AdaptiveParams>,
+    /// DVFS governor the machine runs under (`intel-legacy` = the
+    /// pre-governor behaviour, bit for bit).
+    pub governor: GovernorSpec,
+    /// Per-core power model for the energy accounting.
+    pub power: PowerParams,
 }
 
 impl WebCfg {
@@ -80,6 +86,8 @@ impl WebCfg {
             track_flame: false,
             fault_migrate: false,
             adaptive: None,
+            governor: GovernorSpec::IntelLegacy,
+            power: PowerParams::default(),
         }
     }
 
@@ -135,6 +143,37 @@ impl WebCfg {
             cfg.adaptive = Some(Default::default());
         }
         cfg.seed = conf.int_or("seed", cfg.seed as i64) as u64;
+        // [power] section: governor selection + power-model overrides.
+        // Unknown governor names — or a non-string value — are a hard
+        // error (a typo would run the wrong policy and label every
+        // table with it).
+        use crate::util::config::Value;
+        cfg.governor = match conf.get("power.governor") {
+            None => cfg.governor,
+            Some(Value::Str(s)) => GovernorSpec::parse(s)?,
+            Some(other) => anyhow::bail!(
+                "power.governor must be a string governor name \
+                 (intel-legacy|slow-ramp|dim-silicon), got {other}"
+            ),
+        };
+        cfg.power.idle_w = conf.float_or("power.idle_w", cfg.power.idle_w);
+        if let Some(v) = conf.get("power.active_w_per_ghz") {
+            let xs = match v {
+                Value::Array(xs) if xs.len() == 3 => xs,
+                other => anyhow::bail!(
+                    "power.active_w_per_ghz must be a 3-element array (W/GHz at L0, L1, L2), \
+                     got {other}"
+                ),
+            };
+            for (slot, x) in cfg.power.active_w_per_ghz.iter_mut().zip(xs) {
+                *slot = match x {
+                    Value::Float(f) => *f,
+                    Value::Int(i) => *i as f64,
+                    other => anyhow::bail!("power.active_w_per_ghz entries must be numbers, got {other}"),
+                };
+            }
+        }
+        cfg.power.validate().map_err(|e| anyhow::anyhow!(e))?;
         let rate = conf.float_or("load.rate", -1.0);
         let conns = conf.int_or("load.connections", -1);
         match (rate > 0.0, conns > 0) {
@@ -473,6 +512,11 @@ pub struct WebRun {
     /// Migrations that crossed a socket (NUMA) boundary; 0 on
     /// single-socket machines.
     pub cross_socket_migrations_per_sec: f64,
+    /// Energy consumed while executing during the measurement window
+    /// (J, all cores). Adds across machines (fleet aggregation sums).
+    pub active_energy_j: f64,
+    /// Energy consumed while idle during the measurement window (J).
+    pub idle_energy_j: f64,
     pub throttle_ratio: f64,
     pub license_share: [f64; 3],
     pub completed: u64,
@@ -480,6 +524,33 @@ pub struct WebRun {
     pub final_avx_cores: usize,
     /// Number of adaptive grow/shrink decisions taken.
     pub adaptive_changes: u64,
+}
+
+impl WebRun {
+    /// Total energy consumed over the measurement window (J).
+    pub fn energy_j(&self) -> f64 {
+        self.active_energy_j + self.idle_energy_j
+    }
+
+    /// Energy per completed request (J); 0.0 with no completions.
+    pub fn j_per_req(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.energy_j() / self.completed as f64
+        }
+    }
+
+    /// Perf-per-watt: completed requests per Joule (identically,
+    /// req/s per W); 0.0 with no energy accounted.
+    pub fn req_per_j(&self) -> f64 {
+        let e = self.energy_j();
+        if e <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / e
+        }
+    }
 }
 
 /// Run the web-server scenario and report run-level metrics.
@@ -543,6 +614,8 @@ fn run_webserver_impl(
     mp.sockets = cfg.sockets;
     mp.sched = sched;
     mp.seed = cfg.seed;
+    mp.freq.governor = cfg.governor;
+    mp.power = cfg.power;
     // wrk2 client cores keep the package(s) awake: 4 per socket, like
     // the paper's single-socket evaluation.
     mp.extra_active_cores = 4 * cfg.sockets.max(1);
@@ -658,6 +731,8 @@ fn run_webserver_impl(
         type_changes_per_sec: m.sched.stats.type_changes as f64 / secs,
         migrations_per_sec: m.sched.stats.migrations as f64 / secs,
         cross_socket_migrations_per_sec: m.sched.stats.cross_socket_migrations as f64 / secs,
+        active_energy_j: total.active_energy_j,
+        idle_energy_j: total.idle_energy_j,
         throttle_ratio: total.throttle_ratio(),
         license_share: total.license_time_share(),
         completed,
@@ -910,6 +985,63 @@ mod tests {
         assert_eq!(live.tail.max_us, replay.tail.max_us);
         assert_eq!(live.throughput_rps, replay.throughput_rps);
         assert_eq!(live.avg_ghz, replay.avg_ghz);
+    }
+
+    #[test]
+    fn run_reports_energy() {
+        let run = run_webserver(&quick_cfg(Isa::Avx512, PolicyKind::Unmodified));
+        assert!(run.active_energy_j > 0.0);
+        assert!(run.idle_energy_j > 0.0, "4 cores at 30k req/s must have idle time");
+        assert!((run.energy_j() - run.active_energy_j - run.idle_energy_j).abs() < 1e-12);
+        assert!(run.j_per_req() > 0.0);
+        assert!(run.req_per_j() > 0.0);
+        // Sanity scale: 4 cores, 0.3 s window, per-core power within
+        // [a fraction of idle_w, the L2 max of ~12 W].
+        let secs = 0.3;
+        assert!(run.energy_j() < 4.0 * 12.0 * secs, "energy {} J", run.energy_j());
+        assert!(run.energy_j() > 4.0 * 0.5 * secs, "energy {} J", run.energy_j());
+    }
+
+    #[test]
+    fn config_parses_power_and_governor_keys() {
+        let conf = crate::util::config::Config::parse(
+            "[power]\ngovernor = \"dim-silicon\"\nidle_w = 2.0\nactive_w_per_ghz = [1.0, 2.0, 3.0]\n",
+        )
+        .unwrap();
+        let cfg = WebCfg::from_config(&conf).unwrap();
+        assert_eq!(cfg.governor, GovernorSpec::DimSilicon);
+        assert_eq!(cfg.power.idle_w, 2.0);
+        assert_eq!(cfg.power.active_w_per_ghz, [1.0, 2.0, 3.0]);
+        // Unset [power] keys keep the defaults.
+        let plain = WebCfg::from_config(&crate::util::config::Config::parse("").unwrap()).unwrap();
+        assert_eq!(plain.governor, GovernorSpec::IntelLegacy);
+        assert_eq!(plain.power, PowerParams::default());
+    }
+
+    #[test]
+    fn config_rejects_unknown_governor_and_bad_power() {
+        let unknown =
+            crate::util::config::Config::parse("[power]\ngovernor = \"ondemand\"\n").unwrap();
+        let err = WebCfg::from_config(&unknown).unwrap_err().to_string();
+        assert!(err.contains("ondemand"), "error must name the bad governor: {err}");
+
+        let short = crate::util::config::Config::parse(
+            "[power]\nactive_w_per_ghz = [1.0, 2.0]\n",
+        )
+        .unwrap();
+        assert!(WebCfg::from_config(&short).is_err(), "2-element power array must be rejected");
+
+        let negative =
+            crate::util::config::Config::parse("[power]\nidle_w = -3.0\n").unwrap();
+        assert!(WebCfg::from_config(&negative).is_err(), "negative power must be rejected");
+
+        let nonstring =
+            crate::util::config::Config::parse("[power]\ngovernor = 2\n").unwrap();
+        let err = WebCfg::from_config(&nonstring).unwrap_err().to_string();
+        assert!(
+            err.contains("power.governor"),
+            "a non-string governor must be rejected, not silently defaulted: {err}"
+        );
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! regenerate after an intentional format change:
 //! `UPDATE_GOLDEN=1 cargo test --test golden_report`.
 
+use avxfreq::cpu::GovernorSpec;
 use avxfreq::fleet::RouterSpec;
 use avxfreq::metrics::{matrix_report, tail_report};
 use avxfreq::scenario::{
@@ -56,6 +57,7 @@ fn cell(
         arrival: arrival.to_string(),
         fleet: 1,
         router: RouterSpec::RoundRobin,
+        governor: GovernorSpec::IntelLegacy,
         seed: 7,
         cfg: WebCfg::paper_default(isa, PolicyKind::Unmodified),
     };
@@ -74,6 +76,8 @@ fn cell(
         type_changes_per_sec: 9_000.0,
         migrations_per_sec: 1_200.0,
         cross_socket_migrations_per_sec: 0.0,
+        active_energy_j: 0.0,
+        idle_energy_j: 0.0,
         throttle_ratio: 0.0625,
         license_share: [0.75, 0.125, 0.125],
         completed: t.completed,

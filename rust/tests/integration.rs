@@ -191,11 +191,17 @@ fn shipped_configs_parse() {
         "configs/adaptive_demo.toml",
         "configs/dual_socket.toml",
         "configs/bursty_slo.toml",
+        "configs/energy.toml",
     ] {
         let conf = avxfreq::util::config::Config::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
         let cfg = WebCfg::from_config(&conf).unwrap_or_else(|e| panic!("{path}: {e}"));
         assert!(cfg.cores >= 1 && cfg.workers >= 1);
     }
+    // The energy demo config selects a non-default governor.
+    let conf = avxfreq::util::config::Config::load("configs/energy.toml").unwrap();
+    let cfg = WebCfg::from_config(&conf).unwrap();
+    assert_eq!(cfg.governor, avxfreq::cpu::GovernorSpec::SlowRamp);
+    assert_eq!(cfg.power.idle_w, 1.5);
 }
 
 #[test]
