@@ -24,6 +24,13 @@ step "cargo build --release --benches --examples" \
 step "unit tests" cargo test -q --lib --bins
 step "doctests" cargo test -q --doc
 
+# The event queue's past-dated-schedule contract differs by profile
+# (debug: panic; release: documented clamp + counter). The debug side
+# runs in the normal unit pass above; this step compiles the lib tests
+# under --release so `past_scheduling_clamps_in_release` actually runs.
+step "release-profile queue clamp tests" \
+  cargo test --release -q --lib sim::queue
+
 # Golden snapshots must exist before the suites run: a fresh checkout
 # missing one would otherwise "pass" only via UPDATE_GOLDEN, and the
 # fleet tables' formatting contract would be unpinned.
@@ -69,6 +76,25 @@ run_runtime_roundtrip() {
 }
 step "suite: runtime_roundtrip (SKIP must name artifacts dir)" run_runtime_roundtrip
 
+# Bench smoke: one quick fast-vs-baseline pass. `avxfreq bench` exits
+# non-zero if the two legs' outputs diverge (the equivalence gate) and
+# writes the BENCH_5.json perf-trajectory record; the speedup itself is
+# informational here — wall-clock on a loaded CI machine is noise, so
+# compare ratios across runs, not absolutes (rust/tests/README.md).
+run_bench_quick() {
+  cargo run --release --quiet -- bench --quick
+  if [ ! -f BENCH_5.json ]; then
+    echo "bench did not write BENCH_5.json"
+    return 1
+  fi
+  if grep -q '"outputs_identical": false' BENCH_5.json; then
+    echo "BENCH_5.json records an output divergence"
+    return 1
+  fi
+  return 0
+}
+step "bench --quick (equivalence gate + BENCH_5.json)" run_bench_quick
+
 step "cargo doc --no-deps (-D warnings)" \
   env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
@@ -101,6 +127,8 @@ for p in docs/ARCHITECTURE.md rust/tests/README.md configs/dual_socket.toml \
          configs/energy.toml rust/src/cpu/governor.rs rust/src/cpu/power.rs \
          rust/src/repro/energydelay.rs rust/tests/power.rs \
          rust/tests/golden/energy_report.txt rust/tests/golden/energydelay_report.txt \
+         rust/src/bench/mod.rs rust/src/sim/queue.rs rust/src/cpu/ipc.rs \
+         rust/tests/perf_equiv.rs \
          ci.sh; do
   if [ ! -e "$p" ]; then
     echo "MISSING referenced file: $p"

@@ -1,0 +1,351 @@
+//! Benchmark harness behind `avxfreq bench`: times the canonical
+//! scenarios with the hot paths on (the default) and off (the
+//! baseline), reports **simulated nanoseconds per wall-clock second**,
+//! and writes the machine-readable `BENCH_<pr>.json` that starts the
+//! repo's performance trajectory.
+//!
+//! The harness doubles as an equivalence gate: for every scenario it
+//! fingerprints both legs' outputs (completions, drops, exact SLO
+//! violations, and the bit patterns of the float aggregates) and
+//! reports `outputs_identical`. A mismatch is a correctness bug in the
+//! fast paths — `avxfreq bench` exits non-zero on it, and `ci.sh` runs
+//! a `--quick` pass so the gate is exercised on every CI run.
+//!
+//! Wall-clock numbers are load-sensitive; the *ratio* between the two
+//! legs of the same invocation is the meaningful figure (both legs run
+//! in the same process, same thread budget, back to back). See
+//! `rust/tests/README.md` for bench triage.
+//!
+//! The unit of merit: one simulated machine running 1.2 s of warmup +
+//! measurement contributes 1.2e9 simulated ns; a matrix cell or fleet
+//! machine each count separately. `sim_ns_per_wall_s = Σ machine
+//! sim-time / wall seconds`, so the number is comparable across
+//! scenario shapes and thread counts.
+
+use crate::fleet::{run_fleet, RouterSpec};
+use crate::scenario::ScenarioMatrix;
+use crate::sched::PolicyKind;
+use crate::sim::{Time, MS};
+use crate::workload::crypto::Isa;
+use crate::workload::webserver::{run_webserver, WebCfg, WebRun};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Which PR's trajectory file this harness writes.
+pub const BENCH_PR: u32 = 5;
+
+/// Harness configuration (CLI surface of `avxfreq bench`).
+#[derive(Clone, Debug)]
+pub struct BenchCfg {
+    /// Shrink the simulated windows (CI smoke; ratios stay meaningful).
+    pub quick: bool,
+    pub seed: u64,
+    /// OS threads for the matrix/fleet legs (same for both legs).
+    pub threads: usize,
+    /// Scenario names to run (`single`, `matrix`, `fleet`).
+    pub scenarios: Vec<String>,
+}
+
+impl BenchCfg {
+    pub fn new(quick: bool, seed: u64, threads: usize) -> Self {
+        BenchCfg {
+            quick,
+            seed,
+            threads: threads.max(1),
+            scenarios: ["single", "matrix", "fleet"].iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// One timed leg (fast paths on or off).
+#[derive(Clone, Copy, Debug)]
+pub struct Leg {
+    pub wall_s: f64,
+    /// Total simulated machine-time covered (Σ per-machine warmup+measure).
+    pub sim_ns: u64,
+}
+
+impl Leg {
+    pub fn sim_ns_per_wall_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.sim_ns as f64 / self.wall_s
+        }
+    }
+}
+
+/// Result of one scenario: both legs plus the equivalence verdict.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub scenario: String,
+    pub fast: Leg,
+    pub baseline: Leg,
+    pub outputs_identical: bool,
+}
+
+impl BenchRow {
+    /// fast ÷ baseline throughput (simulated-ns-per-wall-second ratio).
+    pub fn speedup(&self) -> f64 {
+        let b = self.baseline.sim_ns_per_wall_s();
+        if b <= 0.0 {
+            0.0
+        } else {
+            self.fast.sim_ns_per_wall_s() / b
+        }
+    }
+}
+
+/// Everything a run can observably produce, floats by bit pattern —
+/// equal fingerprints mean the legs are indistinguishable to every
+/// report renderer.
+fn fingerprint(run: &WebRun, out: &mut Vec<u64>) {
+    out.push(run.completed);
+    out.push(run.dropped);
+    out.push(run.stats.violations());
+    out.push(run.throughput_rps.to_bits());
+    out.push(run.avg_ghz.to_bits());
+    out.push(run.ipc.to_bits());
+    out.push(run.insns_per_req.to_bits());
+    out.push(run.active_energy_j.to_bits());
+    out.push(run.idle_energy_j.to_bits());
+    out.push(run.tail.p50_us.to_bits());
+    out.push(run.tail.p99_us.to_bits());
+    out.push(run.tail.p999_us.to_bits());
+    out.push(run.tail.max_us.to_bits());
+    out.push(run.tail.slo_violation_frac.to_bits());
+    for (_, t) in &run.tenant_tails {
+        out.push(t.completed);
+        out.push(t.p99_us.to_bits());
+    }
+}
+
+/// The paper's single-machine scenario (`WebCfg::paper_default`),
+/// shrunk under `--quick`.
+fn single_cfg(quick: bool, seed: u64, fast: bool) -> WebCfg {
+    let mut cfg = WebCfg::paper_default(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 2 });
+    cfg.seed = seed;
+    cfg.fast_paths = fast;
+    if quick {
+        cfg.warmup = 150 * MS;
+        cfg.measure = 300 * MS;
+    }
+    cfg
+}
+
+fn run_single(quick: bool, seed: u64, fast: bool) -> (Leg, Vec<u64>) {
+    let cfg = single_cfg(quick, seed, fast);
+    let sim_ns: Time = cfg.warmup + cfg.measure;
+    let t0 = Instant::now();
+    let run = run_webserver(&cfg);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut fp = Vec::new();
+    fingerprint(&run, &mut fp);
+    (Leg { wall_s, sim_ns }, fp)
+}
+
+fn run_matrix(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg, Vec<u64>) {
+    let mut m = ScenarioMatrix::default_sweep(quick, seed);
+    m.fast_paths = fast;
+    // Per the unit of merit: each simulated machine counts, so a fleet
+    // cell contributes `fleet ×` its window (the default sweep has no
+    // fleet axis today, but the accounting must not silently undercount
+    // if it grows one).
+    let sim_ns: Time =
+        m.cells().iter().map(|c| (m.warmup + m.measure) * c.fleet as Time).sum();
+    let t0 = Instant::now();
+    let result = m.run(threads);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut fp = Vec::new();
+    for c in &result.cells {
+        fingerprint(&c.run, &mut fp);
+    }
+    // The rendered tables are pure functions of the cells, but pin the
+    // bytes too: this is the same render the golden suite snapshots.
+    for b in result.render().bytes() {
+        fp.push(b as u64);
+    }
+    (Leg { wall_s, sim_ns }, fp)
+}
+
+fn run_fleet_scenario(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg, Vec<u64>) {
+    let mut fleet = crate::repro::fleetvar::fleet_cfg(RouterSpec::RoundRobin, quick, seed);
+    fleet.cfg.fast_paths = fast;
+    let sim_ns = (fleet.cfg.warmup + fleet.cfg.measure) * fleet.machines as Time;
+    let t0 = Instant::now();
+    let run = run_fleet(&fleet, threads);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut fp = Vec::new();
+    fingerprint(&run.cluster_run(), &mut fp);
+    for m in &run.machines {
+        fingerprint(m, &mut fp);
+    }
+    (Leg { wall_s, sim_ns }, fp)
+}
+
+/// Run the configured scenarios, fast leg then baseline leg each.
+/// Every scenario name is resolved *before* the first leg is timed, so
+/// a typo fails immediately instead of after minutes of completed legs
+/// whose results would be lost.
+pub fn run(cfg: &BenchCfg) -> anyhow::Result<Vec<BenchRow>> {
+    type Runner = fn(bool, u64, usize, bool) -> (Leg, Vec<u64>);
+    let mut plan: Vec<(&str, Runner)> = Vec::new();
+    for name in &cfg.scenarios {
+        let runner: Runner = match name.as_str() {
+            "single" => |q, s, _t, f| run_single(q, s, f),
+            "matrix" => run_matrix,
+            "fleet" => run_fleet_scenario,
+            other => anyhow::bail!("unknown bench scenario {other:?} (single|matrix|fleet)"),
+        };
+        plan.push((name, runner));
+    }
+    let mut rows = Vec::new();
+    for (name, runner) in plan {
+        eprintln!("[avxfreq] bench: {name} (fast paths on)…");
+        let (fast, fp_fast) = runner(cfg.quick, cfg.seed, cfg.threads, true);
+        eprintln!("[avxfreq] bench: {name} (baseline, fast paths off)…");
+        let (baseline, fp_base) = runner(cfg.quick, cfg.seed, cfg.threads, false);
+        rows.push(BenchRow {
+            scenario: name.to_string(),
+            fast,
+            baseline,
+            outputs_identical: fp_fast == fp_base,
+        });
+    }
+    Ok(rows)
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Serialize rows as the `BENCH_<pr>.json` trajectory record. The
+/// headline is the canonical matrix scenario (both raw numbers
+/// recorded); hand-rolled JSON because the offline build vendors no
+/// serde.
+pub fn to_json(cfg: &BenchCfg, rows: &[BenchRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"pr\": {BENCH_PR},");
+    let _ = writeln!(s, "  \"unit\": \"simulated_ns_per_wall_second\",");
+    let _ = writeln!(s, "  \"quick\": {},", cfg.quick);
+    let _ = writeln!(s, "  \"threads\": {},", cfg.threads);
+    let _ = writeln!(s, "  \"seed\": {},", cfg.seed);
+    if let Some(m) = rows.iter().find(|r| r.scenario == "matrix") {
+        let _ = writeln!(s, "  \"headline\": {{");
+        let _ = writeln!(s, "    \"scenario\": \"matrix\",");
+        let _ = writeln!(
+            s,
+            "    \"fast_sim_ns_per_wall_s\": {},",
+            json_f64(m.fast.sim_ns_per_wall_s())
+        );
+        let _ = writeln!(
+            s,
+            "    \"baseline_sim_ns_per_wall_s\": {},",
+            json_f64(m.baseline.sim_ns_per_wall_s())
+        );
+        let _ = writeln!(s, "    \"speedup\": {}", json_f64(m.speedup()));
+        let _ = writeln!(s, "  }},");
+    }
+    let _ = writeln!(s, "  \"scenarios\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(s, "    {{");
+        let _ = writeln!(s, "      \"name\": \"{}\",", r.scenario);
+        let _ = writeln!(s, "      \"sim_ns\": {},", r.fast.sim_ns);
+        let _ = writeln!(s, "      \"fast\": {{ \"wall_s\": {}, \"sim_ns_per_wall_s\": {} }},",
+            json_f64(r.fast.wall_s), json_f64(r.fast.sim_ns_per_wall_s()));
+        let _ = writeln!(
+            s,
+            "      \"baseline\": {{ \"wall_s\": {}, \"sim_ns_per_wall_s\": {} }},",
+            json_f64(r.baseline.wall_s),
+            json_f64(r.baseline.sim_ns_per_wall_s())
+        );
+        let _ = writeln!(s, "      \"speedup\": {},", json_f64(r.speedup()));
+        let _ = writeln!(s, "      \"outputs_identical\": {}", r.outputs_identical);
+        let _ = writeln!(s, "    }}{}", if i + 1 < rows.len() { "," } else { "" });
+    }
+    let _ = writeln!(s, "  ]");
+    let _ = writeln!(s, "}}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_scenario_legs_are_equivalent_and_timed() {
+        // Micro-sized single-machine bench: both legs must fingerprint
+        // identically (the crown constraint) and report plausible legs.
+        let leg = |fast: bool| {
+            let mut cfg = single_cfg(true, 7, fast);
+            cfg.cores = 4;
+            cfg.workers = 8;
+            cfg.page_bytes = 8 * 1024;
+            cfg.warmup = 50 * MS;
+            cfg.measure = 100 * MS;
+            cfg.mode = crate::workload::client::LoadMode::Open { rate: 20_000.0 };
+            let sim_ns = cfg.warmup + cfg.measure;
+            let t0 = Instant::now();
+            let run = run_webserver(&cfg);
+            let mut fp = Vec::new();
+            fingerprint(&run, &mut fp);
+            (Leg { wall_s: t0.elapsed().as_secs_f64(), sim_ns }, fp)
+        };
+        let (fast, fp_fast) = leg(true);
+        let (base, fp_base) = leg(false);
+        assert_eq!(fp_fast, fp_base, "fast and baseline legs must be output-identical");
+        assert!(fast.sim_ns_per_wall_s() > 0.0);
+        assert!(base.sim_ns_per_wall_s() > 0.0);
+    }
+
+    #[test]
+    fn json_shape_carries_both_headline_numbers() {
+        let cfg = BenchCfg::new(true, 1, 2);
+        let rows = vec![
+            BenchRow {
+                scenario: "matrix".into(),
+                fast: Leg { wall_s: 1.0, sim_ns: 9_600_000_000 },
+                baseline: Leg { wall_s: 4.0, sim_ns: 9_600_000_000 },
+                outputs_identical: true,
+            },
+        ];
+        let j = to_json(&cfg, &rows);
+        assert!(j.contains("\"pr\": 5"), "{j}");
+        assert!(j.contains("\"fast_sim_ns_per_wall_s\": 9600000000.000000"), "{j}");
+        assert!(j.contains("\"baseline_sim_ns_per_wall_s\": 2400000000.000000"), "{j}");
+        assert!(j.contains("\"speedup\": 4.000000"), "{j}");
+        assert!(j.contains("\"outputs_identical\": true"), "{j}");
+        let rows2 = vec![BenchRow {
+            scenario: "single".into(),
+            fast: Leg { wall_s: 0.0, sim_ns: 1 },
+            baseline: Leg { wall_s: 0.0, sim_ns: 1 },
+            outputs_identical: false,
+        }];
+        let j2 = to_json(&cfg, &rows2);
+        assert!(!j2.contains("headline"), "no matrix row → no headline block");
+        assert!(j2.contains("\"outputs_identical\": false"));
+    }
+
+    #[test]
+    fn speedup_math() {
+        let r = BenchRow {
+            scenario: "x".into(),
+            fast: Leg { wall_s: 1.0, sim_ns: 300 },
+            baseline: Leg { wall_s: 3.0, sim_ns: 300 },
+            outputs_identical: true,
+        };
+        assert!((r.speedup() - 3.0).abs() < 1e-12);
+        let z = BenchRow {
+            scenario: "x".into(),
+            fast: Leg { wall_s: 0.0, sim_ns: 0 },
+            baseline: Leg { wall_s: 0.0, sim_ns: 0 },
+            outputs_identical: true,
+        };
+        assert_eq!(z.speedup(), 0.0);
+    }
+}

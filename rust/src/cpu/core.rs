@@ -8,12 +8,33 @@
 //! guard splits oversized blocks defensively.
 
 use super::freq::{FreqParams, License, LicenseState};
-use super::ipc::{cost_block, license_demand, FootprintTracker, IpcParams};
+use super::ipc::{cost_block_with, license_demand, CostCache, FootprintTracker, IpcParams};
 use super::perf::PerfCounters;
 use super::power::PowerParams;
 use super::turbo::TurboTable;
 use crate::isa::block::Block;
 use crate::sim::Time;
+
+/// Where a slice's frequency comes from: the turbo table directly, or a
+/// per-window cache of the three license levels' frequencies that the
+/// machine's coalescing loop hoists out of the repetition loop (the
+/// active-core count is constant inside a coalesced window, so the
+/// three lookups happen once instead of once per repetition). Both
+/// sources yield the identical `f64` for a given license.
+enum FreqSource<'a> {
+    Table(&'a TurboTable, usize),
+    Cached(&'a [f64; 3]),
+}
+
+impl FreqSource<'_> {
+    #[inline]
+    fn ghz(&self, license: License) -> f64 {
+        match self {
+            FreqSource::Table(t, active) => t.ghz(license, *active),
+            FreqSource::Cached(g) => g[license.index()],
+        }
+    }
+}
 
 /// Outcome of executing one block on a core.
 #[derive(Clone, Copy, Debug)]
@@ -40,7 +61,13 @@ pub struct Core {
     /// Power model charged as the core runs (defaults are Skylake-SP
     /// shaped; the machine overrides them from its own parameters).
     pub power: PowerParams,
+    /// Memoize the pressure-independent part of block costing (see
+    /// [`CostCache`]). A hit is bit-identical to the direct computation,
+    /// so this is purely a speed knob; the machine sets it from
+    /// `MachineParams::fast_paths` so the bench harness can compare.
+    pub memoize: bool,
     ipc_params: IpcParams,
+    cost_cache: CostCache,
 }
 
 impl Core {
@@ -52,8 +79,16 @@ impl Core {
             perf: PerfCounters::default(),
             footprint: FootprintTracker::new(cap),
             power: PowerParams::default(),
+            memoize: true,
             ipc_params,
+            cost_cache: CostCache::default(),
         }
+    }
+
+    /// Costing-cache hit/miss counters (diagnostics for the bench
+    /// harness; zero when `memoize` is off).
+    pub fn cost_cache_stats(&self) -> (u64, u64) {
+        (self.cost_cache.hits, self.cost_cache.misses)
     }
 
     pub fn ipc_params(&self) -> &IpcParams {
@@ -71,6 +106,33 @@ impl Core {
         active: usize,
         turbo: &TurboTable,
     ) -> SliceOutcome {
+        self.run_block_inner(now, block, func, FreqSource::Table(turbo, active))
+    }
+
+    /// [`Core::run_block`] with the per-license frequencies already
+    /// looked up (`ghz_by_license[i]` = the turbo table's value for
+    /// license *i* at the caller's active-core count). The machine's
+    /// steady-state coalescing loop hoists the three lookups out of the
+    /// repetition loop; results are bit-identical to [`Core::run_block`].
+    #[inline]
+    pub fn run_block_with_freqs(
+        &mut self,
+        now: Time,
+        block: &Block,
+        func: u64,
+        ghz_by_license: &[f64; 3],
+    ) -> SliceOutcome {
+        self.run_block_inner(now, block, func, FreqSource::Cached(ghz_by_license))
+    }
+
+    #[inline]
+    fn run_block_inner(
+        &mut self,
+        now: Time,
+        block: &Block,
+        func: u64,
+        freq: FreqSource<'_>,
+    ) -> SliceOutcome {
         // Pending PLL stall from a recent frequency switch.
         let stall = self.license.stall_ns(now);
         if stall > 0 {
@@ -78,9 +140,18 @@ impl Core {
         }
         let start = now + stall;
 
-        // Cost the block at the current footprint pressure.
+        // Cost the block at the current footprint pressure. The memo
+        // covers only the pressure-independent execution cycles, so a
+        // cache hit reproduces the direct computation bit for bit (see
+        // `CostCache`); `cost_block_with` runs the pressure-dependent
+        // tail in the historical operation order either way.
         self.footprint.touch(func);
-        let cost = cost_block(&self.ipc_params, block, self.footprint.pressure());
+        let exec = if self.memoize {
+            self.cost_cache.exec_cycles(&self.ipc_params, &block.mix)
+        } else {
+            super::ipc::exec_cycles(&self.ipc_params, &block.mix)
+        };
+        let cost = cost_block_with(&self.ipc_params, block, self.footprint.pressure(), exec);
 
         // License demand is a property of the block's densities.
         let demand = license_demand(self.license.params(), block, cost.cycles);
@@ -88,15 +159,15 @@ impl Core {
 
         let cycles = cost.cycles / eff.ipc_factor;
         let throttle_cycles = if eff.throttled { cycles } else { 0.0 };
-        let ghz = turbo.ghz(eff.license, active);
-        let exec_ns = (cycles / ghz).ceil() as Time;
-        let ns = stall + exec_ns.max(1);
+        let ghz = freq.ghz(eff.license);
+        let exec_ns = ((cycles / ghz).ceil() as Time).max(1);
+        let ns = stall + exec_ns;
 
         self.perf.record_slice(
             eff.license,
             eff.throttled,
             cycles,
-            exec_ns.max(1),
+            exec_ns,
             ghz,
             block.insns(),
             block.branches,
@@ -302,6 +373,66 @@ mod tests {
             per_ns_a > per_ns_s * 1.2,
             "AVX-512 watts must exceed scalar watts: {per_ns_a} vs {per_ns_s}"
         );
+    }
+
+    #[test]
+    fn memoized_costing_is_bit_identical() {
+        // Same block stream with the memo on and off: every outcome and
+        // every counter (including the float accumulators) must be
+        // bit-equal — memoization is a pure speed knob.
+        let t = turbo();
+        let mut fast = core();
+        let mut slow = core();
+        slow.memoize = false;
+        // Two mixes, so the 2-slot memo alternates between hits; a
+        // third distinct mix in rotation would defeat it (by design —
+        // the cache is sized for the bulk-cipher ↔ MAC hot loop).
+        let blocks = [scalar(10_000), avx512(10_000)];
+        let (mut now_f, mut now_s) = (0, 0);
+        for i in 0..600usize {
+            let b = &blocks[i % blocks.len()];
+            let of = fast.run_block(now_f, b, (i % 5) as u64, 2, &t);
+            let os = slow.run_block(now_s, b, (i % 5) as u64, 2, &t);
+            assert_eq!(of.ns, os.ns, "slice {i}");
+            assert_eq!(of.cycles.to_bits(), os.cycles.to_bits(), "slice {i}");
+            assert_eq!(of.license, os.license);
+            now_f += of.ns;
+            now_s += os.ns;
+        }
+        assert_eq!(fast.perf.instructions, slow.perf.instructions);
+        assert_eq!(fast.perf.cycles, slow.perf.cycles);
+        assert_eq!(fast.perf.busy_ns, slow.perf.busy_ns);
+        assert_eq!(fast.perf.freq_integral.to_bits(), slow.perf.freq_integral.to_bits());
+        assert_eq!(fast.perf.active_energy_j.to_bits(), slow.perf.active_energy_j.to_bits());
+        let (hits, misses) = fast.cost_cache_stats();
+        assert!(hits > 0 && misses >= 2, "memo must engage: {hits} hits / {misses} misses");
+        assert_eq!(slow.cost_cache_stats(), (0, 0));
+    }
+
+    #[test]
+    fn cached_freqs_match_table_lookup() {
+        let t = TurboTable::xeon_gold_6130();
+        let active = 7;
+        let freqs = [
+            t.ghz(License::L0, active),
+            t.ghz(License::L1, active),
+            t.ghz(License::L2, active),
+        ];
+        let mut a = core();
+        let mut b = core();
+        let blocks = [scalar(8_000), avx512(9_000)];
+        let (mut now_a, mut now_b) = (0, 0);
+        for i in 0..400usize {
+            let blk = &blocks[i % 2];
+            let oa = a.run_block(now_a, blk, 1, active, &t);
+            let ob = b.run_block_with_freqs(now_b, blk, 1, &freqs);
+            assert_eq!(oa.ns, ob.ns, "slice {i}");
+            assert_eq!(oa.ghz.to_bits(), ob.ghz.to_bits());
+            assert_eq!(oa.license, ob.license);
+            now_a += oa.ns;
+            now_b += ob.ns;
+        }
+        assert_eq!(a.perf.freq_integral.to_bits(), b.perf.freq_integral.to_bits());
     }
 
     #[test]

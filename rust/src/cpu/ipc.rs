@@ -7,7 +7,7 @@
 //! cycle accuracy.
 
 use super::freq::{FreqParams, License};
-use crate::isa::block::{Block, InsnClass};
+use crate::isa::block::{Block, ClassMix, InsnClass};
 use std::collections::VecDeque;
 
 /// IPC model parameters.
@@ -103,14 +103,34 @@ pub struct BlockCost {
     pub mispredicts: f64,
 }
 
-/// Pure function: cycles for a block given footprint pressure.
-pub fn cost_block(p: &IpcParams, block: &Block, footprint_pressure: f64) -> BlockCost {
-    let mut exec_cycles = 0.0;
-    for (i, &n) in block.mix.counts.iter().enumerate() {
+/// Execution cycles of a block's instruction mix alone — the part of
+/// [`cost_block`] that is independent of footprint pressure (and of
+/// `mem_ops`/`branches`), hence memoizable per [`ClassMix`]. Kept as a
+/// named helper so the cached and uncached paths run the *same float
+/// operations in the same order* (determinism: byte-identical outputs
+/// with memoization on or off).
+#[inline]
+pub fn exec_cycles(p: &IpcParams, mix: &ClassMix) -> f64 {
+    let mut cycles = 0.0;
+    for (i, &n) in mix.counts.iter().enumerate() {
         if n > 0 {
-            exec_cycles += n as f64 / p.base_ipc[i];
+            cycles += n as f64 / p.base_ipc[i];
         }
     }
+    cycles
+}
+
+/// Finish costing a block from a precomputed [`exec_cycles`] value.
+/// `cost_block` ≡ `cost_block_with(p, b, fp, exec_cycles(p, &b.mix))`
+/// bit for bit: the total is accumulated in the same association order
+/// (`(exec + mem) + mispredict`) as the historical single function.
+#[inline]
+pub fn cost_block_with(
+    p: &IpcParams,
+    block: &Block,
+    footprint_pressure: f64,
+    exec_cycles: f64,
+) -> BlockCost {
     let mem_stall_cycles = block.mem_ops as f64 * p.mem_stall_cpi;
     let miss_rate = p.mispredict_rate_hot + p.mispredict_rate_cold * footprint_pressure;
     let mispredicts = block.branches as f64 * miss_rate;
@@ -123,12 +143,78 @@ pub fn cost_block(p: &IpcParams, block: &Block, footprint_pressure: f64) -> Bloc
     }
 }
 
+/// Pure function: cycles for a block given footprint pressure.
+pub fn cost_block(p: &IpcParams, block: &Block, footprint_pressure: f64) -> BlockCost {
+    cost_block_with(p, block, footprint_pressure, exec_cycles(p, &block.mix))
+}
+
+/// Per-core memo for the pressure-independent part of block costing.
+///
+/// The web server's hot loops re-execute a tiny set of block shapes
+/// (brotli 8 KiB chunks, ChaCha 4 KiB chunks, the Poly1305 MAC), so two
+/// slots with move-to-front replacement capture the common
+/// bulk-cipher ↔ MAC alternation. The cache key is the full [`ClassMix`]
+/// (not the function id: the crypto builders draw per-burst
+/// trigger-eligibility, so one symbol maps to many blocks, and distinct
+/// symbols share mixes). Only [`exec_cycles`] is cached — it does not
+/// depend on footprint pressure, so there is nothing to invalidate on a
+/// footprint change, and the pressure-dependent tail of the cost is
+/// recomputed exactly per call via [`cost_block_with`]. A hit therefore
+/// returns the bit-identical value the uncached path would compute.
+#[derive(Clone, Debug, Default)]
+pub struct CostCache {
+    slots: [Option<(ClassMix, f64)>; 2],
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CostCache {
+    /// Cached [`exec_cycles`] for `mix` under `p`. Callers must use one
+    /// cache per (core, [`IpcParams`]) pair: the params are part of the
+    /// function being memoized but not of the key.
+    #[inline]
+    pub fn exec_cycles(&mut self, p: &IpcParams, mix: &ClassMix) -> f64 {
+        if let Some((k, v)) = self.slots[0] {
+            if k == *mix {
+                self.hits += 1;
+                return v;
+            }
+        }
+        if let Some((k, v)) = self.slots[1] {
+            if k == *mix {
+                self.hits += 1;
+                self.slots.swap(0, 1);
+                return v;
+            }
+        }
+        let v = exec_cycles(p, mix);
+        self.misses += 1;
+        self.slots[1] = Some((*mix, v));
+        self.slots.swap(0, 1);
+        v
+    }
+}
+
 /// License demand of a slice: Intel reduces frequency only when heavy
 /// instructions are *dense* — roughly one per cycle sustained, or a
 /// sufficiently dense mix of the two categories (SDM §15.26, Lemire [14]).
 /// Density below `dense_threshold` leaves the license at L0.
+#[inline]
 pub fn license_demand(fp: &FreqParams, block: &Block, cycles: f64) -> License {
     if cycles <= 0.0 || block.license_exempt {
+        return License::L0;
+    }
+    // Integer fast path: a block with no license-relevant instructions
+    // (the common case — all scalar/kernel/brotli work, plus light AVX2,
+    // which the SDM exempts) has every density zero, so the threshold
+    // comparisons below land on L0 without the divisions.
+    // (`dense_threshold > 0.0` guards the degenerate zero-threshold
+    // configuration, where even zero density trips the comparisons.)
+    if fp.dense_threshold > 0.0
+        && block.mix.get(InsnClass::Avx512Heavy) == 0
+        && block.mix.get(InsnClass::Avx2Heavy) == 0
+        && block.mix.get(InsnClass::Avx512Light) == 0
+    {
         return License::L0;
     }
     let d2 = block.mix.get(InsnClass::Avx512Heavy) as f64 / cycles;
@@ -247,5 +333,58 @@ mod tests {
         let fp = FreqParams::default();
         let b = scalar_block(0);
         assert_eq!(license_demand(&fp, &b, 0.0), License::L0);
+    }
+
+    #[test]
+    fn cost_cache_is_bit_identical_to_direct_costing() {
+        let p = IpcParams::default();
+        let mut cache = CostCache::default();
+        let blocks = [
+            Block { mix: ClassMix::scalar(4000), mem_ops: 100, branches: 600, license_exempt: false },
+            Block { mix: ClassMix::of(InsnClass::Avx512Heavy, 900).with(InsnClass::Scalar, 120), mem_ops: 64, branches: 14, license_exempt: false },
+            Block { mix: ClassMix::scalar(4000), mem_ops: 50, branches: 10, license_exempt: false },
+        ];
+        // Alternate the shapes (incl. same mix with different mem/branch
+        // metadata) at varying pressures; every field must be bit-equal.
+        let mut pressure = 0.0;
+        for i in 0..200 {
+            let b = &blocks[i % blocks.len()];
+            let direct = cost_block(&p, b, pressure);
+            let via = cost_block_with(&p, b, pressure, cache.exec_cycles(&p, &b.mix));
+            assert_eq!(direct.cycles.to_bits(), via.cycles.to_bits());
+            assert_eq!(direct.mispredicts.to_bits(), via.mispredicts.to_bits());
+            assert_eq!(direct.mem_stall_cycles.to_bits(), via.mem_stall_cycles.to_bits());
+            assert_eq!(direct.mispredict_cycles.to_bits(), via.mispredict_cycles.to_bits());
+            pressure = (1.0 - 0.02) * pressure + 0.02 * ((i % 3) as f64 / 2.0);
+        }
+        assert!(cache.hits > cache.misses, "alternating shapes must mostly hit: {cache:?}");
+    }
+
+    #[test]
+    fn cost_cache_two_slots_cover_alternation() {
+        let p = IpcParams::default();
+        let mut cache = CostCache::default();
+        let a = ClassMix::scalar(1000);
+        let b = ClassMix::of(InsnClass::Avx512Light, 500);
+        cache.exec_cycles(&p, &a);
+        cache.exec_cycles(&p, &b);
+        let (h0, m0) = (cache.hits, cache.misses);
+        for _ in 0..10 {
+            cache.exec_cycles(&p, &a);
+            cache.exec_cycles(&p, &b);
+        }
+        assert_eq!(cache.hits - h0, 20, "a↔b alternation must be all hits");
+        assert_eq!(cache.misses, m0);
+    }
+
+    #[test]
+    fn license_demand_zero_threshold_keeps_division_semantics() {
+        // Degenerate threshold 0: even density-0 streams satisfy the
+        // comparisons, so the integer fast path must not short-circuit.
+        let mut fp = FreqParams::default();
+        fp.dense_threshold = 0.0;
+        let b = scalar_block(1000);
+        // d2 = 0 ≥ 0 trips the first comparison exactly as it always did.
+        assert_eq!(license_demand(&fp, &b, 1000.0), License::L2);
     }
 }

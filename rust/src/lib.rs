@@ -26,6 +26,9 @@
 //! * [`analysis`] — static AVX-ratio analysis, THROTTLE flame graphs, LBR.
 //! * [`runtime`] — PJRT client executing the AOT ChaCha20-Poly1305 kernels.
 //! * [`metrics`] — run-level reporting and the matrix comparison table.
+//! * [`bench`] — the `avxfreq bench` harness: times the canonical
+//!   scenarios with the hot paths on and off, verifies output
+//!   equivalence, and writes the `BENCH_*.json` perf trajectory.
 //! * [`repro`] — one runner per paper figure/table.
 //! * [`testkit`] — in-repo property-testing support (offline substitute for
 //!   proptest).
@@ -45,5 +48,6 @@ pub mod scenario;
 pub mod analysis;
 pub mod runtime;
 pub mod metrics;
+pub mod bench;
 pub mod repro;
 pub mod testkit;

@@ -73,6 +73,8 @@ usage:
                 [--avx-machines K] [--rate R] [--quick] [--seed N] [--threads T]
   avxfreq energy [--config configs/energy.toml] [--quick] [--seed N] [--threads T]
                  [--governors intel-legacy,slow-ramp,dim-silicon]
+  avxfreq bench [--quick] [--seed N] [--threads T] [--scenarios single,matrix,fleet]
+                [--out BENCH_5.json] [--min-speedup R]
   avxfreq serve [--artifacts DIR] [--port 8443]
   avxfreq calibrate [--artifacts DIR]
 experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar energydelay fig6 ipc fig7
@@ -89,6 +91,7 @@ fn main() -> anyhow::Result<()> {
         Some("traffic") => cmd_traffic(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("energy") => cmd_energy(&args),
+        Some("bench") => cmd_bench(&args),
         Some("serve") => avxfreq::runtime::server::cmd_serve(&args),
         Some("calibrate") => avxfreq::runtime::calibrate::cmd_calibrate(&args),
         // Bare experiment id (`avxfreq fig5`) = `avxfreq repro fig5`.
@@ -580,6 +583,72 @@ fn cmd_energy(args: &Args) -> anyhow::Result<()> {
         result.cells.len(),
         t0.elapsed().as_secs_f64()
     );
+    Ok(())
+}
+
+/// `avxfreq bench` — time the canonical scenarios with the hot paths on
+/// (the default simulator) and off (the baseline), print the comparison
+/// table, and write the `BENCH_5.json` perf-trajectory record. Exits
+/// non-zero if any scenario's two legs are not output-identical — the
+/// harness is also the fast-path equivalence gate (`ci.sh` runs
+/// `bench --quick`). A speedup below `--min-speedup` (default 0 = off;
+/// the acceptance target is 3) is a warning unless the flag is set,
+/// because absolute wall-clock on a loaded machine is noise — see
+/// `rust/tests/README.md` § bench triage.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let quick = args.flag("quick");
+    let seed = args.get_parse::<u64>("seed", 0x5EED);
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = args.get_parse::<usize>("threads", default_threads).max(1);
+    let mut cfg = avxfreq::bench::BenchCfg::new(quick, seed, threads);
+    if let Some(spec) = args.get("scenarios") {
+        // Drop empty segments ("matrix," / ",") so the at-least-one
+        // guard below is meaningful and a stray comma fails fast in
+        // bench::run's name check rather than after minutes of legs.
+        cfg.scenarios = spec
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        anyhow::ensure!(!cfg.scenarios.is_empty(), "--scenarios must name at least one scenario");
+    }
+    let out_path = args.get_or("out", "BENCH_5.json").to_string();
+    let min_speedup = args.get_parse::<f64>("min-speedup", 0.0);
+
+    eprintln!(
+        "[avxfreq] bench: {} scenario(s) × 2 legs across up to {threads} threads \
+         (seed {seed:#x}{})…",
+        cfg.scenarios.len(),
+        if quick { ", quick" } else { "" }
+    );
+    let rows = avxfreq::bench::run(&cfg)?;
+    print!("{}", metrics::bench_report(&rows).render());
+
+    std::fs::write(&out_path, avxfreq::bench::to_json(&cfg, &rows))?;
+    eprintln!("[avxfreq] wrote {out_path}");
+
+    for r in &rows {
+        anyhow::ensure!(
+            r.outputs_identical,
+            "fast-path outputs DIVERGED from the baseline on scenario {:?} — this is a \
+             correctness bug, not a perf regression (see rust/tests/perf_equiv.rs)",
+            r.scenario
+        );
+        if r.speedup() < 3.0 {
+            eprintln!(
+                "[avxfreq] note: {} speedup {:.2}x below the 3x target (wall-clock noise on \
+                 loaded machines is expected; compare ratios across runs, not absolutes)",
+                r.scenario,
+                r.speedup()
+            );
+        }
+        anyhow::ensure!(
+            min_speedup <= 0.0 || r.speedup() >= min_speedup,
+            "scenario {:?} speedup {:.2}x below --min-speedup {min_speedup}",
+            r.scenario,
+            r.speedup()
+        );
+    }
     Ok(())
 }
 

@@ -2,11 +2,45 @@
 //! the tables the repro harness prints and saves, including the unified
 //! scenario-matrix comparison table ([`matrix_report`]).
 
+use crate::bench::BenchRow;
 use crate::cpu::PerfCounters;
 use crate::fleet::FleetRun;
 use crate::scenario::CellResult;
 use crate::sched::machine::Machine;
 use crate::util::table::{fmt_f, Table};
+
+/// `avxfreq bench` summary: one row per scenario, both legs plus the
+/// speedup ratio and the output-equivalence verdict. Wall-clock columns
+/// are machine-dependent; the ratio column is the comparable figure
+/// (see `rust/tests/README.md` § bench triage).
+pub fn bench_report(rows: &[BenchRow]) -> Table {
+    let mut t = Table::new(
+        "bench — simulated ns per wall-second, fast paths on vs off",
+        &[
+            "scenario",
+            "sim-ms",
+            "fast wall-s",
+            "fast sim-ns/s",
+            "base wall-s",
+            "base sim-ns/s",
+            "speedup",
+            "outputs",
+        ],
+    );
+    for r in rows {
+        t.row(&[
+            r.scenario.clone(),
+            format!("{:.0}", r.fast.sim_ns as f64 / 1e6),
+            format!("{:.2}", r.fast.wall_s),
+            format!("{:.3e}", r.fast.sim_ns_per_wall_s()),
+            format!("{:.2}", r.baseline.wall_s),
+            format!("{:.3e}", r.baseline.sim_ns_per_wall_s()),
+            format!("{:.2}x", r.speedup()),
+            (if r.outputs_identical { "identical" } else { "DIVERGED" }).to_string(),
+        ]);
+    }
+    t
+}
 
 /// One row of the [`energy_report`] table: the energy accounting of one
 /// scope (a core, a machine, a fleet machine, or a whole cluster).

@@ -442,6 +442,9 @@ pub struct ScenarioMatrix {
     pub governors: Vec<GovernorSpec>,
     /// Latency SLO threshold applied to every cell.
     pub slo: Time,
+    /// Hot-path optimizations for every cell's machines (bit-exact
+    /// either way; the bench harness flips this for its baseline leg).
+    pub fast_paths: bool,
     /// Base seed; each cell derives `mix64(base_seed ^ f(index))`.
     pub base_seed: u64,
     /// Simulated warmup before measurement, per cell.
@@ -464,6 +467,7 @@ impl ScenarioMatrix {
             routers: vec![RouterSpec::RoundRobin],
             governors: vec![GovernorSpec::IntelLegacy],
             slo: DEFAULT_SLO,
+            fast_paths: true,
             base_seed,
             warmup: 300 * MS,
             measure: SEC,
@@ -606,6 +610,7 @@ impl ScenarioMatrix {
                                                 },
                                             };
                                             cfg.slo = self.slo;
+                                            cfg.fast_paths = self.fast_paths;
                                             cfg.seed = seed;
                                             cfg.warmup = self.warmup;
                                             cfg.measure = self.measure;

@@ -13,7 +13,7 @@ use super::fault_migrate::FaultMigrateParams;
 use super::muqss::{SchedParams, Scheduler, TypeChangeOutcome, WakeTarget};
 use super::policy::PolicyKind;
 use super::task::{TaskId, TaskType};
-use crate::cpu::freq::FreqParams;
+use crate::cpu::freq::{FreqParams, License};
 use crate::cpu::ipc::IpcParams;
 use crate::cpu::power::PowerParams;
 use crate::cpu::turbo::TurboTable;
@@ -30,6 +30,22 @@ pub enum Action {
     /// Execute an instruction block attributed to `func`, with `stack`
     /// identifying the interned call stack for flame-graph sampling.
     Run { block: Block, func: u64, stack: u32 },
+    /// Execute `reps` back-to-back repetitions of the same block — the
+    /// steady-state form workload builders emit for homogeneous inner
+    /// loops (compression chunks, bulk-cipher records, spin loops).
+    ///
+    /// Semantics are *exactly* `reps` consecutive [`Action::Run`]s: the
+    /// machine still observes the license state machine, footprint
+    /// tracker, quantum, and event queue at every repetition boundary,
+    /// so counters, energy, and timing are bit-identical whether a body
+    /// emits one `RunMany` or `reps` separate `Run`s. The only contract
+    /// on the body is the natural one: emitting `RunMany` means its
+    /// `next()` would have returned the same `Run` `reps` times without
+    /// reading the clock or drawing randomness in between. `reps == 0`
+    /// is treated as 1. What the machine *saves* is the per-boundary
+    /// event-queue round trip and task dispatch, and only while no
+    /// other event wants to interleave (see `Machine::run_action`).
+    RunMany { block: Block, reps: u32, func: u64, stack: u32 },
     /// `with_avx()` / `without_avx()` syscall.
     SetType(TaskType),
     /// Block for a fixed duration (timer/disk).
@@ -55,6 +71,17 @@ pub trait Driver {
 pub struct NullDriver;
 impl Driver for NullDriver {
     fn on_external(&mut self, _tag: u64, _m: &mut Machine) {}
+}
+
+/// `reps` repetitions of a block as the smallest action expressing them
+/// — the single source of the `Run`-vs-`RunMany` packing rule (workload
+/// builders emitting batched steps use it too).
+pub fn pack_run(block: Block, func: u64, stack: u32, reps: u32) -> Action {
+    if reps <= 1 {
+        Action::Run { block, func, stack }
+    } else {
+        Action::RunMany { block, reps, func, stack }
+    }
 }
 
 /// Machine construction parameters.
@@ -84,6 +111,13 @@ pub struct MachineParams {
     pub track_flame: bool,
     /// §6.1 fault-and-migrate automatic classification, if enabled.
     pub fault_migrate: Option<FaultMigrateParams>,
+    /// Enable the hot-path optimizations: steady-state slice coalescing
+    /// in the machine loop and memoized block costing in the cores.
+    /// Both are bit-exact (differential-tested in
+    /// `rust/tests/perf_equiv.rs`), so this toggle exists for the bench
+    /// harness's fast-vs-baseline comparison and for bisecting, not for
+    /// correctness. Defaults to on.
+    pub fast_paths: bool,
 }
 
 impl MachineParams {
@@ -101,6 +135,7 @@ impl MachineParams {
             extra_active_cores: 0,
             track_flame: false,
             fault_migrate: None,
+            fast_paths: true,
         }
     }
 }
@@ -161,8 +196,17 @@ pub struct Machine {
     extra_per_socket: Vec<usize>,
     track_flame: bool,
     fault_migrate: Option<FaultMigrateParams>,
+    fast_paths: bool,
+    /// Horizon of the current `run_until` call: the fast path may not
+    /// execute a repetition whose dispatch boundary lies beyond it (the
+    /// slow path's boundary Step would never pop).
+    horizon: Time,
     /// Flame samples keyed by interned stack id.
     pub flame: BTreeMap<u32, StackSample>,
+    /// Repetitions executed by the coalescing fast path *beyond* the
+    /// first of each window — i.e. event-queue round trips saved
+    /// (diagnostics for the bench harness; never rendered in reports).
+    pub coalesced_reps: u64,
     /// Fault-and-migrate trap count (§6.1).
     pub fm_faults: u64,
     /// Per-core time spent running AVX-typed tasks (adaptive controller
@@ -176,6 +220,7 @@ impl Machine {
             .map(|i| {
                 let mut c = Core::new(i, p.freq.clone(), p.ipc.clone());
                 c.power = p.power;
+                c.memoize = p.fast_paths;
                 c
             })
             .collect();
@@ -215,7 +260,10 @@ impl Machine {
             extra_per_socket,
             track_flame: p.track_flame,
             fault_migrate: p.fault_migrate,
+            fast_paths: p.fast_paths,
+            horizon: 0,
             flame: BTreeMap::new(),
+            coalesced_reps: 0,
             fm_faults: 0,
             avx_task_ns: vec![0; p.n_cores],
         }
@@ -308,6 +356,9 @@ impl Machine {
 
     /// Run the machine until simulated time `until`.
     pub fn run_until(&mut self, until: Time, driver: &mut dyn Driver) {
+        // The coalescing fast path consults the horizon so it never
+        // executes a repetition the slow path would have left queued.
+        self.horizon = until;
         while let Some(t) = self.q.peek_time() {
             if t > until {
                 break;
@@ -425,71 +476,11 @@ impl Machine {
             };
             match action {
                 Action::Run { block, func, stack } => {
-                    // §6.1 fault-and-migrate: an unannotated/scalar task about
-                    // to execute wide instructions traps, is reclassified AVX,
-                    // and (if on a scalar core) suspended before the block runs.
-                    if let Some(fm) = self.fault_migrate {
-                        let ttype = self.sched.entity(task).ttype;
-                        if ttype != TaskType::Avx && block.mix.wide() > 0 {
-                            self.fm_faults += 1;
-                            pending_ns += fm.fault_cost;
-                            match self.sched.set_task_type(now + pending_ns, core, TaskType::Avx) {
-                                TypeChangeOutcome::Continue => {}
-                                TypeChangeOutcome::SuspendSelf => {
-                                    self.pending_action[task.0] =
-                                        Some(Action::Run { block, func, stack });
-                                    self.suspend_and_resched(now, core, pending_ns);
-                                    return;
-                                }
-                            }
-                        } else if ttype == TaskType::Avx && block.mix.wide() == 0 {
-                            // Scalar streak bookkeeping; revert after decay.
-                            // (Streak length updated after the block runs.)
-                        }
-                    }
-                    // Syscall/fault overhead preceding this block retires
-                    // as kernel instructions on this core.
-                    self.charge_overhead(core, pending_ns);
-                    let active = self.active_cores(core);
-                    let out =
-                        self.cores[core].run_block(now + pending_ns, &block, func, active, &self.turbo);
-                    if self.track_flame {
-                        let s = self.flame.entry(stack).or_default();
-                        s.cycles += out.cycles;
-                        s.throttle_cycles += out.throttle_cycles;
-                    }
-                    // Fault-and-migrate decay: long scalar streaks revert the
-                    // task so it can leave the AVX cores.
-                    if let Some(fm) = self.fault_migrate {
-                        if self.sched.entity(task).ttype == TaskType::Avx {
-                            if block.mix.wide() == 0 {
-                                self.fm_scalar_streak[task.0] += out.ns;
-                                if self.fm_scalar_streak[task.0] >= fm.decay {
-                                    self.fm_scalar_streak[task.0] = 0;
-                                    let outcome = self.sched.set_task_type(
-                                        now + pending_ns + out.ns,
-                                        core,
-                                        TaskType::Scalar,
-                                    );
-                                    if outcome == TypeChangeOutcome::SuspendSelf {
-                                        // Migrate the reverted task off the
-                                        // AVX core at the upcoming block
-                                        // boundary so queued AVX work gets
-                                        // the core (same path as an IPI).
-                                        self.need_resched[core] = 1;
-                                    }
-                                }
-                            } else {
-                                self.fm_scalar_streak[task.0] = 0;
-                            }
-                        }
-                    }
-                    self.sched.entity_mut(task).cpu_ns += out.ns;
-                    if self.sched.entity(task).ttype == TaskType::Avx {
-                        self.avx_task_ns[core] += out.ns;
-                    }
-                    self.step_pending[core] = true;
-                    self.q.schedule_in(pending_ns + out.ns, Event::Step(core));
+                    self.run_action(now, core, task, pending_ns, block, func, stack, 1);
+                    return;
+                }
+                Action::RunMany { block, reps, func, stack } => {
+                    self.run_action(now, core, task, pending_ns, block, func, stack, reps);
                     return;
                 }
                 Action::SetType(t) => {
@@ -527,6 +518,235 @@ impl Machine {
                 }
             }
         }
+    }
+
+    /// Execute a `Run`/`RunMany` action on `core`. `reps` is the number
+    /// of repetitions of `block` still owed (≥ 1; `RunMany` semantics).
+    ///
+    /// Slow path (`fast_paths` off, or fault-and-migrate enabled): run
+    /// exactly one repetition, stash the remainder in `pending_action`,
+    /// and schedule the boundary `Step` — event-for-event the historical
+    /// behaviour, with every per-boundary check (IPI flag, quantum,
+    /// fault traps) happening in the event loop as before.
+    ///
+    /// Fast path: *steady-state slice coalescing*. Repetitions execute
+    /// back to back in one machine step — per-repetition arithmetic
+    /// (license `observe`, footprint EWMA, cycle/energy/PMU updates) is
+    /// unchanged and runs at the same simulated timestamps, so state is
+    /// bit-identical; what is elided is the event-queue round trip and
+    /// task re-dispatch between identical blocks. The window closes —
+    /// by scheduling the boundary `Step` and returning to the event
+    /// loop, which then behaves exactly as the slow path would at that
+    /// boundary — as soon as any of these could interleave:
+    ///
+    /// * a queued event at or before the boundary
+    ///   ([`EventQueue::peek_time`] bounds the window; nothing is
+    ///   *added* to the queue inside a window, so relative `(time,
+    ///   seq)` order with pre-existing events is preserved),
+    /// * quantum expiry (`quantum_end`) — the event loop re-checks and
+    ///   either requeues or refreshes exactly as before,
+    /// * the `run_until` horizon — a repetition whose dispatch Step
+    ///   would never pop must not run,
+    /// * the body's next action not being another run of the same
+    ///   block (machine-side run-length detection: the body is asked at
+    ///   the boundary time with the machine RNG, exactly as the slow
+    ///   path would ask it; a non-matching action is parked in
+    ///   `pending_action`, which the boundary `Step` consumes).
+    ///
+    /// License edges need no explicit bound: `Core::run_block` advances
+    /// the license state machine per repetition, so grant completions
+    /// and hold-window expiries are observed at exactly the boundaries
+    /// the slow path observes them.
+    /// Flame-graph attribution of one slice (no-op unless tracking).
+    fn attribute_flame(&mut self, stack: u32, out: &crate::cpu::SliceOutcome) {
+        if self.track_flame {
+            let s = self.flame.entry(stack).or_default();
+            s.cycles += out.cycles;
+            s.throttle_cycles += out.throttle_cycles;
+        }
+    }
+
+    /// Shared tail of one *non-coalesced* repetition: time accounting,
+    /// remainder repack, and the boundary `Step`. Both slow paths
+    /// (fault-and-migrate and `fast_paths` off) go through this so
+    /// their bookkeeping cannot drift apart.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_single_rep(
+        &mut self,
+        core: usize,
+        task: TaskId,
+        pending_ns: Time,
+        block: Block,
+        func: u64,
+        stack: u32,
+        reps: u32,
+        out_ns: Time,
+    ) {
+        self.sched.entity_mut(task).cpu_ns += out_ns;
+        if self.sched.entity(task).ttype == TaskType::Avx {
+            self.avx_task_ns[core] += out_ns;
+        }
+        if reps > 1 {
+            self.pending_action[task.0] = Some(pack_run(block, func, stack, reps - 1));
+        }
+        self.step_pending[core] = true;
+        self.q.schedule_in(pending_ns + out_ns, Event::Step(core));
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_action(
+        &mut self,
+        now: Time,
+        core: usize,
+        task: TaskId,
+        mut pending_ns: Time,
+        block: Block,
+        func: u64,
+        stack: u32,
+        reps: u32,
+    ) {
+        let reps = reps.max(1);
+
+        // §6.1 fault-and-migrate: an unannotated/scalar task about to
+        // execute wide instructions traps, is reclassified AVX, and (if
+        // on a scalar core) suspended before the block runs. Trap and
+        // decay checks must see every block edge, so fault-and-migrate
+        // machines never coalesce: a RunMany unrolls one repetition per
+        // scheduling boundary.
+        if let Some(fm) = self.fault_migrate {
+            let ttype = self.sched.entity(task).ttype;
+            if ttype != TaskType::Avx && block.mix.wide() > 0 {
+                self.fm_faults += 1;
+                pending_ns += fm.fault_cost;
+                match self.sched.set_task_type(now + pending_ns, core, TaskType::Avx) {
+                    TypeChangeOutcome::Continue => {}
+                    TypeChangeOutcome::SuspendSelf => {
+                        // All `reps` repetitions (this one included) run
+                        // once the task is re-dispatched.
+                        self.pending_action[task.0] = Some(pack_run(block, func, stack, reps));
+                        self.suspend_and_resched(now, core, pending_ns);
+                        return;
+                    }
+                }
+            }
+            self.charge_overhead(core, pending_ns);
+            let active = self.active_cores(core);
+            let out =
+                self.cores[core].run_block(now + pending_ns, &block, func, active, &self.turbo);
+            self.attribute_flame(stack, &out);
+            // Fault-and-migrate decay: long scalar streaks revert the
+            // task so it can leave the AVX cores.
+            if self.sched.entity(task).ttype == TaskType::Avx {
+                if block.mix.wide() == 0 {
+                    self.fm_scalar_streak[task.0] += out.ns;
+                    if self.fm_scalar_streak[task.0] >= fm.decay {
+                        self.fm_scalar_streak[task.0] = 0;
+                        let outcome = self.sched.set_task_type(
+                            now + pending_ns + out.ns,
+                            core,
+                            TaskType::Scalar,
+                        );
+                        if outcome == TypeChangeOutcome::SuspendSelf {
+                            // Migrate the reverted task off the AVX core
+                            // at the upcoming block boundary so queued
+                            // AVX work gets the core (same path as an
+                            // IPI).
+                            self.need_resched[core] = 1;
+                        }
+                    }
+                } else {
+                    self.fm_scalar_streak[task.0] = 0;
+                }
+            }
+            self.finish_single_rep(core, task, pending_ns, block, func, stack, reps, out.ns);
+            return;
+        }
+
+        // Syscall overhead preceding the first repetition retires as
+        // kernel instructions on this core.
+        self.charge_overhead(core, pending_ns);
+        let active = self.active_cores(core);
+
+        if !self.fast_paths {
+            // Baseline: one repetition per scheduling boundary.
+            let out =
+                self.cores[core].run_block(now + pending_ns, &block, func, active, &self.turbo);
+            self.attribute_flame(stack, &out);
+            self.finish_single_rep(core, task, pending_ns, block, func, stack, reps, out.ns);
+            return;
+        }
+
+        // Fast path: coalesced window. The active-core count is
+        // constant inside the window (no reschedules, no wakes), so the
+        // per-license turbo lookups hoist out of the loop.
+        let freqs = [
+            self.turbo.ghz(License::L0, active),
+            self.turbo.ghz(License::L1, active),
+            self.turbo.ghz(License::L2, active),
+        ];
+        // Task type is constant inside the window (no SetType, no
+        // fault-and-migrate), so integer time bookkeeping accumulates
+        // locally and lands in one exact add per counter.
+        let is_avx = self.sched.entity(task).ttype == TaskType::Avx;
+        let mut stack = stack;
+        let mut reps_left = reps;
+        let mut total_ns: Time = 0;
+        let mut first = true;
+        loop {
+            let t = now + pending_ns + total_ns;
+            let out = self.cores[core].run_block_with_freqs(t, &block, func, &freqs);
+            self.attribute_flame(stack, &out);
+            total_ns += out.ns;
+            reps_left -= 1;
+            if !first {
+                self.coalesced_reps += 1;
+            }
+            first = false;
+
+            let boundary = now + pending_ns + total_ns;
+            let queue_clear = match self.q.peek_time() {
+                None => true,
+                Some(pt) => pt > boundary,
+            };
+            if !queue_clear
+                || boundary >= self.quantum_end[core]
+                || boundary > self.horizon
+            {
+                break;
+            }
+            if reps_left == 0 {
+                // Run-length detection: fetch the body's next action at
+                // the boundary, exactly as the event loop would.
+                let mut body = self.bodies[task.0].take().expect("task body missing");
+                let a = body.next(boundary, &mut self.rng);
+                self.bodies[task.0] = Some(body);
+                match a {
+                    Action::Run { block: b, func: f, stack: s } if f == func && b == block => {
+                        stack = s;
+                        reps_left = 1;
+                    }
+                    Action::RunMany { block: b, reps: r, func: f, stack: s }
+                        if f == func && b == block =>
+                    {
+                        stack = s;
+                        reps_left = r.max(1);
+                    }
+                    other => {
+                        self.pending_action[task.0] = Some(other);
+                        break;
+                    }
+                }
+            }
+        }
+        self.sched.entity_mut(task).cpu_ns += total_ns;
+        if is_avx {
+            self.avx_task_ns[core] += total_ns;
+        }
+        if reps_left > 0 {
+            self.pending_action[task.0] = Some(pack_run(block, func, stack, reps_left));
+        }
+        self.step_pending[core] = true;
+        self.q.schedule_in(pending_ns + total_ns, Event::Step(core));
     }
 
     /// Requeue the core's current task and fan out its wake target.
@@ -585,6 +805,7 @@ impl Machine {
         }
         self.sched.stats = Default::default();
         self.flame.clear();
+        self.coalesced_reps = 0;
         self.fm_faults = 0;
     }
 
@@ -981,6 +1202,126 @@ mod tests {
             dim * 2 < legacy,
             "dim-silicon widens the AVX timer under churn, so it must switch far less: \
              {dim} vs {legacy}"
+        );
+    }
+
+    /// Fingerprint of everything a run can observably produce, with the
+    /// float accumulators compared by bit pattern.
+    fn fingerprint(m: &Machine) -> (u64, u64, u64, u64, u64, u64, u64, u64, u64) {
+        let p = m.total_perf();
+        (
+            p.instructions,
+            p.cycles,
+            p.busy_ns,
+            p.idle_ns,
+            p.freq_integral.to_bits(),
+            p.active_energy_j.to_bits(),
+            p.idle_energy_j.to_bits(),
+            m.sched.stats.migrations,
+            m.sched.stats.type_changes,
+        )
+    }
+
+    #[test]
+    fn fast_paths_bit_identical_to_slow_paths() {
+        // The same mixed AVX/scalar workload (annotations, migrations,
+        // quantum churn from oversubscription) with the fast paths on
+        // and off must produce bit-identical counters and stats.
+        let run = |fast: bool| {
+            let mut p = MachineParams::new(2, PolicyKind::CoreSpec { avx_cores: 1 });
+            p.turbo = TurboTable::flat(2.8, 2.4, 1.9, 2);
+            p.fast_paths = fast;
+            let mut m = Machine::new(p);
+            let done = Rc::new(RefCell::new(0u64));
+            for _ in 0..5 {
+                m.spawn(
+                    TaskType::Scalar,
+                    0,
+                    Box::new(AnnotatedAvx { iters: 300, done: done.clone() }),
+                );
+            }
+            m.run_until(20 * SEC, &mut NullDriver);
+            assert_eq!(*done.borrow(), 5);
+            fingerprint(&m)
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    /// Body emitting one `RunMany` batch then exiting.
+    struct BatchedLoop {
+        reps: u32,
+        emitted: bool,
+        done: Rc<RefCell<u64>>,
+    }
+    impl TaskBody for BatchedLoop {
+        fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+            if self.emitted {
+                *self.done.borrow_mut() += 1;
+                return Action::Exit;
+            }
+            self.emitted = true;
+            Action::RunMany {
+                block: Block { mix: ClassMix::scalar(10_000), mem_ops: 100, branches: 200, license_exempt: false },
+                reps: self.reps,
+                func: 1,
+                stack: 0,
+            }
+        }
+    }
+
+    #[test]
+    fn run_many_equivalent_to_repeated_runs() {
+        // `RunMany { reps }` ≡ `reps` consecutive `Run`s, with the fast
+        // paths on and off: four runs, one fingerprint. Oversubscribed
+        // (4 tasks, 1 core) so quantum expiry slices the batches.
+        let run = |batched: bool, fast: bool| {
+            let mut p = MachineParams::new(1, PolicyKind::Unmodified);
+            p.turbo = TurboTable::flat(2.8, 2.4, 1.9, 1);
+            p.fast_paths = fast;
+            let mut m = Machine::new(p);
+            let done = Rc::new(RefCell::new(0u64));
+            for _ in 0..4 {
+                if batched {
+                    m.spawn(
+                        TaskType::Untyped,
+                        0,
+                        Box::new(BatchedLoop { reps: 100, emitted: false, done: done.clone() }),
+                    );
+                } else {
+                    m.spawn(
+                        TaskType::Untyped,
+                        0,
+                        Box::new(ScalarLoop { remaining: 100, done: done.clone() }),
+                    );
+                }
+            }
+            m.run_until(10 * SEC, &mut NullDriver);
+            assert_eq!(*done.borrow(), 4);
+            fingerprint(&m)
+        };
+        let base = run(false, false);
+        assert_eq!(run(false, true), base, "fast Run path drifted");
+        assert_eq!(run(true, false), base, "slow RunMany unrolling drifted");
+        assert_eq!(run(true, true), base, "coalesced RunMany drifted");
+    }
+
+    #[test]
+    fn coalescing_engages_on_steady_batches() {
+        let mut p = MachineParams::new(1, PolicyKind::Unmodified);
+        p.turbo = TurboTable::flat(2.8, 2.4, 1.9, 1);
+        let mut m = Machine::new(p);
+        let done = Rc::new(RefCell::new(0u64));
+        m.spawn(
+            TaskType::Untyped,
+            0,
+            Box::new(BatchedLoop { reps: 200, emitted: false, done: done.clone() }),
+        );
+        m.run_until(SEC, &mut NullDriver);
+        assert_eq!(*done.borrow(), 1);
+        assert!(
+            m.coalesced_reps > 100,
+            "a lone steady batch must coalesce almost entirely, got {}",
+            m.coalesced_reps
         );
     }
 

@@ -1,20 +1,41 @@
-//! Deterministic event queue: a binary heap ordered by `(time, seq)`.
+//! Deterministic event queue ordered by `(time, seq)`.
 //!
 //! The `seq` tie-breaker guarantees that events scheduled at the same
-//! simulated instant pop in insertion order regardless of heap internals —
-//! the foundation of the simulator's reproducibility guarantee.
+//! simulated instant pop in insertion order regardless of container
+//! internals — the foundation of the simulator's reproducibility
+//! guarantee.
+//!
+//! Two implementations share that contract:
+//!
+//! * [`EventQueue`] — the production container: a *calendar queue*
+//!   (Brown 1988) tuned for the machine loop's access pattern, where
+//!   almost every event lands a few microseconds ahead of the clock.
+//!   Inserts are O(1); pops scan the handful of entries sharing the
+//!   clock's current 4 µs bucket. When the queue goes sparse (events
+//!   milliseconds out), the search falls back to one direct sweep over
+//!   all buckets rather than spinning bucket-by-bucket through empty
+//!   "days".
+//! * [`reference::HeapQueue`] — the original `BinaryHeap` ordered by
+//!   `Reverse<(time, seq)>`, kept verbatim as the obviously-correct
+//!   reference. The property suite in `rust/tests/perf_equiv.rs` drives
+//!   both with arbitrary schedule/pop interleavings (including
+//!   same-instant FIFO bursts) and requires identical pop streams.
+//!
+//! Both containers pop the global minimum under the `(time, seq)` total
+//! order, so they are observationally equivalent by construction; the
+//! calendar only changes *where* entries wait.
 
 use super::Time;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 
-/// An event queue over an arbitrary payload type `E`.
-#[derive(Debug)]
-pub struct EventQueue<E> {
-    heap: BinaryHeap<Reverse<Entry<E>>>,
-    seq: u64,
-    now: Time,
-}
+/// Bucket width exponent: 2^12 ns ≈ 4.1 µs per bucket — a few block
+/// executions. Chosen so the dense near-future events (Step boundaries,
+/// IPIs, arrivals under load) land in the current or next bucket.
+const BUCKET_BITS: u32 = 12;
+/// Bucket count (power of two). One full wheel revolution ("year")
+/// covers ~1.05 ms — about one scheduler quantum of look-ahead before
+/// the sparse fallback kicks in.
+const N_BUCKETS: usize = 256;
+const BUCKET_MASK: u64 = (N_BUCKETS as u64) - 1;
 
 #[derive(Debug)]
 struct Entry<E> {
@@ -23,21 +44,25 @@ struct Entry<E> {
     ev: E,
 }
 
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl<E> Eq for Entry<E> {}
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.at, self.seq).cmp(&(other.at, other.seq))
-    }
+/// An event queue over an arbitrary payload type `E`.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    /// `buckets[(at >> BUCKET_BITS) & BUCKET_MASK]`, unsorted within a
+    /// bucket: pops *select* the `(time, seq)` minimum, so insertion
+    /// order inside the vec is irrelevant and removal can `swap_remove`.
+    buckets: Vec<Vec<Entry<E>>>,
+    len: usize,
+    seq: u64,
+    now: Time,
+    /// Epoch (`at >> BUCKET_BITS`) where the minimum search resumes.
+    /// Monotone: every live entry's epoch is ≥ this (pushes clamp to
+    /// `now`, pops advance it to the popped entry's epoch).
+    epoch: u64,
+    /// Cached `(time, seq)` of the current queue minimum; `None` when
+    /// the cache is dirty (after a pop) or the queue is empty.
+    min: Option<(Time, u64)>,
+    /// Past-dated schedules clamped to `now` (see [`EventQueue::schedule_at`]).
+    clamped: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -48,7 +73,15 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0 }
+        EventQueue {
+            buckets: (0..N_BUCKETS).map(|_| Vec::new()).collect(),
+            len: 0,
+            seq: 0,
+            now: 0,
+            epoch: 0,
+            min: None,
+            clamped: 0,
+        }
     }
 
     /// Current simulation time: the timestamp of the last popped event.
@@ -56,13 +89,36 @@ impl<E> EventQueue<E> {
         self.now
     }
 
-    /// Schedule `ev` at absolute time `at`. Scheduling in the past is a bug
-    /// in the machine model, so it panics rather than silently reordering.
+    /// Schedule `ev` at absolute time `at`.
+    ///
+    /// Scheduling in the past is a bug in the machine model, so debug
+    /// builds panic. Release builds *clamp the event to `now`* — it
+    /// fires as the next event at the current instant, after anything
+    /// already queued there (its `seq` is newer) — and count the clamp
+    /// in [`EventQueue::clamped`] so harnesses can assert the counter
+    /// stays zero. Clamping keeps the clock monotone: a past-dated
+    /// entry would otherwise pop first and drag `now` backwards.
     pub fn schedule_at(&mut self, at: Time, ev: E) {
         debug_assert!(at >= self.now, "event scheduled in the past: {at} < {}", self.now);
+        let at = if at < self.now {
+            self.clamped += 1;
+            self.now
+        } else {
+            at
+        };
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Reverse(Entry { at: at.max(self.now), seq, ev }));
+        if match self.min {
+            None => self.len == 0,
+            Some(m) => (at, seq) < m,
+        } {
+            // An empty queue's new sole entry, or a new global minimum,
+            // refreshes the cache; a dirty cache (post-pop, len > 0)
+            // stays dirty — other entries may be smaller.
+            self.min = Some((at, seq));
+        }
+        self.buckets[((at >> BUCKET_BITS) & BUCKET_MASK) as usize].push(Entry { at, seq, ev });
+        self.len += 1;
     }
 
     /// Schedule `ev` after a relative delay.
@@ -70,29 +126,181 @@ impl<E> EventQueue<E> {
         self.schedule_at(self.now.saturating_add(delay), ev);
     }
 
+    /// Locate (and cache) the `(time, seq)` minimum without removing it.
+    fn find_min(&mut self) -> Option<(Time, u64)> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.min.is_some() {
+            return self.min;
+        }
+        // Walk forward from the current epoch; an entry *belongs* to the
+        // wheel position only if its full epoch matches (entries from
+        // future "years" share the bucket but are skipped).
+        let mut epoch = self.epoch;
+        for _ in 0..N_BUCKETS {
+            let bucket = &self.buckets[(epoch & BUCKET_MASK) as usize];
+            let mut best: Option<(Time, u64)> = None;
+            for e in bucket {
+                if e.at >> BUCKET_BITS == epoch {
+                    let key = (e.at, e.seq);
+                    if best.map_or(true, |b| key < b) {
+                        best = Some(key);
+                    }
+                }
+            }
+            if best.is_some() {
+                self.epoch = epoch;
+                self.min = best;
+                return best;
+            }
+            epoch += 1;
+        }
+        // A whole revolution came up empty: the queue is sparse with
+        // everything ≥ one year out. One direct sweep finds the true
+        // minimum (cheap: N_BUCKETS mostly-empty vecs).
+        let mut best: Option<(Time, u64)> = None;
+        for bucket in &self.buckets {
+            for e in bucket {
+                let key = (e.at, e.seq);
+                if best.map_or(true, |b| key < b) {
+                    best = Some(key);
+                }
+            }
+        }
+        let b = best.expect("len > 0 but no entry found");
+        self.epoch = b.0 >> BUCKET_BITS;
+        self.min = best;
+        best
+    }
+
     /// Pop the next event, advancing the clock.
     pub fn pop(&mut self) -> Option<(Time, E)> {
-        let Reverse(e) = self.heap.pop()?;
-        self.now = e.at;
-        Some((e.at, e.ev))
+        let (at, seq) = self.find_min()?;
+        let bucket = &mut self.buckets[((at >> BUCKET_BITS) & BUCKET_MASK) as usize];
+        let pos = bucket
+            .iter()
+            .position(|e| e.seq == seq)
+            .expect("cached minimum must be present in its bucket");
+        let entry = bucket.swap_remove(pos);
+        self.len -= 1;
+        self.min = None;
+        self.now = at;
+        self.epoch = at >> BUCKET_BITS;
+        Some((at, entry.ev))
     }
 
     /// Time of the next event without popping.
-    pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|Reverse(e)| e.at)
+    pub fn peek_time(&mut self) -> Option<Time> {
+        self.find_min().map(|(at, _)| at)
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
+    }
+
+    /// Number of past-dated `schedule_at` calls clamped to `now` (always
+    /// 0 in debug builds, which panic instead).
+    pub fn clamped(&self) -> u64 {
+        self.clamped
+    }
+}
+
+/// The original `BinaryHeap` event queue, kept as the debug/differential
+/// reference implementation for the calendar queue above.
+pub mod reference {
+    use super::super::Time;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// Reference queue: a binary heap ordered by `(time, seq)`.
+    #[derive(Debug)]
+    pub struct HeapQueue<E> {
+        heap: BinaryHeap<Reverse<Entry<E>>>,
+        seq: u64,
+        now: Time,
+    }
+
+    #[derive(Debug)]
+    struct Entry<E> {
+        at: Time,
+        seq: u64,
+        ev: E,
+    }
+
+    impl<E> PartialEq for Entry<E> {
+        fn eq(&self, other: &Self) -> bool {
+            self.at == other.at && self.seq == other.seq
+        }
+    }
+    impl<E> Eq for Entry<E> {}
+    impl<E> PartialOrd for Entry<E> {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl<E> Ord for Entry<E> {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            (self.at, self.seq).cmp(&(other.at, other.seq))
+        }
+    }
+
+    impl<E> Default for HeapQueue<E> {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl<E> HeapQueue<E> {
+        pub fn new() -> Self {
+            HeapQueue { heap: BinaryHeap::new(), seq: 0, now: 0 }
+        }
+
+        pub fn now(&self) -> Time {
+            self.now
+        }
+
+        /// Same clamp semantics as [`super::EventQueue::schedule_at`]
+        /// (minus the counter): past-dated events panic in debug and
+        /// clamp to `now` in release.
+        pub fn schedule_at(&mut self, at: Time, ev: E) {
+            debug_assert!(at >= self.now, "event scheduled in the past: {at} < {}", self.now);
+            let seq = self.seq;
+            self.seq += 1;
+            self.heap.push(Reverse(Entry { at: at.max(self.now), seq, ev }));
+        }
+
+        pub fn schedule_in(&mut self, delay: Time, ev: E) {
+            self.schedule_at(self.now.saturating_add(delay), ev);
+        }
+
+        pub fn pop(&mut self) -> Option<(Time, E)> {
+            let Reverse(e) = self.heap.pop()?;
+            self.now = e.at;
+            Some((e.at, e.ev))
+        }
+
+        pub fn peek_time(&self) -> Option<Time> {
+            self.heap.peek().map(|Reverse(e)| e.at)
+        }
+
+        pub fn len(&self) -> usize {
+            self.heap.len()
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.heap.is_empty()
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::reference::HeapQueue;
     use super::*;
 
     #[test]
@@ -148,5 +356,95 @@ mod tests {
         q.schedule_at(100, ());
         q.pop();
         q.schedule_at(50, ());
+    }
+
+    /// Release-profile contract: a past-dated event clamps to `now`
+    /// (popping next at the current instant, after anything already
+    /// queued there), the clock never runs backwards, and the clamp is
+    /// counted. `ci.sh` runs the suites under `--release`, where the
+    /// debug assertion above compiles out and this test compiles in.
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn past_scheduling_clamps_in_release() {
+        let mut q = EventQueue::new();
+        q.schedule_at(100, "first");
+        q.pop();
+        assert_eq!(q.clamped(), 0);
+        q.schedule_at(100, "same-instant");
+        q.schedule_at(50, "late"); // past-dated: clamps to now = 100
+        assert_eq!(q.clamped(), 1);
+        let (t1, e1) = q.pop().unwrap();
+        assert_eq!((t1, e1), (100, "same-instant"), "clamped event keeps FIFO order");
+        let (t2, e2) = q.pop().unwrap();
+        assert_eq!((t2, e2), (100, "late"), "clamped event fires at now, not in the past");
+        assert_eq!(q.now(), 100);
+    }
+
+    #[test]
+    fn far_future_events_across_wheel_years() {
+        // Events far beyond one wheel revolution (~1 ms) exercise the
+        // sparse direct-sweep fallback and the same-bucket/different-
+        // epoch filtering (entries a whole "year" apart share a bucket).
+        let year = (N_BUCKETS as u64) << BUCKET_BITS;
+        let mut q = EventQueue::new();
+        q.schedule_at(7 * year + 12, "far");
+        q.schedule_at(12, "near"); // same wheel position, 7 years earlier
+        q.schedule_at(3 * year, "mid");
+        assert_eq!(q.peek_time(), Some(12));
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["near", "mid", "far"]);
+        assert_eq!(q.now(), 7 * year + 12);
+    }
+
+    #[test]
+    fn interleaved_push_pop_matches_reference() {
+        // Deterministic pseudo-random interleaving: both containers see
+        // the same schedule/pop stream and must emit identical pops.
+        // (The full property, with shrinking, lives in
+        // rust/tests/perf_equiv.rs.)
+        let mut cal = EventQueue::new();
+        let mut heap = HeapQueue::new();
+        let mut x = 0x243F_6A88_85A3_08D3u64;
+        for i in 0..5_000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            if x % 3 == 0 {
+                let a = cal.pop();
+                let b = heap.pop();
+                assert_eq!(a, b, "pop #{i} diverged");
+            } else {
+                // Mix of immediate, near, and multi-year-out delays,
+                // plus same-instant bursts (delay 0).
+                let delay = match x % 7 {
+                    0 | 1 => 0,
+                    2 | 3 | 4 => x % 10_000,
+                    5 => x % 1_000_000,
+                    _ => x % 50_000_000,
+                };
+                cal.schedule_in(delay, i);
+                heap.schedule_in(delay, i);
+            }
+            assert_eq!(cal.len(), heap.len());
+        }
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn len_and_empty_track() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.schedule_at(1, ());
+        q.schedule_at(2, ());
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
     }
 }

@@ -40,6 +40,14 @@ impl LatencyStats {
         LatencyStats { hist: LogHistogram::new(), slo, violations: 0 }
     }
 
+    /// Forget every recorded sample in place (keeping the histogram's
+    /// bucket allocation) — equivalent to `*self = LatencyStats::new(self.slo)`
+    /// without the reallocation.
+    pub fn reset(&mut self) {
+        self.hist.clear();
+        self.violations = 0;
+    }
+
     /// Record one completed request's latency (ns).
     pub fn record(&mut self, latency: Time) {
         self.hist.record(latency);
@@ -181,6 +189,24 @@ mod tests {
         assert_eq!(a.hist.percentile(99.0), u.hist.percentile(99.0));
         assert_eq!(a.hist.max(), u.hist.max());
         assert!((a.violation_frac() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_is_equivalent_to_fresh() {
+        let mut s = LatencyStats::new(2 * MS);
+        for v in [MS, 3 * MS, 5 * MS] {
+            s.record(v);
+        }
+        s.reset();
+        assert_eq!(s.completed(), 0);
+        assert_eq!(s.violations(), 0);
+        assert_eq!(s.slo, 2 * MS, "reset keeps the SLO threshold");
+        s.record(3 * MS);
+        let mut fresh = LatencyStats::new(2 * MS);
+        fresh.record(3 * MS);
+        assert_eq!(s.completed(), fresh.completed());
+        assert_eq!(s.violations(), fresh.violations());
+        assert_eq!(s.hist.max(), fresh.hist.max());
     }
 
     #[test]

@@ -53,6 +53,17 @@ impl LogHistogram {
         LogHistogram { buckets: vec![0; n], count: 0, sum: 0, max: 0, min: u64::MAX }
     }
 
+    /// Zero every counter in place, keeping the bucket allocation — the
+    /// post-warmup reset path reuses recorders instead of reallocating
+    /// their ~2k-bucket vectors per measurement window.
+    pub fn clear(&mut self) {
+        self.buckets.fill(0);
+        self.count = 0;
+        self.sum = 0;
+        self.max = 0;
+        self.min = u64::MAX;
+    }
+
     pub fn record(&mut self, v: u64) {
         let i = bucket_index(v);
         self.buckets[i] += 1;
@@ -273,6 +284,27 @@ mod tests {
         let before = (a.count(), a.min(), a.max(), a.percentile(50.0));
         a.merge(&h);
         assert_eq!(before, (a.count(), a.min(), a.max(), a.percentile(50.0)));
+    }
+
+    #[test]
+    fn clear_is_equivalent_to_fresh() {
+        let mut h = LogHistogram::new();
+        for v in [1u64, 77, 1 << 40, 0] {
+            h.record(v);
+        }
+        h.clear();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(99.0), 0);
+        // Recording after clear behaves like a fresh histogram.
+        h.record(9);
+        let mut fresh = LogHistogram::new();
+        fresh.record(9);
+        assert_eq!(h.report(), fresh.report());
+        assert_eq!(h.mean(), fresh.mean());
+        assert_eq!(h.min(), fresh.min());
     }
 
     #[test]

@@ -116,12 +116,14 @@ impl ServerShared {
         true
     }
 
-    /// Begin the measurement window (after warmup) — zero the recorders.
+    /// Begin the measurement window (after warmup) — zero the recorders
+    /// in place (the histogram bucket vectors are reused, not
+    /// reallocated).
     pub fn start_measuring(&mut self) {
         self.measuring = true;
-        self.stats = LatencyStats::new(self.stats.slo);
+        self.stats.reset();
         for t in &mut self.tenant_stats {
-            *t = LatencyStats::new(t.slo);
+            t.reset();
         }
         self.dropped = 0;
     }

@@ -62,6 +62,10 @@ pub struct WebCfg {
     pub governor: GovernorSpec,
     /// Per-core power model for the energy accounting.
     pub power: PowerParams,
+    /// Hot-path optimizations (slice coalescing + memoized costing) —
+    /// bit-exact either way; off only for the bench harness's baseline
+    /// (see `MachineParams::fast_paths`).
+    pub fast_paths: bool,
 }
 
 impl WebCfg {
@@ -88,6 +92,7 @@ impl WebCfg {
             adaptive: None,
             governor: GovernorSpec::IntelLegacy,
             power: PowerParams::default(),
+            fast_paths: true,
         }
     }
 
@@ -130,6 +135,7 @@ impl WebCfg {
         cfg.handshake_every = conf.int_or("server.handshake_every", cfg.handshake_every as i64) as u64;
         cfg.annotate = conf.bool_or("sched.annotate", cfg.annotate);
         cfg.fault_migrate = conf.bool_or("sched.fault_migrate", false);
+        cfg.fast_paths = conf.bool_or("machine.fast_paths", cfg.fast_paths);
         if conf.bool_or("sched.adaptive", false) {
             // The adaptive controller manages only the machine-global
             // CoreSpec set; rejecting other policies here beats a
@@ -244,11 +250,29 @@ impl WebCfg {
     }
 }
 
-/// One step of a request plan.
+/// One step of a request plan. `Exec` carries a repetition count so
+/// homogeneous inner loops (brotli chunks, back-to-back cipher records)
+/// reach the machine as one [`Action::RunMany`] — the steady-state form
+/// its coalescing fast path consumes — instead of N identical actions.
 #[derive(Clone, Debug)]
 enum Step {
     Set(TaskType),
-    Exec { func: u64, stack: u32, block: Block },
+    Exec { func: u64, stack: u32, block: Block, reps: u32 },
+}
+
+/// Append an execution step, run-length-merging into the tail when it
+/// repeats the same `(func, stack, block)`. Merging never crosses a
+/// `Set` boundary (the tail would not match) and never merges blocks
+/// that differ only in their per-burst license-eligibility draw — block
+/// equality covers `license_exempt`.
+fn push_exec(steps: &mut VecDeque<Step>, func: u64, stack: u32, block: Block) {
+    if let Some(Step::Exec { func: f, stack: s, block: b, reps }) = steps.back_mut() {
+        if *f == func && *s == stack && *b == block {
+            *reps += 1;
+            return;
+        }
+    }
+    steps.push_back(Step::Exec { func, stack, block, reps: 1 });
 }
 
 /// Interned symbols + precomputed stacks for the request pipeline.
@@ -325,12 +349,8 @@ impl Planner {
         }
     }
 
-    fn scalar_step(&self, name: &str, stack: u32, insns: u64) -> Step {
-        Step::Exec {
-            func: fnv(name),
-            stack,
-            block: Block::new(ClassMix::scalar(insns)),
-        }
+    fn scalar_step(&self, steps: &mut VecDeque<Step>, name: &str, stack: u32, insns: u64) {
+        push_exec(steps, fnv(name), stack, Block::new(ClassMix::scalar(insns)));
     }
 
     fn crypto_steps(&self, bytes: usize, read: bool, rng: &mut Rng, out: &mut VecDeque<Step>) {
@@ -346,19 +366,21 @@ impl Planner {
             } else {
                 self.st_poly_w
             };
-            out.push_back(Step::Exec { func: fnv(sym), stack, block });
+            push_exec(out, fnv(sym), stack, block);
         }
     }
 
-    /// Build the step plan for one request. `reqno` drives the keepalive
-    /// handshake cadence.
-    fn plan(&self, reqno: u64, rng: &mut Rng) -> VecDeque<Step> {
-        let mut steps = VecDeque::with_capacity(24);
+    /// Build the step plan for one request into `steps` (cleared first —
+    /// workers reuse one buffer across requests instead of allocating a
+    /// fresh plan per request). `reqno` drives the keepalive handshake
+    /// cadence.
+    fn plan_into(&self, reqno: u64, rng: &mut Rng, steps: &mut VecDeque<Step>) {
+        steps.clear();
         let annotate = self.cfg.annotate;
         let _ = &self.syms;
 
         // Accept/parse (scalar).
-        steps.push_back(self.scalar_step("ngx_http_process_request", self.st_process, 45_000));
+        self.scalar_step(steps, "ngx_http_process_request", self.st_process, 45_000);
 
         // Occasional full TLS handshake (keepalive connections).
         if self.cfg.handshake_every > 0 && reqno % self.cfg.handshake_every == 0 {
@@ -366,8 +388,8 @@ impl Planner {
                 steps.push_back(Step::Set(TaskType::Avx));
             }
             // ECDHE/bignum: predominantly scalar with a small AEAD finish.
-            steps.push_back(self.scalar_step("SSL_do_handshake", self.st_handshake, 280_000));
-            self.crypto_steps(512, false, rng, &mut steps);
+            self.scalar_step(steps, "SSL_do_handshake", self.st_handshake, 280_000);
+            self.crypto_steps(512, false, rng, steps);
             if annotate {
                 steps.push_back(Step::Set(TaskType::Scalar));
             }
@@ -377,19 +399,20 @@ impl Planner {
         if annotate {
             steps.push_back(Step::Set(TaskType::Avx));
         }
-        steps.push_back(self.scalar_step("SSL_read", self.st_ssl_read, 6_000));
-        self.crypto_steps(512, true, rng, &mut steps);
+        self.scalar_step(steps, "SSL_read", self.st_ssl_read, 6_000);
+        self.crypto_steps(512, true, rng, steps);
         if annotate {
             steps.push_back(Step::Set(TaskType::Scalar));
         }
 
         // Static file handling (scalar).
-        steps.push_back(self.scalar_step("ngx_http_static_handler", self.st_static, 35_000));
+        self.scalar_step(steps, "ngx_http_static_handler", self.st_static, 35_000);
 
-        // Optional on-the-fly compression (scalar, the big chunk).
+        // Optional on-the-fly compression (scalar, the big chunk): the
+        // equal-size 8 KiB chunks run-length-merge into one RunMany.
         let body_bytes = if self.cfg.compress {
             for (sym, block) in self.compress.blocks(self.cfg.page_bytes) {
-                steps.push_back(Step::Exec { func: fnv(sym), stack: self.st_brotli, block });
+                push_exec(steps, fnv(sym), self.st_brotli, block);
             }
             self.compress.output_bytes(self.cfg.page_bytes)
         } else {
@@ -403,7 +426,7 @@ impl Planner {
         let mut left = body_bytes;
         while left > 0 {
             let rec = left.min(16 * 1024);
-            self.crypto_steps(rec, false, rng, &mut steps);
+            self.crypto_steps(rec, false, rng, steps);
             left -= rec;
         }
         if annotate {
@@ -411,8 +434,7 @@ impl Planner {
         }
 
         // Finalize/log (scalar).
-        steps.push_back(self.scalar_step("ngx_http_finalize_request", self.st_finalize, 18_000));
-        steps
+        self.scalar_step(steps, "ngx_http_finalize_request", self.st_finalize, 18_000);
     }
 }
 
@@ -425,20 +447,22 @@ struct Worker {
     ch: u32,
     rng: Rng,
     reqno: u64,
-    current: Option<(Request, VecDeque<Step>)>,
+    current: Option<Request>,
+    /// Step buffer reused across requests (filled by
+    /// [`Planner::plan_into`]; no per-request plan allocation).
+    steps: VecDeque<Step>,
 }
 
 impl TaskBody for Worker {
     fn next(&mut self, now: Time, _rng: &mut Rng) -> Action {
         loop {
-            if let Some((req, steps)) = &mut self.current {
-                match steps.pop_front() {
+            if let Some(req) = self.current {
+                match self.steps.pop_front() {
                     Some(Step::Set(t)) => return Action::SetType(t),
-                    Some(Step::Exec { func, stack, block }) => {
-                        return Action::Run { block, func, stack }
+                    Some(Step::Exec { func, stack, block, reps }) => {
+                        return crate::sched::machine::pack_run(block, func, stack, reps)
                     }
                     None => {
-                        let req = *req;
                         self.current = None;
                         self.shared.borrow_mut().complete(now, req);
                     }
@@ -450,8 +474,8 @@ impl TaskBody for Worker {
                         self.reqno += 1;
                         let planner =
                             &self.planners[req.tenant as usize % self.planners.len()];
-                        let plan = planner.plan(self.reqno, &mut self.rng);
-                        self.current = Some((req, plan));
+                        planner.plan_into(self.reqno, &mut self.rng, &mut self.steps);
+                        self.current = Some(req);
                     }
                     None => return Action::WaitChannel(self.ch),
                 }
@@ -616,6 +640,7 @@ fn run_webserver_impl(
     mp.seed = cfg.seed;
     mp.freq.governor = cfg.governor;
     mp.power = cfg.power;
+    mp.fast_paths = cfg.fast_paths;
     // wrk2 client cores keep the package(s) awake: 4 per socket, like
     // the paper's single-socket evaluation.
     mp.extra_active_cores = 4 * cfg.sockets.max(1);
@@ -638,6 +663,7 @@ fn run_webserver_impl(
             rng: seed_rng.fork(),
             reqno: seed_rng.below(1_000) as u64, // desync handshake phases
             current: None,
+            steps: VecDeque::with_capacity(24),
         };
         // nginx workers start untyped-equivalent: the paper's patch types
         // them scalar on first classification; we spawn them scalar.
@@ -985,6 +1011,54 @@ mod tests {
         assert_eq!(live.tail.max_us, replay.tail.max_us);
         assert_eq!(live.throughput_rps, replay.throughput_rps);
         assert_eq!(live.avg_ghz, replay.avg_ghz);
+    }
+
+    #[test]
+    fn plans_run_length_merge_homogeneous_chunks() {
+        // The compressed 72 KiB page is exactly nine identical 8 KiB
+        // brotli chunks — the plan must carry them as one Exec with
+        // reps = 9, not nine steps.
+        let cfg = WebCfg::paper_default(Isa::Avx512, PolicyKind::Unmodified);
+        let stacks = Rc::new(RefCell::new(StackTable::new()));
+        let planner = Planner::new(cfg, stacks);
+        let mut rng = Rng::new(1);
+        let mut steps = VecDeque::new();
+        planner.plan_into(1, &mut rng, &mut steps);
+        let brotli = fnv("BrotliEncoderCompressStream");
+        let brotli_steps: Vec<u32> = steps
+            .iter()
+            .filter_map(|s| match s {
+                Step::Exec { func, reps, .. } if *func == brotli => Some(*reps),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(brotli_steps, vec![9], "9 equal chunks must merge into one batch");
+        // Reused buffer: a second plan clears and refills.
+        planner.plan_into(2, &mut rng, &mut steps);
+        assert!(steps.iter().any(|s| matches!(s, Step::Exec { .. })));
+    }
+
+    #[test]
+    fn fast_paths_off_reproduces_fast_on_bit_for_bit() {
+        // End-to-end crown constraint: the full web-server run with the
+        // hot paths disabled must be indistinguishable from the default
+        // — same completions, same tails, bit-equal floats and energy.
+        let on = quick_cfg(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 });
+        let mut off = on.clone();
+        off.fast_paths = false;
+        let a = run_webserver(&on);
+        let b = run_webserver(&off);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.stats.violations(), b.stats.violations());
+        assert_eq!(a.throughput_rps.to_bits(), b.throughput_rps.to_bits());
+        assert_eq!(a.avg_ghz.to_bits(), b.avg_ghz.to_bits());
+        assert_eq!(a.ipc.to_bits(), b.ipc.to_bits());
+        assert_eq!(a.active_energy_j.to_bits(), b.active_energy_j.to_bits());
+        assert_eq!(a.idle_energy_j.to_bits(), b.idle_energy_j.to_bits());
+        assert_eq!(a.tail.p50_us.to_bits(), b.tail.p50_us.to_bits());
+        assert_eq!(a.tail.p99_us.to_bits(), b.tail.p99_us.to_bits());
+        assert_eq!(a.tail.max_us.to_bits(), b.tail.max_us.to_bits());
     }
 
     #[test]

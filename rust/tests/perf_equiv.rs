@@ -1,0 +1,380 @@
+//! Hot-path equivalence suite (the perf-overhaul PR's determinism
+//! pins). Three bands — see `rust/tests/README.md` for triage:
+//!
+//! 1. **Queue** — the calendar [`EventQueue`] must be observationally
+//!    equivalent to the frozen `BinaryHeap` reference
+//!    ([`reference::HeapQueue`]): identical pop streams for arbitrary
+//!    schedule/pop interleavings, including same-instant FIFO bursts
+//!    and multi-"year" sparse gaps (testkit property, shrinking).
+//! 2. **Machine differential** — `fast_paths` on ≡ off, bit for bit
+//!    (float accumulators compared by bit pattern), over randomized
+//!    shrinking action traces (mixed block classes, sleeps, type
+//!    changes, oversubscription) and over `RunMany` vs unrolled `Run`
+//!    streams.
+//! 3. **End-to-end** — a small real web-server run and a 2-machine
+//!    fleet must produce byte-identical rendered tables and bit-equal
+//!    tails/energy with the fast paths on and off. This is the same
+//!    property the golden snapshots rely on (they are recorded with the
+//!    fast paths at their default, on).
+
+use avxfreq::cpu::TurboTable;
+use avxfreq::fleet::{run_fleet, FleetCfg, RouterSpec};
+use avxfreq::isa::block::{Block, ClassMix, InsnClass};
+use avxfreq::scenario::{ArrivalSpec, PolicySpec, ScenarioMatrix, TopologySpec, WorkloadSpec};
+use avxfreq::sched::machine::{Action, Machine, MachineParams, NullDriver, TaskBody};
+use avxfreq::sched::{PolicyKind, TaskType};
+use avxfreq::sim::queue::reference::HeapQueue;
+use avxfreq::sim::{EventQueue, Time, MS, SEC, US};
+use avxfreq::testkit::{assert_prop, IntRange, VecOf};
+use avxfreq::util::Rng;
+use avxfreq::workload::client::LoadMode;
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::{run_webserver, WebCfg, WebRun};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+// ---------------------------------------------------------------------
+// Band 1: calendar queue ≡ heap reference.
+
+/// Decode one raw trace value into a queue operation. `None` = pop;
+/// `Some(delay)` = schedule at `now + delay`. The delay distribution
+/// deliberately covers the same-instant burst (0), the dense
+/// near-future the calendar is tuned for, and multi-"year" gaps that
+/// force its sparse fallback.
+fn decode_op(v: u64) -> Option<Time> {
+    if v % 5 == 0 {
+        return None;
+    }
+    Some(match (v / 5) % 4 {
+        0 => 0,
+        1 => v % 1_000,
+        2 => v % 100_000,
+        _ => v % 100_000_000, // ~100 wheel revolutions out
+    })
+}
+
+#[test]
+fn calendar_queue_matches_heap_reference() {
+    let strat = VecOf { elem: IntRange { lo: 0, hi: u64::MAX / 2 }, max_len: 200 };
+    assert_prop("calendar ≡ heap pop order", 0xC0FFEE, 60, &strat, |ops| {
+        let mut cal: EventQueue<u64> = EventQueue::new();
+        let mut heap: HeapQueue<u64> = HeapQueue::new();
+        for (i, &v) in ops.iter().enumerate() {
+            match decode_op(v) {
+                None => {
+                    let (a, b) = (cal.pop(), heap.pop());
+                    if a != b {
+                        return Err(format!("op {i}: pop {a:?} != reference {b:?}"));
+                    }
+                }
+                Some(delay) => {
+                    cal.schedule_in(delay, i as u64);
+                    heap.schedule_in(delay, i as u64);
+                }
+            }
+            if cal.len() != heap.len() {
+                return Err(format!("op {i}: len {} != {}", cal.len(), heap.len()));
+            }
+            if cal.peek_time() != heap.peek_time() {
+                return Err(format!(
+                    "op {i}: peek {:?} != {:?}",
+                    cal.peek_time(),
+                    heap.peek_time()
+                ));
+            }
+        }
+        // Drain: the tails must agree too.
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            if a != b {
+                return Err(format!("drain: {a:?} != {b:?}"));
+            }
+            if a.is_none() {
+                return Ok(());
+            }
+        }
+    });
+}
+
+#[test]
+fn calendar_queue_same_instant_burst_is_fifo() {
+    // A large burst at one instant interleaved with pops: strict
+    // insertion order must survive the calendar's bucket selection.
+    let mut q = EventQueue::new();
+    q.schedule_at(1000, 0u64);
+    q.pop();
+    for i in 1..=500u64 {
+        q.schedule_at(1000, i);
+    }
+    for want in 1..=500u64 {
+        let (t, got) = q.pop().unwrap();
+        assert_eq!((t, got), (1000, want));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Band 2: machine differential over shrinking action traces.
+
+/// Body replaying a fixed action script, then exiting.
+struct ScriptBody {
+    actions: Vec<Action>,
+    pos: usize,
+    done: Rc<RefCell<u64>>,
+}
+
+impl TaskBody for ScriptBody {
+    fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+        match self.actions.get(self.pos) {
+            Some(a) => {
+                self.pos += 1;
+                a.clone()
+            }
+            None => {
+                *self.done.borrow_mut() += 1;
+                Action::Exit
+            }
+        }
+    }
+}
+
+/// Decode a raw trace value into one action of a mixed workload.
+fn decode_action(v: u64) -> Action {
+    if v % 13 == 0 {
+        return Action::Sleep((v % 3 + 1) * 50 * US);
+    }
+    if v % 11 == 0 {
+        return Action::SetType(if v % 2 == 0 { TaskType::Avx } else { TaskType::Scalar });
+    }
+    let insns = 1_000 + v % 30_000;
+    let mix = match v % 4 {
+        0 | 1 => ClassMix::scalar(insns),
+        2 => ClassMix::of(InsnClass::Avx512Heavy, insns),
+        _ => ClassMix::of(InsnClass::Avx2Heavy, insns).with(InsnClass::Scalar, insns / 4),
+    };
+    Action::Run {
+        block: Block { mix, mem_ops: insns / 10, branches: insns / 50, license_exempt: false },
+        func: v % 9,
+        stack: 0,
+    }
+}
+
+/// Bit-pattern fingerprint of a machine run (floats via `to_bits`).
+fn machine_fingerprint(m: &Machine) -> Vec<u64> {
+    let p = m.total_perf();
+    vec![
+        p.instructions,
+        p.cycles,
+        p.branches,
+        p.mispredicts,
+        p.busy_ns,
+        p.idle_ns,
+        p.stall_ns,
+        p.license_cycles[0],
+        p.license_cycles[1],
+        p.license_cycles[2],
+        p.throttle_cycles,
+        p.license_requests,
+        p.freq_switches,
+        p.freq_integral.to_bits(),
+        p.active_energy_j.to_bits(),
+        p.idle_energy_j.to_bits(),
+        m.sched.stats.migrations,
+        m.sched.stats.type_changes,
+        m.now(),
+    ]
+}
+
+fn run_script(trace: &[u64], fast: bool) -> (Vec<u64>, u64) {
+    // 3 tasks on 2 cores (oversubscribed: quantum expiry and migrations
+    // inside coalesced windows), CoreSpec so SetType suspends/migrates.
+    let mut p = MachineParams::new(2, PolicyKind::CoreSpec { avx_cores: 1 });
+    p.turbo = TurboTable::flat(2.8, 2.4, 1.9, 2);
+    p.fast_paths = fast;
+    let mut m = Machine::new(p);
+    let done = Rc::new(RefCell::new(0u64));
+    for t in 0..3usize {
+        // Offset per task so the three scripts interleave differently.
+        let actions: Vec<Action> =
+            trace.iter().skip(t).map(|&v| decode_action(v.rotate_left(t as u32))).collect();
+        m.spawn(
+            TaskType::Scalar,
+            0,
+            Box::new(ScriptBody { actions, pos: 0, done: done.clone() }),
+        );
+    }
+    m.run_until(30 * SEC, &mut NullDriver);
+    (machine_fingerprint(&m), *done.borrow())
+}
+
+#[test]
+fn fast_paths_differential_over_shrinking_traces() {
+    let strat = VecOf { elem: IntRange { lo: 0, hi: u64::MAX / 2 }, max_len: 48 };
+    assert_prop("fast on ≡ fast off (machine)", 0xFA57, 25, &strat, |trace| {
+        let (fast, done_fast) = run_script(trace, true);
+        let (slow, done_slow) = run_script(trace, false);
+        if done_fast != done_slow {
+            return Err(format!("completion drift: {done_fast} vs {done_slow}"));
+        }
+        if fast != slow {
+            return Err(format!("fingerprint drift:\n fast {fast:?}\n slow {slow:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// `RunMany { reps }` must equal `reps` unrolled `Run`s under both path
+/// selections — four runs, one fingerprint.
+#[test]
+fn run_many_differential_over_shrinking_traces() {
+    let strat = VecOf { elem: IntRange { lo: 1, hi: 60 }, max_len: 12 };
+    assert_prop("RunMany ≡ unrolled Run", 0xBA7C4, 20, &strat, |reps_trace| {
+        let block = Block {
+            mix: ClassMix::scalar(8_000),
+            mem_ops: 400,
+            branches: 160,
+            license_exempt: false,
+        };
+        let build = |batched: bool| -> Vec<Action> {
+            let mut out = Vec::new();
+            for &k in reps_trace {
+                let k = k as u32;
+                if batched {
+                    out.push(Action::RunMany { block: block.clone(), reps: k, func: 1, stack: 0 });
+                } else {
+                    for _ in 0..k {
+                        out.push(Action::Run { block: block.clone(), func: 1, stack: 0 });
+                    }
+                }
+                // A sleep between batches so wakes land mid-stream.
+                out.push(Action::Sleep(120 * US));
+            }
+            out
+        };
+        let run = |batched: bool, fast: bool| -> Vec<u64> {
+            let mut p = MachineParams::new(1, PolicyKind::Unmodified);
+            p.turbo = TurboTable::flat(2.8, 2.4, 1.9, 1);
+            p.fast_paths = fast;
+            let mut m = Machine::new(p);
+            let done = Rc::new(RefCell::new(0u64));
+            for _ in 0..2 {
+                m.spawn(
+                    TaskType::Untyped,
+                    0,
+                    Box::new(ScriptBody { actions: build(batched), pos: 0, done: done.clone() }),
+                );
+            }
+            m.run_until(30 * SEC, &mut NullDriver);
+            machine_fingerprint(&m)
+        };
+        let base = run(false, false);
+        for (batched, fast) in [(false, true), (true, false), (true, true)] {
+            let got = run(batched, fast);
+            if got != base {
+                return Err(format!(
+                    "divergence at batched={batched} fast={fast}:\n got {got:?}\n want {base:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Band 3: end-to-end byte/bit equality.
+
+fn small_web_cfg(fast: bool) -> WebCfg {
+    let mut c = WebCfg::paper_default(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 });
+    c.cores = 4;
+    c.workers = 8;
+    c.page_bytes = 8 * 1024;
+    c.warmup = 100 * MS;
+    c.measure = 250 * MS;
+    c.mode = LoadMode::OpenProcess {
+        process: avxfreq::traffic::ArrivalProcess::two_tenant(25_000.0, 0.3),
+    };
+    c.fast_paths = fast;
+    c
+}
+
+fn web_fingerprint(r: &WebRun) -> Vec<u64> {
+    let mut out = vec![
+        r.completed,
+        r.dropped,
+        r.stats.violations(),
+        r.throughput_rps.to_bits(),
+        r.avg_ghz.to_bits(),
+        r.ipc.to_bits(),
+        r.insns_per_req.to_bits(),
+        r.active_energy_j.to_bits(),
+        r.idle_energy_j.to_bits(),
+        r.tail.p50_us.to_bits(),
+        r.tail.p95_us.to_bits(),
+        r.tail.p99_us.to_bits(),
+        r.tail.p999_us.to_bits(),
+        r.tail.max_us.to_bits(),
+        r.tail.slo_violation_frac.to_bits(),
+    ];
+    for (_, t) in &r.tenant_tails {
+        out.push(t.completed);
+        out.push(t.p99_us.to_bits());
+        out.push(t.slo_violation_frac.to_bits());
+    }
+    out
+}
+
+#[test]
+fn webserver_two_tenant_run_is_bit_identical() {
+    let fast = run_webserver(&small_web_cfg(true));
+    let slow = run_webserver(&small_web_cfg(false));
+    assert_eq!(web_fingerprint(&fast), web_fingerprint(&slow));
+}
+
+#[test]
+fn fleet_run_is_bit_identical_with_fast_paths() {
+    let fleet = |fast: bool| {
+        let mut cfg = small_web_cfg(fast);
+        // Fleet-total rate over 2 machines; trace replay + router paths.
+        cfg.mode = LoadMode::OpenProcess {
+            process: avxfreq::traffic::ArrivalProcess::two_tenant(50_000.0, 0.3),
+        };
+        let f = FleetCfg::new(2, RouterSpec::LeastOutstanding { service_est: 300_000 }, cfg);
+        run_fleet(&f, 2)
+    };
+    let a = fleet(true);
+    let b = fleet(false);
+    assert_eq!(a.machines.len(), b.machines.len());
+    for (ma, mb) in a.machines.iter().zip(&b.machines) {
+        assert_eq!(web_fingerprint(ma), web_fingerprint(mb));
+    }
+    assert_eq!(web_fingerprint(&a.cluster_run()), web_fingerprint(&b.cluster_run()));
+}
+
+#[test]
+fn matrix_tables_render_byte_identically_with_fast_paths() {
+    // The golden-byte mechanism: the same (small, real) matrix rendered
+    // with the fast paths on and off must be byte-for-byte equal — the
+    // checked-in golden snapshots therefore cannot distinguish the two.
+    let run = |fast: bool| {
+        let mut m = ScenarioMatrix::new(0xBE7C);
+        m.topologies = vec![TopologySpec::multi(1, 4)];
+        m.policies = vec![PolicySpec::CoreSpec { avx_cores: 1 }];
+        m.workloads = vec![WorkloadSpec {
+            name: "small".to_string(),
+            compress: true,
+            page_kib: 8,
+            rate_per_core: 4_000.0,
+        }];
+        m.isas = vec![Isa::Avx512];
+        m.loads = vec![0.8, 1.2];
+        m.arrivals = vec![ArrivalSpec::Poisson, ArrivalSpec::bursty_default()];
+        m.warmup = 100 * MS;
+        m.measure = 200 * MS;
+        m.fast_paths = fast;
+        let r = m.run(2);
+        (r.render(), r.render_tail())
+    };
+    let (tbl_fast, tail_fast) = run(true);
+    let (tbl_slow, tail_slow) = run(false);
+    assert_eq!(tbl_fast, tbl_slow, "matrix table bytes differ across fast-path setting");
+    assert_eq!(tail_fast, tail_slow, "tail table bytes differ across fast-path setting");
+}
