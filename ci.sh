@@ -37,7 +37,7 @@ step "release-profile queue clamp tests" \
 check_goldens() {
   local missing=0
   for g in matrix_report tail_report fleet_report fleetvar_report \
-           energy_report energydelay_report; do
+           energy_report energydelay_report tpc_report runtimespec_report; do
     if [ ! -f "rust/tests/golden/${g}.txt" ]; then
       echo "MISSING golden snapshot: rust/tests/golden/${g}.txt"
       missing=1
@@ -76,24 +76,25 @@ run_runtime_roundtrip() {
 }
 step "suite: runtime_roundtrip (SKIP must name artifacts dir)" run_runtime_roundtrip
 
-# Bench smoke: one quick fast-vs-baseline pass. `avxfreq bench` exits
-# non-zero if the two legs' outputs diverge (the equivalence gate) and
-# writes the BENCH_5.json perf-trajectory record; the speedup itself is
-# informational here — wall-clock on a loaded CI machine is noise, so
+# Bench smoke: one quick fast-vs-baseline pass (the executor scenario
+# rides along, so `LoadMode::Executor` is covered). `avxfreq bench`
+# exits non-zero if the two legs' outputs diverge (the equivalence gate)
+# and writes the BENCH_6.json perf-trajectory record; the speedup itself
+# is informational here — wall-clock on a loaded CI machine is noise, so
 # compare ratios across runs, not absolutes (rust/tests/README.md).
 run_bench_quick() {
   cargo run --release --quiet -- bench --quick
-  if [ ! -f BENCH_5.json ]; then
-    echo "bench did not write BENCH_5.json"
+  if [ ! -f BENCH_6.json ]; then
+    echo "bench did not write BENCH_6.json"
     return 1
   fi
-  if grep -q '"outputs_identical": false' BENCH_5.json; then
-    echo "BENCH_5.json records an output divergence"
+  if grep -q '"outputs_identical": false' BENCH_6.json; then
+    echo "BENCH_6.json records an output divergence"
     return 1
   fi
   return 0
 }
-step "bench --quick (equivalence gate + BENCH_5.json)" run_bench_quick
+step "bench --quick (equivalence gate + BENCH_6.json)" run_bench_quick
 
 step "cargo doc --no-deps (-D warnings)" \
   env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -129,6 +130,10 @@ for p in docs/ARCHITECTURE.md rust/tests/README.md configs/dual_socket.toml \
          rust/tests/golden/energy_report.txt rust/tests/golden/energydelay_report.txt \
          rust/src/bench/mod.rs rust/src/sim/queue.rs rust/src/cpu/ipc.rs \
          rust/tests/perf_equiv.rs \
+         configs/tpc.toml rust/src/tpc/mod.rs rust/src/tpc/placement.rs \
+         rust/src/tpc/queue.rs rust/src/tpc/reactor.rs rust/src/tpc/waker.rs \
+         rust/src/repro/runtimespec.rs rust/tests/tpc.rs \
+         rust/tests/golden/tpc_report.txt rust/tests/golden/runtimespec_report.txt \
          ci.sh; do
   if [ ! -e "$p" ]; then
     echo "MISSING referenced file: $p"

@@ -23,16 +23,18 @@
 //! scenario shapes and thread counts.
 
 use crate::fleet::{run_fleet, RouterSpec};
-use crate::scenario::ScenarioMatrix;
+use crate::scenario::{ArrivalSpec, ScenarioMatrix};
 use crate::sched::PolicyKind;
 use crate::sim::{Time, MS};
+use crate::tpc::{PlacementSpec, TpcParams};
+use crate::workload::client::LoadMode;
 use crate::workload::crypto::Isa;
 use crate::workload::webserver::{run_webserver, WebCfg, WebRun};
 use std::fmt::Write as _;
 use std::time::Instant;
 
 /// Which PR's trajectory file this harness writes.
-pub const BENCH_PR: u32 = 5;
+pub const BENCH_PR: u32 = 6;
 
 /// Harness configuration (CLI surface of `avxfreq bench`).
 #[derive(Clone, Debug)]
@@ -42,7 +44,7 @@ pub struct BenchCfg {
     pub seed: u64,
     /// OS threads for the matrix/fleet legs (same for both legs).
     pub threads: usize,
-    /// Scenario names to run (`single`, `matrix`, `fleet`).
+    /// Scenario names to run (`single`, `matrix`, `fleet`, `executor`).
     pub scenarios: Vec<String>,
 }
 
@@ -52,7 +54,10 @@ impl BenchCfg {
             quick,
             seed,
             threads: threads.max(1),
-            scenarios: ["single", "matrix", "fleet"].iter().map(|s| s.to_string()).collect(),
+            scenarios: ["single", "matrix", "fleet", "executor"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
         }
     }
 }
@@ -114,6 +119,10 @@ fn fingerprint(run: &WebRun, out: &mut Vec<u64>) {
     out.push(run.tail.p999_us.to_bits());
     out.push(run.tail.max_us.to_bits());
     out.push(run.tail.slo_violation_frac.to_bits());
+    out.push(run.runtime_steered);
+    out.push(run.runtime_migrations);
+    out.push(run.runtime_migrations_per_sec.to_bits());
+    out.push(run.runtime_preemptions);
     for (_, t) in &run.tenant_tails {
         out.push(t.completed);
         out.push(t.p99_us.to_bits());
@@ -168,6 +177,44 @@ fn run_matrix(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg, Vec<u
     (Leg { wall_s, sim_ns }, fp)
 }
 
+/// The same single-machine web workload served through the
+/// thread-per-core runtime (`LoadMode::Executor`) with the avx-steer
+/// placement, so the runtime steering/wake paths sit on the timed path
+/// of both legs and inside the equivalence gate.
+fn executor_cfg(quick: bool, seed: u64, fast: bool) -> WebCfg {
+    let mut cfg = WebCfg::paper_default(Isa::Avx512, PolicyKind::Unmodified);
+    cfg.seed = seed;
+    cfg.fast_paths = fast;
+    cfg.cores = 4;
+    cfg.workers = 4;
+    cfg.annotate = true;
+    cfg.page_bytes = 16 * 1024;
+    if quick {
+        cfg.warmup = 150 * MS;
+        cfg.measure = 300 * MS;
+    }
+    let rate = 6_000.0 * cfg.cores as f64;
+    cfg.mode = LoadMode::Executor {
+        process: ArrivalSpec::bursty_mix_default().instantiate(rate),
+        tpc: TpcParams {
+            placement: PlacementSpec::AvxSteer { avx_cores: 2 },
+            ..TpcParams::default()
+        },
+    };
+    cfg
+}
+
+fn run_executor(quick: bool, seed: u64, fast: bool) -> (Leg, Vec<u64>) {
+    let cfg = executor_cfg(quick, seed, fast);
+    let sim_ns: Time = cfg.warmup + cfg.measure;
+    let t0 = Instant::now();
+    let run = run_webserver(&cfg);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut fp = Vec::new();
+    fingerprint(&run, &mut fp);
+    (Leg { wall_s, sim_ns }, fp)
+}
+
 fn run_fleet_scenario(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg, Vec<u64>) {
     let mut fleet = crate::repro::fleetvar::fleet_cfg(RouterSpec::RoundRobin, quick, seed);
     fleet.cfg.fast_paths = fast;
@@ -195,7 +242,10 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<Vec<BenchRow>> {
             "single" => |q, s, _t, f| run_single(q, s, f),
             "matrix" => run_matrix,
             "fleet" => run_fleet_scenario,
-            other => anyhow::bail!("unknown bench scenario {other:?} (single|matrix|fleet)"),
+            "executor" => |q, s, _t, f| run_executor(q, s, f),
+            other => {
+                anyhow::bail!("unknown bench scenario {other:?} (single|matrix|fleet|executor)")
+            }
         };
         plan.push((name, runner));
     }
@@ -315,7 +365,7 @@ mod tests {
             },
         ];
         let j = to_json(&cfg, &rows);
-        assert!(j.contains("\"pr\": 5"), "{j}");
+        assert!(j.contains("\"pr\": 6"), "{j}");
         assert!(j.contains("\"fast_sim_ns_per_wall_s\": 9600000000.000000"), "{j}");
         assert!(j.contains("\"baseline_sim_ns_per_wall_s\": 2400000000.000000"), "{j}");
         assert!(j.contains("\"speedup\": 4.000000"), "{j}");

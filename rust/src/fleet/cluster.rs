@@ -210,6 +210,10 @@ impl FleetRun {
             type_changes_per_sec: sum(&|m| m.type_changes_per_sec),
             migrations_per_sec: sum(&|m| m.migrations_per_sec),
             cross_socket_migrations_per_sec: sum(&|m| m.cross_socket_migrations_per_sec),
+            runtime_steered: self.machines.iter().map(|m| m.runtime_steered).sum(),
+            runtime_migrations: self.machines.iter().map(|m| m.runtime_migrations).sum(),
+            runtime_migrations_per_sec: sum(&|m| m.runtime_migrations_per_sec),
+            runtime_preemptions: self.machines.iter().map(|m| m.runtime_preemptions).sum(),
             // Joules add across machines (same law as the recorders).
             active_energy_j: sum(&|m| m.active_energy_j),
             idle_energy_j: sum(&|m| m.idle_energy_j),

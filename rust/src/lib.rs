@@ -20,6 +20,11 @@
 //!   request router (round-robin, least-outstanding, AVX partition) with
 //!   cross-machine latency aggregation — core specialization at
 //!   datacenter scale.
+//! * [`tpc`] — glommio-style thread-per-core executor model: per-core
+//!   task queues with shares/preemption budgets, completion batching,
+//!   home-core wakes, and AVX-aware placement (`home-core`,
+//!   `avx-steer`, `avx-steer-lazy`) — the paper's mitigation applied at
+//!   the runtime layer instead of the kernel.
 //! * [`scenario`] — declarative scenario matrices (topology × policy ×
 //!   workload × ISA × load × arrival × fleet-size × router) executed
 //!   across OS threads, deterministically.
@@ -44,6 +49,7 @@ pub mod sched;
 pub mod traffic;
 pub mod workload;
 pub mod fleet;
+pub mod tpc;
 pub mod scenario;
 pub mod analysis;
 pub mod runtime;

@@ -73,12 +73,14 @@ usage:
                 [--avx-machines K] [--rate R] [--quick] [--seed N] [--threads T]
   avxfreq energy [--config configs/energy.toml] [--quick] [--seed N] [--threads T]
                  [--governors intel-legacy,slow-ramp,dim-silicon]
-  avxfreq bench [--quick] [--seed N] [--threads T] [--scenarios single,matrix,fleet]
-                [--out BENCH_5.json] [--min-speedup R]
+  avxfreq tpc [--config configs/tpc.toml] [--quick] [--seed N] [--threads T]
+              [--placements home-core,avx-steer,avx-steer-lazy] [--avx-cores K]
+  avxfreq bench [--quick] [--seed N] [--threads T] [--scenarios single,matrix,fleet,executor]
+                [--out BENCH_6.json] [--min-speedup R]
   avxfreq serve [--artifacts DIR] [--port 8443]
   avxfreq calibrate [--artifacts DIR]
-experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar energydelay fig6 ipc fig7
-             cryptobench ablations";
+experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar energydelay runtimespec fig6
+             ipc fig7 cryptobench ablations";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -91,6 +93,7 @@ fn main() -> anyhow::Result<()> {
         Some("traffic") => cmd_traffic(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("energy") => cmd_energy(&args),
+        Some("tpc") => cmd_tpc(&args),
         Some("bench") => cmd_bench(&args),
         Some("serve") => avxfreq::runtime::server::cmd_serve(&args),
         Some("calibrate") => avxfreq::runtime::calibrate::cmd_calibrate(&args),
@@ -586,9 +589,97 @@ fn cmd_energy(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `avxfreq tpc` — the thread-per-core executor view. With `--config`
+/// (e.g. `configs/tpc.toml`): run the configured web scenario through
+/// the executor under each placement policy (the config's `[tpc]`
+/// section sets quantum/shares and the AVX-core subset) and print the
+/// `tpc_report` comparison. Without: the executor sweep
+/// (`ScenarioMatrix::tpc_sweep`) — every placement on the bursty
+/// multi-tenant mix — with the matrix and tail tables.
+fn cmd_tpc(args: &Args) -> anyhow::Result<()> {
+    use avxfreq::tpc::{all_placements, run_tpc, tpc_report, PlacementSpec};
+    let quick = args.flag("quick");
+    let seed = args.get_parse::<u64>("seed", 0x5EED);
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = args.get_parse::<usize>("threads", default_threads).max(1);
+
+    if let Some(path) = args.get("config") {
+        let conf = avxfreq::util::config::Config::load(path)?;
+        let mut cfg = WebCfg::from_config(&conf)?;
+        let params = match &cfg.mode {
+            avxfreq::workload::client::LoadMode::Executor { tpc, .. } => tpc.clone(),
+            _ => anyhow::bail!(
+                "avxfreq tpc --config needs a [tpc] section selecting a placement \
+                 (see configs/tpc.toml)"
+            ),
+        };
+        if args.get("seed").is_some() {
+            cfg.seed = seed;
+        }
+        if quick {
+            cfg.warmup = cfg.warmup.min(150 * MS);
+            cfg.measure = cfg.measure.min(300 * MS);
+        }
+        // Compare all placements over the configured subset size (a
+        // home-core config has no subset; fall back to the paper's 2).
+        let k = match params.placement.avx_cores() {
+            0 => args.get_parse::<usize>("avx-cores", 2),
+            k => args.get_parse::<usize>("avx-cores", k),
+        };
+        let placements: Vec<PlacementSpec> = if let Some(spec) = args.get("placements") {
+            spec.split(',')
+                .map(|s| PlacementSpec::parse(s.trim(), k))
+                .collect::<anyhow::Result<Vec<_>>>()?
+        } else {
+            all_placements(k).to_vec()
+        };
+        anyhow::ensure!(!placements.is_empty(), "--placements must name at least one policy");
+        eprintln!(
+            "[avxfreq] tpc: {} placement(s) × {} executor cores across up to {} threads \
+             (seed {:#x})…",
+            placements.len(),
+            cfg.workers.max(1),
+            threads.min(placements.len()),
+            cfg.seed
+        );
+        let t0 = std::time::Instant::now();
+        let rows = run_tpc(&cfg, &params, &placements, threads);
+        let table = tpc_report(&rows);
+        print!("{}", table.render());
+        let p = table.save_csv("tpc")?;
+        eprintln!(
+            "[avxfreq] wrote {} ({} runs in {:.1}s wallclock)",
+            p.display(),
+            rows.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        return Ok(());
+    }
+
+    let m = avxfreq::scenario::ScenarioMatrix::tpc_sweep(quick, seed);
+    eprintln!(
+        "[avxfreq] tpc: {} executor cells across up to {} threads (seed {seed:#x})…",
+        m.len(),
+        threads.min(m.len().max(1))
+    );
+    let t0 = std::time::Instant::now();
+    let result = m.run(threads);
+    print!("{}", result.render());
+    println!();
+    print!("{}", result.render_tail());
+    let path = result.table().save_csv("tpc")?;
+    eprintln!(
+        "[avxfreq] wrote {} ({} cells in {:.1}s wallclock)",
+        path.display(),
+        result.cells.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 /// `avxfreq bench` — time the canonical scenarios with the hot paths on
 /// (the default simulator) and off (the baseline), print the comparison
-/// table, and write the `BENCH_5.json` perf-trajectory record. Exits
+/// table, and write the `BENCH_6.json` perf-trajectory record. Exits
 /// non-zero if any scenario's two legs are not output-identical — the
 /// harness is also the fast-path equivalence gate (`ci.sh` runs
 /// `bench --quick`). A speedup below `--min-speedup` (default 0 = off;
@@ -612,7 +703,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             .collect();
         anyhow::ensure!(!cfg.scenarios.is_empty(), "--scenarios must name at least one scenario");
     }
-    let out_path = args.get_or("out", "BENCH_5.json").to_string();
+    let out_path = args.get_or("out", "BENCH_6.json").to_string();
     let min_speedup = args.get_parse::<f64>("min-speedup", 0.0);
 
     eprintln!(

@@ -41,6 +41,19 @@ impl Width {
     }
 }
 
+/// Probe the PJRT CPU backend without touching any artifacts: `Ok` with
+/// the platform name when a client comes up, `Err` with the backend's
+/// own reason otherwise (the vendored offline stub always reports
+/// itself unavailable). The `runtime_roundtrip` SKIP notice prints this
+/// verdict so a skip distinguishes "no artifacts" from "no backend"
+/// straight from the CI log.
+pub fn probe_backend() -> std::result::Result<String, String> {
+    match xla::PjRtClient::cpu() {
+        Ok(client) => Ok(client.platform_name()),
+        Err(e) => Err(e.to_string()),
+    }
+}
+
 /// A sealed record.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Sealed {

@@ -48,6 +48,7 @@ use crate::cpu::{GovernorSpec, Topology};
 use crate::fleet::{run_fleet, FleetCfg, FleetRun, RouterSpec};
 use crate::sched::PolicyKind;
 use crate::sim::{Time, MS, SEC};
+use crate::tpc::{PlacementSpec, TpcParams};
 use crate::traffic::ArrivalProcess;
 use crate::util::mix64;
 use crate::util::table::Table;
@@ -259,6 +260,29 @@ impl ArrivalSpec {
     }
 }
 
+/// One point on the executor axis: how a cell's requests reach its
+/// worker tasks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorSpec {
+    /// The classic shared-queue server: mitigation (if any) lives in the
+    /// kernel scheduler ([`PolicyKind`]). The default — a matrix that
+    /// never touches the axis expands exactly as before.
+    Kernel,
+    /// Thread-per-core executor ([`crate::tpc`]): one worker per server
+    /// core, per-core queues, and the runtime's own AVX-aware placement.
+    Tpc { placement: PlacementSpec },
+}
+
+impl ExecutorSpec {
+    /// Table/label suffix (empty for the kernel default).
+    pub fn label(&self) -> String {
+        match self {
+            ExecutorSpec::Kernel => String::new(),
+            ExecutorSpec::Tpc { placement } => format!("tpc:{}", placement.label()),
+        }
+    }
+}
+
 /// A fully expanded cell of the matrix: labels, a derived seed, and the
 /// self-contained web-server configuration to simulate.
 #[derive(Clone, Debug)]
@@ -281,6 +305,9 @@ pub struct Scenario {
     pub router: RouterSpec,
     /// DVFS governor every machine of the cell runs under.
     pub governor: GovernorSpec,
+    /// How requests reach workers: shared-queue kernel scheduling or the
+    /// thread-per-core executor.
+    pub executor: ExecutorSpec,
     /// Per-cell seed: a pure function of the base seed and `index`.
     pub seed: u64,
     pub cfg: WebCfg,
@@ -312,6 +339,9 @@ impl Scenario {
         }
         if self.governor != GovernorSpec::IntelLegacy {
             s.push_str(&format!("/{}", self.governor.name()));
+        }
+        if self.executor != ExecutorSpec::Kernel {
+            s.push_str(&format!("/{}", self.executor.label()));
         }
         s
     }
@@ -440,6 +470,12 @@ pub struct ScenarioMatrix {
     /// bit-for-bit the pre-governor simulator — so default matrices are
     /// byte-identical to their pre-power-model output).
     pub governors: Vec<GovernorSpec>,
+    /// Executors to sweep (default `[Kernel]`: the classic shared-queue
+    /// server, leaving the expansion byte-identical to the pre-tpc
+    /// matrix). `Tpc` cells run thread-per-core (`workers == cores`)
+    /// with annotations forced on — the runtime needs the AVX marks the
+    /// kernel's `unmodified` policy would otherwise drop.
+    pub executors: Vec<ExecutorSpec>,
     /// Latency SLO threshold applied to every cell.
     pub slo: Time,
     /// Hot-path optimizations for every cell's machines (bit-exact
@@ -466,6 +502,7 @@ impl ScenarioMatrix {
             fleet_sizes: vec![1],
             routers: vec![RouterSpec::RoundRobin],
             governors: vec![GovernorSpec::IntelLegacy],
+            executors: vec![ExecutorSpec::Kernel],
             slo: DEFAULT_SLO,
             fast_paths: true,
             base_seed,
@@ -539,6 +576,34 @@ impl ScenarioMatrix {
         m
     }
 
+    /// The executor sweep behind `avxfreq tpc`: the paper's
+    /// single-socket machine serving the uncompressed (crypto-dominated)
+    /// AVX-512 workload through the thread-per-core executor under every
+    /// placement policy, on the bursty multi-tenant mix — the scenario
+    /// where runtime-level steering has room to move the tail. Kernel
+    /// policy stays `unmodified`: the mitigation under test lives in the
+    /// runtime.
+    pub fn tpc_sweep(quick: bool, base_seed: u64) -> Self {
+        let mut m = ScenarioMatrix::new(base_seed);
+        m.topologies = vec![TopologySpec::single_socket_paper()];
+        m.policies = vec![PolicySpec::Unmodified];
+        m.workloads = vec![WorkloadSpec::plain_page()];
+        m.isas = vec![Isa::Avx512];
+        m.arrivals = vec![ArrivalSpec::bursty_mix_default()];
+        m.executors = crate::tpc::all_placements(2)
+            .iter()
+            .map(|&placement| ExecutorSpec::Tpc { placement })
+            .collect();
+        if quick {
+            m.warmup = 150 * MS;
+            m.measure = 300 * MS;
+        } else {
+            m.warmup = 500 * MS;
+            m.measure = 2 * SEC;
+        }
+        m
+    }
+
     /// Number of cells the matrix expands to.
     pub fn len(&self) -> usize {
         self.topologies.len()
@@ -550,6 +615,7 @@ impl ScenarioMatrix {
             * self.fleet_sizes.len()
             * self.routers.len()
             * self.governors.len()
+            * self.executors.len()
     }
 
     /// True when any axis is empty.
@@ -558,10 +624,11 @@ impl ScenarioMatrix {
     }
 
     /// Expand the cartesian product, topology-major (load level, arrival
-    /// process, fleet size, router, and governor are the innermost axes,
-    /// in that order — with the default `[1] × [RoundRobin]` fleet axes
-    /// and `[IntelLegacy]` governor axis the expansion is exactly the
-    /// pre-fleet cell order), into runnable cells.
+    /// process, fleet size, router, governor, and executor are the
+    /// innermost axes, in that order — with the default `[1] ×
+    /// [RoundRobin]` fleet axes, `[IntelLegacy]` governor axis, and
+    /// `[Kernel]` executor axis the expansion is exactly the pre-fleet
+    /// cell order), into runnable cells.
     pub fn cells(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         for topo in &self.topologies {
@@ -573,63 +640,87 @@ impl ScenarioMatrix {
                                 for &fleet in &self.fleet_sizes {
                                     for &router in &self.routers {
                                         for &governor in &self.governors {
-                                            let index = out.len();
-                                            let seed = mix64(
-                                                self.base_seed
-                                                    ^ (index as u64).wrapping_mul(0x9E37_79B9),
-                                            );
-                                            // Derive the machine shape through
-                                            // the Topology model so the matrix
-                                            // and the cpu layer agree on one
-                                            // socket partition.
-                                            let t = topo.topology();
-                                            let mut cfg = WebCfg::paper_default(
-                                                isa,
-                                                policy.instantiate(topo),
-                                            );
-                                            cfg.cores = t.n_server_cores();
-                                            cfg.sockets = t.n_sockets();
-                                            cfg.workers = t.n_server_cores() * 2;
-                                            cfg.compress = workload.compress;
-                                            cfg.page_bytes = workload.page_kib * 1024;
-                                            // Fleet-total offered rate: equal
-                                            // per-machine pressure across the
-                                            // fleet-size axis.
-                                            let rate = workload.rate_per_core
-                                                * topo.cores as f64
-                                                * load
-                                                * fleet.max(1) as f64;
-                                            cfg.mode = match arrival {
-                                                // Poisson keeps the sugared form
-                                                // so a single-arrival matrix is
-                                                // exactly the pre-traffic
-                                                // configuration.
-                                                ArrivalSpec::Poisson => LoadMode::Open { rate },
-                                                spec => LoadMode::OpenProcess {
-                                                    process: spec.instantiate(rate),
-                                                },
-                                            };
-                                            cfg.slo = self.slo;
-                                            cfg.fast_paths = self.fast_paths;
-                                            cfg.seed = seed;
-                                            cfg.warmup = self.warmup;
-                                            cfg.measure = self.measure;
-                                            cfg.governor = governor;
-                                            out.push(Scenario {
-                                                index,
-                                                topology: topo.name.clone(),
-                                                sockets: topo.sockets,
-                                                policy: policy.label(),
-                                                workload: workload.name.clone(),
-                                                isa,
-                                                load,
-                                                arrival: arrival.label(),
-                                                fleet: fleet.max(1),
-                                                router,
-                                                governor,
-                                                seed,
-                                                cfg,
-                                            });
+                                            for &executor in &self.executors {
+                                                let index = out.len();
+                                                let seed = mix64(
+                                                    self.base_seed
+                                                        ^ (index as u64)
+                                                            .wrapping_mul(0x9E37_79B9),
+                                                );
+                                                // Derive the machine shape through
+                                                // the Topology model so the matrix
+                                                // and the cpu layer agree on one
+                                                // socket partition.
+                                                let t = topo.topology();
+                                                let mut cfg = WebCfg::paper_default(
+                                                    isa,
+                                                    policy.instantiate(topo),
+                                                );
+                                                cfg.cores = t.n_server_cores();
+                                                cfg.sockets = t.n_sockets();
+                                                cfg.workers = t.n_server_cores() * 2;
+                                                cfg.compress = workload.compress;
+                                                cfg.page_bytes = workload.page_kib * 1024;
+                                                // Fleet-total offered rate: equal
+                                                // per-machine pressure across the
+                                                // fleet-size axis.
+                                                let rate = workload.rate_per_core
+                                                    * topo.cores as f64
+                                                    * load
+                                                    * fleet.max(1) as f64;
+                                                cfg.mode = match arrival {
+                                                    // Poisson keeps the sugared form
+                                                    // so a single-arrival matrix is
+                                                    // exactly the pre-traffic
+                                                    // configuration.
+                                                    ArrivalSpec::Poisson => {
+                                                        LoadMode::Open { rate }
+                                                    }
+                                                    spec => LoadMode::OpenProcess {
+                                                        process: spec.instantiate(rate),
+                                                    },
+                                                };
+                                                cfg.slo = self.slo;
+                                                cfg.fast_paths = self.fast_paths;
+                                                cfg.seed = seed;
+                                                cfg.warmup = self.warmup;
+                                                cfg.measure = self.measure;
+                                                cfg.governor = governor;
+                                                if let ExecutorSpec::Tpc { placement } =
+                                                    executor
+                                                {
+                                                    // Thread-per-core: worker i is
+                                                    // executor core i. Annotations
+                                                    // stay on regardless of kernel
+                                                    // policy — the *runtime* needs
+                                                    // the AVX marks.
+                                                    cfg.workers = t.n_server_cores();
+                                                    cfg.annotate = true;
+                                                    cfg.mode = LoadMode::Executor {
+                                                        process: arrival.instantiate(rate),
+                                                        tpc: TpcParams {
+                                                            placement,
+                                                            ..TpcParams::default()
+                                                        },
+                                                    };
+                                                }
+                                                out.push(Scenario {
+                                                    index,
+                                                    topology: topo.name.clone(),
+                                                    sockets: topo.sockets,
+                                                    policy: policy.label(),
+                                                    workload: workload.name.clone(),
+                                                    isa,
+                                                    load,
+                                                    arrival: arrival.label(),
+                                                    fleet: fleet.max(1),
+                                                    router,
+                                                    governor,
+                                                    executor,
+                                                    seed,
+                                                    cfg,
+                                                });
+                                            }
                                         }
                                     }
                                 }
@@ -820,6 +911,60 @@ mod tests {
         assert_eq!(e.len(), 6);
         assert!(e.cells().iter().any(|c| c.policy.contains("core-spec")
             && c.governor == GovernorSpec::DimSilicon));
+    }
+
+    #[test]
+    fn executor_axis_expands_innermost_and_defaults_to_kernel() {
+        // Default axes: every cell runs the shared-queue server and the
+        // expansion is exactly the pre-tpc cell order (same count, same
+        // seeds — the matrix-level differential anchor).
+        let classic = ScenarioMatrix::default_sweep(true, 7);
+        assert!(classic.cells().iter().all(|c| c.executor == ExecutorSpec::Kernel));
+        assert_eq!(classic.cells().len(), 8);
+
+        let mut m = ScenarioMatrix::default_sweep(true, 7);
+        m.topologies.truncate(1);
+        m.policies.truncate(1);
+        m.isas.truncate(1);
+        m.executors = vec![
+            ExecutorSpec::Kernel,
+            ExecutorSpec::Tpc { placement: PlacementSpec::AvxSteer { avx_cores: 2 } },
+        ];
+        let cells = m.cells();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].executor, ExecutorSpec::Kernel);
+        assert!(matches!(cells[0].cfg.mode, LoadMode::Open { .. }));
+        assert!(!cells[0].label().contains("tpc"));
+        assert!(cells[1].label().ends_with("/tpc:avx-steer(2)"));
+        // Tpc cells run thread-per-core with annotations forced on and
+        // carry the arrival process inside LoadMode::Executor.
+        assert_eq!(cells[1].cfg.workers, cells[1].cfg.cores);
+        assert!(cells[1].cfg.annotate);
+        match &cells[1].cfg.mode {
+            LoadMode::Executor { process, tpc } => {
+                assert!((process.mean_rate() - 60_000.0).abs() < 1.0);
+                assert_eq!(
+                    tpc.placement,
+                    PlacementSpec::AvxSteer { avx_cores: 2 }
+                );
+                assert_eq!(tpc.quantum, u64::MAX, "matrix cells never preempt");
+            }
+            other => panic!("tpc cell must carry LoadMode::Executor, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tpc_sweep_covers_every_placement() {
+        let m = ScenarioMatrix::tpc_sweep(true, 9);
+        assert_eq!(m.len(), 3);
+        let cells = m.cells();
+        assert!(cells.iter().all(|c| c.policy == "unmodified"));
+        assert!(cells.iter().all(|c| c.cfg.workers == c.cfg.cores));
+        let labels: Vec<String> = cells.iter().map(|c| c.executor.label()).collect();
+        assert_eq!(
+            labels,
+            vec!["tpc:home-core", "tpc:avx-steer(2)", "tpc:avx-steer-lazy(2)"]
+        );
     }
 
     #[test]

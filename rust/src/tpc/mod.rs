@@ -1,0 +1,421 @@
+//! Thread-per-core async executor model (glommio-style), layered on the
+//! machine simulator: per-core task queues with shares and preemption
+//! budgets ([`queue`]), completion batching ([`reactor`]), home-core
+//! wakes ([`waker`]), and pluggable AVX-aware placement ([`placement`]).
+//!
+//! The paper mitigates AVX-induced frequency reduction in the *kernel*
+//! scheduler. Thread-per-core runtimes do their own scheduling above the
+//! kernel, so the same idea can be applied one layer up: steer
+//! AVX-marked futures to a designated executor-core subset at
+//! spawn/wake time (`avx-steer`, CoreSpec inside the runtime) or on
+//! first observed AVX demand (`avx-steer-lazy`, the runtime analogue of
+//! §6.1 fault-and-migrate). `repro runtimespec` compares the two layers
+//! head to head.
+//!
+//! In the simulation, "executor core i" is worker task i: the web
+//! workload runs thread-per-core (`workers == cores`), each worker owns
+//! queue i, and the machine's scheduler affinity keeps worker i on one
+//! physical core — so confining AVX work to K worker queues confines
+//! the license damage to ~K physical cores. See `ExecutorTask` in
+//! [`crate::workload::webserver`] for the serving loop.
+
+pub mod placement;
+pub mod queue;
+pub mod reactor;
+pub mod waker;
+
+pub use placement::PlacementSpec;
+pub use queue::{grant_budgets, TpcJob, TpcQueue};
+pub use reactor::Reactor;
+pub use waker::wake_core;
+
+use crate::util::table::{fmt_f, Table};
+use crate::workload::client::LoadMode;
+use crate::workload::webserver::{run_webserver, WebCfg, WebRun};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Runtime configuration carried by [`LoadMode::Executor`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TpcParams {
+    pub placement: PlacementSpec,
+    /// Preemption quantum (instructions) split across cores by share;
+    /// `u64::MAX` (the default) disables preemption entirely, which is
+    /// also the configuration under which `home-core` on one worker is
+    /// byte-identical to the plain open-loop server.
+    pub quantum: u64,
+    /// Per-core shares (empty = uniform). Shorter vectors repeat their
+    /// last element; see [`TpcRuntime::new`].
+    pub shares: Vec<u64>,
+}
+
+impl Default for TpcParams {
+    fn default() -> Self {
+        TpcParams { placement: PlacementSpec::HomeCore, quantum: u64::MAX, shares: Vec::new() }
+    }
+}
+
+/// Counters the runtime accumulates over a run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TpcStats {
+    /// Jobs placed (spawned futures).
+    pub spawned: u64,
+    /// Marked jobs whose spawn/wake target was chosen by AVX awareness.
+    pub steered: u64,
+    /// Lazy migrations (first AVX demand moved the task).
+    pub migrations: u64,
+    /// Budget-exhaustion yields.
+    pub preemptions: u64,
+    /// Wake-path requeues (preempted jobs returning to a queue).
+    pub wakes: u64,
+}
+
+/// The per-core queue set + placement state for one run. `T` is the job
+/// payload (the web workload uses a request plus its saved plan).
+#[derive(Clone, Debug)]
+pub struct TpcRuntime<T> {
+    spec: PlacementSpec,
+    n_cores: usize,
+    queues: Vec<TpcQueue<T>>,
+    budgets: Vec<u64>,
+    /// Round-robin cursors: `[all cores, scalar subset, AVX subset]`.
+    rr: [usize; 3],
+    /// Cores with jobs requeued from *inside* a worker (preemption,
+    /// lazy migration) — contexts with no machine handle. The driver
+    /// drains these into the [`Reactor`] at the next external event, so
+    /// a waiting worker is woken one arrival later (the model's wakeup
+    /// latency). Open-loop arrivals guarantee the flush happens.
+    pending_wakes: Vec<usize>,
+    pub stats: TpcStats,
+}
+
+impl<T> TpcRuntime<T> {
+    /// `shares` shorter than `n_cores` repeats the last element (empty =
+    /// uniform share 1), so `shares = [4, 1]` means "core 0 gets 4, the
+    /// rest get 1".
+    pub fn new(spec: PlacementSpec, n_cores: usize, quantum: u64, shares: &[u64]) -> Self {
+        let n = n_cores.max(1);
+        let share_of = |i: usize| -> u64 {
+            if shares.is_empty() {
+                1
+            } else {
+                *shares.get(i).unwrap_or_else(|| shares.last().expect("non-empty"))
+            }
+        };
+        let all: Vec<u64> = (0..n).map(share_of).collect();
+        TpcRuntime {
+            spec,
+            n_cores: n,
+            queues: all.iter().map(|&s| TpcQueue::new(s)).collect(),
+            budgets: grant_budgets(quantum, &all),
+            rr: [0; 3],
+            pending_wakes: Vec::new(),
+            stats: TpcStats::default(),
+        }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.n_cores
+    }
+
+    pub fn placement(&self) -> &PlacementSpec {
+        &self.spec
+    }
+
+    /// This core's per-stint instruction budget.
+    pub fn budget(&self, core: usize) -> u64 {
+        self.budgets[core]
+    }
+
+    /// Jobs currently queued across all cores (the overflow guard's
+    /// occupancy measure).
+    pub fn total_queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Place a newly spawned job; returns the chosen core. Round-robin
+    /// within the placement's allowed set, one cursor per distinct set
+    /// so policies with disjoint subsets stay independently fair.
+    pub fn place(&mut self, marked: bool, payload: T) -> usize {
+        let allowed = self.spec.allowed_cores(marked, self.n_cores);
+        let slot = if allowed.len() == self.n_cores { 0 } else { 1 + marked as usize };
+        let core = allowed[self.rr[slot] % allowed.len()];
+        self.rr[slot] += 1;
+        self.stats.spawned += 1;
+        if marked && matches!(self.spec, PlacementSpec::AvxSteer { .. }) {
+            self.stats.steered += 1;
+        }
+        self.queues[core].push_back(TpcJob { payload, marked, home: core, in_avx_phase: false });
+        core
+    }
+
+    /// Pop the next job on `core`'s queue.
+    pub fn pop(&mut self, core: usize) -> Option<TpcJob<T>> {
+        self.queues[core].pop_front()
+    }
+
+    /// Requeue a runnable job (preemption yield / simulated I/O wake)
+    /// via the waker: home core under `home-core`/`avx-steer-lazy`,
+    /// subset-corrected under `avx-steer`. Returns the target core and
+    /// records it for the driver's next reactor flush.
+    pub fn requeue_wake(&mut self, mut job: TpcJob<T>) -> usize {
+        let target = wake_core(&self.spec, job.marked, job.home, self.n_cores);
+        job.home = target;
+        self.queues[target].push_back(job);
+        self.stats.wakes += 1;
+        self.pending_wakes.push(target);
+        target
+    }
+
+    /// Where a task observing AVX demand on `core` should migrate under
+    /// `avx-steer-lazy`: the next AVX-subset core (round-robin), or
+    /// `None` when the policy is not lazy, the subset is degenerate, or
+    /// the task already sits inside it.
+    pub fn lazy_target(&mut self, core: usize) -> Option<usize> {
+        let k = match self.spec {
+            PlacementSpec::AvxSteerLazy { avx_cores } => avx_cores.min(self.n_cores),
+            _ => return None,
+        };
+        if k == 0 || k == self.n_cores || self.spec.is_avx_core(core, self.n_cores) {
+            return None;
+        }
+        let first = self.n_cores - k;
+        let target = first + self.rr[2] % k;
+        self.rr[2] += 1;
+        Some(target)
+    }
+
+    /// Migrate a job to `target` (its new home) — the `avx-steer-lazy`
+    /// move. Recorded for the next reactor flush like any other wake.
+    pub fn migrate(&mut self, mut job: TpcJob<T>, target: usize) {
+        job.home = target;
+        self.queues[target].push_back(job);
+        self.stats.migrations += 1;
+        self.pending_wakes.push(target);
+    }
+
+    /// Drain the cores whose queues grew from inside a worker since the
+    /// last external event (for the driver to feed into its reactor).
+    pub fn take_pending_wakes(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.pending_wakes)
+    }
+}
+
+/// One row of the `tpc_report` table: the same web scenario served
+/// through the executor under one placement policy.
+#[derive(Clone, Debug)]
+pub struct TpcRow {
+    pub placement: String,
+    pub throughput_rps: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    /// Marked futures steered by the placement layer.
+    pub steered: u64,
+    /// Runtime-level lazy migrations.
+    pub runtime_migrations: u64,
+    /// Budget-exhaustion yields.
+    pub preemptions: u64,
+    /// Kernel-level migrations per second (the layer below).
+    pub kernel_migrations_per_sec: f64,
+    pub mj_per_req: f64,
+}
+
+impl TpcRow {
+    pub fn from_run(placement: &PlacementSpec, run: &WebRun) -> Self {
+        TpcRow {
+            placement: placement.label(),
+            throughput_rps: run.throughput_rps,
+            p99_us: run.tail.p99_us,
+            p999_us: run.tail.p999_us,
+            steered: run.runtime_steered,
+            runtime_migrations: run.runtime_migrations,
+            preemptions: run.runtime_preemptions,
+            kernel_migrations_per_sec: run.migrations_per_sec,
+            mj_per_req: run.j_per_req() * 1e3,
+        }
+    }
+}
+
+/// Render the placement comparison (see `rust/tests/golden/tpc_report.txt`).
+pub fn tpc_report(rows: &[TpcRow]) -> Table {
+    let mut t = Table::new(
+        "tpc_report",
+        &[
+            "placement", "req/s", "p99 µs", "p999 µs", "steered", "rt-migr", "preempt",
+            "k-migr/s", "mJ/req",
+        ],
+    );
+    for r in rows {
+        t.row(&[
+            r.placement.clone(),
+            fmt_f(r.throughput_rps, 0),
+            fmt_f(r.p99_us, 1),
+            fmt_f(r.p999_us, 1),
+            r.steered.to_string(),
+            r.runtime_migrations.to_string(),
+            r.preemptions.to_string(),
+            fmt_f(r.kernel_migrations_per_sec, 1),
+            fmt_f(r.mj_per_req, 3),
+        ]);
+    }
+    t
+}
+
+/// Run the same open-loop web scenario through the executor under each
+/// placement, across up to `threads` OS threads (one run per placement,
+/// work-stolen over an atomic cursor, collected by index — byte-identical
+/// at any thread count). `cfg.mode` must be open-loop; its arrival
+/// process is served through [`LoadMode::Executor`] with `params`'
+/// quantum/shares and the row's placement.
+pub fn run_tpc(
+    cfg: &WebCfg,
+    params: &TpcParams,
+    placements: &[PlacementSpec],
+    threads: usize,
+) -> Vec<TpcRow> {
+    let process = cfg.mode.process().expect("run_tpc requires an open-loop LoadMode");
+    let runs: Vec<WebCfg> = placements
+        .iter()
+        .map(|&placement| {
+            let mut c = cfg.clone();
+            c.mode = LoadMode::Executor {
+                process: process.clone(),
+                tpc: TpcParams { placement, ..params.clone() },
+            };
+            c
+        })
+        .collect();
+    let n_threads = threads.max(1).min(runs.len().max(1));
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<WebRun>>> = runs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= runs.len() {
+                    break;
+                }
+                *slots[i].lock().expect("slot poisoned") = Some(run_webserver(&runs[i]));
+            });
+        }
+    });
+    placements
+        .iter()
+        .zip(slots)
+        .map(|(placement, slot)| {
+            let run = slot
+                .into_inner()
+                .expect("slot poisoned")
+                .expect("every placement claimed and executed");
+            TpcRow::from_run(placement, &run)
+        })
+        .collect()
+}
+
+/// The three placement policies, comparison order.
+pub fn all_placements(avx_cores: usize) -> [PlacementSpec; 3] {
+    [
+        PlacementSpec::HomeCore,
+        PlacementSpec::AvxSteer { avx_cores },
+        PlacementSpec::AvxSteerLazy { avx_cores },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn place_round_robins_within_allowed_sets() {
+        let mut rt: TpcRuntime<u32> =
+            TpcRuntime::new(PlacementSpec::AvxSteer { avx_cores: 2 }, 6, u64::MAX, &[]);
+        assert_eq!(rt.place(false, 0), 0);
+        assert_eq!(rt.place(false, 1), 1);
+        assert_eq!(rt.place(true, 2), 4);
+        assert_eq!(rt.place(true, 3), 5);
+        assert_eq!(rt.place(true, 4), 4, "AVX cursor wraps within the subset");
+        assert_eq!(rt.place(false, 5), 2, "scalar cursor unaffected by AVX spawns");
+        assert_eq!(rt.stats.spawned, 6);
+        assert_eq!(rt.stats.steered, 3);
+        assert_eq!(rt.total_queued(), 6);
+    }
+
+    #[test]
+    fn home_core_uses_one_cursor_for_both_marks() {
+        let mut rt: TpcRuntime<u32> = TpcRuntime::new(PlacementSpec::HomeCore, 3, u64::MAX, &[]);
+        assert_eq!(rt.place(false, 0), 0);
+        assert_eq!(rt.place(true, 1), 1);
+        assert_eq!(rt.place(false, 2), 2);
+        assert_eq!(rt.place(true, 3), 0);
+        assert_eq!(rt.stats.steered, 0, "home-core never steers");
+    }
+
+    #[test]
+    fn lazy_target_only_fires_off_subset_under_lazy() {
+        let mut rt: TpcRuntime<u32> =
+            TpcRuntime::new(PlacementSpec::AvxSteerLazy { avx_cores: 2 }, 6, u64::MAX, &[]);
+        assert_eq!(rt.lazy_target(0), Some(4));
+        assert_eq!(rt.lazy_target(1), Some(5));
+        assert_eq!(rt.lazy_target(2), Some(4), "target cursor wraps");
+        assert_eq!(rt.lazy_target(5), None, "already inside the subset");
+        let mut steer: TpcRuntime<u32> =
+            TpcRuntime::new(PlacementSpec::AvxSteer { avx_cores: 2 }, 6, u64::MAX, &[]);
+        assert_eq!(steer.lazy_target(0), None, "eager policy never migrates lazily");
+        let mut home: TpcRuntime<u32> = TpcRuntime::new(PlacementSpec::HomeCore, 6, u64::MAX, &[]);
+        assert_eq!(home.lazy_target(0), None);
+    }
+
+    #[test]
+    fn migrate_and_wake_record_pending_notifications() {
+        let mut rt: TpcRuntime<u32> =
+            TpcRuntime::new(PlacementSpec::AvxSteerLazy { avx_cores: 1 }, 4, u64::MAX, &[]);
+        rt.place(true, 7);
+        let job = rt.pop(0).unwrap();
+        assert_eq!(job.home, 0);
+        rt.migrate(job, 3);
+        let moved = rt.pop(3).unwrap();
+        assert_eq!(moved.home, 3, "migration rehomes the job");
+        assert_eq!(rt.stats.migrations, 1);
+        let back = rt.requeue_wake(moved);
+        assert_eq!(back, 3, "wake returns to the new home");
+        assert_eq!(rt.take_pending_wakes(), vec![3, 3]);
+        assert!(rt.take_pending_wakes().is_empty(), "drained");
+    }
+
+    #[test]
+    fn shares_repeat_last_element_into_budgets() {
+        let rt: TpcRuntime<u32> =
+            TpcRuntime::new(PlacementSpec::HomeCore, 4, 100, &[4, 1]);
+        // Shares [4, 1, 1, 1]: core 0 gets 4/7 of the quantum.
+        assert_eq!(rt.budget(0), 57);
+        assert_eq!(rt.budget(1), 14);
+        assert_eq!(rt.budget(3), 14);
+        let uniform: TpcRuntime<u32> = TpcRuntime::new(PlacementSpec::HomeCore, 2, 100, &[]);
+        assert_eq!(uniform.budget(0), 50);
+    }
+
+    #[test]
+    fn tpc_report_has_one_row_per_placement() {
+        let rows: Vec<TpcRow> = all_placements(2)
+            .iter()
+            .enumerate()
+            .map(|(i, p)| TpcRow {
+                placement: p.label(),
+                throughput_rps: 1000.0 + i as f64,
+                p99_us: 10.0,
+                p999_us: 20.0,
+                steered: i as u64,
+                runtime_migrations: 0,
+                preemptions: 0,
+                kernel_migrations_per_sec: 0.5,
+                mj_per_req: 1.25,
+            })
+            .collect();
+        let t = tpc_report(&rows);
+        let text = t.render();
+        assert!(text.contains("home-core"));
+        assert!(text.contains("avx-steer(2)"));
+        assert!(text.contains("avx-steer-lazy(2)"));
+        assert!(text.contains("p999 µs"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Placement policies for the thread-per-core runtime: which executor
+//! core a future is spawned (or steered) onto.
+//!
+//! The three policies mirror the paper's kernel-level spectrum one layer
+//! up the stack:
+//!
+//! * `home-core` — glommio's default: round-robin spawn, tasks then stay
+//!   on their home core forever. No AVX awareness (the baseline).
+//! * `avx-steer` — CoreSpec inside the runtime: AVX-*marked* futures are
+//!   spawned/woken onto a designated core subset (the last `avx_cores`
+//!   executor cores, matching [`crate::sched::PolicyKind`]'s last-K
+//!   convention), unmarked futures onto the scalar complement.
+//! * `avx-steer-lazy` — the runtime analogue of §6.1 fault-and-migrate:
+//!   spawn like `home-core`, migrate a task to the AVX subset only on
+//!   its first *observed* AVX license demand in a phase.
+
+/// Pluggable task-placement policy for [`super::TpcRuntime`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementSpec {
+    /// Round-robin spawn, no AVX awareness (glommio default).
+    HomeCore,
+    /// Marked futures spawn/wake onto the last `avx_cores` executor
+    /// cores; unmarked futures onto the scalar complement.
+    AvxSteer { avx_cores: usize },
+    /// Spawn anywhere; migrate to the AVX subset on first observed AVX
+    /// demand (at most once per task per AVX phase).
+    AvxSteerLazy { avx_cores: usize },
+}
+
+impl PlacementSpec {
+    /// Policy name as used in tables, configs and CLI flags.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementSpec::HomeCore => "home-core",
+            PlacementSpec::AvxSteer { .. } => "avx-steer",
+            PlacementSpec::AvxSteerLazy { .. } => "avx-steer-lazy",
+        }
+    }
+
+    /// Table label, including the AVX-core parameter.
+    pub fn label(&self) -> String {
+        match self {
+            PlacementSpec::HomeCore => "home-core".to_string(),
+            PlacementSpec::AvxSteer { avx_cores } => format!("avx-steer({avx_cores})"),
+            PlacementSpec::AvxSteerLazy { avx_cores } => {
+                format!("avx-steer-lazy({avx_cores})")
+            }
+        }
+    }
+
+    /// Parse a policy name; `avx_cores` parameterizes the steering arms.
+    pub fn parse(s: &str, avx_cores: usize) -> anyhow::Result<Self> {
+        match s {
+            "home-core" => Ok(PlacementSpec::HomeCore),
+            "avx-steer" => Ok(PlacementSpec::AvxSteer { avx_cores }),
+            "avx-steer-lazy" => Ok(PlacementSpec::AvxSteerLazy { avx_cores }),
+            other => anyhow::bail!(
+                "tpc.placement = {other:?} (home-core|avx-steer|avx-steer-lazy)"
+            ),
+        }
+    }
+
+    /// The size of the designated AVX subset (0 under `home-core`).
+    pub fn avx_cores(&self) -> usize {
+        match *self {
+            PlacementSpec::HomeCore => 0,
+            PlacementSpec::AvxSteer { avx_cores }
+            | PlacementSpec::AvxSteerLazy { avx_cores } => avx_cores,
+        }
+    }
+
+    /// Whether executor core `core` (of `n_cores`) belongs to the
+    /// designated AVX subset. Same last-K convention as
+    /// [`crate::sched::PolicyKind::is_avx_core`], so the runtime-level
+    /// and kernel-level subsets line up in the head-to-head comparison.
+    pub fn is_avx_core(&self, core: usize, n_cores: usize) -> bool {
+        let k = self.avx_cores().min(n_cores);
+        k > 0 && core >= n_cores - k
+    }
+
+    /// The executor cores a task with the given mark may be *spawned*
+    /// onto — the allowed set the placement property test pins.
+    /// `avx-steer-lazy` spawns like `home-core` (everywhere); migration
+    /// into the AVX subset happens later, on demand.
+    pub fn allowed_cores(&self, marked: bool, n_cores: usize) -> Vec<usize> {
+        match self {
+            PlacementSpec::HomeCore | PlacementSpec::AvxSteerLazy { .. } => {
+                (0..n_cores).collect()
+            }
+            PlacementSpec::AvxSteer { .. } => {
+                let subset: Vec<usize> =
+                    (0..n_cores).filter(|&c| self.is_avx_core(c, n_cores) == marked).collect();
+                // A degenerate subset (avx_cores = 0 or ≥ n_cores) falls
+                // back to all cores rather than an empty set.
+                if subset.is_empty() {
+                    (0..n_cores).collect()
+                } else {
+                    subset
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn last_k_convention_matches_kernel_policy() {
+        let spec = PlacementSpec::AvxSteer { avx_cores: 2 };
+        let kernel = crate::sched::PolicyKind::CoreSpec { avx_cores: 2 };
+        for core in 0..6 {
+            assert_eq!(
+                spec.is_avx_core(core, 6),
+                kernel.is_avx_core(core, 6),
+                "core {core}: runtime and kernel AVX subsets must agree"
+            );
+        }
+        assert!(!spec.is_avx_core(3, 6));
+        assert!(spec.is_avx_core(4, 6) && spec.is_avx_core(5, 6));
+    }
+
+    #[test]
+    fn home_core_and_lazy_allow_every_core_at_spawn() {
+        for spec in [PlacementSpec::HomeCore, PlacementSpec::AvxSteerLazy { avx_cores: 2 }] {
+            for marked in [false, true] {
+                assert_eq!(spec.allowed_cores(marked, 4), vec![0, 1, 2, 3], "{spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn avx_steer_partitions_the_cores() {
+        let spec = PlacementSpec::AvxSteer { avx_cores: 2 };
+        assert_eq!(spec.allowed_cores(true, 6), vec![4, 5]);
+        assert_eq!(spec.allowed_cores(false, 6), vec![0, 1, 2, 3]);
+        // Degenerate subsets fall back to all cores.
+        let all = PlacementSpec::AvxSteer { avx_cores: 0 };
+        assert_eq!(all.allowed_cores(true, 3), vec![0, 1, 2]);
+        let everything = PlacementSpec::AvxSteer { avx_cores: 8 };
+        assert_eq!(everything.allowed_cores(false, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for spec in [
+            PlacementSpec::HomeCore,
+            PlacementSpec::AvxSteer { avx_cores: 2 },
+            PlacementSpec::AvxSteerLazy { avx_cores: 2 },
+        ] {
+            assert_eq!(PlacementSpec::parse(spec.name(), 2).unwrap(), spec);
+        }
+        assert!(PlacementSpec::parse("steal-everything", 2).is_err());
+        assert_eq!(
+            PlacementSpec::AvxSteerLazy { avx_cores: 3 }.label(),
+            "avx-steer-lazy(3)"
+        );
+    }
+}

@@ -1,0 +1,121 @@
+//! Per-core task queues with shares and preemption budgets.
+//!
+//! Each executor core owns one FIFO queue of jobs. Cores carry a
+//! *share*; [`grant_budgets`] converts the shares into per-stint
+//! instruction budgets out of a global `quantum`, glommio's
+//! `Shares`-style proportional split. The conservation law — the sum of
+//! granted budgets never exceeds the quantum — is property-tested in
+//! `rust/tests/tpc.rs`.
+
+use std::collections::VecDeque;
+
+/// A task queued on (or running on) an executor core.
+#[derive(Clone, Debug)]
+pub struct TpcJob<T> {
+    pub payload: T,
+    /// Spawned from an AVX-marked future (the runtime-visible analogue
+    /// of the paper's `with_avx()` annotation).
+    pub marked: bool,
+    /// The executor core the job currently belongs to; wakes requeue
+    /// here (see [`super::waker`]).
+    pub home: usize,
+    /// Set on the first `with_avx()` observed in the current AVX phase;
+    /// cleared by `without_avx()`. Guards `avx-steer-lazy` against
+    /// re-migrating within one phase.
+    pub in_avx_phase: bool,
+}
+
+/// One executor core's FIFO run queue.
+#[derive(Clone, Debug)]
+pub struct TpcQueue<T> {
+    /// Relative share of the preemption quantum this core is granted.
+    pub share: u64,
+    jobs: VecDeque<TpcJob<T>>,
+}
+
+impl<T> TpcQueue<T> {
+    pub fn new(share: u64) -> Self {
+        TpcQueue { share, jobs: VecDeque::new() }
+    }
+
+    pub fn push_back(&mut self, job: TpcJob<T>) {
+        self.jobs.push_back(job);
+    }
+
+    pub fn pop_front(&mut self) -> Option<TpcJob<T>> {
+        self.jobs.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+/// Split `quantum` instructions across cores proportionally to their
+/// shares (floor division — the remainder is deliberately *not*
+/// redistributed, so `sum(budgets) ≤ quantum` holds exactly, for every
+/// input). Zero total share degrades to uniform shares; a zero budget
+/// cannot livelock the core — the executor always completes the step it
+/// started before checking its stint (see `ExecutorTask` in
+/// `workload/webserver.rs`), so budget 0 just means "yield after every
+/// step". `quantum = u64::MAX` (the default) effectively disables
+/// preemption.
+pub fn grant_budgets(quantum: u64, shares: &[u64]) -> Vec<u64> {
+    if shares.is_empty() {
+        return Vec::new();
+    }
+    let total: u128 = shares.iter().map(|&s| s as u128).sum();
+    if total == 0 {
+        return vec![quantum / shares.len() as u64; shares.len()];
+    }
+    shares.iter().map(|&s| (quantum as u128 * s as u128 / total) as u64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut q: TpcQueue<u32> = TpcQueue::new(1);
+        for i in 0..3 {
+            q.push_back(TpcJob { payload: i, marked: false, home: 0, in_avx_phase: false });
+        }
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop_front().unwrap().payload, 0);
+        assert_eq!(q.pop_front().unwrap().payload, 1);
+        assert_eq!(q.pop_front().unwrap().payload, 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn budgets_split_proportionally() {
+        assert_eq!(grant_budgets(100, &[1, 1, 2]), vec![25, 25, 50]);
+        assert_eq!(grant_budgets(100, &[3]), vec![100]);
+        // Floor division: 100 × 1/3 = 33, and the remainder stays
+        // ungranted (33 + 33 + 33 = 99 ≤ 100).
+        assert_eq!(grant_budgets(100, &[1, 1, 1]), vec![33, 33, 33]);
+    }
+
+    #[test]
+    fn uniform_fallback_and_zero_shares() {
+        assert_eq!(grant_budgets(90, &[0, 0, 0]), vec![30, 30, 30]);
+        // A zero share grants a zero budget: the core yields after every
+        // step but can never exceed the quantum.
+        assert_eq!(grant_budgets(100, &[0, 1]), vec![0, 100]);
+        assert_eq!(grant_budgets(0, &[0, 0]), vec![0, 0]);
+        assert!(grant_budgets(5, &[]).is_empty());
+    }
+
+    #[test]
+    fn max_quantum_never_overflows() {
+        let b = grant_budgets(u64::MAX, &[1, 1, 1, 1]);
+        assert_eq!(b.len(), 4);
+        let sum: u128 = b.iter().map(|&x| x as u128).sum();
+        assert!(sum <= u64::MAX as u128);
+    }
+}

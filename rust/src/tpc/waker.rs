@@ -1,0 +1,69 @@
+//! Wake-target selection: which executor core a task is requeued onto
+//! when it becomes runnable again (I/O completion, preemption yield).
+//!
+//! The glommio model: a woken task returns to its *home* core — the core
+//! it was spawned onto (or migrated to) — never a random one; locality
+//! is the whole point of thread-per-core. The one exception is
+//! `avx-steer`, whose contract covers wakes too ("spawned/*woken* onto a
+//! designated core subset"): a marked task whose home has drifted
+//! outside the AVX subset is steered back on wake.
+
+use super::placement::PlacementSpec;
+
+/// The core a task with the given mark and home core is requeued onto.
+/// Under `home-core` (and `avx-steer-lazy`, which only moves tasks via
+/// explicit migration) this is always the home core — the property
+/// `rust/tests/tpc.rs` pins.
+pub fn wake_core(spec: &PlacementSpec, marked: bool, home: usize, n_cores: usize) -> usize {
+    let home = home.min(n_cores.saturating_sub(1));
+    match spec {
+        PlacementSpec::HomeCore | PlacementSpec::AvxSteerLazy { .. } => home,
+        PlacementSpec::AvxSteer { .. } => {
+            if spec.is_avx_core(home, n_cores) == marked || spec.avx_cores() == 0 {
+                home
+            } else {
+                // Steer to the nearest core of the right kind: the first
+                // AVX core for marked tasks, core 0 for unmarked ones.
+                if marked {
+                    n_cores - spec.avx_cores().min(n_cores)
+                } else {
+                    0
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn home_core_always_requeues_home() {
+        for home in 0..4 {
+            for marked in [false, true] {
+                assert_eq!(wake_core(&PlacementSpec::HomeCore, marked, home, 4), home);
+                assert_eq!(
+                    wake_core(&PlacementSpec::AvxSteerLazy { avx_cores: 2 }, marked, home, 4),
+                    home
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn avx_steer_keeps_wakes_inside_the_subset() {
+        let spec = PlacementSpec::AvxSteer { avx_cores: 2 };
+        // Homes already on the right side stay put.
+        assert_eq!(wake_core(&spec, true, 5, 6), 5);
+        assert_eq!(wake_core(&spec, false, 1, 6), 1);
+        // Drifted homes are steered back.
+        assert_eq!(wake_core(&spec, true, 1, 6), 4, "marked → first AVX core");
+        assert_eq!(wake_core(&spec, false, 5, 6), 0, "unmarked → scalar side");
+    }
+
+    #[test]
+    fn out_of_range_home_is_clamped() {
+        assert_eq!(wake_core(&PlacementSpec::HomeCore, false, 9, 4), 3);
+    }
+}

@@ -30,6 +30,13 @@ pub enum LoadMode {
     Open { rate: f64 },
     /// Open-loop arrivals from an arbitrary [`ArrivalProcess`].
     OpenProcess { process: ArrivalProcess },
+    /// Open-loop arrivals served through the thread-per-core executor
+    /// ([`crate::tpc`]): requests are placed onto per-worker task queues
+    /// by the runtime's placement policy instead of one shared queue.
+    /// With the default [`crate::tpc::TpcParams`] (`home-core`,
+    /// preemption off) on a single worker this is byte-identical to
+    /// `OpenProcess` — pinned by `rust/tests/tpc.rs`.
+    Executor { process: ArrivalProcess, tpc: crate::tpc::TpcParams },
     /// Fixed number of always-pending connections; a completed request
     /// immediately enqueues the connection's next request.
     Closed { connections: usize },
@@ -42,6 +49,7 @@ impl LoadMode {
         match self {
             LoadMode::Open { rate } => Some(ArrivalProcess::Poisson { rate: *rate }),
             LoadMode::OpenProcess { process } => Some(process.clone()),
+            LoadMode::Executor { process, .. } => Some(process.clone()),
             LoadMode::Closed { .. } => None,
         }
     }
@@ -273,5 +281,14 @@ mod tests {
         let m = LoadMode::Open { rate: 1_000.0 };
         assert_eq!(m.process(), Some(ArrivalProcess::Poisson { rate: 1_000.0 }));
         assert!(LoadMode::Closed { connections: 4 }.process().is_none());
+    }
+
+    #[test]
+    fn executor_mode_is_open_loop() {
+        let m = LoadMode::Executor {
+            process: ArrivalProcess::Poisson { rate: 500.0 },
+            tpc: crate::tpc::TpcParams::default(),
+        };
+        assert_eq!(m.process(), Some(ArrivalProcess::Poisson { rate: 500.0 }));
     }
 }

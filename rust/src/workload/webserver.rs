@@ -17,6 +17,7 @@ use crate::isa::{Binary, Function};
 use crate::sched::machine::{Action, Driver, Machine, MachineParams, TaskBody};
 use crate::sched::{PolicyKind, TaskType};
 use crate::sim::{Time, MS, SEC};
+use crate::tpc::{Reactor, TpcJob, TpcRuntime};
 use crate::traffic::{ArrivalProcess, LatencyStats, Request, TailSummary};
 use crate::util::Rng;
 use std::cell::RefCell;
@@ -245,6 +246,52 @@ impl WebCfg {
                     ),
                 },
             };
+        }
+        // [tpc] section: serve the open-loop load through the
+        // thread-per-core executor (`workers` becomes the executor-core
+        // count; run thread-per-core by setting it equal to
+        // machine.cores).
+        match conf.get("tpc.placement") {
+            None => {}
+            Some(Value::Str(s)) => {
+                let placement = crate::tpc::PlacementSpec::parse(
+                    s,
+                    conf.int_or("tpc.avx_cores", 2).max(0) as usize,
+                )?;
+                let process = cfg.mode.process().ok_or_else(|| {
+                    anyhow::anyhow!("[tpc] requires an open-loop load (set load.rate)")
+                })?;
+                let quantum = match conf.get("tpc.quantum") {
+                    None => u64::MAX,
+                    Some(Value::Int(i)) if *i > 0 => *i as u64,
+                    Some(other) => anyhow::bail!(
+                        "tpc.quantum must be a positive instruction count, got {other}"
+                    ),
+                };
+                let shares = match conf.get("tpc.shares") {
+                    None => Vec::new(),
+                    Some(Value::Array(xs)) => xs
+                        .iter()
+                        .map(|x| match x {
+                            Value::Int(i) if *i >= 0 => Ok(*i as u64),
+                            other => anyhow::bail!(
+                                "tpc.shares entries must be non-negative integers, got {other}"
+                            ),
+                        })
+                        .collect::<anyhow::Result<Vec<u64>>>()?,
+                    Some(other) => {
+                        anyhow::bail!("tpc.shares must be an array of integers, got {other}")
+                    }
+                };
+                cfg.mode = LoadMode::Executor {
+                    process,
+                    tpc: crate::tpc::TpcParams { placement, quantum, shares },
+                };
+            }
+            Some(other) => anyhow::bail!(
+                "tpc.placement must be a string placement name \
+                 (home-core|avx-steer|avx-steer-lazy), got {other}"
+            ),
         }
         Ok(cfg)
     }
@@ -484,6 +531,127 @@ impl TaskBody for Worker {
     }
 }
 
+/// Payload carried by thread-per-core executor jobs: the request plus,
+/// after a preemption yield or a lazy migration, the remaining step
+/// plan. Fresh jobs carry `resume: None` and are planned at first pop
+/// *on the serving worker* with that worker's own RNG and request
+/// counter — exactly the [`Worker`] protocol, which is what makes
+/// `home-core` on one worker byte-identical to the shared-queue server.
+struct ExecJob {
+    req: Request,
+    resume: Option<VecDeque<Step>>,
+}
+
+/// Worker task body for [`LoadMode::Executor`]: executor core `core` of
+/// the [`TpcRuntime`], serving its own queue and waiting on its own
+/// channel. Differences from [`Worker`]: jobs come from the per-core
+/// queue instead of the shared one; a `with_avx()` step observed off
+/// the AVX subset triggers the `avx-steer-lazy` migration; and an
+/// instruction stint exceeding the core's granted budget yields the
+/// task back to its queue (cooperative preemption).
+struct ExecutorTask {
+    planners: Rc<Vec<Rc<Planner>>>,
+    shared: Shared,
+    rt: Rc<RefCell<TpcRuntime<ExecJob>>>,
+    core: usize,
+    ch: u32,
+    rng: Rng,
+    reqno: u64,
+    current: Option<TpcJob<ExecJob>>,
+    steps: VecDeque<Step>,
+    /// Instructions issued since the last pop/yield on this core.
+    stint: u64,
+    /// Per-stint instruction budget granted from the runtime quantum
+    /// (`u64::MAX` = never preempt).
+    budget: u64,
+}
+
+impl ExecutorTask {
+    /// Park the running job back into the runtime with its remaining
+    /// plan (the popped step has already been pushed back by the
+    /// caller), then hand it to `requeue` for queue selection.
+    fn park(&mut self, requeue: impl FnOnce(&mut TpcRuntime<ExecJob>, TpcJob<ExecJob>)) {
+        let mut job = self.current.take().expect("a job is running");
+        job.payload.resume = Some(std::mem::take(&mut self.steps));
+        requeue(&mut self.rt.borrow_mut(), job);
+        self.stint = 0;
+    }
+}
+
+impl TaskBody for ExecutorTask {
+    fn next(&mut self, now: Time, _rng: &mut Rng) -> Action {
+        loop {
+            if self.current.is_some() {
+                match self.steps.pop_front() {
+                    Some(Step::Set(t)) => {
+                        let job = self.current.as_mut().expect("a job is running");
+                        if t == TaskType::Avx {
+                            if !job.in_avx_phase {
+                                job.in_avx_phase = true;
+                                // First AVX demand of the phase: under
+                                // `avx-steer-lazy`, hand the task to the
+                                // AVX subset *before* the license is
+                                // requested — the Set replays there.
+                                let target = self.rt.borrow_mut().lazy_target(self.core);
+                                if let Some(target) = target {
+                                    self.steps.push_front(Step::Set(t));
+                                    self.park(|rt, job| rt.migrate(job, target));
+                                    continue;
+                                }
+                            }
+                        } else {
+                            job.in_avx_phase = false;
+                        }
+                        return Action::SetType(t);
+                    }
+                    Some(Step::Exec { func, stack, block, reps }) => {
+                        if self.stint > 0 && self.stint >= self.budget {
+                            // Budget exhausted: yield to the next job on
+                            // this queue. The wake path re-homes via the
+                            // runtime's waker; the preempted job keeps
+                            // its remaining plan.
+                            self.steps.push_front(Step::Exec { func, stack, block, reps });
+                            self.park(|rt, job| {
+                                rt.stats.preemptions += 1;
+                                rt.requeue_wake(job);
+                            });
+                            continue;
+                        }
+                        self.stint =
+                            self.stint.saturating_add(block.insns().saturating_mul(reps.max(1) as u64));
+                        return crate::sched::machine::pack_run(block, func, stack, reps);
+                    }
+                    None => {
+                        let job = self.current.take().expect("a job is running");
+                        self.shared.borrow_mut().complete(now, job.payload.req);
+                        self.stint = 0;
+                    }
+                }
+            } else {
+                let job = self.rt.borrow_mut().pop(self.core);
+                match job {
+                    Some(mut job) => {
+                        self.stint = 0;
+                        match job.payload.resume.take() {
+                            // Mid-request job (preempted or migrated
+                            // here): resume its saved plan.
+                            Some(saved) => self.steps = saved,
+                            None => {
+                                self.reqno += 1;
+                                let planner = &self.planners
+                                    [job.payload.req.tenant as usize % self.planners.len()];
+                                planner.plan_into(self.reqno, &mut self.rng, &mut self.steps);
+                            }
+                        }
+                        self.current = Some(job);
+                    }
+                    None => return Action::WaitChannel(self.ch),
+                }
+            }
+        }
+    }
+}
+
 /// Periodic untyped housekeeping task (kernel threads / softirq): keeps
 /// the untyped queue non-empty so the §3.2 starvation rule is exercised.
 struct Housekeeper {
@@ -536,6 +704,17 @@ pub struct WebRun {
     /// Migrations that crossed a socket (NUMA) boundary; 0 on
     /// single-socket machines.
     pub cross_socket_migrations_per_sec: f64,
+    /// Runtime-level placements steered by AVX awareness
+    /// ([`LoadMode::Executor`] with `avx-steer`; 0 otherwise).
+    pub runtime_steered: u64,
+    /// Runtime-level lazy migrations (`avx-steer-lazy`; 0 otherwise).
+    pub runtime_migrations: u64,
+    /// [`WebRun::runtime_migrations`] over the measurement window (per
+    /// second) — comparable with the kernel-level
+    /// [`WebRun::migrations_per_sec`] one layer down.
+    pub runtime_migrations_per_sec: f64,
+    /// Runtime-level budget-exhaustion yields (0 with preemption off).
+    pub runtime_preemptions: u64,
     /// Energy consumed while executing during the measurement window
     /// (J, all cores). Adds across machines (fleet aggregation sums).
     pub active_energy_j: f64,
@@ -654,21 +833,64 @@ fn run_webserver_impl(
     let closed = matches!(cfg.mode, LoadMode::Closed { .. });
     let shared = ServerShared::new(closed, cfg.slo, n_tenants);
 
+    // nginx workers start untyped-equivalent: the paper's patch types
+    // them scalar on first classification; we spawn them scalar.
+    let ttype = if cfg.annotate { TaskType::Scalar } else { TaskType::Untyped };
     let mut seed_rng = Rng::new(cfg.seed ^ 0xC0FFEE);
-    for _ in 0..cfg.workers {
-        let body = Worker {
-            planners: planners.clone(),
+    let mut exec: Option<ExecState> = None;
+    if let LoadMode::Executor { tpc, .. } = &cfg.mode {
+        // Thread-per-core executor: worker i owns runtime queue i and
+        // waits on its own channel. The worker spawn protocol (fork +
+        // below per worker, same order) matches the shared-queue branch,
+        // so `home-core` on one worker replays the same RNG stream.
+        let n_exec = cfg.workers.max(1);
+        let core_chs: Vec<u32> = (0..n_exec).map(|_| m.channel()).collect();
+        let rt = Rc::new(RefCell::new(TpcRuntime::new(
+            tpc.placement,
+            n_exec,
+            tpc.quantum,
+            &tpc.shares,
+        )));
+        for core in 0..n_exec {
+            let budget = rt.borrow().budget(core);
+            let body = ExecutorTask {
+                planners: planners.clone(),
+                shared: shared.clone(),
+                rt: rt.clone(),
+                core,
+                ch: core_chs[core],
+                rng: seed_rng.fork(),
+                reqno: seed_rng.below(1_000) as u64, // desync handshake phases
+                current: None,
+                steps: VecDeque::with_capacity(24),
+                stint: 0,
+                budget,
+            };
+            m.spawn(ttype, 0, Box::new(body));
+        }
+        let avx_tenants: Vec<bool> = (0..n_tenants)
+            .map(|t| process.as_ref().map(|p| p.tenant_carries_avx(t)).unwrap_or(true))
+            .collect();
+        exec = Some(ExecState {
             shared: shared.clone(),
-            ch,
-            rng: seed_rng.fork(),
-            reqno: seed_rng.below(1_000) as u64, // desync handshake phases
-            current: None,
-            steps: VecDeque::with_capacity(24),
-        };
-        // nginx workers start untyped-equivalent: the paper's patch types
-        // them scalar on first classification; we spawn them scalar.
-        let ttype = if cfg.annotate { TaskType::Scalar } else { TaskType::Untyped };
-        m.spawn(ttype, 0, Box::new(body));
+            rt,
+            avx_tenants,
+            core_chs,
+            reactor: Reactor::new(),
+        });
+    } else {
+        for _ in 0..cfg.workers {
+            let body = Worker {
+                planners: planners.clone(),
+                shared: shared.clone(),
+                ch,
+                rng: seed_rng.fork(),
+                reqno: seed_rng.below(1_000) as u64, // desync handshake phases
+                current: None,
+                steps: VecDeque::with_capacity(24),
+            };
+            m.spawn(ttype, 0, Box::new(body));
+        }
     }
     // A couple of untyped housekeeping tasks.
     for _ in 0..2 {
@@ -711,7 +933,7 @@ fn run_webserver_impl(
     let ctl = cfg
         .adaptive
         .map(|params| crate::sched::adaptive::Controller::new(params, cfg.cores));
-    let mut driver = WebDriver { open, ctl };
+    let mut driver = WebDriver { open, ctl, exec };
     if let Some(o) = &mut driver.open {
         o.start(&mut m);
     }
@@ -721,7 +943,14 @@ fn run_webserver_impl(
     m.run_until(cfg.warmup, &mut driver);
     m.reset_metrics();
     shared.borrow_mut().start_measuring();
+    // Runtime counters reset with the machine counters: reported
+    // steer/migration/preemption figures cover the measurement window
+    // only, like the kernel-level migration rates they sit next to.
+    if let Some(e) = &driver.exec {
+        e.rt.borrow_mut().stats = crate::tpc::TpcStats::default();
+    }
     m.run_until(cfg.warmup + cfg.measure, &mut driver);
+    let tpc_stats = driver.exec.as_ref().map(|e| e.rt.borrow().stats).unwrap_or_default();
     let final_avx_cores = m.sched.policy.avx_core_count();
     let adaptive_changes = driver.ctl.as_ref().map(|c| c.grows + c.shrinks).unwrap_or(0);
 
@@ -757,6 +986,10 @@ fn run_webserver_impl(
         type_changes_per_sec: m.sched.stats.type_changes as f64 / secs,
         migrations_per_sec: m.sched.stats.migrations as f64 / secs,
         cross_socket_migrations_per_sec: m.sched.stats.cross_socket_migrations as f64 / secs,
+        runtime_steered: tpc_stats.steered,
+        runtime_migrations: tpc_stats.migrations,
+        runtime_migrations_per_sec: tpc_stats.migrations as f64 / secs,
+        runtime_preemptions: tpc_stats.preemptions,
         active_energy_j: total.active_energy_j,
         idle_energy_j: total.idle_energy_j,
         throttle_ratio: total.throttle_ratio(),
@@ -793,10 +1026,59 @@ impl ArrivalDriver {
     }
 }
 
-/// Composite web driver: open-loop arrivals + the adaptive controller.
+/// Driver-side half of the thread-per-core executor: after each arrival
+/// event, drain the shared intake queue into the runtime's per-core
+/// queues via the placement policy, collect every wake target in the
+/// [`Reactor`], and flush one notification per distinct core — the
+/// completion-batching protocol of the glommio model.
+struct ExecState {
+    shared: Shared,
+    rt: Rc<RefCell<TpcRuntime<ExecJob>>>,
+    /// `tenant_carries_avx` per tenant index: whether the runtime should
+    /// treat the tenant's futures as AVX-marked for placement.
+    avx_tenants: Vec<bool>,
+    /// Per-executor-core wake channels, index = core.
+    core_chs: Vec<u32>,
+    reactor: Reactor,
+}
+
+impl ExecState {
+    fn drain(&mut self, m: &mut Machine) {
+        {
+            let mut rt = self.rt.borrow_mut();
+            // In-worker requeues (preemption yields, lazy migrations)
+            // happen while no Machine handle is in scope; they recorded
+            // their targets in the runtime. Fold them into this batch.
+            for core in rt.take_pending_wakes() {
+                self.reactor.note(core);
+            }
+            loop {
+                let req = { self.shared.borrow_mut().queue.pop_front() };
+                let Some(req) = req else { break };
+                // Occupancy guard: same bound as the shared-queue server,
+                // measured over the runtime's total queued jobs.
+                let max_queue = self.shared.borrow().max_queue;
+                if rt.total_queued() >= max_queue {
+                    self.shared.borrow_mut().dropped += 1;
+                    continue;
+                }
+                let marked = self.avx_tenants[req.tenant as usize % self.avx_tenants.len()];
+                let core = rt.place(marked, ExecJob { req, resume: None });
+                self.reactor.note(core);
+            }
+        }
+        for core in self.reactor.flush() {
+            m.notify(self.core_chs[core]);
+        }
+    }
+}
+
+/// Composite web driver: open-loop arrivals + the adaptive controller
+/// (+ the executor drain in [`LoadMode::Executor`] runs).
 struct WebDriver {
     open: Option<ArrivalDriver>,
     ctl: Option<crate::sched::adaptive::Controller>,
+    exec: Option<ExecState>,
 }
 
 impl Driver for WebDriver {
@@ -805,6 +1087,9 @@ impl Driver for WebDriver {
             0 => {
                 if let Some(o) = &mut self.open {
                     o.on_external(0, m);
+                }
+                if let Some(e) = &mut self.exec {
+                    e.drain(m);
                 }
             }
             1 => {

@@ -327,6 +327,10 @@ fn synthetic_webrun(done: u64, p50: f64, p99: f64, p999: f64, frac: f64, drops: 
         type_changes_per_sec: 0.0,
         migrations_per_sec: 0.0,
         cross_socket_migrations_per_sec: 0.0,
+        runtime_steered: 0,
+        runtime_migrations: 0,
+        runtime_migrations_per_sec: 0.0,
+        runtime_preemptions: 0,
         active_energy_j: 0.0,
         idle_energy_j: 0.0,
         throttle_ratio: 0.0,

@@ -13,7 +13,8 @@ use avxfreq::cpu::GovernorSpec;
 use avxfreq::fleet::RouterSpec;
 use avxfreq::metrics::{matrix_report, tail_report};
 use avxfreq::scenario::{
-    ArrivalSpec, CellResult, PolicySpec, Scenario, ScenarioMatrix, TopologySpec, WorkloadSpec,
+    ArrivalSpec, CellResult, ExecutorSpec, PolicySpec, Scenario, ScenarioMatrix, TopologySpec,
+    WorkloadSpec,
 };
 use avxfreq::sched::PolicyKind;
 use avxfreq::sim::MS;
@@ -58,6 +59,7 @@ fn cell(
         fleet: 1,
         router: RouterSpec::RoundRobin,
         governor: GovernorSpec::IntelLegacy,
+        executor: ExecutorSpec::Kernel,
         seed: 7,
         cfg: WebCfg::paper_default(isa, PolicyKind::Unmodified),
     };
@@ -76,6 +78,10 @@ fn cell(
         type_changes_per_sec: 9_000.0,
         migrations_per_sec: 1_200.0,
         cross_socket_migrations_per_sec: 0.0,
+        runtime_steered: 0,
+        runtime_migrations: 0,
+        runtime_migrations_per_sec: 0.0,
+        runtime_preemptions: 0,
         active_energy_j: 0.0,
         idle_energy_j: 0.0,
         throttle_ratio: 0.0625,

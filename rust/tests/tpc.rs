@@ -1,0 +1,544 @@
+//! Thread-per-core executor suite, in four bands:
+//!
+//! 1. **Properties** (shrinking traces via `testkit`): every job lands
+//!    inside its placement policy's allowed core set; granted budgets
+//!    never sum past the quantum; the `home-core` waker always requeues
+//!    to the home core; `avx-steer-lazy` migrates at most once per task
+//!    per AVX phase.
+//! 2. **Differentials**: `LoadMode::Executor` under `home-core` on one
+//!    worker is byte-identical to the shared-queue open-loop server;
+//!    a matrix with the executor axis left defaulted is byte-identical
+//!    to one with `executors = [Kernel]` spelled out (the pre-PR axes
+//!    are untouched); `run_tpc`, the tpc sweep, and the `runtimespec`
+//!    matrix are byte-identical at 1 and 4 OS threads.
+//! 3. **Behavior**: on the bursty multi-tenant mix, `avx-steer` reduces
+//!    p99 vs `home-core` (the paper's §5 claim restated one layer up),
+//!    and `avx-steer-lazy` actually migrates.
+//! 4. **Goldens**: `tpc_report` and the `runtimespec` table render
+//!    byte-identically to checked-in snapshots driven by synthetic rows
+//!    (`UPDATE_GOLDEN=1 cargo test --test tpc` to regenerate).
+//!
+//! Triage note: the differentials compare the *executor* against the
+//! pre-existing shared-queue server. If one fails, the executor side is
+//! the suspect — do not "fix" the reference implementation to match.
+
+use avxfreq::cpu::GovernorSpec;
+use avxfreq::repro::runtimespec;
+use avxfreq::scenario::{
+    ArrivalSpec, ExecutorSpec, PolicySpec, ScenarioMatrix, TopologySpec, WorkloadSpec,
+};
+use avxfreq::sched::PolicyKind;
+use avxfreq::sim::MS;
+use avxfreq::testkit::{assert_prop, IntRange, VecOf};
+use avxfreq::tpc::{
+    all_placements, grant_budgets, run_tpc, tpc_report, wake_core, PlacementSpec, TpcParams,
+    TpcRow, TpcRuntime,
+};
+use avxfreq::traffic::ArrivalProcess;
+use avxfreq::workload::client::LoadMode;
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::{run_webserver, WebCfg};
+
+fn trace_strategy() -> VecOf<IntRange> {
+    VecOf { elem: IntRange { lo: 0, hi: u64::MAX / 2 }, max_len: 300 }
+}
+
+// ---------------------------------------------------------------------------
+// Band 1: properties.
+// ---------------------------------------------------------------------------
+
+/// Every spawn, wake, and lazy migration keeps the job inside the core
+/// set its placement policy allows — including the degenerate subsets
+/// (`avx_cores` = 0 or ≥ n) that fall back to all cores.
+#[test]
+fn prop_no_job_lands_outside_its_allowed_set() {
+    let specs = [
+        PlacementSpec::HomeCore,
+        PlacementSpec::AvxSteer { avx_cores: 2 },
+        PlacementSpec::AvxSteer { avx_cores: 0 },
+        PlacementSpec::AvxSteer { avx_cores: 9 },
+        PlacementSpec::AvxSteerLazy { avx_cores: 2 },
+    ];
+    assert_prop("allowed-set confinement", 0x7C01, 60, &trace_strategy(), |ops| {
+        let n = 6;
+        for &spec in &specs {
+            let mut rt: TpcRuntime<u64> = TpcRuntime::new(spec, n, u64::MAX, &[]);
+            for &x in ops {
+                let core = (x >> 3) as usize % n;
+                match x % 3 {
+                    0 => {
+                        let marked = (x >> 2) & 1 == 1;
+                        let at = rt.place(marked, x);
+                        let allowed = spec.allowed_cores(marked, n);
+                        if !allowed.contains(&at) {
+                            return Err(format!(
+                                "{spec:?}: spawned marked={marked} onto {at}, allowed {allowed:?}"
+                            ));
+                        }
+                    }
+                    1 => {
+                        if let Some(job) = rt.pop(core) {
+                            let marked = job.marked;
+                            let woken = rt.requeue_wake(job);
+                            let allowed = spec.allowed_cores(marked, n);
+                            if !allowed.contains(&woken) {
+                                return Err(format!(
+                                    "{spec:?}: woke marked={marked} onto {woken}, allowed {allowed:?}"
+                                ));
+                            }
+                        }
+                    }
+                    _ => {
+                        if let Some(job) = rt.pop(core) {
+                            match rt.lazy_target(core) {
+                                Some(t) => {
+                                    if !spec.is_avx_core(t, n) {
+                                        return Err(format!(
+                                            "{spec:?}: lazy target {t} outside the AVX subset"
+                                        ));
+                                    }
+                                    rt.migrate(job, t);
+                                }
+                                None => {
+                                    rt.requeue_wake(job);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Conservation law: the budgets granted out of a quantum never sum past
+/// it — for arbitrary share vectors (including zeros), both through
+/// `grant_budgets` directly and through `TpcRuntime::new`'s
+/// repeat-last-share expansion.
+#[test]
+fn prop_granted_budgets_never_exceed_the_quantum() {
+    assert_prop("Σ budgets ≤ quantum", 0x7C02, 300, &trace_strategy(), |v| {
+        let Some((&quantum, shares)) = v.split_first() else { return Ok(()) };
+        let budgets = grant_budgets(quantum, shares);
+        if budgets.len() != shares.len() {
+            return Err(format!("{} budgets for {} shares", budgets.len(), shares.len()));
+        }
+        let sum: u128 = budgets.iter().map(|&b| b as u128).sum();
+        if sum > quantum as u128 {
+            return Err(format!("Σ budgets {sum} > quantum {quantum} for shares {shares:?}"));
+        }
+        let n = shares.len().clamp(1, 8);
+        let rt: TpcRuntime<u8> = TpcRuntime::new(PlacementSpec::HomeCore, n, quantum, shares);
+        let rt_sum: u128 = (0..n).map(|c| rt.budget(c) as u128).sum();
+        if rt_sum > quantum as u128 {
+            return Err(format!(
+                "runtime Σ budgets {rt_sum} > quantum {quantum} for shares {shares:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Under `home-core` (and `avx-steer-lazy`, which moves tasks only via
+/// explicit migration) a wake always requeues to the job's home core —
+/// checked both on the pure waker function and through the runtime.
+#[test]
+fn prop_home_core_wake_always_returns_home() {
+    assert_prop("home-core wake ≡ home", 0x7C03, 120, &trace_strategy(), |ops| {
+        for &x in ops {
+            let n = (x as usize % 16) + 1;
+            let home = (x >> 8) as usize % n;
+            let marked = (x >> 4) & 1 == 1;
+            for spec in [PlacementSpec::HomeCore, PlacementSpec::AvxSteerLazy { avx_cores: 2 }] {
+                let woken = wake_core(&spec, marked, home, n);
+                if woken != home {
+                    return Err(format!("{spec:?}: wake sent home={home} to {woken} (n={n})"));
+                }
+            }
+            let mut rt: TpcRuntime<u64> =
+                TpcRuntime::new(PlacementSpec::HomeCore, n, u64::MAX, &[]);
+            let at = rt.place(marked, x);
+            let job = rt.pop(at).expect("just placed");
+            let woken = rt.requeue_wake(job);
+            if woken != at {
+                return Err(format!("runtime requeued home={at} to {woken} (n={n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `avx-steer-lazy` migrates a task at most once per AVX phase: the
+/// executor's `in_avx_phase` guard consults the runtime only on the
+/// first `with_avx()` of a phase, and once inside the subset
+/// `lazy_target` refuses to fire again.
+#[test]
+fn prop_lazy_migrates_at_most_once_per_avx_phase() {
+    assert_prop("lazy ≤ 1 migration per phase", 0x7C04, 80, &trace_strategy(), |ops| {
+        let n = 6;
+        let spec = PlacementSpec::AvxSteerLazy { avx_cores: 2 };
+        let mut rt: TpcRuntime<u64> = TpcRuntime::new(spec, n, u64::MAX, &[]);
+        let mut home = rt.place(true, 0);
+        let mut job = rt.pop(home).expect("just placed");
+        let mut migrations_this_phase = 0u64;
+        for &x in ops {
+            if x & 1 == 1 {
+                // `with_avx()` — the ExecutorTask guard: only the first
+                // one of a phase may consult the runtime.
+                if !job.in_avx_phase {
+                    job.in_avx_phase = true;
+                    if let Some(t) = rt.lazy_target(home) {
+                        if !spec.is_avx_core(t, n) {
+                            return Err(format!("lazy target {t} outside the AVX subset"));
+                        }
+                        rt.migrate(job, t);
+                        home = t;
+                        job = rt.pop(home).expect("just migrated");
+                        migrations_this_phase += 1;
+                        if migrations_this_phase > 1 {
+                            return Err("second migration within one AVX phase".to_string());
+                        }
+                        if rt.lazy_target(home).is_some() {
+                            return Err("lazy_target re-fires from inside the subset".to_string());
+                        }
+                    }
+                }
+            } else {
+                // `without_avx()` closes the phase.
+                job.in_avx_phase = false;
+                migrations_this_phase = 0;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Band 2: differentials.
+// ---------------------------------------------------------------------------
+
+fn equiv_cfg(mode: LoadMode) -> WebCfg {
+    let mut cfg = WebCfg::paper_default(Isa::Avx512, PolicyKind::Unmodified);
+    cfg.cores = 4;
+    cfg.workers = 1; // single worker: executor queue 0 ≡ the shared queue
+    cfg.page_bytes = 8 * 1024;
+    cfg.warmup = 150 * MS;
+    cfg.measure = 300 * MS;
+    cfg.mode = mode;
+    cfg
+}
+
+/// The crown differential: serving through the executor under
+/// `home-core` with one worker and preemption off is byte-for-byte the
+/// shared-queue open-loop server — same completions, same tails,
+/// bit-equal floats and energy. (If this fails, suspect the executor
+/// path: the shared-queue server is the frozen reference.)
+#[test]
+fn executor_home_core_single_worker_matches_the_shared_queue_server() {
+    let process = ArrivalProcess::two_tenant(6_000.0, 0.3);
+    let base = run_webserver(&equiv_cfg(LoadMode::OpenProcess { process: process.clone() }));
+    let exec = run_webserver(&equiv_cfg(LoadMode::Executor {
+        process,
+        tpc: TpcParams::default(),
+    }));
+    assert!(base.completed > 1_000, "baseline only served {}", base.completed);
+    assert_eq!(exec.completed, base.completed);
+    assert_eq!(exec.dropped, base.dropped);
+    assert_eq!(exec.stats.violations(), base.stats.violations());
+    assert_eq!(exec.throughput_rps.to_bits(), base.throughput_rps.to_bits());
+    assert_eq!(exec.avg_ghz.to_bits(), base.avg_ghz.to_bits());
+    assert_eq!(exec.ipc.to_bits(), base.ipc.to_bits());
+    assert_eq!(exec.active_energy_j.to_bits(), base.active_energy_j.to_bits());
+    assert_eq!(exec.idle_energy_j.to_bits(), base.idle_energy_j.to_bits());
+    assert_eq!(exec.tail.p50_us.to_bits(), base.tail.p50_us.to_bits());
+    assert_eq!(exec.tail.p99_us.to_bits(), base.tail.p99_us.to_bits());
+    assert_eq!(exec.tail.max_us.to_bits(), base.tail.max_us.to_bits());
+    // home-core with preemption off neither steers, migrates, nor yields.
+    assert_eq!(exec.runtime_steered, 0);
+    assert_eq!(exec.runtime_migrations, 0);
+    assert_eq!(exec.runtime_preemptions, 0);
+}
+
+fn tiny_kernel_matrix(seed: u64) -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new(seed);
+    m.topologies = vec![TopologySpec::multi(1, 4)];
+    m.policies = vec![PolicySpec::CoreSpec { avx_cores: 1 }];
+    m.workloads = vec![WorkloadSpec {
+        name: "small".to_string(),
+        compress: true,
+        page_kib: 8,
+        rate_per_core: 4_000.0,
+    }];
+    m.isas = vec![Isa::Avx512];
+    m.loads = vec![0.8, 1.2];
+    m.arrivals = vec![ArrivalSpec::Poisson, ArrivalSpec::bursty_default()];
+    m.warmup = 100 * MS;
+    m.measure = 200 * MS;
+    m
+}
+
+/// The new `executors` axis defaults to exactly the pre-PR behaviour: a
+/// matrix that never mentions executors renders byte-identically (matrix
+/// AND tail tables, bit-equal energy) to one with
+/// `executors = [ExecutorSpec::Kernel]` spelled out, and no cell picks
+/// up an Executor load mode or a `/tpc:` label suffix.
+#[test]
+fn matrix_with_default_executor_axis_is_identical_to_explicit_kernel() {
+    let implicit = tiny_kernel_matrix(0x7C30);
+    assert_eq!(implicit.executors, vec![ExecutorSpec::Kernel], "default executor axis");
+    let mut explicit = tiny_kernel_matrix(0x7C30);
+    explicit.executors = vec![ExecutorSpec::Kernel];
+    assert_eq!(implicit.len(), explicit.len());
+
+    let a = implicit.run(2);
+    let b = explicit.run(2);
+    assert_eq!(a.render(), b.render(), "matrix table differs");
+    assert_eq!(a.render_tail(), b.render_tail(), "tail table differs");
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.run.energy_j().to_bits(), cb.run.energy_j().to_bits());
+        assert_eq!(ca.run.completed, cb.run.completed);
+        assert!(!ca.scenario.label().contains("/tpc:"), "{}", ca.scenario.label());
+        assert!(
+            !matches!(ca.scenario.cfg.mode, LoadMode::Executor { .. }),
+            "kernel cell must not serve through the executor"
+        );
+        assert_eq!(ca.run.runtime_steered, 0);
+    }
+}
+
+/// `run_tpc` is byte-identical at 1 and 4 OS threads — rendered report
+/// and raw bits — on a configuration that exercises shares and a finite
+/// quantum, so preemption determinism is covered too.
+#[test]
+fn run_tpc_is_deterministic_across_threads() {
+    let mut cfg = WebCfg::paper_default(Isa::Avx512, PolicyKind::Unmodified);
+    cfg.cores = 4;
+    cfg.workers = 4; // thread-per-core
+    cfg.annotate = true;
+    cfg.page_bytes = 8 * 1024;
+    cfg.warmup = 150 * MS;
+    cfg.measure = 300 * MS;
+    cfg.mode = LoadMode::OpenProcess {
+        process: ArrivalSpec::bursty_mix_default().instantiate(24_000.0),
+    };
+    let params =
+        TpcParams { placement: PlacementSpec::HomeCore, quantum: 400_000, shares: vec![2, 1] };
+    let placements = all_placements(2);
+    let serial = run_tpc(&cfg, &params, &placements, 1);
+    let parallel = run_tpc(&cfg, &params, &placements, 4);
+    assert_eq!(tpc_report(&serial).render(), tpc_report(&parallel).render());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.throughput_rps.to_bits(), b.throughput_rps.to_bits());
+        assert_eq!(a.p99_us.to_bits(), b.p99_us.to_bits());
+        assert_eq!(a.p999_us.to_bits(), b.p999_us.to_bits());
+        assert_eq!(a.kernel_migrations_per_sec.to_bits(), b.kernel_migrations_per_sec.to_bits());
+        assert_eq!(a.mj_per_req.to_bits(), b.mj_per_req.to_bits());
+        assert_eq!(
+            (a.steered, a.runtime_migrations, a.preemptions),
+            (b.steered, b.runtime_migrations, b.preemptions)
+        );
+    }
+    assert!(serial.iter().all(|r| r.throughput_rps > 0.0), "{serial:?}");
+    // Budgets [160k, 80k, 80k, 80k] instructions sit below a request's
+    // instruction count, so the cooperative-preemption path is really on
+    // in this differential.
+    assert!(serial.iter().any(|r| r.preemptions > 0), "preemption never fired: {serial:?}");
+}
+
+/// The `avxfreq tpc` sweep (shrunk to the 4-core test topology) is
+/// byte-identical at 1 and 4 OS threads, and every placement cell
+/// completes work.
+#[test]
+fn tpc_matrix_is_deterministic_across_threads() {
+    let mut m = ScenarioMatrix::tpc_sweep(true, 0x7C20);
+    m.topologies = vec![TopologySpec::multi(1, 4)];
+    m.workloads[0].rate_per_core = 8_000.0;
+    let serial = m.run(1);
+    let parallel = m.run(4);
+    assert_eq!(serial.cells.len(), 3, "one cell per placement");
+    assert_eq!(serial.render(), parallel.render(), "matrix table differs");
+    assert_eq!(serial.render_tail(), parallel.render_tail(), "tail table differs");
+    for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+        assert_eq!(a.run.energy_j().to_bits(), b.run.energy_j().to_bits());
+        assert_eq!(a.run.runtime_steered, b.run.runtime_steered);
+        assert_eq!(a.run.runtime_migrations, b.run.runtime_migrations);
+        assert_eq!(a.run.runtime_preemptions, b.run.runtime_preemptions);
+    }
+    for cell in &serial.cells {
+        assert!(
+            cell.run.completed > 50,
+            "{} only completed {}",
+            cell.scenario.label(),
+            cell.run.completed
+        );
+    }
+}
+
+/// The `repro runtimespec` matrix (shrunk to one governor × one kernel
+/// policy on the 4-core test topology — same code path, smaller grid)
+/// renders byte-identical runtimespec and tail tables at 1 and 4 OS
+/// threads.
+#[test]
+fn runtimespec_matrix_is_deterministic_across_threads() {
+    let mut m = runtimespec::matrix(true, 0x7C21);
+    m.topologies = vec![TopologySpec::multi(1, 4)];
+    m.governors = vec![GovernorSpec::SlowRamp];
+    m.policies = vec![PolicySpec::CoreSpec { avx_cores: 1 }];
+    m.workloads[0].rate_per_core = 8_000.0;
+    let serial = m.run(1);
+    let parallel = m.run(4);
+    assert_eq!(serial.cells.len(), 3, "one cell per placement");
+    let rows_s = runtimespec::rows(&serial);
+    let rows_p = runtimespec::rows(&parallel);
+    assert_eq!(
+        runtimespec::table(&rows_s).render(),
+        runtimespec::table(&rows_p).render(),
+        "runtimespec table differs"
+    );
+    assert_eq!(serial.render_tail(), parallel.render_tail(), "tail table differs");
+    assert!(rows_s.iter().all(|r| r.throughput_rps > 0.0), "{rows_s:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Band 3: behavior.
+// ---------------------------------------------------------------------------
+
+/// The acceptance claim: on the bursty multi-tenant mix, runtime-level
+/// `avx-steer` reduces p99 vs `home-core` under an *unmodified* kernel —
+/// the paper's §5 tail result reproduced one layer up the stack — and
+/// `avx-steer-lazy` actually migrates on observed AVX demand.
+#[test]
+fn avx_steer_improves_bursty_mix_p99_over_home_core() {
+    let mut cfg = WebCfg::paper_default(Isa::Avx512, PolicyKind::Unmodified);
+    cfg.cores = 6;
+    cfg.workers = 6; // thread-per-core
+    cfg.annotate = true; // the runtime needs the AVX marks
+    cfg.page_bytes = 16 * 1024;
+    cfg.warmup = 200 * MS;
+    cfg.measure = 600 * MS;
+    cfg.slo = 5 * MS;
+    cfg.mode = LoadMode::OpenProcess {
+        process: ArrivalSpec::bursty_mix_default().instantiate(24_000.0),
+    };
+    let rows = run_tpc(&cfg, &TpcParams::default(), &all_placements(2), 2);
+    let (home, steer, lazy) = (&rows[0], &rows[1], &rows[2]);
+    assert!(home.throughput_rps > 10_000.0, "home-core served {}", home.throughput_rps);
+    assert!(steer.throughput_rps > 10_000.0, "avx-steer served {}", steer.throughput_rps);
+    assert!(
+        steer.p99_us < home.p99_us,
+        "runtime steering must improve bursty p99: {} vs {} µs",
+        steer.p99_us,
+        home.p99_us
+    );
+    assert!(steer.steered > 0, "avx-steer never steered a marked future");
+    assert_eq!(home.steered, 0, "home-core must not steer");
+    assert_eq!(home.runtime_migrations, 0);
+    assert_eq!(steer.runtime_migrations, 0, "eager steering never migrates lazily");
+    assert!(lazy.runtime_migrations > 0, "avx-steer-lazy never migrated: {lazy:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Band 4: goldens.
+// ---------------------------------------------------------------------------
+
+fn check_golden(name: &str, actual: &str) {
+    let path = format!("{}/rust/tests/golden/{name}.txt", env!("CARGO_MANIFEST_DIR"));
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(&path, actual).expect("write golden");
+        eprintln!("updated {path}");
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    assert!(
+        actual == expected,
+        "{name} drifted from its snapshot ({path}).\n--- expected ---\n{expected}\n--- actual ---\n{actual}\n\
+         Run with UPDATE_GOLDEN=1 if the change is intentional."
+    );
+}
+
+/// Synthetic rows with fixed values pin the `tpc_report` formatting
+/// contract (column set, order, precision) independently of the
+/// simulator.
+#[test]
+fn tpc_report_matches_snapshot() {
+    let rows = vec![
+        TpcRow {
+            placement: "home-core".to_string(),
+            throughput_rps: 48_000.0,
+            p99_us: 2_000.0,
+            p999_us: 3_500.0,
+            steered: 0,
+            runtime_migrations: 0,
+            preemptions: 0,
+            kernel_migrations_per_sec: 0.0,
+            mj_per_req: 1.25,
+        },
+        TpcRow {
+            placement: "avx-steer(2)".to_string(),
+            throughput_rps: 52_000.0,
+            p99_us: 1_500.0,
+            p999_us: 2_600.0,
+            steered: 9_000,
+            runtime_migrations: 0,
+            preemptions: 12,
+            kernel_migrations_per_sec: 850.5,
+            mj_per_req: 1.1,
+        },
+        TpcRow {
+            placement: "avx-steer-lazy(2)".to_string(),
+            throughput_rps: 51_000.0,
+            p99_us: 1_600.0,
+            p999_us: 2_750.0,
+            steered: 0,
+            runtime_migrations: 4_200,
+            preemptions: 12,
+            kernel_migrations_per_sec: 850.5,
+            mj_per_req: 1.125,
+        },
+    ];
+    check_golden("tpc_report", &tpc_report(&rows).render());
+}
+
+/// Same for the `repro runtimespec` table: one row per layer combination
+/// with fixed synthetic values.
+#[test]
+fn runtimespec_report_matches_snapshot() {
+    let rows = vec![
+        runtimespec::RtRow {
+            placement: "home-core".to_string(),
+            policy: "unmodified".to_string(),
+            governor: "intel-legacy".to_string(),
+            throughput_rps: 60_000.0,
+            p99_us: 2_400.0,
+            p999_us: 5_200.0,
+            rt_migrations_per_sec: 0.0,
+            k_migrations_per_sec: 0.0,
+            mj_per_req: 1.5,
+        },
+        runtimespec::RtRow {
+            placement: "avx-steer(2)".to_string(),
+            policy: "unmodified".to_string(),
+            governor: "slow-ramp".to_string(),
+            throughput_rps: 61_000.0,
+            p99_us: 1_900.0,
+            p999_us: 4_100.0,
+            rt_migrations_per_sec: 0.0,
+            k_migrations_per_sec: 0.0,
+            mj_per_req: 1.375,
+        },
+        runtimespec::RtRow {
+            placement: "avx-steer-lazy(2)".to_string(),
+            policy: "core-spec(2)".to_string(),
+            governor: "dim-silicon".to_string(),
+            throughput_rps: 60_500.0,
+            p99_us: 2_000.0,
+            p999_us: 4_400.0,
+            rt_migrations_per_sec: 350.5,
+            k_migrations_per_sec: 1_200.0,
+            mj_per_req: 1.425,
+        },
+    ];
+    check_golden("runtimespec_report", &runtimespec::table(&rows).render());
+}
