@@ -22,7 +22,7 @@
 //! sim-time / wall seconds`, so the number is comparable across
 //! scenario shapes and thread counts.
 
-use crate::fleet::{run_fleet, RouterSpec};
+use crate::fleet::{run_fleet, run_hier_fleet, BalancerCfg, HierFleetCfg, RouterSpec};
 use crate::scenario::{ArrivalSpec, ScenarioMatrix};
 use crate::sched::PolicyKind;
 use crate::sim::{Time, MS};
@@ -34,7 +34,7 @@ use std::fmt::Write as _;
 use std::time::Instant;
 
 /// Which PR's trajectory file this harness writes.
-pub const BENCH_PR: u32 = 6;
+pub const BENCH_PR: u32 = 7;
 
 /// Harness configuration (CLI surface of `avxfreq bench`).
 #[derive(Clone, Debug)]
@@ -44,7 +44,8 @@ pub struct BenchCfg {
     pub seed: u64,
     /// OS threads for the matrix/fleet legs (same for both legs).
     pub threads: usize,
-    /// Scenario names to run (`single`, `matrix`, `fleet`, `executor`).
+    /// Scenario names to run (`single`, `matrix`, `fleet`, `hier`,
+    /// `executor`).
     pub scenarios: Vec<String>,
 }
 
@@ -54,7 +55,7 @@ impl BenchCfg {
             quick,
             seed,
             threads: threads.max(1),
-            scenarios: ["single", "matrix", "fleet", "executor"]
+            scenarios: ["single", "matrix", "fleet", "hier", "executor"]
                 .iter()
                 .map(|s| s.to_string())
                 .collect(),
@@ -230,6 +231,41 @@ fn run_fleet_scenario(quick: bool, seed: u64, threads: usize, fast: bool) -> (Le
     (Leg { wall_s, sim_ns }, fp)
 }
 
+/// The closed-loop hierarchical fleet (epoch feedback: retries, hedges,
+/// health ejection) over the fleetvar scenario, racks of 3 — the
+/// streaming machine→rack→cluster aggregation and the balancer
+/// bookkeeping sit on the timed path of both legs and inside the
+/// equivalence gate (front-end outcome counters, per-machine digests,
+/// and the rendered hierarchy table are all fingerprinted).
+fn run_hier_scenario(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg, Vec<u64>) {
+    let mut fleet = crate::repro::fleetvar::fleet_cfg(RouterSpec::RoundRobin, quick, seed);
+    fleet.cfg.fast_paths = fast;
+    let mut cfg = HierFleetCfg::new(fleet, BalancerCfg::closed());
+    cfg.machines_per_rack = 3;
+    let sim_ns = (cfg.fleet.cfg.warmup + cfg.fleet.cfg.measure) * cfg.fleet.machines as Time;
+    let t0 = Instant::now();
+    let run = run_hier_fleet(&cfg, threads);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut fp = Vec::new();
+    fingerprint(&run.cluster_run("bench"), &mut fp);
+    let o = &run.outcomes;
+    fp.extend([
+        o.timeouts_observed,
+        o.retries_issued,
+        o.retries_abandoned,
+        o.hedges_issued,
+        o.ejections,
+        o.readmissions,
+    ]);
+    for d in &run.digests {
+        fp.extend([d.arrivals, d.completed, d.timeouts, d.epochs_ejected]);
+    }
+    for b in crate::metrics::hier_report(&[("hier", &run)]).render().bytes() {
+        fp.push(b as u64);
+    }
+    (Leg { wall_s, sim_ns }, fp)
+}
+
 /// Run the configured scenarios, fast leg then baseline leg each.
 /// Every scenario name is resolved *before* the first leg is timed, so
 /// a typo fails immediately instead of after minutes of completed legs
@@ -242,9 +278,12 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<Vec<BenchRow>> {
             "single" => |q, s, _t, f| run_single(q, s, f),
             "matrix" => run_matrix,
             "fleet" => run_fleet_scenario,
+            "hier" => run_hier_scenario,
             "executor" => |q, s, _t, f| run_executor(q, s, f),
             other => {
-                anyhow::bail!("unknown bench scenario {other:?} (single|matrix|fleet|executor)")
+                anyhow::bail!(
+                    "unknown bench scenario {other:?} (single|matrix|fleet|hier|executor)"
+                )
             }
         };
         plan.push((name, runner));
@@ -365,7 +404,7 @@ mod tests {
             },
         ];
         let j = to_json(&cfg, &rows);
-        assert!(j.contains("\"pr\": 6"), "{j}");
+        assert!(j.contains("\"pr\": 7"), "{j}");
         assert!(j.contains("\"fast_sim_ns_per_wall_s\": 9600000000.000000"), "{j}");
         assert!(j.contains("\"baseline_sim_ns_per_wall_s\": 2400000000.000000"), "{j}");
         assert!(j.contains("\"speedup\": 4.000000"), "{j}");

@@ -1,0 +1,725 @@
+//! Closed-loop front-end balancer: epoch-based feedback over the
+//! hierarchical fleet.
+//!
+//! A real cluster front-end reacts to *observed* signals — it times
+//! requests out and retries them, hedges slow requests after a
+//! p99-based delay, and ejects machines whose tails blow up. Reacting
+//! to per-request completions would couple routing to simulated
+//! machine state and destroy the fleet's determinism contract
+//! (byte-identical output at any OS thread count). The resolution is
+//! **epoch-based feedback**: the run is sliced into epochs, every
+//! machine in epoch *k* simulates independently (embarrassingly
+//! parallel, exactly like the open loop), and the balancer adjusts
+//! routing for epoch *k + 1* only from epoch *k*'s *merged* statistics.
+//! Within an epoch routing is still a pure function of the arrival
+//! stream; across epochs the feedback inputs are exact merged counters,
+//! which are identical for every thread schedule — so the whole closed
+//! loop stays byte-identical at any thread count.
+//!
+//! Feedback mechanisms (all estimated from the observed latency
+//! distribution, never from per-request logs — memory stays O(machines)
+//! scalars):
+//!
+//! * **Timeout + retry with backoff** — each machine's per-tenant share
+//!   of completions above the timeout (histogram `fraction_above`, the
+//!   front-end's observed-distribution estimate, ≤ ~3% bucket error) is
+//!   re-injected into the next epoch as seeded retry arrivals after a
+//!   backoff; attempts beyond `max_retries` are abandoned.
+//! * **Hedging** — after a delay of `hedge_p99_mult ×` the previous
+//!   epoch's cluster p99, the observed fraction of requests still
+//!   outstanding is duplicated to the next healthy machine. Duplicates
+//!   are modelled on the load side (the front-end takes whichever copy
+//!   answers; both completions are recorded — a documented
+//!   simplification).
+//! * **Health ejection** — a machine whose epoch p99 exceeds
+//!   `eject_factor ×` the healthy median is ejected for the next epoch;
+//!   routing probes to the next healthy machine. An ejected machine
+//!   receives no traffic, so its next epoch p99 reads 0 and it is
+//!   readmitted — a one-epoch cooldown.
+//!
+//! Epoch boundaries are also the model's stated approximation: each
+//! (machine, epoch) is a fresh simulation (queues and license state are
+//! not carried across the boundary, in-flight work at the boundary is
+//! lost), the same semantics the open loop applies at its horizon. The
+//! feedback-disabled configuration does not approximate anything: it
+//! runs the *identical* whole-horizon demux/simulate path as
+//! [`run_fleet`], only the aggregation streams — the differential test
+//! in `rust/tests/hierfleet.rs` pins byte equality.
+//!
+//! [`run_fleet`]: super::cluster::run_fleet
+
+use super::cluster::{route_stream, FleetCfg};
+use super::hierarchy::{collective_makespan, HierFleetRun, HierarchyAgg};
+use crate::sim::{Time, MS, SEC};
+use crate::traffic::{ArrivalGen, FrontendOutcomes, LatencyStats};
+use crate::util::{mix64, Rng};
+use crate::workload::webserver::{run_webserver_trace, WebCfg};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Closed-loop balancer parameters. `Default` is the open loop (all
+/// feedback off); [`BalancerCfg::closed`] enables every mechanism at
+/// the defaults.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BalancerCfg {
+    /// Master switch: `false` routes exactly like PR 3's open loop.
+    pub enabled: bool,
+    /// Feedback epochs over the measure window (the warmup window is an
+    /// extra cold epoch, observed for feedback but never reported).
+    pub epochs: usize,
+    /// Per-request timeout (ns) the front-end measures against.
+    pub timeout: Time,
+    /// Retry attempts before a timed-out request is abandoned.
+    pub max_retries: u32,
+    /// Backoff before a retry is re-injected (ns).
+    pub retry_backoff: Time,
+    /// Hedge duplicates fire after `hedge_p99_mult ×` the previous
+    /// epoch's cluster p99; `0.0` disables hedging.
+    pub hedge_p99_mult: f64,
+    /// Eject a machine whose epoch p99 exceeds `eject_factor ×` the
+    /// healthy median; `0.0` disables ejection.
+    pub eject_factor: f64,
+}
+
+impl Default for BalancerCfg {
+    fn default() -> Self {
+        BalancerCfg {
+            enabled: false,
+            epochs: 4,
+            timeout: 20 * MS,
+            max_retries: 2,
+            retry_backoff: MS,
+            hedge_p99_mult: 3.0,
+            eject_factor: 3.0,
+        }
+    }
+}
+
+impl BalancerCfg {
+    /// Every mechanism on at the defaults.
+    pub fn closed() -> Self {
+        BalancerCfg { enabled: true, ..Default::default() }
+    }
+
+    /// Short label for tables and cell identifiers.
+    pub fn label(&self) -> String {
+        if self.enabled {
+            format!("closed({}ep)", self.epochs)
+        } else {
+            "open-loop".to_string()
+        }
+    }
+
+    /// Read the `[balancer]` config section (all keys optional; absent
+    /// section = open loop).
+    ///
+    /// ```toml
+    /// [balancer]
+    /// enabled = true
+    /// epochs = 4
+    /// timeout_ms = 20.0
+    /// max_retries = 2
+    /// retry_backoff_ms = 1.0
+    /// hedge_p99_mult = 3.0    # 0 disables hedging
+    /// eject_factor = 3.0      # 0 disables health ejection
+    /// ```
+    pub fn from_config(conf: &crate::util::config::Config) -> anyhow::Result<BalancerCfg> {
+        let d = BalancerCfg::default();
+        let ms = |x: f64| (x * MS as f64).round() as Time;
+        let cfg = BalancerCfg {
+            enabled: conf.bool_or("balancer.enabled", d.enabled),
+            epochs: conf.usize_or("balancer.epochs", d.epochs),
+            timeout: ms(conf.float_or("balancer.timeout_ms", d.timeout as f64 / MS as f64)),
+            max_retries: conf.usize_or("balancer.max_retries", d.max_retries as usize) as u32,
+            retry_backoff: ms(conf
+                .float_or("balancer.retry_backoff_ms", d.retry_backoff as f64 / MS as f64)),
+            hedge_p99_mult: conf.float_or("balancer.hedge_p99_mult", d.hedge_p99_mult),
+            eject_factor: conf.float_or("balancer.eject_factor", d.eject_factor),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject parameterizations the loop cannot execute sensibly.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.epochs >= 1, "balancer.epochs must be ≥ 1");
+        anyhow::ensure!(self.timeout > 0, "balancer timeout must be positive");
+        anyhow::ensure!(
+            self.hedge_p99_mult.is_finite() && self.hedge_p99_mult >= 0.0,
+            "balancer.hedge_p99_mult must be finite and ≥ 0"
+        );
+        anyhow::ensure!(
+            self.eject_factor.is_finite() && self.eject_factor >= 0.0,
+            "balancer.eject_factor must be finite and ≥ 0"
+        );
+        Ok(())
+    }
+}
+
+/// Hierarchical fleet configuration: the flat [`FleetCfg`] plus rack
+/// shape, balancer, and the optional collective model.
+#[derive(Clone, Debug)]
+pub struct HierFleetCfg {
+    pub fleet: FleetCfg,
+    /// Machines per rack (contiguous chunks; the last rack may be
+    /// short).
+    pub machines_per_rack: usize,
+    pub balancer: BalancerCfg,
+    /// Bulk-synchronous collective steps to model over the digests
+    /// (0 = skip).
+    pub collective_steps: usize,
+}
+
+impl HierFleetCfg {
+    pub fn new(fleet: FleetCfg, balancer: BalancerCfg) -> Self {
+        HierFleetCfg { fleet, machines_per_rack: 8, balancer, collective_steps: 0 }
+    }
+
+    /// Extend [`FleetCfg::from_config`] with the `[balancer]` section
+    /// plus `fleet.machines_per_rack` / `fleet.collective_steps`.
+    pub fn from_config(conf: &crate::util::config::Config) -> anyhow::Result<HierFleetCfg> {
+        let fleet = FleetCfg::from_config(conf)?;
+        let cfg = HierFleetCfg {
+            fleet,
+            machines_per_rack: conf.usize_or("fleet.machines_per_rack", 8).max(1),
+            balancer: BalancerCfg::from_config(conf)?,
+            collective_steps: conf.usize_or("fleet.collective_steps", 0),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.fleet.validate()?;
+        self.balancer.validate()?;
+        if self.balancer.enabled {
+            anyhow::ensure!(
+                self.fleet.cfg.measure / self.balancer.epochs as Time > 0,
+                "measure window too short for {} feedback epochs",
+                self.balancer.epochs
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One front-end arrival inside an epoch.
+#[derive(Clone, Copy, Debug)]
+struct Arr {
+    t: Time,
+    tenant: u32,
+    /// 0 for base arrivals, n ≥ 1 for the n-th retry attempt.
+    attempt: u32,
+    /// Hedge duplicates never retry or re-hedge, and carry a
+    /// pre-assigned machine when they spill into a later epoch.
+    hedge: bool,
+    machine: Option<usize>,
+}
+
+/// Per-machine observations from one epoch, computed on the worker
+/// thread before the machine's run is dropped.
+#[derive(Clone, Debug, Default)]
+struct EpochObs {
+    completed: u64,
+    p99: Time,
+    /// Per-tenant fraction of completions above the timeout.
+    tenant_frac: Vec<f64>,
+}
+
+/// Run the hierarchical fleet. Feedback disabled (`!balancer.enabled`)
+/// executes the identical whole-horizon path as [`run_fleet`] — same
+/// traces, same machine seeds, same per-machine simulations — with the
+/// streaming aggregation in place of retained `WebRun`s. Feedback
+/// enabled runs the epoch loop described in the module docs. Both are
+/// byte-identical at any `threads` value.
+///
+/// [`run_fleet`]: super::cluster::run_fleet
+pub fn run_hier_fleet(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
+    cfg.validate().expect("invalid hierarchical fleet configuration");
+    if cfg.balancer.enabled {
+        run_closed_loop(cfg, threads)
+    } else {
+        run_open_loop(cfg, threads)
+    }
+}
+
+/// Simulate a set of per-machine jobs across worker threads, absorbing
+/// each run into the aggregation as it finishes (the `WebRun` is
+/// dropped on the worker thread). `observe` optionally captures epoch
+/// observations per machine before the drop.
+fn simulate_into(
+    jobs: Vec<(WebCfg, Vec<(Time, u32)>)>,
+    threads: usize,
+    agg: &HierarchyAgg,
+    absorb: bool,
+    secs: f64,
+    observe: Option<(&Mutex<LatencyStats>, &[Mutex<Option<EpochObs>>], Time, usize)>,
+) {
+    let jobs: Vec<(WebCfg, Mutex<Option<Vec<(Time, u32)>>>)> = jobs
+        .into_iter()
+        .map(|(mcfg, trace)| (mcfg, Mutex::new(Some(trace))))
+        .collect();
+    let n_threads = threads.max(1).min(jobs.len().max(1));
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..n_threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (mcfg, trace_slot) = &jobs[i];
+                let trace = trace_slot
+                    .lock()
+                    .expect("trace poisoned")
+                    .take()
+                    .expect("each machine's trace is claimed exactly once");
+                let run = run_webserver_trace(mcfg, trace);
+                if absorb {
+                    agg.absorb(i, &run, secs);
+                }
+                if let Some((epoch_cluster, obs_slots, timeout, n_tenants)) = observe {
+                    let obs = EpochObs {
+                        completed: run.completed,
+                        p99: run.stats.hist.percentile(99.0),
+                        tenant_frac: (0..n_tenants)
+                            .map(|t| {
+                                run.tenant_stats
+                                    .get(t)
+                                    .map(|s| s.hist.fraction_above(timeout))
+                                    .unwrap_or(0.0)
+                            })
+                            .collect(),
+                    };
+                    epoch_cluster.lock().expect("epoch recorder poisoned").merge(&run.stats);
+                    *obs_slots[i].lock().expect("obs slot poisoned") = Some(obs);
+                }
+                // `run` dropped here — nothing retains the WebRun.
+            });
+        }
+    });
+}
+
+fn finish(
+    cfg: &HierFleetCfg,
+    agg: HierarchyAgg,
+    arrivals_routed: Vec<u64>,
+    outcomes: FrontendOutcomes,
+) -> HierFleetRun {
+    let snap = agg.finish(&arrivals_routed);
+    let collective = (cfg.collective_steps > 0)
+        .then(|| collective_makespan(&snap.digests, cfg.collective_steps, cfg.fleet.cfg.seed));
+    HierFleetRun {
+        router: cfg.fleet.router.label(),
+        balancer: cfg.balancer.label(),
+        machines: cfg.fleet.machines,
+        machines_per_rack: cfg.machines_per_rack.max(1),
+        tail: snap.cluster.summary(),
+        completed: snap.cluster.completed(),
+        violations: snap.cluster.violations(),
+        digests: snap.digests,
+        racks: snap.racks,
+        stats: snap.cluster,
+        tenant_stats: snap.tenants,
+        outcomes,
+        dropped: snap.dropped,
+        measure_secs: cfg.fleet.cfg.measure as f64 / SEC as f64,
+        collective,
+    }
+}
+
+/// Feedback disabled: PR 3's open-loop demux/simulate path verbatim
+/// (same `route_stream`, same `machine_seed`s, same whole-horizon
+/// per-machine runs), streamed into the hierarchy instead of retained.
+fn run_open_loop(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
+    let fleet = &cfg.fleet;
+    let traces = route_stream(fleet);
+    let arrivals_routed: Vec<u64> = traces.iter().map(|t| t.len() as u64).collect();
+    let names =
+        fleet.cfg.mode.process().expect("validate() rejects closed-loop fleets").tenant_names();
+    let agg = HierarchyAgg::new(fleet.machines, cfg.machines_per_rack, fleet.cfg.slo, &names);
+    let secs = fleet.cfg.measure as f64 / SEC as f64;
+    let jobs: Vec<(WebCfg, Vec<(Time, u32)>)> = traces
+        .into_iter()
+        .enumerate()
+        .map(|(i, trace)| {
+            let mut mcfg = fleet.cfg.clone();
+            mcfg.seed = fleet.machine_seed(i);
+            (mcfg, trace)
+        })
+        .collect();
+    simulate_into(jobs, threads, &agg, true, secs, None);
+    finish(cfg, agg, arrivals_routed, FrontendOutcomes::default())
+}
+
+/// Seed for (machine `i`, epoch window `k`): window 0 keeps the
+/// machine's open-loop seed; later windows fork so each epoch's worker
+/// RNG streams decorrelate.
+fn epoch_machine_seed(fleet: &FleetCfg, i: usize, k: usize) -> u64 {
+    let base = fleet.machine_seed(i);
+    if k == 0 {
+        base
+    } else {
+        mix64(base ^ (k as u64).wrapping_mul(0xD1B5_4A32_D192_ED03))
+    }
+}
+
+/// First healthy machine at or after `from` (wrapping); `from` itself
+/// if the whole fleet is ejected (the guard in the ejection pass makes
+/// that unreachable, but routing must never fail).
+fn pick_healthy(from: usize, healthy: &[bool]) -> usize {
+    let n = healthy.len();
+    (0..n).map(|d| (from + d) % n).find(|&m| healthy[m]).unwrap_or(from)
+}
+
+/// First healthy machine strictly after `primary` (wrapping, ≠
+/// `primary` if any other healthy machine exists).
+fn next_healthy_after(primary: usize, healthy: &[bool]) -> usize {
+    let n = healthy.len();
+    (1..n).map(|d| (primary + d) % n).find(|&m| healthy[m]).unwrap_or(primary)
+}
+
+fn run_closed_loop(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
+    let fleet = &cfg.fleet;
+    let bal = &cfg.balancer;
+    let n = fleet.machines.max(1);
+    let process = fleet.cfg.mode.process().expect("validate() rejects closed-loop fleets");
+    let names = process.tenant_names();
+    let n_tenants = process.n_tenants();
+    let agg = HierarchyAgg::new(n, cfg.machines_per_rack, fleet.cfg.slo, &names);
+
+    // Epoch windows: a cold window over [0, warmup) (observed for
+    // feedback, never absorbed into the reported aggregates), then
+    // `epochs` slices of the measure window (the last takes the integer
+    // remainder).
+    let mut windows: Vec<(Time, Time)> = Vec::new();
+    if fleet.cfg.warmup > 0 {
+        windows.push((0, fleet.cfg.warmup));
+    }
+    let measured_from = windows.len();
+    let horizon = fleet.cfg.warmup + fleet.cfg.measure;
+    let e_len = fleet.cfg.measure / bal.epochs as Time;
+    let mut start = fleet.cfg.warmup;
+    for k in 0..bal.epochs {
+        let end = if k + 1 == bal.epochs { horizon } else { start + e_len };
+        windows.push((start, end));
+        start = end;
+    }
+
+    // The base arrival stream: identical generation to the open loop.
+    let mut gen = ArrivalGen::new(process.clone(), fleet.cfg.seed ^ 0xDEAD);
+    let mut base: Vec<(Time, u32)> = Vec::new();
+    let mut now = 0;
+    loop {
+        let (t, tenant) = gen.next_after(now);
+        if t > horizon {
+            break;
+        }
+        base.push((t, tenant));
+        now = t;
+    }
+
+    // Front-end state carried across epochs. The router's bookkeeping
+    // persists (it is still a pure function of what it was asked to
+    // route); the health mask and hedge/retry queues are the feedback.
+    let mut router = fleet.router.build(n);
+    let mut healthy = vec![true; n];
+    let mut outcomes = FrontendOutcomes::default();
+    let mut arrivals_routed = vec![0u64; n];
+    let mut injected: Vec<Arr> = Vec::new();
+    let mut hedge_frac = 0.0f64;
+    let mut hedge_delay: Time = 0;
+
+    let mut base_iter = base.into_iter().peekable();
+    let last = windows.len() - 1;
+    for (k, &(w0, w1)) in windows.iter().enumerate() {
+        // 1. This epoch's arrivals: base stream in [w0, w1) (the last
+        // window also takes the horizon-edge arrival), plus any
+        // injections that landed here. Stable sort on a total key keeps
+        // the order independent of construction order.
+        let mut epoch: Vec<Arr> = Vec::new();
+        while let Some(&(t, tenant)) = base_iter.peek() {
+            if t >= w1 && k != last {
+                break;
+            }
+            epoch.push(Arr { t, tenant, attempt: 0, hedge: false, machine: None });
+            base_iter.next();
+        }
+        let (now_batch, later): (Vec<Arr>, Vec<Arr>) =
+            injected.drain(..).partition(|a| a.t < w1 || k == last);
+        epoch.extend(now_batch);
+        injected = later;
+        epoch.sort_by_key(|a| (a.t, a.hedge, a.attempt, a.tenant));
+
+        // 2. Route. Retry/attempt composition is tracked per
+        // (machine, tenant, attempt) so next epoch's timeouts can be
+        // attributed; hedge draws come from a per-epoch seeded stream.
+        let mut traces: Vec<Vec<(Time, u32)>> = vec![Vec::new(); n];
+        let mut hedges: Vec<(Time, u32, usize)> = Vec::new();
+        let attempts = bal.max_retries as usize + 1;
+        let mut counts = vec![0u64; n * n_tenants * attempts];
+        let mut hedge_rng =
+            Rng::new(mix64(fleet.cfg.seed ^ (k as u64).wrapping_mul(0x9E37_79B9) ^ 0x4ED6));
+        for a in &epoch {
+            let avx = process.tenant_carries_avx(a.tenant as usize);
+            let m = match a.machine {
+                Some(m) => pick_healthy(m, &healthy),
+                None => pick_healthy(router.route(a.t, avx), &healthy),
+            };
+            traces[m].push((a.t, a.tenant));
+            arrivals_routed[m] += 1;
+            if !a.hedge {
+                counts[(m * n_tenants + a.tenant as usize) * attempts + a.attempt as usize] += 1;
+                if hedge_frac > 0.0 && hedge_delay > 0 && hedge_rng.chance(hedge_frac) {
+                    let hm = next_healthy_after(m, &healthy);
+                    if hm != m {
+                        outcomes.hedges_issued += 1;
+                        let ht = a.t.saturating_add(hedge_delay);
+                        if ht < w1 {
+                            hedges.push((ht, a.tenant, hm));
+                        } else if k != last {
+                            injected.push(Arr {
+                                t: ht,
+                                tenant: a.tenant,
+                                attempt: 0,
+                                hedge: true,
+                                machine: Some(hm),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        for (ht, tenant, hm) in hedges {
+            traces[hm].push((ht, tenant));
+            arrivals_routed[hm] += 1;
+        }
+        for trace in traces.iter_mut() {
+            trace.sort_by_key(|&(t, _)| t);
+        }
+
+        // 3. Simulate the epoch: every machine is an independent fresh
+        // run over [0, w1 - w0) with epoch-local arrival times.
+        let e_secs = (w1 - w0) as f64 / SEC as f64;
+        let measured = k >= measured_from;
+        let jobs: Vec<(WebCfg, Vec<(Time, u32)>)> = traces
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut trace)| {
+                for a in trace.iter_mut() {
+                    a.0 -= w0;
+                }
+                let mut mcfg = fleet.cfg.clone();
+                mcfg.warmup = 0;
+                mcfg.measure = w1 - w0;
+                mcfg.seed = epoch_machine_seed(fleet, i, k);
+                (mcfg, trace)
+            })
+            .collect();
+        let epoch_cluster = Mutex::new(LatencyStats::new(fleet.cfg.slo));
+        let obs_slots: Vec<Mutex<Option<EpochObs>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        simulate_into(
+            jobs,
+            threads,
+            &agg,
+            measured,
+            e_secs,
+            Some((&epoch_cluster, &obs_slots, bal.timeout, n_tenants)),
+        );
+        let obs: Vec<EpochObs> = obs_slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("obs poisoned").unwrap_or_default())
+            .collect();
+
+        // 4. Feedback for epoch k+1, from epoch k's merged statistics
+        // only — sequential and deterministic.
+        if k == last {
+            break;
+        }
+        let (nw0, nw1) = windows[k + 1];
+
+        // 4a. Timeouts → retries with backoff (or abandonment at the
+        // attempt cap). Estimated per (machine, tenant, attempt) from
+        // the observed per-tenant distribution.
+        let mut retry_rng =
+            Rng::new(mix64(fleet.cfg.seed ^ (k as u64).wrapping_mul(0xA076_1D64_78BD_642F)));
+        let jitter_span = ((nw1 - nw0) / 2).max(1);
+        for m in 0..n {
+            for t in 0..n_tenants {
+                let frac = obs[m].tenant_frac.get(t).copied().unwrap_or(0.0);
+                if frac <= 0.0 {
+                    continue;
+                }
+                for a in 0..attempts {
+                    let c = counts[(m * n_tenants + t) * attempts + a];
+                    let timed_out = (frac * c as f64).round() as u64;
+                    if timed_out == 0 {
+                        continue;
+                    }
+                    outcomes.timeouts_observed += timed_out;
+                    agg.note_timeouts(m, timed_out);
+                    if a as u32 >= bal.max_retries {
+                        outcomes.retries_abandoned += timed_out;
+                        continue;
+                    }
+                    outcomes.retries_issued += timed_out;
+                    for _ in 0..timed_out {
+                        let rt = nw0
+                            .saturating_add(bal.retry_backoff)
+                            .saturating_add(retry_rng.below(jitter_span));
+                        injected.push(Arr {
+                            t: rt,
+                            tenant: t as u32,
+                            attempt: a as u32 + 1,
+                            hedge: false,
+                            machine: None,
+                        });
+                    }
+                }
+            }
+        }
+
+        // 4b. Hedge threshold for the next epoch from this epoch's
+        // merged cluster distribution.
+        if bal.hedge_p99_mult > 0.0 {
+            let ec = epoch_cluster.into_inner().expect("epoch recorder poisoned");
+            let p99 = ec.hist.percentile(99.0);
+            hedge_delay = (bal.hedge_p99_mult * p99 as f64).round() as Time;
+            hedge_frac =
+                if hedge_delay > 0 { ec.hist.fraction_above(hedge_delay) } else { 0.0 };
+        }
+
+        // 4c. Health view: eject slow machines, readmit recovered ones.
+        if bal.eject_factor > 0.0 {
+            let mut healthy_p99s: Vec<Time> = (0..n)
+                .filter(|&m| healthy[m] && obs[m].completed > 0)
+                .map(|m| obs[m].p99)
+                .collect();
+            healthy_p99s.sort_unstable();
+            if !healthy_p99s.is_empty() {
+                let median = healthy_p99s[healthy_p99s.len() / 2];
+                let threshold = (bal.eject_factor * median as f64).round() as Time;
+                if threshold > 0 {
+                    for m in 0..n {
+                        if !healthy[m] && obs[m].p99 <= threshold {
+                            healthy[m] = true;
+                            outcomes.readmissions += 1;
+                        }
+                    }
+                    for m in 0..n {
+                        let would_remain = healthy.iter().filter(|&&h| h).count() > 1;
+                        if healthy[m] && obs[m].p99 > threshold && would_remain {
+                            healthy[m] = false;
+                            outcomes.ejections += 1;
+                        }
+                    }
+                }
+            }
+        }
+        // Attribute ejected machine-epochs to the digests (next epoch
+        // is the one they sit out; only measured epochs are reported).
+        if k + 1 >= measured_from {
+            for m in 0..n {
+                if !healthy[m] {
+                    agg.note_ejected_epoch(m);
+                }
+            }
+        }
+    }
+
+    finish(cfg, agg, arrivals_routed, outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::router::RouterSpec;
+    use crate::sched::PolicyKind;
+    use crate::traffic::ArrivalProcess;
+    use crate::workload::client::LoadMode;
+    use crate::workload::crypto::Isa;
+
+    fn tiny_cfg() -> WebCfg {
+        let mut c = WebCfg::paper_default(Isa::Avx512, PolicyKind::Unmodified);
+        c.cores = 2;
+        c.workers = 4;
+        c.page_bytes = 8 * 1024;
+        c.warmup = 40 * MS;
+        c.measure = 160 * MS;
+        c.mode =
+            LoadMode::OpenProcess { process: ArrivalProcess::two_tenant(30_000.0, 0.25) };
+        c
+    }
+
+    fn hier(machines: usize, closed: bool) -> HierFleetCfg {
+        let fleet = FleetCfg::new(machines, RouterSpec::RoundRobin, tiny_cfg());
+        let bal = if closed { BalancerCfg::closed() } else { BalancerCfg::default() };
+        let mut h = HierFleetCfg::new(fleet, bal);
+        h.machines_per_rack = 2;
+        h
+    }
+
+    #[test]
+    fn balancer_labels_and_validation() {
+        assert_eq!(BalancerCfg::default().label(), "open-loop");
+        assert_eq!(BalancerCfg::closed().label(), "closed(4ep)");
+        let bad = BalancerCfg { epochs: 0, ..BalancerCfg::closed() };
+        assert!(bad.validate().is_err());
+        let bad = BalancerCfg { timeout: 0, ..BalancerCfg::closed() };
+        assert!(bad.validate().is_err());
+        let bad = BalancerCfg { hedge_p99_mult: -1.0, ..BalancerCfg::closed() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn health_probes_pick_deterministically() {
+        let healthy = vec![true, false, false, true];
+        assert_eq!(pick_healthy(0, &healthy), 0);
+        assert_eq!(pick_healthy(1, &healthy), 3);
+        assert_eq!(pick_healthy(2, &healthy), 3);
+        assert_eq!(next_healthy_after(0, &healthy), 3);
+        assert_eq!(next_healthy_after(3, &healthy), 0);
+        let none = vec![false, false];
+        assert_eq!(pick_healthy(1, &none), 1, "routing must never fail");
+        let solo = vec![true];
+        assert_eq!(next_healthy_after(0, &solo), 0, "no other machine to hedge to");
+    }
+
+    #[test]
+    fn open_loop_hier_counts_match_flat_fleet() {
+        // The streaming aggregation must reproduce the flat fleet's
+        // exact counters (the full byte-differential lives in
+        // rust/tests/hierfleet.rs).
+        let h = hier(3, false);
+        let flat = super::super::cluster::run_fleet(&h.fleet, 2);
+        let run = run_hier_fleet(&h, 2);
+        assert_eq!(run.completed, flat.completed);
+        assert_eq!(run.violations, flat.violations);
+        assert_eq!(run.dropped, flat.dropped);
+        assert_eq!(run.tail.p99_us.to_bits(), flat.tail.p99_us.to_bits());
+        assert!(run.outcomes.is_noop(), "open loop must not act: {:?}", run.outcomes);
+        assert_eq!(run.n_racks(), 2);
+        let rack_sum: u64 = run.racks.iter().map(|r| r.completed()).sum();
+        assert_eq!(rack_sum, run.completed, "racks must partition the cluster");
+    }
+
+    #[test]
+    fn closed_loop_runs_and_is_thread_count_invariant() {
+        let h = hier(3, true);
+        let a = run_hier_fleet(&h, 1);
+        let b = run_hier_fleet(&h, 4);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.violations, b.violations);
+        assert_eq!(a.tail.p99_us.to_bits(), b.tail.p99_us.to_bits());
+        assert_eq!(a.outcomes, b.outcomes);
+        assert_eq!(a.arrivals_routed(), b.arrivals_routed());
+        assert!(a.completed > 100, "closed loop served {}", a.completed);
+        assert_eq!(a.balancer, "closed(4ep)");
+    }
+
+    impl HierFleetRun {
+        fn arrivals_routed(&self) -> Vec<u64> {
+            self.digests.iter().map(|d| d.arrivals).collect()
+        }
+    }
+}

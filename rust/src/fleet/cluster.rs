@@ -61,12 +61,15 @@ impl FleetCfg {
     /// machines = 6
     /// router = "avx-partition"   # round-robin | least-outstanding | avx-partition
     /// avx_machines = 1           # size of the AVX subset (partition router)
+    /// service_est_us = 300.0     # least-outstanding per-request estimate (µs)
     /// ```
     pub fn from_config(conf: &crate::util::config::Config) -> anyhow::Result<FleetCfg> {
         let cfg = WebCfg::from_config(conf)?;
         let machines = conf.usize_or("fleet.machines", 4).max(1);
         let avx_machines = conf.usize_or("fleet.avx_machines", 1);
-        let router = RouterSpec::parse(conf.str_or("fleet.router", "round-robin"), avx_machines)?;
+        let service_est = service_est_from_config(conf)?;
+        let router =
+            RouterSpec::parse(conf.str_or("fleet.router", "round-robin"), avx_machines, service_est)?;
         let fleet = FleetCfg { machines, router, cfg };
         fleet.validate()?;
         Ok(fleet)
@@ -117,6 +120,25 @@ impl FleetCfg {
             mix64(self.cfg.seed ^ (i as u64).wrapping_mul(0xA24B_AED4_963E_E407))
         }
     }
+}
+
+/// Default least-outstanding per-request service estimate (µs) — the
+/// order of one paper-sized request; see [`RouterSpec::least_outstanding`].
+pub const DEFAULT_SERVICE_EST_US: f64 = 300.0;
+
+/// Convert a `service_est_us` microsecond figure (config/CLI) into the
+/// router's nanosecond estimate, rejecting non-positive or non-finite
+/// values before they could silently clamp inside the router.
+pub fn service_est_ns(us: f64) -> anyhow::Result<Time> {
+    anyhow::ensure!(
+        us.is_finite() && us > 0.0,
+        "fleet service estimate must be a positive number of microseconds (got {us})"
+    );
+    Ok((us * 1000.0).round().max(1.0) as Time)
+}
+
+fn service_est_from_config(conf: &crate::util::config::Config) -> anyhow::Result<Time> {
+    service_est_ns(conf.float_or("fleet.service_est_us", DEFAULT_SERVICE_EST_US))
 }
 
 /// Results of one fleet run: per-machine [`WebRun`]s plus cluster-wide

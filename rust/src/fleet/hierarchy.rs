@@ -1,0 +1,565 @@
+//! Hierarchical (machine → rack → cluster) streaming aggregation.
+//!
+//! PR 3's flat fleet kept every machine's full [`WebRun`] alive until
+//! the end of the run — fine for 6 machines, hopeless for the ROADMAP's
+//! 1000-machine "fleet-of-fleets" sweeps. This module keeps the memory
+//! profile at **O(machines) scalar counters plus O(racks + 1)
+//! histograms**: as each machine finishes, its latency recorder is
+//! merged into its rack's and the cluster's [`LatencyStats`] and the
+//! `WebRun` is dropped; all that survives per machine is a compact
+//! [`MachineDigest`] of exact counters and frozen tail points.
+//!
+//! Determinism at any thread count relies on a split by arithmetic
+//! kind:
+//!
+//! * **Histograms and exact counters** (`u64`/`u128` adds) are merged
+//!   under a mutex *as machines finish*, in whatever order the OS
+//!   schedules them — integer addition is commutative and associative,
+//!   so the merged buckets are identical for every completion order.
+//! * **Floating-point quantities** (energy, GHz, rates) are *not*
+//!   reorderable, so they are never reduced in completion order: each
+//!   lands in its machine's index-keyed digest slot, and any
+//!   cross-machine reduction happens once, in machine-index order, from
+//!   the frozen digests.
+//!
+//! The same digests feed the bulk-synchronous collective model
+//! ([`collective_makespan`]): every step of an N-machine collective
+//! waits on the slowest participant, so per-machine tail variation
+//! amplifies with N — Schuchart et al.'s scale-out argument, and the
+//! `repro fleetscale` table's headline column.
+
+use crate::sim::Time;
+use crate::traffic::{FrontendOutcomes, LatencyStats, TailSummary};
+use crate::util::{mix64, Rng, Summary};
+use crate::workload::webserver::WebRun;
+use std::sync::Mutex;
+
+/// Compact per-machine summary kept after the machine's [`WebRun`] is
+/// dropped: exact event counters, frozen tail points (µs), and
+/// completion-weighted machine-quality metrics. Accumulates across
+/// closed-loop epochs (each epoch's run is absorbed and dropped).
+#[derive(Clone, Debug, Default)]
+pub struct MachineDigest {
+    /// Rack this machine belongs to.
+    pub rack: usize,
+    /// Arrivals the front-end sent here (set by the caller at finalize —
+    /// routing happens outside the aggregation).
+    pub arrivals: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub violations: u64,
+    /// Completions the front-end classified as timed out (closed loop).
+    pub timeouts: u64,
+    /// Epochs this machine spent ejected from the healthy set.
+    pub epochs_ejected: u32,
+    // Frozen tail points (µs), completion-weighted across epochs. A
+    // weighted mean of per-epoch percentiles is an approximation (exact
+    // percentiles live in the rack/cluster histograms); `max_us` is
+    // exact.
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub max_us: f64,
+    // Machine-quality metrics, completion-weighted across epochs.
+    pub avg_ghz: f64,
+    pub ipc: f64,
+    pub insns_per_req: f64,
+    pub throttle_ratio: f64,
+    pub license_share: [f64; 3],
+    // Joules add across epochs, like the recorders.
+    pub active_energy_j: f64,
+    pub idle_energy_j: f64,
+    // Scheduler/runtime event totals (rates are rebuilt from these and
+    // the accumulated simulated seconds).
+    pub runtime_steered: u64,
+    pub runtime_migrations: u64,
+    pub runtime_preemptions: u64,
+    pub adaptive_changes: u64,
+    pub final_avx_cores: usize,
+    type_change_events: f64,
+    migration_events: f64,
+    cross_socket_events: f64,
+    secs: f64,
+    weight: f64,
+}
+
+impl MachineDigest {
+    /// Fold one (machine, epoch) run into the digest. `secs` is the
+    /// run's measurement window (rates are events, not averaged rates).
+    fn add_run(&mut self, run: &WebRun, secs: f64) {
+        self.completed += run.completed;
+        self.dropped += run.dropped;
+        self.violations += run.stats.violations();
+        let w = run.completed as f64;
+        self.mean_us += run.tail.mean_us * w;
+        self.p50_us += run.tail.p50_us * w;
+        self.p95_us += run.tail.p95_us * w;
+        self.p99_us += run.tail.p99_us * w;
+        self.p999_us += run.tail.p999_us * w;
+        self.max_us = self.max_us.max(run.tail.max_us);
+        self.avg_ghz += run.avg_ghz * w;
+        self.ipc += run.ipc * w;
+        self.insns_per_req += run.insns_per_req * w;
+        self.throttle_ratio += run.throttle_ratio * w;
+        for (acc, v) in self.license_share.iter_mut().zip(run.license_share) {
+            *acc += v * w;
+        }
+        self.active_energy_j += run.active_energy_j;
+        self.idle_energy_j += run.idle_energy_j;
+        self.runtime_steered += run.runtime_steered;
+        self.runtime_migrations += run.runtime_migrations;
+        self.runtime_preemptions += run.runtime_preemptions;
+        self.adaptive_changes += run.adaptive_changes;
+        self.final_avx_cores = run.final_avx_cores;
+        self.type_change_events += run.type_changes_per_sec * secs;
+        self.migration_events += run.migrations_per_sec * secs;
+        self.cross_socket_events += run.cross_socket_migrations_per_sec * secs;
+        self.secs += secs;
+        self.weight += w;
+    }
+
+    /// Turn the accumulated weighted sums into reportable values.
+    fn finalize(&mut self) {
+        if self.weight > 0.0 {
+            let w = self.weight;
+            self.mean_us /= w;
+            self.p50_us /= w;
+            self.p95_us /= w;
+            self.p99_us /= w;
+            self.p999_us /= w;
+            self.avg_ghz /= w;
+            self.ipc /= w;
+            self.insns_per_req /= w;
+            self.throttle_ratio /= w;
+            for acc in self.license_share.iter_mut() {
+                *acc /= w;
+            }
+        }
+    }
+
+    /// Events-per-second rates over the accumulated simulated time.
+    pub fn type_changes_per_sec(&self) -> f64 {
+        if self.secs > 0.0 { self.type_change_events / self.secs } else { 0.0 }
+    }
+    pub fn migrations_per_sec(&self) -> f64 {
+        if self.secs > 0.0 { self.migration_events / self.secs } else { 0.0 }
+    }
+    pub fn cross_socket_migrations_per_sec(&self) -> f64 {
+        if self.secs > 0.0 { self.cross_socket_events / self.secs } else { 0.0 }
+    }
+    pub fn runtime_migrations_per_sec(&self) -> f64 {
+        if self.secs > 0.0 { self.runtime_migrations as f64 / self.secs } else { 0.0 }
+    }
+}
+
+/// Number of racks for `machines` machines in contiguous chunks of
+/// `machines_per_rack`.
+pub fn n_racks(machines: usize, machines_per_rack: usize) -> usize {
+    let per = machines_per_rack.max(1);
+    machines.max(1).div_ceil(per)
+}
+
+/// Rack index of machine `i` (contiguous balanced chunks, the same
+/// idiom the NUMA socket map uses for cores).
+pub fn rack_of(i: usize, machines_per_rack: usize) -> usize {
+    i / machines_per_rack.max(1)
+}
+
+struct AggInner {
+    racks: Vec<LatencyStats>,
+    cluster: LatencyStats,
+    tenants: Vec<(String, LatencyStats)>,
+    dropped: u64,
+}
+
+/// Streaming machine → rack → cluster aggregation. `absorb` is called
+/// from worker threads as machines finish; everything merged there is
+/// exact integer arithmetic (order-independent), and per-machine `f64`
+/// state goes into index-keyed digest slots (see the module docs for
+/// why that split is what keeps runs byte-identical at any thread
+/// count).
+pub struct HierarchyAgg {
+    machines_per_rack: usize,
+    inner: Mutex<AggInner>,
+    digests: Vec<Mutex<MachineDigest>>,
+}
+
+impl HierarchyAgg {
+    /// `tenant_names` fixes the tenant order up front (every machine is
+    /// stamped from the same template, so the order is the arrival
+    /// process's tenant index order — never "whichever machine finished
+    /// first").
+    pub fn new(machines: usize, machines_per_rack: usize, slo: Time, tenant_names: &[String]) -> Self {
+        let machines = machines.max(1);
+        let per = machines_per_rack.max(1);
+        HierarchyAgg {
+            machines_per_rack: per,
+            inner: Mutex::new(AggInner {
+                racks: (0..n_racks(machines, per)).map(|_| LatencyStats::new(slo)).collect(),
+                cluster: LatencyStats::new(slo),
+                tenants: tenant_names
+                    .iter()
+                    .map(|n| (n.clone(), LatencyStats::new(slo)))
+                    .collect(),
+                dropped: 0,
+            }),
+            digests: (0..machines)
+                .map(|i| {
+                    Mutex::new(MachineDigest { rack: rack_of(i, per), ..Default::default() })
+                })
+                .collect(),
+        }
+    }
+
+    /// Merge machine `i`'s finished run into its rack and the cluster,
+    /// then record its digest. The caller drops the `WebRun` right
+    /// after — nothing here retains it.
+    pub fn absorb(&self, i: usize, run: &WebRun, secs: f64) {
+        {
+            let mut inner = self.inner.lock().expect("aggregation poisoned");
+            let rack = rack_of(i, self.machines_per_rack);
+            inner.racks[rack].merge(&run.stats);
+            inner.cluster.merge(&run.stats);
+            for ((_, acc), ts) in inner.tenants.iter_mut().zip(&run.tenant_stats) {
+                acc.merge(ts);
+            }
+            inner.dropped += run.dropped;
+        }
+        self.digests[i].lock().expect("digest poisoned").add_run(run, secs);
+    }
+
+    /// Record that machine `i` spent an epoch ejected.
+    pub fn note_ejected_epoch(&self, i: usize) {
+        self.digests[i].lock().expect("digest poisoned").epochs_ejected += 1;
+    }
+
+    /// Attribute front-end-observed timeouts to machine `i`.
+    pub fn note_timeouts(&self, i: usize, n: u64) {
+        self.digests[i].lock().expect("digest poisoned").timeouts += n;
+    }
+
+    /// Freeze the aggregation: rack/cluster recorders out, digests
+    /// finalized in machine-index order (the only place `f64`s cross
+    /// machines). `arrivals_routed` comes from the router, which lives
+    /// outside the aggregation.
+    pub fn finish(self, arrivals_routed: &[u64]) -> HierSnapshot {
+        let inner = self.inner.into_inner().expect("aggregation poisoned");
+        let digests: Vec<MachineDigest> = self
+            .digests
+            .into_iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let mut d = d.into_inner().expect("digest poisoned");
+                d.arrivals = arrivals_routed.get(i).copied().unwrap_or(0);
+                d.finalize();
+                d
+            })
+            .collect();
+        HierSnapshot {
+            racks: inner.racks,
+            cluster: inner.cluster,
+            tenants: inner.tenants,
+            dropped: inner.dropped,
+            digests,
+        }
+    }
+}
+
+/// Frozen output of a [`HierarchyAgg`].
+pub struct HierSnapshot {
+    pub racks: Vec<LatencyStats>,
+    pub cluster: LatencyStats,
+    pub tenants: Vec<(String, LatencyStats)>,
+    pub dropped: u64,
+    pub digests: Vec<MachineDigest>,
+}
+
+/// Results of one hierarchical fleet run (open- or closed-loop). The
+/// closed-loop path fills [`HierFleetRun::outcomes`]; the open-loop
+/// path leaves it a no-op record.
+#[derive(Clone, Debug)]
+pub struct HierFleetRun {
+    /// Router label (see [`super::RouterSpec::label`]).
+    pub router: String,
+    /// Balancer label (`"open-loop"` or `"closed(..)"`).
+    pub balancer: String,
+    pub machines: usize,
+    pub machines_per_rack: usize,
+    /// Per-machine scalar digests, machine-index order — the only
+    /// per-machine state retained.
+    pub digests: Vec<MachineDigest>,
+    /// Per-rack merged recorders.
+    pub racks: Vec<LatencyStats>,
+    /// Cluster-wide merged recorder.
+    pub stats: LatencyStats,
+    /// Cluster tail frozen from [`HierFleetRun::stats`].
+    pub tail: TailSummary,
+    /// Cluster-wide per-tenant recorders, tenant-index order.
+    pub tenant_stats: Vec<(String, LatencyStats)>,
+    /// What the closed-loop front-end did (all zero for open loop).
+    pub outcomes: FrontendOutcomes,
+    pub completed: u64,
+    pub dropped: u64,
+    pub violations: u64,
+    pub measure_secs: f64,
+    /// Bulk-synchronous collective model over the digests, if requested.
+    pub collective: Option<CollectiveSummary>,
+}
+
+impl HierFleetRun {
+    pub fn n_racks(&self) -> usize {
+        self.racks.len()
+    }
+
+    /// Per-machine p99 (µs) from the digests, machine-index order.
+    pub fn p99s_us(&self) -> Vec<f64> {
+        self.digests.iter().map(|d| d.p99_us).collect()
+    }
+
+    /// Cross-machine summary of per-machine p99 — same statistic the
+    /// flat fleet reports, now from digests instead of retained runs.
+    pub fn p99_summary(&self) -> Summary {
+        Summary::from_iter(self.p99s_us())
+    }
+
+    /// Max − min of the per-machine p99 (µs): the straggler gap.
+    pub fn p99_spread_us(&self) -> f64 {
+        let s = self.p99_summary();
+        if s.count() == 0 { 0.0 } else { s.max() - s.min() }
+    }
+
+    /// Synthesize a cluster-level [`WebRun`] so hierarchical cells slot
+    /// into the same matrix tables as single-machine cells — the digest
+    /// analogue of `FleetRun::cluster_run`.
+    pub fn cluster_run(&self, template_name: &str) -> WebRun {
+        let n = self.digests.len().max(1) as f64;
+        let secs = self.measure_secs.max(1e-9);
+        let mean = |f: &dyn Fn(&MachineDigest) -> f64| {
+            self.digests.iter().map(f).sum::<f64>() / n
+        };
+        let sum = |f: &dyn Fn(&MachineDigest) -> f64| self.digests.iter().map(f).sum::<f64>();
+        let mut license_share = [0.0f64; 3];
+        for d in &self.digests {
+            for (acc, v) in license_share.iter_mut().zip(d.license_share) {
+                *acc += v / n;
+            }
+        }
+        let insns: f64 =
+            self.digests.iter().map(|d| d.insns_per_req * d.completed as f64).sum();
+        WebRun {
+            cfg_name: format!(
+                "hier({}x{})/{}/{}/{}",
+                self.n_racks(),
+                self.machines_per_rack,
+                self.router,
+                self.balancer,
+                template_name
+            ),
+            throughput_rps: self.completed as f64 / secs,
+            avg_ghz: mean(&|d| d.avg_ghz),
+            ipc: mean(&|d| d.ipc),
+            insns_per_req: if self.completed > 0 { insns / self.completed as f64 } else { 0.0 },
+            tail: self.tail,
+            tenant_tails: self
+                .tenant_stats
+                .iter()
+                .map(|(name, s)| (name.clone(), s.summary()))
+                .collect(),
+            stats: self.stats.clone(),
+            tenant_stats: self.tenant_stats.iter().map(|(_, s)| s.clone()).collect(),
+            dropped: self.dropped,
+            type_changes_per_sec: sum(&|d| d.type_changes_per_sec()),
+            migrations_per_sec: sum(&|d| d.migrations_per_sec()),
+            cross_socket_migrations_per_sec: sum(&|d| d.cross_socket_migrations_per_sec()),
+            runtime_steered: self.digests.iter().map(|d| d.runtime_steered).sum(),
+            runtime_migrations: self.digests.iter().map(|d| d.runtime_migrations).sum(),
+            runtime_migrations_per_sec: sum(&|d| d.runtime_migrations_per_sec()),
+            runtime_preemptions: self.digests.iter().map(|d| d.runtime_preemptions).sum(),
+            active_energy_j: sum(&|d| d.active_energy_j),
+            idle_energy_j: sum(&|d| d.idle_energy_j),
+            throttle_ratio: mean(&|d| d.throttle_ratio),
+            license_share,
+            completed: self.completed,
+            final_avx_cores: self.digests.iter().map(|d| d.final_avx_cores).sum(),
+            adaptive_changes: self.digests.iter().map(|d| d.adaptive_changes).sum(),
+        }
+    }
+}
+
+/// Bulk-synchronous collective model: `steps` synchronization rounds
+/// where every machine draws a step duration from its own latency
+/// distribution and the round takes the **max** over machines.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CollectiveSummary {
+    pub steps: usize,
+    /// Sum over steps of the slowest machine's draw (µs).
+    pub makespan_us: f64,
+    /// The same steps if every machine ran at the cluster median (µs).
+    pub ideal_us: f64,
+    /// `makespan / ideal` — how much straggling amplifies with N.
+    pub slowdown: f64,
+}
+
+/// Piecewise-linear quantile through a digest's frozen tail points.
+/// Clamped monotone so a weighted-mean digest can never hand back an
+/// inverted tail.
+fn digest_quantile_us(d: &MachineDigest, u: f64) -> f64 {
+    let pts = [
+        (0.0, d.p50_us * 0.5),
+        (0.5, d.p50_us),
+        (0.95, d.p95_us),
+        (0.99, d.p99_us),
+        (0.999, d.p999_us),
+        (1.0, d.max_us),
+    ];
+    let mut prev = pts[0];
+    let mut lo = pts[0].1;
+    for &(q, v) in &pts[1..] {
+        let v = v.max(lo);
+        if u <= q {
+            let span = q - prev.0;
+            let frac = if span > 0.0 { (u - prev.0) / span } else { 1.0 };
+            return prev.1 + (v - prev.1) * frac;
+        }
+        prev = (q, v);
+        lo = v;
+    }
+    prev.1
+}
+
+/// Simulate `steps` bulk-synchronous collective rounds over the fleet's
+/// digests. Machines that completed nothing (never routed to) sit the
+/// collective out. Draws are seeded and sequential, so the model is
+/// deterministic for a given digest set.
+pub fn collective_makespan(digests: &[MachineDigest], steps: usize, seed: u64) -> CollectiveSummary {
+    let active: Vec<&MachineDigest> = digests.iter().filter(|d| d.completed > 0).collect();
+    if active.is_empty() || steps == 0 {
+        return CollectiveSummary { steps, ..Default::default() };
+    }
+    // Ideal: every machine at the median of the *median* machine — the
+    // no-variation fleet.
+    let mut p50s: Vec<f64> = active.iter().map(|d| d.p50_us).collect();
+    p50s.sort_by(|a, b| a.partial_cmp(b).expect("p50 is finite"));
+    let median_p50 = p50s[p50s.len() / 2];
+    let mut rng = Rng::new(mix64(seed ^ 0xC0_11EC_71FE));
+    let mut makespan = 0.0;
+    for _ in 0..steps {
+        let mut slowest = 0.0f64;
+        for d in &active {
+            slowest = slowest.max(digest_quantile_us(d, rng.f64()));
+        }
+        makespan += slowest;
+    }
+    let ideal = median_p50 * steps as f64;
+    CollectiveSummary {
+        steps,
+        makespan_us: makespan,
+        ideal_us: ideal,
+        slowdown: if ideal > 0.0 { makespan / ideal } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MS;
+
+    fn digest(p50: f64, p99: f64, completed: u64) -> MachineDigest {
+        MachineDigest {
+            completed,
+            p50_us: p50,
+            p95_us: p99 * 0.8,
+            p99_us: p99,
+            p999_us: p99 * 1.2,
+            max_us: p99 * 2.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn rack_mapping_is_contiguous_and_covers() {
+        assert_eq!(n_racks(16, 8), 2);
+        assert_eq!(n_racks(17, 8), 3);
+        assert_eq!(n_racks(1, 8), 1);
+        for i in 0..17 {
+            let r = rack_of(i, 8);
+            assert_eq!(r, i / 8);
+            assert!(r < n_racks(17, 8));
+        }
+    }
+
+    #[test]
+    fn absorb_streams_into_rack_and_cluster() {
+        // Two synthetic runs into a 2-rack hierarchy: rack recorders
+        // hold only their machines, the cluster holds the union.
+        let names = vec!["all".to_string()];
+        let agg = HierarchyAgg::new(2, 1, 2 * MS, &names);
+        for (i, lat) in [(0usize, MS), (1usize, 3 * MS)] {
+            let mut stats = LatencyStats::new(2 * MS);
+            stats.record(lat);
+            let mut run = crate::workload::webserver::WebRun::default();
+            run.completed = 1;
+            run.tail = stats.summary();
+            run.tenant_stats = vec![stats.clone()];
+            run.stats = stats;
+            agg.absorb(i, &run, 1.0);
+        }
+        let snap = agg.finish(&[1, 1]);
+        assert_eq!(snap.racks.len(), 2);
+        assert_eq!(snap.racks[0].completed(), 1);
+        assert_eq!(snap.racks[1].completed(), 1);
+        assert_eq!(snap.racks[1].violations(), 1);
+        assert_eq!(snap.cluster.completed(), 2);
+        assert_eq!(snap.cluster.violations(), 1);
+        assert_eq!(snap.tenants[0].1.completed(), 2);
+        assert_eq!(snap.digests[0].arrivals, 1);
+        assert_eq!(snap.digests[1].violations, 1);
+    }
+
+    #[test]
+    fn digest_quantile_is_monotone() {
+        let d = digest(100.0, 900.0, 10);
+        let mut prev = -1.0;
+        for i in 0..=100 {
+            let u = i as f64 / 100.0;
+            let q = digest_quantile_us(&d, u);
+            assert!(q >= prev, "quantile inverted at u={u}: {q} < {prev}");
+            prev = q;
+        }
+        assert!((digest_quantile_us(&d, 0.5) - 100.0).abs() < 1e-9);
+        assert!((digest_quantile_us(&d, 1.0) - 1800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn collective_slowdown_amplifies_with_fleet_size() {
+        // Same per-machine distribution, more machines ⇒ the max-of-N
+        // step draw grows ⇒ worse slowdown. The paper's variation claim
+        // at collective scale.
+        let small: Vec<MachineDigest> = (0..2).map(|_| digest(100.0, 400.0, 10)).collect();
+        let large: Vec<MachineDigest> = (0..64).map(|_| digest(100.0, 400.0, 10)).collect();
+        let a = collective_makespan(&small, 200, 7);
+        let b = collective_makespan(&large, 200, 7);
+        assert!(a.slowdown >= 1.0, "slowdown below ideal: {}", a.slowdown);
+        assert!(
+            b.slowdown > a.slowdown,
+            "64 machines ({}) must straggle more than 2 ({})",
+            b.slowdown,
+            a.slowdown
+        );
+    }
+
+    #[test]
+    fn collective_is_deterministic_and_handles_idle_machines() {
+        let mut ds: Vec<MachineDigest> = (0..8).map(|_| digest(100.0, 300.0, 10)).collect();
+        ds.push(MachineDigest::default()); // never routed to
+        let a = collective_makespan(&ds, 50, 42);
+        let b = collective_makespan(&ds, 50, 42);
+        assert_eq!(a.makespan_us.to_bits(), b.makespan_us.to_bits());
+        assert_eq!(a.slowdown.to_bits(), b.slowdown.to_bits());
+        let none = collective_makespan(&[MachineDigest::default()], 50, 42);
+        assert_eq!(none.makespan_us, 0.0);
+        assert_eq!(none.slowdown, 0.0);
+    }
+}

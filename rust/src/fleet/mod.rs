@@ -21,16 +21,42 @@
 //!   web-server run bit for bit (`rust/tests/fleet.rs` pins both
 //!   properties).
 //!
-//! Consumers: the scenario matrix sweeps fleet-size × router as
-//! first-class axes, `metrics::fleet_report` renders per-machine and
-//! cluster rows, `avxfreq fleet` runs one fleet from flags or
-//! `configs/fleet_slo.toml`, and `repro fleetvar` restates Fig 5 as
-//! cross-machine p99 variance under round-robin vs AVX-aware routing.
+//! * [`hierarchy`] — machine → rack → cluster aggregation that *streams*:
+//!   each machine's recorder merges into its rack's and the cluster's
+//!   [`LatencyStats`] the moment the machine finishes, then the
+//!   per-machine run is dropped. A 1000-machine sweep holds O(machines)
+//!   scalar digests plus O(racks + 1) histograms — never a vector of
+//!   retained `WebRun`s.
+//! * [`balancer`] — the closed-loop front-end: per-request timeouts with
+//!   seeded retry-with-backoff, hedged requests after a p99-based delay,
+//!   and a health view that ejects slow machines. Feedback is
+//!   epoch-based (epoch *k + 1* is routed from epoch *k*'s merged
+//!   statistics), which is what lets the closed loop keep the
+//!   byte-identical-at-any-thread-count determinism contract; the
+//!   feedback-disabled configuration reproduces the open-loop bytes
+//!   exactly (differential-tested in `rust/tests/hierfleet.rs`).
+//!
+//! Consumers: the scenario matrix sweeps fleet-size × router × balancer
+//! as first-class axes, `metrics::fleet_report` / `metrics::hier_report`
+//! render per-machine, per-rack, and cluster rows, `avxfreq fleet` runs
+//! one fleet from flags or `configs/fleet_slo.toml` /
+//! `configs/fleet_closed.toml`, `repro fleetvar` restates Fig 5 as
+//! cross-machine p99 variance under round-robin vs AVX-aware routing,
+//! and `repro fleetscale` shows AVX-induced variation amplifying with
+//! fleet size under a bulk-synchronous collective.
 //!
 //! [`LatencyStats`]: crate::traffic::LatencyStats
 
+pub mod balancer;
 pub mod cluster;
+pub mod hierarchy;
 pub mod router;
 
-pub use cluster::{route_stream, run_fleet, FleetCfg, FleetRun};
+pub use balancer::{run_hier_fleet, BalancerCfg, HierFleetCfg};
+pub use cluster::{
+    route_stream, run_fleet, service_est_ns, FleetCfg, FleetRun, DEFAULT_SERVICE_EST_US,
+};
+pub use hierarchy::{
+    collective_makespan, CollectiveSummary, HierFleetRun, HierarchyAgg, MachineDigest,
+};
 pub use router::{Router, RouterSpec};

@@ -51,11 +51,20 @@ impl RouterSpec {
     }
 
     /// Parse a CLI/config router name; `avx_machines` parameterizes the
-    /// partition router.
-    pub fn parse(name: &str, avx_machines: usize) -> anyhow::Result<RouterSpec> {
+    /// partition router and `service_est` (ns per request) the
+    /// least-outstanding backlog estimate. Non-positive estimates are
+    /// rejected here — previously `parse` silently discarded the tuning
+    /// and always returned the hardcoded 300 µs default.
+    pub fn parse(name: &str, avx_machines: usize, service_est: Time) -> anyhow::Result<RouterSpec> {
         Ok(match name {
             "round-robin" | "rr" => RouterSpec::RoundRobin,
-            "least-outstanding" | "least-out" => RouterSpec::least_outstanding(),
+            "least-outstanding" | "least-out" => {
+                anyhow::ensure!(
+                    service_est > 0,
+                    "least-outstanding service estimate must be positive (got {service_est} ns)"
+                );
+                RouterSpec::LeastOutstanding { service_est }
+            }
             "avx-partition" | "avx-part" => RouterSpec::AvxPartition { avx_machines },
             other => anyhow::bail!(
                 "unknown router {other:?} (round-robin|least-outstanding|avx-partition)"
@@ -204,15 +213,34 @@ mod tests {
 
     #[test]
     fn parse_names() {
-        assert_eq!(RouterSpec::parse("rr", 1).unwrap(), RouterSpec::RoundRobin);
+        let est = 300_000; // default 300 µs estimate, in ns
+        assert_eq!(RouterSpec::parse("rr", 1, est).unwrap(), RouterSpec::RoundRobin);
         assert_eq!(
-            RouterSpec::parse("avx-partition", 2).unwrap(),
+            RouterSpec::parse("avx-partition", 2, est).unwrap(),
             RouterSpec::AvxPartition { avx_machines: 2 }
         );
         assert!(matches!(
-            RouterSpec::parse("least-outstanding", 1).unwrap(),
+            RouterSpec::parse("least-outstanding", 1, est).unwrap(),
             RouterSpec::LeastOutstanding { .. }
         ));
-        assert!(RouterSpec::parse("random", 1).is_err());
+        assert!(RouterSpec::parse("random", 1, est).is_err());
+    }
+
+    #[test]
+    fn parse_threads_service_estimate_through() {
+        // Regression: parse used to ignore the tuning and always hand
+        // back the hardcoded 300 µs estimate.
+        assert_eq!(
+            RouterSpec::parse("least-outstanding", 1, 50_000).unwrap(),
+            RouterSpec::LeastOutstanding { service_est: 50_000 }
+        );
+        assert_eq!(
+            RouterSpec::parse("least-out", 1, 2_000_000).unwrap(),
+            RouterSpec::LeastOutstanding { service_est: 2_000_000 }
+        );
+        // Non-positive estimates are rejected, not silently clamped.
+        assert!(RouterSpec::parse("least-outstanding", 1, 0).is_err());
+        // The estimate is irrelevant to (and ignored by) other routers.
+        assert_eq!(RouterSpec::parse("rr", 1, 0).unwrap(), RouterSpec::RoundRobin);
     }
 }

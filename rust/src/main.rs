@@ -70,17 +70,22 @@ usage:
                   [--arrivals poisson,bursty,diurnal,mix,bursty-mix] [--slo-ms 5]
   avxfreq fleet [--config configs/fleet_slo.toml] [--machines N]
                 [--router round-robin|least-outstanding|avx-partition]
-                [--avx-machines K] [--rate R] [--quick] [--seed N] [--threads T]
+                [--avx-machines K] [--service-est-us X] [--rate R]
+                [--quick] [--seed N] [--threads T]
+                [--hier] [--rack-size M] [--collective STEPS]
+                [--closed] [--epochs E] [--timeout-ms X] [--backoff-ms X]
+                [--max-retries R] [--hedge-mult X] [--eject-factor X]
   avxfreq energy [--config configs/energy.toml] [--quick] [--seed N] [--threads T]
                  [--governors intel-legacy,slow-ramp,dim-silicon]
   avxfreq tpc [--config configs/tpc.toml] [--quick] [--seed N] [--threads T]
               [--placements home-core,avx-steer,avx-steer-lazy] [--avx-cores K]
-  avxfreq bench [--quick] [--seed N] [--threads T] [--scenarios single,matrix,fleet,executor]
-                [--out BENCH_6.json] [--min-speedup R]
+  avxfreq bench [--quick] [--seed N] [--threads T]
+                [--scenarios single,matrix,fleet,hier,executor]
+                [--out BENCH_7.json] [--min-speedup R]
   avxfreq serve [--artifacts DIR] [--port 8443]
   avxfreq calibrate [--artifacts DIR]
-experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar energydelay runtimespec fig6
-             ipc fig7 cryptobench ablations";
+experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar fleetscale energydelay
+             runtimespec fig6 ipc fig7 cryptobench ablations";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -360,29 +365,41 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
 /// `avxfreq fleet` — one cluster simulation: N machines behind a
 /// request router, per-machine + cluster tail tables. Defaults to the
 /// fleetvar scenario (bursty multi-tenant mix on uncompressed pages);
-/// `--config` (e.g. `configs/fleet_slo.toml`) replaces the whole
-/// template, flags override on top.
+/// `--config` (e.g. `configs/fleet_slo.toml` or `fleet_closed.toml`)
+/// replaces the whole template, flags override on top. `--closed` (or
+/// `balancer.enabled` in the config) switches to the hierarchical
+/// closed-loop front end — epoch-fed retries, hedging and health
+/// ejection over the machine → rack → cluster streaming aggregation —
+/// and `--hier`/`--rack-size`/`--collective` select the same hierarchy
+/// with the loop left open.
 fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
-    use avxfreq::fleet::{run_fleet, FleetCfg, FleetRun, RouterSpec};
+    use avxfreq::fleet::{
+        run_fleet, run_hier_fleet, BalancerCfg, FleetRun, HierFleetCfg, HierFleetRun, RouterSpec,
+    };
+    use avxfreq::sim::{Time, MS};
     let quick = args.flag("quick");
     let seed = args.get_parse::<u64>("seed", 0x5EED);
     let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let threads = args.get_parse::<usize>("threads", default_threads).max(1);
 
-    let mut fleet = if let Some(path) = args.get("config") {
+    let mut hier = if let Some(path) = args.get("config") {
         let conf = avxfreq::util::config::Config::load(path)?;
-        let mut f = FleetCfg::from_config(&conf)?;
+        let mut h = HierFleetCfg::from_config(&conf)?;
         if args.get("seed").is_some() {
-            f.cfg.seed = seed;
+            h.fleet.cfg.seed = seed;
         }
         if quick {
             // --quick shortens a config-loaded scenario too.
-            avxfreq::repro::fleetvar::apply_quick(&mut f.cfg);
+            avxfreq::repro::fleetvar::apply_quick(&mut h.fleet.cfg);
         }
-        f
+        h
     } else {
-        avxfreq::repro::fleetvar::fleet_cfg(RouterSpec::RoundRobin, quick, seed)
+        HierFleetCfg::new(
+            avxfreq::repro::fleetvar::fleet_cfg(RouterSpec::RoundRobin, quick, seed),
+            BalancerCfg::default(),
+        )
     };
+    let fleet = &mut hier.fleet;
     if let Some(n) = args.get("machines") {
         fleet.machines = n.parse::<usize>()?.max(1);
     }
@@ -395,11 +412,23 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         _ => 1,
     };
     let avx_machines = args.get_parse::<usize>("avx-machines", avx_default);
+    // --service-est-us mirrors --avx-machines for the least-outstanding
+    // router: default from whatever the config selected, override with
+    // the flag, and never silently drop an explicit value.
+    let est_default_us = match fleet.router {
+        RouterSpec::LeastOutstanding { service_est } => service_est as f64 / 1_000.0,
+        _ => avxfreq::fleet::DEFAULT_SERVICE_EST_US,
+    };
+    let service_est =
+        avxfreq::fleet::service_est_ns(args.get_parse::<f64>("service-est-us", est_default_us))?;
     if let Some(name) = args.get("router") {
-        fleet.router = RouterSpec::parse(name, avx_machines)?;
+        fleet.router = RouterSpec::parse(name, avx_machines, service_est)?;
     } else if let RouterSpec::AvxPartition { .. } = fleet.router {
         // Resize an already-selected partition router in place.
         fleet.router = RouterSpec::AvxPartition { avx_machines };
+    } else if let RouterSpec::LeastOutstanding { .. } = fleet.router {
+        // Retune an already-selected least-outstanding router in place.
+        fleet.router = RouterSpec::LeastOutstanding { service_est };
     }
     // An explicit subset size must land on a partition router, whatever
     // combination of config and flags produced the final selection —
@@ -408,6 +437,12 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         args.get("avx-machines").is_none()
             || matches!(fleet.router, RouterSpec::AvxPartition { .. }),
         "--avx-machines only parameterizes the avx-partition router (selected: {})",
+        fleet.router.label()
+    );
+    anyhow::ensure!(
+        args.get("service-est-us").is_none()
+            || matches!(fleet.router, RouterSpec::LeastOutstanding { .. }),
+        "--service-est-us only parameterizes the least-outstanding router (selected: {})",
         fleet.router.label()
     );
     if let Some(rate) = args.get("rate") {
@@ -429,20 +464,117 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             process: process.with_mean_rate(rate),
         };
     }
-    fleet.validate()?;
+    // Closed-loop balancer flags. `--closed` flips the switch; the
+    // tuning flags refine an already-enabled loop (from the flag or the
+    // config's `[balancer]` table) and are rejected otherwise, so a
+    // typo can't silently run open-loop.
+    if args.flag("closed") {
+        hier.balancer.enabled = true;
+    }
+    let ms_flag = |name: &str, current: Time| -> Time {
+        let ms = args.get_parse::<f64>(name, current as f64 / MS as f64);
+        (ms * MS as f64).round() as Time
+    };
+    hier.balancer.epochs = args.get_parse::<usize>("epochs", hier.balancer.epochs);
+    hier.balancer.timeout = ms_flag("timeout-ms", hier.balancer.timeout);
+    hier.balancer.retry_backoff = ms_flag("backoff-ms", hier.balancer.retry_backoff);
+    hier.balancer.max_retries = args.get_parse::<u32>("max-retries", hier.balancer.max_retries);
+    hier.balancer.hedge_p99_mult =
+        args.get_parse::<f64>("hedge-mult", hier.balancer.hedge_p99_mult);
+    hier.balancer.eject_factor = args.get_parse::<f64>("eject-factor", hier.balancer.eject_factor);
+    let tuning = ["epochs", "timeout-ms", "backoff-ms", "max-retries", "hedge-mult", "eject-factor"];
+    anyhow::ensure!(
+        hier.balancer.enabled || tuning.iter().all(|f| args.get(f).is_none()),
+        "--epochs/--timeout-ms/--backoff-ms/--max-retries/--hedge-mult/--eject-factor tune \
+         the closed loop; pass --closed or set balancer.enabled in the config"
+    );
+    hier.machines_per_rack = args.get_parse::<usize>("rack-size", hier.machines_per_rack).max(1);
+    hier.collective_steps = args.get_parse::<usize>("collective", hier.collective_steps);
+    // The hierarchy is worth the report change even with the loop open:
+    // explicit `--hier`, a rack-size override, or a collective request
+    // all select it; otherwise the classic flat-fleet path runs
+    // byte-identically to previous releases.
+    let use_hier = hier.balancer.enabled
+        || args.flag("hier")
+        || args.get("rack-size").is_some()
+        || args.get("collective").is_some();
+    hier.validate()?;
 
     eprintln!(
-        "[avxfreq] fleet: {} machines × {} cores behind {} across up to {} threads (seed {:#x})…",
-        fleet.machines,
-        fleet.cfg.cores,
-        fleet.router.label(),
-        threads.min(fleet.machines),
+        "[avxfreq] fleet: {} machines × {} cores behind {} ({}) across up to {} threads \
+         (seed {:#x})…",
+        hier.fleet.machines,
+        hier.fleet.cfg.cores,
+        hier.fleet.router.label(),
+        hier.balancer.label(),
+        threads.min(hier.fleet.machines),
         // The effective seed (possibly from the config file), not the
         // CLI default — this line is what users copy to reproduce runs.
-        fleet.cfg.seed
+        hier.fleet.cfg.seed
     );
     let t0 = std::time::Instant::now();
-    let run = run_fleet(&fleet, threads);
+    if use_hier {
+        let run = run_hier_fleet(&hier, threads);
+        let pairs: Vec<(&str, &HierFleetRun)> = vec![("fleet", &run)];
+        let table = metrics::hier_report(&pairs);
+        print!("{}", table.render());
+        let s = run.p99_summary();
+        println!(
+            "\ncluster: {} done, {} dropped, p99 {:.0} µs, SLO ≤ {:.1} ms violated {:.2}% \
+             ({} exact); cross-machine p99 σ {:.1} µs, spread {:.1} µs",
+            run.completed,
+            run.dropped,
+            run.tail.p99_us,
+            run.tail.slo_us / 1_000.0,
+            run.tail.slo_violation_frac * 100.0,
+            run.violations,
+            s.stddev(),
+            run.p99_spread_us(),
+        );
+        if !run.outcomes.is_noop() {
+            let o = &run.outcomes;
+            println!(
+                "front-end: {} timeouts observed, {} retries issued ({} abandoned), \
+                 {} hedges, {} ejections, {} readmissions",
+                o.timeouts_observed,
+                o.retries_issued,
+                o.retries_abandoned,
+                o.hedges_issued,
+                o.ejections,
+                o.readmissions
+            );
+        }
+        if let Some(c) = &run.collective {
+            println!(
+                "collective: {} bulk-synchronous steps, makespan {:.1} ms vs ideal {:.1} ms \
+                 — slowdown {:.2}",
+                c.steps,
+                c.makespan_us / 1_000.0,
+                c.ideal_us / 1_000.0,
+                c.slowdown
+            );
+        }
+        for (tenant, stats) in &run.tenant_stats {
+            let t = stats.summary();
+            println!(
+                "  tenant {tenant:<8} p50 {:.0} µs  p99 {:.0} µs  slo {:.2}%  ({} done)",
+                t.p50_us,
+                t.p99_us,
+                t.slo_violation_frac * 100.0,
+                t.completed
+            );
+        }
+        let path = table.save_csv("fleet_hier")?;
+        eprintln!(
+            "[avxfreq] wrote {} ({} machines in {} racks in {:.1}s wallclock)",
+            path.display(),
+            run.machines,
+            run.n_racks(),
+            t0.elapsed().as_secs_f64()
+        );
+        return Ok(());
+    }
+    let run = run_fleet(&hier.fleet, threads);
     let pairs: Vec<(&str, &FleetRun)> = vec![("fleet", &run)];
     let table = metrics::fleet_report(&pairs);
     print!("{}", table.render());
@@ -679,7 +811,7 @@ fn cmd_tpc(args: &Args) -> anyhow::Result<()> {
 
 /// `avxfreq bench` — time the canonical scenarios with the hot paths on
 /// (the default simulator) and off (the baseline), print the comparison
-/// table, and write the `BENCH_6.json` perf-trajectory record. Exits
+/// table, and write the `BENCH_7.json` perf-trajectory record. Exits
 /// non-zero if any scenario's two legs are not output-identical — the
 /// harness is also the fast-path equivalence gate (`ci.sh` runs
 /// `bench --quick`). A speedup below `--min-speedup` (default 0 = off;
@@ -703,7 +835,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             .collect();
         anyhow::ensure!(!cfg.scenarios.is_empty(), "--scenarios must name at least one scenario");
     }
-    let out_path = args.get_or("out", "BENCH_6.json").to_string();
+    let out_path = args.get_or("out", "BENCH_7.json").to_string();
     let min_speedup = args.get_parse::<f64>("min-speedup", 0.0);
 
     eprintln!(

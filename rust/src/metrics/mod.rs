@@ -4,7 +4,7 @@
 
 use crate::bench::BenchRow;
 use crate::cpu::PerfCounters;
-use crate::fleet::FleetRun;
+use crate::fleet::{FleetRun, HierFleetRun};
 use crate::scenario::CellResult;
 use crate::sched::machine::Machine;
 use crate::util::table::{fmt_f, Table};
@@ -354,6 +354,62 @@ pub fn fleet_report(fleets: &[(&str, &FleetRun)]) -> Table {
             f.dropped.to_string(),
             fmt_f(s.stddev(), 1),
             fmt_f(f.p99_spread_us(), 1),
+        ]);
+    }
+    t
+}
+
+/// Hierarchical fleet table: one row per rack, then the cluster row
+/// carrying the merged tail plus the closed-loop outcome counters
+/// (timeouts / retries / hedges / ejections — `-` on rack rows, which
+/// have no front-end of their own). Rack rows summarize the streamed
+/// per-rack recorders; the cluster row renders the precomputed
+/// [`crate::traffic::TailSummary`], so the golden-file test can pin the
+/// formatting on synthetic values (same pattern as [`EnergyRow`]).
+pub fn hier_report(fleets: &[(&str, &HierFleetRun)]) -> Table {
+    let mut t = Table::new(
+        "Hierarchical fleet — per-rack and cluster tails, front-end outcomes",
+        &[
+            "fleet", "router", "balancer", "scope", "done", "p50 µs", "p99 µs", "p999 µs",
+            "slo %", "drops", "timeouts", "retries", "hedges", "ejects",
+        ],
+    );
+    for (label, f) in fleets {
+        for (i, rack) in f.racks.iter().enumerate() {
+            let s = rack.summary();
+            t.row(&[
+                label.to_string(),
+                f.router.clone(),
+                f.balancer.clone(),
+                format!("rack{i}"),
+                s.completed.to_string(),
+                fmt_f(s.p50_us, 0),
+                fmt_f(s.p99_us, 0),
+                fmt_f(s.p999_us, 0),
+                fmt_f(s.slo_violation_frac * 100.0, 1),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ]);
+        }
+        let o = &f.outcomes;
+        t.row(&[
+            label.to_string(),
+            f.router.clone(),
+            f.balancer.clone(),
+            "cluster".to_string(),
+            f.completed.to_string(),
+            fmt_f(f.tail.p50_us, 0),
+            fmt_f(f.tail.p99_us, 0),
+            fmt_f(f.tail.p999_us, 0),
+            fmt_f(f.tail.slo_violation_frac * 100.0, 1),
+            f.dropped.to_string(),
+            o.timeouts_observed.to_string(),
+            format!("{}/{}", o.retries_issued, o.retries_abandoned),
+            o.hedges_issued.to_string(),
+            o.ejections.to_string(),
         ]);
     }
     t

@@ -12,6 +12,7 @@ pub mod energydelay;
 pub mod runtimespec;
 pub mod fig6_frequency;
 pub mod fig7_overhead;
+pub mod fleetscale;
 pub mod fleetvar;
 pub mod ipc_table;
 pub mod cryptobench;
@@ -58,13 +59,15 @@ impl Repro {
 /// All experiment ids, in paper order (`fig5ms` is the multi-socket
 /// extension of fig5, `fig5tail` its tail-latency restatement,
 /// `fleetvar` its fleet-scale restatement as cross-machine p99 variance
-/// under round-robin vs AVX-aware routing, `energydelay` the
+/// under round-robin vs AVX-aware routing, `fleetscale` the max-of-n
+/// amplification of that variance under a bulk-synchronous collective
+/// as the fleet grows, `energydelay` the
 /// energy-delay-product restatement across DVFS governors, and
 /// `runtimespec` the runtime-level vs kernel-level core-specialization
 /// head-to-head through the thread-per-core executor).
 pub const ALL: &[&str] = &[
-    "fig1", "fig2", "fig3", "fig5", "fig5ms", "fig5tail", "fleetvar", "energydelay",
-    "runtimespec", "fig6", "ipc", "fig7", "cryptobench", "ablations",
+    "fig1", "fig2", "fig3", "fig5", "fig5ms", "fig5tail", "fleetvar", "fleetscale",
+    "energydelay", "runtimespec", "fig6", "ipc", "fig7", "cryptobench", "ablations",
 ];
 
 /// Dispatch by id. `quick` trades precision for speed (shorter windows).
@@ -77,6 +80,7 @@ pub fn run(id: &str, quick: bool, seed: u64) -> anyhow::Result<Repro> {
         "fig5ms" => Ok(fig5_multisocket::run(quick, seed)),
         "fig5tail" => Ok(fig5tail::run(quick, seed)),
         "fleetvar" => Ok(fleetvar::run(quick, seed)),
+        "fleetscale" => Ok(fleetscale::run(quick, seed)),
         "energydelay" => Ok(energydelay::run(quick, seed)),
         "runtimespec" => Ok(runtimespec::run(quick, seed)),
         "fig6" => Ok(fig6_frequency::run(quick, seed)),

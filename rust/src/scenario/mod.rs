@@ -45,7 +45,10 @@
 //! ```
 
 use crate::cpu::{GovernorSpec, Topology};
-use crate::fleet::{run_fleet, FleetCfg, FleetRun, RouterSpec};
+use crate::fleet::{
+    run_fleet, run_hier_fleet, BalancerCfg, FleetCfg, FleetRun, HierFleetCfg, HierFleetRun,
+    RouterSpec,
+};
 use crate::sched::PolicyKind;
 use crate::sim::{Time, MS, SEC};
 use crate::tpc::{PlacementSpec, TpcParams};
@@ -308,6 +311,9 @@ pub struct Scenario {
     /// How requests reach workers: shared-queue kernel scheduling or the
     /// thread-per-core executor.
     pub executor: ExecutorSpec,
+    /// Closed-loop front-end balancer (disabled = the classic open-loop
+    /// front-end; enabled cells run the hierarchical fleet layer).
+    pub balancer: BalancerCfg,
     /// Per-cell seed: a pure function of the base seed and `index`.
     pub seed: u64,
     pub cfg: WebCfg,
@@ -321,6 +327,14 @@ impl Scenario {
     /// can never share a label.
     pub fn uses_fleet_layer(&self) -> bool {
         self.fleet > 1 || self.router != RouterSpec::RoundRobin
+    }
+
+    /// Whether this cell runs through the hierarchical closed-loop
+    /// layer ([`run_hier_fleet`]) — checked before
+    /// [`Scenario::uses_fleet_layer`] in the dispatch, since a
+    /// feedback-enabled cell needs the epoch loop at any fleet size.
+    pub fn uses_hier_layer(&self) -> bool {
+        self.balancer.enabled
     }
 
     /// One-line identifier for notes and logs.
@@ -343,6 +357,9 @@ impl Scenario {
         if self.executor != ExecutorSpec::Kernel {
             s.push_str(&format!("/{}", self.executor.label()));
         }
+        if self.balancer.enabled {
+            s.push_str(&format!("/{}", self.balancer.label()));
+        }
         s
     }
 }
@@ -356,6 +373,10 @@ pub struct CellResult {
     pub scenario: Scenario,
     pub run: WebRun,
     pub fleet: Option<FleetRun>,
+    /// Hierarchical-fleet result for feedback-enabled cells
+    /// (`scenario.balancer.enabled`); `run` is then the synthesized
+    /// cluster-level [`WebRun`].
+    pub hier: Option<HierFleetRun>,
 }
 
 /// All cells of an executed matrix, in expansion order.
@@ -393,6 +414,25 @@ impl MatrixResult {
     /// Render the fleet table as aligned text.
     pub fn render_fleet(&self) -> String {
         self.fleet_table().render()
+    }
+
+    /// Per-rack + cluster rows for every closed-loop cell (see
+    /// [`crate::metrics::hier_report`]); empty-bodied table when the
+    /// matrix has no feedback-enabled cells.
+    pub fn hier_table(&self) -> Table {
+        let labeled: Vec<(String, &HierFleetRun)> = self
+            .cells
+            .iter()
+            .filter_map(|c| c.hier.as_ref().map(|h| (c.scenario.index.to_string(), h)))
+            .collect();
+        let pairs: Vec<(&str, &HierFleetRun)> =
+            labeled.iter().map(|(s, h)| (s.as_str(), *h)).collect();
+        crate::metrics::hier_report(&pairs)
+    }
+
+    /// Render the hierarchical-fleet table as aligned text.
+    pub fn render_hier(&self) -> String {
+        self.hier_table().render()
     }
 
     /// Render the comparison table as aligned text.
@@ -476,6 +516,11 @@ pub struct ScenarioMatrix {
     /// with annotations forced on — the runtime needs the AVX marks the
     /// kernel's `unmodified` policy would otherwise drop.
     pub executors: Vec<ExecutorSpec>,
+    /// Front-end balancers to sweep (default `[open-loop]`, which keeps
+    /// the expansion byte-identical to the pre-balancer matrix).
+    /// Feedback-enabled cells run through [`run_hier_fleet`]'s epoch
+    /// loop at any fleet size.
+    pub balancers: Vec<BalancerCfg>,
     /// Latency SLO threshold applied to every cell.
     pub slo: Time,
     /// Hot-path optimizations for every cell's machines (bit-exact
@@ -503,6 +548,7 @@ impl ScenarioMatrix {
             routers: vec![RouterSpec::RoundRobin],
             governors: vec![GovernorSpec::IntelLegacy],
             executors: vec![ExecutorSpec::Kernel],
+            balancers: vec![BalancerCfg::default()],
             slo: DEFAULT_SLO,
             fast_paths: true,
             base_seed,
@@ -616,6 +662,7 @@ impl ScenarioMatrix {
             * self.routers.len()
             * self.governors.len()
             * self.executors.len()
+            * self.balancers.len()
     }
 
     /// True when any axis is empty.
@@ -624,11 +671,12 @@ impl ScenarioMatrix {
     }
 
     /// Expand the cartesian product, topology-major (load level, arrival
-    /// process, fleet size, router, governor, and executor are the
-    /// innermost axes, in that order — with the default `[1] ×
-    /// [RoundRobin]` fleet axes, `[IntelLegacy]` governor axis, and
-    /// `[Kernel]` executor axis the expansion is exactly the pre-fleet
-    /// cell order), into runnable cells.
+    /// process, fleet size, router, governor, executor, and balancer are
+    /// the innermost axes, in that order — with the default `[1] ×
+    /// [RoundRobin]` fleet axes, `[IntelLegacy]` governor axis,
+    /// `[Kernel]` executor axis, and `[open-loop]` balancer axis the
+    /// expansion is exactly the pre-fleet cell order), into runnable
+    /// cells.
     pub fn cells(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         for topo in &self.topologies {
@@ -640,7 +688,16 @@ impl ScenarioMatrix {
                                 for &fleet in &self.fleet_sizes {
                                     for &router in &self.routers {
                                         for &governor in &self.governors {
-                                            for &executor in &self.executors {
+                                            // Executor × balancer: the two
+                                            // innermost axes, flattened to
+                                            // keep the nesting depth sane.
+                                            for (&executor, &balancer) in
+                                                self.executors.iter().flat_map(|e| {
+                                                    self.balancers
+                                                        .iter()
+                                                        .map(move |b| (e, b))
+                                                })
+                                            {
                                                 let index = out.len();
                                                 let seed = mix64(
                                                     self.base_seed
@@ -717,6 +774,7 @@ impl ScenarioMatrix {
                                                     router,
                                                     governor,
                                                     executor,
+                                                    balancer,
                                                     seed,
                                                     cfg,
                                                 });
@@ -739,17 +797,19 @@ impl ScenarioMatrix {
     /// cell durations cannot skew the result: outputs are keyed by cell
     /// index and each cell is seeded independently of scheduling.
     ///
-    /// Size-1 round-robin cells run the single-machine simulator
-    /// directly (bit-identical to the pre-fleet matrix); any other
-    /// fleet/router combination runs [`run_fleet`] — serially within the
-    /// cell, since the cells themselves already saturate the thread
-    /// pool — and reports the cluster-level [`WebRun`] plus the full
-    /// [`FleetRun`].
+    /// Size-1 round-robin open-loop cells run the single-machine
+    /// simulator directly (bit-identical to the pre-fleet matrix);
+    /// feedback-enabled cells run [`run_hier_fleet`]'s epoch loop; any
+    /// other fleet/router combination runs [`run_fleet`] — serially
+    /// within the cell, since the cells themselves already saturate the
+    /// thread pool — and reports the cluster-level [`WebRun`] plus the
+    /// full [`FleetRun`] / [`HierFleetRun`].
     pub fn run(&self, threads: usize) -> MatrixResult {
         let cells = self.cells();
         let n_threads = threads.max(1).min(cells.len().max(1));
         let cursor = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<(WebRun, Option<FleetRun>)>>> =
+        type CellOut = (WebRun, Option<FleetRun>, Option<HierFleetRun>);
+        let slots: Vec<Mutex<Option<CellOut>>> =
             cells.iter().map(|_| Mutex::new(None)).collect();
         std::thread::scope(|scope| {
             for _ in 0..n_threads {
@@ -759,12 +819,18 @@ impl ScenarioMatrix {
                         break;
                     }
                     let s = &cells[i];
-                    let result = if !s.uses_fleet_layer() {
-                        (run_webserver(&s.cfg), None)
+                    let result = if s.uses_hier_layer() {
+                        let fcfg = FleetCfg::new(s.fleet, s.router, s.cfg.clone());
+                        let mut hcfg = HierFleetCfg::new(fcfg, s.balancer);
+                        hcfg.machines_per_rack = s.fleet.max(1).min(8);
+                        let h = run_hier_fleet(&hcfg, 1);
+                        (h.cluster_run(&s.workload), None, Some(h))
+                    } else if !s.uses_fleet_layer() {
+                        (run_webserver(&s.cfg), None, None)
                     } else {
                         let fcfg = FleetCfg::new(s.fleet, s.router, s.cfg.clone());
                         let f = run_fleet(&fcfg, 1);
-                        (f.cluster_run(), Some(f))
+                        (f.cluster_run(), Some(f), None)
                     };
                     *slots[i].lock().expect("slot poisoned") = Some(result);
                 });
@@ -774,11 +840,11 @@ impl ScenarioMatrix {
             .into_iter()
             .zip(slots)
             .map(|(scenario, slot)| {
-                let (run, fleet) = slot
+                let (run, fleet, hier) = slot
                     .into_inner()
                     .expect("slot poisoned")
                     .expect("every cell claimed and executed");
-                CellResult { scenario, run, fleet }
+                CellResult { scenario, run, fleet, hier }
             })
             .collect();
         MatrixResult { cells }
@@ -951,6 +1017,33 @@ mod tests {
             }
             other => panic!("tpc cell must carry LoadMode::Executor, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn balancer_axis_expands_innermost_and_defaults_to_open_loop() {
+        // Default axes: every cell is open-loop and the expansion is
+        // exactly the pre-balancer cell order (same count, same seeds —
+        // the matrix-level differential anchor).
+        let classic = ScenarioMatrix::default_sweep(true, 7);
+        assert!(classic.cells().iter().all(|c| !c.balancer.enabled));
+        assert_eq!(classic.cells().len(), 8);
+
+        let mut m = ScenarioMatrix::default_sweep(true, 7);
+        m.topologies.truncate(1);
+        m.policies.truncate(1);
+        m.isas.truncate(1);
+        m.balancers = vec![BalancerCfg::default(), BalancerCfg::closed()];
+        let cells = m.cells();
+        assert_eq!(cells.len(), 2);
+        assert!(!cells[0].uses_hier_layer());
+        assert!(!cells[0].label().contains("closed"));
+        assert!(cells[1].uses_hier_layer());
+        assert!(cells[1].label().ends_with("/closed(4ep)"));
+        // A feedback-enabled cell routes through the hier layer even at
+        // fleet size 1 / round-robin (uses_hier_layer is checked first
+        // in the dispatch).
+        assert_eq!(cells[1].fleet, 1);
+        assert!(!cells[1].uses_fleet_layer());
     }
 
     #[test]

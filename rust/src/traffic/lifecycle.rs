@@ -134,6 +134,47 @@ pub struct TailSummary {
     pub slo_violation_frac: f64,
 }
 
+/// Closed-loop front-end outcome accounting: what the balancer *did* in
+/// response to the observed latency distribution, kept separate from the
+/// latency recorders so open-loop runs stay untouched. All counters are
+/// exact event counts, so `merge` is plain addition and obeys the same
+/// union laws as [`LatencyStats::merge`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FrontendOutcomes {
+    /// Completions the front-end classified as timed out (estimated from
+    /// the observed latency distribution at epoch boundaries).
+    pub timeouts_observed: u64,
+    /// Retry arrivals injected into a later epoch (attempt ≥ 1).
+    pub retries_issued: u64,
+    /// Timed-out requests already at the retry cap, given up on.
+    pub retries_abandoned: u64,
+    /// Hedge duplicates issued after the p99-based hedge delay.
+    pub hedges_issued: u64,
+    /// Machine-epochs ejected from the healthy set.
+    pub ejections: u64,
+    /// Machine-epochs readmitted after recovering.
+    pub readmissions: u64,
+}
+
+impl FrontendOutcomes {
+    /// Fold another accounting record into this one (exact counters add).
+    pub fn merge(&mut self, other: &FrontendOutcomes) {
+        self.timeouts_observed += other.timeouts_observed;
+        self.retries_issued += other.retries_issued;
+        self.retries_abandoned += other.retries_abandoned;
+        self.hedges_issued += other.hedges_issued;
+        self.ejections += other.ejections;
+        self.readmissions += other.readmissions;
+    }
+
+    /// True when the balancer took no action at all — the open-loop
+    /// differential (`rust/tests/hierfleet.rs`) asserts this on the
+    /// feedback-disabled path.
+    pub fn is_noop(&self) -> bool {
+        *self == FrontendOutcomes::default()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,5 +255,27 @@ mod tests {
     fn merge_rejects_mismatched_slo() {
         let mut a = LatencyStats::new(MS);
         a.merge(&LatencyStats::new(2 * MS));
+    }
+
+    #[test]
+    fn frontend_outcomes_merge_adds_and_noop_detects() {
+        let mut a = FrontendOutcomes {
+            timeouts_observed: 3,
+            retries_issued: 2,
+            retries_abandoned: 1,
+            hedges_issued: 4,
+            ejections: 1,
+            readmissions: 0,
+        };
+        let b = FrontendOutcomes { timeouts_observed: 7, readmissions: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.timeouts_observed, 10);
+        assert_eq!(a.retries_issued, 2);
+        assert_eq!(a.readmissions, 2);
+        assert!(!a.is_noop());
+        assert!(FrontendOutcomes::default().is_noop());
+        let mut z = FrontendOutcomes::default();
+        z.merge(&FrontendOutcomes::default());
+        assert!(z.is_noop(), "merging no-ops stays a no-op");
     }
 }

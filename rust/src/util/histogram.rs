@@ -65,7 +65,11 @@ impl LogHistogram {
     }
 
     pub fn record(&mut self, v: u64) {
-        let i = bucket_index(v);
+        // `new()` sizes the vector for values up to 2^63; anything larger
+        // (bucket_index(u64::MAX) = 1919 vs the 1889 allocated) clamps
+        // into the top bucket. Only the bucketed percentile loses
+        // precision there — `sum`, `max`, and `min` stay exact.
+        let i = bucket_index(v).min(self.buckets.len() - 1);
         self.buckets[i] += 1;
         self.count += 1;
         self.sum += v as u128;
@@ -305,6 +309,71 @@ mod tests {
         assert_eq!(h.report(), fresh.report());
         assert_eq!(h.mean(), fresh.mean());
         assert_eq!(h.min(), fresh.min());
+    }
+
+    #[test]
+    fn oversized_values_clamp_into_top_bucket() {
+        // Regression: `new()` allocates bucket_index(u64::MAX / 2) + 2
+        // buckets, but bucket_index(u64::MAX) is larger — recording any
+        // value ≥ 2^63 used to index out of bounds and panic.
+        let mut h = LogHistogram::new();
+        h.record(u64::MAX);
+        h.record(1u64 << 63);
+        h.record((1u64 << 63) + 12345);
+        h.record(100);
+        assert_eq!(h.count(), 4);
+        // sum / max / min stay exact even for clamped values.
+        let expect_sum = u64::MAX as u128 + (1u128 << 63) + ((1u128 << 63) + 12345) + 100;
+        assert!((h.mean() - expect_sum as f64 / 4.0).abs() / h.mean() < 1e-9);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.min(), 100);
+        // The top percentile reports the clamp bucket's lower bound (2^63),
+        // the documented bucketed underestimate — but never panics.
+        assert_eq!(h.percentile(100.0), 1u64 << 63);
+        assert!(h.percentile(99.9) >= 1u64 << 62);
+        // fraction_above with an oversized threshold stays in range.
+        assert_eq!(h.fraction_above(u64::MAX), 0.0);
+        assert!((h.fraction_above(1000) - 0.75).abs() < 1e-12);
+        // Merging histograms holding clamped values is panic-free and
+        // matches recording the union directly.
+        let mut a = LogHistogram::new();
+        a.record(u64::MAX);
+        let mut b = LogHistogram::new();
+        b.record(u64::MAX - 7);
+        a.merge(&b);
+        let mut u = LogHistogram::new();
+        u.record(u64::MAX);
+        u.record(u64::MAX - 7);
+        assert_eq!(a.count(), u.count());
+        assert_eq!(a.max(), u.max());
+        assert_eq!(a.percentile(50.0), u.percentile(50.0));
+    }
+
+    #[test]
+    fn empty_histogram_merge_edge_cases() {
+        // min() uses u64::MAX as its "nothing recorded" sentinel; these
+        // pin that the sentinel never leaks through a merge in either
+        // direction (previously only implicitly covered).
+        let mut empty = LogHistogram::new();
+        let mut full = LogHistogram::new();
+        full.record(500);
+        full.record(9000);
+        // empty.merge(full): adopts the other's min/max exactly.
+        empty.merge(&full);
+        assert_eq!(empty.count(), 2);
+        assert_eq!(empty.min(), 500);
+        assert_eq!(empty.max(), 9000);
+        // empty.merge(empty): still reports the safe zeroes.
+        let mut e2 = LogHistogram::new();
+        e2.merge(&LogHistogram::new());
+        assert_eq!(e2.count(), 0);
+        assert_eq!(e2.min(), 0);
+        assert_eq!(e2.max(), 0);
+        assert_eq!(e2.percentile(99.0), 0);
+        // ...and recording afterwards behaves like a fresh histogram.
+        e2.record(77);
+        assert_eq!(e2.min(), 77);
+        assert_eq!(e2.max(), 77);
     }
 
     #[test]

@@ -729,6 +729,39 @@ pub struct WebRun {
     pub adaptive_changes: u64,
 }
 
+impl Default for WebRun {
+    /// An all-zero run (empty recorders at [`DEFAULT_SLO`]) — the base
+    /// for synthetic rows in report/golden tests and digest unit tests.
+    fn default() -> Self {
+        WebRun {
+            cfg_name: String::new(),
+            throughput_rps: 0.0,
+            avg_ghz: 0.0,
+            ipc: 0.0,
+            insns_per_req: 0.0,
+            tail: TailSummary::default(),
+            tenant_tails: Vec::new(),
+            stats: LatencyStats::new(DEFAULT_SLO),
+            tenant_stats: Vec::new(),
+            dropped: 0,
+            type_changes_per_sec: 0.0,
+            migrations_per_sec: 0.0,
+            cross_socket_migrations_per_sec: 0.0,
+            runtime_steered: 0,
+            runtime_migrations: 0,
+            runtime_migrations_per_sec: 0.0,
+            runtime_preemptions: 0,
+            active_energy_j: 0.0,
+            idle_energy_j: 0.0,
+            throttle_ratio: 0.0,
+            license_share: [0.0; 3],
+            completed: 0,
+            final_avx_cores: 0,
+            adaptive_changes: 0,
+        }
+    }
+}
+
 impl WebRun {
     /// Total energy consumed over the measurement window (J).
     pub fn energy_j(&self) -> f64 {

@@ -10,15 +10,16 @@
 //! `UPDATE_GOLDEN=1 cargo test --test golden_report`.
 
 use avxfreq::cpu::GovernorSpec;
-use avxfreq::fleet::RouterSpec;
-use avxfreq::metrics::{matrix_report, tail_report};
+use avxfreq::fleet::{BalancerCfg, HierFleetRun, RouterSpec};
+use avxfreq::metrics::{hier_report, matrix_report, tail_report};
+use avxfreq::repro::fleetscale::{self, ScaleRow};
 use avxfreq::scenario::{
     ArrivalSpec, CellResult, ExecutorSpec, PolicySpec, Scenario, ScenarioMatrix, TopologySpec,
     WorkloadSpec,
 };
 use avxfreq::sched::PolicyKind;
 use avxfreq::sim::MS;
-use avxfreq::traffic::{LatencyStats, TailSummary};
+use avxfreq::traffic::{FrontendOutcomes, LatencyStats, TailSummary};
 use avxfreq::workload::crypto::Isa;
 use avxfreq::workload::webserver::{WebCfg, WebRun};
 
@@ -60,6 +61,7 @@ fn cell(
         router: RouterSpec::RoundRobin,
         governor: GovernorSpec::IntelLegacy,
         executor: ExecutorSpec::Kernel,
+        balancer: BalancerCfg::default(),
         seed: 7,
         cfg: WebCfg::paper_default(isa, PolicyKind::Unmodified),
     };
@@ -90,7 +92,7 @@ fn cell(
         final_avx_cores: 2,
         adaptive_changes: 0,
     };
-    CellResult { scenario, run, fleet: None }
+    CellResult { scenario, run, fleet: None, hier: None }
 }
 
 /// Two fixed cells: a single-tenant Poisson cell and a two-tenant bursty
@@ -147,6 +149,89 @@ fn matrix_report_matches_snapshot() {
 #[test]
 fn tail_report_matches_snapshot() {
     check_golden("tail_report", &tail_report(&synthetic_cells()).render());
+}
+
+/// Synthetic hierarchical run pinning `metrics::hier_report`: two racks
+/// whose recorders each hold a single value (a single-value recorder's
+/// percentiles are exact, so the rack rows are fully predictable) plus
+/// a hand-written cluster tail and front-end outcome counters.
+fn synthetic_hier_run() -> HierFleetRun {
+    let mut rack0 = LatencyStats::new(5 * MS);
+    rack0.record(1_500 * 1_000); // 1500 µs, within SLO
+    let mut rack1 = LatencyStats::new(5 * MS);
+    rack1.record(2_500 * 1_000); // 2500 µs, within SLO
+    HierFleetRun {
+        router: "rr".to_string(),
+        balancer: "closed(4ep)".to_string(),
+        machines: 4,
+        machines_per_rack: 2,
+        digests: Vec::new(),
+        racks: vec![rack0, rack1],
+        stats: LatencyStats::new(5 * MS),
+        tail: tail(60_000, 250.0, 1_250.0, 2_000.0, 4_500.0, 12_000.0, 0.109375),
+        tenant_stats: Vec::new(),
+        outcomes: FrontendOutcomes {
+            timeouts_observed: 12,
+            retries_issued: 9,
+            retries_abandoned: 3,
+            hedges_issued: 7,
+            ejections: 1,
+            readmissions: 1,
+        },
+        completed: 60_000,
+        dropped: 25,
+        violations: 6_562,
+        measure_secs: 2.0,
+        collective: None,
+    }
+}
+
+#[test]
+fn hier_report_matches_snapshot() {
+    let run = synthetic_hier_run();
+    check_golden("hier_report", &hier_report(&[("fleet", &run)]).render());
+}
+
+#[test]
+fn fleetscale_report_matches_snapshot() {
+    // Values chosen exactly representable at the printed precision so
+    // the rendering is independent of float-rounding ties.
+    let rows = vec![
+        ScaleRow {
+            arm: "rr/unmod".to_string(),
+            machines: 2,
+            fleet_p99_us: 5_000.0,
+            sigma_us: 120.5,
+            spread_us: 340.0,
+            slo_pct: 12.5,
+            steps: 500,
+            makespan_ms: 2_750.0,
+            slowdown: 1.1,
+        },
+        ScaleRow {
+            arm: "rr/unmod".to_string(),
+            machines: 16,
+            fleet_p99_us: 9_000.0,
+            sigma_us: 480.3,
+            spread_us: 1_250.0,
+            slo_pct: 18.8,
+            steps: 500,
+            makespan_ms: 4_125.0,
+            slowdown: 1.65,
+        },
+        ScaleRow {
+            arm: "avx-part/core-spec".to_string(),
+            machines: 16,
+            fleet_p99_us: 5_500.0,
+            sigma_us: 95.5,
+            spread_us: 310.0,
+            slo_pct: 6.2,
+            steps: 500,
+            makespan_ms: 2_887.5,
+            slowdown: 1.15,
+        },
+    ];
+    check_golden("fleetscale_report", &fleetscale::table(&rows).render());
 }
 
 /// The renderer side of the determinism acceptance criterion: a real

@@ -1,0 +1,402 @@
+//! Integration tests for the hierarchical closed-loop fleet layer:
+//! merge laws for the *streaming* machine → rack → cluster aggregation
+//! (absorbing runs as they finish, in any completion order, must equal
+//! a concatenated single-pass merge), the feedback-disabled
+//! differential (the open-loop hierarchy reproduces the flat fleet's
+//! bytes exactly), closed-loop determinism across OS thread counts,
+//! each feedback mechanism demonstrably firing, and the O(machines)
+//! memory shape that makes wide sweeps possible.
+
+use avxfreq::fleet::{
+    run_fleet, run_hier_fleet, BalancerCfg, FleetCfg, HierFleetCfg, HierFleetRun, HierarchyAgg,
+    MachineDigest, RouterSpec,
+};
+use avxfreq::metrics::hier_report;
+use avxfreq::sched::PolicyKind;
+use avxfreq::sim::MS;
+use avxfreq::testkit::{assert_prop, IntRange, VecOf};
+use avxfreq::traffic::{ArrivalProcess, LatencyStats, TailSummary};
+use avxfreq::workload::client::LoadMode;
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::{WebCfg, WebRun};
+
+// ---------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------
+
+fn summary_eq(a: &TailSummary, b: &TailSummary) -> Result<(), String> {
+    if a.completed != b.completed {
+        return Err(format!("completed {} != {}", a.completed, b.completed));
+    }
+    let pairs = [
+        (a.mean_us, b.mean_us),
+        (a.p50_us, b.p50_us),
+        (a.p95_us, b.p95_us),
+        (a.p99_us, b.p99_us),
+        (a.p999_us, b.p999_us),
+        (a.max_us, b.max_us),
+        (a.slo_us, b.slo_us),
+        (a.slo_violation_frac, b.slo_violation_frac),
+    ];
+    for (x, y) in pairs {
+        if x != y {
+            return Err(format!("summary field {x} != {y}"));
+        }
+    }
+    Ok(())
+}
+
+/// Recorder equality through the whole query surface: exact counters
+/// plus the frozen summary (which exercises the histogram percentiles).
+fn stats_eq(a: &LatencyStats, b: &LatencyStats) -> Result<(), String> {
+    if a.completed() != b.completed() {
+        return Err(format!("completed {} != {}", a.completed(), b.completed()));
+    }
+    if a.violations() != b.violations() {
+        return Err(format!("violations {} != {}", a.violations(), b.violations()));
+    }
+    for v in [0, 100, 10_000, 1_000_000, u64::MAX / 2] {
+        if a.hist.fraction_above(v) != b.hist.fraction_above(v) {
+            return Err(format!("fraction_above({v}) differs"));
+        }
+    }
+    summary_eq(&a.summary(), &b.summary())
+}
+
+fn stats_of(samples: &[u64], slo: u64) -> LatencyStats {
+    let mut s = LatencyStats::new(slo);
+    for &v in samples {
+        s.record(v);
+    }
+    s
+}
+
+/// The per-machine scenario used by the end-to-end tests: small enough
+/// to run in suite time, loaded enough that every mechanism has tail
+/// mass to work with.
+fn small_cfg(seed: u64) -> WebCfg {
+    let mut c = WebCfg::paper_default(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 });
+    c.cores = 4;
+    c.workers = 8;
+    c.page_bytes = 8 * 1024;
+    c.warmup = 120 * MS;
+    c.measure = 300 * MS;
+    c.seed = seed;
+    c.mode = LoadMode::OpenProcess { process: ArrivalProcess::two_tenant(30_000.0, 0.3) };
+    c
+}
+
+fn hier(machines: usize, balancer: BalancerCfg, seed: u64) -> HierFleetCfg {
+    let fleet = FleetCfg::new(machines, RouterSpec::RoundRobin, small_cfg(seed));
+    let mut h = HierFleetCfg::new(fleet, balancer);
+    h.machines_per_rack = 2;
+    h
+}
+
+// ---------------------------------------------------------------------
+// Streaming-aggregation merge laws (satellite: property tests)
+// ---------------------------------------------------------------------
+
+/// Build a synthetic machine run holding `samples`, split across two
+/// tenants by parity (matching the recorder the aggregation keeps per
+/// tenant).
+fn synthetic_run(samples: &[u64], slo: u64) -> WebRun {
+    let (even, odd): (Vec<u64>, Vec<u64>) = samples.iter().partition(|&&v| v % 2 == 0);
+    WebRun {
+        stats: stats_of(samples, slo),
+        tenant_stats: vec![stats_of(&even, slo), stats_of(&odd, slo)],
+        completed: samples.len() as u64,
+        dropped: samples.len() as u64 % 3,
+        ..WebRun::default()
+    }
+}
+
+/// The streamed hierarchy merge is order-independent and equals the
+/// concatenated single-pass merge: absorbing machine runs as they
+/// "finish" — forward or reverse completion order — yields rack,
+/// cluster, and tenant recorders identical to recording every sample
+/// union directly. Empty machines (no samples) are legal and absorbed
+/// without disturbing anything.
+#[test]
+fn prop_streamed_hier_merge_equals_single_pass() {
+    const MACHINES: usize = 5;
+    const PER_RACK: usize = 2;
+    let slo = 5 * MS;
+    let tenants = ["scalar".to_string(), "avx".to_string()];
+    let strat = VecOf { elem: IntRange { lo: 1, hi: 40_000_000 }, max_len: 200 };
+    assert_prop("streamed hier merge ≡ single pass", 0x41E2, 50, &strat, |samples| {
+        // Deterministic machine split covering every sample exactly
+        // once; short draws leave the high-index machines empty, so the
+        // empty-recorder edge rides along.
+        let per: Vec<Vec<u64>> = (0..MACHINES)
+            .map(|m| samples.iter().copied().skip(m).step_by(MACHINES).collect())
+            .collect();
+        let runs: Vec<WebRun> = per.iter().map(|p| synthetic_run(p, slo)).collect();
+        let arrivals: Vec<u64> = per.iter().map(|p| p.len() as u64).collect();
+
+        // Streamed, two different completion orders.
+        let forward = HierarchyAgg::new(MACHINES, PER_RACK, slo, &tenants);
+        for (i, r) in runs.iter().enumerate() {
+            forward.absorb(i, r, 1.0);
+        }
+        let reverse = HierarchyAgg::new(MACHINES, PER_RACK, slo, &tenants);
+        for (i, r) in runs.iter().enumerate().rev() {
+            reverse.absorb(i, r, 1.0);
+        }
+        let fsnap = forward.finish(&arrivals);
+        let rsnap = reverse.finish(&arrivals);
+
+        // Single pass: record the concatenated samples directly.
+        let rack_direct: Vec<LatencyStats> = (0..MACHINES.div_ceil(PER_RACK))
+            .map(|r| {
+                let union: Vec<u64> = per
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i / PER_RACK == r)
+                    .flat_map(|(_, p)| p.iter().copied())
+                    .collect();
+                stats_of(&union, slo)
+            })
+            .collect();
+        let cluster_direct = stats_of(samples, slo);
+
+        if fsnap.racks.len() != rack_direct.len() {
+            return Err(format!("{} racks != {}", fsnap.racks.len(), rack_direct.len()));
+        }
+        for (i, (streamed, direct)) in fsnap.racks.iter().zip(&rack_direct).enumerate() {
+            stats_eq(streamed, direct).map_err(|e| format!("rack {i}: {e}"))?;
+        }
+        stats_eq(&fsnap.cluster, &cluster_direct).map_err(|e| format!("cluster: {e}"))?;
+        // Per-tenant recorders follow the same law (parity split).
+        let (even, odd): (Vec<u64>, Vec<u64>) = samples.iter().partition(|&&v| v % 2 == 0);
+        stats_eq(&fsnap.tenants[0].1, &stats_of(&even, slo)).map_err(|e| format!("t0: {e}"))?;
+        stats_eq(&fsnap.tenants[1].1, &stats_of(&odd, slo)).map_err(|e| format!("t1: {e}"))?;
+
+        // Completion order is invisible.
+        for (i, (f, r)) in fsnap.racks.iter().zip(&rsnap.racks).enumerate() {
+            stats_eq(f, r).map_err(|e| format!("order-dependence, rack {i}: {e}"))?;
+        }
+        stats_eq(&fsnap.cluster, &rsnap.cluster)
+            .map_err(|e| format!("order-dependence, cluster: {e}"))?;
+        if fsnap.dropped != rsnap.dropped {
+            return Err("order-dependent drop counter".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// Empty-recorder edge case, pinned explicitly: a hierarchy where some
+/// machines never complete anything reports zeroed racks without
+/// disturbing the populated ones.
+#[test]
+fn empty_machines_leave_clean_racks() {
+    let slo = 5 * MS;
+    let tenants = ["all".to_string()];
+    let agg = HierarchyAgg::new(4, 2, slo, &tenants);
+    let busy = WebRun {
+        stats: stats_of(&[MS, 2 * MS, 10 * MS], slo),
+        tenant_stats: vec![stats_of(&[MS, 2 * MS, 10 * MS], slo)],
+        completed: 3,
+        ..WebRun::default()
+    };
+    agg.absorb(0, &busy, 1.0);
+    agg.absorb(2, &WebRun::default(), 1.0); // machine with an empty recorder
+    let snap = agg.finish(&[3, 0, 0, 0]);
+    assert_eq!(snap.racks.len(), 2);
+    assert_eq!(snap.racks[0].completed(), 3);
+    assert_eq!(snap.racks[0].violations(), 1, "10 ms sample violates the 5 ms SLO");
+    assert_eq!(snap.racks[1].completed(), 0, "untouched rack stays empty");
+    assert_eq!(snap.racks[1].summary().completed, 0, "empty summary is well-defined");
+    assert_eq!(snap.cluster.completed(), 3);
+    assert_eq!(snap.digests[2].completed, 0);
+}
+
+// ---------------------------------------------------------------------
+// The feedback-disabled differential (acceptance criterion)
+// ---------------------------------------------------------------------
+
+/// With the balancer disabled, the hierarchical runner must reproduce
+/// the flat fleet **bytes**: identical cluster recorder (exact counters
+/// and every percentile), identical per-tenant recorders, and rack
+/// recorders that partition the cluster exactly.
+#[test]
+fn feedback_disabled_reproduces_open_loop_bytes() {
+    let hcfg = hier(5, BalancerCfg::default(), 0xD1F2);
+    assert!(!hcfg.balancer.enabled, "default balancer must be open-loop");
+    let flat = run_fleet(&hcfg.fleet, 4);
+    let h = run_hier_fleet(&hcfg, 4);
+
+    assert_eq!(h.completed, flat.completed, "completed");
+    assert_eq!(h.dropped, flat.dropped, "dropped");
+    assert_eq!(h.violations, flat.violations, "exact SLO violations");
+    assert!(h.outcomes.is_noop(), "open loop must not invent front-end actions");
+    stats_eq(&h.stats, &flat.stats).unwrap_or_else(|e| panic!("cluster recorder: {e}"));
+    summary_eq(&h.tail, &flat.tail).unwrap_or_else(|e| panic!("cluster tail: {e}"));
+    assert_eq!(h.tenant_stats.len(), flat.tenant_stats.len());
+    for ((na, ta), (nb, tb)) in h.tenant_stats.iter().zip(&flat.tenant_stats) {
+        assert_eq!(na, nb, "tenant order must be the arrival process's");
+        stats_eq(ta, tb).unwrap_or_else(|e| panic!("tenant {na}: {e}"));
+    }
+    // Racks partition the cluster: merging the rack recorders (racks of
+    // 2 over 5 machines → 3 racks) re-creates the cluster recorder.
+    assert_eq!(h.n_racks(), 3);
+    let mut merged = h.racks[0].clone();
+    for r in &h.racks[1..] {
+        merged.merge(r);
+    }
+    stats_eq(&merged, &h.stats).unwrap_or_else(|e| panic!("rack partition law: {e}"));
+    // Per-machine digests carry the flat run's exact counters.
+    for (i, (d, m)) in h.digests.iter().zip(&flat.machines).enumerate() {
+        assert_eq!(d.completed, m.completed, "machine {i} digest completed");
+        assert_eq!(d.dropped, m.dropped, "machine {i} digest dropped");
+        assert_eq!(d.arrivals, flat.arrivals_routed[i], "machine {i} digest arrivals");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Closed-loop determinism (acceptance criterion)
+// ---------------------------------------------------------------------
+
+/// The closed loop — retries, hedges, ejections all active — renders
+/// byte-identical reports at 1 and 4 OS threads, and two 4-thread runs
+/// agree (the atomic-cursor claim order differs run to run).
+#[test]
+fn closed_loop_byte_identical_across_threads() {
+    let hcfg = hier(4, BalancerCfg::closed(), 0xC10C);
+    let serial = run_hier_fleet(&hcfg, 1);
+    let parallel = run_hier_fleet(&hcfg, 4);
+    let again = run_hier_fleet(&hcfg, 4);
+    let render = |h: &HierFleetRun| hier_report(&[("fleet", h)]).render();
+    assert_eq!(render(&serial), render(&parallel), "1 vs 4 threads differ");
+    assert_eq!(render(&parallel), render(&again), "two 4-thread runs differ");
+    assert_eq!(serial.outcomes, parallel.outcomes, "front-end outcome counters differ");
+    assert_eq!(serial.completed, parallel.completed);
+    assert_eq!(serial.violations, parallel.violations);
+    let digest_key = |h: &HierFleetRun| -> Vec<(u64, u64, u64, u64)> {
+        h.digests.iter().map(|d| (d.arrivals, d.completed, d.timeouts, d.epochs_ejected)).collect()
+    };
+    assert_eq!(digest_key(&serial), digest_key(&parallel), "per-machine digests differ");
+    assert!(serial.completed > 100, "closed loop served only {}", serial.completed);
+}
+
+// ---------------------------------------------------------------------
+// Each feedback mechanism demonstrably fires
+// ---------------------------------------------------------------------
+
+/// A 1 ns deadline marks every completion late, so the timeout/retry
+/// path must observe timeouts and issue retries (bounded by the
+/// per-request budget).
+#[test]
+fn closed_loop_timeouts_and_retries_fire() {
+    let mut b = BalancerCfg::closed();
+    b.timeout = 1; // every completion exceeds 1 ns
+    b.hedge_p99_mult = 0.0; // hedging off
+    b.eject_factor = 1e6; // ejection effectively off
+    let h = run_hier_fleet(&hier(4, b, 0x7143), 4);
+    assert!(h.outcomes.timeouts_observed > 0, "no timeouts at a 1 ns deadline");
+    assert!(h.outcomes.retries_issued > 0, "timeouts must trigger retries");
+    assert_eq!(h.outcomes.hedges_issued, 0, "hedging was disabled");
+    assert_eq!(h.outcomes.ejections, 0, "ejection was disabled");
+    let digest_timeouts: u64 = h.digests.iter().map(|d| d.timeouts).sum();
+    assert_eq!(
+        digest_timeouts, h.outcomes.timeouts_observed,
+        "per-machine timeout attribution must sum to the cluster counter"
+    );
+}
+
+/// A hedge delay far inside the latency distribution makes almost every
+/// request hedge-eligible from the second epoch on.
+#[test]
+fn closed_loop_hedging_fires() {
+    let mut b = BalancerCfg::closed();
+    b.hedge_p99_mult = 0.001; // delay ≈ 0.1% of the observed p99
+    b.eject_factor = 1e6;
+    let h = run_hier_fleet(&hier(4, b, 0x43D6), 4);
+    assert!(h.outcomes.hedges_issued > 0, "no hedges at a near-zero hedge delay");
+    assert_eq!(h.outcomes.ejections, 0, "ejection was disabled");
+}
+
+/// A zero ejection threshold ejects every machine with observable tail
+/// mass (the balancer never empties the healthy set), and ejected
+/// machines — receiving no traffic, hence showing no tail — are
+/// readmitted an epoch later.
+#[test]
+fn closed_loop_ejection_and_readmission_fire() {
+    let mut b = BalancerCfg::closed();
+    b.hedge_p99_mult = 0.0;
+    b.eject_factor = 0.0; // any p99 > 0 ejects (modulo the never-empty guard)
+    let h = run_hier_fleet(&hier(4, b, 0xE1EC), 4);
+    assert!(h.outcomes.ejections > 0, "zero threshold must eject");
+    assert!(h.outcomes.readmissions > 0, "idle ejected machines must be readmitted");
+    let ejected_epochs: u64 = h.digests.iter().map(|d| d.epochs_ejected).sum();
+    assert!(ejected_epochs > 0, "digests must attribute the ejected epochs");
+}
+
+// ---------------------------------------------------------------------
+// O(machines) memory shape + the fleetscale scenario
+// ---------------------------------------------------------------------
+
+/// A wide sweep retains scalar digests and a constant number of
+/// recorders — never per-machine runs or histograms. 64 machines in
+/// racks of 8 keeps suite time sane; the shape assertions are what
+/// guarantee the 1000-machine case (the result type's size does not
+/// grow with anything but `machines × size_of::<MachineDigest>()`).
+#[test]
+fn wide_sweep_holds_o_machines_counters() {
+    let mut cfg = small_cfg(0x51DE);
+    cfg.warmup = 40 * MS;
+    cfg.measure = 80 * MS;
+    cfg.mode = LoadMode::OpenProcess { process: ArrivalProcess::two_tenant(60_000.0, 0.3) };
+    let fleet = FleetCfg::new(64, RouterSpec::RoundRobin, cfg);
+    let mut hcfg = HierFleetCfg::new(fleet, BalancerCfg::default());
+    hcfg.machines_per_rack = 8;
+    hcfg.collective_steps = 32;
+    let h = run_hier_fleet(&hcfg, 4);
+
+    assert_eq!(h.digests.len(), 64, "one digest per machine");
+    assert_eq!(h.n_racks(), 8, "racks of 8");
+    // The only O(machines) state is the flat digest vector of scalars.
+    assert!(
+        std::mem::size_of::<MachineDigest>() <= 512,
+        "MachineDigest grew past a scalar record: {} bytes",
+        std::mem::size_of::<MachineDigest>()
+    );
+    // Recorder (histogram) count is O(racks + tenants), not O(machines):
+    // racks + cluster + per-tenant.
+    assert_eq!(h.racks.len() + 1 + h.tenant_stats.len(), 8 + 1 + 2);
+    // The collective model ran over the digests.
+    let c = h.collective.as_ref().expect("collective_steps > 0 must produce a summary");
+    assert_eq!(c.steps, 32);
+    assert!(c.makespan_us > 0.0 && c.ideal_us > 0.0);
+    assert!(c.slowdown > 0.0);
+    // And it is reproducible: the collective is a pure function of the
+    // digests and the seed.
+    let again = run_hier_fleet(&hcfg, 2);
+    let c2 = again.collective.as_ref().unwrap();
+    assert_eq!((c.makespan_us, c.ideal_us, c.slowdown), (c2.makespan_us, c2.ideal_us, c2.slowdown));
+}
+
+/// The fleetscale repro declares its scenario (racks of 4, open loop,
+/// collective steps, AVX subset sized to the share of work) without
+/// running the sweep.
+#[test]
+fn fleetscale_scenario_shape() {
+    let cfg = avxfreq::repro::fleetscale::hier_cfg(
+        RouterSpec::AvxPartition { avx_machines: 2 },
+        PolicyKind::CoreSpec { avx_cores: 2 },
+        8,
+        50,
+        true,
+        7,
+    );
+    assert_eq!(cfg.fleet.machines, 8);
+    assert_eq!(cfg.machines_per_rack, 4);
+    assert_eq!(cfg.collective_steps, 50);
+    assert!(!cfg.balancer.enabled, "fleetscale runs the differential-tested open loop");
+    assert_eq!(cfg.fleet.router, RouterSpec::AvxPartition { avx_machines: 2 });
+    assert!(matches!(cfg.fleet.cfg.policy, PolicyKind::CoreSpec { avx_cores: 2 }));
+    let process = cfg.fleet.cfg.mode.process().expect("open loop");
+    // Rate scales with the fleet: 8 machines at fleetvar's 500k/6 each.
+    assert!((process.mean_rate() - 8.0 * 500_000.0 / 6.0).abs() < 1.0);
+    cfg.validate().expect("fleetscale scenario must validate");
+}
