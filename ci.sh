@@ -61,7 +61,7 @@ check_goldens() {
   local missing=0
   for g in matrix_report tail_report fleet_report fleetvar_report \
            energy_report energydelay_report tpc_report runtimespec_report \
-           hier_report fleetscale_report; do
+           hier_report fleetscale_report hybrid_report hybridspec_report; do
     if [ ! -f "rust/tests/golden/${g}.txt" ]; then
       echo "MISSING golden snapshot: rust/tests/golden/${g}.txt"
       missing=1
@@ -163,6 +163,9 @@ for p in docs/ARCHITECTURE.md rust/tests/README.md configs/dual_socket.toml \
          rust/src/tpc/queue.rs rust/src/tpc/reactor.rs rust/src/tpc/waker.rs \
          rust/src/repro/runtimespec.rs rust/tests/tpc.rs \
          rust/tests/golden/tpc_report.txt rust/tests/golden/runtimespec_report.txt \
+         configs/hybrid.toml rust/src/cpu/topology.rs rust/src/repro/hybridspec.rs \
+         rust/tests/hybrid.rs \
+         rust/tests/golden/hybrid_report.txt rust/tests/golden/hybridspec_report.txt \
          ci.sh; do
   if [ ! -e "$p" ]; then
     echo "MISSING referenced file: $p"

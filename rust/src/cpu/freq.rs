@@ -86,6 +86,11 @@ pub struct FreqParams {
     /// default, [`GovernorSpec::IntelLegacy`], uses every base value
     /// verbatim — bit-for-bit the pre-governor behaviour.
     pub governor: GovernorSpec,
+    /// Deepest license this core can demand. `L2` (the default) is the
+    /// full P-core ladder; E-cores have no 512-bit path, so their
+    /// ceiling is `L1` — heavier demand is clamped before it reaches the
+    /// state machine (the hardware never issues the L2 request).
+    pub max_license: License,
 }
 
 impl Default for FreqParams {
@@ -101,7 +106,17 @@ impl Default for FreqParams {
             detect_insns: 100,
             dense_threshold: 1.0,
             governor: GovernorSpec::IntelLegacy,
+            max_license: License::L2,
         }
+    }
+}
+
+impl FreqParams {
+    /// E-core variant: same timing parameters, license ceiling L1 (no
+    /// AVX-512 pipeline, so the L2 license does not exist on the part).
+    pub fn efficiency_core(mut self) -> Self {
+        self.max_license = License::L1;
+        self
     }
 }
 
@@ -191,6 +206,10 @@ impl LicenseState {
     /// slice: `observe(now, demand)` → run slice of duration `dt` → next
     /// call has `now' = now + dt`.
     pub fn observe(&mut self, now: Time, demand: License) -> EffectiveState {
+        // 0. Clamp demand to the part's license ceiling (E-cores top out
+        // at L1; a no-op at the default ceiling of L2).
+        let demand = demand.min(self.params.max_license);
+
         // 1. Complete an in-flight grant whose latency has elapsed.
         if let Phase::Throttled { target, grant_at } = self.phase {
             if now >= grant_at {
@@ -400,6 +419,24 @@ mod tests {
             slow.stall_ns(grant),
             legacy.stall_ns(grant)
         );
+    }
+
+    #[test]
+    fn license_ceiling_clamps_demand() {
+        let mut m = LicenseState::new(FreqParams::default().efficiency_core());
+        let grant = FreqParams::default().grant_latency;
+        // L2 demand on an E-core behaves exactly like L1 demand: the L2
+        // request is never issued.
+        let s = m.observe(0, License::L2);
+        assert!(s.throttled, "the (clamped) L1 request still throttles");
+        let s = m.observe(grant + US, License::L2);
+        assert_eq!(s.license, License::L1, "granted license tops out at L1");
+        assert!(!s.throttled);
+        // And pure L1 demand is untouched.
+        let mut p = LicenseState::new(FreqParams::default().efficiency_core());
+        p.observe(0, License::L1);
+        let s = p.observe(grant + US, License::L1);
+        assert_eq!(s.license, License::L1);
     }
 
     #[test]

@@ -33,5 +33,5 @@ pub use freq::{FreqParams, License, LicenseState};
 pub use governor::{Governor, GovernorSpec};
 pub use perf::PerfCounters;
 pub use power::PowerParams;
-pub use topology::Topology;
+pub use topology::{CoreClass, HybridSpec, Topology};
 pub use turbo::TurboTable;

@@ -12,12 +12,25 @@
 //! * each socket is a **NUMA node** — the scheduler prefers same-node
 //!   work stealing and charges extra for cross-socket migrations.
 //!
+//! Hybrid parts add a second axis the paper predates: a [`CoreClass`]
+//! split into P-cores (AVX-512 capable, deep license levels) and E-cores
+//! grouped into *modules* ([`HybridSpec`]) that share one clock/PLL — a
+//! frequency domain nested inside the socket domain, with no 512-bit
+//! path and a license ceiling of L1. The machine layer maps each E-core
+//! module to its own frequency domain; [`HybridSpec::module_of`] is the
+//! shared map.
+//!
 //! Core ids are global and contiguous; socket membership is a balanced
 //! contiguous partition computed by [`socket_of_core`] / [`socket_span`]
 //! so every layer (machine, scheduler, policy) derives the same map from
 //! `(n_cores, sockets)` alone.
 
 /// Topology description for a simulated machine.
+///
+/// Constructors validate at build time ([`Topology::validate`]): zero
+/// cores/sockets, out-of-range core ids, and server/client overlap are
+/// rejected once here instead of being `.max(1)`-clamped at every
+/// consumer.
 ///
 /// # Examples
 ///
@@ -49,9 +62,118 @@ pub struct Topology {
     pub client_cores: Vec<usize>,
 }
 
+/// Core class of a hybrid part: P-cores carry the full AVX-512 pipeline
+/// and license ladder; E-cores have no 512-bit path (license ceiling L1)
+/// and share a module-level clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoreClass {
+    Performance,
+    Efficiency,
+}
+
+impl CoreClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            CoreClass::Performance => "P",
+            CoreClass::Efficiency => "E",
+        }
+    }
+}
+
+/// Hybrid core-class layout: the first `p_cores` global core ids are
+/// P-cores, followed by `e_cores` E-cores grouped into modules of
+/// `module_size` (e.g. Alder-Lake-style 4-core Gracemont modules). Each
+/// module is one shared frequency domain nested inside the socket
+/// domain.
+///
+/// `e_cores == 0` describes an all-P part, which the machine layer
+/// treats as exactly the homogeneous machine (pinned byte-for-byte by
+/// `rust/tests/hybrid.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HybridSpec {
+    pub p_cores: usize,
+    pub e_cores: usize,
+    /// E-cores per module (ignored when `e_cores == 0`).
+    pub module_size: usize,
+}
+
+impl HybridSpec {
+    /// Validated constructor: at least one core, and the E-cores must
+    /// fill whole modules (partial modules have no hardware analogue and
+    /// would make the module→domain map ambiguous).
+    pub fn new(p_cores: usize, e_cores: usize, module_size: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(p_cores + e_cores > 0, "hybrid topology needs at least one core");
+        if e_cores > 0 {
+            anyhow::ensure!(module_size > 0, "module_size must be >= 1 when e_cores > 0");
+            anyhow::ensure!(
+                e_cores % module_size == 0,
+                "e_cores ({e_cores}) must fill whole modules of {module_size}"
+            );
+        }
+        Ok(HybridSpec { p_cores, e_cores, module_size })
+    }
+
+    /// A realistic desktop hybrid part: 8 P-cores plus 16 E-cores in
+    /// four 4-core modules (Alder/Raptor-Lake shape).
+    pub fn desktop_8p16e() -> Self {
+        HybridSpec::new(8, 16, 4).expect("builder spec is valid")
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.p_cores + self.e_cores
+    }
+
+    pub fn has_e_cores(&self) -> bool {
+        self.e_cores > 0
+    }
+
+    /// Class of global core id `core` (P-cores first, then E-cores).
+    pub fn class_of(&self, core: usize) -> CoreClass {
+        if core < self.p_cores {
+            CoreClass::Performance
+        } else {
+            CoreClass::Efficiency
+        }
+    }
+
+    /// E-core module index of `core`, `None` for P-cores.
+    pub fn module_of(&self, core: usize) -> Option<usize> {
+        if core < self.p_cores || self.e_cores == 0 {
+            None
+        } else {
+            Some((core - self.p_cores) / self.module_size.max(1))
+        }
+    }
+
+    pub fn n_modules(&self) -> usize {
+        if self.e_cores == 0 {
+            0
+        } else {
+            self.e_cores / self.module_size.max(1)
+        }
+    }
+
+    /// Per-core AVX-512 capability mask (true = P-core), the scheduler's
+    /// hard placement constraint for 512-bit work.
+    pub fn capability_mask(&self) -> Vec<bool> {
+        (0..self.n_cores()).map(|c| self.class_of(c) == CoreClass::Performance).collect()
+    }
+
+    /// Table/config label, e.g. `8P+16E`.
+    pub fn label(&self) -> String {
+        format!("{}P+{}E", self.p_cores, self.e_cores)
+    }
+}
+
 /// Socket owning global core `core` when `n_cores` are split over
 /// `sockets` contiguous balanced chunks (first `n_cores % sockets`
 /// sockets take one extra core).
+///
+/// Closed-form inverse of the partition [`socket_span`] lays out — O(1)
+/// on the scheduler's steal/wake hot path (it used to scan the spans
+/// linearly). The first `rem` sockets hold `base + 1` cores, so cores
+/// below `rem * (base + 1)` divide by the long-span length and the rest
+/// divide by `base` after removing the long prefix.
 ///
 /// # Examples
 ///
@@ -67,13 +189,21 @@ pub struct Topology {
 /// ```
 pub fn socket_of_core(core: usize, n_cores: usize, sockets: usize) -> usize {
     let s = sockets.max(1).min(n_cores.max(1));
-    for socket in 0..s {
-        let (start, end) = socket_span(socket, n_cores, s);
-        if core >= start && core < end {
-            return socket;
-        }
+    if n_cores == 0 {
+        // Degenerate call: the historical scan fell through to the last
+        // socket; keep that contract.
+        return s - 1;
     }
-    s - 1
+    // Out-of-range cores land on the last socket (historical contract).
+    let core = core.min(n_cores - 1);
+    let base = n_cores / s; // >= 1 because s <= n_cores
+    let rem = n_cores % s;
+    let cut = rem * (base + 1);
+    if core < cut {
+        core / (base + 1)
+    } else {
+        rem + (core - cut) / base
+    }
 }
 
 /// Half-open global-core range `[start, end)` of `socket` under the same
@@ -104,6 +234,8 @@ impl Topology {
             server_cores: (0..12).collect(),
             client_cores: (12..16).collect(),
         }
+        .checked()
+        .expect("builder topology is valid")
     }
 
     /// Microbenchmark topology (§4.3): 26 threads placed on 12 physical
@@ -116,6 +248,8 @@ impl Topology {
             server_cores: (0..12).collect(),
             client_cores: vec![],
         }
+        .checked()
+        .expect("builder topology is valid")
     }
 
     /// A dual-socket server built from two of the paper's machines:
@@ -130,10 +264,14 @@ impl Topology {
             server_cores: (0..24).collect(),
             client_cores: (24..32).collect(),
         }
+        .checked()
+        .expect("builder topology is valid")
     }
 
     /// A uniform multi-socket machine: `sockets` × `cores_per_socket`
-    /// physical cores, all available to the workload.
+    /// physical cores, all available to the workload. Panics on a
+    /// degenerate shape (zero sockets or cores) — validation happens
+    /// once at construction instead of `.max(1)` clamps downstream.
     ///
     /// # Examples
     ///
@@ -153,6 +291,23 @@ impl Topology {
             server_cores: (0..n).collect(),
             client_cores: vec![],
         }
+        .checked()
+        .expect("multi_socket needs sockets >= 1 and cores_per_socket >= 1")
+    }
+
+    /// A uniform machine with `cores` total server cores over `sockets`
+    /// balanced (not necessarily equal) chunks — the general form
+    /// [`Topology::multi_socket`] is the divisible special case of.
+    pub fn uniform(cores: usize, sockets: usize) -> Self {
+        Topology {
+            physical_cores: cores,
+            smt: 1,
+            sockets,
+            server_cores: (0..cores).collect(),
+            client_cores: vec![],
+        }
+        .checked()
+        .expect("uniform needs cores >= sockets >= 1")
     }
 
     /// Small single-socket topology for tests.
@@ -164,6 +319,52 @@ impl Topology {
             server_cores: (0..cores).collect(),
             client_cores: vec![],
         }
+        .checked()
+        .expect("small needs cores >= 1")
+    }
+
+    /// Structural validation, run once at construction: every consumer
+    /// may then rely on `physical_cores >= 1`, `1 <= sockets <=
+    /// physical_cores`, `smt >= 1`, a non-empty in-range server set, and
+    /// disjoint server/client sets.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.sockets > 0, "topology needs at least one socket");
+        anyhow::ensure!(self.physical_cores > 0, "topology needs at least one physical core");
+        anyhow::ensure!(self.smt > 0, "smt must be >= 1");
+        anyhow::ensure!(
+            self.sockets <= self.physical_cores,
+            "{} sockets cannot partition {} cores",
+            self.sockets,
+            self.physical_cores
+        );
+        anyhow::ensure!(!self.server_cores.is_empty(), "server core set is empty");
+        let mut seen = vec![0u8; self.physical_cores];
+        for &c in &self.server_cores {
+            anyhow::ensure!(
+                c < self.physical_cores,
+                "server core {c} out of range (physical_cores = {})",
+                self.physical_cores
+            );
+            anyhow::ensure!(seen[c] == 0, "server core {c} listed twice");
+            seen[c] = 1;
+        }
+        for &c in &self.client_cores {
+            anyhow::ensure!(
+                c < self.physical_cores,
+                "client core {c} out of range (physical_cores = {})",
+                self.physical_cores
+            );
+            anyhow::ensure!(seen[c] != 1, "core {c} is both a server and a client core");
+            anyhow::ensure!(seen[c] != 2, "client core {c} listed twice");
+            seen[c] = 2;
+        }
+        Ok(())
+    }
+
+    /// [`Topology::validate`] in builder position.
+    pub fn checked(self) -> anyhow::Result<Self> {
+        self.validate()?;
+        Ok(self)
     }
 
     pub fn n_server_cores(&self) -> usize {
@@ -234,7 +435,21 @@ mod tests {
 
     #[test]
     fn socket_spans_partition_all_cores() {
-        for (n, s) in [(12, 1), (12, 2), (7, 2), (24, 3), (5, 8), (16, 4)] {
+        for (n, s) in [
+            (12, 1),
+            (12, 2),
+            (7, 2),
+            (24, 3),
+            (5, 8),
+            (16, 4),
+            (1, 1),
+            (2, 8),
+            (31, 5),
+            (64, 7),
+            (97, 10),
+            (3, 3),
+            (128, 9),
+        ] {
             let mut seen = vec![false; n];
             let eff = s.min(n).max(1);
             for socket in 0..eff {
@@ -247,6 +462,34 @@ mod tests {
                 }
             }
             assert!(seen.iter().all(|&x| x), "({n},{s}) left cores unassigned");
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_linear_scan_reference() {
+        // The historical implementation, kept as the oracle.
+        fn reference(core: usize, n_cores: usize, sockets: usize) -> usize {
+            let s = sockets.max(1).min(n_cores.max(1));
+            for socket in 0..s {
+                let (start, end) = socket_span(socket, n_cores, s);
+                if core >= start && core < end {
+                    return socket;
+                }
+            }
+            s - 1
+        }
+        for n in 0..=64 {
+            for s in 1..=10 {
+                // Includes out-of-range cores (>= n): both forms must
+                // fall through to the last socket.
+                for core in 0..=(n + 2) {
+                    assert_eq!(
+                        socket_of_core(core, n, s),
+                        reference(core, n, s),
+                        "core {core} of ({n},{s})"
+                    );
+                }
+            }
         }
     }
 
@@ -266,5 +509,103 @@ mod tests {
         assert_eq!(socket_of_core(1, 2, 8), 1);
         let map = socket_map(2, 8);
         assert_eq!(map, vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one socket")]
+    fn multi_socket_rejects_zero_sockets() {
+        let _ = Topology::multi_socket(0, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one physical core")]
+    fn multi_socket_rejects_zero_cores_per_socket() {
+        let _ = Topology::multi_socket(2, 0);
+    }
+
+    #[test]
+    fn validate_rejects_each_degenerate_shape() {
+        let good = Topology::small(4);
+        assert!(good.validate().is_ok());
+
+        let mut t = Topology::small(4);
+        t.physical_cores = 0;
+        t.server_cores = vec![];
+        assert!(t.validate().unwrap_err().to_string().contains("physical core"));
+
+        let mut t = Topology::small(4);
+        t.smt = 0;
+        assert!(t.validate().unwrap_err().to_string().contains("smt"));
+
+        let mut t = Topology::small(4);
+        t.sockets = 0;
+        assert!(t.validate().unwrap_err().to_string().contains("socket"));
+
+        let mut t = Topology::small(4);
+        t.sockets = 5;
+        assert!(t.validate().unwrap_err().to_string().contains("cannot partition"));
+
+        let mut t = Topology::small(4);
+        t.server_cores = vec![];
+        assert!(t.validate().unwrap_err().to_string().contains("empty"));
+
+        let mut t = Topology::small(4);
+        t.server_cores = vec![0, 1, 4];
+        assert!(t.validate().unwrap_err().to_string().contains("out of range"));
+
+        let mut t = Topology::small(4);
+        t.client_cores = vec![9];
+        assert!(t.validate().unwrap_err().to_string().contains("out of range"));
+
+        let mut t = Topology::small(4);
+        t.client_cores = vec![1];
+        assert!(t
+            .validate()
+            .unwrap_err()
+            .to_string()
+            .contains("both a server and a client"));
+
+        let mut t = Topology::small(4);
+        t.server_cores = vec![0, 1, 1];
+        assert!(t.validate().unwrap_err().to_string().contains("listed twice"));
+    }
+
+    #[test]
+    fn uniform_builds_balanced_unequal_chunks() {
+        let t = Topology::uniform(7, 2);
+        assert_eq!(t.n_server_cores(), 7);
+        assert_eq!(t.socket_of(3), 0);
+        assert_eq!(t.socket_of(4), 1);
+    }
+
+    #[test]
+    fn hybrid_classes_and_modules() {
+        let h = HybridSpec::desktop_8p16e();
+        assert_eq!(h.n_cores(), 24);
+        assert_eq!(h.n_modules(), 4);
+        assert_eq!(h.label(), "8P+16E");
+        for c in 0..8 {
+            assert_eq!(h.class_of(c), CoreClass::Performance, "core {c}");
+            assert_eq!(h.module_of(c), None, "core {c}");
+        }
+        assert_eq!(h.module_of(8), Some(0));
+        assert_eq!(h.module_of(11), Some(0));
+        assert_eq!(h.module_of(12), Some(1));
+        assert_eq!(h.module_of(23), Some(3));
+        let mask = h.capability_mask();
+        assert_eq!(mask.iter().filter(|&&b| b).count(), 8);
+        assert!(mask[7] && !mask[8]);
+    }
+
+    #[test]
+    fn hybrid_rejects_partial_modules_and_empty_parts() {
+        assert!(HybridSpec::new(8, 10, 4).is_err(), "partial module");
+        assert!(HybridSpec::new(0, 0, 4).is_err(), "no cores");
+        assert!(HybridSpec::new(8, 4, 0).is_err(), "zero module size");
+        let all_p = HybridSpec::new(6, 0, 4).unwrap();
+        assert!(!all_p.has_e_cores());
+        assert_eq!(all_p.n_modules(), 0);
+        assert_eq!(all_p.module_of(3), None);
+        assert_eq!(all_p.class_of(5), CoreClass::Performance);
     }
 }

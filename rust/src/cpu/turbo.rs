@@ -61,6 +61,27 @@ impl TurboTable {
         Self::flat(2.8, 2.4, 1.9, 16)
     }
 
+    /// Turbo table of one E-core *module* (Gracemont-shaped): the
+    /// active-core axis counts cores awake in the module, which shares a
+    /// single clock/PLL. Lower peak than any P-core bin and a shallower
+    /// active-core slope; the part has no 512-bit path, so the L2 row
+    /// merely duplicates L1 to keep `ghz(L2, _)` defined (the license
+    /// ceiling in [`super::freq::FreqParams::efficiency_core`] prevents
+    /// L2 from ever being granted).
+    pub fn e_core_module(module_size: usize) -> Self {
+        let n = module_size.max(1);
+        let slope = |one: f64, all: f64| -> Vec<f64> {
+            (1..=n)
+                .map(|active| if active <= 1 { one } else { all })
+                .collect()
+        };
+        let l1 = slope(2.5, 2.3);
+        TurboTable {
+            name: format!("E-module x{n}"),
+            ghz: [slope(3.1, 2.9), l1.clone(), l1],
+        }
+    }
+
     pub fn cores(&self) -> usize {
         self.ghz[0].len()
     }
@@ -118,5 +139,24 @@ mod tests {
     fn flat_table_ignores_active() {
         let t = TurboTable::xeon_gold_6130_no_cstates();
         assert_eq!(t.ghz(License::L0, 1), t.ghz(License::L0, 16));
+    }
+
+    #[test]
+    fn e_core_module_table_is_slower_and_l2_safe() {
+        let e = TurboTable::e_core_module(4);
+        let p = TurboTable::xeon_gold_6130();
+        assert_eq!(e.cores(), 4);
+        // Slower than the P-core table at every license/occupancy.
+        for active in 1..=4 {
+            for lic in [License::L0, License::L1] {
+                assert!(e.ghz(lic, active) < p.ghz(lic, active), "{lic:?}@{active}");
+            }
+        }
+        // Single-core-in-module turbo exceeds the all-module clock.
+        assert!(e.ghz(License::L0, 1) > e.ghz(License::L0, 4));
+        // The L2 row stays defined (and equals L1 — no deeper level).
+        for active in 1..=4 {
+            assert_eq!(e.ghz(License::L2, active), e.ghz(License::L1, active));
+        }
     }
 }

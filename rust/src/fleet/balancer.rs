@@ -722,4 +722,51 @@ mod tests {
             self.digests.iter().map(|d| d.arrivals).collect()
         }
     }
+
+    #[test]
+    fn all_idle_epochs_neither_eject_nor_panic() {
+        // Regression for the §4b/§4c empty-histogram edges: with an
+        // arrival rate so low that every epoch is (essentially) idle,
+        // every machine's epoch histogram is empty. The hedge threshold
+        // must collapse to "off" (p99 of an empty histogram is the
+        // documented 0), and the ejection pass must see an empty
+        // healthy-median list and do nothing — never eject the whole
+        // fleet off zero data, never divide by an empty median, never
+        // panic.
+        let mut h = hier(3, true);
+        h.fleet.cfg.mode = LoadMode::OpenProcess {
+            process: ArrivalProcess::two_tenant(1e-6, 0.25),
+        };
+        let run = run_hier_fleet(&h, 2);
+        assert_eq!(run.outcomes.ejections, 0, "no machine may be ejected off no data");
+        assert_eq!(run.outcomes.hedges_issued, 0);
+        assert_eq!(run.outcomes.retries_issued, 0);
+        assert_eq!(run.outcomes.timeouts_observed, 0);
+        assert_eq!(run.machines, 3);
+        // The merged cluster statistics are the safe zeroes, not NaNs
+        // (a stray arrival from the 1e-6 req/s stream would be benign
+        // but is astronomically unlikely over a 200 ms horizon).
+        assert!(run.completed <= 1, "idle fleet served {}", run.completed);
+        assert!(run.tail.p99_us.is_finite());
+        if run.completed == 0 {
+            assert_eq!(run.tail.p99_us.to_bits(), 0.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn idle_fleet_is_thread_count_invariant() {
+        // The all-idle loop exercises the empty-histogram feedback path
+        // on every epoch; it must stay byte-identical across thread
+        // counts like any other configuration.
+        let mut h = hier(3, true);
+        h.fleet.cfg.mode = LoadMode::OpenProcess {
+            process: ArrivalProcess::two_tenant(1e-6, 0.25),
+        };
+        let a = run_hier_fleet(&h, 1);
+        let b = run_hier_fleet(&h, 4);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.outcomes, b.outcomes);
+        assert_eq!(a.arrivals_routed(), b.arrivals_routed());
+        assert_eq!(a.tail.p99_us.to_bits(), b.tail.p99_us.to_bits());
+    }
 }

@@ -244,6 +244,9 @@ impl FleetRun {
             completed: self.completed,
             final_avx_cores: self.machines.iter().map(|m| m.final_avx_cores).sum(),
             adaptive_changes: self.machines.iter().map(|m| m.adaptive_changes).sum(),
+            // Per-domain clocks are a machine-local concept; fleet rows
+            // keep the aggregate avg_ghz instead.
+            domain_ghz: Vec::new(),
         }
     }
 }

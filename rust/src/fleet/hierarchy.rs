@@ -384,6 +384,9 @@ impl HierFleetRun {
             completed: self.completed,
             final_avx_cores: self.digests.iter().map(|d| d.final_avx_cores).sum(),
             adaptive_changes: self.digests.iter().map(|d| d.adaptive_changes).sum(),
+            // Per-domain clocks are a machine-local concept; hierarchy
+            // rows keep the aggregate avg_ghz instead.
+            domain_ghz: Vec::new(),
         }
     }
 }

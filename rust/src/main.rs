@@ -51,7 +51,15 @@ fn parse_policy(args: &Args) -> PolicyKind {
         "corespec" => PolicyKind::CoreSpec { avx_cores },
         "corespec-numa" => PolicyKind::CoreSpecNuma { avx_cores_per_socket: avx_cores, sockets },
         "strict" => PolicyKind::StrictPartition { avx_cores },
-        other => panic!("unknown --policy {other} (unmodified|corespec|corespec-numa|strict)"),
+        // The hybrid-native policy: the P-core count doubles as the
+        // specialization set size (see --hybrid, which re-derives it
+        // from the machine shape when the flag is omitted).
+        "class-native" => PolicyKind::ClassNative {
+            p_cores: args.get_parse::<usize>("p-cores", avx_cores),
+        },
+        other => panic!(
+            "unknown --policy {other} (unmodified|corespec|corespec-numa|strict|class-native)"
+        ),
     }
 }
 
@@ -62,10 +70,11 @@ usage:
   avxfreq analyze [--isa sse4|avx2|avx512] [--min-ratio R]
   avxfreq flamegraph [--isa ...] [--counter throttle|cycles] [--out file.svg]
   avxfreq sim [--config file.toml] [--isa ...] [--adaptive]
-              [--policy unmodified|corespec|corespec-numa|strict] [--avx-cores K]
+              [--policy unmodified|corespec|corespec-numa|strict|class-native]
+              [--avx-cores K] [--p-cores K] [--hybrid P,E[,M]]
               [--sockets S] [--cores N] [--workers W]
               [--rate R] [--no-compress] [--fault-migrate] [--seconds S] [--seed N]
-  avxfreq matrix [--quick] [--seed N] [--threads T] [--full-isa]
+  avxfreq matrix [--quick] [--seed N] [--threads T] [--full-isa] [--hybrid]
   avxfreq traffic [--quick] [--seed N] [--threads T] [--loads 0.6,0.85,1.1]
                   [--arrivals poisson,bursty,diurnal,mix,bursty-mix] [--slo-ms 5]
   avxfreq fleet [--config configs/fleet_slo.toml] [--machines N]
@@ -85,7 +94,7 @@ usage:
   avxfreq serve [--artifacts DIR] [--port 8443]
   avxfreq calibrate [--artifacts DIR]
 experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar fleetscale energydelay
-             runtimespec fig6 ipc fig7 cryptobench ablations";
+             runtimespec hybridspec fig6 ipc fig7 cryptobench ablations";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -226,6 +235,38 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     if args.flag("fault-migrate") {
         cfg.fault_migrate = true;
         cfg.annotate = false;
+    }
+    if let Some(spec) = args.get("hybrid") {
+        // --hybrid P,E[,M]: a hybrid machine shape (e.g. 8,16,4 for the
+        // desktop 8P+16E part in 4-core modules). Overrides --cores: the
+        // shape *is* the core count.
+        let parts: Vec<usize> = spec
+            .split(',')
+            .map(|s| s.trim().parse())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("--hybrid {spec}: {e}"))?;
+        anyhow::ensure!(
+            parts.len() == 2 || parts.len() == 3,
+            "--hybrid P,E[,M] (e.g. 8,16,4), got {spec:?}"
+        );
+        let module = if parts.len() == 3 { parts[2] } else { 4 };
+        let h = avxfreq::cpu::HybridSpec::new(parts[0], parts[1], module)?;
+        anyhow::ensure!(
+            !(cfg.fault_migrate && h.has_e_cores()),
+            "--fault-migrate is incompatible with E-cores: a 512-bit fault on an E-core \
+             is #UD, not a migration trigger"
+        );
+        cfg.cores = h.n_cores();
+        if args.get("config").is_none() && args.get("workers").is_none() {
+            cfg.workers = cfg.cores * 2;
+        }
+        // class-native without an explicit size follows the machine.
+        if let PolicyKind::ClassNative { ref mut p_cores } = cfg.policy {
+            if args.get("p-cores").is_none() && args.get("avx-cores").is_none() {
+                *p_cores = h.p_cores;
+            }
+        }
+        cfg.hybrid = Some(h);
     }
     if args.flag("adaptive") {
         anyhow::ensure!(
@@ -883,6 +924,11 @@ fn cmd_matrix(args: &Args) -> anyhow::Result<()> {
     let mut m = avxfreq::scenario::ScenarioMatrix::default_sweep(quick, seed);
     if args.flag("full-isa") {
         m.isas = avxfreq::workload::crypto::Isa::all().to_vec();
+    }
+    if args.flag("hybrid") {
+        // Add the 8P+16E hybrid part to the topology axis (the default
+        // axes stay byte-identical without the flag).
+        m.topologies.push(avxfreq::scenario::TopologySpec::hybrid_8p16e());
     }
     eprintln!(
         "[avxfreq] matrix: {} cells across up to {} threads (seed {seed:#x})…",

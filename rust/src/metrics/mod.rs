@@ -415,6 +415,38 @@ pub fn hier_report(fleets: &[(&str, &HierFleetRun)]) -> Table {
     t
 }
 
+/// Hybrid-topology table: one row per cell *and frequency domain*
+/// (sockets, then E-core modules), reporting the domain's harmonic-mean
+/// busy frequency — the figure that exposes a shared module PLL being
+/// held down by one licensed sibling. Cells on homogeneous machines
+/// carry no per-domain rows ([`crate::workload::webserver::WebRun::domain_ghz`]
+/// is empty there) and are skipped, so a matrix without a hybrid
+/// topology axis renders an empty-bodied table. Fixed-precision
+/// formatting keeps the bytes stable for the golden-file test
+/// (`rust/tests/golden/hybrid_report.txt`) and the cross-thread
+/// determinism property.
+pub fn hybrid_report(cells: &[CellResult]) -> Table {
+    let mut t = Table::new(
+        "Hybrid domains — harmonic-mean busy GHz per socket / E-module",
+        &["cell", "topology", "isa", "policy", "governor", "domain", "harm GHz"],
+    );
+    for c in cells {
+        let s = &c.scenario;
+        for (domain, ghz) in &c.run.domain_ghz {
+            t.row(&[
+                s.index.to_string(),
+                s.topology.clone(),
+                s.isa.name().to_string(),
+                s.policy.clone(),
+                s.governor.name().to_string(),
+                domain.clone(),
+                fmt_f(*ghz, 3),
+            ]);
+        }
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -433,6 +465,13 @@ mod tests {
         let rows = machine_energy_rows(&m, "intel-legacy", 0, 1.0);
         assert_eq!(rows.len(), 3, "2 core rows + machine total");
         assert!(energy_report(&rows).render().contains("avg W"));
+    }
+
+    #[test]
+    fn hybrid_report_is_empty_without_hybrid_cells() {
+        let t = hybrid_report(&[]);
+        assert!(t.rows.is_empty());
+        assert!(t.render().contains("harm GHz"));
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod fig5_multisocket;
 pub mod fig5tail;
 pub mod energydelay;
 pub mod runtimespec;
+pub mod hybridspec;
 pub mod fig6_frequency;
 pub mod fig7_overhead;
 pub mod fleetscale;
@@ -64,10 +65,14 @@ impl Repro {
 /// as the fleet grows, `energydelay` the
 /// energy-delay-product restatement across DVFS governors, and
 /// `runtimespec` the runtime-level vs kernel-level core-specialization
-/// head-to-head through the thread-per-core executor).
+/// head-to-head through the thread-per-core executor, and `hybridspec`
+/// the hybrid P/E-core machine vs the homogeneous baseline under
+/// {unmodified, core-spec, class-native} with per-module harmonic-mean
+/// frequencies).
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig5ms", "fig5tail", "fleetvar", "fleetscale",
-    "energydelay", "runtimespec", "fig6", "ipc", "fig7", "cryptobench", "ablations",
+    "energydelay", "runtimespec", "hybridspec", "fig6", "ipc", "fig7", "cryptobench",
+    "ablations",
 ];
 
 /// Dispatch by id. `quick` trades precision for speed (shorter windows).
@@ -83,6 +88,7 @@ pub fn run(id: &str, quick: bool, seed: u64) -> anyhow::Result<Repro> {
         "fleetscale" => Ok(fleetscale::run(quick, seed)),
         "energydelay" => Ok(energydelay::run(quick, seed)),
         "runtimespec" => Ok(runtimespec::run(quick, seed)),
+        "hybridspec" => Ok(hybridspec::run(quick, seed)),
         "fig6" => Ok(fig6_frequency::run(quick, seed)),
         "ipc" => Ok(ipc_table::run(quick, seed)),
         "fig7" => Ok(fig7_overhead::run(quick)),

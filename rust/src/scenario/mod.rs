@@ -44,7 +44,7 @@
 //! assert_eq!(m.cells()[1].seed, cells[1].seed);
 //! ```
 
-use crate::cpu::{GovernorSpec, Topology};
+use crate::cpu::{GovernorSpec, HybridSpec, Topology};
 use crate::fleet::{
     run_fleet, run_hier_fleet, BalancerCfg, FleetCfg, FleetRun, HierFleetCfg, HierFleetRun,
     RouterSpec,
@@ -70,18 +70,22 @@ pub struct TopologySpec {
     pub cores: usize,
     /// Sockets (NUMA nodes / frequency domains).
     pub sockets: usize,
+    /// P/E-core split (`None` = homogeneous, the classic shape — every
+    /// pre-hybrid builder leaves this unset so default matrices expand
+    /// byte-identically). When set, `cores` must equal the spec's total.
+    pub hybrid: Option<HybridSpec>,
 }
 
 impl TopologySpec {
     /// The paper's evaluation machine: 12 server cores on one socket.
     pub fn single_socket_paper() -> Self {
-        TopologySpec { name: "1x12".to_string(), cores: 12, sockets: 1 }
+        TopologySpec { name: "1x12".to_string(), cores: 12, sockets: 1, hybrid: None }
     }
 
     /// Two of the paper's machines in one chassis: 2 sockets × 12 server
     /// cores.
     pub fn dual_socket_paper() -> Self {
-        TopologySpec { name: "2x12".to_string(), cores: 24, sockets: 2 }
+        TopologySpec { name: "2x12".to_string(), cores: 24, sockets: 2, hybrid: None }
     }
 
     /// Arbitrary `sockets` × `cores_per_socket` shape.
@@ -90,6 +94,19 @@ impl TopologySpec {
             name: format!("{sockets}x{cores_per_socket}"),
             cores: sockets * cores_per_socket,
             sockets,
+            hybrid: None,
+        }
+    }
+
+    /// The desktop hybrid part: 8 P-cores + 16 E-cores in 4-core
+    /// modules, one socket (see [`HybridSpec::desktop_8p16e`]).
+    pub fn hybrid_8p16e() -> Self {
+        let h = HybridSpec::desktop_8p16e();
+        TopologySpec {
+            name: h.label(),
+            cores: h.n_cores(),
+            sockets: 1,
+            hybrid: Some(h),
         }
     }
 
@@ -99,13 +116,7 @@ impl TopologySpec {
         if self.cores % s == 0 {
             Topology::multi_socket(s, self.cores / s)
         } else {
-            Topology {
-                physical_cores: self.cores,
-                smt: 1,
-                sockets: s,
-                server_cores: (0..self.cores).collect(),
-                client_cores: vec![],
-            }
+            Topology::uniform(self.cores, s)
         }
     }
 }
@@ -122,6 +133,9 @@ pub enum PolicySpec {
     CoreSpecNuma { avx_cores_per_socket: usize },
     /// §2.1 strict partitioning.
     StrictPartition { avx_cores: usize },
+    /// Hybrid-native specialization: the hardware P/E partition *is* the
+    /// AVX-core set ([`PolicyKind::ClassNative`]).
+    ClassNative { p_cores: usize },
 }
 
 impl PolicySpec {
@@ -134,6 +148,7 @@ impl PolicySpec {
                 format!("core-spec-numa({avx_cores_per_socket}/skt)")
             }
             PolicySpec::StrictPartition { avx_cores } => format!("strict({avx_cores})"),
+            PolicySpec::ClassNative { p_cores } => format!("class-native({p_cores})"),
         }
     }
 
@@ -149,6 +164,7 @@ impl PolicySpec {
             PolicySpec::StrictPartition { avx_cores } => {
                 PolicyKind::StrictPartition { avx_cores }
             }
+            PolicySpec::ClassNative { p_cores } => PolicyKind::ClassNative { p_cores },
         }
     }
 }
@@ -715,6 +731,11 @@ impl ScenarioMatrix {
                                                 );
                                                 cfg.cores = t.n_server_cores();
                                                 cfg.sockets = t.n_sockets();
+                                                // Homogeneous specs leave this
+                                                // None — the machine then takes
+                                                // the classic (byte-identical)
+                                                // socket-domain path.
+                                                cfg.hybrid = topo.hybrid;
                                                 cfg.workers = t.n_server_cores() * 2;
                                                 cfg.compress = workload.compress;
                                                 cfg.page_bytes = workload.page_kib * 1024;
@@ -1076,5 +1097,36 @@ mod tests {
         assert_eq!(t.n_server_cores(), 24);
         assert_eq!(t.n_sockets(), 4);
         assert_eq!(t.socket_of(23), 3);
+    }
+
+    #[test]
+    fn hybrid_topology_axis_sets_cfg_and_defaults_stay_homogeneous() {
+        // Default axes carry no hybrid spec — the classic expansion is
+        // untouched (the matrix-level differential anchor for this PR).
+        let classic = ScenarioMatrix::default_sweep(true, 7);
+        assert!(classic.cells().iter().all(|c| c.cfg.hybrid.is_none()));
+
+        let spec = TopologySpec::hybrid_8p16e();
+        assert_eq!(spec.name, "8P+16E");
+        assert_eq!(spec.cores, 24);
+        assert_eq!(spec.sockets, 1);
+
+        let mut m = ScenarioMatrix::default_sweep(true, 7);
+        m.topologies = vec![TopologySpec::single_socket_paper(), spec];
+        m.policies = vec![PolicySpec::ClassNative { p_cores: 8 }];
+        m.isas = vec![Isa::Avx512];
+        let cells = m.cells();
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].cfg.hybrid.is_none());
+        let h = cells[1].cfg.hybrid.expect("hybrid cell must carry the spec");
+        assert_eq!((h.p_cores, h.e_cores, h.module_size), (8, 16, 4));
+        assert_eq!(cells[1].cfg.cores, 24);
+        assert_eq!(cells[1].topology, "8P+16E");
+        assert_eq!(cells[1].policy, "class-native(8)");
+        assert_eq!(
+            cells[1].cfg.policy,
+            PolicyKind::ClassNative { p_cores: 8 },
+            "class-native instantiates to the hardware-partition policy"
+        );
     }
 }

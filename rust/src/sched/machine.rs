@@ -16,9 +16,10 @@ use super::task::{TaskId, TaskType};
 use crate::cpu::freq::{FreqParams, License};
 use crate::cpu::ipc::IpcParams;
 use crate::cpu::power::PowerParams;
+use crate::cpu::topology::{CoreClass, HybridSpec};
 use crate::cpu::turbo::TurboTable;
 use crate::cpu::Core;
-use crate::isa::block::Block;
+use crate::isa::block::{Block, InsnClass};
 use crate::sim::{EventQueue, Time};
 use crate::util::Rng;
 use std::collections::BTreeMap;
@@ -102,6 +103,13 @@ pub struct MachineParams {
     pub sched: SchedParams,
     pub policy: PolicyKind,
     pub seed: u64,
+    /// Hybrid P/E layout, if any. P-cores come first and use `turbo` /
+    /// `freq` unchanged; E-cores are grouped into modules sharing one
+    /// clock domain each, carry the L1 license ceiling
+    /// ([`FreqParams::efficiency_core`]) and run off the
+    /// [`TurboTable::e_core_module`] table. `None` — and any all-P spec —
+    /// leaves the machine byte-identical to the homogeneous model.
+    pub hybrid: Option<HybridSpec>,
     /// Cores outside the simulated set that are nevertheless awake (the
     /// paper's 4 client cores) — raises the active-core count. Spread
     /// over the sockets, remainder charged to the last sockets (where
@@ -132,6 +140,7 @@ impl MachineParams {
             sched: SchedParams::default(),
             policy,
             seed: 0xA5A5_5A5A,
+            hybrid: None,
             extra_active_cores: 0,
             track_flame: false,
             fault_migrate: None,
@@ -187,13 +196,31 @@ pub struct Machine {
     need_resched: Vec<Time>, // 0 = none, else extra cost to charge (ipi)
     q: EventQueue<Event>,
     channels: Vec<Channel>,
-    /// Socket (NUMA node / frequency domain) of each core.
+    /// Socket (NUMA node) of each core.
     socket_of: Vec<usize>,
-    /// Busy cores per socket — each socket is its own frequency domain,
-    /// so the turbo table's active-core axis is evaluated per socket.
-    busy_per_socket: Vec<usize>,
-    /// Always-awake external cores (load generator) per socket.
-    extra_per_socket: Vec<usize>,
+    /// Frequency domain of each core. Domains are the sockets (ids
+    /// `0..n_sockets`) followed by the E-core modules (ids `n_sockets..`)
+    /// on hybrid parts; on homogeneous and all-P machines this equals
+    /// `socket_of` exactly, so the turbo active-core axis is evaluated
+    /// per socket as before.
+    domain_of: Vec<usize>,
+    /// Socket count (domains `0..n_sockets` are the sockets).
+    n_sockets: usize,
+    /// Hybrid layout, if any (see [`MachineParams::hybrid`]).
+    hybrid: Option<HybridSpec>,
+    /// E-core turbo table (one module's shared clock), present iff the
+    /// hybrid spec has E-cores.
+    turbo_e: Option<TurboTable>,
+    /// Per-module license floor: until this instant the module's shared
+    /// PLL stays at the L1 plateau because some member core recently ran
+    /// licensed work (per-module hysteresis, stamped at slice ends).
+    module_l1_until: Vec<Time>,
+    /// Busy cores per frequency domain — the turbo table's active-core
+    /// axis is evaluated per domain.
+    busy_per_domain: Vec<usize>,
+    /// Always-awake external cores (load generator) per domain; only
+    /// socket domains ever carry extras (client cores are big cores).
+    extra_per_domain: Vec<usize>,
     track_flame: bool,
     fault_migrate: Option<FaultMigrateParams>,
     fast_paths: bool,
@@ -212,13 +239,31 @@ pub struct Machine {
     /// Per-core time spent running AVX-typed tasks (adaptive controller
     /// input: total AVX demand, regardless of which core carried it).
     pub avx_task_ns: Vec<Time>,
+    /// Blocks carrying AVX-512 instructions that executed on an E-core —
+    /// must stay 0 (the part has no 512-bit path; the scheduler's
+    /// capability confinement is responsible). Asserted by the property
+    /// tests, never rendered in reports.
+    pub e_wide512_blocks: u64,
 }
 
 impl Machine {
     pub fn new(p: MachineParams) -> Self {
+        if let Some(h) = p.hybrid {
+            assert_eq!(h.n_cores(), p.n_cores, "hybrid spec must cover every core");
+            assert!(
+                p.fault_migrate.is_none() || !h.has_e_cores(),
+                "fault-and-migrate is undefined with E-cores (512-bit code faults for real there)"
+            );
+        }
         let cores: Vec<Core> = (0..p.n_cores)
             .map(|i| {
-                let mut c = Core::new(i, p.freq.clone(), p.ipc.clone());
+                let freq = match p.hybrid {
+                    Some(h) if h.class_of(i) == CoreClass::Efficiency => {
+                        p.freq.clone().efficiency_core()
+                    }
+                    _ => p.freq.clone(),
+                };
+                let mut c = Core::new(i, freq, p.ipc.clone());
                 c.power = p.power;
                 c.memoize = p.fast_paths;
                 c
@@ -234,16 +279,45 @@ impl Machine {
         if let PolicyKind::CoreSpecNuma { sockets, .. } = &mut policy {
             *sockets = n_sockets;
         }
+        // Frequency domains: the sockets, then one domain per E-core
+        // module (shared PLL). All-P hybrids collapse to the socket
+        // domains, so `domain_of == socket_of` off the hybrid path.
+        let n_modules = p.hybrid.map_or(0, |h| h.n_modules());
+        let domain_of: Vec<usize> = (0..p.n_cores)
+            .map(|c| match p.hybrid.and_then(|h| h.module_of(c)) {
+                Some(m) => n_sockets + m,
+                None => socket_of[c],
+            })
+            .collect();
         // Spread the always-awake external cores over the sockets; the
         // remainder lands on the last sockets, where the paper's client
         // cores sit (single-socket machines keep the historical count).
-        let mut extra_per_socket = vec![p.extra_active_cores / n_sockets; n_sockets];
-        for i in 0..p.extra_active_cores % n_sockets {
-            extra_per_socket[n_sockets - 1 - i] += 1;
+        // Module domains never carry extras.
+        let mut extra_per_domain = vec![0; n_sockets + n_modules];
+        for s in 0..n_sockets {
+            extra_per_domain[s] = p.extra_active_cores / n_sockets;
         }
+        for i in 0..p.extra_active_cores % n_sockets {
+            extra_per_domain[n_sockets - 1 - i] += 1;
+        }
+        let confined = p.hybrid.is_some_and(|h| h.has_e_cores());
+        let sched = if confined {
+            Scheduler::new_hybrid(
+                policy,
+                p.sched.clone(),
+                socket_of.clone(),
+                p.hybrid.unwrap().capability_mask(),
+            )
+        } else {
+            Scheduler::new_numa(policy, p.sched.clone(), socket_of.clone())
+        };
+        let turbo_e = p
+            .hybrid
+            .filter(|h| h.has_e_cores())
+            .map(|h| TurboTable::e_core_module(h.module_size));
         Machine {
             cores,
-            sched: Scheduler::new_numa(policy, p.sched.clone(), socket_of.clone()),
+            sched,
             rng: Rng::new(p.seed),
             turbo: p.turbo.clone(),
             bodies: Vec::new(),
@@ -256,8 +330,13 @@ impl Machine {
             q: EventQueue::new(),
             channels: Vec::new(),
             socket_of,
-            busy_per_socket: vec![0; n_sockets],
-            extra_per_socket,
+            domain_of,
+            n_sockets,
+            hybrid: p.hybrid,
+            turbo_e,
+            module_l1_until: vec![0; n_modules],
+            busy_per_domain: vec![0; n_sockets + n_modules],
+            extra_per_domain,
             track_flame: p.track_flame,
             fault_migrate: p.fault_migrate,
             fast_paths: p.fast_paths,
@@ -266,6 +345,7 @@ impl Machine {
             coalesced_reps: 0,
             fm_faults: 0,
             avx_task_ns: vec![0; p.n_cores],
+            e_wide512_blocks: 0,
         }
     }
 
@@ -277,9 +357,20 @@ impl Machine {
         self.cores.len()
     }
 
-    /// Number of sockets (frequency domains / NUMA nodes).
+    /// Number of sockets (NUMA nodes).
     pub fn n_sockets(&self) -> usize {
-        self.busy_per_socket.len()
+        self.n_sockets
+    }
+
+    /// Number of frequency domains: the sockets, then the E-core
+    /// modules on hybrid parts.
+    pub fn n_domains(&self) -> usize {
+        self.busy_per_domain.len()
+    }
+
+    /// Hybrid layout, if any.
+    pub fn hybrid(&self) -> Option<HybridSpec> {
+        self.hybrid
     }
 
     /// Socket of `core`.
@@ -287,11 +378,95 @@ impl Machine {
         self.socket_of[core]
     }
 
+    /// Human label of frequency domain `d`: `skt0`… for sockets, then
+    /// `mod0`… for E-core modules.
+    pub fn domain_label(&self, d: usize) -> String {
+        if d < self.n_sockets {
+            format!("skt{d}")
+        } else {
+            format!("mod{}", d - self.n_sockets)
+        }
+    }
+
+    /// Per-domain harmonic-mean busy frequency, cpufetch-style:
+    /// `n / Σ(1/ghz_i)` over the domain's cores that ran at all. The
+    /// harmonic mean is the right average for "how fast did this clock
+    /// domain effectively run": it weights time, not cycles. Domains
+    /// that never ran report 0.
+    pub fn domain_harmonic_ghz(&self) -> Vec<(String, f64)> {
+        (0..self.n_domains())
+            .map(|d| {
+                let mut inv = 0.0;
+                let mut n = 0usize;
+                for (c, core) in self.cores.iter().enumerate() {
+                    if self.domain_of[c] == d {
+                        let ghz = core.perf.avg_busy_ghz();
+                        if ghz > 0.0 {
+                            inv += 1.0 / ghz;
+                            n += 1;
+                        }
+                    }
+                }
+                let hm = if n > 0 { n as f64 / inv } else { 0.0 };
+                (self.domain_label(d), hm)
+            })
+            .collect()
+    }
+
     /// Active (busy + external) cores in `core`'s frequency domain — the
     /// value fed to the turbo table's active-core axis.
     fn active_cores(&self, core: usize) -> usize {
-        let s = self.socket_of[core];
-        (self.busy_per_socket[s] + self.extra_per_socket[s]).max(1)
+        let d = self.domain_of[core];
+        (self.busy_per_domain[d] + self.extra_per_domain[d]).max(1)
+    }
+
+    /// Is `core` an E-core (member of a module frequency domain)?
+    fn is_e_core(&self, core: usize) -> bool {
+        self.domain_of[core] >= self.n_sockets
+    }
+
+    /// Module index of an E-core.
+    fn module_of(&self, core: usize) -> usize {
+        self.domain_of[core] - self.n_sockets
+    }
+
+    /// License floor an E-core's module imposes at `t`: the shared PLL
+    /// stays at the L1 plateau until the per-module hold window expires.
+    fn module_floor(&self, core: usize, t: Time) -> License {
+        if t < self.module_l1_until[self.module_of(core)] {
+            License::L1
+        } else {
+            License::L0
+        }
+    }
+
+    /// Per-effective-license frequency row of an E-core at `t`: the
+    /// module floor is applied on top of the core's own license, and the
+    /// L2 row is pinned at L1 (the license ceiling makes it unreachable;
+    /// pinning keeps the row well-defined).
+    fn e_core_freqs(&self, core: usize, t: Time, active: usize) -> [f64; 3] {
+        let floor = self.module_floor(core, t);
+        let te = self.turbo_e.as_ref().expect("E-core without E turbo table");
+        [
+            te.ghz(License::L0.max(floor), active),
+            te.ghz(License::L1.max(floor), active),
+            te.ghz(License::L1, active),
+        ]
+    }
+
+    /// After an E-core slice ending at `end`: while the core holds L1
+    /// the module's shared clock stays at the L1 plateau for the hold
+    /// window past the slice (per-module hysteresis). Sampled per block
+    /// boundary — exactly where the license state machine itself is
+    /// observed — so fast and slow paths see identical floors.
+    fn stamp_module_floor(&mut self, core: usize, end: Time) {
+        if self.cores[core].license.granted() >= License::L1 {
+            let until = end + self.cores[core].license.params().hold;
+            let m = self.module_of(core);
+            if until > self.module_l1_until[m] {
+                self.module_l1_until[m] = until;
+            }
+        }
     }
 
     /// Create a channel (work queue) and return its id.
@@ -440,7 +615,12 @@ impl Machine {
         const KERNEL_IPC: f64 = 1.4;
         let lic = self.cores[core].license.granted();
         let active = self.active_cores(core);
-        let ghz = self.turbo.ghz(lic, active);
+        let ghz = if self.is_e_core(core) {
+            let lic = lic.max(self.module_floor(core, self.q.now()));
+            self.turbo_e.as_ref().expect("E-core without E turbo table").ghz(lic, active)
+        } else {
+            self.turbo.ghz(lic, active)
+        };
         let cycles = ns as f64 * ghz;
         let insns = (cycles * KERNEL_IPC) as u64;
         let branches = insns / 6;
@@ -607,6 +787,15 @@ impl Machine {
     ) {
         let reps = reps.max(1);
 
+        // Confinement invariant counter: a block carrying AVX-512
+        // instructions on an E-core means the scheduler's capability
+        // confinement failed — on hardware this would #UD.
+        if self.is_e_core(core)
+            && block.mix.get(InsnClass::Avx512Light) + block.mix.get(InsnClass::Avx512Heavy) > 0
+        {
+            self.e_wide512_blocks += 1;
+        }
+
         // §6.1 fault-and-migrate: an unannotated/scalar task about to
         // execute wide instructions traps, is reclassified AVX, and (if
         // on a scalar core) suspended before the block runs. Trap and
@@ -667,10 +856,19 @@ impl Machine {
         self.charge_overhead(core, pending_ns);
         let active = self.active_cores(core);
 
+        let e_core = self.is_e_core(core);
+
         if !self.fast_paths {
             // Baseline: one repetition per scheduling boundary.
-            let out =
-                self.cores[core].run_block(now + pending_ns, &block, func, active, &self.turbo);
+            let t0 = now + pending_ns;
+            let out = if e_core {
+                let freqs = self.e_core_freqs(core, t0, active);
+                let out = self.cores[core].run_block_with_freqs(t0, &block, func, &freqs);
+                self.stamp_module_floor(core, t0 + out.ns);
+                out
+            } else {
+                self.cores[core].run_block(t0, &block, func, active, &self.turbo)
+            };
             self.attribute_flame(stack, &out);
             self.finish_single_rep(core, task, pending_ns, block, func, stack, reps, out.ns);
             return;
@@ -678,7 +876,11 @@ impl Machine {
 
         // Fast path: coalesced window. The active-core count is
         // constant inside the window (no reschedules, no wakes), so the
-        // per-license turbo lookups hoist out of the loop.
+        // per-license turbo lookups hoist out of the loop. E-cores
+        // re-derive their row per repetition instead: the module floor
+        // is sampled at every block boundary (and stamped at every
+        // block end) exactly as the slow path does, so the two paths
+        // cannot drift — only the event-queue round trip is elided.
         let freqs = [
             self.turbo.ghz(License::L0, active),
             self.turbo.ghz(License::L1, active),
@@ -694,7 +896,14 @@ impl Machine {
         let mut first = true;
         loop {
             let t = now + pending_ns + total_ns;
-            let out = self.cores[core].run_block_with_freqs(t, &block, func, &freqs);
+            let out = if e_core {
+                let row = self.e_core_freqs(core, t, active);
+                let out = self.cores[core].run_block_with_freqs(t, &block, func, &row);
+                self.stamp_module_floor(core, t + out.ns);
+                out
+            } else {
+                self.cores[core].run_block_with_freqs(t, &block, func, &freqs)
+            };
             self.attribute_flame(stack, &out);
             total_ns += out.ns;
             reps_left -= 1;
@@ -782,7 +991,7 @@ impl Machine {
                 }
                 self.charge_overhead(core, cost);
                 if !was_busy {
-                    self.busy_per_socket[self.socket_of[core]] += 1;
+                    self.busy_per_domain[self.domain_of[core]] += 1;
                 }
                 self.run[core] = CoreRun::Busy { task };
                 self.quantum_end[core] = now + cost + self.sched.params.rr_interval;
@@ -791,7 +1000,7 @@ impl Machine {
             }
             None => {
                 if was_busy {
-                    self.busy_per_socket[self.socket_of[core]] -= 1;
+                    self.busy_per_domain[self.domain_of[core]] -= 1;
                 }
                 self.run[core] = CoreRun::Idle { since: now + cost };
             }
@@ -1389,5 +1598,183 @@ mod tests {
                 "fault-and-migrate must keep AVX off scalar core {c}"
             );
         }
+    }
+
+    /// 2P+4E (modules of 2) hybrid machine.
+    fn hybrid_machine(policy: PolicyKind) -> Machine {
+        let spec = crate::cpu::HybridSpec::new(2, 4, 2).unwrap();
+        let mut p = MachineParams::new(spec.n_cores(), policy);
+        p.turbo = TurboTable::flat(2.8, 2.4, 1.9, spec.n_cores());
+        p.hybrid = Some(spec);
+        Machine::new(p)
+    }
+
+    #[test]
+    fn hybrid_avx512_confined_to_p_cores() {
+        // Annotated AVX-512 work on a hybrid machine, under both a
+        // specializing policy and the stock one: no 512-bit block may
+        // ever execute on an E-core.
+        for policy in [PolicyKind::CoreSpec { avx_cores: 2 }, PolicyKind::Unmodified] {
+            let mut m = hybrid_machine(policy.clone());
+            let done = Rc::new(RefCell::new(0u64));
+            for _ in 0..8 {
+                m.spawn(
+                    TaskType::Scalar,
+                    0,
+                    Box::new(AnnotatedAvx { iters: 200, done: done.clone() }),
+                );
+            }
+            m.run_until(20 * SEC, &mut NullDriver);
+            assert_eq!(*done.borrow(), 8, "{policy:?}");
+            assert_eq!(m.e_wide512_blocks, 0, "{policy:?}: AVX-512 block ran on an E-core");
+            assert!(
+                (0..2).any(|c| m.cores[c].perf.license_cycles[2] > 0),
+                "{policy:?}: the P-cores must have carried the AVX-512 work"
+            );
+        }
+    }
+
+    #[test]
+    fn all_p_hybrid_is_byte_identical_to_homogeneous() {
+        // A hybrid spec with zero E-cores must not perturb anything:
+        // same domains, same scheduler, same bytes.
+        let run = |hybrid: bool| {
+            let mut p = MachineParams::new(4, PolicyKind::CoreSpec { avx_cores: 1 });
+            p.turbo = TurboTable::flat(2.8, 2.4, 1.9, 4);
+            if hybrid {
+                p.hybrid = Some(crate::cpu::HybridSpec::new(4, 0, 0).unwrap());
+            }
+            let mut m = Machine::new(p);
+            let done = Rc::new(RefCell::new(0u64));
+            for _ in 0..5 {
+                m.spawn(
+                    TaskType::Scalar,
+                    0,
+                    Box::new(AnnotatedAvx { iters: 300, done: done.clone() }),
+                );
+            }
+            m.run_until(20 * SEC, &mut NullDriver);
+            assert_eq!(*done.borrow(), 5);
+            fingerprint(&m)
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    /// Untyped body alternating heavy-AVX2 bursts (L1 demand — legal on
+    /// E-cores) and scalar stretches: exercises the license ceiling and
+    /// the per-module floor stamping/expiry on E-cores.
+    struct Avx2Churn {
+        iters: u64,
+        done: Rc<RefCell<u64>>,
+    }
+    impl TaskBody for Avx2Churn {
+        fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+            if self.iters == 0 {
+                *self.done.borrow_mut() += 1;
+                return Action::Exit;
+            }
+            self.iters -= 1;
+            if self.iters % 5 == 0 {
+                Action::Run {
+                    block: Block {
+                        mix: ClassMix::of(InsnClass::Avx2Heavy, 30_000),
+                        mem_ops: 100,
+                        branches: 100,
+                        license_exempt: false,
+                    },
+                    func: 9,
+                    stack: 0,
+                }
+            } else {
+                Action::RunMany {
+                    block: Block {
+                        mix: ClassMix::scalar(25_000),
+                        mem_ops: 100,
+                        branches: 300,
+                        license_exempt: false,
+                    },
+                    reps: 8,
+                    func: 3,
+                    stack: 0,
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_fast_paths_bit_identical_to_slow_paths() {
+        // Module-floor sampling happens per block boundary in both
+        // paths, so coalescing on E-cores must not drift.
+        let run = |fast: bool| {
+            let spec = crate::cpu::HybridSpec::new(2, 4, 2).unwrap();
+            let mut p = MachineParams::new(spec.n_cores(), PolicyKind::CoreSpec { avx_cores: 2 });
+            p.turbo = TurboTable::flat(2.8, 2.4, 1.9, spec.n_cores());
+            p.hybrid = Some(spec);
+            p.fast_paths = fast;
+            let mut m = Machine::new(p);
+            let done = Rc::new(RefCell::new(0u64));
+            for i in 0..10 {
+                if i % 2 == 0 {
+                    m.spawn(
+                        TaskType::Scalar,
+                        0,
+                        Box::new(AnnotatedAvx { iters: 200, done: done.clone() }),
+                    );
+                } else {
+                    m.spawn(
+                        TaskType::Untyped,
+                        0,
+                        Box::new(Avx2Churn { iters: 200, done: done.clone() }),
+                    );
+                }
+            }
+            m.run_until(30 * SEC, &mut NullDriver);
+            assert_eq!(*done.borrow(), 10);
+            assert_eq!(m.e_wide512_blocks, 0);
+            fingerprint(&m)
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn e_core_module_floor_holds_the_shared_clock_down() {
+        // One E-core module of two cores: core 2 hammers AVX2-heavy
+        // blocks (L1), core 3 runs scalar work in the same module — the
+        // shared PLL must drag core 3's busy frequency below what the
+        // scalar-only E-core in the *other* module achieves.
+        let mut m = hybrid_machine(PolicyKind::Unmodified);
+        let done = Rc::new(RefCell::new(0u64));
+        // Fill all six cores so placement is stable (spawn i lands on
+        // core i: each wake dispatches to the first unreserved idle
+        // core in ascending order).
+        let heavy = |done: &Rc<RefCell<u64>>| {
+            Box::new(Avx2Churn { iters: 400, done: done.clone() }) as Box<dyn TaskBody>
+        };
+        let scalar = |done: &Rc<RefCell<u64>>| {
+            Box::new(ScalarLoop { remaining: 2_000, done: done.clone() }) as Box<dyn TaskBody>
+        };
+        let bodies: Vec<Box<dyn TaskBody>> = vec![
+            scalar(&done),
+            scalar(&done),
+            heavy(&done),  // module 0, core 2
+            scalar(&done), // module 0, core 3
+            scalar(&done), // module 1, core 4
+            scalar(&done), // module 1, core 5
+        ];
+        for b in bodies {
+            m.spawn(TaskType::Untyped, 0, b);
+        }
+        m.run_until(30 * SEC, &mut NullDriver);
+        assert_eq!(*done.borrow(), 6);
+        let hm = m.domain_harmonic_ghz();
+        assert_eq!(hm.len(), 3, "1 socket + 2 modules");
+        assert_eq!(hm[0].0, "skt0");
+        assert_eq!(hm[1].0, "mod0");
+        assert_eq!(hm[2].0, "mod1");
+        assert!(
+            hm[1].1 < hm[2].1,
+            "module 0 (licensed neighbour) must clock below module 1: {:?}",
+            hm
+        );
     }
 }

@@ -16,7 +16,7 @@
 //!   immediately; a scalar task occupying an AVX core is preempted via
 //!   IPI so the core can take the new AVX task (§3.2).
 
-use super::policy::PolicyKind;
+use super::policy::{PolicyKind, SCALAR_ON_AVX_PENALTY};
 use super::skiplist::{Key, SkipList};
 use super::task::{RunState, SchedEntity, TaskId, TaskType};
 use crate::sim::Time;
@@ -138,7 +138,59 @@ pub struct Scheduler {
     /// this is exactly the historical `0..n_cores` scan, so the paper's
     /// single-socket placement is unchanged.
     wake_order: Vec<Vec<usize>>,
+    /// Per-core AVX-512 capability on hybrid machines (`true` = P-core).
+    /// `None` — every core capable — leaves every decision byte-identical
+    /// to the pre-hybrid scheduler. When present, AVX-typed tasks are
+    /// *never* eligible on an incapable core, whatever the policy says:
+    /// the hardware has no 512-bit path there.
+    avx_capable: Option<Vec<bool>>,
+    /// Effective AVX-core set when the policy's index arithmetic must be
+    /// remapped onto the capable cores. On a hybrid part CoreSpec's
+    /// "last K cores" *are* the E-cores — exactly the incapable ones —
+    /// so intersecting naively would leave AVX work with nowhere to run;
+    /// instead the last-K (or per-socket last-k) selection is re-applied
+    /// over the capable core list once at construction. `None` = use the
+    /// policy's own arithmetic (homogeneous machines).
+    avx_set: Option<Vec<bool>>,
     pub stats: SchedStats,
+}
+
+/// Remap the policy's AVX-core selection onto the capable (P) cores of a
+/// hybrid machine. `ClassNative` takes the hardware partition verbatim;
+/// the last-K policies re-run their selection over the capable id list;
+/// `Unmodified` has no set.
+fn remap_avx_set(
+    policy: &PolicyKind,
+    socket_of: &[usize],
+    capable: &[bool],
+) -> Option<Vec<bool>> {
+    let n = capable.len();
+    let mark_last_k = |ids: &[usize], k: usize, set: &mut [bool]| {
+        let k = k.min(ids.len());
+        for &c in &ids[ids.len() - k..] {
+            set[c] = true;
+        }
+    };
+    match policy {
+        PolicyKind::Unmodified => None,
+        PolicyKind::ClassNative { .. } => Some(capable.to_vec()),
+        PolicyKind::CoreSpec { avx_cores } | PolicyKind::StrictPartition { avx_cores } => {
+            let ids: Vec<usize> = (0..n).filter(|&c| capable[c]).collect();
+            let mut set = vec![false; n];
+            mark_last_k(&ids, *avx_cores, &mut set);
+            Some(set)
+        }
+        PolicyKind::CoreSpecNuma { avx_cores_per_socket, .. } => {
+            let n_sockets = socket_of.iter().copied().max().map_or(1, |m| m + 1);
+            let mut set = vec![false; n];
+            for s in 0..n_sockets {
+                let ids: Vec<usize> =
+                    (0..n).filter(|&c| socket_of[c] == s && capable[c]).collect();
+                mark_last_k(&ids, *avx_cores_per_socket, &mut set);
+            }
+            Some(set)
+        }
+    }
 }
 
 /// Per-core scan order over `socket_of`: same-socket cores ascending and
@@ -199,9 +251,34 @@ impl Scheduler {
     /// Socket ids must be contiguous from 0 (see
     /// [`crate::cpu::topology::socket_map`]).
     pub fn new_numa(policy: PolicyKind, params: SchedParams, socket_of: Vec<usize>) -> Self {
+        Self::with_capability(policy, params, socket_of, None)
+    }
+
+    /// Hybrid-aware scheduler: `capable[c]` says whether core `c` has the
+    /// AVX-512 path (P-core). Installing a mask turns on *confinement* —
+    /// AVX-typed tasks never become eligible on incapable cores, and the
+    /// stock (`Unmodified`) policy keeps typed queues so the constraint
+    /// is enforceable at all.
+    pub fn new_hybrid(
+        policy: PolicyKind,
+        params: SchedParams,
+        socket_of: Vec<usize>,
+        capable: Vec<bool>,
+    ) -> Self {
+        assert_eq!(capable.len(), socket_of.len(), "capability mask must cover every core");
+        Self::with_capability(policy, params, socket_of, Some(capable))
+    }
+
+    fn with_capability(
+        policy: PolicyKind,
+        params: SchedParams,
+        socket_of: Vec<usize>,
+        capable: Option<Vec<bool>>,
+    ) -> Self {
         let n_cores = socket_of.len();
         let scan_order = build_scan_order(&socket_of);
         let wake_order = build_wake_order(&socket_of);
+        let avx_set = capable.as_ref().and_then(|cap| remap_avx_set(&policy, &socket_of, cap));
         Scheduler {
             policy,
             params,
@@ -213,7 +290,73 @@ impl Scheduler {
             socket_of,
             scan_order,
             wake_order,
+            avx_capable: capable,
+            avx_set,
             stats: SchedStats::default(),
+        }
+    }
+
+    /// Is the hybrid capability mask installed?
+    fn confined(&self) -> bool {
+        self.avx_capable.is_some()
+    }
+
+    /// Effective AVX-core membership: the remapped hybrid set when
+    /// installed, the policy's own arithmetic otherwise.
+    fn core_is_avx(&self, core: usize) -> bool {
+        match &self.avx_set {
+            Some(set) => set[core],
+            None => self.policy.is_avx_core(core, self.n_cores),
+        }
+    }
+
+    /// May `core` run a task of `ttype`? Capability first (AVX work never
+    /// lands on an incapable core), then the policy — over the remapped
+    /// set when one is installed.
+    fn core_eligible(&self, core: usize, ttype: TaskType) -> bool {
+        if ttype == TaskType::Avx {
+            if let Some(cap) = &self.avx_capable {
+                if !cap[core] {
+                    return false;
+                }
+            }
+        }
+        if let Some(set) = &self.avx_set {
+            return match self.policy {
+                PolicyKind::StrictPartition { .. } => match ttype {
+                    TaskType::Avx => set[core],
+                    TaskType::Scalar => !set[core],
+                    TaskType::Untyped => true,
+                },
+                _ => match ttype {
+                    TaskType::Avx => set[core],
+                    _ => true,
+                },
+            };
+        }
+        // Confined Unmodified has no remapped set: the capability gate
+        // above is its only constraint.
+        if matches!(self.policy, PolicyKind::Unmodified) {
+            return true;
+        }
+        self.policy.eligible(core, self.n_cores, ttype)
+    }
+
+    /// Deadline penalty `core` applies to a task of `ttype`, over the
+    /// remapped AVX set when one is installed.
+    fn core_penalty(&self, core: usize, ttype: TaskType) -> Time {
+        match &self.avx_set {
+            Some(set) => match self.policy {
+                PolicyKind::CoreSpec { .. }
+                | PolicyKind::CoreSpecNuma { .. }
+                | PolicyKind::ClassNative { .. }
+                    if ttype == TaskType::Scalar && set[core] =>
+                {
+                    SCALAR_ON_AVX_PENALTY
+                }
+                _ => 0,
+            },
+            None => self.policy.deadline_penalty(core, self.n_cores, ttype),
         }
     }
 
@@ -257,10 +400,14 @@ impl Scheduler {
 
     /// Queue index a task of this type uses. Under `Unmodified` all tasks
     /// live in the untyped queue (the stock scheduler has one queue per
-    /// core; using index 2 for everything models that exactly).
+    /// core; using index 2 for everything models that exactly) — *unless*
+    /// a capability mask is installed: on a hybrid part even the stock
+    /// kernel distinguishes AVX-512 tasks (the 512-bit path simply does
+    /// not exist on an E-core), so typed queues stay on to make the
+    /// capability constraint enforceable.
     fn queue_index(&self, ttype: TaskType) -> usize {
         match self.policy {
-            PolicyKind::Unmodified => TaskType::Untyped.queue_index(),
+            PolicyKind::Unmodified if !self.confined() => TaskType::Untyped.queue_index(),
             _ => ttype.queue_index(),
         }
     }
@@ -274,7 +421,7 @@ impl Scheduler {
             1 => TaskType::Avx,
             _ => TaskType::Untyped,
         };
-        key.vdeadline as u128 + self.policy.deadline_penalty(core, self.n_cores, ttype) as u128
+        key.vdeadline as u128 + self.core_penalty(core, ttype) as u128
     }
 
     fn eligible_queue(&self, core: usize, qi: usize) -> bool {
@@ -284,8 +431,8 @@ impl Scheduler {
             _ => TaskType::Untyped,
         };
         match self.policy {
-            PolicyKind::Unmodified => qi == 2,
-            _ => self.policy.eligible(core, self.n_cores, ttype),
+            PolicyKind::Unmodified if !self.confined() => qi == 2,
+            _ => self.core_eligible(core, ttype),
         }
     }
 
@@ -333,7 +480,7 @@ impl Scheduler {
         let deadline = self.entities[task.0].vdeadline;
         // Idle eligible core?
         let effective_type = match self.policy {
-            PolicyKind::Unmodified => TaskType::Untyped,
+            PolicyKind::Unmodified if !self.confined() => TaskType::Untyped,
             _ => ttype,
         };
         for i in 0..self.n_cores {
@@ -341,7 +488,7 @@ impl Scheduler {
             if Some(core) != exclude
                 && self.running[core].is_none()
                 && !reserved(core)
-                && self.policy.eligible(core, self.n_cores, effective_type)
+                && self.core_eligible(core, effective_type)
             {
                 return WakeTarget::DispatchIdle(core);
             }
@@ -354,19 +501,19 @@ impl Scheduler {
         let home_socket = self.socket_of[home];
         let mut best: Option<(u128, usize)> = None;
         for core in 0..self.n_cores {
-            if Some(core) == exclude || !self.policy.eligible(core, self.n_cores, effective_type) {
+            if Some(core) == exclude || !self.core_eligible(core, effective_type) {
                 continue;
             }
             let Some(cur) = self.running[core] else { continue };
             let cur_e = &self.entities[cur.0];
             let cur_type = match self.policy {
-                PolicyKind::Unmodified => TaskType::Untyped,
+                PolicyKind::Unmodified if !self.confined() => TaskType::Untyped,
                 _ => cur_e.ttype,
             };
-            let cur_eff = cur_e.vdeadline as u128
-                + self.policy.deadline_penalty(core, self.n_cores, cur_type) as u128;
-            let mut new_eff = deadline as u128
-                + self.policy.deadline_penalty(core, self.n_cores, effective_type) as u128;
+            let cur_eff =
+                cur_e.vdeadline as u128 + self.core_penalty(core, cur_type) as u128;
+            let mut new_eff =
+                deadline as u128 + self.core_penalty(core, effective_type) as u128;
             if self.socket_of[core] != home_socket {
                 new_eff += self.params.numa_steal_penalty as u128;
             }
@@ -416,7 +563,7 @@ impl Scheduler {
                 1 => TaskType::Avx,
                 _ => TaskType::Untyped,
             };
-            *p = self.policy.deadline_penalty(core, self.n_cores, ttype) as u128;
+            *p = self.core_penalty(core, ttype) as u128;
         }
         let my_socket = self.socket_of[core];
         // Local queues first (ties go to local because of strict `<`).
@@ -520,14 +667,21 @@ impl Scheduler {
         e.type_changes += 1;
         self.stats.type_changes += 1;
         let _ = now;
-        if matches!(self.policy, PolicyKind::Unmodified) {
+        if matches!(self.policy, PolicyKind::Unmodified) && !self.confined() {
             return TypeChangeOutcome::Continue;
         }
         // If the current core may no longer run this task type, the thread
         // is suspended immediately and the core schedules something else.
-        if !self.policy.eligible(core, self.n_cores, new_type) {
+        // (For confined `Unmodified` this is the capability check and
+        // nothing more: the stock policy never yields a core to queued
+        // AVX work, it only refuses to run 512-bit code where no 512-bit
+        // path exists.)
+        if !self.core_eligible(core, new_type) {
             self.stats.forced_suspends += 1;
             return TypeChangeOutcome::SuspendSelf;
+        }
+        if matches!(self.policy, PolicyKind::Unmodified) {
+            return TypeChangeOutcome::Continue;
         }
         // `without_avx()` on an AVX core "reverts the task type change and
         // potentially migrates the task to a scalar core" (Fig 4): if AVX
@@ -535,10 +689,7 @@ impl Scheduler {
         // core — scalar work must not occupy an AVX core while AVX tasks
         // queue (§3.1: AVX cores only run scalar tasks when nothing else
         // is available).
-        if new_type == TaskType::Scalar
-            && self.policy.is_avx_core(core, self.n_cores)
-            && self.avx_work_runnable()
-        {
+        if new_type == TaskType::Scalar && self.core_is_avx(core) && self.avx_work_runnable() {
             self.stats.forced_suspends += 1;
             return TypeChangeOutcome::SuspendSelf;
         }
@@ -864,5 +1015,107 @@ mod tests {
         assert!(s.pick(0, 0).is_none(), "scalar core 0 must not pick AVX");
         assert!(s.pick(0, 2).is_none(), "scalar core 2 must not pick AVX");
         assert_eq!(s.pick(0, 1), Some(avx), "socket-0 AVX core takes it");
+    }
+
+    /// 2P+2E on one socket: cores 0,1 capable; cores 2,3 not.
+    fn hybrid_sched(policy: PolicyKind) -> Scheduler {
+        Scheduler::new_hybrid(
+            policy,
+            SchedParams::default(),
+            vec![0, 0, 0, 0],
+            vec![true, true, false, false],
+        )
+    }
+
+    #[test]
+    fn hybrid_corespec_remaps_avx_set_onto_p_cores() {
+        // CoreSpec's "last 2 cores" would be the E-cores; the remap must
+        // land the AVX set on the capable list instead: cores {0, 1}.
+        let mut s = hybrid_sched(PolicyKind::CoreSpec { avx_cores: 2 });
+        assert_eq!(s.avx_set, Some(vec![true, true, false, false]));
+        let avx = s.add_task(TaskType::Avx, 0);
+        s.enqueue(0, avx, 0, &|_| false, None);
+        assert!(s.pick(0, 2).is_none(), "E-core must not pick AVX");
+        assert!(s.pick(0, 3).is_none(), "E-core must not pick AVX");
+        assert_eq!(s.pick(0, 0), Some(avx), "remapped AVX core takes it");
+        // Scalar work pays the AVX-core penalty on the remapped set: an
+        // AVX task with a later deadline still wins on core 1.
+        let scalar = s.add_task(TaskType::Scalar, -10);
+        let avx2 = s.add_task(TaskType::Avx, 10);
+        s.enqueue(0, scalar, 1, &|_| false, None);
+        s.enqueue(0, avx2, 1, &|_| false, None);
+        assert_eq!(s.pick(0, 1), Some(avx2), "penalty must follow the remap");
+    }
+
+    #[test]
+    fn hybrid_unmodified_confines_avx_to_capable_cores() {
+        // Even the stock policy keeps typed queues under confinement, and
+        // AVX work never lands on an E-core — but scalar work still runs
+        // anywhere, and nothing else changes.
+        let mut s = hybrid_sched(PolicyKind::Unmodified);
+        assert!(s.avx_set.is_none(), "Unmodified has no remapped set");
+        let avx = s.add_task(TaskType::Avx, 0);
+        s.enqueue(0, avx, 0, &|_| false, None);
+        assert_eq!(s.debug_census(), [0, 1, 0], "typed queues stay on");
+        assert!(s.pick(0, 2).is_none(), "E-core must not pick AVX");
+        assert_eq!(s.pick(0, 1), Some(avx));
+        // Scalar → AVX transition on an E-core suspends (no 512-bit path);
+        // on a P-core it continues.
+        let t = s.add_task(TaskType::Scalar, 0);
+        s.enqueue(0, t, 3, &|_| false, None);
+        assert_eq!(s.pick(0, 3), Some(t));
+        assert_eq!(s.set_task_type(10, 3, TaskType::Avx), TypeChangeOutcome::SuspendSelf);
+    }
+
+    #[test]
+    fn hybrid_class_native_uses_the_hardware_partition() {
+        let mut s = hybrid_sched(PolicyKind::ClassNative { p_cores: 2 });
+        assert_eq!(s.avx_set, Some(vec![true, true, false, false]));
+        let avx = s.add_task(TaskType::Avx, 0);
+        s.enqueue(0, avx, 0, &|_| false, None);
+        assert!(s.pick(0, 2).is_none());
+        assert_eq!(s.pick(0, 0), Some(avx));
+        // Untyped work remains runnable everywhere.
+        let u = s.add_task(TaskType::Untyped, 0);
+        s.enqueue(0, u, 2, &|_| false, None);
+        assert_eq!(s.pick(0, 2), Some(u));
+    }
+
+    #[test]
+    fn hybrid_wake_never_targets_an_incapable_core_for_avx() {
+        let mut s = hybrid_sched(PolicyKind::CoreSpec { avx_cores: 2 });
+        // All P-cores busy with AVX work; waking another AVX task must not
+        // dispatch to the idle E-cores.
+        for core in 0..2 {
+            let t = s.add_task(TaskType::Avx, 0);
+            s.enqueue(0, t, core, &|_| false, None);
+            assert_eq!(s.pick(0, core), Some(t));
+        }
+        let w = s.add_task(TaskType::Avx, 0);
+        match s.enqueue(MS, w, 2, &|_| false, None) {
+            WakeTarget::DispatchIdle(c) => panic!("dispatched AVX to idle E-core {c}"),
+            WakeTarget::Preempt(c) => assert!(c < 2, "preempted incapable core {c}"),
+            WakeTarget::Queued => {}
+        }
+    }
+
+    #[test]
+    fn homogeneous_hybrid_mask_changes_nothing() {
+        // An all-capable mask remaps CoreSpec's set onto… the same last-K
+        // cores, so every decision matches the unmasked scheduler.
+        let mut a = sched(PolicyKind::CoreSpec { avx_cores: 1 }, 4);
+        let mut b = Scheduler::new_hybrid(
+            PolicyKind::CoreSpec { avx_cores: 1 },
+            SchedParams::default(),
+            vec![0; 4],
+            vec![true; 4],
+        );
+        assert_eq!(b.avx_set, Some(vec![false, false, false, true]));
+        for s in [&mut a, &mut b] {
+            let avx = s.add_task(TaskType::Avx, 0);
+            s.enqueue(0, avx, 0, &|_| false, None);
+            assert!(s.pick(0, 0).is_none());
+            assert_eq!(s.pick(0, 3), Some(avx));
+        }
     }
 }

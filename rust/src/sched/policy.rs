@@ -69,6 +69,15 @@ pub enum PolicyKind {
     /// AVX cores. Underutilizes whenever the core ratio mismatches the
     /// workload mix (evaluated in the ablation benches).
     StrictPartition { avx_cores: usize },
+    /// Hybrid-native specialization: the hardware's own class partition
+    /// *is* the AVX-core set — the **first** `p_cores` cores (P-cores come
+    /// first in [`crate::cpu::HybridSpec`]'s layout, deliberately
+    /// inverting the last-K convention above). CoreSpec semantics
+    /// otherwise: AVX confined to the set, scalar deprioritized there.
+    /// On a homogeneous machine this is simply CoreSpec over the first K
+    /// cores — the head-to-head `repro hybridspec` asks whether the
+    /// hardware partition gives the paper's mitigation "for free".
+    ClassNative { p_cores: usize },
 }
 
 impl PolicyKind {
@@ -79,6 +88,7 @@ impl PolicyKind {
             PolicyKind::CoreSpec { .. } => "core-spec",
             PolicyKind::CoreSpecNuma { .. } => "core-spec-numa",
             PolicyKind::StrictPartition { .. } => "strict-partition",
+            PolicyKind::ClassNative { .. } => "class-native",
         }
     }
 
@@ -92,6 +102,7 @@ impl PolicyKind {
             PolicyKind::CoreSpecNuma { avx_cores_per_socket, sockets } => {
                 *avx_cores_per_socket * (*sockets).max(1)
             }
+            PolicyKind::ClassNative { p_cores } => *p_cores,
         }
     }
 
@@ -115,6 +126,7 @@ impl PolicyKind {
                 let k = (*avx_cores_per_socket).min(end - start);
                 core >= end - k
             }
+            PolicyKind::ClassNative { p_cores } => core < (*p_cores).min(n_cores),
         }
     }
 
@@ -122,7 +134,9 @@ impl PolicyKind {
     pub fn eligible(&self, core: usize, n_cores: usize, ttype: TaskType) -> bool {
         match self {
             PolicyKind::Unmodified => true,
-            PolicyKind::CoreSpec { .. } | PolicyKind::CoreSpecNuma { .. } => match ttype {
+            PolicyKind::CoreSpec { .. }
+            | PolicyKind::CoreSpecNuma { .. }
+            | PolicyKind::ClassNative { .. } => match ttype {
                 TaskType::Avx => self.is_avx_core(core, n_cores),
                 TaskType::Scalar | TaskType::Untyped => true,
             },
@@ -139,7 +153,9 @@ impl PolicyKind {
     /// that the deadline of all other tasks is guaranteed to be lower").
     pub fn deadline_penalty(&self, core: usize, n_cores: usize, ttype: TaskType) -> Time {
         match self {
-            PolicyKind::CoreSpec { .. } | PolicyKind::CoreSpecNuma { .. }
+            PolicyKind::CoreSpec { .. }
+            | PolicyKind::CoreSpecNuma { .. }
+            | PolicyKind::ClassNative { .. }
                 if ttype == TaskType::Scalar && self.is_avx_core(core, n_cores) =>
             {
                 SCALAR_ON_AVX_PENALTY
@@ -232,6 +248,27 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn class_native_reserves_the_first_cores() {
+        // Inverted convention: the *first* K cores (the P-cores of a
+        // hybrid part) make up the specialization set.
+        let p = PolicyKind::ClassNative { p_cores: 2 };
+        assert_eq!(p.name(), "class-native");
+        assert_eq!(p.avx_core_count(), 2);
+        let avx: Vec<usize> = (0..6).filter(|&c| p.is_avx_core(c, 6)).collect();
+        assert_eq!(avx, vec![0, 1]);
+        // CoreSpec semantics over the inverted set.
+        assert!(p.eligible(0, 6, TaskType::Avx));
+        assert!(!p.eligible(2, 6, TaskType::Avx));
+        assert!(p.eligible(0, 6, TaskType::Scalar));
+        assert!(p.deadline_penalty(0, 6, TaskType::Scalar) > 0);
+        assert_eq!(p.deadline_penalty(2, 6, TaskType::Scalar), 0);
+        assert_eq!(p.deadline_penalty(0, 6, TaskType::Untyped), 0);
+        // Oversized set clamps.
+        let all = PolicyKind::ClassNative { p_cores: 99 };
+        assert!(all.is_avx_core(3, 4));
     }
 
     #[test]

@@ -142,7 +142,12 @@ impl<T> TpcRuntime<T> {
         let core = allowed[self.rr[slot] % allowed.len()];
         self.rr[slot] += 1;
         self.stats.spawned += 1;
-        if marked && matches!(self.spec, PlacementSpec::AvxSteer { .. }) {
+        if marked
+            && matches!(
+                self.spec,
+                PlacementSpec::AvxSteer { .. } | PlacementSpec::ClassSteer { .. }
+            )
+        {
             self.stats.steered += 1;
         }
         self.queues[core].push_back(TpcJob { payload, marked, home: core, in_avx_phase: false });

@@ -13,6 +13,11 @@
 //! * `avx-steer-lazy` — the runtime analogue of §6.1 fault-and-migrate:
 //!   spawn like `home-core`, migrate a task to the AVX subset only on
 //!   its first *observed* AVX license demand in a phase.
+//! * `class-steer` — the hybrid-topology variant: marked futures spawn
+//!   onto the *first* `p_cores` executor cores (P-cores lead the core id
+//!   space on hybrid parts, matching
+//!   [`crate::sched::PolicyKind::ClassNative`]), while unmarked futures
+//!   may run anywhere — E-cores are a capacity pool, not a scalar jail.
 
 /// Pluggable task-placement policy for [`super::TpcRuntime`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,6 +30,9 @@ pub enum PlacementSpec {
     /// Spawn anywhere; migrate to the AVX subset on first observed AVX
     /// demand (at most once per task per AVX phase).
     AvxSteerLazy { avx_cores: usize },
+    /// Hybrid-native steering: marked futures onto the first `p_cores`
+    /// executor cores (the P-cores), unmarked futures anywhere.
+    ClassSteer { p_cores: usize },
 }
 
 impl PlacementSpec {
@@ -34,6 +42,7 @@ impl PlacementSpec {
             PlacementSpec::HomeCore => "home-core",
             PlacementSpec::AvxSteer { .. } => "avx-steer",
             PlacementSpec::AvxSteerLazy { .. } => "avx-steer-lazy",
+            PlacementSpec::ClassSteer { .. } => "class-steer",
         }
     }
 
@@ -45,6 +54,7 @@ impl PlacementSpec {
             PlacementSpec::AvxSteerLazy { avx_cores } => {
                 format!("avx-steer-lazy({avx_cores})")
             }
+            PlacementSpec::ClassSteer { p_cores } => format!("class-steer({p_cores})"),
         }
     }
 
@@ -54,8 +64,9 @@ impl PlacementSpec {
             "home-core" => Ok(PlacementSpec::HomeCore),
             "avx-steer" => Ok(PlacementSpec::AvxSteer { avx_cores }),
             "avx-steer-lazy" => Ok(PlacementSpec::AvxSteerLazy { avx_cores }),
+            "class-steer" => Ok(PlacementSpec::ClassSteer { p_cores: avx_cores }),
             other => anyhow::bail!(
-                "tpc.placement = {other:?} (home-core|avx-steer|avx-steer-lazy)"
+                "tpc.placement = {other:?} (home-core|avx-steer|avx-steer-lazy|class-steer)"
             ),
         }
     }
@@ -66,16 +77,23 @@ impl PlacementSpec {
             PlacementSpec::HomeCore => 0,
             PlacementSpec::AvxSteer { avx_cores }
             | PlacementSpec::AvxSteerLazy { avx_cores } => avx_cores,
+            PlacementSpec::ClassSteer { p_cores } => p_cores,
         }
     }
 
     /// Whether executor core `core` (of `n_cores`) belongs to the
-    /// designated AVX subset. Same last-K convention as
-    /// [`crate::sched::PolicyKind::is_avx_core`], so the runtime-level
-    /// and kernel-level subsets line up in the head-to-head comparison.
+    /// designated AVX subset. The steer variants use the same last-K
+    /// convention as [`crate::sched::PolicyKind::is_avx_core`], so the
+    /// runtime-level and kernel-level subsets line up in the
+    /// head-to-head comparison; `class-steer` uses the *first*-K
+    /// convention of [`crate::sched::PolicyKind::ClassNative`], since
+    /// P-cores lead the core id space on hybrid machines.
     pub fn is_avx_core(&self, core: usize, n_cores: usize) -> bool {
         let k = self.avx_cores().min(n_cores);
-        k > 0 && core >= n_cores - k
+        match self {
+            PlacementSpec::ClassSteer { .. } => core < k,
+            _ => k > 0 && core >= n_cores - k,
+        }
     }
 
     /// The executor cores a task with the given mark may be *spawned*
@@ -96,6 +114,23 @@ impl PlacementSpec {
                     (0..n_cores).collect()
                 } else {
                     subset
+                }
+            }
+            PlacementSpec::ClassSteer { .. } => {
+                if marked {
+                    // AVX work is confined to the P-cores — on a hybrid
+                    // machine the E-cores cannot execute it at all.
+                    let subset: Vec<usize> =
+                        (0..n_cores).filter(|&c| self.is_avx_core(c, n_cores)).collect();
+                    if subset.is_empty() {
+                        (0..n_cores).collect()
+                    } else {
+                        subset
+                    }
+                } else {
+                    // Scalar work uses the whole machine; the E-cores
+                    // are extra capacity, not a dumping ground.
+                    (0..n_cores).collect()
                 }
             }
         }
@@ -143,11 +178,32 @@ mod tests {
     }
 
     #[test]
+    fn class_steer_uses_first_k_and_frees_scalar_work() {
+        let spec = PlacementSpec::ClassSteer { p_cores: 2 };
+        // First-K: the P-cores lead the id space, like ClassNative.
+        let kernel = crate::sched::PolicyKind::ClassNative { p_cores: 2 };
+        for core in 0..6 {
+            assert_eq!(
+                spec.is_avx_core(core, 6),
+                kernel.is_avx_core(core, 6),
+                "core {core}: class-steer must mirror the hardware partition"
+            );
+        }
+        assert_eq!(spec.allowed_cores(true, 6), vec![0, 1]);
+        // Scalar work may run anywhere — E-cores are capacity, not a jail.
+        assert_eq!(spec.allowed_cores(false, 6), vec![0, 1, 2, 3, 4, 5]);
+        // Degenerate P set falls back to all cores.
+        let none = PlacementSpec::ClassSteer { p_cores: 0 };
+        assert_eq!(none.allowed_cores(true, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
     fn parse_roundtrips_names() {
         for spec in [
             PlacementSpec::HomeCore,
             PlacementSpec::AvxSteer { avx_cores: 2 },
             PlacementSpec::AvxSteerLazy { avx_cores: 2 },
+            PlacementSpec::ClassSteer { p_cores: 2 },
         ] {
             assert_eq!(PlacementSpec::parse(spec.name(), 2).unwrap(), spec);
         }

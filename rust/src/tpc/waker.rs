@@ -31,6 +31,15 @@ pub fn wake_core(spec: &PlacementSpec, marked: bool, home: usize, n_cores: usize
                 }
             }
         }
+        PlacementSpec::ClassSteer { .. } => {
+            // Only marked tasks are constrained (to the P-cores, which
+            // lead the id space); scalar homes anywhere are fine.
+            if !marked || spec.is_avx_core(home, n_cores) || spec.avx_cores() == 0 {
+                home
+            } else {
+                0
+            }
+        }
     }
 }
 
@@ -60,6 +69,18 @@ mod tests {
         // Drifted homes are steered back.
         assert_eq!(wake_core(&spec, true, 1, 6), 4, "marked → first AVX core");
         assert_eq!(wake_core(&spec, false, 5, 6), 0, "unmarked → scalar side");
+    }
+
+    #[test]
+    fn class_steer_only_constrains_marked_wakes() {
+        let spec = PlacementSpec::ClassSteer { p_cores: 2 };
+        // Marked task on a P-core stays; one drifted onto an E-core is
+        // steered back to the first P-core.
+        assert_eq!(wake_core(&spec, true, 1, 6), 1);
+        assert_eq!(wake_core(&spec, true, 5, 6), 0);
+        // Scalar tasks keep their home wherever it is.
+        assert_eq!(wake_core(&spec, false, 5, 6), 5);
+        assert_eq!(wake_core(&spec, false, 0, 6), 0);
     }
 
     #[test]

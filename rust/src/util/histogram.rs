@@ -9,6 +9,18 @@ const SUB: u64 = 1 << SUB_BITS;
 
 /// Histogram over `u64` values (we use nanoseconds) with bounded relative
 /// error, supporting percentile queries and merging.
+///
+/// Every query on an *empty* histogram has a defined return — 0 (or 0.0)
+/// across the board: [`LogHistogram::mean`], [`LogHistogram::min`],
+/// [`LogHistogram::max`], [`LogHistogram::percentile`],
+/// [`LogHistogram::report`], and [`LogHistogram::fraction_above`] — and
+/// merging an empty histogram in either direction is the identity
+/// (`min`'s internal `u64::MAX` sentinel never leaks). Consumers that
+/// aggregate sparse scopes (e.g. the fleet balancer's per-epoch machine
+/// histograms, where an idle machine records nothing all epoch) rely on
+/// this: no special-casing, no panics, no poisoned statistics. Pinned by
+/// `empty_histogram_queries_are_safe_zeroes` and
+/// `empty_histogram_merge_edge_cases` below.
 #[derive(Clone, Debug)]
 pub struct LogHistogram {
     buckets: Vec<u64>,
@@ -113,6 +125,7 @@ impl LogHistogram {
 
     /// Value at percentile `p` (0..=100). Returns the lower bound of the
     /// bucket containing the target rank — a ≤3% underestimate at worst.
+    /// An empty histogram returns 0 for every percentile.
     pub fn percentile(&self, p: f64) -> u64 {
         if self.count == 0 {
             return 0;

@@ -42,6 +42,11 @@ pub struct WebCfg {
     /// Sockets (NUMA nodes / frequency domains) the server cores span;
     /// 1 = the paper's single-socket machine.
     pub sockets: usize,
+    /// Hybrid P/E core layout (`None` = the paper's homogeneous part).
+    /// When the spec has E-cores, `cores` must equal its total and
+    /// AVX-512 runs are forced to annotate (the scheduler needs typed
+    /// work to keep 512-bit code off the E-cores).
+    pub hybrid: Option<crate::cpu::HybridSpec>,
     pub mode: LoadMode,
     /// Latency SLO threshold (ns) for the violation-fraction metric.
     pub slo: Time,
@@ -82,6 +87,7 @@ impl WebCfg {
             workers: 24,
             cores: 12,
             sockets: 1,
+            hybrid: None,
             mode: LoadMode::Open { rate: 60_000.0 },
             slo: DEFAULT_SLO,
             handshake_every: 20,
@@ -116,6 +122,18 @@ impl WebCfg {
         };
         let avx_cores = conf.int_or("sched.avx_cores", 2) as usize;
         let sockets = conf.int_or("machine.sockets", 1).max(1) as usize;
+        // [topology] section: hybrid P/E parts. Presence of
+        // topology.p_cores switches the machine to the hybrid layout;
+        // machine.cores, when also set, must agree with the spec.
+        let hybrid = match conf.get("topology.p_cores") {
+            None => None,
+            Some(_) => {
+                let p = conf.int_or("topology.p_cores", 0).max(0) as usize;
+                let e = conf.int_or("topology.e_cores", 0).max(0) as usize;
+                let module = conf.int_or("topology.module_size", 4).max(0) as usize;
+                Some(crate::cpu::HybridSpec::new(p, e, module)?)
+            }
+        };
         let policy = match conf.str_or("sched.policy", "corespec") {
             "unmodified" => PolicyKind::Unmodified,
             "corespec" => PolicyKind::CoreSpec { avx_cores },
@@ -123,8 +141,16 @@ impl WebCfg {
                 PolicyKind::CoreSpecNuma { avx_cores_per_socket: avx_cores, sockets }
             }
             "strict" => PolicyKind::StrictPartition { avx_cores },
+            // The hardware partition is the specialization set; without
+            // a [topology] section fall back to sched.avx_cores.
+            "class-native" => PolicyKind::ClassNative {
+                p_cores: hybrid.map(|h| h.p_cores).unwrap_or(avx_cores),
+            },
             other => {
-                anyhow::bail!("sched.policy = {other:?} (unmodified|corespec|corespec-numa|strict)")
+                anyhow::bail!(
+                    "sched.policy = {other:?} \
+                     (unmodified|corespec|corespec-numa|strict|class-native)"
+                )
             }
         };
         let mut cfg = WebCfg::paper_default(isa, policy);
@@ -137,6 +163,22 @@ impl WebCfg {
         cfg.annotate = conf.bool_or("sched.annotate", cfg.annotate);
         cfg.fault_migrate = conf.bool_or("sched.fault_migrate", false);
         cfg.fast_paths = conf.bool_or("machine.fast_paths", cfg.fast_paths);
+        cfg.hybrid = hybrid;
+        if let Some(h) = hybrid {
+            let cores = conf.int_or("machine.cores", -1);
+            anyhow::ensure!(
+                cores < 0 || cores as usize == h.n_cores(),
+                "machine.cores = {cores} contradicts [topology] ({} = {} cores)",
+                h.label(),
+                h.n_cores()
+            );
+            cfg.cores = h.n_cores();
+            anyhow::ensure!(
+                !(cfg.fault_migrate && h.has_e_cores()),
+                "sched.fault_migrate = true is incompatible with E-cores \
+                 (512-bit code faults for real there, it cannot be migrated after the fact)"
+            );
+        }
         if conf.bool_or("sched.adaptive", false) {
             // The adaptive controller manages only the machine-global
             // CoreSpec set; rejecting other policies here beats a
@@ -727,6 +769,10 @@ pub struct WebRun {
     pub final_avx_cores: usize,
     /// Number of adaptive grow/shrink decisions taken.
     pub adaptive_changes: u64,
+    /// Per-frequency-domain harmonic-mean busy GHz, labelled (`skt0`…,
+    /// then `mod0`… for E-core modules). Populated only on hybrid
+    /// machines with E-cores; empty otherwise.
+    pub domain_ghz: Vec<(String, f64)>,
 }
 
 impl Default for WebRun {
@@ -758,6 +804,7 @@ impl Default for WebRun {
             completed: 0,
             final_avx_cores: 0,
             adaptive_changes: 0,
+            domain_ghz: Vec::new(),
         }
     }
 }
@@ -823,6 +870,17 @@ fn run_webserver_impl(
     sched: crate::sched::SchedParams,
     trace: Option<Vec<(Time, u32)>>,
 ) -> (WebRun, Machine) {
+    // Confinement requires typed AVX work: on a hybrid part with
+    // E-cores, 512-bit code must be visible to the scheduler (the
+    // hardware thread director makes it so whether or not the server
+    // binary is patched), so annotations are forced on.
+    let cfg = &{
+        let mut cfg = cfg.clone();
+        if cfg.hybrid.is_some_and(|h| h.has_e_cores()) && matches!(cfg.isa, Isa::Avx512) {
+            cfg.annotate = true;
+        }
+        cfg
+    };
     let stacks = Rc::new(RefCell::new(StackTable::new()));
     // Open-loop arrival process (None = closed loop) and one planner per
     // tenant: non-AVX tenants serve an SSE4 pipeline, unannotated.
@@ -853,6 +911,7 @@ fn run_webserver_impl(
     mp.freq.governor = cfg.governor;
     mp.power = cfg.power;
     mp.fast_paths = cfg.fast_paths;
+    mp.hybrid = cfg.hybrid;
     // wrk2 client cores keep the package(s) awake: 4 per socket, like
     // the paper's single-socket evaluation.
     mp.extra_active_cores = 4 * cfg.sockets.max(1);
@@ -1030,6 +1089,11 @@ fn run_webserver_impl(
         completed,
         final_avx_cores,
         adaptive_changes,
+        domain_ghz: if m.hybrid().is_some_and(|h| h.has_e_cores()) {
+            m.domain_harmonic_ghz()
+        } else {
+            Vec::new()
+        },
     };
     (run, m)
 }

@@ -338,6 +338,7 @@ fn synthetic_webrun(done: u64, p50: f64, p99: f64, p999: f64, frac: f64, drops: 
         completed: done,
         final_avx_cores: 0,
         adaptive_changes: 0,
+        domain_ghz: Vec::new(),
     }
 }
 

@@ -91,6 +91,7 @@ fn cell(
         completed: t.completed,
         final_avx_cores: 2,
         adaptive_changes: 0,
+        domain_ghz: Vec::new(),
     };
     CellResult { scenario, run, fleet: None, hier: None }
 }

@@ -1,0 +1,261 @@
+//! Hybrid-topology integration tests: golden snapshots for the two
+//! hybrid tables, cross-thread byte determinism of the hybridspec
+//! matrix, the all-P-hybrid ≡ homogeneous differential at matrix level,
+//! and the end-to-end AVX-512/E-core confinement property.
+//!
+//! The snapshots are driven by *synthetic* rows/cells with fixed values
+//! (exactly representable at the printed precision), so they pin the
+//! formatting contract independently of the simulator. To regenerate
+//! after an intentional format change:
+//! `UPDATE_GOLDEN=1 cargo test --test hybrid`.
+
+use avxfreq::cpu::{GovernorSpec, HybridSpec};
+use avxfreq::fleet::{BalancerCfg, RouterSpec};
+use avxfreq::metrics::hybrid_report;
+use avxfreq::repro::hybridspec::{self, HsRow};
+use avxfreq::scenario::{
+    CellResult, ExecutorSpec, PolicySpec, Scenario, ScenarioMatrix, TopologySpec, WorkloadSpec,
+};
+use avxfreq::sched::PolicyKind;
+use avxfreq::sim::MS;
+use avxfreq::traffic::{LatencyStats, TailSummary};
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::{run_webserver_machine, WebCfg, WebRun};
+
+fn tail(completed: u64) -> TailSummary {
+    TailSummary {
+        completed,
+        mean_us: 250.0,
+        p50_us: 250.0,
+        p95_us: 1_500.0,
+        p99_us: 2_000.0,
+        p999_us: 3_500.0,
+        max_us: 8_000.0,
+        slo_us: 5_000.0,
+        slo_violation_frac: 0.125,
+    }
+}
+
+/// A synthetic matrix cell whose only interesting payload is
+/// `domain_ghz` — everything `hybrid_report` reads is fixed here, so the
+/// snapshot depends on nothing but the renderer.
+fn domain_cell(
+    index: usize,
+    topology: &str,
+    policy: &str,
+    governor: GovernorSpec,
+    domain_ghz: Vec<(String, f64)>,
+) -> CellResult {
+    let scenario = Scenario {
+        index,
+        topology: topology.to_string(),
+        sockets: 1,
+        policy: policy.to_string(),
+        workload: "compressed".to_string(),
+        isa: Isa::Avx512,
+        load: 1.0,
+        arrival: "poisson".to_string(),
+        fleet: 1,
+        router: RouterSpec::RoundRobin,
+        governor,
+        executor: ExecutorSpec::Kernel,
+        balancer: BalancerCfg::default(),
+        seed: 7,
+        cfg: WebCfg::paper_default(Isa::Avx512, PolicyKind::Unmodified),
+    };
+    let t = tail(48_000);
+    let run = WebRun {
+        cfg_name: "synthetic".to_string(),
+        throughput_rps: 48_000.0,
+        avg_ghz: 2.75,
+        ipc: 1.5,
+        insns_per_req: 1_000_000.0,
+        tail: t,
+        tenant_tails: vec![("all".to_string(), t)],
+        stats: LatencyStats::new(5 * MS),
+        tenant_stats: vec![LatencyStats::new(5 * MS)],
+        dropped: 0,
+        type_changes_per_sec: 9_000.0,
+        migrations_per_sec: 1_200.0,
+        cross_socket_migrations_per_sec: 0.0,
+        runtime_steered: 0,
+        runtime_migrations: 0,
+        runtime_migrations_per_sec: 0.0,
+        runtime_preemptions: 0,
+        active_energy_j: 0.0,
+        idle_energy_j: 0.0,
+        throttle_ratio: 0.0625,
+        license_share: [0.75, 0.125, 0.125],
+        completed: t.completed,
+        final_avx_cores: 2,
+        adaptive_changes: 0,
+        domain_ghz,
+    };
+    CellResult { scenario, run, fleet: None, hier: None }
+}
+
+fn check_golden(name: &str, actual: &str) {
+    let path = format!("{}/rust/tests/golden/{name}.txt", env!("CARGO_MANIFEST_DIR"));
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(&path, actual).expect("write golden");
+        eprintln!("updated {path}");
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    assert!(
+        actual == expected,
+        "{name} drifted from its snapshot ({path}).\n--- expected ---\n{expected}\n--- actual ---\n{actual}\n\
+         Run with UPDATE_GOLDEN=1 if the change is intentional."
+    );
+}
+
+/// The homogeneous middle cell carries no domain rows and must be
+/// skipped entirely — the snapshot has rows only for cells 0 and 2.
+#[test]
+fn hybrid_report_matches_snapshot() {
+    let cells = vec![
+        domain_cell(
+            0,
+            "8P+16E",
+            "class-native(8)",
+            GovernorSpec::IntelLegacy,
+            vec![
+                ("skt0".to_string(), 3.0),
+                ("mod0".to_string(), 2.5),
+                ("mod1".to_string(), 2.125),
+            ],
+        ),
+        domain_cell(1, "1x24", "unmodified", GovernorSpec::IntelLegacy, Vec::new()),
+        domain_cell(
+            2,
+            "8P+16E",
+            "unmodified",
+            GovernorSpec::SlowRamp,
+            vec![("skt0".to_string(), 2.75), ("mod0".to_string(), 1.875)],
+        ),
+    ];
+    check_golden("hybrid_report", &hybrid_report(&cells).render());
+}
+
+#[test]
+fn hybridspec_report_matches_snapshot() {
+    let rows = vec![
+        HsRow {
+            topology: "8P+16E".to_string(),
+            policy: "unmodified".to_string(),
+            governor: "intel-legacy".to_string(),
+            throughput_rps: 52_000.0,
+            p99_us: 2_400.0,
+            p999_us: 4_100.0,
+            avg_ghz: 2.625,
+            slow_domain: Some(("mod2".to_string(), 2.125)),
+        },
+        HsRow {
+            topology: "8P+16E".to_string(),
+            policy: "class-native(8)".to_string(),
+            governor: "intel-legacy".to_string(),
+            throughput_rps: 61_500.0,
+            p99_us: 1_650.0,
+            p999_us: 2_900.0,
+            avg_ghz: 3.125,
+            slow_domain: Some(("mod1".to_string(), 2.75)),
+        },
+        HsRow {
+            topology: "1x24".to_string(),
+            policy: "unmodified".to_string(),
+            governor: "intel-legacy".to_string(),
+            throughput_rps: 64_000.0,
+            p99_us: 1_500.0,
+            p999_us: 2_600.0,
+            avg_ghz: 2.75,
+            slow_domain: None,
+        },
+    ];
+    check_golden("hybridspec_report", &hybridspec::table(&rows).render());
+}
+
+/// The determinism acceptance criterion for the new topology axis: a
+/// shrunk hybridspec matrix (both machine shapes, all three policies,
+/// one governor) renders byte-identical comparison, tail, AND
+/// per-domain tables at 1 and 4 OS threads.
+#[test]
+fn hybrid_matrix_renders_identically_at_1_and_4_threads() {
+    let mut m = hybridspec::matrix(true, 0x42_1207);
+    m.governors = vec![GovernorSpec::IntelLegacy];
+    m.warmup = 100 * MS;
+    m.measure = 200 * MS;
+    assert_eq!(m.len(), 6, "2 topologies × 3 policies");
+
+    let serial = m.run(1);
+    let parallel = m.run(4);
+    assert_eq!(serial.render(), parallel.render(), "matrix table differs across threads");
+    assert_eq!(
+        serial.render_tail(),
+        parallel.render_tail(),
+        "tail table differs across threads"
+    );
+    assert_eq!(
+        hybrid_report(&serial.cells).render(),
+        hybrid_report(&parallel.cells).render(),
+        "per-domain table differs across threads"
+    );
+    // Non-vacuity: the hybrid half actually produced per-domain rows.
+    assert!(!hybrid_report(&serial.cells).rows.is_empty());
+}
+
+/// A hybrid spec with zero E-cores is the homogeneous machine, all the
+/// way up through the matrix runner: same seeds, same schedules, same
+/// rendered bytes. (The machine-level twin of this test lives in
+/// `sched::machine`; this one covers the scenario/webserver plumbing.)
+#[test]
+fn all_p_hybrid_matrix_matches_homogeneous_bytes() {
+    let mk = |all_p_hybrid: bool| {
+        let mut topo = TopologySpec::multi(1, 24);
+        if all_p_hybrid {
+            topo.hybrid = Some(HybridSpec::new(24, 0, 0).expect("all-P spec is valid"));
+        }
+        let mut m = ScenarioMatrix::new(0xA11F);
+        m.topologies = vec![topo];
+        m.policies = vec![PolicySpec::Unmodified, PolicySpec::ClassNative { p_cores: 8 }];
+        m.workloads = vec![WorkloadSpec::compressed_page()];
+        m.isas = vec![Isa::Avx512];
+        m.warmup = 100 * MS;
+        m.measure = 200 * MS;
+        m
+    };
+    let hybrid = mk(true).run(2);
+    let homog = mk(false).run(2);
+    assert_eq!(hybrid.render(), homog.render(), "matrix table differs");
+    assert_eq!(hybrid.render_tail(), homog.render_tail(), "tail table differs");
+    // All-P machines report no per-domain rows — on either side.
+    assert!(hybrid_report(&hybrid.cells).rows.is_empty());
+    assert!(hybrid_report(&homog.cells).rows.is_empty());
+}
+
+/// The capability property end-to-end: on the 8P+16E part serving the
+/// AVX-512 workload, no 512-bit block ever executes on an E-core —
+/// under the confined stock scheduler and under class-native alike —
+/// while the E-cores still carry (scalar) work.
+#[test]
+fn avx512_stays_off_e_cores_end_to_end() {
+    for policy in [PolicyKind::Unmodified, PolicyKind::ClassNative { p_cores: 8 }] {
+        let mut cfg = WebCfg::paper_default(Isa::Avx512, policy.clone());
+        cfg.cores = 24;
+        cfg.workers = 48;
+        cfg.hybrid = Some(HybridSpec::desktop_8p16e());
+        cfg.warmup = 100 * MS;
+        cfg.measure = 300 * MS;
+        let (run, m) = run_webserver_machine(&cfg);
+        assert!(run.completed > 0, "{policy:?}: server did no work");
+        assert_eq!(
+            m.e_wide512_blocks, 0,
+            "{policy:?}: an AVX-512 block executed on an E-core"
+        );
+        // One socket + four 4-core modules, every domain reported.
+        assert_eq!(run.domain_ghz.len(), 5, "{policy:?}: domain rows");
+        assert!(
+            run.domain_ghz.iter().any(|(d, g)| d.starts_with("mod") && *g > 0.0),
+            "{policy:?}: no E-core module ever ran — confinement test is vacuous"
+        );
+    }
+}
