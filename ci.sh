@@ -8,7 +8,7 @@
 # named SKIP and summarized at the end, and the toolchain-free checks
 # (golden snapshots present, markdown links, referenced files) still
 # gate. The first toolchain-equipped run then executes the full matrix
-# and writes the BENCH_7.json perf record.
+# and writes the BENCH_9.json perf record.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -100,26 +100,31 @@ run_runtime_roundtrip() {
 }
 cargo_step "suite: runtime_roundtrip (SKIP must name artifacts dir)" run_runtime_roundtrip
 
-# Bench smoke: one quick fast-vs-baseline pass (the executor and
-# closed-loop hier scenarios ride along, so `LoadMode::Executor` and the
-# hierarchical balancer are covered). `avxfreq bench` exits non-zero if
-# the two legs' outputs diverge (the equivalence gate) and writes the
-# BENCH_7.json perf-trajectory record; the speedup itself is
-# informational here — wall-clock on a loaded CI machine is noise, so
-# compare ratios across runs, not absolutes (rust/tests/README.md).
+# Bench smoke: one quick fast-vs-baseline pass (the executor,
+# closed-loop hier, and incremental-forking scenarios ride along, so
+# `LoadMode::Executor`, the hierarchical balancer, and checkpoint
+# forking are covered). `avxfreq bench` exits non-zero if the two legs'
+# outputs diverge (the equivalence gate) and writes the BENCH_9.json
+# perf-trajectory record; the speedup itself is informational here —
+# wall-clock on a loaded CI machine is noise, so compare ratios across
+# runs, not absolutes (rust/tests/README.md).
 run_bench_quick() {
   cargo run --release --quiet -- bench --quick
-  if [ ! -f BENCH_7.json ]; then
-    echo "bench did not write BENCH_7.json"
+  if [ ! -f BENCH_9.json ]; then
+    echo "bench did not write BENCH_9.json"
     return 1
   fi
-  if grep -q '"outputs_identical": false' BENCH_7.json; then
-    echo "BENCH_7.json records an output divergence"
+  if grep -q '"outputs_identical": false' BENCH_9.json; then
+    echo "BENCH_9.json records an output divergence"
+    return 1
+  fi
+  if ! grep -q '"warmup_ns_reused":' BENCH_9.json; then
+    echo "BENCH_9.json is missing the warmup_ns_reused field"
     return 1
   fi
   return 0
 }
-cargo_step "bench --quick (equivalence gate + BENCH_7.json)" run_bench_quick
+cargo_step "bench --quick (equivalence gate + BENCH_9.json)" run_bench_quick
 
 cargo_step "cargo doc --no-deps (-D warnings)" \
   env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -166,6 +171,8 @@ for p in docs/ARCHITECTURE.md rust/tests/README.md configs/dual_socket.toml \
          configs/hybrid.toml rust/src/cpu/topology.rs rust/src/repro/hybridspec.rs \
          rust/tests/hybrid.rs \
          rust/tests/golden/hybrid_report.txt rust/tests/golden/hybridspec_report.txt \
+         rust/tests/incremental.rs rust/src/workload/webserver.rs \
+         rust/src/sched/machine.rs \
          ci.sh; do
   if [ ! -e "$p" ]; then
     echo "MISSING referenced file: $p"

@@ -34,7 +34,7 @@ use std::fmt::Write as _;
 use std::time::Instant;
 
 /// Which PR's trajectory file this harness writes.
-pub const BENCH_PR: u32 = 7;
+pub const BENCH_PR: u32 = 9;
 
 /// Harness configuration (CLI surface of `avxfreq bench`).
 #[derive(Clone, Debug)]
@@ -45,7 +45,7 @@ pub struct BenchCfg {
     /// OS threads for the matrix/fleet legs (same for both legs).
     pub threads: usize,
     /// Scenario names to run (`single`, `matrix`, `fleet`, `hier`,
-    /// `executor`).
+    /// `executor`, `incremental`).
     pub scenarios: Vec<String>,
 }
 
@@ -55,7 +55,7 @@ impl BenchCfg {
             quick,
             seed,
             threads: threads.max(1),
-            scenarios: ["single", "matrix", "fleet", "hier", "executor"]
+            scenarios: ["single", "matrix", "fleet", "hier", "executor", "incremental"]
                 .iter()
                 .map(|s| s.to_string())
                 .collect(),
@@ -88,6 +88,12 @@ pub struct BenchRow {
     pub fast: Leg,
     pub baseline: Leg,
     pub outputs_identical: bool,
+    /// Simulated warmup nanoseconds the fast leg skipped by forking
+    /// warmed checkpoints (matrix-family scenarios; 0 elsewhere). A
+    /// deterministic work-avoidance measure — a pure function of the
+    /// scenario declaration, never of wall clock — so the trajectory
+    /// file records it even where cargo (and thus timing) is absent.
+    pub warmup_ns_reused: u64,
 }
 
 impl BenchRow {
@@ -143,7 +149,7 @@ fn single_cfg(quick: bool, seed: u64, fast: bool) -> WebCfg {
     cfg
 }
 
-fn run_single(quick: bool, seed: u64, fast: bool) -> (Leg, Vec<u64>) {
+fn run_single(quick: bool, seed: u64, fast: bool) -> (Leg, Vec<u64>, u64) {
     let cfg = single_cfg(quick, seed, fast);
     let sim_ns: Time = cfg.warmup + cfg.measure;
     let t0 = Instant::now();
@@ -151,10 +157,10 @@ fn run_single(quick: bool, seed: u64, fast: bool) -> (Leg, Vec<u64>) {
     let wall_s = t0.elapsed().as_secs_f64();
     let mut fp = Vec::new();
     fingerprint(&run, &mut fp);
-    (Leg { wall_s, sim_ns }, fp)
+    (Leg { wall_s, sim_ns }, fp, 0)
 }
 
-fn run_matrix(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg, Vec<u64>) {
+fn run_matrix(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg, Vec<u64>, u64) {
     let mut m = ScenarioMatrix::default_sweep(quick, seed);
     m.fast_paths = fast;
     // Per the unit of merit: each simulated machine counts, so a fleet
@@ -175,7 +181,36 @@ fn run_matrix(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg, Vec<u
     for b in result.render().bytes() {
         fp.push(b as u64);
     }
-    (Leg { wall_s, sim_ns }, fp)
+    (Leg { wall_s, sim_ns }, fp, result.warmup_ns_reused)
+}
+
+/// The incremental sweep run twice — checkpoint forking on (fast leg)
+/// vs off (baseline leg) — so the fork path's byte-equivalence against
+/// the cold reference sits inside the bench equivalence gate, and the
+/// speedup column prices what warmup reuse buys. Both legs keep the hot
+/// paths on; `fast` selects the *incremental* flag for this scenario.
+fn run_incremental(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg, Vec<u64>, u64) {
+    let mut m = ScenarioMatrix::incremental_sweep(quick, seed);
+    m.incremental = fast;
+    // Nominal coverage is identical for both legs: the fast leg
+    // delivers the same cells while simulating less (the reused warmup
+    // prefixes) — exactly the saving the speedup column should price.
+    let sim_ns: Time = m
+        .cells()
+        .iter()
+        .map(|c| (c.cfg.warmup + c.cfg.measure) * c.fleet as Time)
+        .sum();
+    let t0 = Instant::now();
+    let result = m.run(threads);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut fp = Vec::new();
+    for c in &result.cells {
+        fingerprint(&c.run, &mut fp);
+    }
+    for b in result.render().bytes() {
+        fp.push(b as u64);
+    }
+    (Leg { wall_s, sim_ns }, fp, result.warmup_ns_reused)
 }
 
 /// The same single-machine web workload served through the
@@ -205,7 +240,7 @@ fn executor_cfg(quick: bool, seed: u64, fast: bool) -> WebCfg {
     cfg
 }
 
-fn run_executor(quick: bool, seed: u64, fast: bool) -> (Leg, Vec<u64>) {
+fn run_executor(quick: bool, seed: u64, fast: bool) -> (Leg, Vec<u64>, u64) {
     let cfg = executor_cfg(quick, seed, fast);
     let sim_ns: Time = cfg.warmup + cfg.measure;
     let t0 = Instant::now();
@@ -213,10 +248,15 @@ fn run_executor(quick: bool, seed: u64, fast: bool) -> (Leg, Vec<u64>) {
     let wall_s = t0.elapsed().as_secs_f64();
     let mut fp = Vec::new();
     fingerprint(&run, &mut fp);
-    (Leg { wall_s, sim_ns }, fp)
+    (Leg { wall_s, sim_ns }, fp, 0)
 }
 
-fn run_fleet_scenario(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg, Vec<u64>) {
+fn run_fleet_scenario(
+    quick: bool,
+    seed: u64,
+    threads: usize,
+    fast: bool,
+) -> (Leg, Vec<u64>, u64) {
     let mut fleet = crate::repro::fleetvar::fleet_cfg(RouterSpec::RoundRobin, quick, seed);
     fleet.cfg.fast_paths = fast;
     let sim_ns = (fleet.cfg.warmup + fleet.cfg.measure) * fleet.machines as Time;
@@ -228,7 +268,7 @@ fn run_fleet_scenario(quick: bool, seed: u64, threads: usize, fast: bool) -> (Le
     for m in &run.machines {
         fingerprint(m, &mut fp);
     }
-    (Leg { wall_s, sim_ns }, fp)
+    (Leg { wall_s, sim_ns }, fp, 0)
 }
 
 /// The closed-loop hierarchical fleet (epoch feedback: retries, hedges,
@@ -237,7 +277,12 @@ fn run_fleet_scenario(quick: bool, seed: u64, threads: usize, fast: bool) -> (Le
 /// bookkeeping sit on the timed path of both legs and inside the
 /// equivalence gate (front-end outcome counters, per-machine digests,
 /// and the rendered hierarchy table are all fingerprinted).
-fn run_hier_scenario(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg, Vec<u64>) {
+fn run_hier_scenario(
+    quick: bool,
+    seed: u64,
+    threads: usize,
+    fast: bool,
+) -> (Leg, Vec<u64>, u64) {
     let mut fleet = crate::repro::fleetvar::fleet_cfg(RouterSpec::RoundRobin, quick, seed);
     fleet.cfg.fast_paths = fast;
     let mut cfg = HierFleetCfg::new(fleet, BalancerCfg::closed());
@@ -263,7 +308,7 @@ fn run_hier_scenario(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg
     for b in crate::metrics::hier_report(&[("hier", &run)]).render().bytes() {
         fp.push(b as u64);
     }
-    (Leg { wall_s, sim_ns }, fp)
+    (Leg { wall_s, sim_ns }, fp, 0)
 }
 
 /// Run the configured scenarios, fast leg then baseline leg each.
@@ -271,7 +316,7 @@ fn run_hier_scenario(quick: bool, seed: u64, threads: usize, fast: bool) -> (Leg
 /// a typo fails immediately instead of after minutes of completed legs
 /// whose results would be lost.
 pub fn run(cfg: &BenchCfg) -> anyhow::Result<Vec<BenchRow>> {
-    type Runner = fn(bool, u64, usize, bool) -> (Leg, Vec<u64>);
+    type Runner = fn(bool, u64, usize, bool) -> (Leg, Vec<u64>, u64);
     let mut plan: Vec<(&str, Runner)> = Vec::new();
     for name in &cfg.scenarios {
         let runner: Runner = match name.as_str() {
@@ -280,9 +325,11 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<Vec<BenchRow>> {
             "fleet" => run_fleet_scenario,
             "hier" => run_hier_scenario,
             "executor" => |q, s, _t, f| run_executor(q, s, f),
+            "incremental" => run_incremental,
             other => {
                 anyhow::bail!(
-                    "unknown bench scenario {other:?} (single|matrix|fleet|hier|executor)"
+                    "unknown bench scenario {other:?} \
+                     (single|matrix|fleet|hier|executor|incremental)"
                 )
             }
         };
@@ -291,14 +338,15 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<Vec<BenchRow>> {
     let mut rows = Vec::new();
     for (name, runner) in plan {
         eprintln!("[avxfreq] bench: {name} (fast paths on)…");
-        let (fast, fp_fast) = runner(cfg.quick, cfg.seed, cfg.threads, true);
+        let (fast, fp_fast, warmup_ns_reused) = runner(cfg.quick, cfg.seed, cfg.threads, true);
         eprintln!("[avxfreq] bench: {name} (baseline, fast paths off)…");
-        let (baseline, fp_base) = runner(cfg.quick, cfg.seed, cfg.threads, false);
+        let (baseline, fp_base, _) = runner(cfg.quick, cfg.seed, cfg.threads, false);
         rows.push(BenchRow {
             scenario: name.to_string(),
             fast,
             baseline,
             outputs_identical: fp_fast == fp_base,
+            warmup_ns_reused,
         });
     }
     Ok(rows)
@@ -354,6 +402,7 @@ pub fn to_json(cfg: &BenchCfg, rows: &[BenchRow]) -> String {
             json_f64(r.baseline.sim_ns_per_wall_s())
         );
         let _ = writeln!(s, "      \"speedup\": {},", json_f64(r.speedup()));
+        let _ = writeln!(s, "      \"warmup_ns_reused\": {},", r.warmup_ns_reused);
         let _ = writeln!(s, "      \"outputs_identical\": {}", r.outputs_identical);
         let _ = writeln!(s, "    }}{}", if i + 1 < rows.len() { "," } else { "" });
     }
@@ -401,19 +450,22 @@ mod tests {
                 fast: Leg { wall_s: 1.0, sim_ns: 9_600_000_000 },
                 baseline: Leg { wall_s: 4.0, sim_ns: 9_600_000_000 },
                 outputs_identical: true,
+                warmup_ns_reused: 1_200_000_000,
             },
         ];
         let j = to_json(&cfg, &rows);
-        assert!(j.contains("\"pr\": 7"), "{j}");
+        assert!(j.contains("\"pr\": 9"), "{j}");
         assert!(j.contains("\"fast_sim_ns_per_wall_s\": 9600000000.000000"), "{j}");
         assert!(j.contains("\"baseline_sim_ns_per_wall_s\": 2400000000.000000"), "{j}");
         assert!(j.contains("\"speedup\": 4.000000"), "{j}");
+        assert!(j.contains("\"warmup_ns_reused\": 1200000000"), "{j}");
         assert!(j.contains("\"outputs_identical\": true"), "{j}");
         let rows2 = vec![BenchRow {
             scenario: "single".into(),
             fast: Leg { wall_s: 0.0, sim_ns: 1 },
             baseline: Leg { wall_s: 0.0, sim_ns: 1 },
             outputs_identical: false,
+            warmup_ns_reused: 0,
         }];
         let j2 = to_json(&cfg, &rows2);
         assert!(!j2.contains("headline"), "no matrix row → no headline block");
@@ -427,6 +479,7 @@ mod tests {
             fast: Leg { wall_s: 1.0, sim_ns: 300 },
             baseline: Leg { wall_s: 3.0, sim_ns: 300 },
             outputs_identical: true,
+            warmup_ns_reused: 0,
         };
         assert!((r.speedup() - 3.0).abs() < 1e-12);
         let z = BenchRow {
@@ -434,6 +487,7 @@ mod tests {
             fast: Leg { wall_s: 0.0, sim_ns: 0 },
             baseline: Leg { wall_s: 0.0, sim_ns: 0 },
             outputs_identical: true,
+            warmup_ns_reused: 0,
         };
         assert_eq!(z.speedup(), 0.0);
     }

@@ -75,6 +75,7 @@ usage:
               [--sockets S] [--cores N] [--workers W]
               [--rate R] [--no-compress] [--fault-migrate] [--seconds S] [--seed N]
   avxfreq matrix [--quick] [--seed N] [--threads T] [--full-isa] [--hybrid]
+  avxfreq incremental [--quick] [--seed N] [--threads T] [--cold]
   avxfreq traffic [--quick] [--seed N] [--threads T] [--loads 0.6,0.85,1.1]
                   [--arrivals poisson,bursty,diurnal,mix,bursty-mix] [--slo-ms 5]
   avxfreq fleet [--config configs/fleet_slo.toml] [--machines N]
@@ -89,8 +90,8 @@ usage:
   avxfreq tpc [--config configs/tpc.toml] [--quick] [--seed N] [--threads T]
               [--placements home-core,avx-steer,avx-steer-lazy] [--avx-cores K]
   avxfreq bench [--quick] [--seed N] [--threads T]
-                [--scenarios single,matrix,fleet,hier,executor]
-                [--out BENCH_7.json] [--min-speedup R]
+                [--scenarios single,matrix,fleet,hier,executor,incremental]
+                [--out BENCH_9.json] [--min-speedup R]
   avxfreq serve [--artifacts DIR] [--port 8443]
   avxfreq calibrate [--artifacts DIR]
 experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar fleetscale energydelay
@@ -104,6 +105,7 @@ fn main() -> anyhow::Result<()> {
         Some("flamegraph") => cmd_flamegraph(&args),
         Some("sim") => cmd_sim(&args),
         Some("matrix") => cmd_matrix(&args),
+        Some("incremental") => cmd_incremental(&args),
         Some("traffic") => cmd_traffic(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("energy") => cmd_energy(&args),
@@ -852,7 +854,7 @@ fn cmd_tpc(args: &Args) -> anyhow::Result<()> {
 
 /// `avxfreq bench` — time the canonical scenarios with the hot paths on
 /// (the default simulator) and off (the baseline), print the comparison
-/// table, and write the `BENCH_7.json` perf-trajectory record. Exits
+/// table, and write the `BENCH_9.json` perf-trajectory record. Exits
 /// non-zero if any scenario's two legs are not output-identical — the
 /// harness is also the fast-path equivalence gate (`ci.sh` runs
 /// `bench --quick`). A speedup below `--min-speedup` (default 0 = off;
@@ -876,7 +878,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             .collect();
         anyhow::ensure!(!cfg.scenarios.is_empty(), "--scenarios must name at least one scenario");
     }
-    let out_path = args.get_or("out", "BENCH_7.json").to_string();
+    let out_path = args.get_or("out", "BENCH_9.json").to_string();
     let min_speedup = args.get_parse::<f64>("min-speedup", 0.0);
 
     eprintln!(
@@ -942,6 +944,47 @@ fn cmd_matrix(args: &Args) -> anyhow::Result<()> {
     eprintln!(
         "[avxfreq] wrote {} ({} cells in {:.1}s wallclock)",
         path.display(),
+        result.cells.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// `avxfreq incremental` — the measurement-window sweep: the default
+/// matrix crossed with an innermost `measures` axis, so each warmup
+/// group shares a prefix and the checkpoint-forking fast path has work
+/// to skip. `--cold` disables forking (`incremental = false`) to
+/// demonstrate that the output bytes do not change, only
+/// `warmup_ns_reused` does (rust/tests/incremental.rs pins this).
+fn cmd_incremental(args: &Args) -> anyhow::Result<()> {
+    let quick = args.flag("quick");
+    let seed = args.get_parse::<u64>("seed", 0x5EED);
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = args.get_parse::<usize>("threads", default_threads).max(1);
+    let mut m = avxfreq::scenario::ScenarioMatrix::incremental_sweep(quick, seed);
+    if args.flag("cold") {
+        m.incremental = false;
+    }
+    eprintln!(
+        "[avxfreq] incremental: {} cells in groups of {} across up to {} threads \
+         (seed {seed:#x}, forking {})…",
+        m.len(),
+        m.warmup_group_size(),
+        threads.min(m.len().max(1)),
+        if m.incremental { "on" } else { "off" }
+    );
+    let t0 = std::time::Instant::now();
+    let result = m.run(threads);
+    print!("{}", result.render());
+    println!();
+    print!("{}", result.render_tail());
+    eprintln!(
+        "[avxfreq] warmup_ns_reused = {} ({} simulated warmup seconds skipped by forking)",
+        result.warmup_ns_reused,
+        result.warmup_ns_reused / 1_000_000_000
+    );
+    eprintln!(
+        "[avxfreq] {} cells in {:.1}s wallclock",
         result.cells.len(),
         t0.elapsed().as_secs_f64()
     );

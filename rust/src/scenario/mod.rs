@@ -14,10 +14,18 @@
 //! results into one [`crate::metrics::matrix_report`] comparison table.
 //!
 //! Determinism: a cell's outcome depends only on its own [`WebCfg`],
-//! whose seed is a pure function of `(base_seed, cell index)` — never of
-//! thread scheduling — and results are collected by cell index. Running
-//! the same matrix with 1 thread or 16 produces a byte-identical table
-//! (property-tested in `rust/tests/scenario_matrix.rs`).
+//! whose seed is a pure function of `(base_seed, warmup group)` — never
+//! of thread scheduling — and results are collected by cell index.
+//! Running the same matrix with 1 thread or 16 produces a byte-identical
+//! table (property-tested in `rust/tests/scenario_matrix.rs`).
+//!
+//! Incremental sweeps: a `measures` axis makes consecutive cells differ
+//! only in their measurement window, and [`ScenarioMatrix::run`] then
+//! simulates each group's shared warmup prefix once and checkpoint-forks
+//! it per cell ([`WebSim::fork`]) instead of cold-starting every cell —
+//! byte-identical to the cold path (differential-tested in
+//! `rust/tests/incremental.rs`), with the skipped simulated warmup
+//! reported in [`MatrixResult::warmup_ns_reused`].
 //!
 //! # Examples
 //!
@@ -52,13 +60,13 @@ use crate::fleet::{
 use crate::sched::PolicyKind;
 use crate::sim::{Time, MS, SEC};
 use crate::tpc::{PlacementSpec, TpcParams};
-use crate::traffic::ArrivalProcess;
+use crate::traffic::{ArrivalProcess, RecorderArena};
 use crate::util::mix64;
 use crate::util::table::Table;
 use crate::workload::client::{LoadMode, DEFAULT_SLO};
 use crate::workload::crypto::Isa;
-use crate::workload::webserver::{run_webserver, WebCfg, WebRun};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::workload::webserver::{run_webserver, WebCfg, WebRun, WebSim};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// One point on the topology axis: a machine shape.
@@ -330,7 +338,16 @@ pub struct Scenario {
     /// Closed-loop front-end balancer (disabled = the classic open-loop
     /// front-end; enabled cells run the hierarchical fleet layer).
     pub balancer: BalancerCfg,
-    /// Per-cell seed: a pure function of the base seed and `index`.
+    /// Measurement window drawn from the matrix's `measures` axis, or
+    /// `None` when that axis is unset (the cell then measures the
+    /// matrix-wide `measure` and labels exactly as before). Cells that
+    /// differ only in this value share their entire warmup prefix —
+    /// the divergence point the incremental runner forks at.
+    pub measure_point: Option<Time>,
+    /// Per-cell seed: a pure function of the base seed and the cell's
+    /// *warmup group* (cells differing only in `measure_point` share
+    /// it — their prefixes must be identical to be forkable; without a
+    /// `measures` axis this is the classic per-index seed).
     pub seed: u64,
     pub cfg: WebCfg,
 }
@@ -376,6 +393,9 @@ impl Scenario {
         if self.balancer.enabled {
             s.push_str(&format!("/{}", self.balancer.label()));
         }
+        if let Some(w) = self.measure_point {
+            s.push_str(&format!("/win{}ms", w / MS));
+        }
         s
     }
 }
@@ -399,6 +419,14 @@ pub struct CellResult {
 #[derive(Clone, Debug)]
 pub struct MatrixResult {
     pub cells: Vec<CellResult>,
+    /// Simulated warmup nanoseconds *not* re-simulated because a cell
+    /// was forked from a warmed checkpoint instead of cold-started
+    /// (`cfg.warmup` per forked cell). A deterministic work-avoidance
+    /// measure — a pure function of the matrix declaration, independent
+    /// of wall clock and thread count — recorded in the bench
+    /// fingerprint. 0 when `incremental` is off or no cells share a
+    /// warmup prefix.
+    pub warmup_ns_reused: u64,
 }
 
 impl MatrixResult {
@@ -537,16 +565,30 @@ pub struct ScenarioMatrix {
     /// Feedback-enabled cells run through [`run_hier_fleet`]'s epoch
     /// loop at any fleet size.
     pub balancers: Vec<BalancerCfg>,
+    /// Measurement windows to sweep (default empty: every cell measures
+    /// `self.measure` and the expansion is byte-identical to the
+    /// pre-measures matrix). The *innermost* axis, and deliberately
+    /// warmup-inert: consecutive cells differing only in their window
+    /// share the entire warmup prefix, which is what makes them
+    /// checkpoint-forkable (see [`ScenarioMatrix::run`]).
+    pub measures: Vec<Time>,
     /// Latency SLO threshold applied to every cell.
     pub slo: Time,
     /// Hot-path optimizations for every cell's machines (bit-exact
     /// either way; the bench harness flips this for its baseline leg).
     pub fast_paths: bool,
+    /// Fork consecutive same-prefix cells from one warmed checkpoint
+    /// instead of re-simulating the warmup per cell (default on).
+    /// Bit-exact either way — `rust/tests/incremental.rs` pins
+    /// incremental-on ≡ incremental-off ≡ the cold single-cell runner —
+    /// so this is purely a work-avoidance switch, like `fast_paths`.
+    pub incremental: bool,
     /// Base seed; each cell derives `mix64(base_seed ^ f(index))`.
     pub base_seed: u64,
     /// Simulated warmup before measurement, per cell.
     pub warmup: Time,
-    /// Simulated measurement window, per cell.
+    /// Simulated measurement window, per cell (unless the `measures`
+    /// axis overrides it).
     pub measure: Time,
 }
 
@@ -565,8 +607,10 @@ impl ScenarioMatrix {
             governors: vec![GovernorSpec::IntelLegacy],
             executors: vec![ExecutorSpec::Kernel],
             balancers: vec![BalancerCfg::default()],
+            measures: Vec::new(),
             slo: DEFAULT_SLO,
             fast_paths: true,
+            incremental: true,
             base_seed,
             warmup: 300 * MS,
             measure: SEC,
@@ -666,6 +710,19 @@ impl ScenarioMatrix {
         m
     }
 
+    /// The incremental sweep behind `avxfreq incremental`: the default
+    /// 8-cell sweep crossed with a short and a full measurement window
+    /// (16 cells in 8 warmup groups of 2) — the window-sensitivity
+    /// question a measurement-methodology study actually asks, and the
+    /// shape where checkpoint forking pays: each group simulates its
+    /// warmup once and forks, skipping exactly half the warmup work
+    /// ([`MatrixResult::warmup_ns_reused`] reports the saving).
+    pub fn incremental_sweep(quick: bool, base_seed: u64) -> Self {
+        let mut m = ScenarioMatrix::default_sweep(quick, base_seed);
+        m.measures = vec![m.measure / 2, m.measure];
+        m
+    }
+
     /// Number of cells the matrix expands to.
     pub fn len(&self) -> usize {
         self.topologies.len()
@@ -679,6 +736,14 @@ impl ScenarioMatrix {
             * self.governors.len()
             * self.executors.len()
             * self.balancers.len()
+            * self.measures.len().max(1)
+    }
+
+    /// Cells per warmup group: the run length of consecutive cells that
+    /// differ only in their measurement window (1 without a `measures`
+    /// axis — every cell is its own group and nothing is forked).
+    pub fn warmup_group_size(&self) -> usize {
+        self.measures.len().max(1)
     }
 
     /// True when any axis is empty.
@@ -687,14 +752,22 @@ impl ScenarioMatrix {
     }
 
     /// Expand the cartesian product, topology-major (load level, arrival
-    /// process, fleet size, router, governor, executor, and balancer are
-    /// the innermost axes, in that order — with the default `[1] ×
-    /// [RoundRobin]` fleet axes, `[IntelLegacy]` governor axis,
-    /// `[Kernel]` executor axis, and `[open-loop]` balancer axis the
-    /// expansion is exactly the pre-fleet cell order), into runnable
-    /// cells.
+    /// process, fleet size, router, governor, executor, balancer, and
+    /// measurement window are the innermost axes, in that order — with
+    /// the default `[1] × [RoundRobin]` fleet axes, `[IntelLegacy]`
+    /// governor axis, `[Kernel]` executor axis, `[open-loop]` balancer
+    /// axis, and unset measures axis the expansion is exactly the
+    /// pre-fleet cell order), into runnable cells.
     pub fn cells(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
+        // The measurement-window axis as expanded: `[None]` when unset,
+        // so a measures-free matrix keeps its classic cell list.
+        let measure_axis: Vec<Option<Time>> = if self.measures.is_empty() {
+            vec![None]
+        } else {
+            self.measures.iter().map(|&w| Some(w)).collect()
+        };
+        let ma = &measure_axis;
         for topo in &self.topologies {
             for policy in &self.policies {
                 for workload in &self.workloads {
@@ -704,20 +777,35 @@ impl ScenarioMatrix {
                                 for &fleet in &self.fleet_sizes {
                                     for &router in &self.routers {
                                         for &governor in &self.governors {
-                                            // Executor × balancer: the two
-                                            // innermost axes, flattened to
-                                            // keep the nesting depth sane.
-                                            for (&executor, &balancer) in
+                                            // Executor × balancer × window:
+                                            // the three innermost axes,
+                                            // flattened to keep the nesting
+                                            // depth sane.
+                                            for (&executor, &balancer, measure_point) in
                                                 self.executors.iter().flat_map(|e| {
-                                                    self.balancers
-                                                        .iter()
-                                                        .map(move |b| (e, b))
+                                                    self.balancers.iter().flat_map(
+                                                        move |b| {
+                                                            ma.iter().map(move |&w| {
+                                                                (e, b, w)
+                                                            })
+                                                        },
+                                                    )
                                                 })
                                             {
                                                 let index = out.len();
+                                                // Cells of one warmup group
+                                                // (consecutive, differing only
+                                                // in their window) share a
+                                                // seed — identical prefixes
+                                                // are what makes them
+                                                // forkable. Without a measures
+                                                // axis, group == index and
+                                                // this is the classic formula.
+                                                let group =
+                                                    index / self.warmup_group_size();
                                                 let seed = mix64(
                                                     self.base_seed
-                                                        ^ (index as u64)
+                                                        ^ (group as u64)
                                                             .wrapping_mul(0x9E37_79B9),
                                                 );
                                                 // Derive the machine shape through
@@ -762,7 +850,8 @@ impl ScenarioMatrix {
                                                 cfg.fast_paths = self.fast_paths;
                                                 cfg.seed = seed;
                                                 cfg.warmup = self.warmup;
-                                                cfg.measure = self.measure;
+                                                cfg.measure =
+                                                    measure_point.unwrap_or(self.measure);
                                                 cfg.governor = governor;
                                                 if let ExecutorSpec::Tpc { placement } =
                                                     executor
@@ -796,6 +885,7 @@ impl ScenarioMatrix {
                                                     governor,
                                                     executor,
                                                     balancer,
+                                                    measure_point,
                                                     seed,
                                                     cfg,
                                                 });
@@ -813,10 +903,13 @@ impl ScenarioMatrix {
     }
 
     /// Execute every cell across `threads` OS threads and collect the
-    /// results in cell order. Each worker repeatedly claims the next
-    /// unclaimed cell (work stealing over an atomic cursor), so uneven
-    /// cell durations cannot skew the result: outputs are keyed by cell
-    /// index and each cell is seeded independently of scheduling.
+    /// results in cell order. The unit of work a thread claims (work
+    /// stealing over an atomic cursor) is a *warmup group* — the run of
+    /// [`ScenarioMatrix::warmup_group_size`] consecutive cells that
+    /// differ only in their measurement window — so uneven durations
+    /// cannot skew the result: outputs are keyed by cell index and each
+    /// cell is seeded independently of scheduling, which keeps the
+    /// rendered tables byte-identical at any thread count.
     ///
     /// Size-1 round-robin open-loop cells run the single-machine
     /// simulator directly (bit-identical to the pre-fleet matrix);
@@ -825,35 +918,70 @@ impl ScenarioMatrix {
     /// within the cell, since the cells themselves already saturate the
     /// thread pool — and reports the cluster-level [`WebRun`] plus the
     /// full [`FleetRun`] / [`HierFleetRun`].
+    ///
+    /// With `incremental` on, a warmup group of single-machine cells
+    /// simulates its shared warmup prefix once ([`WebSim::run_warmup`]),
+    /// checkpoint-forks the warmed state per cell ([`WebSim::fork`]) and
+    /// runs only each cell's measurement window; per-cell latency
+    /// recorders are recycled through a [`RecorderArena`]. The cold
+    /// single-cell path above is the *reference* this must match
+    /// byte-for-byte (differential-tested in
+    /// `rust/tests/incremental.rs`); fleet and feedback cells always
+    /// take it, as does any group whose task bodies decline to fork.
     pub fn run(&self, threads: usize) -> MatrixResult {
         let cells = self.cells();
-        let n_threads = threads.max(1).min(cells.len().max(1));
+        let gsize = self.warmup_group_size();
+        debug_assert_eq!(cells.len() % gsize, 0, "expansion is a multiple of the group size");
+        let n_groups = cells.len() / gsize;
+        let n_threads = threads.max(1).min(n_groups.max(1));
         let cursor = AtomicUsize::new(0);
+        let reused = AtomicU64::new(0);
         type CellOut = (WebRun, Option<FleetRun>, Option<HierFleetRun>);
         let slots: Vec<Mutex<Option<CellOut>>> =
             cells.iter().map(|_| Mutex::new(None)).collect();
+        // The cold path: exactly the historical per-cell dispatch — the
+        // byte-reference the forked path is tested against. Never "fix"
+        // a forked/cold divergence by changing this side.
+        let run_cold = |s: &Scenario| -> CellOut {
+            if s.uses_hier_layer() {
+                let fcfg = FleetCfg::new(s.fleet, s.router, s.cfg.clone());
+                let mut hcfg = HierFleetCfg::new(fcfg, s.balancer);
+                hcfg.machines_per_rack = s.fleet.max(1).min(8);
+                let h = run_hier_fleet(&hcfg, 1);
+                (h.cluster_run(&s.workload), None, Some(h))
+            } else if !s.uses_fleet_layer() {
+                (run_webserver(&s.cfg), None, None)
+            } else {
+                let fcfg = FleetCfg::new(s.fleet, s.router, s.cfg.clone());
+                let f = run_fleet(&fcfg, 1);
+                (f.cluster_run(), Some(f), None)
+            }
+        };
         std::thread::scope(|scope| {
             for _ in 0..n_threads {
                 scope.spawn(|| loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= cells.len() {
+                    let g = cursor.fetch_add(1, Ordering::Relaxed);
+                    if g >= n_groups {
                         break;
                     }
-                    let s = &cells[i];
-                    let result = if s.uses_hier_layer() {
-                        let fcfg = FleetCfg::new(s.fleet, s.router, s.cfg.clone());
-                        let mut hcfg = HierFleetCfg::new(fcfg, s.balancer);
-                        hcfg.machines_per_rack = s.fleet.max(1).min(8);
-                        let h = run_hier_fleet(&hcfg, 1);
-                        (h.cluster_run(&s.workload), None, Some(h))
-                    } else if !s.uses_fleet_layer() {
-                        (run_webserver(&s.cfg), None, None)
-                    } else {
-                        let fcfg = FleetCfg::new(s.fleet, s.router, s.cfg.clone());
-                        let f = run_fleet(&fcfg, 1);
-                        (f.cluster_run(), Some(f), None)
-                    };
-                    *slots[i].lock().expect("slot poisoned") = Some(result);
+                    let group = &cells[g * gsize..(g + 1) * gsize];
+                    // Forking applies to single-machine groups of ≥ 2
+                    // cells; fleet/hier cells and singleton groups take
+                    // the reference path (axes other than the window are
+                    // constant within a group, so the first cell decides
+                    // for all).
+                    let forkable = self.incremental
+                        && gsize > 1
+                        && !group[0].uses_fleet_layer()
+                        && !group[0].uses_hier_layer();
+                    if !forkable {
+                        for (j, s) in group.iter().enumerate() {
+                            *slots[g * gsize + j].lock().expect("slot poisoned") =
+                                Some(run_cold(s));
+                        }
+                        continue;
+                    }
+                    self.run_group_forked(group, &slots[g * gsize..(g + 1) * gsize], &reused);
                 });
             }
         });
@@ -868,7 +996,47 @@ impl ScenarioMatrix {
                 CellResult { scenario, run, fleet, hier }
             })
             .collect();
-        MatrixResult { cells }
+        MatrixResult { cells, warmup_ns_reused: reused.into_inner() }
+    }
+
+    /// Run one warmup group through the checkpoint-forking path: build
+    /// the first cell's simulation, simulate the shared warmup prefix
+    /// once, then fork each cell off the warmed checkpoint and run only
+    /// its measurement window (the last cell consumes the checkpoint
+    /// itself — its warmup was actually simulated, so it does not count
+    /// as reused). Falls back to the cold reference path for the whole
+    /// group if any task body declines to fork.
+    fn run_group_forked(
+        &self,
+        group: &[Scenario],
+        slots: &[Mutex<Option<(WebRun, Option<FleetRun>, Option<HierFleetRun>)>>],
+        reused: &AtomicU64,
+    ) {
+        let mut arena = RecorderArena::new();
+        let mut sim = Some(WebSim::new(&group[0].cfg));
+        sim.as_mut().expect("just built").run_warmup();
+        for (j, s) in group.iter().enumerate() {
+            let run = if j + 1 == group.len() {
+                let mut base = sim.take().expect("checkpoint consumed early");
+                base.set_measure(s.cfg.measure);
+                base.finish().0
+            } else {
+                match sim.as_ref().expect("checkpoint alive").fork(&mut arena) {
+                    Some(mut f) => {
+                        f.set_measure(s.cfg.measure);
+                        reused.fetch_add(s.cfg.warmup, Ordering::Relaxed);
+                        f.finish_into_arena(&mut arena)
+                    }
+                    // A body declined to fork: this cell falls back to
+                    // the cold reference path (later cells decline
+                    // identically; the final cell still consumes the
+                    // warmed checkpoint, which *is* the reference
+                    // build → warmup → finish sequence).
+                    None => run_webserver(&s.cfg),
+                }
+            };
+            *slots[j].lock().expect("slot poisoned") = Some((run, None, None));
+        }
     }
 }
 
@@ -1065,6 +1233,43 @@ mod tests {
         // in the dispatch).
         assert_eq!(cells[1].fleet, 1);
         assert!(!cells[1].uses_fleet_layer());
+    }
+
+    #[test]
+    fn measures_axis_expands_innermost_and_defaults_stay_classic() {
+        // Default: no measures axis — classic 8-cell expansion, every
+        // cell its own warmup group, no window suffix in labels.
+        let classic = ScenarioMatrix::default_sweep(true, 7);
+        assert_eq!(classic.warmup_group_size(), 1);
+        assert!(classic.incremental, "incremental is default-on");
+        assert!(classic.cells().iter().all(|c| c.measure_point.is_none()));
+        assert_eq!(classic.cells().len(), 8);
+
+        let m = ScenarioMatrix::incremental_sweep(true, 7);
+        assert_eq!(m.warmup_group_size(), 2);
+        assert_eq!(m.len(), 16);
+        let cells = m.cells();
+        assert_eq!(cells.len(), 16);
+        let base = classic.cells();
+        for g in 0..8 {
+            // The window is the innermost axis: groups are consecutive
+            // pairs differing only in cfg.measure, sharing a seed (the
+            // forkable-prefix invariant) — and the group seed is exactly
+            // the underlying 8-cell sweep's per-index seed, so the axis
+            // never perturbs the base expansion's streams.
+            let (a, b) = (&cells[2 * g], &cells[2 * g + 1]);
+            assert_eq!(a.seed, b.seed, "group {g} must share its seed");
+            assert_eq!(a.seed, base[g].seed);
+            assert_eq!(a.cfg.warmup, b.cfg.warmup);
+            assert_eq!(a.cfg.measure * 2, b.cfg.measure, "short then full window");
+            assert_eq!(a.topology, b.topology);
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.isa, b.isa);
+            assert_eq!(a.topology, base[g].topology);
+            // Labels still distinguish the two cells of a group.
+            assert_ne!(a.label(), b.label());
+            assert!(a.label().ends_with("ms"), "window suffix expected: {}", a.label());
+        }
     }
 
     #[test]

@@ -53,7 +53,11 @@ impl Default for AdaptiveParams {
 }
 
 /// Online controller; owns the AVX-time baseline between ticks.
-#[derive(Debug)]
+///
+/// `Clone` carries the baseline, debounce proposal, and decision
+/// counters across a checkpoint fork so the controller's post-fork
+/// ticks match a cold run exactly.
+#[derive(Clone, Debug)]
 pub struct Controller {
     pub params: AdaptiveParams,
     last_avx_ns: Vec<Time>,

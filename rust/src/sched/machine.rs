@@ -61,6 +61,69 @@ pub enum Action {
 /// `Rc<RefCell<…>>` (the simulator is single-threaded by design).
 pub trait TaskBody {
     fn next(&mut self, now: Time, rng: &mut Rng) -> Action;
+
+    /// Produce this body's checkpoint-fork twin, rewiring shared
+    /// workload state through `ctx` (see [`ForkCtx`]): handles to the
+    /// same `Rc` allocation on the original must resolve to the same
+    /// cloned allocation on the fork, and immutable `Rc`s may be shared
+    /// outright (the copy-on-write half of checkpoint forking).
+    ///
+    /// The default `None` marks the body as not forkable;
+    /// [`Machine::try_fork`] then returns `None` and the caller falls
+    /// back to a cold run, so forking is strictly opt-in per workload.
+    fn fork(&self, _ctx: &mut ForkCtx) -> Option<Box<dyn TaskBody>> {
+        None
+    }
+}
+
+/// Identity map used while forking a machine: old `Rc` allocation →
+/// its one clone on the fork side.
+///
+/// Task bodies and drivers frequently hold handles to the *same*
+/// `Rc<RefCell<…>>` (e.g. every worker shares one `ServerShared`).
+/// A fork must clone that allocation exactly once and point every
+/// forked handle at the single clone — cloning per handle would split
+/// formerly-shared state and silently diverge from the cold run.
+#[derive(Default)]
+pub struct ForkCtx {
+    map: std::collections::HashMap<usize, Box<dyn std::any::Any>>,
+}
+
+impl ForkCtx {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fork-side replacement for `rc`: the pointee is deep-cloned the
+    /// first time an allocation is seen; every later handle to the same
+    /// allocation gets the same replacement `Rc`.
+    pub fn fork_rc<T: Clone + 'static>(
+        &mut self,
+        rc: &std::rc::Rc<std::cell::RefCell<T>>,
+    ) -> std::rc::Rc<std::cell::RefCell<T>> {
+        let key = std::rc::Rc::as_ptr(rc) as usize;
+        if let Some(existing) = self.map.get(&key) {
+            return existing
+                .downcast_ref::<std::rc::Rc<std::cell::RefCell<T>>>()
+                .expect("ForkCtx entry type mismatch for shared allocation")
+                .clone();
+        }
+        let forked = std::rc::Rc::new(std::cell::RefCell::new(rc.borrow().clone()));
+        self.map.insert(key, Box::new(forked.clone()));
+        forked
+    }
+
+    /// Pre-seed the map: `old`'s fork-side replacement is `new`. Lets a
+    /// caller build one replacement specially (e.g. recorders drawn from
+    /// an arena) while every other handle to `old` still rewires onto
+    /// that same replacement through [`ForkCtx::fork_rc`].
+    pub fn provide<T: 'static>(
+        &mut self,
+        old: &std::rc::Rc<std::cell::RefCell<T>>,
+        new: &std::rc::Rc<std::cell::RefCell<T>>,
+    ) {
+        self.map.insert(std::rc::Rc::as_ptr(old) as usize, Box::new(new.clone()));
+    }
 }
 
 /// External event source driving the simulation (request arrivals, etc.).
@@ -168,7 +231,7 @@ enum CoreRun {
     Busy { task: TaskId },
 }
 
-#[derive(Default)]
+#[derive(Clone, Default)]
 struct Channel {
     credits: u64,
     waiters: VecDeque<TaskId>,
@@ -300,16 +363,18 @@ impl Machine {
         for i in 0..p.extra_active_cores % n_sockets {
             extra_per_domain[n_sockets - 1 - i] += 1;
         }
-        let confined = p.hybrid.is_some_and(|h| h.has_e_cores());
-        let sched = if confined {
-            Scheduler::new_hybrid(
+        // Single destructure decides confinement AND supplies the spec:
+        // the capability mask can only be read from the very value that
+        // proved E-cores exist, so guard drift can never reintroduce a
+        // panic here.
+        let sched = match p.hybrid.filter(|h| h.has_e_cores()) {
+            Some(h) => Scheduler::new_hybrid(
                 policy,
                 p.sched.clone(),
                 socket_of.clone(),
-                p.hybrid.unwrap().capability_mask(),
-            )
-        } else {
-            Scheduler::new_numa(policy, p.sched.clone(), socket_of.clone())
+                h.capability_mask(),
+            ),
+            None => Scheduler::new_numa(policy, p.sched.clone(), socket_of.clone()),
         };
         let turbo_e = p
             .hybrid
@@ -1026,6 +1091,61 @@ impl Machine {
         }
         total
     }
+
+    /// Checkpoint-fork the machine: a deep copy whose continuation is
+    /// bit-identical to continuing the original (same event `(time,
+    /// seq)` order, same RNG stream, same scheduler decisions).
+    ///
+    /// All machine-owned state clones directly — cores, scheduler,
+    /// RNG, event queue (with its seq counter and calendar buckets),
+    /// channels, per-core bookkeeping, counters. Task bodies are the
+    /// one part the machine cannot clone itself (trait objects holding
+    /// workload `Rc`s), so each live body is asked to
+    /// [`TaskBody::fork`] through the shared `ctx`; any body that
+    /// declines makes the whole fork decline (`None`), and the caller
+    /// must fall back to a cold run. Exited tasks (body slot `None`)
+    /// stay exited.
+    pub fn try_fork(&self, ctx: &mut ForkCtx) -> Option<Machine> {
+        let mut bodies = Vec::with_capacity(self.bodies.len());
+        for slot in &self.bodies {
+            match slot {
+                None => bodies.push(None),
+                Some(body) => bodies.push(Some(body.fork(ctx)?)),
+            }
+        }
+        Some(Machine {
+            cores: self.cores.clone(),
+            sched: self.sched.clone(),
+            rng: self.rng.clone(),
+            turbo: self.turbo.clone(),
+            bodies,
+            pending_action: self.pending_action.clone(),
+            fm_scalar_streak: self.fm_scalar_streak.clone(),
+            run: self.run.clone(),
+            step_pending: self.step_pending.clone(),
+            quantum_end: self.quantum_end.clone(),
+            need_resched: self.need_resched.clone(),
+            q: self.q.clone(),
+            channels: self.channels.clone(),
+            socket_of: self.socket_of.clone(),
+            domain_of: self.domain_of.clone(),
+            n_sockets: self.n_sockets,
+            hybrid: self.hybrid,
+            turbo_e: self.turbo_e.clone(),
+            module_l1_until: self.module_l1_until.clone(),
+            busy_per_domain: self.busy_per_domain.clone(),
+            extra_per_domain: self.extra_per_domain.clone(),
+            track_flame: self.track_flame,
+            fault_migrate: self.fault_migrate,
+            fast_paths: self.fast_paths,
+            horizon: self.horizon,
+            flame: self.flame.clone(),
+            coalesced_reps: self.coalesced_reps,
+            fm_faults: self.fm_faults,
+            avx_task_ns: self.avx_task_ns.clone(),
+            e_wide512_blocks: self.e_wide512_blocks,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -1454,6 +1574,80 @@ mod tests {
             fingerprint(&m)
         };
         assert_eq!(run(true), run(false));
+    }
+
+    /// Forkable variant of [`ScalarLoop`]: rewires its shared counter
+    /// through the [`ForkCtx`] so both tasks land on one cloned cell.
+    struct ForkableLoop {
+        remaining: u64,
+        done: Rc<RefCell<u64>>,
+    }
+    impl TaskBody for ForkableLoop {
+        fn next(&mut self, _now: Time, _rng: &mut Rng) -> Action {
+            if self.remaining == 0 {
+                *self.done.borrow_mut() += 1;
+                return Action::Exit;
+            }
+            self.remaining -= 1;
+            if self.remaining % 7 == 0 {
+                return Action::Sleep(5_000);
+            }
+            Action::Run {
+                block: Block { mix: ClassMix::scalar(10_000), mem_ops: 100, branches: 200, license_exempt: false },
+                func: 1,
+                stack: 0,
+            }
+        }
+        fn fork(&self, ctx: &mut ForkCtx) -> Option<Box<dyn TaskBody>> {
+            Some(Box::new(ForkableLoop {
+                remaining: self.remaining,
+                done: ctx.fork_rc(&self.done),
+            }))
+        }
+    }
+
+    #[test]
+    fn try_fork_declines_when_a_body_cannot_fork() {
+        // `ScalarLoop` keeps the default `fork` (None): the machine must
+        // refuse to fork rather than produce a half-wired copy.
+        let mut m = small_machine(PolicyKind::Unmodified, 2);
+        let done = Rc::new(RefCell::new(0u64));
+        m.spawn(TaskType::Untyped, 0, Box::new(ScalarLoop { remaining: 50, done }));
+        m.run_until(MS, &mut NullDriver);
+        assert!(m.try_fork(&mut ForkCtx::new()).is_none());
+    }
+
+    #[test]
+    fn forked_machine_continues_bit_identically_and_independently() {
+        // Warm a machine to an arbitrary mid-run point, fork it, then run
+        // both to the same horizon: identical fingerprints and identical
+        // shared-counter values, on *separate* allocations (mutating one
+        // side's outcome must not leak into the other).
+        let mut m = small_machine(PolicyKind::Unmodified, 2);
+        let done = Rc::new(RefCell::new(0u64));
+        for _ in 0..4 {
+            m.spawn(
+                TaskType::Untyped,
+                0,
+                Box::new(ForkableLoop { remaining: 2_000, done: done.clone() }),
+            );
+        }
+        m.run_until(2 * MS, &mut NullDriver);
+
+        let mut ctx = ForkCtx::new();
+        let mut f = m.try_fork(&mut ctx).expect("all bodies forkable");
+        // All four bodies share one counter; the fork must too.
+        let forked_done = ctx.fork_rc(&done);
+        assert_eq!(*forked_done.borrow(), *done.borrow());
+
+        m.run_until(SEC, &mut NullDriver);
+        f.run_until(SEC, &mut NullDriver);
+        assert_eq!(fingerprint(&m), fingerprint(&f));
+        assert_eq!(*done.borrow(), 4);
+        assert_eq!(*forked_done.borrow(), 4);
+        // Independence: the two counters are distinct allocations.
+        *forked_done.borrow_mut() += 1;
+        assert_eq!(*done.borrow(), 4);
     }
 
     /// Body emitting one `RunMany` batch then exiting.

@@ -110,13 +110,18 @@ pub enum WakeTarget {
 }
 
 /// One core's replicated runqueues.
-#[derive(Debug, Default)]
+#[derive(Clone, Debug, Default)]
 struct CoreQueues {
     queues: [SkipList; 3],
 }
 
 /// The scheduler.
-#[derive(Debug)]
+///
+/// `Clone` snapshots the complete scheduling state — runqueues (with
+/// their deterministic skiplist level generators), entities, placement
+/// maps, and stats — for checkpoint forking ([`crate::scenario`]): a
+/// cloned scheduler makes bit-identical decisions from the fork point on.
+#[derive(Clone, Debug)]
 pub struct Scheduler {
     pub policy: PolicyKind,
     pub params: SchedParams,

@@ -18,7 +18,7 @@ pub struct Key {
     pub seq: u64,
 }
 
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 struct Node {
     key: Key,
     task: TaskId,
@@ -32,7 +32,12 @@ struct Node {
 const NIL: usize = usize::MAX;
 
 /// Skiplist keyed by [`Key`], storing task ids.
-#[derive(Debug)]
+///
+/// `Clone` snapshots the whole structure — node arena, free list, level
+/// links, and the deterministic level-generator state — so a cloned
+/// scheduler resumes with identical pick order and identical future
+/// level choices (checkpoint forking, [`crate::scenario`]).
+#[derive(Clone, Debug)]
 pub struct SkipList {
     // Node arena; freed slots are reused via a free list.
     nodes: Vec<Node>,

@@ -48,6 +48,13 @@ impl LatencyStats {
         self.violations = 0;
     }
 
+    /// [`LatencyStats::reset`] plus re-arming for a (possibly different)
+    /// SLO threshold — the recycling step behind [`RecorderArena`].
+    pub fn reset_with_slo(&mut self, slo: Time) {
+        self.reset();
+        self.slo = slo;
+    }
+
     /// Record one completed request's latency (ns).
     pub fn record(&mut self, latency: Time) {
         self.hist.record(latency);
@@ -114,6 +121,52 @@ impl LatencyStats {
             slo_us: us(self.slo),
             slo_violation_frac: self.violation_frac(),
         }
+    }
+}
+
+/// Recycling pool for [`LatencyStats`] recorders, used by incremental
+/// scenario sweeps: consecutive forked cells hand their recorders back
+/// after summarising so the next cell's fork reuses the histogram bucket
+/// allocations instead of growing fresh ones.
+///
+/// Reuse is byte-safe because a recycled recorder is indistinguishable
+/// from a new one: [`RecorderArena::take`] hands it out through
+/// [`LatencyStats::reset_with_slo`], and `reset ≡ fresh` is pinned by
+/// the `reset_is_equivalent_to_fresh` test below.
+#[derive(Debug, Default)]
+pub struct RecorderArena {
+    pool: Vec<LatencyStats>,
+}
+
+impl RecorderArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cleared recorder armed for `slo`: recycled from the pool when
+    /// one is available, freshly allocated otherwise.
+    pub fn take(&mut self, slo: Time) -> LatencyStats {
+        match self.pool.pop() {
+            Some(mut s) => {
+                s.reset_with_slo(slo);
+                s
+            }
+            None => LatencyStats::new(slo),
+        }
+    }
+
+    /// Return a recorder to the pool for later reuse.
+    pub fn put(&mut self, stats: LatencyStats) {
+        self.pool.push(stats);
+    }
+
+    /// Recorders currently pooled (reporting/tests only).
+    pub fn len(&self) -> usize {
+        self.pool.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pool.is_empty()
     }
 }
 
@@ -248,6 +301,44 @@ mod tests {
         assert_eq!(s.completed(), fresh.completed());
         assert_eq!(s.violations(), fresh.violations());
         assert_eq!(s.hist.max(), fresh.hist.max());
+    }
+
+    #[test]
+    fn arena_recycles_and_rearms_recorders() {
+        let mut arena = RecorderArena::new();
+        assert!(arena.is_empty());
+        // Nothing pooled: take allocates fresh.
+        let mut a = arena.take(2 * MS);
+        a.record(MS);
+        a.record(5 * MS);
+        arena.put(a);
+        assert_eq!(arena.len(), 1);
+        // Recycled with a *different* SLO: cleared and re-armed.
+        let b = arena.take(MS);
+        assert!(arena.is_empty());
+        assert_eq!(b.completed(), 0);
+        assert_eq!(b.violations(), 0);
+        assert_eq!(b.slo, MS);
+    }
+
+    #[test]
+    fn recycled_recorder_behaves_like_fresh() {
+        let mut arena = RecorderArena::new();
+        let mut used = arena.take(2 * MS);
+        for v in [MS, 3 * MS, 7 * MS] {
+            used.record(v);
+        }
+        arena.put(used);
+        let mut recycled = arena.take(2 * MS);
+        let mut fresh = LatencyStats::new(2 * MS);
+        for v in [MS / 2, 3 * MS, 4 * MS] {
+            recycled.record(v);
+            fresh.record(v);
+        }
+        assert_eq!(recycled.completed(), fresh.completed());
+        assert_eq!(recycled.violations(), fresh.violations());
+        assert_eq!(recycled.hist.max(), fresh.hist.max());
+        assert_eq!(recycled.hist.percentile(99.0), fresh.hist.percentile(99.0));
     }
 
     #[test]

@@ -30,4 +30,4 @@ pub mod arrival;
 pub mod lifecycle;
 
 pub use arrival::{ArrivalGen, ArrivalProcess, Tenant, TenantBurst};
-pub use lifecycle::{FrontendOutcomes, LatencyStats, Request, TailSummary};
+pub use lifecycle::{FrontendOutcomes, LatencyStats, RecorderArena, Request, TailSummary};

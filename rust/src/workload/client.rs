@@ -15,7 +15,7 @@
 //! [`LatencyStats`] — aggregate and per tenant — from which the
 //! p50/p95/p99/p999/SLO tables are produced.
 
-use crate::sched::machine::{Driver, Machine};
+use crate::sched::machine::{Driver, ForkCtx, Machine};
 use crate::sim::{Time, MS};
 use crate::traffic::{ArrivalGen, ArrivalProcess, LatencyStats, Request};
 use std::cell::RefCell;
@@ -60,7 +60,7 @@ impl LoadMode {
 pub const DEFAULT_SLO: Time = 5 * MS;
 
 /// State shared between the arrival driver and the worker task bodies.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct ServerShared {
     /// Pending requests, oldest first.
     pub queue: VecDeque<Request>,
@@ -135,6 +135,27 @@ impl ServerShared {
         }
         self.dropped = 0;
     }
+
+    /// Checkpoint-fork twin with recorders drawn from `arena` instead of
+    /// deep-cloned. Only valid before measurement starts: a recycled
+    /// recorder arrives cleared, which is indistinguishable from a clone
+    /// exactly because [`ServerShared::start_measuring`] resets every
+    /// recorder before the first sample is recorded.
+    pub fn fork_with_arena(&self, arena: &mut crate::traffic::RecorderArena) -> ServerShared {
+        debug_assert!(
+            !self.measuring,
+            "forking mid-measurement would discard recorded samples"
+        );
+        ServerShared {
+            queue: self.queue.clone(),
+            measuring: self.measuring,
+            stats: arena.take(self.stats.slo),
+            tenant_stats: self.tenant_stats.iter().map(|t| arena.take(t.slo)).collect(),
+            closed_loop: self.closed_loop,
+            max_queue: self.max_queue,
+            dropped: self.dropped,
+        }
+    }
 }
 
 /// Open-loop arrival driver (external tag 0 = next arrival): samples an
@@ -158,6 +179,18 @@ impl TrafficDriver {
         let (t, tenant) = self.gen.next_after(now);
         self.next_tenant = tenant;
         m.schedule_external(t, 0);
+    }
+
+    /// Checkpoint-fork twin: generator state is cloned (the arrival
+    /// stream continues bit-identically), the shared queue rewires
+    /// through `ctx` onto the fork's copy.
+    pub fn fork(&self, ctx: &mut ForkCtx) -> TrafficDriver {
+        TrafficDriver {
+            shared: ctx.fork_rc(&self.shared),
+            ch: self.ch,
+            gen: self.gen.clone(),
+            next_tenant: self.next_tenant,
+        }
     }
 }
 
@@ -211,6 +244,18 @@ impl TraceDriver {
             self.pos = 1;
             self.next_tenant = tenant;
             m.schedule_external(t, 0);
+        }
+    }
+
+    /// Checkpoint-fork twin: replay position is cloned, the shared queue
+    /// rewires through `ctx` onto the fork's copy.
+    pub fn fork(&self, ctx: &mut ForkCtx) -> TraceDriver {
+        TraceDriver {
+            shared: ctx.fork_rc(&self.shared),
+            ch: self.ch,
+            trace: self.trace.clone(),
+            pos: self.pos,
+            next_tenant: self.next_tenant,
         }
     }
 }

@@ -14,11 +14,11 @@ use crate::analysis::flamegraph::StackTable;
 use crate::cpu::{GovernorSpec, PowerParams};
 use crate::isa::block::{Block, ClassMix};
 use crate::isa::{Binary, Function};
-use crate::sched::machine::{Action, Driver, Machine, MachineParams, TaskBody};
+use crate::sched::machine::{Action, Driver, ForkCtx, Machine, MachineParams, TaskBody};
 use crate::sched::{PolicyKind, TaskType};
 use crate::sim::{Time, MS, SEC};
 use crate::tpc::{Reactor, TpcJob, TpcRuntime};
-use crate::traffic::{ArrivalProcess, LatencyStats, Request, TailSummary};
+use crate::traffic::{ArrivalProcess, LatencyStats, RecorderArena, Request, TailSummary};
 use crate::util::Rng;
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -231,9 +231,32 @@ impl WebCfg {
             (false, true) => cfg.mode = LoadMode::Closed { connections: conns as usize },
             (false, false) => {}
         }
-        cfg.warmup = (conf.float_or("load.warmup_s", cfg.warmup as f64 / SEC as f64) * SEC as f64) as Time;
-        cfg.measure = (conf.float_or("load.measure_s", cfg.measure as f64 / SEC as f64) * SEC as f64) as Time;
-        cfg.slo = (conf.float_or("load.slo_ms", cfg.slo as f64 / MS as f64) * MS as f64) as Time;
+        // Window and SLO floats convert through `as Time` (u64), which
+        // *saturates*: a negative `load.warmup_s` would silently become
+        // 0 and skip warmup (and a negative measure/SLO would zero the
+        // measurement window / violation threshold). Reject at the
+        // config edge instead of running a quietly different experiment.
+        let warmup_s = conf.float_or("load.warmup_s", cfg.warmup as f64 / SEC as f64);
+        anyhow::ensure!(
+            warmup_s.is_finite() && warmup_s >= 0.0,
+            "load.warmup_s = {warmup_s}: must be a finite value ≥ 0 \
+             (a negative warmup would silently truncate to 0)"
+        );
+        let measure_s = conf.float_or("load.measure_s", cfg.measure as f64 / SEC as f64);
+        anyhow::ensure!(
+            measure_s.is_finite() && measure_s > 0.0,
+            "load.measure_s = {measure_s}: must be a finite value > 0 \
+             (a non-positive window would leave nothing to measure)"
+        );
+        let slo_ms = conf.float_or("load.slo_ms", cfg.slo as f64 / MS as f64);
+        anyhow::ensure!(
+            slo_ms.is_finite() && slo_ms > 0.0,
+            "load.slo_ms = {slo_ms}: must be a finite value > 0 \
+             (a non-positive SLO would count every completion as a violation)"
+        );
+        cfg.warmup = (warmup_s * SEC as f64) as Time;
+        cfg.measure = (measure_s * SEC as f64) as Time;
+        cfg.slo = (slo_ms * MS as f64) as Time;
         // Non-Poisson arrival processes reshape the open-loop rate.
         let process = conf.str_or("load.process", "poisson");
         if process != "poisson" {
@@ -571,6 +594,20 @@ impl TaskBody for Worker {
             }
         }
     }
+
+    fn fork(&self, ctx: &mut ForkCtx) -> Option<Box<dyn TaskBody>> {
+        Some(Box::new(Worker {
+            // Planners (and the stack table inside) are immutable after
+            // construction: shared outright, the copy-on-write half.
+            planners: self.planners.clone(),
+            shared: ctx.fork_rc(&self.shared),
+            ch: self.ch,
+            rng: self.rng.clone(),
+            reqno: self.reqno,
+            current: self.current,
+            steps: self.steps.clone(),
+        }))
+    }
 }
 
 /// Payload carried by thread-per-core executor jobs: the request plus,
@@ -579,6 +616,7 @@ impl TaskBody for Worker {
 /// *on the serving worker* with that worker's own RNG and request
 /// counter — exactly the [`Worker`] protocol, which is what makes
 /// `home-core` on one worker byte-identical to the shared-queue server.
+#[derive(Clone)]
 struct ExecJob {
     req: Request,
     resume: Option<VecDeque<Step>>,
@@ -692,6 +730,24 @@ impl TaskBody for ExecutorTask {
             }
         }
     }
+
+    fn fork(&self, ctx: &mut ForkCtx) -> Option<Box<dyn TaskBody>> {
+        Some(Box::new(ExecutorTask {
+            planners: self.planners.clone(),
+            shared: ctx.fork_rc(&self.shared),
+            // Every executor task (and the drain driver) holds the same
+            // runtime Rc: the ctx clones it once and rewires all of them.
+            rt: ctx.fork_rc(&self.rt),
+            core: self.core,
+            ch: self.ch,
+            rng: self.rng.clone(),
+            reqno: self.reqno,
+            current: self.current.clone(),
+            steps: self.steps.clone(),
+            stint: self.stint,
+            budget: self.budget,
+        }))
+    }
 }
 
 /// Periodic untyped housekeeping task (kernel threads / softirq): keeps
@@ -715,6 +771,10 @@ impl TaskBody for Housekeeper {
             self.period &= !1;
             Action::Sleep(self.period)
         }
+    }
+
+    fn fork(&self, _ctx: &mut ForkCtx) -> Option<Box<dyn TaskBody>> {
+        Some(Box::new(Housekeeper { period: self.period }))
     }
 }
 
@@ -870,232 +930,364 @@ fn run_webserver_impl(
     sched: crate::sched::SchedParams,
     trace: Option<Vec<(Time, u32)>>,
 ) -> (WebRun, Machine) {
-    // Confinement requires typed AVX work: on a hybrid part with
-    // E-cores, 512-bit code must be visible to the scheduler (the
-    // hardware thread director makes it so whether or not the server
-    // binary is patched), so annotations are forced on.
-    let cfg = &{
-        let mut cfg = cfg.clone();
-        if cfg.hybrid.is_some_and(|h| h.has_e_cores()) && matches!(cfg.isa, Isa::Avx512) {
-            cfg.annotate = true;
-        }
-        cfg
-    };
-    let stacks = Rc::new(RefCell::new(StackTable::new()));
-    // Open-loop arrival process (None = closed loop) and one planner per
-    // tenant: non-AVX tenants serve an SSE4 pipeline, unannotated.
-    let process = cfg.mode.process();
-    let n_tenants = process.as_ref().map(|p| p.n_tenants()).unwrap_or(1);
-    let planners: Rc<Vec<Rc<Planner>>> = Rc::new(
-        (0..n_tenants)
-            .map(|t| {
-                let carries_avx =
-                    process.as_ref().map(|p| p.tenant_carries_avx(t)).unwrap_or(true);
-                let mut pcfg = cfg.clone();
-                if !carries_avx {
-                    pcfg.isa = Isa::Sse4;
-                    pcfg.annotate = false;
-                }
-                Rc::new(Planner::new(pcfg, stacks.clone()))
-            })
-            .collect(),
-    );
-
-    // `Machine::new` normalizes a CoreSpecNuma policy's socket count on
-    // the machine's actual domain count, so a caller overriding only
-    // `cfg.sockets` cannot desynchronize the AVX-core layout.
-    let mut mp = MachineParams::new(cfg.cores, cfg.policy.clone());
-    mp.sockets = cfg.sockets;
-    mp.sched = sched;
-    mp.seed = cfg.seed;
-    mp.freq.governor = cfg.governor;
-    mp.power = cfg.power;
-    mp.fast_paths = cfg.fast_paths;
-    mp.hybrid = cfg.hybrid;
-    // wrk2 client cores keep the package(s) awake: 4 per socket, like
-    // the paper's single-socket evaluation.
-    mp.extra_active_cores = 4 * cfg.sockets.max(1);
-    mp.track_flame = cfg.track_flame;
-    if cfg.fault_migrate {
-        mp.fault_migrate = Some(Default::default());
-    }
-    let mut m = Machine::new(mp);
-    let ch = m.channel();
-
-    let closed = matches!(cfg.mode, LoadMode::Closed { .. });
-    let shared = ServerShared::new(closed, cfg.slo, n_tenants);
-
-    // nginx workers start untyped-equivalent: the paper's patch types
-    // them scalar on first classification; we spawn them scalar.
-    let ttype = if cfg.annotate { TaskType::Scalar } else { TaskType::Untyped };
-    let mut seed_rng = Rng::new(cfg.seed ^ 0xC0FFEE);
-    let mut exec: Option<ExecState> = None;
-    if let LoadMode::Executor { tpc, .. } = &cfg.mode {
-        // Thread-per-core executor: worker i owns runtime queue i and
-        // waits on its own channel. The worker spawn protocol (fork +
-        // below per worker, same order) matches the shared-queue branch,
-        // so `home-core` on one worker replays the same RNG stream.
-        let n_exec = cfg.workers.max(1);
-        let core_chs: Vec<u32> = (0..n_exec).map(|_| m.channel()).collect();
-        let rt = Rc::new(RefCell::new(TpcRuntime::new(
-            tpc.placement,
-            n_exec,
-            tpc.quantum,
-            &tpc.shares,
-        )));
-        for core in 0..n_exec {
-            let budget = rt.borrow().budget(core);
-            let body = ExecutorTask {
-                planners: planners.clone(),
-                shared: shared.clone(),
-                rt: rt.clone(),
-                core,
-                ch: core_chs[core],
-                rng: seed_rng.fork(),
-                reqno: seed_rng.below(1_000) as u64, // desync handshake phases
-                current: None,
-                steps: VecDeque::with_capacity(24),
-                stint: 0,
-                budget,
-            };
-            m.spawn(ttype, 0, Box::new(body));
-        }
-        let avx_tenants: Vec<bool> = (0..n_tenants)
-            .map(|t| process.as_ref().map(|p| p.tenant_carries_avx(t)).unwrap_or(true))
-            .collect();
-        exec = Some(ExecState {
-            shared: shared.clone(),
-            rt,
-            avx_tenants,
-            core_chs,
-            reactor: Reactor::new(),
-        });
-    } else {
-        for _ in 0..cfg.workers {
-            let body = Worker {
-                planners: planners.clone(),
-                shared: shared.clone(),
-                ch,
-                rng: seed_rng.fork(),
-                reqno: seed_rng.below(1_000) as u64, // desync handshake phases
-                current: None,
-                steps: VecDeque::with_capacity(24),
-            };
-            m.spawn(ttype, 0, Box::new(body));
-        }
-    }
-    // A couple of untyped housekeeping tasks.
-    for _ in 0..2 {
-        m.spawn(TaskType::Untyped, 0, Box::new(Housekeeper { period: 2 * MS }));
-    }
-
-    // Composite driver: arrivals (tag 0) + adaptive controller (tag 1).
-    // Fleet machines replay their routed share of the cluster stream;
-    // standalone runs sample a live generator.
-    let open = match &process {
-        Some(_) if trace.is_some() => Some(ArrivalDriver::Trace(TraceDriver::new(
-            shared.clone(),
-            ch,
-            trace.expect("checked is_some"),
-        ))),
-        Some(p) => Some(ArrivalDriver::Live(TrafficDriver::new(
-            shared.clone(),
-            ch,
-            p.clone(),
-            cfg.seed ^ 0xDEAD,
-        ))),
-        None => {
-            assert!(trace.is_none(), "a closed-loop run cannot replay an arrival trace");
-            let connections = match cfg.mode {
-                LoadMode::Closed { connections } => connections,
-                _ => unreachable!("process() is None only for closed loop"),
-            };
-            {
-                let mut s = shared.borrow_mut();
-                for _ in 0..connections {
-                    s.queue.push_back(Request::at(0));
-                }
-            }
-            for _ in 0..connections.min(cfg.workers) {
-                m.notify(ch);
-            }
-            None
-        }
-    };
-    let ctl = cfg
-        .adaptive
-        .map(|params| crate::sched::adaptive::Controller::new(params, cfg.cores));
-    let mut driver = WebDriver { open, ctl, exec };
-    if let Some(o) = &mut driver.open {
-        o.start(&mut m);
-    }
-    if let Some(c) = &driver.ctl {
-        m.schedule_external(m.now() + c.params.interval, 1);
-    }
-    m.run_until(cfg.warmup, &mut driver);
-    m.reset_metrics();
-    shared.borrow_mut().start_measuring();
-    // Runtime counters reset with the machine counters: reported
-    // steer/migration/preemption figures cover the measurement window
-    // only, like the kernel-level migration rates they sit next to.
-    if let Some(e) = &driver.exec {
-        e.rt.borrow_mut().stats = crate::tpc::TpcStats::default();
-    }
-    m.run_until(cfg.warmup + cfg.measure, &mut driver);
-    let tpc_stats = driver.exec.as_ref().map(|e| e.rt.borrow().stats).unwrap_or_default();
-    let final_avx_cores = m.sched.policy.avx_core_count();
-    let adaptive_changes = driver.ctl.as_ref().map(|c| c.grows + c.shrinks).unwrap_or(0);
-
-    let total = m.total_perf();
-    let s = shared.borrow();
-    let secs = cfg.measure as f64 / SEC as f64;
-    let completed = s.completed();
-    let tail = s.stats.summary();
-    let tenant_names = process
-        .as_ref()
-        .map(|p| p.tenant_names())
-        .unwrap_or_else(|| vec!["all".to_string()]);
-    let tenant_tails = tenant_names
-        .into_iter()
-        .zip(s.tenant_stats.iter().map(|t| t.summary()))
-        .collect();
-    let run = WebRun {
-        cfg_name: format!(
-            "{}/{}/{}",
-            cfg.isa.name(),
-            if cfg.compress { "compressed" } else { "plain" },
-            cfg.policy.name()
-        ),
-        throughput_rps: completed as f64 / secs,
-        avg_ghz: total.avg_busy_ghz(),
-        ipc: total.ipc(),
-        insns_per_req: if completed > 0 { total.instructions as f64 / completed as f64 } else { 0.0 },
-        tail,
-        tenant_tails,
-        stats: s.stats.clone(),
-        tenant_stats: s.tenant_stats.clone(),
-        dropped: s.dropped,
-        type_changes_per_sec: m.sched.stats.type_changes as f64 / secs,
-        migrations_per_sec: m.sched.stats.migrations as f64 / secs,
-        cross_socket_migrations_per_sec: m.sched.stats.cross_socket_migrations as f64 / secs,
-        runtime_steered: tpc_stats.steered,
-        runtime_migrations: tpc_stats.migrations,
-        runtime_migrations_per_sec: tpc_stats.migrations as f64 / secs,
-        runtime_preemptions: tpc_stats.preemptions,
-        active_energy_j: total.active_energy_j,
-        idle_energy_j: total.idle_energy_j,
-        throttle_ratio: total.throttle_ratio(),
-        license_share: total.license_time_share(),
-        completed,
-        final_avx_cores,
-        adaptive_changes,
-        domain_ghz: if m.hybrid().is_some_and(|h| h.has_e_cores()) {
-            m.domain_harmonic_ghz()
-        } else {
-            Vec::new()
-        },
-    };
+    let (run, m, _shared) = WebSim::build(cfg, sched, trace).finish_impl();
     (run, m)
+}
+
+/// A web-server simulation split at its phase boundaries — build,
+/// warmup, measurement — so the scenario matrix can checkpoint-fork a
+/// warmed simulation instead of re-running the shared warmup prefix for
+/// every cell (see `crate::scenario`).
+///
+/// `WebSim::new → run_warmup → finish` is the historical
+/// [`run_webserver`] control flow, phase by phase. [`WebSim::fork`]
+/// (valid at any prefix point before measurement) produces an
+/// independent simulation whose continuation is byte-identical to
+/// continuing the original: mutable shared workload state is
+/// deep-cloned exactly once through a [`ForkCtx`], while immutable plan
+/// state (planners, the interned stack table) is shared copy-on-write.
+pub struct WebSim {
+    cfg: WebCfg,
+    process: Option<ArrivalProcess>,
+    m: Machine,
+    driver: WebDriver,
+    shared: Shared,
+}
+
+impl WebSim {
+    /// Build a ready-to-run simulation for `cfg`: workers spawned,
+    /// arrival driver installed, nothing simulated yet.
+    pub fn new(cfg: &WebCfg) -> Self {
+        Self::build(cfg, crate::sched::SchedParams::default(), None)
+    }
+
+    fn build(
+        cfg: &WebCfg,
+        sched: crate::sched::SchedParams,
+        trace: Option<Vec<(Time, u32)>>,
+    ) -> Self {
+        // Confinement requires typed AVX work: on a hybrid part with
+        // E-cores, 512-bit code must be visible to the scheduler (the
+        // hardware thread director makes it so whether or not the server
+        // binary is patched), so annotations are forced on.
+        let cfg = &{
+            let mut cfg = cfg.clone();
+            if cfg.hybrid.is_some_and(|h| h.has_e_cores()) && matches!(cfg.isa, Isa::Avx512) {
+                cfg.annotate = true;
+            }
+            cfg
+        };
+        let stacks = Rc::new(RefCell::new(StackTable::new()));
+        // Open-loop arrival process (None = closed loop) and one planner per
+        // tenant: non-AVX tenants serve an SSE4 pipeline, unannotated.
+        let process = cfg.mode.process();
+        let n_tenants = process.as_ref().map(|p| p.n_tenants()).unwrap_or(1);
+        let planners: Rc<Vec<Rc<Planner>>> = Rc::new(
+            (0..n_tenants)
+                .map(|t| {
+                    let carries_avx =
+                        process.as_ref().map(|p| p.tenant_carries_avx(t)).unwrap_or(true);
+                    let mut pcfg = cfg.clone();
+                    if !carries_avx {
+                        pcfg.isa = Isa::Sse4;
+                        pcfg.annotate = false;
+                    }
+                    Rc::new(Planner::new(pcfg, stacks.clone()))
+                })
+                .collect(),
+        );
+
+        // `Machine::new` normalizes a CoreSpecNuma policy's socket count on
+        // the machine's actual domain count, so a caller overriding only
+        // `cfg.sockets` cannot desynchronize the AVX-core layout.
+        let mut mp = MachineParams::new(cfg.cores, cfg.policy.clone());
+        mp.sockets = cfg.sockets;
+        mp.sched = sched;
+        mp.seed = cfg.seed;
+        mp.freq.governor = cfg.governor;
+        mp.power = cfg.power;
+        mp.fast_paths = cfg.fast_paths;
+        mp.hybrid = cfg.hybrid;
+        // wrk2 client cores keep the package(s) awake: 4 per socket, like
+        // the paper's single-socket evaluation.
+        mp.extra_active_cores = 4 * cfg.sockets.max(1);
+        mp.track_flame = cfg.track_flame;
+        if cfg.fault_migrate {
+            mp.fault_migrate = Some(Default::default());
+        }
+        let mut m = Machine::new(mp);
+        let ch = m.channel();
+
+        let closed = matches!(cfg.mode, LoadMode::Closed { .. });
+        let shared = ServerShared::new(closed, cfg.slo, n_tenants);
+
+        // nginx workers start untyped-equivalent: the paper's patch types
+        // them scalar on first classification; we spawn them scalar.
+        let ttype = if cfg.annotate { TaskType::Scalar } else { TaskType::Untyped };
+        let mut seed_rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+        let mut exec: Option<ExecState> = None;
+        if let LoadMode::Executor { tpc, .. } = &cfg.mode {
+            // Thread-per-core executor: worker i owns runtime queue i and
+            // waits on its own channel. The worker spawn protocol (fork +
+            // below per worker, same order) matches the shared-queue branch,
+            // so `home-core` on one worker replays the same RNG stream.
+            let n_exec = cfg.workers.max(1);
+            let core_chs: Vec<u32> = (0..n_exec).map(|_| m.channel()).collect();
+            let rt = Rc::new(RefCell::new(TpcRuntime::new(
+                tpc.placement,
+                n_exec,
+                tpc.quantum,
+                &tpc.shares,
+            )));
+            for core in 0..n_exec {
+                let budget = rt.borrow().budget(core);
+                let body = ExecutorTask {
+                    planners: planners.clone(),
+                    shared: shared.clone(),
+                    rt: rt.clone(),
+                    core,
+                    ch: core_chs[core],
+                    rng: seed_rng.fork(),
+                    reqno: seed_rng.below(1_000) as u64, // desync handshake phases
+                    current: None,
+                    steps: VecDeque::with_capacity(24),
+                    stint: 0,
+                    budget,
+                };
+                m.spawn(ttype, 0, Box::new(body));
+            }
+            let avx_tenants: Vec<bool> = (0..n_tenants)
+                .map(|t| process.as_ref().map(|p| p.tenant_carries_avx(t)).unwrap_or(true))
+                .collect();
+            exec = Some(ExecState {
+                shared: shared.clone(),
+                rt,
+                avx_tenants,
+                core_chs,
+                reactor: Reactor::new(),
+            });
+        } else {
+            for _ in 0..cfg.workers {
+                let body = Worker {
+                    planners: planners.clone(),
+                    shared: shared.clone(),
+                    ch,
+                    rng: seed_rng.fork(),
+                    reqno: seed_rng.below(1_000) as u64, // desync handshake phases
+                    current: None,
+                    steps: VecDeque::with_capacity(24),
+                };
+                m.spawn(ttype, 0, Box::new(body));
+            }
+        }
+        // A couple of untyped housekeeping tasks.
+        for _ in 0..2 {
+            m.spawn(TaskType::Untyped, 0, Box::new(Housekeeper { period: 2 * MS }));
+        }
+
+        // Composite driver: arrivals (tag 0) + adaptive controller (tag 1).
+        // Fleet machines replay their routed share of the cluster stream;
+        // standalone runs sample a live generator.
+        let open = match &process {
+            Some(_) if trace.is_some() => Some(ArrivalDriver::Trace(TraceDriver::new(
+                shared.clone(),
+                ch,
+                trace.expect("checked is_some"),
+            ))),
+            Some(p) => Some(ArrivalDriver::Live(TrafficDriver::new(
+                shared.clone(),
+                ch,
+                p.clone(),
+                cfg.seed ^ 0xDEAD,
+            ))),
+            None => {
+                assert!(trace.is_none(), "a closed-loop run cannot replay an arrival trace");
+                let connections = match cfg.mode {
+                    LoadMode::Closed { connections } => connections,
+                    _ => unreachable!("process() is None only for closed loop"),
+                };
+                {
+                    let mut s = shared.borrow_mut();
+                    for _ in 0..connections {
+                        s.queue.push_back(Request::at(0));
+                    }
+                }
+                for _ in 0..connections.min(cfg.workers) {
+                    m.notify(ch);
+                }
+                None
+            }
+        };
+        let ctl = cfg
+            .adaptive
+            .map(|params| crate::sched::adaptive::Controller::new(params, cfg.cores));
+        let mut driver = WebDriver { open, ctl, exec };
+        if let Some(o) = &mut driver.open {
+            o.start(&mut m);
+        }
+        if let Some(c) = &driver.ctl {
+            m.schedule_external(m.now() + c.params.interval, 1);
+        }
+        WebSim { cfg: cfg.clone(), process, m, driver, shared }
+    }
+
+    /// Simulated time the machine has reached.
+    pub fn now(&self) -> Time {
+        self.m.now()
+    }
+
+    /// Run the shared warmup prefix (`cfg.warmup`).
+    pub fn run_warmup(&mut self) {
+        let until = self.cfg.warmup;
+        self.run_to(until);
+    }
+
+    /// Advance the simulation to absolute time `until` (a no-op once
+    /// `now` has passed it). Exposed so the fork-equivalence properties
+    /// can checkpoint at *arbitrary* prefix points, not just the warmup
+    /// boundary.
+    pub fn run_to(&mut self, until: Time) {
+        self.m.run_until(until, &mut self.driver);
+    }
+
+    /// Re-aim the measurement window. The only configuration field that
+    /// may differ between cells sharing one warmup checkpoint: nothing
+    /// before [`WebSim::finish`] reads it, so changing it on a warmed or
+    /// forked simulation is exactly equivalent to having built the
+    /// simulation with this window from the start.
+    pub fn set_measure(&mut self, measure: Time) {
+        self.cfg.measure = measure;
+    }
+
+    /// Checkpoint-fork the simulation: an independent copy whose
+    /// continuation is byte-identical to continuing `self`. Mutable
+    /// shared state (server queue/recorders, the executor runtime) is
+    /// deep-cloned once through one [`ForkCtx`]; the fork's recorders
+    /// come from `arena` so their histogram bucket allocations are
+    /// reused across cells. Returns `None` if any live task body does
+    /// not support forking — callers fall back to a cold run.
+    ///
+    /// Must be called before measurement starts (any prefix point up to
+    /// the warmup boundary): the arena-backed recorders are handed over
+    /// cleared, which is only equivalent because `start_measuring`
+    /// resets every recorder before the first measured sample.
+    pub fn fork(&self, arena: &mut RecorderArena) -> Option<WebSim> {
+        debug_assert!(
+            !self.shared.borrow().measuring,
+            "WebSim::fork after start_measuring would drop recorded samples"
+        );
+        let mut ctx = ForkCtx::new();
+        let forked_shared =
+            Rc::new(RefCell::new(self.shared.borrow().fork_with_arena(arena)));
+        ctx.provide(&self.shared, &forked_shared);
+        let m = self.m.try_fork(&mut ctx)?;
+        let driver = self.driver.fork(&mut ctx);
+        Some(WebSim {
+            cfg: self.cfg.clone(),
+            process: self.process.clone(),
+            m,
+            driver,
+            shared: forked_shared,
+        })
+    }
+
+    /// Measurement phase: reset the warmup counters, run the
+    /// measurement window, and freeze the report (plus the machine, for
+    /// flame graphs and counter inspection).
+    pub fn finish(self) -> (WebRun, Machine) {
+        let (run, m, _shared) = self.finish_impl();
+        (run, m)
+    }
+
+    /// Like [`WebSim::finish`], additionally returning the simulation's
+    /// latency recorders to `arena` for the next forked cell to reuse
+    /// (the report keeps its own copies).
+    pub fn finish_into_arena(self, arena: &mut RecorderArena) -> WebRun {
+        let (run, m, shared) = self.finish_impl();
+        // The machine's task bodies and the driver held the other
+        // handles; with them gone the recorders can be reclaimed.
+        drop(m);
+        if let Ok(cell) = Rc::try_unwrap(shared) {
+            let s = cell.into_inner();
+            arena.put(s.stats);
+            for t in s.tenant_stats {
+                arena.put(t);
+            }
+        }
+        run
+    }
+
+    fn finish_impl(self) -> (WebRun, Machine, Shared) {
+        let WebSim { cfg, process, mut m, mut driver, shared } = self;
+        let cfg = &cfg;
+        // Complete any un-run warmup prefix (a no-op when the caller —
+        // or the checkpoint this fork came from — already ran it).
+        m.run_until(cfg.warmup, &mut driver);
+        m.reset_metrics();
+        shared.borrow_mut().start_measuring();
+        // Runtime counters reset with the machine counters: reported
+        // steer/migration/preemption figures cover the measurement window
+        // only, like the kernel-level migration rates they sit next to.
+        if let Some(e) = &driver.exec {
+            e.rt.borrow_mut().stats = crate::tpc::TpcStats::default();
+        }
+        m.run_until(cfg.warmup + cfg.measure, &mut driver);
+        let tpc_stats = driver.exec.as_ref().map(|e| e.rt.borrow().stats).unwrap_or_default();
+        let final_avx_cores = m.sched.policy.avx_core_count();
+        let adaptive_changes = driver.ctl.as_ref().map(|c| c.grows + c.shrinks).unwrap_or(0);
+
+        let total = m.total_perf();
+        let s = shared.borrow();
+        let secs = cfg.measure as f64 / SEC as f64;
+        let completed = s.completed();
+        let tail = s.stats.summary();
+        let tenant_names = process
+            .as_ref()
+            .map(|p| p.tenant_names())
+            .unwrap_or_else(|| vec!["all".to_string()]);
+        let tenant_tails = tenant_names
+            .into_iter()
+            .zip(s.tenant_stats.iter().map(|t| t.summary()))
+            .collect();
+        let run = WebRun {
+            cfg_name: format!(
+                "{}/{}/{}",
+                cfg.isa.name(),
+                if cfg.compress { "compressed" } else { "plain" },
+                cfg.policy.name()
+            ),
+            throughput_rps: completed as f64 / secs,
+            avg_ghz: total.avg_busy_ghz(),
+            ipc: total.ipc(),
+            insns_per_req: if completed > 0 { total.instructions as f64 / completed as f64 } else { 0.0 },
+            tail,
+            tenant_tails,
+            stats: s.stats.clone(),
+            tenant_stats: s.tenant_stats.clone(),
+            dropped: s.dropped,
+            type_changes_per_sec: m.sched.stats.type_changes as f64 / secs,
+            migrations_per_sec: m.sched.stats.migrations as f64 / secs,
+            cross_socket_migrations_per_sec: m.sched.stats.cross_socket_migrations as f64 / secs,
+            runtime_steered: tpc_stats.steered,
+            runtime_migrations: tpc_stats.migrations,
+            runtime_migrations_per_sec: tpc_stats.migrations as f64 / secs,
+            runtime_preemptions: tpc_stats.preemptions,
+            active_energy_j: total.active_energy_j,
+            idle_energy_j: total.idle_energy_j,
+            throttle_ratio: total.throttle_ratio(),
+            license_share: total.license_time_share(),
+            completed,
+            final_avx_cores,
+            adaptive_changes,
+            domain_ghz: if m.hybrid().is_some_and(|h| h.has_e_cores()) {
+                m.domain_harmonic_ghz()
+            } else {
+                Vec::new()
+            },
+        };
+        drop(s);
+        (run, m, shared)
+    }
 }
 
 /// Arrival source for the composite driver: a live seeded generator
@@ -1119,6 +1311,13 @@ impl ArrivalDriver {
         match self {
             ArrivalDriver::Live(d) => d.on_external(tag, m),
             ArrivalDriver::Trace(d) => d.on_external(tag, m),
+        }
+    }
+
+    fn fork(&self, ctx: &mut ForkCtx) -> ArrivalDriver {
+        match self {
+            ArrivalDriver::Live(d) => ArrivalDriver::Live(d.fork(ctx)),
+            ArrivalDriver::Trace(d) => ArrivalDriver::Trace(d.fork(ctx)),
         }
     }
 }
@@ -1168,6 +1367,16 @@ impl ExecState {
             m.notify(self.core_chs[core]);
         }
     }
+
+    fn fork(&self, ctx: &mut ForkCtx) -> ExecState {
+        ExecState {
+            shared: ctx.fork_rc(&self.shared),
+            rt: ctx.fork_rc(&self.rt),
+            avx_tenants: self.avx_tenants.clone(),
+            core_chs: self.core_chs.clone(),
+            reactor: self.reactor.clone(),
+        }
+    }
 }
 
 /// Composite web driver: open-loop arrivals + the adaptive controller
@@ -1176,6 +1385,16 @@ struct WebDriver {
     open: Option<ArrivalDriver>,
     ctl: Option<crate::sched::adaptive::Controller>,
     exec: Option<ExecState>,
+}
+
+impl WebDriver {
+    fn fork(&self, ctx: &mut ForkCtx) -> WebDriver {
+        WebDriver {
+            open: self.open.as_ref().map(|o| o.fork(ctx)),
+            ctl: self.ctl.clone(),
+            exec: self.exec.as_ref().map(|e| e.fork(ctx)),
+        }
+    }
 }
 
 impl Driver for WebDriver {
@@ -1498,6 +1717,37 @@ mod tests {
             err.contains("power.governor"),
             "a non-string governor must be rejected, not silently defaulted: {err}"
         );
+    }
+
+    #[test]
+    fn config_rejects_invalid_load_windows() {
+        // Before the validation, `(-1.0 * SEC) as Time` saturated to 0
+        // and a negative warmup silently became "no warmup" — the run
+        // proceeded and just measured from a cold machine. These must
+        // all be loud errors that name the offending key.
+        let reject = |toml: &str, key: &str| {
+            let conf = crate::util::config::Config::parse(toml).unwrap();
+            let err = WebCfg::from_config(&conf).unwrap_err().to_string();
+            assert!(err.contains(key), "error for {toml:?} must name {key}: {err}");
+        };
+        reject("[load]\nwarmup_s = -1.0\n", "load.warmup_s");
+        reject("[load]\nwarmup_s = nan\n", "load.warmup_s");
+        reject("[load]\nmeasure_s = 0.0\n", "load.measure_s");
+        reject("[load]\nmeasure_s = -2.5\n", "load.measure_s");
+        reject("[load]\nmeasure_s = inf\n", "load.measure_s");
+        reject("[load]\nslo_ms = 0.0\n", "load.slo_ms");
+        reject("[load]\nslo_ms = -5.0\n", "load.slo_ms");
+
+        // Boundary legality: zero warmup is allowed (measure-from-cold
+        // is a legitimate experiment); positive values pass through.
+        let ok = crate::util::config::Config::parse(
+            "[load]\nwarmup_s = 0.0\nmeasure_s = 0.5\nslo_ms = 5.0\n",
+        )
+        .unwrap();
+        let cfg = WebCfg::from_config(&ok).unwrap();
+        assert_eq!(cfg.warmup, 0);
+        assert_eq!(cfg.measure, SEC / 2);
+        assert_eq!(cfg.slo, 5 * MS);
     }
 
     #[test]

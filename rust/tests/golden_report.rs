@@ -62,6 +62,7 @@ fn cell(
         governor: GovernorSpec::IntelLegacy,
         executor: ExecutorSpec::Kernel,
         balancer: BalancerCfg::default(),
+        measure_point: None,
         seed: 7,
         cfg: WebCfg::paper_default(isa, PolicyKind::Unmodified),
     };

@@ -60,6 +60,7 @@ fn domain_cell(
         governor,
         executor: ExecutorSpec::Kernel,
         balancer: BalancerCfg::default(),
+        measure_point: None,
         seed: 7,
         cfg: WebCfg::paper_default(Isa::Avx512, PolicyKind::Unmodified),
     };

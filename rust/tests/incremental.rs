@@ -1,0 +1,236 @@
+//! Checkpoint-forking suite: pins the incremental matrix fast path to
+//! the cold-start reference, byte for byte. Triage bands (see
+//! `rust/tests/README.md`):
+//!
+//! 1. **Fork differential** — a [`WebSim`] forked at *any* warmup
+//!    prefix point (shrinking testkit property) must finish bit-equal
+//!    to a cold `run_webserver` of the same config, and the parent it
+//!    was forked from must be unperturbed. Fork-of-fork included.
+//! 2. **Matrix differential** — `incremental` on ≡ off ≡ the cold
+//!    per-cell runner, rendered-table bytes, at any `--threads`;
+//!    fleet-layer groups fall back cold; a measures-free matrix is
+//!    byte-identical to its pre-measures expansion regardless of the
+//!    flag.
+//! 3. **Accounting** — `warmup_ns_reused` is a pure function of the
+//!    matrix declaration: `(cells − groups) × warmup`, thread-count
+//!    invariant, and exactly half the total warmup on the default
+//!    `incremental_sweep`.
+//!
+//! The cold side (`run_webserver` / the `run_cold` closure in
+//! `ScenarioMatrix::run`) is the byte-reference. Never "fix" a
+//! divergence by changing that side — a forked/cold mismatch is a bug
+//! in the fork machinery, full stop.
+
+use avxfreq::scenario::{ArrivalSpec, PolicySpec, ScenarioMatrix, TopologySpec, WorkloadSpec};
+use avxfreq::sched::PolicyKind;
+use avxfreq::sim::MS;
+use avxfreq::testkit::{assert_prop, IntRange};
+use avxfreq::traffic::{ArrivalProcess, RecorderArena};
+use avxfreq::workload::client::LoadMode;
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::{run_webserver, WebCfg, WebRun, WebSim};
+
+/// Small but real: two tenants (so the per-tenant recorder arena path
+/// is exercised), core specialization, AVX-512 build.
+fn fork_cfg() -> WebCfg {
+    let mut c = WebCfg::paper_default(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 });
+    c.cores = 4;
+    c.workers = 8;
+    c.page_bytes = 8 * 1024;
+    c.warmup = 100 * MS;
+    c.measure = 200 * MS;
+    c.mode = LoadMode::OpenProcess { process: ArrivalProcess::two_tenant(25_000.0, 0.3) };
+    c
+}
+
+/// Bit-pattern fingerprint of a run (floats via `to_bits`), same shape
+/// as the perf-equivalence suite's.
+fn web_fingerprint(r: &WebRun) -> Vec<u64> {
+    let mut out = vec![
+        r.completed,
+        r.dropped,
+        r.stats.violations(),
+        r.throughput_rps.to_bits(),
+        r.avg_ghz.to_bits(),
+        r.ipc.to_bits(),
+        r.insns_per_req.to_bits(),
+        r.active_energy_j.to_bits(),
+        r.idle_energy_j.to_bits(),
+        r.tail.p50_us.to_bits(),
+        r.tail.p95_us.to_bits(),
+        r.tail.p99_us.to_bits(),
+        r.tail.p999_us.to_bits(),
+        r.tail.max_us.to_bits(),
+        r.tail.slo_violation_frac.to_bits(),
+    ];
+    for (_, t) in &r.tenant_tails {
+        out.push(t.completed);
+        out.push(t.p99_us.to_bits());
+        out.push(t.slo_violation_frac.to_bits());
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Band 1: fork ≡ cold at any prefix point.
+
+#[test]
+fn fork_at_any_prefix_point_matches_cold_run() {
+    let cfg = fork_cfg();
+    let cold = web_fingerprint(&run_webserver(&cfg));
+    // t = 0 (nothing simulated yet) and t = warmup (the checkpoint the
+    // matrix actually forks at) are both in range; the shrinker pulls a
+    // failing fork time toward 0.
+    assert_prop("fork_prefix_equiv", 0x90AB, 8, &IntRange { lo: 0, hi: cfg.warmup }, |&t| {
+        let mut arena = RecorderArena::new();
+        let mut sim = WebSim::new(&cfg);
+        sim.run_to(t);
+        let forked = sim.fork(&mut arena).ok_or_else(|| "fork declined".to_string())?;
+        // The fork, finishing through the arena path, matches cold…
+        if web_fingerprint(&forked.finish_into_arena(&mut arena)) != cold {
+            return Err(format!("fork at t={t} diverged from cold"));
+        }
+        // …and the parent is unperturbed by having been forked.
+        if web_fingerprint(&sim.finish().0) != cold {
+            return Err(format!("parent diverged from cold after fork at t={t}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fork_of_a_fork_still_matches_cold() {
+    let cfg = fork_cfg();
+    let cold = web_fingerprint(&run_webserver(&cfg));
+    let mut arena = RecorderArena::new();
+    let mut sim = WebSim::new(&cfg);
+    sim.run_to(cfg.warmup / 2);
+    let g1 = sim.fork(&mut arena).expect("webserver bodies are forkable");
+    let g2 = g1.fork(&mut arena).expect("a fork is itself forkable");
+    drop(g1);
+    drop(sim);
+    assert_eq!(web_fingerprint(&g2.finish_into_arena(&mut arena)), cold);
+}
+
+#[test]
+fn forked_cell_can_change_its_measure_window() {
+    // `set_measure` is the one per-cell knob the measures axis varies
+    // after the shared warmup; a fork with a shorter window must equal
+    // a cold run declared with that window from the start.
+    let base = fork_cfg();
+    let mut half = base.clone();
+    half.measure = base.measure / 2;
+    let cold_base = web_fingerprint(&run_webserver(&base));
+    let cold_half = web_fingerprint(&run_webserver(&half));
+    assert_ne!(cold_base, cold_half, "the window must actually matter for this config");
+
+    let mut arena = RecorderArena::new();
+    let mut sim = WebSim::new(&base);
+    sim.run_warmup();
+    let mut f = sim.fork(&mut arena).expect("webserver bodies are forkable");
+    f.set_measure(half.measure);
+    assert_eq!(web_fingerprint(&f.finish_into_arena(&mut arena)), cold_half);
+    assert_eq!(web_fingerprint(&sim.finish().0), cold_base);
+}
+
+// ---------------------------------------------------------------------
+// Band 2: matrix differentials.
+
+/// 8 cells in 4 forkable groups of 2: {unmodified, corespec} ×
+/// {poisson, bursty} × {100 ms, 200 ms windows}.
+fn small_measures_matrix(seed: u64) -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new(seed);
+    m.topologies = vec![TopologySpec::multi(1, 4)];
+    m.policies = vec![PolicySpec::Unmodified, PolicySpec::CoreSpec { avx_cores: 1 }];
+    m.workloads = vec![WorkloadSpec {
+        name: "small".to_string(),
+        compress: true,
+        page_kib: 8,
+        rate_per_core: 4_000.0,
+    }];
+    m.isas = vec![Isa::Avx512];
+    m.arrivals = vec![ArrivalSpec::Poisson, ArrivalSpec::bursty_default()];
+    m.warmup = 80 * MS;
+    m.measure = 200 * MS;
+    m.measures = vec![100 * MS, 200 * MS];
+    m
+}
+
+#[test]
+fn incremental_on_and_off_render_byte_identically() {
+    let run = |incremental: bool| {
+        let mut m = small_measures_matrix(0x1BCD);
+        m.incremental = incremental;
+        let r = m.run(2);
+        (r.render(), r.render_tail(), r.warmup_ns_reused)
+    };
+    let (tbl_on, tail_on, reused_on) = run(true);
+    let (tbl_off, tail_off, reused_off) = run(false);
+    assert_eq!(tbl_on, tbl_off, "matrix table bytes differ across the incremental flag");
+    assert_eq!(tail_on, tail_off, "tail table bytes differ across the incremental flag");
+    // Accounting: one warmup re-simulated per group (the last cell
+    // consumes the checkpoint), the rest reused.
+    let m = small_measures_matrix(0x1BCD);
+    let groups = (m.len() / m.warmup_group_size()) as u64;
+    assert_eq!(reused_on, (m.len() as u64 - groups) * m.warmup);
+    assert_eq!(reused_off, 0);
+}
+
+#[test]
+fn incremental_matrix_bytes_are_thread_count_invariant() {
+    let run = |threads: usize| {
+        let r = small_measures_matrix(0x7EAD).run(threads);
+        (r.render(), r.render_tail(), r.warmup_ns_reused)
+    };
+    assert_eq!(run(1), run(4), "forked matrix must be byte-identical at any --threads");
+}
+
+#[test]
+fn measures_free_matrix_ignores_the_incremental_flag() {
+    // The pre-PR shape: no measures axis → group size 1 → nothing to
+    // fork. The flag must be inert in both bytes and accounting, which
+    // is what makes default-on safe for every existing caller.
+    let run = |incremental: bool| {
+        let mut m = small_measures_matrix(0x0FF1);
+        m.measures = Vec::new();
+        m.incremental = incremental;
+        let r = m.run(2);
+        (r.render(), r.render_tail(), r.warmup_ns_reused)
+    };
+    let on = run(true);
+    let off = run(false);
+    assert_eq!(on, off);
+    assert_eq!(on.2, 0, "group size 1 must never fork");
+}
+
+#[test]
+fn fleet_groups_fall_back_to_the_cold_runner() {
+    let run = |incremental: bool| {
+        let mut m = small_measures_matrix(0xF1EE);
+        m.policies.truncate(1);
+        m.arrivals.truncate(1);
+        m.fleet_sizes = vec![2];
+        m.incremental = incremental;
+        let r = m.run(2);
+        (r.render(), r.render_tail(), r.render_fleet(), r.warmup_ns_reused)
+    };
+    let on = run(true);
+    assert_eq!(on, run(false));
+    assert_eq!(on.3, 0, "fleet-layer cells must not fork (cold fallback)");
+}
+
+// ---------------------------------------------------------------------
+// Band 3: default-sweep accounting.
+
+#[test]
+fn default_incremental_sweep_skips_half_the_warmup() {
+    let m = ScenarioMatrix::incremental_sweep(true, 0x5EED);
+    let total: u64 = m.cells().iter().map(|c| c.cfg.warmup).sum();
+    let r = m.run(4);
+    assert!(r.warmup_ns_reused > 0);
+    assert_eq!(
+        r.warmup_ns_reused * 2,
+        total,
+        "the 2-window sweep must reuse exactly half its simulated warmup"
+    );
+}
