@@ -8,7 +8,7 @@
 # named SKIP and summarized at the end, and the toolchain-free checks
 # (golden snapshots present, markdown links, referenced files) still
 # gate. The first toolchain-equipped run then executes the full matrix
-# and writes the BENCH_9.json perf record.
+# and writes the BENCH_10.json perf record.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -61,7 +61,8 @@ check_goldens() {
   local missing=0
   for g in matrix_report tail_report fleet_report fleetvar_report \
            energy_report energydelay_report tpc_report runtimespec_report \
-           hier_report fleetscale_report hybrid_report hybridspec_report; do
+           hier_report fleetscale_report hybrid_report hybridspec_report \
+           fault_report faulttol_report; do
     if [ ! -f "rust/tests/golden/${g}.txt" ]; then
       echo "MISSING golden snapshot: rust/tests/golden/${g}.txt"
       missing=1
@@ -104,27 +105,28 @@ cargo_step "suite: runtime_roundtrip (SKIP must name artifacts dir)" run_runtime
 # closed-loop hier, and incremental-forking scenarios ride along, so
 # `LoadMode::Executor`, the hierarchical balancer, and checkpoint
 # forking are covered). `avxfreq bench` exits non-zero if the two legs'
-# outputs diverge (the equivalence gate) and writes the BENCH_9.json
+# outputs diverge (the equivalence gate — for the `chaos` scenario that
+# gate is faults-off ≡ pre-PR fingerprint) and writes the BENCH_10.json
 # perf-trajectory record; the speedup itself is informational here —
 # wall-clock on a loaded CI machine is noise, so compare ratios across
 # runs, not absolutes (rust/tests/README.md).
 run_bench_quick() {
   cargo run --release --quiet -- bench --quick
-  if [ ! -f BENCH_9.json ]; then
-    echo "bench did not write BENCH_9.json"
+  if [ ! -f BENCH_10.json ]; then
+    echo "bench did not write BENCH_10.json"
     return 1
   fi
-  if grep -q '"outputs_identical": false' BENCH_9.json; then
-    echo "BENCH_9.json records an output divergence"
+  if grep -q '"outputs_identical": false' BENCH_10.json; then
+    echo "BENCH_10.json records an output divergence"
     return 1
   fi
-  if ! grep -q '"warmup_ns_reused":' BENCH_9.json; then
-    echo "BENCH_9.json is missing the warmup_ns_reused field"
+  if ! grep -q '"warmup_ns_reused":' BENCH_10.json; then
+    echo "BENCH_10.json is missing the warmup_ns_reused field"
     return 1
   fi
   return 0
 }
-cargo_step "bench --quick (equivalence gate + BENCH_9.json)" run_bench_quick
+cargo_step "bench --quick (equivalence gate + BENCH_10.json)" run_bench_quick
 
 cargo_step "cargo doc --no-deps (-D warnings)" \
   env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -173,6 +175,9 @@ for p in docs/ARCHITECTURE.md rust/tests/README.md configs/dual_socket.toml \
          rust/tests/golden/hybrid_report.txt rust/tests/golden/hybridspec_report.txt \
          rust/tests/incremental.rs rust/src/workload/webserver.rs \
          rust/src/sched/machine.rs \
+         configs/chaos.toml rust/src/faults/mod.rs rust/src/repro/faulttol.rs \
+         rust/tests/faults.rs \
+         rust/tests/golden/fault_report.txt rust/tests/golden/faulttol_report.txt \
          ci.sh; do
   if [ ! -e "$p" ]; then
     echo "MISSING referenced file: $p"

@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     println!("server up at {addr}; fetching {n_requests} pages of {page_bytes} B…");
 
     // Client: fetch, verify, time.
-    let expected = server::compress(&server::synth_page(page_bytes as usize));
+    let expected = server::compress(&server::synth_page(page_bytes as usize))?;
     let mut latencies_ms = Vec::new();
     let t0 = Instant::now();
     for i in 0..n_requests {

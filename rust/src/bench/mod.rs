@@ -22,6 +22,7 @@
 //! sim-time / wall seconds`, so the number is comparable across
 //! scenario shapes and thread counts.
 
+use crate::faults::FaultsCfg;
 use crate::fleet::{run_fleet, run_hier_fleet, BalancerCfg, HierFleetCfg, RouterSpec};
 use crate::scenario::{ArrivalSpec, ScenarioMatrix};
 use crate::sched::PolicyKind;
@@ -34,7 +35,7 @@ use std::fmt::Write as _;
 use std::time::Instant;
 
 /// Which PR's trajectory file this harness writes.
-pub const BENCH_PR: u32 = 9;
+pub const BENCH_PR: u32 = 10;
 
 /// Harness configuration (CLI surface of `avxfreq bench`).
 #[derive(Clone, Debug)]
@@ -45,7 +46,7 @@ pub struct BenchCfg {
     /// OS threads for the matrix/fleet legs (same for both legs).
     pub threads: usize,
     /// Scenario names to run (`single`, `matrix`, `fleet`, `hier`,
-    /// `executor`, `incremental`).
+    /// `executor`, `incremental`, `chaos`).
     pub scenarios: Vec<String>,
 }
 
@@ -55,7 +56,7 @@ impl BenchCfg {
             quick,
             seed,
             threads: threads.max(1),
-            scenarios: ["single", "matrix", "fleet", "hier", "executor", "incremental"]
+            scenarios: ["single", "matrix", "fleet", "hier", "executor", "incremental", "chaos"]
                 .iter()
                 .map(|s| s.to_string())
                 .collect(),
@@ -311,6 +312,65 @@ fn run_hier_scenario(
     (Leg { wall_s, sim_ns }, fp, 0)
 }
 
+/// The faults-off ≡ pre-PR differential priced and gated by the bench
+/// harness: both legs run the closed-loop hier scenario with the hot
+/// paths on, but the "fast" leg carries the full chaos schedule with
+/// the `[faults]` master switch off while the baseline carries the
+/// default (empty) fault config — the literal pre-fault-layer
+/// configuration. `outputs_identical` then asserts that a populated but
+/// disabled schedule perturbs nothing: every fault branch must gate out
+/// on `FaultsCfg::active()`, not on the schedule being empty. The
+/// speedup column is ≈ 1 by construction; the gate is the point.
+fn run_chaos_scenario(
+    quick: bool,
+    seed: u64,
+    threads: usize,
+    fast: bool,
+) -> (Leg, Vec<u64>, u64) {
+    let fleet = crate::repro::fleetvar::fleet_cfg(RouterSpec::RoundRobin, quick, seed);
+    let mut cfg = HierFleetCfg::new(fleet, BalancerCfg::closed());
+    cfg.machines_per_rack = 3;
+    if fast {
+        cfg.faults = FaultsCfg::chaos(cfg.fleet.cfg.measure, cfg.fleet.machines.max(1));
+        cfg.faults.enabled = false;
+    }
+    let sim_ns = (cfg.fleet.cfg.warmup + cfg.fleet.cfg.measure) * cfg.fleet.machines as Time;
+    let t0 = Instant::now();
+    let run = run_hier_fleet(&cfg, threads);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut fp = Vec::new();
+    fingerprint(&run.cluster_run("bench"), &mut fp);
+    let o = &run.outcomes;
+    fp.extend([
+        o.timeouts_observed,
+        o.retries_issued,
+        o.retries_abandoned,
+        o.hedges_issued,
+        o.ejections,
+        o.readmissions,
+    ]);
+    let f = &run.fault_outcomes;
+    fp.extend([
+        f.lost_to_crash,
+        f.dropped_by_net,
+        f.fault_retries,
+        f.crash_windows,
+        f.degrade_windows,
+        f.recovery_epochs,
+        run.fault_windows.len() as u64,
+    ]);
+    for b in crate::metrics::hier_report(&[("chaos", &run)]).render().bytes() {
+        fp.push(b as u64);
+    }
+    for b in crate::metrics::fault_report(&run.fault_windows, &run.fault_outcomes)
+        .render()
+        .bytes()
+    {
+        fp.push(b as u64);
+    }
+    (Leg { wall_s, sim_ns }, fp, 0)
+}
+
 /// Run the configured scenarios, fast leg then baseline leg each.
 /// Every scenario name is resolved *before* the first leg is timed, so
 /// a typo fails immediately instead of after minutes of completed legs
@@ -326,10 +386,11 @@ pub fn run(cfg: &BenchCfg) -> anyhow::Result<Vec<BenchRow>> {
             "hier" => run_hier_scenario,
             "executor" => |q, s, _t, f| run_executor(q, s, f),
             "incremental" => run_incremental,
+            "chaos" => run_chaos_scenario,
             other => {
                 anyhow::bail!(
                     "unknown bench scenario {other:?} \
-                     (single|matrix|fleet|hier|executor|incremental)"
+                     (single|matrix|fleet|hier|executor|incremental|chaos)"
                 )
             }
         };
@@ -454,7 +515,7 @@ mod tests {
             },
         ];
         let j = to_json(&cfg, &rows);
-        assert!(j.contains("\"pr\": 9"), "{j}");
+        assert!(j.contains("\"pr\": 10"), "{j}");
         assert!(j.contains("\"fast_sim_ns_per_wall_s\": 9600000000.000000"), "{j}");
         assert!(j.contains("\"baseline_sim_ns_per_wall_s\": 2400000000.000000"), "{j}");
         assert!(j.contains("\"speedup\": 4.000000"), "{j}");

@@ -1,0 +1,987 @@
+//! Deterministic fault injection for the closed-loop fleet.
+//!
+//! Schuchart et al. (PAPERS.md) argue that at scale the dominant
+//! failure mode is not raw power draw but unpredictable per-node
+//! performance *variation* — exactly what AVX frequency reduction
+//! produces and what the closed-loop balancer (PR 7) exists to absorb.
+//! This module makes machines actually fail: crashes with cold
+//! restarts, thermal-style frequency degradation, lossy/slow front-end
+//! links, and per-machine clock skew, all of it seeded.
+//!
+//! **Determinism contract.** Every decision here is a pure function of
+//! `(config, seed, simulated time)`:
+//!
+//! * Fault *schedules* ([`Schedule`]) expand to concrete windows up
+//!   front via [`FaultTimeline::build`] — one pass, before any machine
+//!   is simulated, so no worker-thread ordering can influence them.
+//! * Per-request *drop* decisions hash `(machine, arrival time)`
+//!   through [`crate::util::mix64`] — no shared RNG stream, so two
+//!   threads asking in any order get the same answers.
+//! * Everything downstream (trace splitting, degradation windows on
+//!   [`crate::sched::machine::MachineParams`], skewed arrival stamps)
+//!   is derived from those windows with integer arithmetic.
+//!
+//! Consequently fault-enabled runs are byte-identical at any
+//! `--threads`, and a faults-*disabled* run takes the literal pre-PR
+//! code paths (every consumer gates on [`FaultsCfg::active`] /
+//! empty window vectors), so it reproduces pre-PR bytes exactly —
+//! the same differential contract as `fast_paths` and `incremental`
+//! (`rust/tests/faults.rs`).
+//!
+//! Consumers: [`crate::fleet::balancer`] (crash visibility, lost →
+//! timeout feedback, MTTR accounting), [`crate::sched::machine`]
+//! (degradation windows), [`crate::scenario`] (the `faults` axis,
+//! default `none`), `avxfreq chaos` + `configs/chaos.toml`, and
+//! `repro faulttol`.
+
+use crate::sim::{Time, MS, SEC};
+use crate::util::{mix64, Config, Rng};
+
+/// When a fault fires: a seeded schedule that expands to concrete
+/// windows via [`Schedule::windows`] — a pure function of
+/// `(schedule, duration, horizon, seed)`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    /// Fire once at `at`.
+    OneShot { at: Time },
+    /// Fire `count` times: `start`, `start + period`, …
+    Periodic { start: Time, period: Time, count: u32 },
+    /// Fire at seeded exponential gaps with mean `mean_gap`, starting
+    /// from one gap after 0 (a homogeneous Poisson process over the
+    /// horizon).
+    Poisson { mean_gap: Time },
+}
+
+impl Schedule {
+    /// Expand to concrete `[start, start + dur)` windows inside
+    /// `[0, horizon)`.
+    ///
+    /// Windows whose *start* falls at or past the horizon are dropped.
+    /// A window that *extends* past the horizon is split modularly when
+    /// `wrap` is true (`[start, horizon)` plus `[0, overflow)`) —
+    /// [`FaultsCfg::validate`] rejects such schedules when `wrap` is
+    /// false, so the non-wrapping path never sees one.
+    pub fn windows(&self, dur: Time, horizon: Time, wrap: bool, seed: u64) -> Vec<(Time, Time)> {
+        let mut starts = Vec::new();
+        match *self {
+            Schedule::OneShot { at } => {
+                if at < horizon {
+                    starts.push(at);
+                }
+            }
+            Schedule::Periodic { start, period, count } => {
+                let mut t = start;
+                for _ in 0..count {
+                    if t >= horizon {
+                        break;
+                    }
+                    starts.push(t);
+                    t = t.saturating_add(period.max(1));
+                }
+            }
+            Schedule::Poisson { mean_gap } => {
+                let mut rng = Rng::new(mix64(seed ^ 0xFA_0175_C4ED));
+                let mut t: Time = 0;
+                loop {
+                    let gap = rng.exponential(mean_gap.max(1) as f64) as Time;
+                    t = t.saturating_add(gap.max(1));
+                    if t >= horizon {
+                        break;
+                    }
+                    starts.push(t);
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(starts.len());
+        for s in starts {
+            let end = s.saturating_add(dur);
+            if end <= horizon {
+                out.push((s, end));
+            } else if wrap {
+                out.push((s, horizon));
+                let overflow = end - horizon;
+                if overflow > 0 {
+                    out.push((0, overflow.min(horizon)));
+                }
+            } else {
+                // validate() rejected this; clamp defensively anyway.
+                out.push((s, horizon));
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// True if some window would extend past `horizon` (the condition
+    /// [`FaultsCfg::validate`] rejects without `wrap`).
+    fn overflows(&self, dur: Time, horizon: Time, seed: u64) -> bool {
+        // Poisson windows are seeded, so expand and check the real ones.
+        let mut starts: Vec<Time> = Vec::new();
+        match *self {
+            Schedule::OneShot { at } => starts.push(at),
+            Schedule::Periodic { start, period, count } => {
+                let mut t = start;
+                for _ in 0..count {
+                    if t >= horizon {
+                        break;
+                    }
+                    starts.push(t);
+                    t = t.saturating_add(period.max(1));
+                }
+            }
+            Schedule::Poisson { .. } => {
+                return self
+                    .windows(dur, horizon, true, seed)
+                    .iter()
+                    .any(|&(s, _)| s == 0) // a wrapped tail landed at 0
+                    && dur > 0;
+            }
+        }
+        starts.iter().any(|&s| s < horizon && s.saturating_add(dur) > horizon)
+    }
+}
+
+/// Which cores of the afflicted machine a degradation window covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradeScope {
+    /// Every core (whole-package thermal event).
+    Machine,
+    /// One straggler core.
+    Core(usize),
+    /// One frequency domain / E-core module (matched against the
+    /// machine's `domain_of` map).
+    Module(usize),
+}
+
+/// One resolved degradation window on one machine: between `start` and
+/// `end` (machine-local ns), cores in `scope` run their turbo tables
+/// scaled by `scale` (< 1.0). Carried on
+/// [`crate::sched::machine::MachineParams::degrade`]; an empty window
+/// vector keeps the literal fault-free fast/slow paths.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DegradeWindow {
+    pub start: Time,
+    pub end: Time,
+    pub scale: f64,
+    pub scope: DegradeScope,
+}
+
+impl DegradeWindow {
+    /// Does this window scale `core` (whose frequency domain is
+    /// `domain`) at time `t`?
+    pub fn applies(&self, core: usize, domain: usize, t: Time) -> bool {
+        if t < self.start || t >= self.end {
+            return false;
+        }
+        match self.scope {
+            DegradeScope::Machine => true,
+            DegradeScope::Core(c) => c == core,
+            DegradeScope::Module(m) => m == domain,
+        }
+    }
+
+    /// Shift the window into a sub-interval's local time base,
+    /// clipping to `[w0, w1)`; `None` when disjoint.
+    pub fn rebased(&self, w0: Time, w1: Time) -> Option<DegradeWindow> {
+        let s = self.start.max(w0);
+        let e = self.end.min(w1);
+        if s >= e {
+            return None;
+        }
+        Some(DegradeWindow { start: s - w0, end: e - w0, ..*self })
+    }
+}
+
+/// One crash fault: the machine goes dark for `down` ns at each
+/// scheduled instant, then pays `cold_start` ns of restart before
+/// accepting work again (with cold caches — each restart is a fresh
+/// simulation, so license/EWMA state resets naturally).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CrashFault {
+    pub machine: usize,
+    pub schedule: Schedule,
+    pub down: Time,
+    pub cold_start: Time,
+}
+
+/// One degradation fault (thermal event): `scope` of `machine` pinned
+/// to `scale` × its turbo table for `dur` ns per scheduled window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegradeFault {
+    pub machine: usize,
+    pub scope: DegradeScope,
+    pub scale: f64,
+    pub schedule: Schedule,
+    pub dur: Time,
+}
+
+/// One network fault on the front-end → machine link: for `dur` ns per
+/// scheduled window, deliveries to `machine` (or every machine when
+/// `None`) are delayed by `delay` and dropped with probability
+/// `drop_frac` (seeded per-request hash — see
+/// [`FaultTimeline::dropped`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkFault {
+    pub machine: Option<usize>,
+    pub delay: Time,
+    pub drop_frac: f64,
+    pub schedule: Schedule,
+    pub dur: Time,
+}
+
+/// Constant per-machine clock offset (ns, may be negative): the
+/// machine stamps arrivals `skew` earlier/later than the front end's
+/// clock, so its *observed* latencies — and everything the epoch
+/// feedback derives from them — are shifted by `skew`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SkewFault {
+    pub machine: usize,
+    pub skew_ns: i64,
+}
+
+/// The `[faults]` config section: which faults exist and when they
+/// fire. `Default` is fully disabled and every consumer gates on
+/// [`FaultsCfg::active`], so a default config reproduces pre-PR bytes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultsCfg {
+    pub enabled: bool,
+    /// Allow windows to wrap modularly around the measure window
+    /// instead of being rejected by [`FaultsCfg::validate`].
+    pub wrap: bool,
+    /// Mixed into the run seed for every seeded fault decision, so two
+    /// fault layers on the same run seed can differ.
+    pub seed_salt: u64,
+    pub crashes: Vec<CrashFault>,
+    pub degrades: Vec<DegradeFault>,
+    pub links: Vec<LinkFault>,
+    pub skews: Vec<SkewFault>,
+}
+
+impl FaultsCfg {
+    /// True when fault injection can affect the run at all.
+    pub fn active(&self) -> bool {
+        self.enabled
+            && !(self.crashes.is_empty()
+                && self.degrades.is_empty()
+                && self.links.is_empty()
+                && self.skews.is_empty())
+    }
+
+    /// The canonical chaos preset used by the scenario `faults=chaos`
+    /// axis value, `avxfreq bench`'s chaos scenario, and `repro
+    /// faulttol`: one mid-run crash on machine 0, a periodic
+    /// whole-machine degradation on machine 1, a lossy slow link to
+    /// every machine for the middle fifth of the window, and +300 µs of
+    /// clock skew on the last machine. Pure function of
+    /// `(measure, machines)`.
+    pub fn chaos(measure: Time, machines: usize) -> FaultsCfg {
+        let mut cfg = FaultsCfg { enabled: true, ..Default::default() };
+        cfg.crashes.push(CrashFault {
+            machine: 0,
+            schedule: Schedule::OneShot { at: measure / 4 },
+            down: measure / 8,
+            cold_start: 2 * MS,
+        });
+        if machines > 1 {
+            cfg.degrades.push(DegradeFault {
+                machine: 1,
+                scope: DegradeScope::Machine,
+                scale: 0.6,
+                schedule: Schedule::Periodic {
+                    start: measure / 10,
+                    period: measure * 2 / 5,
+                    count: 2,
+                },
+                dur: measure / 6,
+            });
+        }
+        cfg.links.push(LinkFault {
+            machine: None,
+            delay: 200 * crate::sim::US,
+            drop_frac: 0.02,
+            schedule: Schedule::OneShot { at: measure * 2 / 5 },
+            dur: measure / 5,
+        });
+        if machines > 0 {
+            cfg.skews.push(SkewFault { machine: machines - 1, skew_ns: 300_000 });
+        }
+        cfg
+    }
+
+    /// Parse the `[faults]` section. Absent keys leave the default
+    /// (disabled) config, so existing configs are untouched. One fault
+    /// of each kind is expressible from flags/TOML; presets
+    /// ([`FaultsCfg::chaos`]) compose several.
+    pub fn from_config(conf: &Config, measure: Time) -> anyhow::Result<FaultsCfg> {
+        let mut cfg = FaultsCfg {
+            enabled: conf.bool_or("faults.enabled", false),
+            wrap: conf.bool_or("faults.wrap", false),
+            seed_salt: conf.int_or("faults.seed_salt", 0) as u64,
+            ..Default::default()
+        };
+        if conf.str_or("faults.preset", "") == "chaos" {
+            let machines = conf.usize_or("fleet.machines", 4);
+            let mut preset = FaultsCfg::chaos(measure, machines);
+            preset.wrap = cfg.wrap;
+            preset.seed_salt = cfg.seed_salt;
+            return Ok(preset);
+        }
+        let schedule = |kind: &str| -> anyhow::Result<Option<Schedule>> {
+            // Keyed on key *presence*, not sentinel values, so NaN and
+            // negative edge values reach the rejection below instead of
+            // silently deselecting the schedule.
+            let akey = format!("faults.{kind}_at_s");
+            let pkey = format!("faults.{kind}_period_s");
+            let gkey = format!("faults.{kind}_poisson_gap_s");
+            let secs = |v: f64| (v * SEC as f64) as Time;
+            let at = conf.float_or(&akey, 0.0);
+            if conf.get(&akey).is_some() {
+                anyhow::ensure!(
+                    at.is_finite() && at >= 0.0,
+                    "{akey} = {at}: must be a finite value ≥ 0"
+                );
+            }
+            if conf.get(&pkey).is_some() {
+                let period = conf.float_or(&pkey, 0.0);
+                anyhow::ensure!(
+                    period.is_finite() && period > 0.0,
+                    "{pkey} = {period}: must be a finite value > 0"
+                );
+                let count = conf.int_or(&format!("faults.{kind}_count"), 2);
+                anyhow::ensure!(count > 0, "faults.{kind}_count = {count}: must be > 0");
+                Ok(Some(Schedule::Periodic {
+                    start: secs(at),
+                    period: secs(period),
+                    count: count as u32,
+                }))
+            } else if conf.get(&gkey).is_some() {
+                let gap = conf.float_or(&gkey, 0.0);
+                anyhow::ensure!(
+                    gap.is_finite() && gap > 0.0,
+                    "{gkey} = {gap}: must be a finite value > 0"
+                );
+                Ok(Some(Schedule::Poisson { mean_gap: secs(gap) }))
+            } else if conf.get(&akey).is_some() {
+                Ok(Some(Schedule::OneShot { at: secs(at) }))
+            } else {
+                Ok(None)
+            }
+        };
+        if let Some(sched) = schedule("crash")? {
+            let down_s = conf.float_or("faults.crash_down_s", 0.01);
+            let cold_ms = conf.float_or("faults.crash_cold_start_ms", 1.0);
+            cfg.crashes.push(CrashFault {
+                machine: conf.usize_or("faults.crash_machine", 0),
+                schedule: sched,
+                down: (down_s * SEC as f64) as Time,
+                cold_start: (cold_ms * MS as f64) as Time,
+            });
+        }
+        if let Some(sched) = schedule("degrade")? {
+            let scope = match conf.str_or("faults.degrade_scope", "machine") {
+                "machine" => DegradeScope::Machine,
+                s if s.starts_with("core:") => DegradeScope::Core(
+                    s[5..].parse().map_err(|_| {
+                        anyhow::anyhow!("faults.degrade_scope = {s:?}: core:<index> expected")
+                    })?,
+                ),
+                s if s.starts_with("module:") => DegradeScope::Module(
+                    s[7..].parse().map_err(|_| {
+                        anyhow::anyhow!("faults.degrade_scope = {s:?}: module:<index> expected")
+                    })?,
+                ),
+                other => anyhow::bail!(
+                    "faults.degrade_scope = {other:?} (machine|core:<i>|module:<i>)"
+                ),
+            };
+            cfg.degrades.push(DegradeFault {
+                machine: conf.usize_or("faults.degrade_machine", 0),
+                scope,
+                scale: conf.float_or("faults.degrade_scale", 0.6),
+                schedule: sched,
+                dur: (conf.float_or("faults.degrade_dur_s", 0.02) * SEC as f64) as Time,
+            });
+        }
+        if let Some(sched) = schedule("link")? {
+            let m = conf.int_or("faults.link_machine", -1);
+            cfg.links.push(LinkFault {
+                machine: if m < 0 { None } else { Some(m as usize) },
+                delay: (conf.float_or("faults.link_delay_us", 0.0) * crate::sim::US as f64)
+                    as Time,
+                drop_frac: conf.float_or("faults.link_drop_frac", 0.0),
+                schedule: sched,
+                dur: (conf.float_or("faults.link_dur_s", 0.02) * SEC as f64) as Time,
+            });
+        }
+        let skew_us = conf.float_or("faults.skew_us", 0.0);
+        if skew_us != 0.0 {
+            anyhow::ensure!(
+                skew_us.is_finite(),
+                "faults.skew_us = {skew_us}: must be a finite value"
+            );
+            cfg.skews.push(SkewFault {
+                machine: conf.usize_or("faults.skew_machine", 0),
+                skew_ns: (skew_us * crate::sim::US as f64) as i64,
+            });
+        }
+        cfg.validate(measure, usize::MAX)?;
+        Ok(cfg)
+    }
+
+    /// Edge validation, PR 9 `load.*` style: every rejection names the
+    /// offending key and value. `machines` bounds the per-fault machine
+    /// indices (`usize::MAX` to skip when the fleet size is not yet
+    /// known); `measure` is the window the schedules must fit unless
+    /// `wrap` is set.
+    pub fn validate(&self, measure: Time, machines: usize) -> anyhow::Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        anyhow::ensure!(measure > 0, "faults require a measure window > 0");
+        for (i, c) in self.crashes.iter().enumerate() {
+            anyhow::ensure!(
+                c.machine < machines,
+                "faults.crash_machine = {}: fleet has {machines} machines",
+                c.machine
+            );
+            anyhow::ensure!(c.down > 0, "faults.crash_down_s: crash #{i} down time must be > 0");
+            anyhow::ensure!(
+                !self.overflowing(&c.schedule, c.down.saturating_add(c.cold_start), measure),
+                "faults.crash: crash #{i} window (down + cold start) extends past the \
+                 measure window; set faults.wrap = true to wrap it modularly"
+            );
+        }
+        for (i, d) in self.degrades.iter().enumerate() {
+            anyhow::ensure!(
+                d.machine < machines,
+                "faults.degrade_machine = {}: fleet has {machines} machines",
+                d.machine
+            );
+            anyhow::ensure!(
+                d.scale.is_finite() && d.scale > 0.0 && d.scale <= 1.0,
+                "faults.degrade_scale = {}: must be a finite value in (0, 1]",
+                d.scale
+            );
+            anyhow::ensure!(d.dur > 0, "faults.degrade_dur_s: window #{i} must be > 0");
+            anyhow::ensure!(
+                !self.overflowing(&d.schedule, d.dur, measure),
+                "faults.degrade: window #{i} extends past the measure window; \
+                 set faults.wrap = true to wrap it modularly"
+            );
+        }
+        for (i, l) in self.links.iter().enumerate() {
+            if let Some(m) = l.machine {
+                anyhow::ensure!(
+                    m < machines,
+                    "faults.link_machine = {m}: fleet has {machines} machines"
+                );
+            }
+            anyhow::ensure!(
+                l.drop_frac.is_finite() && (0.0..=1.0).contains(&l.drop_frac),
+                "faults.link_drop_frac = {}: must be a finite value in [0, 1]",
+                l.drop_frac
+            );
+            anyhow::ensure!(l.dur > 0, "faults.link_dur_s: window #{i} must be > 0");
+            anyhow::ensure!(
+                !self.overflowing(&l.schedule, l.dur, measure),
+                "faults.link: window #{i} extends past the measure window; \
+                 set faults.wrap = true to wrap it modularly"
+            );
+        }
+        for s in &self.skews {
+            anyhow::ensure!(
+                s.machine < machines,
+                "faults.skew_machine = {}: fleet has {machines} machines",
+                s.machine
+            );
+        }
+        Ok(())
+    }
+
+    fn overflowing(&self, sched: &Schedule, dur: Time, measure: Time) -> bool {
+        !self.wrap && sched.overflows(dur, measure, self.seed_salt)
+    }
+
+    /// A one-word summary for scenario labels and reports.
+    pub fn label(&self) -> &'static str {
+        if self.active() {
+            "chaos"
+        } else {
+            "none"
+        }
+    }
+}
+
+/// One resolved link window: between `start` and `end`, deliveries are
+/// delayed by `delay` and dropped with probability `drop_frac`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkWindow {
+    pub start: Time,
+    pub end: Time,
+    pub delay: Time,
+    pub drop_frac: f64,
+}
+
+/// The fully expanded, per-machine view of a [`FaultsCfg`] over one
+/// measure window: crash dark intervals (down time + cold start,
+/// merged when overlapping), degradation windows, link windows, and
+/// clock offsets. Built once up front ([`FaultTimeline::build`]) —
+/// a pure function of `(config, horizon, machines, seed)` — and then
+/// only *read* by the (possibly parallel) simulation, which is what
+/// keeps fault runs byte-identical at any thread count.
+#[derive(Clone, Debug, Default)]
+pub struct FaultTimeline {
+    /// Per machine: sorted, disjoint dark intervals `[start, end)`.
+    pub dark: Vec<Vec<(Time, Time)>>,
+    /// Per machine: degradation windows (unsorted, checked per block).
+    pub degrade: Vec<Vec<DegradeWindow>>,
+    /// Per machine: sorted link-fault windows.
+    pub link: Vec<Vec<LinkWindow>>,
+    /// Per machine: constant clock offset (ns).
+    pub skew: Vec<i64>,
+    /// Seed for per-request drop hashing.
+    drop_seed: u64,
+}
+
+impl FaultTimeline {
+    /// Expand `cfg` over `[0, horizon)` for a fleet of `machines`.
+    pub fn build(cfg: &FaultsCfg, horizon: Time, machines: usize, seed: u64) -> FaultTimeline {
+        let base = mix64(seed ^ cfg.seed_salt.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xFA17);
+        let mut tl = FaultTimeline {
+            dark: vec![Vec::new(); machines],
+            degrade: vec![Vec::new(); machines],
+            link: vec![Vec::new(); machines],
+            skew: vec![0; machines],
+            drop_seed: mix64(base ^ 0xD50F),
+        };
+        if !cfg.active() {
+            return tl;
+        }
+        for (i, c) in cfg.crashes.iter().enumerate() {
+            if c.machine >= machines {
+                continue;
+            }
+            let wseed = mix64(base ^ 0xC4A5_4EED ^ (i as u64) << 8);
+            for (s, e) in c.schedule.windows(c.down, horizon, cfg.wrap, wseed) {
+                // The machine is dark for the crash itself plus the
+                // cold-start penalty before it accepts work again.
+                let end = e.saturating_add(c.cold_start).min(horizon);
+                tl.dark[c.machine].push((s, end));
+            }
+        }
+        for m in &mut tl.dark {
+            m.sort_unstable();
+            // Merge overlapping dark intervals.
+            let mut merged: Vec<(Time, Time)> = Vec::with_capacity(m.len());
+            for &(s, e) in m.iter() {
+                match merged.last_mut() {
+                    Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                    _ => merged.push((s, e)),
+                }
+            }
+            *m = merged;
+        }
+        for (i, d) in cfg.degrades.iter().enumerate() {
+            if d.machine >= machines {
+                continue;
+            }
+            let wseed = mix64(base ^ 0xDE64_ADE5 ^ (i as u64) << 8);
+            for (s, e) in d.schedule.windows(d.dur, horizon, cfg.wrap, wseed) {
+                tl.degrade[d.machine].push(DegradeWindow {
+                    start: s,
+                    end: e,
+                    scale: d.scale,
+                    scope: d.scope,
+                });
+            }
+        }
+        for (i, l) in cfg.links.iter().enumerate() {
+            let wseed = mix64(base ^ 0x11_4BAD ^ (i as u64) << 8);
+            for (s, e) in l.schedule.windows(l.dur, horizon, cfg.wrap, wseed) {
+                let w = LinkWindow { start: s, end: e, delay: l.delay, drop_frac: l.drop_frac };
+                match l.machine {
+                    Some(m) if m < machines => tl.link[m].push(w),
+                    Some(_) => {}
+                    None => {
+                        for m in 0..machines {
+                            tl.link[m].push(w);
+                        }
+                    }
+                }
+            }
+        }
+        for m in &mut tl.link {
+            m.sort_unstable_by_key(|w| (w.start, w.end));
+        }
+        for s in &cfg.skews {
+            if s.machine < machines {
+                tl.skew[s.machine] = tl.skew[s.machine].saturating_add(s.skew_ns);
+            }
+        }
+        tl
+    }
+
+    /// Any fault anywhere? False for a disabled config — consumers use
+    /// this to take the literal fault-free code path.
+    pub fn any(&self) -> bool {
+        self.dark.iter().any(|v| !v.is_empty())
+            || self.degrade.iter().any(|v| !v.is_empty())
+            || self.link.iter().any(|v| !v.is_empty())
+            || self.skew.iter().any(|&s| s != 0)
+    }
+
+    /// Is machine `m` dark (crashed or cold-starting) at time `t`?
+    pub fn is_dark(&self, m: usize, t: Time) -> bool {
+        self.dark[m].iter().any(|&(s, e)| t >= s && t < e)
+    }
+
+    /// The up (not-dark) sub-intervals of `[w0, w1)` for machine `m`,
+    /// in order. A machine with no crash windows returns the whole
+    /// interval.
+    pub fn up_segments(&self, m: usize, w0: Time, w1: Time) -> Vec<(Time, Time)> {
+        let mut segs = Vec::new();
+        let mut cur = w0;
+        for &(s, e) in &self.dark[m] {
+            if e <= cur || s >= w1 {
+                continue;
+            }
+            if s > cur {
+                segs.push((cur, s.min(w1)));
+            }
+            cur = cur.max(e);
+            if cur >= w1 {
+                break;
+            }
+        }
+        if cur < w1 {
+            segs.push((cur, w1));
+        }
+        segs
+    }
+
+    /// The link window covering delivery to machine `m` at time `t`.
+    pub fn link_at(&self, m: usize, t: Time) -> Option<&LinkWindow> {
+        self.link[m].iter().find(|w| t >= w.start && t < w.end)
+    }
+
+    /// Seeded per-request drop decision: a pure hash of
+    /// `(machine, nominal arrival time)`, so the answer is independent
+    /// of which worker thread asks, and in what order.
+    pub fn dropped(&self, m: usize, t: Time) -> bool {
+        match self.link_at(m, t) {
+            Some(w) if w.drop_frac > 0.0 => {
+                let h = mix64(self.drop_seed ^ (m as u64).wrapping_mul(0xA24B_AED4_963E_E407) ^ t);
+                (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < w.drop_frac
+            }
+            _ => false,
+        }
+    }
+
+    /// Inbound delivery delay to machine `m` for a request sent at `t`.
+    pub fn delay(&self, m: usize, t: Time) -> Time {
+        self.link_at(m, t).map_or(0, |w| w.delay)
+    }
+
+    /// Machine `m`'s clock offset: its local stamp for front-end time
+    /// `t` is `t - skew`.
+    pub fn skewed(&self, m: usize, t: Time) -> Time {
+        let s = self.skew[m];
+        if s >= 0 {
+            t.saturating_sub(s as Time)
+        } else {
+            t.saturating_add(s.unsigned_abs())
+        }
+    }
+
+    /// Degradation windows for machine `m` clipped and rebased into
+    /// `[w0, w1)` local time (what a per-epoch / per-segment
+    /// [`crate::sched::machine::MachineParams`] carries).
+    pub fn degrade_in(&self, m: usize, w0: Time, w1: Time) -> Vec<DegradeWindow> {
+        self.degrade[m].iter().filter_map(|w| w.rebased(w0, w1)).collect()
+    }
+
+    /// Total resolved windows of each kind (crash, degrade, link) —
+    /// the counts [`crate::traffic::FaultOutcomes`] reports.
+    pub fn window_counts(&self) -> (u64, u64, u64) {
+        let c = self.dark.iter().map(|v| v.len() as u64).sum();
+        let d = self.degrade.iter().map(|v| v.len() as u64).sum();
+        let l: u64 = self.link.iter().map(|v| v.len() as u64).sum();
+        (c, d, l)
+    }
+}
+
+/// Per-fault-window SLO damage, computed by the closed loop at epoch
+/// granularity (an epoch counts as "inside" a window when the two
+/// overlap) and rendered by [`crate::metrics::fault_report`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultWindowStat {
+    /// `"crash"`, `"degrade"`, or `"link"`.
+    pub kind: &'static str,
+    /// `"m<i>"`, `"m<i>+m<j>"`, or `"all"` for an every-machine link
+    /// fault.
+    pub machine: String,
+    /// Window bounds, ns from the start of the measure window.
+    pub start: Time,
+    pub end: Time,
+    /// Cluster p99 (µs) merged over the epochs overlapping the window.
+    pub p99_in_us: f64,
+    /// Cluster p99 (µs) merged over every other measured epoch.
+    pub p99_out_us: f64,
+    /// SLO violations inside the overlapping epochs.
+    pub violations_in: u64,
+    /// Crash windows only: epochs from ejection to readmission (MTTR).
+    pub readmit_epochs: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_shot_expands_to_one_window_inside_horizon() {
+        let s = Schedule::OneShot { at: 10 * MS };
+        assert_eq!(s.windows(5 * MS, SEC, false, 1), vec![(10 * MS, 15 * MS)]);
+        assert!(s.windows(5 * MS, 5 * MS, false, 1).is_empty(), "start past horizon drops");
+    }
+
+    #[test]
+    fn periodic_expands_count_windows_and_stops_at_horizon() {
+        let s = Schedule::Periodic { start: MS, period: 10 * MS, count: 3 };
+        let w = s.windows(2 * MS, SEC, false, 1);
+        assert_eq!(w, vec![(MS, 3 * MS), (11 * MS, 13 * MS), (21 * MS, 23 * MS)]);
+        let clipped = s.windows(2 * MS, 12 * MS, true, 1);
+        assert_eq!(clipped.len(), 2, "third window starts past the horizon");
+    }
+
+    #[test]
+    fn poisson_windows_are_seed_deterministic_and_in_range() {
+        let s = Schedule::Poisson { mean_gap: 20 * MS };
+        let a = s.windows(MS, SEC, true, 7);
+        let b = s.windows(MS, SEC, true, 7);
+        assert_eq!(a, b, "same seed, same windows");
+        assert!(!a.is_empty());
+        assert!(a.iter().all(|&(s0, e0)| s0 < e0 && e0 <= SEC));
+        let c = s.windows(MS, SEC, true, 8);
+        assert_ne!(a, c, "different seed, different windows");
+    }
+
+    #[test]
+    fn wrap_splits_an_overflowing_window_modularly() {
+        let s = Schedule::OneShot { at: 90 * MS };
+        let w = s.windows(20 * MS, 100 * MS, true, 1);
+        assert_eq!(w, vec![(0, 10 * MS), (90 * MS, 100 * MS)]);
+    }
+
+    #[test]
+    fn validate_rejects_overflow_without_wrap() {
+        let mut cfg = FaultsCfg { enabled: true, ..Default::default() };
+        cfg.crashes.push(CrashFault {
+            machine: 0,
+            schedule: Schedule::OneShot { at: 90 * MS },
+            down: 20 * MS,
+            cold_start: 0,
+        });
+        let err = cfg.validate(100 * MS, 4).unwrap_err().to_string();
+        assert!(err.contains("faults.wrap"), "error should point at the wrap escape: {err}");
+        cfg.wrap = true;
+        cfg.validate(100 * MS, 4).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_scale_drop_frac_and_machine_index() {
+        let mut cfg = FaultsCfg { enabled: true, ..Default::default() };
+        cfg.degrades.push(DegradeFault {
+            machine: 0,
+            scope: DegradeScope::Machine,
+            scale: 1.5,
+            schedule: Schedule::OneShot { at: 0 },
+            dur: MS,
+        });
+        assert!(cfg.validate(SEC, 4).unwrap_err().to_string().contains("degrade_scale"));
+        cfg.degrades[0].scale = f64::NAN;
+        assert!(cfg.validate(SEC, 4).unwrap_err().to_string().contains("degrade_scale"));
+        cfg.degrades[0].scale = 0.5;
+        cfg.degrades[0].machine = 9;
+        assert!(cfg.validate(SEC, 4).unwrap_err().to_string().contains("degrade_machine"));
+        cfg.degrades.clear();
+        cfg.links.push(LinkFault {
+            machine: Some(1),
+            delay: 0,
+            drop_frac: 1.5,
+            schedule: Schedule::OneShot { at: 0 },
+            dur: MS,
+        });
+        assert!(cfg.validate(SEC, 4).unwrap_err().to_string().contains("link_drop_frac"));
+    }
+
+    #[test]
+    fn disabled_config_validates_and_builds_an_inert_timeline() {
+        let cfg = FaultsCfg::default();
+        cfg.validate(0, 0).unwrap();
+        assert!(!cfg.active());
+        let tl = FaultTimeline::build(&cfg, SEC, 4, 42);
+        assert!(!tl.any());
+        assert!(tl.up_segments(0, 0, SEC) == vec![(0, SEC)]);
+        assert_eq!(tl.delay(0, 0), 0);
+        assert!(!tl.dropped(0, 0));
+        assert_eq!(tl.skewed(0, 5), 5);
+    }
+
+    #[test]
+    fn crash_dark_interval_includes_cold_start_and_splits_segments() {
+        let mut cfg = FaultsCfg { enabled: true, ..Default::default() };
+        cfg.crashes.push(CrashFault {
+            machine: 1,
+            schedule: Schedule::OneShot { at: 40 * MS },
+            down: 10 * MS,
+            cold_start: 5 * MS,
+        });
+        let tl = FaultTimeline::build(&cfg, 100 * MS, 4, 42);
+        assert!(tl.is_dark(1, 40 * MS));
+        assert!(tl.is_dark(1, 54 * MS), "cold start keeps the machine dark");
+        assert!(!tl.is_dark(1, 55 * MS));
+        assert!(!tl.is_dark(0, 45 * MS), "other machines unaffected");
+        assert_eq!(
+            tl.up_segments(1, 0, 100 * MS),
+            vec![(0, 40 * MS), (55 * MS, 100 * MS)]
+        );
+        assert_eq!(
+            tl.up_segments(1, 45 * MS, 50 * MS),
+            Vec::<(Time, Time)>::new(),
+            "an epoch entirely inside the dark window has no up segments"
+        );
+        assert_eq!(tl.window_counts().0, 1);
+    }
+
+    #[test]
+    fn overlapping_dark_intervals_merge() {
+        let mut cfg = FaultsCfg { enabled: true, ..Default::default() };
+        for at in [10 * MS, 15 * MS] {
+            cfg.crashes.push(CrashFault {
+                machine: 0,
+                schedule: Schedule::OneShot { at },
+                down: 10 * MS,
+                cold_start: 0,
+            });
+        }
+        let tl = FaultTimeline::build(&cfg, 100 * MS, 1, 1);
+        assert_eq!(tl.dark[0], vec![(10 * MS, 25 * MS)]);
+    }
+
+    #[test]
+    fn drop_decision_is_a_pure_seeded_hash_near_the_requested_rate() {
+        let mut cfg = FaultsCfg { enabled: true, ..Default::default() };
+        cfg.links.push(LinkFault {
+            machine: None,
+            delay: 7,
+            drop_frac: 0.25,
+            schedule: Schedule::OneShot { at: 0 },
+            dur: SEC,
+        });
+        let tl = FaultTimeline::build(&cfg, SEC, 2, 9);
+        let n = 20_000u64;
+        let dropped = (0..n).filter(|&i| tl.dropped(0, i * 1_000)).count() as f64;
+        let frac = dropped / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "drop rate {frac} far from 0.25");
+        // Pure: asking twice (any "order") gives the same answer.
+        assert_eq!(tl.dropped(0, 123_000), tl.dropped(0, 123_000));
+        assert_eq!(tl.delay(0, 10), 7);
+        assert_eq!(tl.delay(0, SEC + 10), 0, "outside the window: no delay");
+    }
+
+    #[test]
+    fn skew_shifts_stamps_both_ways_and_saturates_at_zero() {
+        let mut cfg = FaultsCfg { enabled: true, ..Default::default() };
+        cfg.skews.push(SkewFault { machine: 0, skew_ns: 100 });
+        cfg.skews.push(SkewFault { machine: 1, skew_ns: -100 });
+        let tl = FaultTimeline::build(&cfg, SEC, 2, 1);
+        assert_eq!(tl.skewed(0, 250), 150);
+        assert_eq!(tl.skewed(0, 50), 0, "saturates instead of wrapping");
+        assert_eq!(tl.skewed(1, 250), 350);
+    }
+
+    #[test]
+    fn degrade_windows_rebase_and_scope_match() {
+        let w = DegradeWindow {
+            start: 10 * MS,
+            end: 20 * MS,
+            scale: 0.5,
+            scope: DegradeScope::Core(2),
+        };
+        assert!(w.applies(2, 0, 15 * MS));
+        assert!(!w.applies(1, 0, 15 * MS));
+        assert!(!w.applies(2, 0, 20 * MS), "end-exclusive");
+        let r = w.rebased(12 * MS, 30 * MS).unwrap();
+        assert_eq!((r.start, r.end), (0, 8 * MS));
+        assert!(w.rebased(20 * MS, 30 * MS).is_none());
+        let m = DegradeWindow { scope: DegradeScope::Module(1), ..w };
+        assert!(m.applies(5, 1, 15 * MS));
+        assert!(!m.applies(5, 0, 15 * MS));
+    }
+
+    #[test]
+    fn chaos_preset_is_active_and_validates() {
+        let cfg = FaultsCfg::chaos(200 * MS, 4);
+        assert!(cfg.active());
+        cfg.validate(200 * MS, 4).unwrap();
+        assert_eq!(cfg.label(), "chaos");
+        assert_eq!(FaultsCfg::default().label(), "none");
+        let tl = FaultTimeline::build(&cfg, 200 * MS, 4, 42);
+        assert!(tl.any());
+        let (c, d, l) = tl.window_counts();
+        assert!(c >= 1 && d >= 1 && l >= 1, "crash={c} degrade={d} link={l}");
+        assert_ne!(tl.skew[3], 0);
+    }
+
+    #[test]
+    fn from_config_parses_and_rejects_edge_values() {
+        let conf = Config::parse(
+            "[faults]\nenabled = true\ncrash_at_s = 0.01\ncrash_down_s = 0.005\n\
+             crash_cold_start_ms = 2.0\nlink_at_s = 0.02\nlink_dur_s = 0.01\n\
+             link_delay_us = 150.0\nlink_drop_frac = 0.1\nskew_us = 250.0\nskew_machine = 1\n",
+        )
+        .unwrap();
+        let cfg = FaultsCfg::from_config(&conf, 100 * MS).unwrap();
+        assert!(cfg.active());
+        assert_eq!(cfg.crashes.len(), 1);
+        assert_eq!(cfg.crashes[0].cold_start, 2 * MS);
+        assert_eq!(cfg.links[0].delay, 150 * crate::sim::US);
+        assert_eq!(cfg.skews[0].skew_ns, 250_000);
+
+        let reject = |toml: &str, key: &str| {
+            let conf = Config::parse(toml).unwrap();
+            let err = FaultsCfg::from_config(&conf, 100 * MS).unwrap_err().to_string();
+            assert!(err.contains(key), "error {err:?} should name {key:?}");
+        };
+        reject("[faults]\nenabled = true\ncrash_period_s = 0.0\n", "crash_period_s");
+        reject("[faults]\nenabled = true\ncrash_period_s = nan\n", "crash_period_s");
+        reject(
+            "[faults]\nenabled = true\ndegrade_at_s = 0.01\ndegrade_scale = 2.0\n",
+            "degrade_scale",
+        );
+        reject(
+            "[faults]\nenabled = true\nlink_at_s = 0.0\nlink_drop_frac = -0.5\n",
+            "link_drop_frac",
+        );
+        reject(
+            "[faults]\nenabled = true\ndegrade_at_s = 0.0\ndegrade_scope = \"socket\"\n",
+            "degrade_scope",
+        );
+        // Past-the-window schedule without wrap is rejected; with wrap it parses.
+        reject("[faults]\nenabled = true\ncrash_at_s = 0.09\ncrash_down_s = 0.05\n", "wrap");
+        let conf = Config::parse(
+            "[faults]\nenabled = true\nwrap = true\ncrash_at_s = 0.09\ncrash_down_s = 0.05\n",
+        )
+        .unwrap();
+        FaultsCfg::from_config(&conf, 100 * MS).unwrap();
+    }
+
+    #[test]
+    fn chaos_preset_key_builds_from_config() {
+        let conf =
+            Config::parse("[faults]\nenabled = true\npreset = \"chaos\"\n[fleet]\nmachines = 4\n")
+                .unwrap();
+        let cfg = FaultsCfg::from_config(&conf, 200 * MS).unwrap();
+        assert_eq!(cfg, FaultsCfg::chaos(200 * MS, 4));
+    }
+}

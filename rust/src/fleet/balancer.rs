@@ -50,10 +50,11 @@
 
 use super::cluster::{route_stream, FleetCfg};
 use super::hierarchy::{collective_makespan, HierFleetRun, HierarchyAgg};
+use crate::faults::{FaultTimeline, FaultWindowStat, FaultsCfg, LinkWindow};
 use crate::sim::{Time, MS, SEC};
-use crate::traffic::{ArrivalGen, FrontendOutcomes, LatencyStats};
+use crate::traffic::{ArrivalGen, FaultOutcomes, FrontendOutcomes, LatencyStats};
 use crate::util::{mix64, Rng};
-use crate::workload::webserver::{run_webserver_trace, WebCfg};
+use crate::workload::webserver::{run_webserver_trace, run_webserver_trace_faulted, WebCfg};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -168,22 +169,35 @@ pub struct HierFleetCfg {
     /// Bulk-synchronous collective steps to model over the digests
     /// (0 = skip).
     pub collective_steps: usize,
+    /// Deterministic fault injection (`[faults]` section). The default
+    /// is disabled, and a disabled config takes the literal fault-free
+    /// code paths — `rust/tests/faults.rs` pins byte equality.
+    pub faults: FaultsCfg,
 }
 
 impl HierFleetCfg {
     pub fn new(fleet: FleetCfg, balancer: BalancerCfg) -> Self {
-        HierFleetCfg { fleet, machines_per_rack: 8, balancer, collective_steps: 0 }
+        HierFleetCfg {
+            fleet,
+            machines_per_rack: 8,
+            balancer,
+            collective_steps: 0,
+            faults: FaultsCfg::default(),
+        }
     }
 
-    /// Extend [`FleetCfg::from_config`] with the `[balancer]` section
-    /// plus `fleet.machines_per_rack` / `fleet.collective_steps`.
+    /// Extend [`FleetCfg::from_config`] with the `[balancer]` and
+    /// `[faults]` sections plus `fleet.machines_per_rack` /
+    /// `fleet.collective_steps`.
     pub fn from_config(conf: &crate::util::config::Config) -> anyhow::Result<HierFleetCfg> {
         let fleet = FleetCfg::from_config(conf)?;
+        let faults = FaultsCfg::from_config(conf, fleet.cfg.measure)?;
         let cfg = HierFleetCfg {
             fleet,
             machines_per_rack: conf.usize_or("fleet.machines_per_rack", 8).max(1),
             balancer: BalancerCfg::from_config(conf)?,
             collective_steps: conf.usize_or("fleet.collective_steps", 0),
+            faults,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -192,6 +206,7 @@ impl HierFleetCfg {
     pub fn validate(&self) -> anyhow::Result<()> {
         self.fleet.validate()?;
         self.balancer.validate()?;
+        self.faults.validate(self.fleet.cfg.measure, self.fleet.machines.max(1))?;
         if self.balancer.enabled {
             anyhow::ensure!(
                 self.fleet.cfg.measure / self.balancer.epochs as Time > 0,
@@ -200,6 +215,22 @@ impl HierFleetCfg {
             );
         }
         Ok(())
+    }
+
+    /// The fault timeline both loops consume: expanded once over the
+    /// measure window from the fleet seed, so open and closed loops see
+    /// the *identical* fault schedule (`repro faulttol` relies on
+    /// this). `None` when faults are disabled — the signal for every
+    /// consumer to take the literal pre-PR path.
+    fn fault_timeline(&self) -> Option<FaultTimeline> {
+        self.faults.active().then(|| {
+            FaultTimeline::build(
+                &self.faults,
+                self.fleet.cfg.measure,
+                self.fleet.machines.max(1),
+                self.fleet.cfg.seed,
+            )
+        })
     }
 }
 
@@ -243,58 +274,129 @@ pub fn run_hier_fleet(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
     }
 }
 
+/// One machine's work for one simulation window.
+///
+/// `Plain` is the pre-PR path, verbatim: one whole-window
+/// [`run_webserver_trace`] call — every fault-free configuration uses
+/// it, which is what keeps faults-disabled runs byte-identical to
+/// pre-PR output. `Segments` is the fault path: a crashed machine's
+/// window splits into up-segments, each a *fresh* simulation (cold
+/// caches, reset license/EWMA state — the restart semantics) replaying
+/// a `(deliver, arrived-stamp, tenant)` trace that already carries the
+/// link delays and clock skew.
+enum MachineJob {
+    Plain(WebCfg, Vec<(Time, u32)>),
+    Segments(Vec<(WebCfg, Vec<(Time, Time, u32)>)>),
+}
+
 /// Simulate a set of per-machine jobs across worker threads, absorbing
 /// each run into the aggregation as it finishes (the `WebRun` is
 /// dropped on the worker thread). `observe` optionally captures epoch
 /// observations per machine before the drop.
+///
+/// A `Segments` job runs its segments *sequentially on one worker*, in
+/// segment order: the per-machine digest accumulates `f64` sums, so
+/// segment absorption order must be fixed — and it is, because machine
+/// `i`'s digest slot is only ever touched by the worker that claimed
+/// job `i`.
 fn simulate_into(
-    jobs: Vec<(WebCfg, Vec<(Time, u32)>)>,
+    jobs: Vec<MachineJob>,
     threads: usize,
     agg: &HierarchyAgg,
     absorb: bool,
     secs: f64,
     observe: Option<(&Mutex<LatencyStats>, &[Mutex<Option<EpochObs>>], Time, usize)>,
 ) {
-    let jobs: Vec<(WebCfg, Mutex<Option<Vec<(Time, u32)>>>)> = jobs
-        .into_iter()
-        .map(|(mcfg, trace)| (mcfg, Mutex::new(Some(trace))))
-        .collect();
-    let n_threads = threads.max(1).min(jobs.len().max(1));
+    let n_jobs = jobs.len();
+    let jobs: Vec<Mutex<Option<MachineJob>>> =
+        jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let n_threads = threads.max(1).min(n_jobs.max(1));
     let cursor = AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for _ in 0..n_threads {
             scope.spawn(|| loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= jobs.len() {
+                if i >= n_jobs {
                     break;
                 }
-                let (mcfg, trace_slot) = &jobs[i];
-                let trace = trace_slot
+                let job = jobs[i]
                     .lock()
                     .expect("trace poisoned")
                     .take()
                     .expect("each machine's trace is claimed exactly once");
-                let run = run_webserver_trace(mcfg, trace);
-                if absorb {
-                    agg.absorb(i, &run, secs);
+                match job {
+                    MachineJob::Plain(mcfg, trace) => {
+                        let run = run_webserver_trace(&mcfg, trace);
+                        if absorb {
+                            agg.absorb(i, &run, secs);
+                        }
+                        if let Some((epoch_cluster, obs_slots, timeout, n_tenants)) = observe {
+                            let obs = EpochObs {
+                                completed: run.completed,
+                                p99: run.stats.hist.percentile(99.0),
+                                tenant_frac: (0..n_tenants)
+                                    .map(|t| {
+                                        run.tenant_stats
+                                            .get(t)
+                                            .map(|s| s.hist.fraction_above(timeout))
+                                            .unwrap_or(0.0)
+                                    })
+                                    .collect(),
+                            };
+                            epoch_cluster
+                                .lock()
+                                .expect("epoch recorder poisoned")
+                                .merge(&run.stats);
+                            *obs_slots[i].lock().expect("obs slot poisoned") = Some(obs);
+                        }
+                        // `run` dropped here — nothing retains the WebRun.
+                    }
+                    MachineJob::Segments(segs) => {
+                        let slo = segs.first().map(|(c, _)| c.slo).unwrap_or(0);
+                        let mut merged = LatencyStats::new(slo);
+                        let mut tenant_merged: Vec<LatencyStats> = Vec::new();
+                        let mut completed = 0u64;
+                        for (mcfg, strace) in segs {
+                            let seg_secs = mcfg.measure as f64 / SEC as f64;
+                            let run = run_webserver_trace_faulted(&mcfg, strace);
+                            if absorb {
+                                agg.absorb(i, &run, seg_secs);
+                            }
+                            if observe.is_some() {
+                                merged.merge(&run.stats);
+                                if tenant_merged.is_empty() {
+                                    tenant_merged = run.tenant_stats.clone();
+                                } else {
+                                    for (acc, ts) in
+                                        tenant_merged.iter_mut().zip(&run.tenant_stats)
+                                    {
+                                        acc.merge(ts);
+                                    }
+                                }
+                                completed += run.completed;
+                            }
+                        }
+                        if let Some((epoch_cluster, obs_slots, timeout, n_tenants)) = observe {
+                            let obs = EpochObs {
+                                completed,
+                                p99: merged.hist.percentile(99.0),
+                                tenant_frac: (0..n_tenants)
+                                    .map(|t| {
+                                        tenant_merged
+                                            .get(t)
+                                            .map(|s| s.hist.fraction_above(timeout))
+                                            .unwrap_or(0.0)
+                                    })
+                                    .collect(),
+                            };
+                            epoch_cluster
+                                .lock()
+                                .expect("epoch recorder poisoned")
+                                .merge(&merged);
+                            *obs_slots[i].lock().expect("obs slot poisoned") = Some(obs);
+                        }
+                    }
                 }
-                if let Some((epoch_cluster, obs_slots, timeout, n_tenants)) = observe {
-                    let obs = EpochObs {
-                        completed: run.completed,
-                        p99: run.stats.hist.percentile(99.0),
-                        tenant_frac: (0..n_tenants)
-                            .map(|t| {
-                                run.tenant_stats
-                                    .get(t)
-                                    .map(|s| s.hist.fraction_above(timeout))
-                                    .unwrap_or(0.0)
-                            })
-                            .collect(),
-                    };
-                    epoch_cluster.lock().expect("epoch recorder poisoned").merge(&run.stats);
-                    *obs_slots[i].lock().expect("obs slot poisoned") = Some(obs);
-                }
-                // `run` dropped here — nothing retains the WebRun.
             });
         }
     });
@@ -305,6 +407,8 @@ fn finish(
     agg: HierarchyAgg,
     arrivals_routed: Vec<u64>,
     outcomes: FrontendOutcomes,
+    fault_outcomes: FaultOutcomes,
+    fault_windows: Vec<FaultWindowStat>,
 ) -> HierFleetRun {
     let snap = agg.finish(&arrivals_routed);
     let collective = (cfg.collective_steps > 0)
@@ -322,34 +426,184 @@ fn finish(
         stats: snap.cluster,
         tenant_stats: snap.tenants,
         outcomes,
+        fault_outcomes,
+        fault_windows,
         dropped: snap.dropped,
         measure_secs: cfg.fleet.cfg.measure as f64 / SEC as f64,
         collective,
     }
 }
 
+/// Fork a decorrelated seed for segment `j` of a crashed machine's
+/// window; segment 0 keeps the window's own seed so a crash-free
+/// machine's single segment is seeded exactly like its plain run.
+fn segment_seed(base: u64, j: usize) -> u64 {
+    if j == 0 {
+        base
+    } else {
+        mix64(base ^ (j as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+}
+
+/// Split one machine's faulted window `[w0, w1)` (absolute run time,
+/// `rel0 = w0 - warmup` in fault-timeline time; the cold window passes
+/// `segs = [(w0, w1)]` with no rebasing) into per-segment jobs. `trace`
+/// entries are `(deliver, stamp, tenant)` in absolute run time; every
+/// delivery is known to land in an up segment (dark deliveries were
+/// counted lost at routing), except horizon-edge arrivals which ride
+/// the last segment and simply never complete — the pre-PR horizon
+/// semantics.
+fn segment_jobs(
+    fleet: &FleetCfg,
+    tl: &FaultTimeline,
+    i: usize,
+    segs: &[(Time, Time)],
+    base_seed: u64,
+    trace: Vec<(Time, Time, u32)>,
+    embed_warmup: bool,
+    lost: &mut u64,
+) -> MachineJob {
+    let warmup = fleet.cfg.warmup;
+    let mut seg_traces: Vec<Vec<(Time, Time, u32)>> = vec![Vec::new(); segs.len()];
+    for (deliver, stamp, tenant) in trace {
+        let idx = segs.iter().position(|&(s, e)| deliver >= s && deliver < e);
+        match idx {
+            Some(j) => {
+                let s = segs[j].0;
+                seg_traces[j].push((deliver - s, stamp.saturating_sub(s), tenant));
+            }
+            None if segs.last().is_some_and(|&(_, e)| deliver >= e) => {
+                // Horizon edge: attach to the last segment; the local
+                // deliver time is past its measure window, so the
+                // request arrives but never completes.
+                let &(s, _) = segs.last().expect("checked non-empty");
+                seg_traces.last_mut().expect("checked").push((
+                    deliver - s,
+                    stamp.saturating_sub(s),
+                    tenant,
+                ));
+            }
+            None => *lost += 1, // delivered into a gap before the first up segment
+        }
+    }
+    let jobs = segs
+        .iter()
+        .zip(seg_traces)
+        .enumerate()
+        .map(|(j, (&(s, e), strace))| {
+            let mut mcfg = fleet.cfg.clone();
+            // In the open loop a segment starting at absolute 0 keeps
+            // the warmup inside it (the common no-crash-before-measure
+            // case); later segments are cold restarts with no warmup.
+            // The closed loop's windows never embed warmup — its cold
+            // window is already a separate observation-only epoch.
+            if embed_warmup && s == 0 {
+                mcfg.warmup = warmup.min(e);
+                mcfg.measure = e - mcfg.warmup;
+            } else {
+                mcfg.warmup = 0;
+                mcfg.measure = e - s;
+            }
+            mcfg.seed = segment_seed(base_seed, j);
+            // Degrade windows are fault-timeline time; machine-local
+            // time 0 is absolute `s`, so shift by the embedded warmup
+            // when the segment starts before the measure window.
+            let (rel_s, rel_e) = (s.saturating_sub(warmup), e.saturating_sub(warmup));
+            let mut dw = tl.degrade_in(i, rel_s, rel_e);
+            let shift = (rel_s + warmup).saturating_sub(s);
+            if shift > 0 {
+                for w in &mut dw {
+                    w.start += shift;
+                    w.end += shift;
+                }
+            }
+            mcfg.degrade = dw;
+            (mcfg, strace)
+        })
+        .collect();
+    MachineJob::Segments(jobs)
+}
+
 /// Feedback disabled: PR 3's open-loop demux/simulate path verbatim
 /// (same `route_stream`, same `machine_seed`s, same whole-horizon
 /// per-machine runs), streamed into the hierarchy instead of retained.
+/// With faults active, each machine's routed trace is filtered through
+/// the link faults (drops, delays, skew) and split at its crash
+/// windows; there is no front end reacting, so lost requests are
+/// simply lost — the open-loop half of the `repro faulttol`
+/// comparison.
 fn run_open_loop(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
     let fleet = &cfg.fleet;
+    let timeline = cfg.fault_timeline();
     let traces = route_stream(fleet);
     let arrivals_routed: Vec<u64> = traces.iter().map(|t| t.len() as u64).collect();
     let names =
         fleet.cfg.mode.process().expect("validate() rejects closed-loop fleets").tenant_names();
     let agg = HierarchyAgg::new(fleet.machines, cfg.machines_per_rack, fleet.cfg.slo, &names);
     let secs = fleet.cfg.measure as f64 / SEC as f64;
-    let jobs: Vec<(WebCfg, Vec<(Time, u32)>)> = traces
-        .into_iter()
-        .enumerate()
-        .map(|(i, trace)| {
-            let mut mcfg = fleet.cfg.clone();
-            mcfg.seed = fleet.machine_seed(i);
-            (mcfg, trace)
-        })
-        .collect();
+    let mut fault_out = FaultOutcomes::default();
+    let jobs: Vec<MachineJob> = match &timeline {
+        None => traces
+            .into_iter()
+            .enumerate()
+            .map(|(i, trace)| {
+                let mut mcfg = fleet.cfg.clone();
+                mcfg.seed = fleet.machine_seed(i);
+                MachineJob::Plain(mcfg, trace)
+            })
+            .collect(),
+        Some(tl) => {
+            let warmup = fleet.cfg.warmup;
+            traces
+                .into_iter()
+                .enumerate()
+                .map(|(i, trace)| {
+                    let mut ftrace: Vec<(Time, Time, u32)> = Vec::with_capacity(trace.len());
+                    for (t, tenant) in trace {
+                        match t.checked_sub(warmup) {
+                            Some(rel) if tl.dropped(i, rel) => fault_out.dropped_by_net += 1,
+                            Some(rel) => {
+                                let deliver = t.saturating_add(tl.delay(i, rel));
+                                if tl.is_dark(i, deliver.saturating_sub(warmup)) {
+                                    fault_out.lost_to_crash += 1;
+                                } else {
+                                    ftrace.push((deliver, tl.skewed(i, deliver), tenant));
+                                }
+                            }
+                            // Warmup arrivals predate the fault window.
+                            None => ftrace.push((t, t, tenant)),
+                        }
+                    }
+                    // Delays at window edges can reorder deliveries.
+                    ftrace.sort_unstable_by_key(|&(d, s, tn)| (d, s, tn));
+                    let segs: Vec<(Time, Time)> = tl
+                        .up_segments(i, 0, fleet.cfg.measure)
+                        .into_iter()
+                        .map(|(s, e)| {
+                            (if s == 0 { 0 } else { s + warmup }, e + warmup)
+                        })
+                        .collect();
+                    segment_jobs(
+                        fleet,
+                        tl,
+                        i,
+                        &segs,
+                        fleet.machine_seed(i),
+                        ftrace,
+                        true,
+                        &mut fault_out.lost_to_crash,
+                    )
+                })
+                .collect()
+        }
+    };
+    if let Some(tl) = &timeline {
+        let (c, d, _) = tl.window_counts();
+        fault_out.crash_windows = c;
+        fault_out.degrade_windows = d;
+    }
     simulate_into(jobs, threads, &agg, true, secs, None);
-    finish(cfg, agg, arrivals_routed, FrontendOutcomes::default())
+    finish(cfg, agg, arrivals_routed, FrontendOutcomes::default(), fault_out, Vec::new())
 }
 
 /// Seed for (machine `i`, epoch window `k`): window 0 keeps the
@@ -430,6 +684,23 @@ fn run_closed_loop(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
     let mut hedge_frac = 0.0f64;
     let mut hedge_delay: Time = 0;
 
+    // Fault state. `timeline.is_none()` on every fault-free run, and
+    // every fault branch below gates on it, so the fault-free closed
+    // loop is the literal pre-PR code.
+    let timeline = cfg.fault_timeline();
+    let warmup = fleet.cfg.warmup;
+    let mut fault_out = FaultOutcomes::default();
+    if let Some(tl) = &timeline {
+        let (c, d, _) = tl.window_counts();
+        fault_out.crash_windows = c;
+        fault_out.degrade_windows = d;
+    }
+    // Machines ejected for crash losses (MTTR accounting) and the
+    // per-epoch cluster recorders the fault-window report reads.
+    let mut crash_ejected = vec![false; n];
+    let mut recovery_by_machine = vec![0u64; n];
+    let mut epoch_records: Vec<(Time, Time, LatencyStats)> = Vec::new();
+
     let mut base_iter = base.into_iter().peekable();
     let last = windows.len() - 1;
     for (k, &(w0, w1)) in windows.iter().enumerate() {
@@ -454,21 +725,86 @@ fn run_closed_loop(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
         // 2. Route. Retry/attempt composition is tracked per
         // (machine, tenant, attempt) so next epoch's timeouts can be
         // attributed; hedge draws come from a per-epoch seeded stream.
+        // With faults active, each routed request passes through the
+        // fault timeline: link drops, delivery delay, crash-window
+        // loss, and the machine's clock skew on the arrived stamp.
         let mut traces: Vec<Vec<(Time, u32)>> = vec![Vec::new(); n];
+        let mut ftraces: Vec<Vec<(Time, Time, u32)>> = vec![Vec::new(); n];
         let mut hedges: Vec<(Time, u32, usize)> = Vec::new();
         let attempts = bal.max_retries as usize + 1;
         let mut counts = vec![0u64; n * n_tenants * attempts];
+        let mut epoch_routed = vec![0u64; n];
+        let mut epoch_lost = vec![0u64; n];
+        // Requests the front end *knows* faults ate this epoch: fed
+        // back as timeouts (and retries) in §4a'.
+        let mut victims: Vec<(usize, u32, u32)> = Vec::new();
         let mut hedge_rng =
             Rng::new(mix64(fleet.cfg.seed ^ (k as u64).wrapping_mul(0x9E37_79B9) ^ 0x4ED6));
+        // Fate of one routed request: `None` = no faults (pre-PR
+        // delivery), `Some(Ok((deliver, stamp)))` = delivered with link
+        // delay + skewed arrival stamp, `Some(Err(lost))` = dropped on
+        // the link (`false`) or delivered into a crash window (`true`).
+        let fate = |m: usize, t: Time| -> Option<Result<(Time, Time), bool>> {
+            let tl = timeline.as_ref()?;
+            let Some(rel) = t.checked_sub(warmup) else {
+                return Some(Ok((t, t))); // warmup predates the fault window
+            };
+            Some(if tl.dropped(m, rel) {
+                Err(false)
+            } else {
+                let deliver = t.saturating_add(tl.delay(m, rel));
+                if tl.is_dark(m, deliver.saturating_sub(warmup)) {
+                    Err(true)
+                } else {
+                    Ok((deliver, tl.skewed(m, deliver)))
+                }
+            })
+        };
         for a in &epoch {
             let avx = process.tenant_carries_avx(a.tenant as usize);
             let m = match a.machine {
                 Some(m) => pick_healthy(m, &healthy),
                 None => pick_healthy(router.route(a.t, avx), &healthy),
             };
-            traces[m].push((a.t, a.tenant));
             arrivals_routed[m] += 1;
-            if !a.hedge {
+            epoch_routed[m] += 1;
+            let mut delivered = true;
+            match fate(m, a.t) {
+                None => traces[m].push((a.t, a.tenant)),
+                Some(Ok((deliver, stamp))) => {
+                    if deliver >= w1 && k != last {
+                        // A link delay pushed the delivery past the
+                        // epoch boundary: re-route it next epoch with
+                        // its machine pre-assigned (hedge semantics —
+                        // retry bookkeeping does not survive a spill).
+                        arrivals_routed[m] -= 1;
+                        epoch_routed[m] -= 1;
+                        delivered = false;
+                        injected.push(Arr {
+                            t: deliver,
+                            tenant: a.tenant,
+                            attempt: a.attempt,
+                            hedge: true,
+                            machine: Some(m),
+                        });
+                    } else {
+                        ftraces[m].push((deliver, stamp, a.tenant));
+                    }
+                }
+                Some(Err(lost)) => {
+                    delivered = false;
+                    if lost {
+                        fault_out.lost_to_crash += 1;
+                        epoch_lost[m] += 1;
+                    } else {
+                        fault_out.dropped_by_net += 1;
+                    }
+                    if !a.hedge {
+                        victims.push((m, a.tenant, a.attempt));
+                    }
+                }
+            }
+            if !a.hedge && delivered {
                 counts[(m * n_tenants + a.tenant as usize) * attempts + a.attempt as usize] += 1;
                 if hedge_frac > 0.0 && hedge_delay > 0 && hedge_rng.chance(hedge_frac) {
                     let hm = next_healthy_after(m, &healthy);
@@ -491,31 +827,95 @@ fn run_closed_loop(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
             }
         }
         for (ht, tenant, hm) in hedges {
-            traces[hm].push((ht, tenant));
-            arrivals_routed[hm] += 1;
+            match fate(hm, ht) {
+                None => {
+                    traces[hm].push((ht, tenant));
+                    arrivals_routed[hm] += 1;
+                }
+                Some(Ok((deliver, stamp))) => {
+                    if deliver >= w1 && k != last {
+                        injected.push(Arr {
+                            t: deliver,
+                            tenant,
+                            attempt: 0,
+                            hedge: true,
+                            machine: Some(hm),
+                        });
+                    } else {
+                        ftraces[hm].push((deliver, stamp, tenant));
+                        arrivals_routed[hm] += 1;
+                        epoch_routed[hm] += 1;
+                    }
+                }
+                Some(Err(lost)) => {
+                    // Hedges are best-effort duplicates: counted, never
+                    // retried.
+                    arrivals_routed[hm] += 1;
+                    epoch_routed[hm] += 1;
+                    if lost {
+                        fault_out.lost_to_crash += 1;
+                        epoch_lost[hm] += 1;
+                    } else {
+                        fault_out.dropped_by_net += 1;
+                    }
+                }
+            }
         }
         for trace in traces.iter_mut() {
             trace.sort_by_key(|&(t, _)| t);
         }
+        for trace in ftraces.iter_mut() {
+            // Delays at link-window edges can reorder deliveries.
+            trace.sort_unstable_by_key(|&(d, s, tn)| (d, s, tn));
+        }
 
         // 3. Simulate the epoch: every machine is an independent fresh
-        // run over [0, w1 - w0) with epoch-local arrival times.
+        // run over [0, w1 - w0) with epoch-local arrival times. Crashed
+        // machines split into up-segments, each its own fresh (cold)
+        // simulation.
         let e_secs = (w1 - w0) as f64 / SEC as f64;
         let measured = k >= measured_from;
-        let jobs: Vec<(WebCfg, Vec<(Time, u32)>)> = traces
-            .into_iter()
-            .enumerate()
-            .map(|(i, mut trace)| {
-                for a in trace.iter_mut() {
-                    a.0 -= w0;
-                }
-                let mut mcfg = fleet.cfg.clone();
-                mcfg.warmup = 0;
-                mcfg.measure = w1 - w0;
-                mcfg.seed = epoch_machine_seed(fleet, i, k);
-                (mcfg, trace)
-            })
-            .collect();
+        let jobs: Vec<MachineJob> = match &timeline {
+            None => traces
+                .into_iter()
+                .enumerate()
+                .map(|(i, mut trace)| {
+                    for a in trace.iter_mut() {
+                        a.0 -= w0;
+                    }
+                    let mut mcfg = fleet.cfg.clone();
+                    mcfg.warmup = 0;
+                    mcfg.measure = w1 - w0;
+                    mcfg.seed = epoch_machine_seed(fleet, i, k);
+                    MachineJob::Plain(mcfg, trace)
+                })
+                .collect(),
+            Some(tl) => ftraces
+                .into_iter()
+                .enumerate()
+                .map(|(i, trace)| {
+                    let segs: Vec<(Time, Time)> = if w0 >= warmup {
+                        tl.up_segments(i, w0 - warmup, w1 - warmup)
+                            .into_iter()
+                            .map(|(s, e)| (s + warmup, e + warmup))
+                            .collect()
+                    } else {
+                        // The cold window predates the fault timeline.
+                        vec![(w0, w1)]
+                    };
+                    segment_jobs(
+                        fleet,
+                        tl,
+                        i,
+                        &segs,
+                        epoch_machine_seed(fleet, i, k),
+                        trace,
+                        false,
+                        &mut fault_out.lost_to_crash,
+                    )
+                })
+                .collect(),
+        };
         let epoch_cluster = Mutex::new(LatencyStats::new(fleet.cfg.slo));
         let obs_slots: Vec<Mutex<Option<EpochObs>>> = (0..n).map(|_| Mutex::new(None)).collect();
         simulate_into(
@@ -530,6 +930,13 @@ fn run_closed_loop(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
             .into_iter()
             .map(|s| s.into_inner().expect("obs poisoned").unwrap_or_default())
             .collect();
+
+        // The epoch's merged cluster recorder: kept for the
+        // fault-window report, then read by the hedge feedback.
+        let ec = epoch_cluster.into_inner().expect("epoch recorder poisoned");
+        if timeline.is_some() && measured {
+            epoch_records.push((w0, w1, ec.clone()));
+        }
 
         // 4. Feedback for epoch k+1, from epoch k's merged statistics
         // only — sequential and deterministic.
@@ -579,10 +986,36 @@ fn run_closed_loop(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
             }
         }
 
+        // 4a'. Fault-induced losses feed back as *known* timeouts: the
+        // front end saw every request it routed into a drop or a dark
+        // machine vanish, so they re-enter the retry machinery exactly
+        // like observed timeouts (attempt caps included).
+        if timeline.is_some() {
+            for &(m, tenant, attempt) in &victims {
+                outcomes.timeouts_observed += 1;
+                agg.note_timeouts(m, 1);
+                if attempt >= bal.max_retries {
+                    outcomes.retries_abandoned += 1;
+                    continue;
+                }
+                outcomes.retries_issued += 1;
+                fault_out.fault_retries += 1;
+                let rt = nw0
+                    .saturating_add(bal.retry_backoff)
+                    .saturating_add(retry_rng.below(jitter_span));
+                injected.push(Arr {
+                    t: rt,
+                    tenant,
+                    attempt: attempt + 1,
+                    hedge: false,
+                    machine: None,
+                });
+            }
+        }
+
         // 4b. Hedge threshold for the next epoch from this epoch's
         // merged cluster distribution.
         if bal.hedge_p99_mult > 0.0 {
-            let ec = epoch_cluster.into_inner().expect("epoch recorder poisoned");
             let p99 = ec.hist.percentile(99.0);
             hedge_delay = (bal.hedge_p99_mult * p99 as f64).round() as Time;
             hedge_frac =
@@ -616,6 +1049,31 @@ fn run_closed_loop(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
                 }
             }
         }
+        // 4d. Crash visibility: a machine that lost a majority of its
+        // routed traffic went dark mid-epoch — eject it now instead of
+        // waiting for its (empty) p99 to read as healthy. Readmission
+        // rides the standard §4c cooldown; the epochs in between are
+        // the MTTR the fault report publishes.
+        if timeline.is_some() && bal.eject_factor > 0.0 {
+            for m in 0..n {
+                let would_remain = healthy.iter().filter(|&&h| h).count() > 1;
+                if healthy[m] && epoch_lost[m] * 2 > epoch_routed[m] && would_remain {
+                    healthy[m] = false;
+                    crash_ejected[m] = true;
+                    outcomes.ejections += 1;
+                }
+            }
+            for m in 0..n {
+                if crash_ejected[m] {
+                    if healthy[m] {
+                        crash_ejected[m] = false; // readmitted in §4c
+                    } else {
+                        fault_out.recovery_epochs += 1;
+                        recovery_by_machine[m] += 1;
+                    }
+                }
+            }
+        }
         // Attribute ejected machine-epochs to the digests (next epoch
         // is the one they sit out; only measured epochs are reported).
         if k + 1 >= measured_from {
@@ -627,7 +1085,87 @@ fn run_closed_loop(cfg: &HierFleetCfg, threads: usize) -> HierFleetRun {
         }
     }
 
-    finish(cfg, agg, arrivals_routed, outcomes)
+    let fault_windows = match &timeline {
+        None => Vec::new(),
+        Some(tl) => fault_window_stats(
+            tl,
+            &epoch_records,
+            warmup,
+            fleet.cfg.slo,
+            n,
+            &recovery_by_machine,
+        ),
+    };
+    finish(cfg, agg, arrivals_routed, outcomes, fault_out, fault_windows)
+}
+
+/// Epoch-granularity SLO damage per fault window: the cluster
+/// recorders of the epochs overlapping each window, merged and
+/// compared against every other measured epoch. Only the closed loop
+/// produces these (the open loop has no epoch slicing to attribute
+/// damage with).
+fn fault_window_stats(
+    tl: &FaultTimeline,
+    epochs: &[(Time, Time, LatencyStats)],
+    warmup: Time,
+    slo: Time,
+    n: usize,
+    recovery_by_machine: &[u64],
+) -> Vec<FaultWindowStat> {
+    let stat = |kind: &'static str, machine: String, s: Time, e: Time, readmit: u64| {
+        let mut inside = LatencyStats::new(slo);
+        let mut outside = LatencyStats::new(slo);
+        for (e0, e1, st) in epochs {
+            let (m0, m1) = (e0.saturating_sub(warmup), e1.saturating_sub(warmup));
+            if s < m1 && e > m0 {
+                inside.merge(st);
+            } else {
+                outside.merge(st);
+            }
+        }
+        FaultWindowStat {
+            kind,
+            machine,
+            start: s,
+            end: e,
+            p99_in_us: inside.hist.percentile(99.0) as f64 / 1_000.0,
+            p99_out_us: outside.hist.percentile(99.0) as f64 / 1_000.0,
+            violations_in: inside.violations(),
+            readmit_epochs: readmit,
+        }
+    };
+    let mut rows = Vec::new();
+    for (m, wins) in tl.dark.iter().enumerate() {
+        for &(s, e) in wins {
+            let readmit = recovery_by_machine.get(m).copied().unwrap_or(0);
+            rows.push(stat("crash", format!("m{m}"), s, e, readmit));
+        }
+    }
+    for (m, wins) in tl.degrade.iter().enumerate() {
+        for w in wins {
+            rows.push(stat("degrade", format!("m{m}"), w.start, w.end, 0));
+        }
+    }
+    // Every-machine link faults collapse to one "all" row instead of
+    // repeating per machine.
+    let mut seen: Vec<(LinkWindow, Vec<usize>)> = Vec::new();
+    for (m, wins) in tl.link.iter().enumerate() {
+        for w in wins {
+            match seen.iter_mut().find(|entry| entry.0 == *w) {
+                Some(entry) => entry.1.push(m),
+                None => seen.push((*w, vec![m])),
+            }
+        }
+    }
+    for (w, ms) in seen {
+        let machine = if ms.len() == n {
+            "all".to_string()
+        } else {
+            ms.iter().map(|m| format!("m{m}")).collect::<Vec<_>>().join("+")
+        };
+        rows.push(stat("link", machine, w.start, w.end, 0));
+    }
+    rows
 }
 
 #[cfg(test)]
@@ -683,6 +1221,40 @@ mod tests {
         assert_eq!(pick_healthy(1, &none), 1, "routing must never fail");
         let solo = vec![true];
         assert_eq!(next_healthy_after(0, &solo), 0, "no other machine to hedge to");
+    }
+
+    /// Edge cases the fault era makes reachable: a crash schedule can
+    /// eject everything, shrink the fleet to one machine, or leave the
+    /// primary as the only survivor — routing must stay total and
+    /// wrap-around must terminate in every case.
+    #[test]
+    fn health_routing_edge_cases() {
+        // All machines ejected: both helpers fall back to the argument
+        // (any index, including the last, wraps without diverging).
+        let none = vec![false, false, false, false];
+        for m in 0..none.len() {
+            assert_eq!(pick_healthy(m, &none), m, "all-ejected fallback from {m}");
+            assert_eq!(next_healthy_after(m, &none), m, "all-ejected hedge from {m}");
+        }
+
+        // Single-machine fleet: healthy or not, there is nowhere else.
+        assert_eq!(pick_healthy(0, &[true]), 0);
+        assert_eq!(pick_healthy(0, &[false]), 0);
+        assert_eq!(next_healthy_after(0, &[false]), 0);
+
+        // Primary is the only healthy machine: every route lands on it,
+        // and the hedge has no distinct target so it returns the primary.
+        let only = vec![false, false, true, false];
+        for m in 0..only.len() {
+            assert_eq!(pick_healthy(m, &only), 2, "route from {m} onto sole survivor");
+        }
+        assert_eq!(next_healthy_after(2, &only), 2, "no distinct hedge target");
+
+        // Wrap-around off the end of the fleet: from the last index the
+        // scan must wrap to a healthy low index, not run off the slice.
+        let low = vec![true, false, false, false];
+        assert_eq!(pick_healthy(3, &low), 0);
+        assert_eq!(next_healthy_after(3, &low), 0);
     }
 
     #[test]

@@ -28,8 +28,9 @@
 //! amplifies with N — Schuchart et al.'s scale-out argument, and the
 //! `repro fleetscale` table's headline column.
 
+use crate::faults::FaultWindowStat;
 use crate::sim::Time;
-use crate::traffic::{FrontendOutcomes, LatencyStats, TailSummary};
+use crate::traffic::{FaultOutcomes, FrontendOutcomes, LatencyStats, TailSummary};
 use crate::util::{mix64, Rng, Summary};
 use crate::workload::webserver::WebRun;
 use std::sync::Mutex;
@@ -300,6 +301,12 @@ pub struct HierFleetRun {
     pub tenant_stats: Vec<(String, LatencyStats)>,
     /// What the closed-loop front-end did (all zero for open loop).
     pub outcomes: FrontendOutcomes,
+    /// What injected faults did to the run (all zero when faults are
+    /// disabled — the fault-free differential asserts it).
+    pub fault_outcomes: FaultOutcomes,
+    /// Per-fault-window SLO damage (closed loop with faults only; the
+    /// open loop has no epoch slicing to attribute damage with).
+    pub fault_windows: Vec<FaultWindowStat>,
     pub completed: u64,
     pub dropped: u64,
     pub violations: u64,

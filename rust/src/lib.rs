@@ -16,6 +16,10 @@
 //!   SLO-violation fraction).
 //! * [`workload`] — nginx-like web server, wrk2-like client, crypto cost
 //!   profiles, Fig-7 microbenchmark.
+//! * [`faults`] — deterministic fault injection: seeded crash /
+//!   degradation / link-fault / clock-skew schedules expanded to a
+//!   [`faults::FaultTimeline`] the fleet layers consume; disabled
+//!   configs take the literal fault-free code paths.
 //! * [`fleet`] — cluster simulation: N machines behind a pluggable
 //!   request router (round-robin, least-outstanding, AVX partition) with
 //!   cross-machine latency aggregation — core specialization at
@@ -48,6 +52,7 @@ pub mod cpu;
 pub mod sched;
 pub mod traffic;
 pub mod workload;
+pub mod faults;
 pub mod fleet;
 pub mod tpc;
 pub mod scenario;

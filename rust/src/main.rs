@@ -89,13 +89,15 @@ usage:
                  [--governors intel-legacy,slow-ramp,dim-silicon]
   avxfreq tpc [--config configs/tpc.toml] [--quick] [--seed N] [--threads T]
               [--placements home-core,avx-steer,avx-steer-lazy] [--avx-cores K]
+  avxfreq chaos [--config configs/chaos.toml] [--quick] [--seed N] [--threads T]
+                [--open] [--no-faults]
   avxfreq bench [--quick] [--seed N] [--threads T]
-                [--scenarios single,matrix,fleet,hier,executor,incremental]
-                [--out BENCH_9.json] [--min-speedup R]
+                [--scenarios single,matrix,fleet,hier,executor,incremental,chaos]
+                [--out BENCH_10.json] [--min-speedup R]
   avxfreq serve [--artifacts DIR] [--port 8443]
   avxfreq calibrate [--artifacts DIR]
-experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar fleetscale energydelay
-             runtimespec hybridspec fig6 ipc fig7 cryptobench ablations";
+experiments: fig1 fig2 fig3 fig5 fig5ms fig5tail fleetvar fleetscale faulttol
+             energydelay runtimespec hybridspec fig6 ipc fig7 cryptobench ablations";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -110,6 +112,7 @@ fn main() -> anyhow::Result<()> {
         Some("fleet") => cmd_fleet(&args),
         Some("energy") => cmd_energy(&args),
         Some("tpc") => cmd_tpc(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("bench") => cmd_bench(&args),
         Some("serve") => avxfreq::runtime::server::cmd_serve(&args),
         Some("calibrate") => avxfreq::runtime::calibrate::cmd_calibrate(&args),
@@ -852,9 +855,105 @@ fn cmd_tpc(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `avxfreq chaos` — the fault-injection view: one hierarchical fleet
+/// run under a deterministic fault schedule, reporting the per-rack
+/// table plus the per-fault-window damage table (`fault_report`: p99
+/// during vs outside each window, SLO violations inside it, and the
+/// crash MTTR in epochs). Defaults to the fleetvar fleet under the
+/// chaos preset with the closed loop on; `--config configs/chaos.toml`
+/// replaces the template (its `[faults]` section is the full schedule
+/// language), `--open` leaves the loop open (full damage), and
+/// `--no-faults` runs the identical scenario fault-free — the
+/// differential leg: its bytes must match a pre-fault-layer run.
+fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    use avxfreq::faults::FaultsCfg;
+    use avxfreq::fleet::{run_hier_fleet, BalancerCfg, HierFleetCfg, HierFleetRun, RouterSpec};
+    let quick = args.flag("quick");
+    let seed = args.get_parse::<u64>("seed", 0x5EED);
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = args.get_parse::<usize>("threads", default_threads).max(1);
+
+    let mut hier = if let Some(path) = args.get("config") {
+        let conf = avxfreq::util::config::Config::load(path)?;
+        let mut h = HierFleetCfg::from_config(&conf)?;
+        if args.get("seed").is_some() {
+            h.fleet.cfg.seed = seed;
+        }
+        if quick {
+            avxfreq::repro::fleetvar::apply_quick(&mut h.fleet.cfg);
+        }
+        h
+    } else {
+        let mut h = HierFleetCfg::new(
+            avxfreq::repro::fleetvar::fleet_cfg(RouterSpec::RoundRobin, quick, seed),
+            BalancerCfg::closed(),
+        );
+        h.machines_per_rack = 4;
+        h
+    };
+    if args.flag("open") {
+        hier.balancer.enabled = false;
+    }
+    if !hier.faults.active() {
+        // No [faults] section (or none enabled): the chaos preset over
+        // this scenario's window and fleet.
+        hier.faults = FaultsCfg::chaos(hier.fleet.cfg.measure, hier.fleet.machines.max(1));
+    }
+    if args.flag("no-faults") {
+        hier.faults = FaultsCfg::default();
+    }
+    hier.validate()?;
+
+    eprintln!(
+        "[avxfreq] chaos: {} machines × {} cores, {} + faults={} across up to {} threads \
+         (seed {:#x})…",
+        hier.fleet.machines,
+        hier.fleet.cfg.cores,
+        hier.balancer.label(),
+        hier.faults.label(),
+        threads.min(hier.fleet.machines),
+        hier.fleet.cfg.seed
+    );
+    let t0 = std::time::Instant::now();
+    let run = run_hier_fleet(&hier, threads);
+    let pairs: Vec<(&str, &HierFleetRun)> = vec![("fleet", &run)];
+    print!("{}", metrics::hier_report(&pairs).render());
+    println!();
+    let table = metrics::fault_report(&run.fault_windows, &run.fault_outcomes);
+    print!("{}", table.render());
+    let fo = &run.fault_outcomes;
+    println!(
+        "\nfaults: {} crash window(s), {} degradation window(s); {} requests lost to dark \
+         windows, {} dropped by the network, {} fault-victim retries, {} epoch(s) of \
+         crash-ejection before readmission",
+        fo.crash_windows,
+        fo.degrade_windows,
+        fo.lost_to_crash,
+        fo.dropped_by_net,
+        fo.fault_retries,
+        fo.recovery_epochs
+    );
+    println!(
+        "cluster: {} done, {} dropped, p99 {:.0} µs, SLO ≤ {:.1} ms violated {:.2}%",
+        run.completed,
+        run.dropped,
+        run.tail.p99_us,
+        run.tail.slo_us / 1_000.0,
+        run.tail.slo_violation_frac * 100.0,
+    );
+    let path = table.save_csv("chaos")?;
+    eprintln!(
+        "[avxfreq] wrote {} ({} machines in {:.1}s wallclock)",
+        path.display(),
+        run.machines,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 /// `avxfreq bench` — time the canonical scenarios with the hot paths on
 /// (the default simulator) and off (the baseline), print the comparison
-/// table, and write the `BENCH_9.json` perf-trajectory record. Exits
+/// table, and write the `BENCH_10.json` perf-trajectory record. Exits
 /// non-zero if any scenario's two legs are not output-identical — the
 /// harness is also the fast-path equivalence gate (`ci.sh` runs
 /// `bench --quick`). A speedup below `--min-speedup` (default 0 = off;
@@ -878,7 +977,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             .collect();
         anyhow::ensure!(!cfg.scenarios.is_empty(), "--scenarios must name at least one scenario");
     }
-    let out_path = args.get_or("out", "BENCH_9.json").to_string();
+    let out_path = args.get_or("out", "BENCH_10.json").to_string();
     let min_speedup = args.get_parse::<f64>("min-speedup", 0.0);
 
     eprintln!(

@@ -415,6 +415,52 @@ pub fn hier_report(fleets: &[(&str, &HierFleetRun)]) -> Table {
     t
 }
 
+/// Fault-injection table: one row per resolved fault window with the
+/// cluster p99 inside vs outside the window (epoch-granularity — see
+/// [`crate::faults::FaultWindowStat`]), the SLO violations inside, and
+/// the crash rows' time-to-readmission, then a totals row from the
+/// run's [`crate::traffic::FaultOutcomes`]. Takes the rows and
+/// outcomes directly so the golden-file test can pin the formatting on
+/// synthetic values (same pattern as [`EnergyRow`]).
+pub fn fault_report(
+    windows: &[crate::faults::FaultWindowStat],
+    outcomes: &crate::traffic::FaultOutcomes,
+) -> Table {
+    let mut t = Table::new(
+        "Fault windows — cluster p99 during vs outside, SLO damage, MTTR",
+        &[
+            "fault", "scope", "start ms", "end ms", "p99 in µs", "p99 out µs", "viol in",
+            "readmit ep",
+        ],
+    );
+    for w in windows {
+        t.row(&[
+            w.kind.to_string(),
+            w.machine.clone(),
+            fmt_f(w.start as f64 / 1e6, 1),
+            fmt_f(w.end as f64 / 1e6, 1),
+            fmt_f(w.p99_in_us, 0),
+            fmt_f(w.p99_out_us, 0),
+            w.violations_in.to_string(),
+            if w.kind == "crash" { w.readmit_epochs.to_string() } else { "-".to_string() },
+        ]);
+    }
+    t.row(&[
+        "totals".to_string(),
+        format!(
+            "crash={} degrade={}",
+            outcomes.crash_windows, outcomes.degrade_windows
+        ),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        format!("lost={} dropped={}", outcomes.lost_to_crash, outcomes.dropped_by_net),
+        format!("retries={} mttr={}", outcomes.fault_retries, outcomes.recovery_epochs),
+    ]);
+    t
+}
+
 /// Hybrid-topology table: one row per cell *and frequency domain*
 /// (sockets, then E-core modules), reporting the domain's harmonic-mean
 /// busy frequency — the figure that exposes a shared module PLL being

@@ -15,6 +15,7 @@ pub mod fig6_frequency;
 pub mod fig7_overhead;
 pub mod fleetscale;
 pub mod fleetvar;
+pub mod faulttol;
 pub mod ipc_table;
 pub mod cryptobench;
 pub mod ablations;
@@ -68,11 +69,12 @@ impl Repro {
 /// head-to-head through the thread-per-core executor, and `hybridspec`
 /// the hybrid P/E-core machine vs the homogeneous baseline under
 /// {unmodified, core-spec, class-native} with per-module harmonic-mean
-/// frequencies).
+/// frequencies, and `faulttol` the closed-vs-open-loop recovery
+/// comparison under an identical deterministic fault schedule).
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig5ms", "fig5tail", "fleetvar", "fleetscale",
-    "energydelay", "runtimespec", "hybridspec", "fig6", "ipc", "fig7", "cryptobench",
-    "ablations",
+    "faulttol", "energydelay", "runtimespec", "hybridspec", "fig6", "ipc", "fig7",
+    "cryptobench", "ablations",
 ];
 
 /// Dispatch by id. `quick` trades precision for speed (shorter windows).
@@ -86,6 +88,7 @@ pub fn run(id: &str, quick: bool, seed: u64) -> anyhow::Result<Repro> {
         "fig5tail" => Ok(fig5tail::run(quick, seed)),
         "fleetvar" => Ok(fleetvar::run(quick, seed)),
         "fleetscale" => Ok(fleetscale::run(quick, seed)),
+        "faulttol" => Ok(faulttol::run(quick, seed)),
         "energydelay" => Ok(energydelay::run(quick, seed)),
         "runtimespec" => Ok(runtimespec::run(quick, seed)),
         "hybridspec" => Ok(hybridspec::run(quick, seed)),

@@ -48,12 +48,25 @@ pub fn synth_page(bytes: usize) -> Vec<u8> {
 }
 
 /// Deflate-compress (the brotli stand-in available offline).
-pub fn compress(data: &[u8]) -> Vec<u8> {
+///
+/// Encoder errors surface as `Err` so one bad page degrades to one
+/// failed connection instead of panicking the accept loop.
+pub fn compress(data: &[u8]) -> Result<Vec<u8>> {
     use flate2::write::DeflateEncoder;
     use flate2::Compression;
     let mut enc = DeflateEncoder::new(Vec::new(), Compression::new(4));
-    enc.write_all(data).unwrap();
-    enc.finish().unwrap()
+    enc.write_all(data).context("deflate write")?;
+    enc.finish().context("deflate finish")
+}
+
+/// Reassemble an AEAD tag from its wire bytes, rejecting malformed
+/// lengths instead of panicking mid-`fetch` — a truncated or corrupt
+/// response is a protocol error the caller can report, not a client
+/// crash.
+fn tag_words(tag: &[u8]) -> Result<[u32; 4]> {
+    super::aead::bytes_to_words(tag)
+        .try_into()
+        .map_err(|_| anyhow::anyhow!("malformed tag: {} bytes, expected 16", tag.len()))
 }
 
 struct SealJob {
@@ -209,7 +222,7 @@ fn handle_conn(
 
     // Scalar phase: build + compress the page.
     let page = synth_page(page_bytes);
-    let compressed = compress(&page);
+    let compressed = compress(&page)?;
 
     // Crypto phase: sealed on the crypto pool (specialized) or inline.
     let (records, payload_len) = match inline_ex {
@@ -286,8 +299,7 @@ pub fn fetch(addr: &str, page_bytes: u32) -> Result<Vec<u8>> {
         let mut tag = [0u8; 16];
         stream.read_exact(&mut tag)?;
         let ct_words = super::aead::bytes_to_words(&ct);
-        let tag_words: [u32; 4] =
-            super::aead::bytes_to_words(&tag).try_into().expect("tag size");
+        let tag_words = tag_words(&tag)?;
         let nonce = [i as u32, 0xC0DE, 0xF00D];
         let pt = super::aead::open_record(&key, &nonce, &ct_words, &tag_words)
             .context("record failed authentication")?;
@@ -329,5 +341,32 @@ mod tests {
         // ...and still sees the clean-shutdown signal when senders drop.
         drop(tx);
         assert!(recv_job(&rx).is_none(), "disconnect still exits cleanly");
+    }
+
+    /// Regression: `compress` reports failure through `Result` rather
+    /// than panicking, and still round-trips on the happy path.
+    #[test]
+    fn compress_returns_ok_and_roundtrips() {
+        let page = synth_page(4096);
+        let packed = compress(&page).expect("in-memory deflate must succeed");
+        assert!(!packed.is_empty() && packed.len() < page.len());
+        use std::io::Read as _;
+        let mut plain = Vec::new();
+        flate2::read::DeflateDecoder::new(&packed[..])
+            .read_to_end(&mut plain)
+            .expect("round-trip decode");
+        assert_eq!(plain, page);
+    }
+
+    /// Regression: a truncated or oversized tag off the wire is a
+    /// protocol error, not a client panic.
+    #[test]
+    fn tag_words_rejects_malformed_lengths() {
+        assert!(tag_words(&[0u8; 16]).is_ok());
+        for bad in [0usize, 4, 15, 17, 32] {
+            let err = tag_words(&vec![0u8; bad])
+                .expect_err("wrong-size tag must be rejected");
+            assert!(err.to_string().contains("malformed tag"), "{err}");
+        }
     }
 }

@@ -53,6 +53,7 @@
 //! ```
 
 use crate::cpu::{GovernorSpec, HybridSpec, Topology};
+use crate::faults::FaultsCfg;
 use crate::fleet::{
     run_fleet, run_hier_fleet, BalancerCfg, FleetCfg, FleetRun, HierFleetCfg, HierFleetRun,
     RouterSpec,
@@ -310,6 +311,30 @@ impl ExecutorSpec {
     }
 }
 
+/// One point on the fault axis: which deterministic fault schedule (if
+/// any) the cell's fleet runs under. Instantiated against the cell's
+/// measurement window and fleet size ([`FaultsCfg::chaos`]), the same
+/// late-binding pattern as [`ArrivalSpec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// No faults — the cell expands and runs exactly as before this
+    /// axis existed (the differential anchor).
+    None,
+    /// The chaos preset: one crash, one degradation window, one
+    /// network-fault window, one skewed clock (see [`FaultsCfg::chaos`]).
+    Chaos,
+}
+
+impl FaultSpec {
+    /// Label suffix (empty for the fault-free default).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultSpec::None => "",
+            FaultSpec::Chaos => "chaos",
+        }
+    }
+}
+
 /// A fully expanded cell of the matrix: labels, a derived seed, and the
 /// self-contained web-server configuration to simulate.
 #[derive(Clone, Debug)]
@@ -338,6 +363,11 @@ pub struct Scenario {
     /// Closed-loop front-end balancer (disabled = the classic open-loop
     /// front-end; enabled cells run the hierarchical fleet layer).
     pub balancer: BalancerCfg,
+    /// Deterministic fault schedule the cell's fleet runs under
+    /// (`FaultSpec::None` = fault-free, the classic cell; faulted cells
+    /// run the hierarchical layer at any fleet size, since that is
+    /// where the fault timeline lives).
+    pub faults: FaultSpec,
     /// Measurement window drawn from the matrix's `measures` axis, or
     /// `None` when that axis is unset (the cell then measures the
     /// matrix-wide `measure` and labels exactly as before). Cells that
@@ -367,7 +397,7 @@ impl Scenario {
     /// [`Scenario::uses_fleet_layer`] in the dispatch, since a
     /// feedback-enabled cell needs the epoch loop at any fleet size.
     pub fn uses_hier_layer(&self) -> bool {
-        self.balancer.enabled
+        self.balancer.enabled || self.faults != FaultSpec::None
     }
 
     /// One-line identifier for notes and logs.
@@ -392,6 +422,9 @@ impl Scenario {
         }
         if self.balancer.enabled {
             s.push_str(&format!("/{}", self.balancer.label()));
+        }
+        if self.faults != FaultSpec::None {
+            s.push_str(&format!("/{}", self.faults.label()));
         }
         if let Some(w) = self.measure_point {
             s.push_str(&format!("/win{}ms", w / MS));
@@ -565,6 +598,13 @@ pub struct ScenarioMatrix {
     /// Feedback-enabled cells run through [`run_hier_fleet`]'s epoch
     /// loop at any fleet size.
     pub balancers: Vec<BalancerCfg>,
+    /// Fault schedules to sweep (default `[FaultSpec::None]`, which
+    /// keeps the expansion byte-identical to the pre-fault matrix).
+    /// Faulted cells run through [`run_hier_fleet`] regardless of
+    /// balancer, because the fault timeline lives in the hierarchical
+    /// layer. Sits *outside* the measures axis so a warmup group still
+    /// differs only in its window.
+    pub faults: Vec<FaultSpec>,
     /// Measurement windows to sweep (default empty: every cell measures
     /// `self.measure` and the expansion is byte-identical to the
     /// pre-measures matrix). The *innermost* axis, and deliberately
@@ -607,6 +647,7 @@ impl ScenarioMatrix {
             governors: vec![GovernorSpec::IntelLegacy],
             executors: vec![ExecutorSpec::Kernel],
             balancers: vec![BalancerCfg::default()],
+            faults: vec![FaultSpec::None],
             measures: Vec::new(),
             slo: DEFAULT_SLO,
             fast_paths: true,
@@ -736,6 +777,7 @@ impl ScenarioMatrix {
             * self.governors.len()
             * self.executors.len()
             * self.balancers.len()
+            * self.faults.len()
             * self.measures.len().max(1)
     }
 
@@ -777,19 +819,21 @@ impl ScenarioMatrix {
                                 for &fleet in &self.fleet_sizes {
                                     for &router in &self.routers {
                                         for &governor in &self.governors {
-                                            // Executor × balancer × window:
-                                            // the three innermost axes,
+                                            // Executor × balancer × faults ×
+                                            // window: the innermost axes,
                                             // flattened to keep the nesting
-                                            // depth sane.
-                                            for (&executor, &balancer, measure_point) in
+                                            // depth sane (the window stays
+                                            // innermost — warmup groups must
+                                            // differ only in their window).
+                                            for (&executor, &balancer, &faults, measure_point) in
                                                 self.executors.iter().flat_map(|e| {
-                                                    self.balancers.iter().flat_map(
-                                                        move |b| {
+                                                    self.balancers.iter().flat_map(move |b| {
+                                                        self.faults.iter().flat_map(move |f| {
                                                             ma.iter().map(move |&w| {
-                                                                (e, b, w)
+                                                                (e, b, f, w)
                                                             })
-                                                        },
-                                                    )
+                                                        })
+                                                    })
                                                 })
                                             {
                                                 let index = out.len();
@@ -885,6 +929,7 @@ impl ScenarioMatrix {
                                                     governor,
                                                     executor,
                                                     balancer,
+                                                    faults,
                                                     measure_point,
                                                     seed,
                                                     cfg,
@@ -947,6 +992,9 @@ impl ScenarioMatrix {
                 let fcfg = FleetCfg::new(s.fleet, s.router, s.cfg.clone());
                 let mut hcfg = HierFleetCfg::new(fcfg, s.balancer);
                 hcfg.machines_per_rack = s.fleet.max(1).min(8);
+                if s.faults == FaultSpec::Chaos {
+                    hcfg.faults = FaultsCfg::chaos(s.cfg.measure, s.fleet.max(1));
+                }
                 let h = run_hier_fleet(&hcfg, 1);
                 (h.cluster_run(&s.workload), None, Some(h))
             } else if !s.uses_fleet_layer() {
@@ -1233,6 +1281,39 @@ mod tests {
         // in the dispatch).
         assert_eq!(cells[1].fleet, 1);
         assert!(!cells[1].uses_fleet_layer());
+    }
+
+    #[test]
+    fn fault_axis_expands_and_defaults_stay_classic() {
+        // Default axes: every cell is fault-free and the expansion is
+        // exactly the pre-fault cell order (same count, same seeds —
+        // the matrix-level differential anchor).
+        let classic = ScenarioMatrix::default_sweep(true, 7);
+        assert!(classic.cells().iter().all(|c| c.faults == FaultSpec::None));
+        assert_eq!(classic.cells().len(), 8);
+
+        let mut m = ScenarioMatrix::default_sweep(true, 7);
+        m.topologies.truncate(1);
+        m.policies.truncate(1);
+        m.isas.truncate(1);
+        m.fleet_sizes = vec![2];
+        m.faults = vec![FaultSpec::None, FaultSpec::Chaos];
+        let cells = m.cells();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].faults, FaultSpec::None);
+        assert!(!cells[0].label().contains("chaos"));
+        assert!(!cells[0].uses_hier_layer());
+        // A faulted cell routes through the hier layer even with the
+        // open-loop balancer — the fault timeline lives there — and
+        // says so in its label.
+        assert_eq!(cells[1].faults, FaultSpec::Chaos);
+        assert!(cells[1].uses_hier_layer());
+        assert!(cells[1].label().ends_with("/chaos"), "label: {}", cells[1].label());
+        // Both cells of the pair share every other axis: the fault axis
+        // perturbs nothing upstream of the fleet layer.
+        assert_eq!(cells[0].topology, cells[1].topology);
+        assert_eq!(cells[0].fleet, cells[1].fleet);
+        assert_eq!(cells[0].cfg.cores, cells[1].cfg.cores);
     }
 
     #[test]

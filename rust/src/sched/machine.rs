@@ -19,6 +19,7 @@ use crate::cpu::power::PowerParams;
 use crate::cpu::topology::{CoreClass, HybridSpec};
 use crate::cpu::turbo::TurboTable;
 use crate::cpu::Core;
+use crate::faults::DegradeWindow;
 use crate::isa::block::{Block, InsnClass};
 use crate::sim::{EventQueue, Time};
 use crate::util::Rng;
@@ -189,6 +190,13 @@ pub struct MachineParams {
     /// harness's fast-vs-baseline comparison and for bisecting, not for
     /// correctness. Defaults to on.
     pub fast_paths: bool,
+    /// Injected degradation windows (thermal events) from
+    /// [`crate::faults`]: while a window covers a core, that core's
+    /// per-license frequency rows are scaled by the window's factor.
+    /// Empty (the default) keeps the literal fault-free code paths —
+    /// the faults-disabled differential in `rust/tests/faults.rs`
+    /// depends on it.
+    pub degrade: Vec<DegradeWindow>,
 }
 
 impl MachineParams {
@@ -208,6 +216,7 @@ impl MachineParams {
             track_flame: false,
             fault_migrate: None,
             fast_paths: true,
+            degrade: Vec::new(),
         }
     }
 }
@@ -287,6 +296,9 @@ pub struct Machine {
     track_flame: bool,
     fault_migrate: Option<FaultMigrateParams>,
     fast_paths: bool,
+    /// Injected degradation windows ([`MachineParams::degrade`]);
+    /// empty on every fault-free machine.
+    degrade: Vec<DegradeWindow>,
     /// Horizon of the current `run_until` call: the fast path may not
     /// execute a repetition whose dispatch boundary lies beyond it (the
     /// slow path's boundary Step would never pop).
@@ -405,6 +417,7 @@ impl Machine {
             track_flame: p.track_flame,
             fault_migrate: p.fault_migrate,
             fast_paths: p.fast_paths,
+            degrade: p.degrade,
             horizon: 0,
             flame: BTreeMap::new(),
             coalesced_reps: 0,
@@ -532,6 +545,54 @@ impl Machine {
                 self.module_l1_until[m] = until;
             }
         }
+    }
+
+    /// Combined degradation factor covering `core` at `t` (1.0 when no
+    /// injected window applies). A pure function of the frozen window
+    /// list and the query time, so fast/slow paths and any thread
+    /// interleaving see identical factors.
+    fn degrade_factor(&self, core: usize, t: Time) -> f64 {
+        let d = self.domain_of[core];
+        // Module scopes match E-core modules only; P-cores' domains are
+        // sockets, which no Module scope addresses.
+        let module = if d >= self.n_sockets { d - self.n_sockets } else { usize::MAX };
+        let mut f = 1.0;
+        for w in &self.degrade {
+            if w.applies(core, module, t) {
+                f *= w.scale;
+            }
+        }
+        f
+    }
+
+    /// Scale a per-license frequency row by the degradation factor at
+    /// `t`. No-op (and not even a multiply) when the machine carries no
+    /// windows, keeping the fault-free row bit-identical.
+    fn apply_degrade(&self, core: usize, t: Time, row: &mut [f64; 3]) {
+        if self.degrade.is_empty() {
+            return;
+        }
+        let f = self.degrade_factor(core, t);
+        if f != 1.0 {
+            for g in row.iter_mut() {
+                *g *= f;
+            }
+        }
+    }
+
+    /// The P-core per-license frequency row the turbo table would give
+    /// at `active` cores, degraded as of `t` — the table-lookup
+    /// equivalent used whenever degradation windows force the
+    /// `run_block_with_freqs` form (bit-identical to `run_block` when
+    /// the factor is 1.0; pinned by `cached_freqs_match_table_lookup`).
+    fn degraded_p_row(&self, core: usize, t: Time, active: usize) -> [f64; 3] {
+        let mut row = [
+            self.turbo.ghz(License::L0, active),
+            self.turbo.ghz(License::L1, active),
+            self.turbo.ghz(License::L2, active),
+        ];
+        self.apply_degrade(core, t, &mut row);
+        row
     }
 
     /// Create a channel (work queue) and return its id.
@@ -685,6 +746,12 @@ impl Machine {
             self.turbo_e.as_ref().expect("E-core without E turbo table").ghz(lic, active)
         } else {
             self.turbo.ghz(lic, active)
+        };
+        // Kernel code on a degraded core runs at the degraded clock too.
+        let ghz = if self.degrade.is_empty() {
+            ghz
+        } else {
+            ghz * self.degrade_factor(core, self.q.now())
         };
         let cycles = ns as f64 * ghz;
         let insns = (cycles * KERNEL_IPC) as u64;
@@ -885,8 +952,12 @@ impl Machine {
             }
             self.charge_overhead(core, pending_ns);
             let active = self.active_cores(core);
-            let out =
-                self.cores[core].run_block(now + pending_ns, &block, func, active, &self.turbo);
+            let out = if self.degrade.is_empty() {
+                self.cores[core].run_block(now + pending_ns, &block, func, active, &self.turbo)
+            } else {
+                let row = self.degraded_p_row(core, now + pending_ns, active);
+                self.cores[core].run_block_with_freqs(now + pending_ns, &block, func, &row)
+            };
             self.attribute_flame(stack, &out);
             // Fault-and-migrate decay: long scalar streaks revert the
             // task so it can leave the AVX cores.
@@ -927,12 +998,16 @@ impl Machine {
             // Baseline: one repetition per scheduling boundary.
             let t0 = now + pending_ns;
             let out = if e_core {
-                let freqs = self.e_core_freqs(core, t0, active);
+                let mut freqs = self.e_core_freqs(core, t0, active);
+                self.apply_degrade(core, t0, &mut freqs);
                 let out = self.cores[core].run_block_with_freqs(t0, &block, func, &freqs);
                 self.stamp_module_floor(core, t0 + out.ns);
                 out
-            } else {
+            } else if self.degrade.is_empty() {
                 self.cores[core].run_block(t0, &block, func, active, &self.turbo)
+            } else {
+                let row = self.degraded_p_row(core, t0, active);
+                self.cores[core].run_block_with_freqs(t0, &block, func, &row)
             };
             self.attribute_flame(stack, &out);
             self.finish_single_rep(core, task, pending_ns, block, func, stack, reps, out.ns);
@@ -962,12 +1037,20 @@ impl Machine {
         loop {
             let t = now + pending_ns + total_ns;
             let out = if e_core {
-                let row = self.e_core_freqs(core, t, active);
+                let mut row = self.e_core_freqs(core, t, active);
+                self.apply_degrade(core, t, &mut row);
                 let out = self.cores[core].run_block_with_freqs(t, &block, func, &row);
                 self.stamp_module_floor(core, t + out.ns);
                 out
-            } else {
+            } else if self.degrade.is_empty() {
                 self.cores[core].run_block_with_freqs(t, &block, func, &freqs)
+            } else {
+                // Degradation windows make the P-core row time-dependent:
+                // re-derive per repetition at the rep's start time — the
+                // E-core pattern — so the hoisted row can't straddle a
+                // window edge and drift from the slow path.
+                let row = self.degraded_p_row(core, t, active);
+                self.cores[core].run_block_with_freqs(t, &block, func, &row)
             };
             self.attribute_flame(stack, &out);
             total_ns += out.ns;
@@ -1138,6 +1221,7 @@ impl Machine {
             track_flame: self.track_flame,
             fault_migrate: self.fault_migrate,
             fast_paths: self.fast_paths,
+            degrade: self.degrade.clone(),
             horizon: self.horizon,
             flame: self.flame.clone(),
             coalesced_reps: self.coalesced_reps,
@@ -1216,6 +1300,43 @@ mod tests {
         }
         m.run_until(10 * SEC, &mut NullDriver);
         assert_eq!(*done.borrow(), 4);
+    }
+
+    #[test]
+    fn degradation_scales_execution_and_inert_windows_change_nothing() {
+        use crate::faults::DegradeScope;
+        let run = |degrade: Vec<DegradeWindow>| {
+            let mut p = MachineParams::new(1, PolicyKind::Unmodified);
+            p.turbo = TurboTable::flat(2.8, 2.4, 1.9, 1);
+            p.degrade = degrade;
+            let mut m = Machine::new(p);
+            let done = Rc::new(RefCell::new(0u64));
+            m.spawn(
+                TaskType::Untyped,
+                0,
+                Box::new(ScalarLoop { remaining: 300, done: done.clone() }),
+            );
+            m.run_until(SEC, &mut NullDriver);
+            assert_eq!(*done.borrow(), 1);
+            m.now()
+        };
+        let clean = run(Vec::new());
+        let window = |start, end, scale, scope| DegradeWindow { start, end, scale, scope };
+        // A scale-1.0 window forces the with-freqs path but must be
+        // bit-inert (the pinned run_block ≡ run_block_with_freqs
+        // equivalence) — the in-module form of the faults-disabled
+        // differential.
+        let unit = run(vec![window(0, SEC, 1.0, DegradeScope::Machine)]);
+        assert_eq!(clean, unit, "scale-1.0 window must be inert");
+        // Out-of-window and out-of-scope windows are equally inert.
+        let past = run(vec![window(SEC, 2 * SEC, 0.5, DegradeScope::Machine)]);
+        assert_eq!(clean, past, "window past the work must be inert");
+        let other = run(vec![window(0, SEC, 0.5, DegradeScope::Core(7))]);
+        assert_eq!(clean, other, "window scoped to another core must be inert");
+        // A real degradation halves the clock, so the same work
+        // finishes strictly later.
+        let slow = run(vec![window(0, SEC, 0.5, DegradeScope::Machine)]);
+        assert!(slow > clean, "degraded run must finish later: {slow} vs {clean}");
     }
 
     /// Body alternating scalar work and AVX work wrapped in SetType.

@@ -209,7 +209,10 @@ fn build_scan_order(socket_of: &[usize]) -> Vec<Vec<usize>> {
             let s = socket_of[core];
             let mut order = Vec::with_capacity(n);
             let locals: Vec<usize> = (0..n).filter(|&c| socket_of[c] == s).collect();
-            let pos = locals.iter().position(|&c| c == core).expect("core in own socket");
+            // `core` is in `locals` by construction; if a malformed
+            // socket map ever breaks that, scan unrotated from the
+            // first local core rather than taking the scheduler down.
+            let pos = locals.iter().position(|&c| c == core).unwrap_or(0);
             order.extend(locals[pos..].iter().copied());
             order.extend(locals[..pos].iter().copied());
             append_remote_sockets(&mut order, socket_of, s);
@@ -663,7 +666,13 @@ impl Scheduler {
     /// task currently running on `core`. Under `Unmodified` the syscall
     /// does not exist and this is never invoked.
     pub fn set_task_type(&mut self, now: Time, core: usize, new_type: TaskType) -> TypeChangeOutcome {
-        let task = self.running[core].expect("set_task_type: no task running");
+        // A fault window can vacate a core out from under the workload
+        // layer (a machine restart discards running state); a
+        // type-change syscall arriving for an idle core is a no-op,
+        // not a scheduler panic.
+        let Some(task) = self.running[core] else {
+            return TypeChangeOutcome::Continue;
+        };
         let e = &mut self.entities[task.0];
         if e.ttype == new_type {
             return TypeChangeOutcome::Continue;
@@ -820,6 +829,32 @@ mod tests {
         // And back: AVX→scalar may also continue (migration happens via
         // normal load balancing).
         assert_eq!(s.set_task_type(20, 3, TaskType::Scalar), TypeChangeOutcome::Continue);
+    }
+
+    /// Regression for the fault era: a type-change syscall landing on a
+    /// core a restart vacated must be a no-op, not a scheduler panic.
+    #[test]
+    fn type_change_on_vacated_core_is_a_noop() {
+        let mut s = sched(PolicyKind::CoreSpec { avx_cores: 1 }, 2);
+        assert!(s.running[0].is_none(), "core 0 starts idle");
+        assert_eq!(s.set_task_type(10, 0, TaskType::Avx), TypeChangeOutcome::Continue);
+        assert_eq!(s.stats.type_changes, 0, "no task, no type change recorded");
+        assert_eq!(s.stats.forced_suspends, 0);
+    }
+
+    /// Regression: the per-core scan order must be built (covering every
+    /// core exactly once) even for degenerate socket maps — sparse,
+    /// non-contiguous socket ids must not panic the constructor.
+    #[test]
+    fn scan_order_tolerates_sparse_socket_ids() {
+        let order = build_scan_order(&[5, 5, 9]);
+        assert_eq!(order.len(), 3);
+        for (core, o) in order.iter().enumerate() {
+            let mut seen = o.clone();
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 1, 2], "core {core} scan must cover every core once");
+            assert_eq!(o[0], core, "scan starts at the owning core");
+        }
     }
 
     #[test]

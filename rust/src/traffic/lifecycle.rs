@@ -228,6 +228,53 @@ impl FrontendOutcomes {
     }
 }
 
+/// Fault-injection outcome accounting: what the seeded fault layer
+/// (`crate::faults`) *did* to the request stream, kept separate from
+/// both the latency recorders and [`FrontendOutcomes`] so fault-free
+/// runs stay untouched. All counters are exact event counts, so
+/// `merge` is plain addition and obeys the same union laws as
+/// [`LatencyStats::merge`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultOutcomes {
+    /// Requests lost because their machine was dark (crashed or paying
+    /// its cold-start penalty) when they would have been delivered.
+    pub lost_to_crash: u64,
+    /// Requests dropped on the front-end → machine link by an injected
+    /// network fault.
+    pub dropped_by_net: u64,
+    /// Retry arrivals the closed loop issued *because of* injected
+    /// faults (lost/dropped requests re-queued as known timeouts).
+    pub fault_retries: u64,
+    /// Crash windows that actually took a machine dark inside the
+    /// measure window.
+    pub crash_windows: u64,
+    /// Degradation windows applied to some machine's turbo tables.
+    pub degrade_windows: u64,
+    /// Epochs spent between a fault window ending and the affected
+    /// machine being readmitted to the healthy set (MTTR, in epochs,
+    /// summed across fault windows).
+    pub recovery_epochs: u64,
+}
+
+impl FaultOutcomes {
+    /// Fold another accounting record into this one (exact counters add).
+    pub fn merge(&mut self, other: &FaultOutcomes) {
+        self.lost_to_crash += other.lost_to_crash;
+        self.dropped_by_net += other.dropped_by_net;
+        self.fault_retries += other.fault_retries;
+        self.crash_windows += other.crash_windows;
+        self.degrade_windows += other.degrade_windows;
+        self.recovery_epochs += other.recovery_epochs;
+    }
+
+    /// True when the fault layer touched nothing — the faults-disabled
+    /// differential (`rust/tests/faults.rs`) asserts this on every
+    /// fault-free path.
+    pub fn is_noop(&self) -> bool {
+        *self == FaultOutcomes::default()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -367,6 +414,28 @@ mod tests {
         assert!(FrontendOutcomes::default().is_noop());
         let mut z = FrontendOutcomes::default();
         z.merge(&FrontendOutcomes::default());
+        assert!(z.is_noop(), "merging no-ops stays a no-op");
+    }
+
+    #[test]
+    fn fault_outcomes_merge_adds_and_noop_detects() {
+        let mut a = FaultOutcomes {
+            lost_to_crash: 5,
+            dropped_by_net: 2,
+            fault_retries: 3,
+            crash_windows: 1,
+            degrade_windows: 0,
+            recovery_epochs: 2,
+        };
+        let b = FaultOutcomes { dropped_by_net: 4, degrade_windows: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.lost_to_crash, 5);
+        assert_eq!(a.dropped_by_net, 6);
+        assert_eq!(a.degrade_windows, 1);
+        assert!(!a.is_noop());
+        assert!(FaultOutcomes::default().is_noop());
+        let mut z = FaultOutcomes::default();
+        z.merge(&FaultOutcomes::default());
         assert!(z.is_noop(), "merging no-ops stays a no-op");
     }
 }

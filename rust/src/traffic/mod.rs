@@ -30,4 +30,6 @@ pub mod arrival;
 pub mod lifecycle;
 
 pub use arrival::{ArrivalGen, ArrivalProcess, Tenant, TenantBurst};
-pub use lifecycle::{FrontendOutcomes, LatencyStats, RecorderArena, Request, TailSummary};
+pub use lifecycle::{
+    FaultOutcomes, FrontendOutcomes, LatencyStats, RecorderArena, Request, TailSummary,
+};

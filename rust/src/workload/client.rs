@@ -275,6 +275,75 @@ impl Driver for TraceDriver {
     }
 }
 
+/// [`TraceDriver`] variant for fault-injected runs: each entry carries
+/// a *delivery* time (when the request reaches the machine, i.e. the
+/// front-end send time plus any injected link delay) and a separate
+/// *arrival stamp* (what the machine's — possibly skewed — clock
+/// records on the [`Request`]). With `deliver == stamp` on every entry
+/// the event choreography is identical to [`TraceDriver`]; the
+/// fault-free fleet paths keep using [`TraceDriver`] itself, so this
+/// type only ever executes when faults are active.
+///
+/// Delivery times may tie (a delay window can push two sends onto the
+/// same instant), so the order requirement is non-decreasing rather
+/// than strictly increasing.
+pub struct FaultTraceDriver {
+    pub shared: Shared,
+    pub ch: u32,
+    /// `(deliver, arrival stamp, tenant)`, sorted by `deliver`.
+    trace: Vec<(Time, Time, u32)>,
+    pos: usize,
+    /// `(arrival stamp, tenant)` of the already-scheduled next arrival.
+    next: (Time, u32),
+}
+
+impl FaultTraceDriver {
+    /// `trace` must be non-decreasing in delivery time (the fleet layer
+    /// sorts after applying link delays).
+    pub fn new(shared: Shared, ch: u32, trace: Vec<(Time, Time, u32)>) -> Self {
+        debug_assert!(
+            trace.windows(2).all(|w| w[0].0 <= w[1].0),
+            "fault trace must be ordered by delivery time"
+        );
+        FaultTraceDriver { shared, ch, trace, pos: 0, next: (0, 0) }
+    }
+
+    /// Install the first arrival event (no-op for an empty trace).
+    pub fn start(&mut self, m: &mut Machine) {
+        if let Some(&(t, stamp, tenant)) = self.trace.first() {
+            self.pos = 1;
+            self.next = (stamp, tenant);
+            m.schedule_external(t, 0);
+        }
+    }
+
+    /// Checkpoint-fork twin, mirroring [`TraceDriver::fork`].
+    pub fn fork(&self, ctx: &mut ForkCtx) -> FaultTraceDriver {
+        FaultTraceDriver {
+            shared: ctx.fork_rc(&self.shared),
+            ch: self.ch,
+            trace: self.trace.clone(),
+            pos: self.pos,
+            next: self.next,
+        }
+    }
+}
+
+impl Driver for FaultTraceDriver {
+    fn on_external(&mut self, _tag: u64, m: &mut Machine) {
+        let (stamp, tenant) = self.next;
+        let req = Request { arrived: stamp, tenant };
+        if self.shared.borrow_mut().push_arrival(req) {
+            m.notify(self.ch);
+        }
+        if let Some(&(t, stamp, tenant)) = self.trace.get(self.pos) {
+            self.pos += 1;
+            self.next = (stamp, tenant);
+            m.schedule_external(t, 0);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -7,7 +7,9 @@
 //! `with_avx()` / `without_avx()` exactly like the paper's 9-line nginx
 //! patch (SSL_read, SSL_write, SSL_do_handshake, SSL_shutdown).
 
-use super::client::{LoadMode, ServerShared, Shared, TraceDriver, TrafficDriver, DEFAULT_SLO};
+use super::client::{
+    FaultTraceDriver, LoadMode, ServerShared, Shared, TraceDriver, TrafficDriver, DEFAULT_SLO,
+};
 use super::compress::CompressProfile;
 use super::crypto::{CryptoProfile, Isa};
 use crate::analysis::flamegraph::StackTable;
@@ -72,6 +74,10 @@ pub struct WebCfg {
     /// bit-exact either way; off only for the bench harness's baseline
     /// (see `MachineParams::fast_paths`).
     pub fast_paths: bool,
+    /// Injected frequency-degradation windows ([`crate::faults`]),
+    /// machine-local time. Empty (the default) keeps the machine on the
+    /// literal fault-free code paths (see `MachineParams::degrade`).
+    pub degrade: Vec<crate::faults::DegradeWindow>,
 }
 
 impl WebCfg {
@@ -100,6 +106,7 @@ impl WebCfg {
             governor: GovernorSpec::IntelLegacy,
             power: PowerParams::default(),
             fast_paths: true,
+            degrade: Vec::new(),
         }
     }
 
@@ -922,13 +929,31 @@ pub fn run_webserver_with_params(cfg: &WebCfg, sched: crate::sched::SchedParams)
 /// stream reproduces [`run_webserver`] exactly (the fleet differential
 /// test pins this).
 pub fn run_webserver_trace(cfg: &WebCfg, trace: Vec<(Time, u32)>) -> WebRun {
-    run_webserver_impl(cfg, crate::sched::SchedParams::default(), Some(trace)).0
+    run_webserver_impl(cfg, crate::sched::SchedParams::default(), TraceInput::Plain(trace)).0
+}
+
+/// Fault-injected variant of [`run_webserver_trace`]: each entry is
+/// `(deliver, arrival stamp, tenant)` — delivery delayed by link
+/// faults, the stamp shifted by clock skew (see
+/// [`crate::workload::client::FaultTraceDriver`]). With
+/// `deliver == stamp` everywhere this is event-for-event identical to
+/// [`run_webserver_trace`]; fault-free fleet paths never call it.
+pub fn run_webserver_trace_faulted(cfg: &WebCfg, trace: Vec<(Time, Time, u32)>) -> WebRun {
+    run_webserver_impl(cfg, crate::sched::SchedParams::default(), TraceInput::Faulted(trace)).0
+}
+
+/// Arrival-source selector for the private build path: live generator,
+/// replayed fleet trace, or a fault-injected trace.
+enum TraceInput {
+    None,
+    Plain(Vec<(Time, u32)>),
+    Faulted(Vec<(Time, Time, u32)>),
 }
 
 fn run_webserver_impl(
     cfg: &WebCfg,
     sched: crate::sched::SchedParams,
-    trace: Option<Vec<(Time, u32)>>,
+    trace: TraceInput,
 ) -> (WebRun, Machine) {
     let (run, m, _shared) = WebSim::build(cfg, sched, trace).finish_impl();
     (run, m)
@@ -958,14 +983,10 @@ impl WebSim {
     /// Build a ready-to-run simulation for `cfg`: workers spawned,
     /// arrival driver installed, nothing simulated yet.
     pub fn new(cfg: &WebCfg) -> Self {
-        Self::build(cfg, crate::sched::SchedParams::default(), None)
+        Self::build(cfg, crate::sched::SchedParams::default(), TraceInput::None)
     }
 
-    fn build(
-        cfg: &WebCfg,
-        sched: crate::sched::SchedParams,
-        trace: Option<Vec<(Time, u32)>>,
-    ) -> Self {
+    fn build(cfg: &WebCfg, sched: crate::sched::SchedParams, trace: TraceInput) -> Self {
         // Confinement requires typed AVX work: on a hybrid part with
         // E-cores, 512-bit code must be visible to the scheduler (the
         // hardware thread director makes it so whether or not the server
@@ -1012,6 +1033,7 @@ impl WebSim {
         // the paper's single-socket evaluation.
         mp.extra_active_cores = 4 * cfg.sockets.max(1);
         mp.track_flame = cfg.track_flame;
+        mp.degrade = cfg.degrade.clone();
         if cfg.fault_migrate {
             mp.fault_migrate = Some(Default::default());
         }
@@ -1088,20 +1110,24 @@ impl WebSim {
         // Composite driver: arrivals (tag 0) + adaptive controller (tag 1).
         // Fleet machines replay their routed share of the cluster stream;
         // standalone runs sample a live generator.
-        let open = match &process {
-            Some(_) if trace.is_some() => Some(ArrivalDriver::Trace(TraceDriver::new(
-                shared.clone(),
-                ch,
-                trace.expect("checked is_some"),
-            ))),
-            Some(p) => Some(ArrivalDriver::Live(TrafficDriver::new(
+        let open = match (&process, trace) {
+            (Some(_), TraceInput::Plain(t)) => {
+                Some(ArrivalDriver::Trace(TraceDriver::new(shared.clone(), ch, t)))
+            }
+            (Some(_), TraceInput::Faulted(t)) => {
+                Some(ArrivalDriver::FaultTrace(FaultTraceDriver::new(shared.clone(), ch, t)))
+            }
+            (Some(p), TraceInput::None) => Some(ArrivalDriver::Live(TrafficDriver::new(
                 shared.clone(),
                 ch,
                 p.clone(),
                 cfg.seed ^ 0xDEAD,
             ))),
-            None => {
-                assert!(trace.is_none(), "a closed-loop run cannot replay an arrival trace");
+            (None, trace) => {
+                assert!(
+                    matches!(trace, TraceInput::None),
+                    "a closed-loop run cannot replay an arrival trace"
+                );
                 let connections = match cfg.mode {
                     LoadMode::Closed { connections } => connections,
                     _ => unreachable!("process() is None only for closed loop"),
@@ -1297,6 +1323,7 @@ impl WebSim {
 enum ArrivalDriver {
     Live(TrafficDriver),
     Trace(TraceDriver),
+    FaultTrace(FaultTraceDriver),
 }
 
 impl ArrivalDriver {
@@ -1304,6 +1331,7 @@ impl ArrivalDriver {
         match self {
             ArrivalDriver::Live(d) => d.start(m),
             ArrivalDriver::Trace(d) => d.start(m),
+            ArrivalDriver::FaultTrace(d) => d.start(m),
         }
     }
 
@@ -1311,6 +1339,7 @@ impl ArrivalDriver {
         match self {
             ArrivalDriver::Live(d) => d.on_external(tag, m),
             ArrivalDriver::Trace(d) => d.on_external(tag, m),
+            ArrivalDriver::FaultTrace(d) => d.on_external(tag, m),
         }
     }
 
@@ -1318,6 +1347,7 @@ impl ArrivalDriver {
         match self {
             ArrivalDriver::Live(d) => ArrivalDriver::Live(d.fork(ctx)),
             ArrivalDriver::Trace(d) => ArrivalDriver::Trace(d.fork(ctx)),
+            ArrivalDriver::FaultTrace(d) => ArrivalDriver::FaultTrace(d.fork(ctx)),
         }
     }
 }

@@ -1,0 +1,436 @@
+//! Four-band robustness suite for the deterministic fault layer
+//! (`avxfreq::faults`), mirroring the executor suite's structure:
+//!
+//! 1. **Faults-disabled differential** — a disabled `[faults]` config
+//!    (even one carrying a fully populated chaos schedule) must take
+//!    the literal pre-PR code paths: the open-loop hierarchy reproduces
+//!    the flat fleet's bytes, the closed loop renders byte-identically
+//!    to a default (empty) fault config, and the scenario matrix with
+//!    an explicit `faults = [None]` axis renders the same bytes as the
+//!    default expansion.
+//! 2. **Determinism** — with the chaos schedule *enabled*, open- and
+//!    closed-loop runs render byte-identical reports at 1 and 4 OS
+//!    threads (the fault timeline is expanded once up front and only
+//!    read by the workers).
+//! 3. **Mechanism forcing** — each fault kind demonstrably drives its
+//!    feedback path: a crash ejects the dark machine and readmits it
+//!    (MTTR > 0), a degradation steals load away from the slow
+//!    machine, link faults feed known timeouts into the retry loop.
+//! 4. **Golden snapshots** — `metrics::fault_report` and the faulttol
+//!    table pin their formatting on synthetic rows
+//!    (`UPDATE_GOLDEN=1 cargo test --test faults` regenerates).
+//!
+//! Triage rule: when a band-1 test fails, the bug is in the fault
+//! layer's gating, never in the fault-free reference — do not "fix"
+//! the flat fleet or the open loop to match.
+
+use avxfreq::faults::{
+    CrashFault, DegradeFault, DegradeScope, FaultWindowStat, FaultsCfg, LinkFault, Schedule,
+};
+use avxfreq::fleet::{
+    run_fleet, run_hier_fleet, BalancerCfg, FleetCfg, HierFleetCfg, HierFleetRun, RouterSpec,
+};
+use avxfreq::metrics::{fault_report, hier_report};
+use avxfreq::repro::faulttol::{self, TolRow};
+use avxfreq::scenario::{ArrivalSpec, FaultSpec, PolicySpec, ScenarioMatrix, TopologySpec, WorkloadSpec};
+use avxfreq::sched::PolicyKind;
+use avxfreq::sim::MS;
+use avxfreq::traffic::{ArrivalProcess, FaultOutcomes};
+use avxfreq::workload::client::LoadMode;
+use avxfreq::workload::crypto::Isa;
+use avxfreq::workload::webserver::WebCfg;
+
+// ---------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------
+
+/// Per-machine scenario (same shape as `hierfleet.rs`): small enough
+/// for suite time, loaded enough that fault windows always have
+/// traffic to damage.
+fn small_cfg(seed: u64) -> WebCfg {
+    let mut c = WebCfg::paper_default(Isa::Avx512, PolicyKind::CoreSpec { avx_cores: 1 });
+    c.cores = 4;
+    c.workers = 8;
+    c.page_bytes = 8 * 1024;
+    c.warmup = 120 * MS;
+    c.measure = 300 * MS;
+    c.seed = seed;
+    c.mode = LoadMode::OpenProcess { process: ArrivalProcess::two_tenant(30_000.0, 0.3) };
+    c
+}
+
+fn hier(machines: usize, balancer: BalancerCfg, seed: u64) -> HierFleetCfg {
+    let fleet = FleetCfg::new(machines, RouterSpec::RoundRobin, small_cfg(seed));
+    let mut h = HierFleetCfg::new(fleet, balancer);
+    h.machines_per_rack = 2;
+    h
+}
+
+/// The chaos preset with the master switch off: every schedule
+/// populated, nothing active. The band-1 differential runs on this
+/// (not on an empty config) so it proves the fault branches gate on
+/// [`FaultsCfg::active`], not on the schedules happening to be empty.
+fn chaos_disabled(measure: u64, machines: usize) -> FaultsCfg {
+    let mut f = FaultsCfg::chaos(measure, machines);
+    f.enabled = false;
+    f
+}
+
+fn tail_bits(h: &HierFleetRun) -> Vec<u64> {
+    [
+        h.tail.mean_us,
+        h.tail.p50_us,
+        h.tail.p95_us,
+        h.tail.p99_us,
+        h.tail.p999_us,
+        h.tail.max_us,
+        h.tail.slo_violation_frac,
+    ]
+    .iter()
+    .map(|f| f.to_bits())
+    .collect()
+}
+
+fn renders(h: &HierFleetRun) -> String {
+    let mut s = hier_report(&[("fleet", h)]).render();
+    s.push_str(&fault_report(&h.fault_windows, &h.fault_outcomes).render());
+    s
+}
+
+// ---------------------------------------------------------------------
+// Band 1 — the faults-disabled differential (acceptance criterion)
+// ---------------------------------------------------------------------
+
+/// Open loop, disabled chaos schedule: the hierarchy must reproduce
+/// the flat fleet's **bytes** — the untouched pre-PR path.
+#[test]
+fn disabled_faults_open_loop_reproduces_flat_fleet_bytes() {
+    let mut hcfg = hier(5, BalancerCfg::default(), 0xFA01);
+    hcfg.faults = chaos_disabled(hcfg.fleet.cfg.measure, 5);
+    assert!(!hcfg.faults.active(), "disabled schedule must not be active");
+    assert!(!hcfg.faults.crashes.is_empty(), "the schedule must be populated");
+
+    let flat = run_fleet(&hcfg.fleet, 4);
+    let h = run_hier_fleet(&hcfg, 4);
+    assert_eq!(h.completed, flat.completed, "completed");
+    assert_eq!(h.dropped, flat.dropped, "dropped");
+    assert_eq!(h.violations, flat.violations, "exact SLO violations");
+    let flat_bits: Vec<u64> = [
+        flat.tail.mean_us,
+        flat.tail.p50_us,
+        flat.tail.p95_us,
+        flat.tail.p99_us,
+        flat.tail.p999_us,
+        flat.tail.max_us,
+        flat.tail.slo_violation_frac,
+    ]
+    .iter()
+    .map(|f| f.to_bits())
+    .collect();
+    assert_eq!(tail_bits(&h), flat_bits, "cluster tail must be bit-identical");
+    assert!(h.fault_outcomes.is_noop(), "no fault accounting: {:?}", h.fault_outcomes);
+    assert!(h.fault_windows.is_empty(), "no fault windows to report");
+}
+
+/// Closed loop: a disabled chaos schedule renders byte-identically to
+/// the default (empty) fault config — retries, hedges, and ejections
+/// all active in both.
+#[test]
+fn disabled_faults_closed_loop_matches_default_config_bytes() {
+    let empty = hier(4, BalancerCfg::closed(), 0xFA02);
+    let mut loaded = hier(4, BalancerCfg::closed(), 0xFA02);
+    loaded.faults = chaos_disabled(loaded.fleet.cfg.measure, 4);
+
+    let a = run_hier_fleet(&empty, 4);
+    let b = run_hier_fleet(&loaded, 4);
+    assert_eq!(renders(&a), renders(&b), "disabled schedule changed the closed loop's bytes");
+    assert_eq!(a.outcomes, b.outcomes, "front-end outcome counters differ");
+    assert_eq!(a.fault_outcomes, b.fault_outcomes);
+    assert!(b.fault_outcomes.is_noop());
+    assert!(b.fault_windows.is_empty());
+}
+
+fn tiny_matrix(seed: u64) -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new(seed);
+    m.topologies = vec![TopologySpec::multi(1, 4)];
+    m.policies = vec![PolicySpec::CoreSpec { avx_cores: 1 }];
+    m.workloads = vec![WorkloadSpec {
+        name: "small".to_string(),
+        compress: true,
+        page_kib: 8,
+        rate_per_core: 4_000.0,
+    }];
+    m.isas = vec![Isa::Avx512];
+    m.loads = vec![1.0];
+    m.arrivals = vec![ArrivalSpec::Poisson];
+    m.warmup = 80 * MS;
+    m.measure = 160 * MS;
+    m
+}
+
+/// Matrix level: spelling out `faults = [None]` must be the identity —
+/// same cell count, same labels, same rendered bytes as the default
+/// expansion, and no cell takes the hierarchical path for it.
+#[test]
+fn matrix_explicit_none_faults_axis_is_the_identity() {
+    let default_run = tiny_matrix(0x7A12).run(2);
+    let mut m = tiny_matrix(0x7A12);
+    m.faults = vec![FaultSpec::None];
+    let explicit_run = m.run(2);
+
+    assert_eq!(default_run.render(), explicit_run.render(), "matrix table differs");
+    assert_eq!(default_run.render_tail(), explicit_run.render_tail(), "tail table differs");
+    for c in &explicit_run.cells {
+        assert_eq!(c.scenario.faults, FaultSpec::None);
+        assert!(!c.scenario.label().contains("chaos"), "label: {}", c.scenario.label());
+        assert!(c.hier.is_none(), "fault-free single-machine cell must not go hierarchical");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Band 2 — determinism with faults enabled (acceptance criterion)
+// ---------------------------------------------------------------------
+
+/// Closed loop under the full chaos schedule: byte-identical hier and
+/// fault reports at 1 and 4 OS threads, identical counters.
+#[test]
+fn faulted_closed_loop_byte_identical_across_threads() {
+    let mut hcfg = hier(4, BalancerCfg::closed(), 0xFA03);
+    hcfg.faults = FaultsCfg::chaos(hcfg.fleet.cfg.measure, 4);
+    let serial = run_hier_fleet(&hcfg, 1);
+    let parallel = run_hier_fleet(&hcfg, 4);
+    assert_eq!(renders(&serial), renders(&parallel), "1 vs 4 threads differ under faults");
+    assert_eq!(serial.outcomes, parallel.outcomes);
+    assert_eq!(serial.fault_outcomes, parallel.fault_outcomes);
+    assert_eq!(serial.fault_windows, parallel.fault_windows);
+    assert!(!parallel.fault_outcomes.is_noop(), "chaos schedule must leave a mark");
+    let digest_key = |h: &HierFleetRun| -> Vec<(u64, u64, u64)> {
+        h.digests.iter().map(|d| (d.arrivals, d.completed, d.timeouts)).collect()
+    };
+    assert_eq!(digest_key(&serial), digest_key(&parallel), "per-machine digests differ");
+}
+
+/// Open loop under the same schedule: the segment-splitting path is
+/// thread-count-invariant too.
+#[test]
+fn faulted_open_loop_byte_identical_across_threads() {
+    let mut hcfg = hier(4, BalancerCfg::default(), 0xFA04);
+    hcfg.faults = FaultsCfg::chaos(hcfg.fleet.cfg.measure, 4);
+    let serial = run_hier_fleet(&hcfg, 1);
+    let parallel = run_hier_fleet(&hcfg, 4);
+    assert_eq!(serial.completed, parallel.completed);
+    assert_eq!(serial.violations, parallel.violations);
+    assert_eq!(serial.dropped, parallel.dropped);
+    assert_eq!(tail_bits(&serial), tail_bits(&parallel), "tail must be bit-identical");
+    assert_eq!(serial.fault_outcomes, parallel.fault_outcomes);
+    assert!(
+        serial.fault_outcomes.lost_to_crash > 0 || serial.fault_outcomes.dropped_by_net > 0,
+        "chaos must cost the open loop something: {:?}",
+        serial.fault_outcomes
+    );
+}
+
+// ---------------------------------------------------------------------
+// Band 3 — each fault kind forces its mechanism
+// ---------------------------------------------------------------------
+
+/// A crash that takes one machine dark for a whole epoch must be
+/// *seen* by the closed loop: majority loss ⇒ ejection, the idle
+/// ejected machine ⇒ readmission, and the epochs in between are the
+/// published MTTR.
+#[test]
+fn crash_forces_ejection_then_readmission() {
+    let mut hcfg = hier(4, BalancerCfg::closed(), 0xFA05);
+    let mut f = FaultsCfg { enabled: true, ..Default::default() };
+    // Epochs are 75 ms (300 ms / 4); [70, 155) covers epoch [75, 150)
+    // entirely, so every request routed to m1 there is lost.
+    f.crashes.push(CrashFault {
+        machine: 1,
+        schedule: Schedule::OneShot { at: 70 * MS },
+        down: 85 * MS,
+        cold_start: 0,
+    });
+    f.validate(hcfg.fleet.cfg.measure, 4).expect("crash schedule must validate");
+    hcfg.faults = f;
+
+    let h = run_hier_fleet(&hcfg, 4);
+    let fo = &h.fault_outcomes;
+    assert_eq!(fo.crash_windows, 1);
+    assert!(fo.lost_to_crash > 0, "a dark epoch must lose requests");
+    assert!(fo.fault_retries > 0, "known losses must feed the retry loop");
+    assert!(h.outcomes.ejections >= 1, "majority loss must eject the dark machine");
+    assert!(h.outcomes.readmissions >= 1, "the recovered machine must be readmitted");
+    assert!(fo.recovery_epochs >= 1, "ejection→readmission gap is the MTTR");
+    let crash_row = h
+        .fault_windows
+        .iter()
+        .find(|w| w.kind == "crash")
+        .expect("the crash window must be reported");
+    assert_eq!(crash_row.machine, "m1");
+    assert!(crash_row.readmit_epochs >= 1, "the crash row publishes the MTTR");
+}
+
+/// A machine degraded to 35% frequency for the whole run reads as a
+/// tail outlier, so the health view steals its traffic: ejection fires
+/// and the machine sits out epochs.
+#[test]
+fn degradation_steals_load_away() {
+    let mut bal = BalancerCfg::closed();
+    bal.hedge_p99_mult = 0.0; // isolate the ejection signal
+    bal.eject_factor = 1.5;
+    let mut hcfg = hier(4, bal, 0xFA06);
+    let measure = hcfg.fleet.cfg.measure;
+    let mut f = FaultsCfg { enabled: true, ..Default::default() };
+    f.degrades.push(DegradeFault {
+        machine: 2,
+        scope: DegradeScope::Machine,
+        scale: 0.35,
+        schedule: Schedule::OneShot { at: 0 },
+        dur: measure,
+    });
+    f.validate(measure, 4).expect("degrade schedule must validate");
+    hcfg.faults = f;
+
+    let h = run_hier_fleet(&hcfg, 4);
+    assert!(h.fault_outcomes.degrade_windows >= 1);
+    assert!(h.outcomes.ejections >= 1, "a ~3x-slower machine must trip the 1.5x ejector");
+    assert!(
+        h.digests[2].epochs_ejected >= 1,
+        "the degraded machine must sit out epochs: {:?}",
+        h.digests[2]
+    );
+    assert!(h.fault_windows.iter().any(|w| w.kind == "degrade" && w.machine == "m2"));
+}
+
+/// Link faults (drops) on every machine feed *known* timeouts into the
+/// retry machinery — the front end saw the requests vanish.
+#[test]
+fn link_drops_feed_known_timeouts_into_retries() {
+    let mut hcfg = hier(4, BalancerCfg::closed(), 0xFA07);
+    let measure = hcfg.fleet.cfg.measure;
+    let mut f = FaultsCfg { enabled: true, ..Default::default() };
+    f.links.push(LinkFault {
+        machine: None,
+        delay: 150 * avxfreq::sim::US,
+        drop_frac: 0.3,
+        schedule: Schedule::OneShot { at: 0 },
+        dur: measure,
+    });
+    f.validate(measure, 4).expect("link schedule must validate");
+    hcfg.faults = f;
+
+    let h = run_hier_fleet(&hcfg, 4);
+    assert!(h.fault_outcomes.dropped_by_net > 0, "30% drops must be observed");
+    assert!(h.fault_outcomes.fault_retries > 0, "drops must re-enter as retries");
+    assert!(h.completed > 0, "the fleet must keep serving through the fault");
+    assert!(
+        h.fault_windows.iter().any(|w| w.kind == "link" && w.machine == "all"),
+        "an every-machine link fault collapses to one `all` row: {:?}",
+        h.fault_windows
+    );
+}
+
+// ---------------------------------------------------------------------
+// Band 4 — golden snapshots (formatting contracts)
+// ---------------------------------------------------------------------
+
+fn check_golden(name: &str, actual: &str) {
+    let path = format!("{}/rust/tests/golden/{name}.txt", env!("CARGO_MANIFEST_DIR"));
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(&path, actual).expect("write golden");
+        eprintln!("updated {path}");
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    assert!(
+        actual == expected,
+        "{name} drifted from its snapshot ({path}).\n--- expected ---\n{expected}\n--- actual ---\n{actual}\n\
+         Run with UPDATE_GOLDEN=1 if the change is intentional."
+    );
+}
+
+#[test]
+fn fault_report_matches_snapshot() {
+    let windows = vec![
+        FaultWindowStat {
+            kind: "crash",
+            machine: "m1".to_string(),
+            start: 40 * MS,
+            end: 55 * MS,
+            p99_in_us: 8_000.0,
+            p99_out_us: 2_000.0,
+            violations_in: 125,
+            readmit_epochs: 2,
+        },
+        FaultWindowStat {
+            kind: "degrade",
+            machine: "m0".to_string(),
+            start: 10 * MS,
+            end: 30 * MS,
+            p99_in_us: 4_500.0,
+            p99_out_us: 2_000.0,
+            violations_in: 60,
+            readmit_epochs: 0,
+        },
+        FaultWindowStat {
+            kind: "link",
+            machine: "all".to_string(),
+            start: 120 * MS,
+            end: 132 * MS + MS / 2,
+            p99_in_us: 3_250.0,
+            p99_out_us: 2_000.0,
+            violations_in: 40,
+            readmit_epochs: 0,
+        },
+    ];
+    let outcomes = FaultOutcomes {
+        lost_to_crash: 75,
+        dropped_by_net: 18,
+        fault_retries: 93,
+        crash_windows: 1,
+        degrade_windows: 1,
+        recovery_epochs: 2,
+    };
+    check_golden("fault_report", &fault_report(&windows, &outcomes).render());
+}
+
+#[test]
+fn faulttol_report_matches_snapshot() {
+    // Values exactly representable at the printed precision so the
+    // rendering is independent of float-rounding ties.
+    let rows = vec![
+        TolRow {
+            policy: "unmodified".to_string(),
+            governor: "intel-legacy".to_string(),
+            clean_p99_us: 2_000.0,
+            open_fault_p99_us: 8_000.0,
+            closed_fault_p99_us: 3_500.0,
+            lost: 75,
+            retries: 93,
+            mttr_epochs: 2,
+            recovered_pct: faulttol::recovered_pct(2_000.0, 8_000.0, 3_500.0),
+        },
+        TolRow {
+            policy: "core-spec(2)".to_string(),
+            governor: "dim-silicon".to_string(),
+            clean_p99_us: 1_500.0,
+            open_fault_p99_us: 6_000.0,
+            closed_fault_p99_us: 2_400.0,
+            lost: 40,
+            retries: 51,
+            mttr_epochs: 1,
+            recovered_pct: faulttol::recovered_pct(1_500.0, 6_000.0, 2_400.0),
+        },
+    ];
+    assert_eq!(rows[0].recovered_pct, 75.0, "(8000-3500)/(8000-2000)");
+    assert_eq!(rows[1].recovered_pct, 80.0, "(6000-2400)/(6000-1500)");
+    check_golden("faulttol_report", &faulttol::table(&rows).render());
+}
+
+#[test]
+fn recovered_pct_handles_zero_and_negative_damage() {
+    // No damage → nothing to recover (never a division blow-up).
+    assert_eq!(faulttol::recovered_pct(2_000.0, 2_000.0, 1_500.0), 0.0);
+    // A closed loop that made things *worse* reads as negative.
+    assert_eq!(faulttol::recovered_pct(1_000.0, 3_000.0, 3_500.0), -25.0);
+}

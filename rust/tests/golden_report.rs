@@ -14,8 +14,8 @@ use avxfreq::fleet::{BalancerCfg, HierFleetRun, RouterSpec};
 use avxfreq::metrics::{hier_report, matrix_report, tail_report};
 use avxfreq::repro::fleetscale::{self, ScaleRow};
 use avxfreq::scenario::{
-    ArrivalSpec, CellResult, ExecutorSpec, PolicySpec, Scenario, ScenarioMatrix, TopologySpec,
-    WorkloadSpec,
+    ArrivalSpec, CellResult, ExecutorSpec, FaultSpec, PolicySpec, Scenario, ScenarioMatrix,
+    TopologySpec, WorkloadSpec,
 };
 use avxfreq::sched::PolicyKind;
 use avxfreq::sim::MS;
@@ -62,6 +62,7 @@ fn cell(
         governor: GovernorSpec::IntelLegacy,
         executor: ExecutorSpec::Kernel,
         balancer: BalancerCfg::default(),
+        faults: FaultSpec::None,
         measure_point: None,
         seed: 7,
         cfg: WebCfg::paper_default(isa, PolicyKind::Unmodified),
@@ -180,6 +181,8 @@ fn synthetic_hier_run() -> HierFleetRun {
             ejections: 1,
             readmissions: 1,
         },
+        fault_outcomes: Default::default(),
+        fault_windows: Vec::new(),
         completed: 60_000,
         dropped: 25,
         violations: 6_562,

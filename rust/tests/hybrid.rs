@@ -14,7 +14,8 @@ use avxfreq::fleet::{BalancerCfg, RouterSpec};
 use avxfreq::metrics::hybrid_report;
 use avxfreq::repro::hybridspec::{self, HsRow};
 use avxfreq::scenario::{
-    CellResult, ExecutorSpec, PolicySpec, Scenario, ScenarioMatrix, TopologySpec, WorkloadSpec,
+    CellResult, ExecutorSpec, FaultSpec, PolicySpec, Scenario, ScenarioMatrix, TopologySpec,
+    WorkloadSpec,
 };
 use avxfreq::sched::PolicyKind;
 use avxfreq::sim::MS;
@@ -60,6 +61,7 @@ fn domain_cell(
         governor,
         executor: ExecutorSpec::Kernel,
         balancer: BalancerCfg::default(),
+        faults: FaultSpec::None,
         measure_point: None,
         seed: 7,
         cfg: WebCfg::paper_default(Isa::Avx512, PolicyKind::Unmodified),

@@ -152,7 +152,8 @@ fn server_roundtrip_over_tcp() {
     let port = rx.recv_timeout(std::time::Duration::from_secs(120)).expect("server bind");
     let addr = format!("127.0.0.1:{port}");
     let page_bytes = 40_000u32;
-    let expected = server::compress(&server::synth_page(page_bytes as usize));
+    let expected =
+        server::compress(&server::synth_page(page_bytes as usize)).expect("deflate");
     for _ in 0..n {
         let body = server::fetch(&addr, page_bytes).expect("fetch+verify");
         assert_eq!(body, expected, "decrypted payload must match the compressed page");
